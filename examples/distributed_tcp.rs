@@ -1,0 +1,128 @@
+//! Multi-process SDFL deployment over the TCP broker — the closest
+//! analogue to the paper's docker testbed: every client is its own OS
+//! process (`repro worker`) attached to the edge broker; the coordinator
+//! process hosts the broker and drives PSO-placed rounds.
+//!
+//! Requires `make artifacts` and a release build of the `repro` binary
+//! (`cargo build --release`).
+//!
+//! ```sh
+//! cargo run --release --example distributed_tcp -- --workers 6 --rounds 6
+//! ```
+
+use anyhow::{anyhow, Context, Result};
+use repro::broker::{Broker, TcpBrokerServer};
+use repro::configio::Args;
+use repro::fl::{Coordinator, CoordinatorConfig, ModelCodec};
+use repro::placement::PsoPlacement;
+use repro::prng::Pcg32;
+use repro::pso::PsoConfig;
+use repro::runtime::ModelRuntime;
+use std::process::{Child, Command};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env().unwrap_or_default();
+    let workers = args.usize_flag("workers", 6).map_err(anyhow::Error::msg)?;
+    let rounds = args.usize_flag("rounds", 6).map_err(anyhow::Error::msg)?;
+    let session = "dist";
+
+    // The coordinator process hosts the edge broker.
+    let broker = Broker::new();
+    let server = TcpBrokerServer::start("127.0.0.1:0", broker.clone())?;
+    let addr = server.addr();
+    println!("broker listening on {addr}");
+
+    // Spawn one worker process per client (heterogeneity mirrors the
+    // paper's docker mix: worker 0 fast, 1-2 medium, rest constrained).
+    let exe = std::env::current_exe()?;
+    // examples/ binaries live under target/release/examples/; the main
+    // binary sits one level up.
+    let repro_bin = exe
+        .parent()
+        .and_then(|p| p.parent())
+        .map(|p| p.join("repro"))
+        .filter(|p| p.exists())
+        .ok_or_else(|| anyhow!("repro binary not found next to the example — run `cargo build --release` first"))?;
+
+    let mut children: Vec<Child> = Vec::new();
+    for id in 0..workers {
+        let (speed, mem) = match id {
+            0 => (1.0, 1.0),
+            1 | 2 => (2.0, 1.5),
+            _ => (2.5, 3.0),
+        };
+        let child = Command::new(&repro_bin)
+            .args([
+                "worker",
+                "--id",
+                &id.to_string(),
+                "--session",
+                session,
+                "--broker",
+                &addr.to_string(),
+                "--speed",
+                &speed.to_string(),
+                "--mem",
+                &mem.to_string(),
+                "--time-scale",
+                "0.5",
+            ])
+            .spawn()
+            .with_context(|| format!("spawning worker {id}"))?;
+        children.push(child);
+    }
+
+    // Coordinator attaches in-process to the same broker the TCP workers
+    // use; the retained join barrier synchronizes startup.
+    let runtime = Arc::new(ModelRuntime::load_default()?);
+    let dims = 3; // depth-2 width-2 hierarchy
+    let cfg = CoordinatorConfig {
+        session: session.into(),
+        depth: 2,
+        width: 2,
+        client_count: workers,
+        local_steps: 1,
+        lr: 0.05,
+        codec: ModelCodec::Binary,
+        round_timeout: Duration::from_secs(300),
+        eval_every: 1,
+        model_seed: [0, 7],
+        data_seed: 1234,
+    };
+    let strategy = Box::new(PsoPlacement::new(
+        dims,
+        workers,
+        PsoConfig::paper(),
+        Pcg32::seed_from_u64(5),
+    ));
+    let mut coord = Coordinator::new(cfg, broker.connect("coordinator"), strategy, runtime)?;
+
+    println!("waiting for {workers} workers to join ...");
+    coord.wait_for_clients(workers, Duration::from_secs(60))?;
+
+    coord.run(rounds)?;
+
+    println!("\nper-round results:");
+    for r in coord.recorder().records() {
+        println!(
+            "  round {:>2}: delay {:>7.3}s loss {:>7.4} placement {:?}",
+            r.round,
+            r.delay.as_secs_f64(),
+            r.loss,
+            r.placement
+        );
+    }
+    println!(
+        "total {:.1}s over {} rounds (multi-process, TCP transport)",
+        coord.recorder().total_delay().as_secs_f64(),
+        rounds
+    );
+
+    coord.shutdown();
+    for mut c in children {
+        let _ = c.wait();
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose: the rust coordinator (L3) drives a
+//! PSO-placed hierarchical FL session over the pub/sub broker; every
+//! trainer/aggregator executes the AOT-compiled JAX graphs (L2) whose
+//! aggregation/SGD hot-spots are Pallas kernels (L1); the global model's
+//! eval loss is logged every round alongside the round processing delay.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example e2e_train -- --rounds 50
+//! ```
+
+use repro::configio::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env().unwrap_or_default();
+    let rounds = args.usize_flag("rounds", 50).map_err(anyhow::Error::msg)?;
+    repro::sim::run_e2e(rounds)
+}

@@ -1,0 +1,69 @@
+//! Fig-3 regeneration: PSO convergence across the paper's simulation
+//! grid — depth ∈ {3,4,5}, width 4, swarm P ∈ {5,10} — plus the width-5
+//! variants. Writes `results/fig3_<panel>.csv` and prints ASCII plots.
+//!
+//! ```sh
+//! cargo run --release --example hierarchy_sweep [-- --out-dir results]
+//! ```
+
+use repro::configio::{Args, SimScenario};
+use repro::sim::{ascii_plot, run_sim};
+
+fn main() {
+    let args = Args::parse_env().unwrap_or_default();
+    let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
+    std::fs::create_dir_all(&out_dir).expect("mkdir results");
+
+    // The paper's six panels.
+    for (label, sc) in SimScenario::fig3_panels() {
+        run_panel(&format!("fig3_{label}"), &sc, &out_dir, true);
+    }
+
+    // Extension: the width-5 grid the paper describes (M ∈ {4,5}).
+    for depth in [3usize, 4] {
+        let mut sc = SimScenario {
+            depth,
+            width: 5,
+            ..SimScenario::default()
+        };
+        sc.pso.particles = 10;
+        run_panel(&format!("fig3_w5_d{depth}"), &sc, &out_dir, false);
+    }
+}
+
+fn run_panel(name: &str, sc: &SimScenario, out_dir: &std::path::Path, plot: bool) {
+    let result = run_sim(sc);
+    let norm = result.trace.normalized();
+    let path = out_dir.join(format!("{name}.csv"));
+    norm.write_csv(&path).expect("write csv");
+    println!(
+        "{name}: D={} W={} P={} clients={} slots={} | best TPD {:.4} converged={} | {}",
+        sc.depth,
+        sc.width,
+        sc.pso.particles,
+        sc.client_count(),
+        sc.dimensions(),
+        result.best_tpd,
+        result.converged,
+        path.display()
+    );
+    if plot {
+        // Grey per-particle traces under worst/mean/best, like the paper.
+        let mut series: Vec<(&str, char, &[f64])> = Vec::new();
+        for p in &norm.per_particle {
+            series.push(("particle", '.', p.as_slice()));
+        }
+        series.push(("worst", 'r', &norm.worst));
+        series.push(("mean", 'o', &norm.mean));
+        series.push(("best", 'g', &norm.best));
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("{name}: normalized TPD vs iteration"),
+                &series,
+                72,
+                14
+            )
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Fig-4 regeneration: the real (emulated-docker) deployment comparison.
+//!
+//! Spawns the paper's 10-client heterogeneous population (one fast,
+//! two medium, seven memory-constrained), trains the 1.8 M-param MLP
+//! through the full broker + agent + PJRT stack for N rounds under each
+//! placement strategy, and reports per-round delays, totals, convergence
+//! round, and the headline percentage improvements.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example placement_compare -- --rounds 50 --time-scale 1.0
+//! ```
+
+use repro::configio::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env().unwrap_or_default();
+    let rounds = args.usize_flag("rounds", 50).map_err(anyhow::Error::msg)?;
+    let time_scale = args
+        .f64_flag("time-scale", 1.0)
+        .map_err(anyhow::Error::msg)?;
+    let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
+    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir)
+}

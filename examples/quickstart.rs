@@ -1,0 +1,73 @@
+//! Quickstart: the public API in ~60 lines.
+//!
+//! 1. Build a hierarchy + simulated client population (paper §IV.A).
+//! 2. Run the Flag-Swap PSO placement optimizer against the TPD fitness.
+//! 3. Compare the optimized placement against random/round-robin.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use repro::configio::SimScenario;
+use repro::fitness::{tpd, ClientAttrs};
+use repro::hierarchy::{Arrangement, HierarchySpec};
+use repro::placement::{PlacementStrategy, RandomPlacement, RoundRobinPlacement};
+use repro::prng::Pcg32;
+use repro::sim::run_sim;
+
+fn main() {
+    // A depth-3, width-4 hierarchy: 21 aggregator slots, 53 clients.
+    let scenario = SimScenario::default();
+    println!(
+        "hierarchy: depth={} width={} → {} aggregator slots over {} clients",
+        scenario.depth,
+        scenario.width,
+        scenario.dimensions(),
+        scenario.client_count()
+    );
+
+    // --- PSO (Flag-Swap): optimize placement against the TPD model. ---
+    let result = run_sim(&scenario);
+    println!(
+        "PSO: best TPD {:.4} after {} iterations (converged: {})",
+        result.best_tpd, scenario.pso.iterations, result.converged
+    );
+
+    // --- Baselines on the same population. ---
+    let spec = HierarchySpec::new(scenario.depth, scenario.width);
+    let mut rng = Pcg32::seed_from_u64(scenario.seed);
+    let attrs = ClientAttrs::sample_population(
+        scenario.client_count(),
+        scenario.pspeed_range,
+        scenario.memcap_range,
+        scenario.mdatasize,
+        &mut rng,
+    );
+    let tpd_of = |placement: &[usize]| -> f64 {
+        tpd(
+            &Arrangement::from_position(spec, placement, scenario.client_count()),
+            &attrs,
+        )
+        .total
+    };
+
+    let mut random = RandomPlacement::new(
+        spec.dimensions(),
+        scenario.client_count(),
+        Pcg32::seed_from_u64(1),
+    );
+    let mut uniform = RoundRobinPlacement::new(spec.dimensions(), scenario.client_count());
+    let avg = |s: &mut dyn PlacementStrategy| -> f64 {
+        (0..100).map(|r| tpd_of(&s.propose(r))).sum::<f64>() / 100.0
+    };
+    let rand_avg = avg(&mut random);
+    let uni_avg = avg(&mut uniform);
+
+    println!("random placement: mean TPD {rand_avg:.4} over 100 draws");
+    println!("uniform round-robin: mean TPD {uni_avg:.4} over 100 rotations");
+    println!(
+        "PSO finds a placement {:.1}% better than the random average",
+        (1.0 - result.best_tpd / rand_avg) * 100.0
+    );
+    assert!(result.best_tpd < rand_avg, "PSO should beat random");
+}

@@ -1,0 +1,6 @@
+"""Build-time Python package: JAX model (L2) + Pallas kernels (L1) + AOT export.
+
+Nothing in here runs on the request path — `aot.py` lowers everything to
+HLO text once (`make artifacts`), and the rust coordinator executes the
+artifacts via PJRT.
+"""

@@ -1,0 +1,162 @@
+"""AOT export: lower every L2 graph to HLO *text* under artifacts/.
+
+Run via `make artifacts` (or `cd python && python -m compile.aot`).
+Python's job ends here — the rust coordinator loads these files through
+`HloModuleProto::from_text_file` and executes them on the PJRT CPU
+client (see rust/src/runtime/).
+
+Interchange is HLO TEXT, not `.serialize()`: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# K values (child-count fan-ins) for which we export aggregate variants.
+# One compiled executable per model variant; the coordinator picks the
+# smallest K' >= K and zero-pads weights (zero weight == absent child).
+AGGREGATE_KS = [2, 3, 4, 5, 8]
+
+# Tile width for the Pallas kernels in the *exported* artifacts.
+#
+# DESIGN.md §Perf: the TPU-shaped default (64 Ki, kernels/wavg.py) keeps
+# the VMEM working set ≈2.3 MiB — that is what the structural tests
+# enforce. The CPU PJRT client, however, executes interpret-mode Pallas
+# as an HLO while-loop whose per-step dynamic-update-slice copies the
+# output buffer, so many small steps cost far more than one big one.
+# Artifacts therefore default to a single-tile export (block = padded P)
+# on CPU; override with REPRO_AGG_BLOCK for TPU-shaped artifacts.
+def artifact_block() -> int:
+    env = os.environ.get("REPRO_AGG_BLOCK")
+    if env:
+        return int(env)
+    # Single tile covering the padded parameter vector.
+    p = model.PARAM_COUNT
+    base = 64 * 1024
+    return ((p + base - 1) // base) * base
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all():
+    """Yield (name, hlo_text) for every artifact."""
+    p = model.PARAM_COUNT
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    block = artifact_block()
+
+    yield "init", to_hlo_text(jax.jit(model.init_params).lower(_spec((2,), u32)))
+
+    train = functools.partial(model.train_step, block=block)
+    yield (
+        f"train_step_b{model.TRAIN_BATCH}",
+        to_hlo_text(
+            jax.jit(train).lower(
+                _spec((p,), f32),
+                _spec((model.TRAIN_BATCH, model.INPUT_DIM), f32),
+                _spec((model.TRAIN_BATCH,), i32),
+                _spec((1,), f32),
+            )
+        ),
+    )
+
+    yield (
+        f"eval_b{model.EVAL_BATCH}",
+        to_hlo_text(
+            jax.jit(model.evaluate).lower(
+                _spec((p,), f32),
+                _spec((model.EVAL_BATCH, model.INPUT_DIM), f32),
+                _spec((model.EVAL_BATCH,), i32),
+            )
+        ),
+    )
+
+    train_m = functools.partial(model.train_step_momentum, block=block)
+    yield (
+        f"train_step_momentum_b{model.TRAIN_BATCH}",
+        to_hlo_text(
+            jax.jit(train_m).lower(
+                _spec((p,), f32),
+                _spec((p,), f32),
+                _spec((model.TRAIN_BATCH, model.INPUT_DIM), f32),
+                _spec((model.TRAIN_BATCH,), i32),
+                _spec((2,), f32),
+            )
+        ),
+    )
+
+    agg = functools.partial(model.aggregate, block=block)
+    for k in AGGREGATE_KS:
+        yield (
+            f"aggregate_k{k}",
+            to_hlo_text(jax.jit(agg).lower(_spec((k, p), f32), _spec((k,), f32))),
+        )
+
+
+def write_meta(out_dir: str) -> None:
+    """artifacts/meta.json — everything the rust side needs to know."""
+    meta = {
+        "param_count": model.PARAM_COUNT,
+        "layers": model.LAYERS,
+        "input_dim": model.INPUT_DIM,
+        "num_classes": model.NUM_CLASSES,
+        "train_batch": model.TRAIN_BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "aggregate_ks": AGGREGATE_KS,
+        "pallas_block": artifact_block(),
+        "artifacts": {
+            "init": "init.hlo.txt",
+            "train_step": f"train_step_b{model.TRAIN_BATCH}.hlo.txt",
+            "train_step_momentum": f"train_step_momentum_b{model.TRAIN_BATCH}.hlo.txt",
+            "eval": f"eval_b{model.EVAL_BATCH}.hlo.txt",
+            "aggregate": {str(k): f"aggregate_k{k}.hlo.txt" for k in AGGREGATE_KS},
+        },
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    total = 0
+    for name, text in lower_all():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+    write_meta(args.out_dir)
+    # Stamp file: the Makefile's freshness check target.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"total {total} chars, meta.json written to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

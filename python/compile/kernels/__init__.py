@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the SDFL hot-spots (aggregation, SGD update).
+
+Each kernel ships with a pure-jnp oracle in `ref.py`; pytest + hypothesis
+enforce equivalence before anything is AOT-exported.
+"""
+
+from . import momentum, ref, sgd, wavg  # noqa: F401

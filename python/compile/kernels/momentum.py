@@ -1,0 +1,81 @@
+"""Pallas heavy-ball momentum update kernel (multi-output).
+
+Classic SGD-with-momentum over the flat parameter vector:
+
+    v' = mu * v + g
+    p' = p - lr * v'
+
+Exercises the multi-output Pallas path (two refs written per tile) with
+the same 1-D streaming discipline as `sgd`/`wavg`: one HBM pass,
+3·BLOCK·4 B input + 2·BLOCK·4 B output VMEM per step. interpret=True for
+the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _momentum_kernel(scal_ref, p_ref, g_ref, v_ref, po_ref, vo_ref):
+    """One grid step: vo = mu*v + g; po = p - lr*vo."""
+    lr = scal_ref[0]
+    mu = scal_ref[1]
+    v_new = mu * v_ref[...] + g_ref[...]
+    vo_ref[...] = v_new
+    po_ref[...] = p_ref[...] - lr * v_new
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def momentum(
+    params: jnp.ndarray,
+    grads: jnp.ndarray,
+    velocity: jnp.ndarray,
+    lr_mu: jnp.ndarray,
+    *,
+    block: int = DEFAULT_BLOCK,
+):
+    """Momentum update via the Pallas kernel.
+
+    Args:
+      params:   [P] flat parameters.
+      grads:    [P] flat gradients.
+      velocity: [P] momentum buffer.
+      lr_mu:    [2] (learning rate, momentum coefficient).
+      block:    tile width (P zero-padded to a multiple).
+
+    Returns:
+      (new_params [P], new_velocity [P]) — matches `ref.momentum_ref`.
+    """
+    (p,) = params.shape
+    rem = p % block
+    if rem != 0:
+        pad = block - rem
+        params = jnp.pad(params, (0, pad))
+        grads = jnp.pad(grads, (0, pad))
+        velocity = jnp.pad(velocity, (0, pad))
+    p_pad = params.shape[0]
+    grid = (p_pad // block,)
+    new_p, new_v = pl.pallas_call(
+        _momentum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # (lr, mu), broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p_pad,), params.dtype),
+            jax.ShapeDtypeStruct((p_pad,), params.dtype),
+        ],
+        interpret=True,
+    )(lr_mu.astype(params.dtype), params, grads, velocity)
+    return new_p[:p], new_v[:p]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match its oracle to float tolerance under pytest (exact
+shapes) and hypothesis (randomized shapes/dtypes). The oracles are also
+what DESIGN.md §Perf compares lowered-HLO op counts against.
+"""
+
+import jax.numpy as jnp
+
+
+def wavg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted average of K stacked flat parameter vectors.
+
+    Args:
+      stacked: [K, P] — one row per child model.
+      weights: [K]    — raw (unnormalized) aggregation weights, e.g.
+               per-child sample counts for FedAvg.
+
+    Returns:
+      [P] — sum_k (w_k / sum(w)) * stacked[k].
+    """
+    w = weights / jnp.sum(weights)
+    return jnp.sum(w[:, None] * stacked, axis=0)
+
+
+def momentum_ref(
+    params: jnp.ndarray,
+    grads: jnp.ndarray,
+    velocity: jnp.ndarray,
+    lr_mu: jnp.ndarray,
+):
+    """Heavy-ball momentum oracle.
+
+    Args:
+      params:   [P] flat parameters.
+      grads:    [P] flat gradients.
+      velocity: [P] momentum buffer.
+      lr_mu:    [2] (learning rate, momentum coefficient mu).
+
+    Returns:
+      (params - lr * v', v') with v' = mu * velocity + grads.
+    """
+    v_new = lr_mu[1] * velocity + grads
+    return params - lr_mu[0] * v_new, v_new
+
+
+def sgd_ref(params: jnp.ndarray, grads: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Plain SGD update over a flat parameter vector.
+
+    Args:
+      params: [P] flat parameters.
+      grads:  [P] flat gradients.
+      lr:     [1] learning rate (kept as an array so it stays a runtime
+              input of the AOT artifact rather than a baked constant).
+
+    Returns:
+      [P] — params - lr * grads.
+    """
+    return params - lr[0] * grads

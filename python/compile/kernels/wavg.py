@@ -1,0 +1,92 @@
+"""Pallas weighted-average aggregation kernel — the FL aggregation hot-spot.
+
+The SDFL aggregator's job each round is FedAvg over the K child models it
+received: out = sum_k (w_k / sum w) * params_k, with params_k a flat
+[P]-vector (P ≈ 1.86 M for the paper's MLP).
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the reduction is tiled with
+a 1-D grid over the parameter axis. Each grid step streams one
+(K × BLOCK) tile HBM→VMEM, reduces it on the VPU, and writes one
+[BLOCK] tile back — a single HBM pass per element, VMEM footprint
+(K+1)·BLOCK·4 B (≈2.3 MiB at K=8, BLOCK=64 Ki), leaving headroom for the
+pipeliner to double-buffer. No MXU use: this kernel is bandwidth-bound,
+its roofline is HBM bandwidth, and that is what EXPERIMENTS.md §Perf
+estimates against.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile width along the parameter axis. 64 Ki f32 = 256 KiB per
+# input row; with K ≤ 8 the working set stays well under the ~16 MiB VMEM
+# budget of a TPU core while amortizing grid overhead.
+DEFAULT_BLOCK = 64 * 1024
+
+
+def _wavg_kernel(w_ref, x_ref, o_ref):
+    """One grid step: o[BLOCK] = sum_k w[k] * x[k, BLOCK].
+
+    `w` arrives pre-normalized (see `wavg`) so the kernel itself is a pure
+    weighted reduction — keeping the normalization out of the inner loop
+    avoids re-dividing per tile.
+    """
+    # [K, 1] * [K, BLOCK] -> reduce K -> [BLOCK]
+    o_ref[...] = jnp.sum(w_ref[...][:, None] * x_ref[...], axis=0)
+
+
+def _pad_to_multiple(x: jnp.ndarray, block: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = size % block
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, block - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def wavg(stacked: jnp.ndarray, weights: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Weighted average of K stacked flat vectors via the Pallas kernel.
+
+    Args:
+      stacked: [K, P] child parameter vectors.
+      weights: [K] raw weights (normalized internally, FedAvg-style).
+      block:   tile width along P; P is zero-padded up to a multiple.
+
+    Returns:
+      [P] aggregated parameter vector. Matches `ref.wavg_ref` exactly up
+      to float addition-order tolerance.
+    """
+    k, p = stacked.shape
+    w = (weights / jnp.sum(weights)).astype(stacked.dtype)
+    padded = _pad_to_multiple(stacked, block, axis=1)
+    p_pad = padded.shape[1]
+    grid = (p_pad // block,)
+    out = pl.pallas_call(
+        _wavg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),  # weights: whole vector each step
+            pl.BlockSpec((k, block), lambda i: (0, i)),  # one (K, BLOCK) tile
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p_pad,), stacked.dtype),
+        interpret=True,
+    )(w, padded)
+    return out[:p]
+
+
+def vmem_bytes(k: int, block: int = DEFAULT_BLOCK, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (inputs + output tile).
+
+    Used by python/tests and DESIGN.md §Perf to assert the kernel's tiling
+    stays inside the TPU VMEM budget — the only perf signal interpret mode
+    can give us (wall-clock under interpret is CPU-numpy, not a TPU proxy).
+    """
+    return (k * block + k + block) * dtype_bytes

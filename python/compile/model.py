@@ -1,0 +1,160 @@
+"""L2: the paper's FL workload as JAX compute graphs over a flat param vector.
+
+The docker evaluation in §IV.C of the paper trains a multi-layer
+perceptron with ~1.8 M parameters. We reproduce it exactly as
+784 → 1024 → 1024 → 10 (1,863,690 parameters) with ReLU activations and
+softmax cross-entropy, expressed over a single flat f32 vector so the
+rust side (L3) only ever moves one opaque [P] buffer per model.
+
+Graphs exported by aot.py (all shapes static, HLO-text interchange):
+  init_params(key)                     -> params [P]
+  train_step(params, x, y, lr)         -> (params', loss)   (B = TRAIN_BATCH)
+  evaluate(params, x, y)               -> (loss, accuracy)  (B = EVAL_BATCH)
+  aggregate(stacked [K,P], weights[K]) -> params [P]         (per-K variants)
+
+`train_step` calls the L1 Pallas SGD kernel for its update epilogue and
+`aggregate` is a thin wrapper over the L1 Pallas weighted-average kernel,
+so both kernels lower into the same HLO modules the rust runtime loads.
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import momentum as momentum_kernel
+from .kernels import sgd as sgd_kernel
+from .kernels import wavg as wavg_kernel
+
+# (fan_in, fan_out) per dense layer — the paper's ~1.8M-param MLP.
+LAYERS: List[Tuple[int, int]] = [(784, 1024), (1024, 1024), (1024, 10)]
+INPUT_DIM = LAYERS[0][0]
+NUM_CLASSES = LAYERS[-1][1]
+PARAM_COUNT = sum(i * o + o for i, o in LAYERS)  # 1,863,690
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 256
+
+
+def unflatten(flat: jnp.ndarray) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Split the flat [P] vector into per-layer (W [in,out], b [out]) views.
+
+    Layout: [W1, b1, W2, b2, W3, b3] — fixed and shared with the rust side
+    (rust never needs it, but artifacts/meta.json records it for tooling).
+    """
+    out = []
+    off = 0
+    for fan_in, fan_out in LAYERS:
+        w = flat[off : off + fan_in * fan_out].reshape(fan_in, fan_out)
+        off += fan_in * fan_out
+        b = flat[off : off + fan_out]
+        off += fan_out
+        out.append((w, b))
+    return out
+
+
+def flatten(layers: List[Tuple[jnp.ndarray, jnp.ndarray]]) -> jnp.ndarray:
+    """Inverse of `unflatten`."""
+    parts = []
+    for w, b in layers:
+        parts.append(w.reshape(-1))
+        parts.append(b)
+    return jnp.concatenate(parts)
+
+
+def forward(flat: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """MLP forward pass: ReLU hidden layers, linear head. Returns logits [B, C].
+
+    Matmuls stay in plain jnp: XLA already fuses bias+ReLU into the GEMM
+    epilogue and (on TPU) maps them to the MXU — see DESIGN.md
+    §Hardware-Adaptation for why only the bandwidth-bound pieces are
+    Pallas kernels.
+    """
+    h = x
+    layers = unflatten(flat)
+    for i, (w, b) in enumerate(layers):
+        h = h @ w + b
+        if i + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy. y is int32 class ids [B]."""
+    logits = forward(flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+
+
+def train_step(
+    flat: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    lr: jnp.ndarray,
+    *,
+    block: int = sgd_kernel.DEFAULT_BLOCK,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One local SGD step: value_and_grad + Pallas SGD epilogue.
+
+    `block` is the Pallas tile width (perf knob — see aot.artifact_block).
+    Returns (new_params [P], loss []).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+    new_flat = sgd_kernel.sgd(flat, grads, lr, block=block)
+    return new_flat, loss
+
+
+def train_step_momentum(
+    flat: jnp.ndarray,
+    velocity: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    lr_mu: jnp.ndarray,
+    *,
+    block: int = momentum_kernel.DEFAULT_BLOCK,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One local heavy-ball step (optional trainer optimizer).
+
+    Returns (new_params [P], new_velocity [P], loss []).
+    """
+    loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+    new_flat, new_v = momentum_kernel.momentum(flat, grads, velocity, lr_mu, block=block)
+    return new_flat, new_v, loss
+
+
+def init_params(key: jnp.ndarray) -> jnp.ndarray:
+    """He-initialized flat parameter vector from a threefry key ([2] u32).
+
+    Runs inside the AOT artifact so every node derives its model from a
+    seed rather than shipping 7.5 MB of initial weights around.
+    """
+    k = jax.random.wrap_key_data(key.astype(jnp.uint32), impl="threefry2x32")
+    layers = []
+    for fan_in, fan_out in LAYERS:
+        k, sub = jax.random.split(k)
+        scale = jnp.sqrt(2.0 / fan_in).astype(jnp.float32)
+        w = jax.random.normal(sub, (fan_in, fan_out), dtype=jnp.float32) * scale
+        b = jnp.zeros((fan_out,), dtype=jnp.float32)
+        layers.append((w, b))
+    return flatten(layers)
+
+
+def evaluate(
+    flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eval pass: returns (mean CE loss [], accuracy [])."""
+    logits = forward(flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def aggregate(
+    stacked: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    block: int = wavg_kernel.DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """FedAvg over K child models — delegates to the L1 Pallas kernel."""
+    return wavg_kernel.wavg(stacked, weights, block=block)

@@ -1,0 +1,84 @@
+"""AOT-export tests: every artifact lowers to parseable HLO text and the
+lowered modules keep the interface the rust runtime expects."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    """Lower everything once (slow-ish) and cache per module."""
+    return dict(aot.lower_all())
+
+
+def test_all_artifacts_present(lowered):
+    names = set(lowered)
+    assert "init" in names
+    assert f"train_step_b{model.TRAIN_BATCH}" in names
+    assert f"eval_b{model.EVAL_BATCH}" in names
+    for k in aot.AGGREGATE_KS:
+        assert f"aggregate_k{k}" in names
+
+
+def test_hlo_text_has_entry(lowered):
+    for name, text in lowered.items():
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def _entry_section(text: str) -> str:
+    """The ENTRY computation body (signature lives on its parameter/ROOT lines)."""
+    return text[text.index("ENTRY") :]
+
+
+def test_train_step_signature(lowered):
+    """params/x/y/lr in, (params', loss) tuple out — rust depends on this."""
+    entry = _entry_section(lowered[f"train_step_b{model.TRAIN_BATCH}"])
+    p = model.PARAM_COUNT
+    b = model.TRAIN_BATCH
+    assert re.search(rf"f32\[{p}\]\{{0\}} parameter\(0\)", entry)
+    assert re.search(rf"f32\[{b},{model.INPUT_DIM}\][^ ]* parameter\(1\)", entry)
+    assert re.search(rf"s32\[{b}\]\{{0\}} parameter\(2\)", entry)
+    assert re.search(rf"ROOT [^=]+= \(f32\[{p}\]\{{0\}}, f32\[\]\) tuple", entry)
+
+
+def test_aggregate_signature(lowered):
+    p = model.PARAM_COUNT
+    for k in aot.AGGREGATE_KS:
+        entry = _entry_section(lowered[f"aggregate_k{k}"])
+        assert re.search(rf"f32\[{k},{p}\][^ ]* parameter\(0\)", entry), k
+        assert re.search(rf"f32\[{k}\]\{{0\}} parameter\(1\)", entry), k
+
+
+def test_no_mosaic_custom_calls(lowered):
+    """interpret=True must hold: a Mosaic custom-call would be unloadable
+    by the CPU PJRT client (see /opt/xla-example/README.md)."""
+    for name, text in lowered.items():
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name
+
+
+def test_hlo_reparses_via_xla_client(lowered):
+    """Round-trip the text through the XLA parser — what rust will do."""
+    from jax._src.lib import xla_client as xc
+
+    for name, text in lowered.items():
+        mod = xc._xla.hlo_module_from_text(text)
+        assert mod is not None, name
+
+
+def test_meta_json_consistent(tmp_path):
+    aot.write_meta(str(tmp_path))
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["param_count"] == model.PARAM_COUNT
+    assert meta["train_batch"] == model.TRAIN_BATCH
+    assert sorted(int(k) for k in meta["artifacts"]["aggregate"]) == sorted(aot.AGGREGATE_KS)
+    # layer bookkeeping must reproduce the param count
+    assert sum(i * o + o for i, o in meta["layers"]) == meta["param_count"]

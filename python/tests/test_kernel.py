@@ -1,0 +1,168 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel must match its pure-jnp oracle (kernels/ref.py) on
+exact shapes (pytest params) and randomized shapes/dtypes (hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sgd, wavg
+
+# Float tolerance: interpret-mode Pallas may fuse/reassociate (FMA) the
+# arithmetic differently from the jnp oracle.
+RTOL, ATOL = 1e-5, 1e-6
+
+
+def _rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------- wavg ----
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("p,block", [(256, 256), (1000, 256), (65536, 65536), (70000, 65536)])
+def test_wavg_matches_ref(k, p, block):
+    stacked = _rand((k, p), seed=k * 1000 + p)
+    weights = jnp.asarray(np.random.default_rng(p).uniform(0.1, 5.0, size=(k,)).astype(np.float32))
+    got = wavg.wavg(stacked, weights, block=block)
+    want = ref.wavg_ref(stacked, weights)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_wavg_identity_on_equal_rows():
+    """Averaging K identical models returns that model (FedAvg invariant)."""
+    row = _rand((512,), seed=7)
+    stacked = jnp.stack([row] * 4)
+    got = wavg.wavg(stacked, jnp.ones((4,)), block=128)
+    np.testing.assert_allclose(got, row, rtol=RTOL, atol=ATOL)
+
+
+def test_wavg_zero_weight_child_ignored():
+    """Zero weight == absent child: used by the runtime's K-padding."""
+    a = _rand((300,), seed=1)
+    b = _rand((300,), seed=2)
+    junk = jnp.full((300,), 1e9, dtype=jnp.float32)
+    stacked = jnp.stack([a, b, junk])
+    w = jnp.asarray([1.0, 3.0, 0.0], dtype=jnp.float32)
+    got = wavg.wavg(stacked, w, block=128)
+    want = ref.wavg_ref(jnp.stack([a, b]), w[:2])
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_wavg_weight_normalization_scale_invariant():
+    """Scaling all weights by a constant must not change the output."""
+    stacked = _rand((3, 400), seed=3)
+    w = jnp.asarray([1.0, 2.0, 3.0], dtype=jnp.float32)
+    got1 = wavg.wavg(stacked, w, block=128)
+    got2 = wavg.wavg(stacked, w * 100.0, block=128)
+    np.testing.assert_allclose(got1, got2, rtol=RTOL, atol=ATOL)
+
+
+def test_wavg_block_size_invariant():
+    """The tile width is a perf knob only — outputs must be identical."""
+    stacked = _rand((4, 5000), seed=4)
+    w = jnp.asarray([1.0, 2.0, 0.5, 0.25], dtype=jnp.float32)
+    outs = [wavg.wavg(stacked, w, block=b) for b in (128, 512, 4096, 8192)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=8),
+    p=st.integers(min_value=1, max_value=3000),
+    block=st.sampled_from([64, 128, 256, 1024]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_wavg_hypothesis_sweep(k, p, block, seed):
+    rng = np.random.default_rng(seed)
+    stacked = jnp.asarray(rng.normal(size=(k, p)).astype(np.float32))
+    weights = jnp.asarray(rng.uniform(0.05, 10.0, size=(k,)).astype(np.float32))
+    got = wavg.wavg(stacked, weights, block=block)
+    want = ref.wavg_ref(stacked, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wavg_dtypes(dtype):
+    stacked = _rand((2, 512), seed=9).astype(dtype)
+    w = jnp.asarray([1.0, 1.0], dtype=jnp.float32)
+    got = wavg.wavg(stacked, w, block=256)
+    want = ref.wavg_ref(stacked, w.astype(dtype))
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=1e-2 if dtype == jnp.bfloat16 else RTOL,
+        atol=1e-2 if dtype == jnp.bfloat16 else ATOL,
+    )
+
+
+def test_wavg_vmem_budget():
+    """DESIGN.md §Perf: the default tiling must fit TPU VMEM (~16 MiB)."""
+    assert wavg.vmem_bytes(k=8) < 4 * 1024 * 1024  # leaves 4x headroom
+
+
+# ----------------------------------------------------------------- sgd ----
+
+
+@pytest.mark.parametrize("p,block", [(128, 128), (777, 128), (65536, 65536), (70000, 65536)])
+@pytest.mark.parametrize("lr", [0.0, 0.01, 1.5])
+def test_sgd_matches_ref(p, block, lr):
+    params = _rand((p,), seed=p)
+    grads = _rand((p,), seed=p + 1)
+    lr_arr = jnp.asarray([lr], dtype=jnp.float32)
+    got = sgd.sgd(params, grads, lr_arr, block=block)
+    want = ref.sgd_ref(params, grads, lr_arr)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_sgd_zero_lr_is_identity():
+    params = _rand((1000,), seed=11)
+    grads = _rand((1000,), seed=12)
+    got = sgd.sgd(params, grads, jnp.asarray([0.0], dtype=jnp.float32), block=256)
+    np.testing.assert_allclose(got, params, rtol=0, atol=0)
+
+
+def test_sgd_zero_grad_is_identity():
+    params = _rand((1000,), seed=13)
+    got = sgd.sgd(params, jnp.zeros((1000,)), jnp.asarray([0.3], dtype=jnp.float32), block=256)
+    np.testing.assert_allclose(got, params, rtol=0, atol=0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=4000),
+    block=st.sampled_from([64, 256, 1024]),
+    lr=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sgd_hypothesis_sweep(p, block, lr, seed):
+    rng = np.random.default_rng(seed)
+    params = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    grads = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    lr_arr = jnp.asarray([lr], dtype=jnp.float32)
+    got = sgd.sgd(params, grads, lr_arr, block=block)
+    want = ref.sgd_ref(params, grads, lr_arr)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sgd_composes_with_wavg():
+    """One federated micro-round in pure kernels: K local updates then avg."""
+    base = _rand((600,), seed=20)
+    lr = jnp.asarray([0.05], dtype=jnp.float32)
+    locals_ = []
+    for i in range(3):
+        g = _rand((600,), seed=30 + i)
+        locals_.append(sgd.sgd(base, g, lr, block=128))
+    stacked = jnp.stack(locals_)
+    w = jnp.ones((3,), dtype=jnp.float32)
+    got = wavg.wavg(stacked, w, block=128)
+    want = ref.wavg_ref(stacked, w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,117 @@
+"""L2 model-graph tests: shapes, training signal, aggregation semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+KEY = jnp.asarray([0, 42], dtype=jnp.uint32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(KEY)
+
+
+def _batch(b, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, model.INPUT_DIM)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, model.NUM_CLASSES, size=(b,)).astype(np.int32))
+    return x, y
+
+
+def test_param_count_matches_paper(params):
+    """The paper's docker model is 'about 1.8 million parameters'."""
+    assert model.PARAM_COUNT == 1_863_690
+    assert params.shape == (model.PARAM_COUNT,)
+
+
+def test_flatten_unflatten_roundtrip(params):
+    layers = model.unflatten(params)
+    assert [tuple(w.shape) for w, _ in layers] == [(i, o) for i, o in model.LAYERS]
+    back = model.flatten(layers)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(params))
+
+
+def test_init_deterministic():
+    a = model.init_params(KEY)
+    b = model.init_params(KEY)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_init_seed_sensitivity():
+    a = model.init_params(KEY)
+    b = model.init_params(jnp.asarray([1, 43], dtype=jnp.uint32))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_forward_shape(params):
+    x, _ = _batch(model.TRAIN_BATCH)
+    logits = model.forward(params, x)
+    assert logits.shape == (model.TRAIN_BATCH, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_log_c(params):
+    """Random init ⇒ CE loss ≈ ln(10); catches broken init scales."""
+    x, y = _batch(model.EVAL_BATCH, seed=5)
+    loss, acc = model.evaluate(params, x, y)
+    assert abs(float(loss) - np.log(model.NUM_CLASSES)) < 1.0
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_train_step_reduces_loss(params):
+    """A few steps on a fixed batch must descend — the core training signal."""
+    x, y = _batch(model.TRAIN_BATCH, seed=1)
+    lr = jnp.asarray([0.1], dtype=jnp.float32)
+    p, loss0 = model.train_step(params, x, y, lr)
+    losses = [float(loss0)]
+    for _ in range(4):
+        p, loss = model.train_step(p, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_train_step_zero_lr_keeps_params(params):
+    x, y = _batch(model.TRAIN_BATCH, seed=2)
+    p, _ = model.train_step(params, x, y, jnp.asarray([0.0], dtype=jnp.float32))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(params))
+
+
+def test_aggregate_identity(params):
+    stacked = jnp.stack([params, params, params])
+    out = model.aggregate(stacked, jnp.ones((3,), dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(params), rtol=1e-5, atol=1e-6)
+
+
+def test_aggregate_midpoint(params):
+    """avg(p, p + 2d) == p + d."""
+    d = jnp.ones_like(params) * 0.25
+    stacked = jnp.stack([params, params + 2 * d])
+    out = model.aggregate(stacked, jnp.ones((2,), dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(params + d), rtol=1e-4, atol=1e-5)
+
+
+def test_federated_round_improves_over_init(params):
+    """Mini FedAvg round: 3 trainers on disjoint batches, aggregate, eval.
+
+    The aggregated model must beat the initial model on the union data —
+    the end-to-end semantic the rust coordinator depends on.
+    """
+    lr = jnp.asarray([0.1], dtype=jnp.float32)
+    locals_ = []
+    for i in range(3):
+        x, y = _batch(model.TRAIN_BATCH, seed=10 + i)
+        p = params
+        for _ in range(3):
+            p, _ = model.train_step(p, x, y, lr)
+        locals_.append(p)
+    agg = model.aggregate(jnp.stack(locals_), jnp.ones((3,), dtype=jnp.float32))
+
+    xs, ys = zip(*[_batch(model.TRAIN_BATCH, seed=10 + i) for i in range(3)])
+    x_all, y_all = jnp.concatenate(xs), jnp.concatenate(ys)
+    loss_init = model.loss_fn(params, x_all, y_all)
+    loss_agg = model.loss_fn(agg, x_all, y_all)
+    assert float(loss_agg) < float(loss_init)

@@ -1,0 +1,101 @@
+//! Ablation A2: black-box optimizer comparison under an equal
+//! evaluation budget — backs the paper's §II claim that PSO converges
+//! faster/better than GA for this problem, and adds SA + pure random
+//! search as controls. All four run through the same black-box
+//! [`PlacementStrategy`] protocol (one TPD evaluation per "round").
+//!
+//! Run: `cargo bench --bench ablation_optimizers`
+
+use repro::bench::report_table;
+use repro::fitness::{tpd, ClientAttrs};
+use repro::hierarchy::{Arrangement, HierarchySpec};
+use repro::placement::*;
+use repro::prng::Pcg32;
+use repro::pso::PsoConfig;
+
+const BUDGET: usize = 400; // fitness evaluations per optimizer
+const SEEDS: u64 = 5;
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let spec = HierarchySpec::new(4, 4); // 85 slots
+    let dims = spec.dimensions();
+    let cc = dims + spec.leaf_slots().len() * 2; // 213 clients
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for name in ["random", "pso", "pso-nopin", "ga", "sa", "tabu"] {
+        let mut bests = Vec::new();
+        let mut best_at_half = Vec::new();
+        for seed in 0..SEEDS {
+            let mut rng = Pcg32::seed_from_u64(1000 + seed);
+            let attrs =
+                ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+            let tpd_of = |pos: &[usize]| {
+                tpd(&Arrangement::from_position(spec, pos, cc), &attrs).total
+            };
+            let mut strategy: Box<dyn PlacementStrategy> = match name {
+                "random" => Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
+                "pso" => Box::new(PsoPlacement::new(
+                    dims,
+                    cc,
+                    PsoConfig::paper(),
+                    Pcg32::seed_from_u64(seed),
+                )),
+                "pso-nopin" => Box::new(PsoPlacement::without_pinning(
+                    dims,
+                    cc,
+                    PsoConfig::paper(),
+                    Pcg32::seed_from_u64(seed),
+                )),
+                "ga" => Box::new(GaPlacement::new(
+                    dims,
+                    cc,
+                    GaConfig::default(),
+                    Pcg32::seed_from_u64(seed),
+                )),
+                "sa" => Box::new(SaPlacement::new(
+                    dims,
+                    cc,
+                    SaConfig::default(),
+                    Pcg32::seed_from_u64(seed),
+                )),
+                "tabu" => Box::new(TabuPlacement::new(
+                    dims,
+                    cc,
+                    TabuConfig::default(),
+                    Pcg32::seed_from_u64(seed),
+                )),
+                _ => unreachable!(),
+            };
+            let mut best = f64::INFINITY;
+            let mut half = f64::INFINITY;
+            for round in 0..BUDGET {
+                let p = strategy.propose(round);
+                let t = tpd_of(&p);
+                strategy.feedback(&p, t);
+                best = best.min(t);
+                if round == BUDGET / 2 {
+                    half = best;
+                }
+            }
+            bests.push(best);
+            best_at_half.push(half);
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        rows.push((
+            name.to_string(),
+            vec![mean(&best_at_half), mean(&bests)],
+        ));
+    }
+    report_table(
+        &format!("Ablation A2 — optimizers, D4 W4, {BUDGET} evals, {SEEDS} seeds"),
+        &["best_tpd@50%", "best_tpd@100%"],
+        &rows,
+    );
+    println!(
+        "expected shape: pso-nopin/ga/sa beat random search. Deployed Flag-Swap\n\
+         ('pso') pins gbest after convergence — it stops searching early by\n\
+         design, trading search depth for stable low-delay production rounds\n\
+         (what Fig. 4 measures). pso-nopin isolates pure PSO search quality."
+    );
+}

@@ -1,0 +1,47 @@
+//! Ablation A1: swarm size. The paper observes larger P finds better
+//! placements (Fig. 3 a↔d); this sweeps P ∈ {2, 5, 10, 20} on the D4/W4
+//! simulation with a fixed iteration budget.
+//!
+//! Run: `cargo bench --bench ablation_swarm`
+
+use repro::bench::report_table;
+use repro::configio::SimScenario;
+use repro::metrics::Stopwatch;
+use repro::sim::run_sim;
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let mut rows = Vec::new();
+    for particles in [2usize, 5, 10, 20] {
+        // Average over a few seeds — single runs of a stochastic
+        // optimizer are noise.
+        let mut best = Vec::new();
+        let mut conv = 0usize;
+        let sw = Stopwatch::start();
+        for seed in 0..5u64 {
+            let mut sc = SimScenario {
+                depth: 4,
+                width: 4,
+                seed: 42 + seed,
+                ..SimScenario::default()
+            };
+            sc.pso.particles = particles;
+            let r = run_sim(&sc);
+            best.push(r.best_tpd);
+            conv += r.converged as usize;
+        }
+        let secs = sw.elapsed_secs();
+        let mean = best.iter().sum::<f64>() / best.len() as f64;
+        let min = best.iter().cloned().fold(f64::INFINITY, f64::min);
+        rows.push((
+            format!("P={particles}"),
+            vec![mean, min, conv as f64, secs * 1e3 / 5.0],
+        ));
+    }
+    report_table(
+        "Ablation A1 — swarm size (D4 W4, 100 iters, 5 seeds)",
+        &["best_tpd_mean", "best_tpd_min", "converged/5", "ms/run"],
+        &rows,
+    );
+    println!("expected shape: best_tpd_mean non-increasing with P (paper Fig. 3 a vs d).");
+}

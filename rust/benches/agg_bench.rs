@@ -1,0 +1,67 @@
+//! Bench L1/L2-µ: PJRT execution latency of the AOT artifacts — the
+//! aggregation kernel (per fan-in K), the train step, init and eval.
+//! This is the compute the emulated clients stretch; its baseline cost
+//! sets the round-delay floor.
+//!
+//! Requires `make artifacts` (skips otherwise).
+//!
+//! Run: `cargo bench --bench agg_bench`
+
+use repro::bench::{black_box, Bencher};
+use repro::runtime::ModelRuntime;
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let rt = match ModelRuntime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP agg_bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let b = Bencher::new(12, 3);
+    let p = rt.meta.param_count;
+
+    let params = rt.init_params([0, 1]).unwrap();
+    b.iter("init_params", || black_box(rt.init_params([0, 1]).unwrap()));
+
+    // Aggregation across exported fan-ins.
+    for k in [2usize, 4, 8] {
+        let models: Vec<&[f32]> = (0..k).map(|_| params.as_slice()).collect();
+        let weights = vec![1.0f32; k];
+        let s = b.iter(&format!("aggregate_k{k} (P={p})"), || {
+            black_box(rt.aggregate(&models, &weights).unwrap())
+        });
+        // Effective reduction bandwidth: K·P·4 bytes read per aggregate.
+        let gb = (k * p * 4) as f64 / 1e9;
+        println!(
+            "      -> reduction read bandwidth ≈ {:.2} GB/s",
+            gb / (s.mean / 1e6)
+        );
+    }
+
+    // Train step (fwd+bwd+pallas-SGD at batch 32).
+    {
+        use repro::prng::{Pcg32, Rng};
+        let mut rng = Pcg32::seed_from_u64(2);
+        let x: Vec<f32> = (0..rt.meta.train_batch * rt.meta.input_dim)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        let y: Vec<i32> = (0..rt.meta.train_batch)
+            .map(|_| rng.gen_range(10) as i32)
+            .collect();
+        b.iter("train_step_b32", || {
+            black_box(rt.train_step(&params, &x, &y, 0.05).unwrap())
+        });
+
+        let xe: Vec<f32> = (0..rt.meta.eval_batch * rt.meta.input_dim)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+        let ye: Vec<i32> = (0..rt.meta.eval_batch)
+            .map(|_| rng.gen_range(10) as i32)
+            .collect();
+        b.iter("eval_b256", || {
+            black_box(rt.evaluate(&params, &xe, &ye).unwrap())
+        });
+    }
+}

@@ -1,0 +1,91 @@
+//! Bench L3-µ: broker throughput/latency (substrate roofline, DESIGN.md
+//! §Perf target: ≥100k msg/s in-proc for 1 KB payloads).
+//!
+//! Run: `cargo bench --bench broker_bench`
+
+use repro::bench::{black_box, Bencher};
+use repro::broker::{Broker, TcpBrokerServer, TcpClient};
+use std::time::Duration;
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let b = Bencher::new(20, 3);
+
+    // In-proc single pub → single sub, 1 KB.
+    {
+        let broker = Broker::new();
+        let mut sub = broker.connect("sub");
+        sub.subscribe("t").unwrap();
+        let publisher = broker.connect("pub");
+        let payload = vec![7u8; 1024];
+        b.iter_throughput("inproc_1KB_pub_recv x1000", || {
+            for _ in 0..1000 {
+                publisher.publish("t", payload.clone()).unwrap();
+                black_box(sub.recv_timeout(Duration::from_secs(1)).unwrap());
+            }
+            1000
+        });
+    }
+
+    // Wildcard routing cost with many subscriptions.
+    {
+        let broker = Broker::new();
+        let mut subs = Vec::new();
+        for i in 0..100 {
+            let mut c = broker.connect(&format!("s{i}"));
+            c.subscribe(&format!("fl/{i}/+")).unwrap();
+            subs.push(c);
+        }
+        let publisher = broker.connect("pub");
+        b.iter_throughput("route_100filters x1000", || {
+            for i in 0..1000 {
+                publisher
+                    .publish(format!("fl/{}/x", i % 100), vec![1u8; 64])
+                    .unwrap();
+            }
+            1000
+        });
+    }
+
+    // Retained replay.
+    {
+        let broker = Broker::new();
+        let publisher = broker.connect("pub");
+        for i in 0..64 {
+            publisher
+                .publish_retained(format!("cfg/{i}"), vec![i as u8; 128])
+                .unwrap();
+        }
+        b.iter("subscribe_with_64_retained", || {
+            let mut c = broker.connect("late");
+            c.subscribe("cfg/#").unwrap();
+            let mut n = 0;
+            while c.try_recv().is_some() {
+                n += 1;
+            }
+            black_box(n)
+        });
+    }
+
+    // TCP loopback round-trip, 1 KB and 7.5 MB.
+    {
+        let broker = Broker::new();
+        let server = TcpBrokerServer::start("127.0.0.1:0", broker).unwrap();
+        let mut sub = TcpClient::connect(&server.addr()).unwrap();
+        sub.subscribe("t").unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let mut publisher = TcpClient::connect(&server.addr()).unwrap();
+
+        let small = vec![7u8; 1024];
+        b.iter("tcp_1KB_roundtrip", || {
+            publisher.publish("t", &small).unwrap();
+            black_box(sub.recv(Duration::from_secs(2)).unwrap())
+        });
+
+        let big = vec![7u8; 7_500_000];
+        b.iter("tcp_7.5MB_roundtrip", || {
+            publisher.publish("t", &big).unwrap();
+            black_box(sub.recv(Duration::from_secs(10)).unwrap())
+        });
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench L3-µ: PSO optimizer step cost. The coordinator must never be
+//! the bottleneck (DESIGN.md §Perf) — one full swarm step over the
+//! biggest Fig-3 search space (341 dims, 1877 clients) has to stay far
+//! under a round's multi-second wall time.
+//!
+//! Run: `cargo bench --bench pso_bench`
+
+use repro::bench::{black_box, Bencher};
+use repro::prng::Pcg32;
+use repro::pso::{AsyncSwarm, PsoConfig, Swarm};
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let b = Bencher::new(50, 5);
+
+    for (dims, cc) in [(21usize, 53usize), (85, 213), (341, 1877)] {
+        let cfg = PsoConfig::paper();
+        let mut swarm = Swarm::new(dims, cc, cfg, Pcg32::seed_from_u64(1));
+        b.iter(&format!("swarm_step dims={dims} cc={cc}"), || {
+            // Trivial fitness isolates optimizer cost from TPD cost.
+            black_box(swarm.step(|pos| pos[0] as f64))
+        });
+    }
+
+    for (dims, cc) in [(3usize, 10usize), (21, 53), (341, 1877)] {
+        let mut swarm = AsyncSwarm::new(dims, cc, PsoConfig::paper(), Pcg32::seed_from_u64(2));
+        b.iter(&format!("async propose+report dims={dims}"), || {
+            let p = swarm.propose();
+            let d = p[0] as f64;
+            swarm.report(d);
+            black_box(d)
+        });
+    }
+
+    // TPD fitness evaluation cost (the sim inner loop).
+    use repro::fitness::{tpd, ClientAttrs};
+    use repro::hierarchy::{Arrangement, HierarchySpec};
+    use repro::prng::Rng;
+    for (d, w) in [(3usize, 4usize), (4, 4), (5, 4)] {
+        let spec = HierarchySpec::new(d, w);
+        let dims = spec.dimensions();
+        let cc = dims + spec.leaf_slots().len() * 2;
+        let mut rng = Pcg32::seed_from_u64(3);
+        let attrs = ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+        let pos: Vec<usize> = rng.sample_distinct(cc, dims);
+        b.iter(&format!("tpd_eval D{d} W{w} dims={dims}"), || {
+            black_box(tpd(&Arrangement::from_position(spec, &pos, cc), &attrs).total)
+        });
+    }
+}

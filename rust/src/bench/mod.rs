@@ -1,0 +1,119 @@
+//! Micro-bench harness (substrate — no `criterion` offline).
+//!
+//! `cargo bench` targets use [`Bencher`] for timed inner loops with
+//! warmup + sample statistics, and [`report_table`] for paper-style
+//! result tables. Output format is stable so `bench_output.txt` diffs
+//! cleanly between perf iterations (DESIGN.md §Perf).
+
+use crate::metrics::Summary;
+use std::time::Instant;
+
+/// Timed micro-benchmark runner.
+pub struct Bencher {
+    /// Minimum samples collected per `iter` call.
+    pub samples: usize,
+    /// Warmup iterations before sampling.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            samples: 30,
+            warmup: 3,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        Bencher { samples, warmup }
+    }
+
+    /// Time `f` (one logical operation per call); prints and returns the
+    /// per-call summary in microseconds.
+    pub fn iter<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let s = Summary::from(&times);
+        println!("bench {name:<44} {}", s.render("us"));
+        s
+    }
+
+    /// Like `iter`, but `f` reports how many items it processed; prints
+    /// throughput (items/s) alongside latency.
+    pub fn iter_throughput<F: FnMut() -> usize>(&self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        let mut items_total = 0usize;
+        let mut time_total = 0f64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            let items = black_box(f());
+            let dt = t0.elapsed().as_secs_f64();
+            times.push(dt * 1e6);
+            items_total += items;
+            time_total += dt;
+        }
+        let s = Summary::from(&times);
+        let rate = items_total as f64 / time_total.max(1e-12);
+        println!(
+            "bench {name:<44} {}  throughput={:.0}/s",
+            s.render("us"),
+            rate
+        );
+        s
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render a paper-style results table (rows of label + columns).
+pub fn report_table(title: &str, columns: &[&str], rows: &[(String, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    print!("{:<28}", "case");
+    for c in columns {
+        print!("{c:>16}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<28}");
+        for v in vals {
+            print!("{v:>16.4}");
+        }
+        println!();
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        let b = Bencher::new(5, 1);
+        let s = b.iter("noop", || 1 + 1);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_items() {
+        let b = Bencher::new(3, 0);
+        let s = b.iter_throughput("batch", || 100);
+        assert_eq!(s.n, 3);
+    }
+}

@@ -1,0 +1,142 @@
+//! The in-process broker: a mutex-wrapped [`Router`] shared by
+//! [`super::BrokerClient`] handles. This is the "broker at the edge" the
+//! SDFLMQ deployment connects to; the [`super::TcpBrokerServer`] exposes
+//! the same router over TCP for cross-process use.
+
+use super::{validate_filter, validate_topic, BrokerClient, Message, Router};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+/// Handle to a running broker. Cheap to clone.
+#[derive(Clone)]
+pub struct Broker {
+    inner: Arc<BrokerInner>,
+}
+
+pub(super) struct BrokerInner {
+    pub(super) router: Mutex<Router>,
+    next_client: AtomicU64,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Broker {
+    pub fn new() -> Broker {
+        Broker {
+            inner: Arc::new(BrokerInner {
+                router: Mutex::new(Router::new()),
+                next_client: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    /// Connect a new in-process client.
+    pub fn connect(&self, name: &str) -> BrokerClient {
+        let id = self.alloc_id();
+        let (tx, rx) = channel();
+        BrokerClient::new(self.clone(), id, name.to_string(), tx, rx)
+    }
+
+    /// Allocate a fresh client id (used by the TCP transport, which
+    /// manages its subscription lifetime manually).
+    pub(super) fn alloc_id(&self) -> u64 {
+        self.inner.next_client.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Publish on behalf of a client (validates the topic).
+    pub fn publish(&self, msg: Message) -> Result<usize, String> {
+        validate_topic(&msg.topic)?;
+        Ok(self.inner.router.lock().unwrap().publish(&msg))
+    }
+
+    pub(super) fn subscribe(
+        &self,
+        client: u64,
+        filter: &str,
+        tx: std::sync::mpsc::Sender<Message>,
+    ) -> Result<(), String> {
+        validate_filter(filter)?;
+        self.inner.router.lock().unwrap().subscribe(client, filter, tx);
+        Ok(())
+    }
+
+    pub(super) fn unsubscribe(&self, client: u64, filter: &str) {
+        self.inner.router.lock().unwrap().unsubscribe(client, filter);
+    }
+
+    pub(super) fn disconnect(&self, client: u64) {
+        self.inner.router.lock().unwrap().disconnect(client);
+    }
+
+    /// (delivered, dropped) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        self.inner.router.lock().unwrap().stats()
+    }
+
+    /// Active subscription count.
+    pub fn subscription_count(&self) -> usize {
+        self.inner.router.lock().unwrap().subscription_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn pubsub_roundtrip() {
+        let broker = Broker::new();
+        let mut sub = broker.connect("sub");
+        let pub_ = broker.connect("pub");
+        sub.subscribe("fl/+/model").unwrap();
+        pub_.publish("fl/3/model", b"params".to_vec()).unwrap();
+        let msg = sub.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(msg.topic, "fl/3/model");
+        assert_eq!(&**msg.payload, b"params");
+    }
+
+    #[test]
+    fn publish_to_wildcard_rejected() {
+        let broker = Broker::new();
+        let c = broker.connect("c");
+        assert!(c.publish("a/+", vec![]).is_err());
+    }
+
+    #[test]
+    fn drop_disconnects() {
+        let broker = Broker::new();
+        {
+            let mut c = broker.connect("temp");
+            c.subscribe("x").unwrap();
+            assert_eq!(broker.subscription_count(), 1);
+        }
+        assert_eq!(broker.subscription_count(), 0);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let broker = Broker::new();
+        let mut sub = broker.connect("sub");
+        sub.subscribe("work/#").unwrap();
+        let b2 = broker.clone();
+        let t = std::thread::spawn(move || {
+            let p = b2.connect("worker");
+            for i in 0..100 {
+                p.publish(format!("work/{i}"), vec![i as u8]).unwrap();
+            }
+        });
+        let mut got = 0;
+        while got < 100 {
+            sub.recv_timeout(Duration::from_secs(2)).unwrap();
+            got += 1;
+        }
+        t.join().unwrap();
+        assert_eq!(broker.stats().0, 100);
+    }
+}

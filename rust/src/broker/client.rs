@@ -1,0 +1,153 @@
+//! In-process broker client handle: subscribe / publish / receive.
+
+use super::{Broker, Message};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One connected client. Receiving is single-consumer (`&mut self`);
+/// publishing is `&self` and may happen from the same thread that
+/// receives.
+pub struct BrokerClient {
+    broker: Broker,
+    id: u64,
+    name: String,
+    tx: Sender<Message>,
+    rx: Receiver<Message>,
+    subscriptions: Vec<String>,
+}
+
+impl BrokerClient {
+    pub(super) fn new(
+        broker: Broker,
+        id: u64,
+        name: String,
+        tx: Sender<Message>,
+        rx: Receiver<Message>,
+    ) -> BrokerClient {
+        BrokerClient {
+            broker,
+            id,
+            name,
+            tx,
+            rx,
+            subscriptions: Vec::new(),
+        }
+    }
+
+    /// Client id assigned by the broker.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Subscribe to a filter (retained messages are replayed immediately
+    /// into the receive queue).
+    pub fn subscribe(&mut self, filter: &str) -> Result<(), String> {
+        self.broker.subscribe(self.id, filter, self.tx.clone())?;
+        self.subscriptions.push(filter.to_string());
+        Ok(())
+    }
+
+    /// Remove one subscription.
+    pub fn unsubscribe(&mut self, filter: &str) {
+        self.broker.unsubscribe(self.id, filter);
+        self.subscriptions.retain(|f| f != filter);
+    }
+
+    /// Publish owned bytes.
+    pub fn publish(&self, topic: impl Into<String>, payload: Vec<u8>) -> Result<usize, String> {
+        self.broker.publish(Message::new(topic, payload))
+    }
+
+    /// Publish an `Arc` payload (zero-copy fan-out).
+    pub fn publish_shared(
+        &self,
+        topic: impl Into<String>,
+        payload: Arc<Vec<u8>>,
+    ) -> Result<usize, String> {
+        self.broker.publish(Message::shared(topic, payload))
+    }
+
+    /// Publish with retention.
+    pub fn publish_retained(
+        &self,
+        topic: impl Into<String>,
+        payload: Vec<u8>,
+    ) -> Result<usize, String> {
+        self.broker.publish(Message::new(topic, payload).retained())
+    }
+
+    /// Publish an `Arc` payload with retention (zero-copy fan-out AND
+    /// late-subscriber replay — the global-model broadcast path).
+    pub fn publish_shared_retained(
+        &self,
+        topic: impl Into<String>,
+        payload: Arc<Vec<u8>>,
+    ) -> Result<usize, String> {
+        self.broker.publish(Message::shared(topic, payload).retained())
+    }
+
+    /// Clear a retained message (MQTT empty-retained semantics).
+    pub fn clear_retained(&self, topic: impl Into<String>) -> Result<usize, String> {
+        self.broker.publish(Message::new(topic, Vec::new()).retained())
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Message, String> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => format!("client {}: recv timeout", self.name),
+            RecvTimeoutError::Disconnected => format!("client {}: broker gone", self.name),
+        })
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl Drop for BrokerClient {
+    fn drop(&mut self) {
+        self.broker.disconnect(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Broker;
+    use std::time::Duration;
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let broker = Broker::new();
+        let mut c = broker.connect("c");
+        c.subscribe("t").unwrap();
+        assert!(c.try_recv().is_none());
+        c.publish("t", b"x".to_vec()).unwrap();
+        assert!(c.try_recv().is_some());
+    }
+
+    #[test]
+    fn self_publish_delivers() {
+        // A client subscribed to its own topic hears itself (MQTT default).
+        let broker = Broker::new();
+        let mut c = broker.connect("c");
+        c.subscribe("loop").unwrap();
+        c.publish("loop", vec![1]).unwrap();
+        assert!(c.recv_timeout(Duration::from_millis(100)).is_ok());
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let broker = Broker::new();
+        let mut c = broker.connect("c");
+        c.subscribe("a").unwrap();
+        c.unsubscribe("a");
+        c.publish("a", vec![]).unwrap();
+        assert!(c.try_recv().is_none());
+    }
+}

@@ -1,0 +1,74 @@
+//! Broker message: topic + `Arc`-shared payload.
+//!
+//! Payloads are `Arc<Vec<u8>>` so fanning a 7.5 MB model broadcast out to
+//! N subscribers clones a pointer, not the bytes (perf-critical for the
+//! round loop; see EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+
+/// One published message as delivered to subscribers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub topic: String,
+    pub payload: Arc<Vec<u8>>,
+    /// Whether the publisher asked for retention (late subscribers get
+    /// the most recent retained message per topic on subscribe).
+    pub retain: bool,
+}
+
+impl Message {
+    /// Owned-payload constructor.
+    pub fn new(topic: impl Into<String>, payload: Vec<u8>) -> Message {
+        Message {
+            topic: topic.into(),
+            payload: Arc::new(payload),
+            retain: false,
+        }
+    }
+
+    /// Shared-payload constructor (zero-copy fan-out).
+    pub fn shared(topic: impl Into<String>, payload: Arc<Vec<u8>>) -> Message {
+        Message {
+            topic: topic.into(),
+            payload,
+            retain: false,
+        }
+    }
+
+    /// Mark for retention.
+    pub fn retained(mut self) -> Message {
+        self.retain = true;
+        self
+    }
+
+    /// Payload as UTF-8 (for JSON control messages).
+    pub fn text(&self) -> Result<&str, std::str::Utf8Error> {
+        std::str::from_utf8(&self.payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_payload_is_zero_copy() {
+        let payload = Arc::new(vec![1u8; 1024]);
+        let a = Message::shared("t", payload.clone());
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.payload, &b.payload));
+        assert!(Arc::ptr_eq(&a.payload, &payload));
+    }
+
+    #[test]
+    fn text_decodes_utf8() {
+        let m = Message::new("t", b"{\"x\":1}".to_vec());
+        assert_eq!(m.text().unwrap(), "{\"x\":1}");
+    }
+
+    #[test]
+    fn retained_flag() {
+        assert!(Message::new("t", vec![]).retained().retain);
+        assert!(!Message::new("t", vec![]).retain);
+    }
+}

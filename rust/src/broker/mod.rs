@@ -1,0 +1,31 @@
+//! MQTT-lite publish/subscribe broker (substrate — paper §II).
+//!
+//! SDFLMQ delegates all FL coordination to topic-based pub/sub: roles are
+//! topics, role candidates subscribe, and anyone may publish to a role's
+//! topic. This module provides the broker that makes that work:
+//!
+//! * hierarchical [`topic`]s with MQTT `+`/`#` wildcard filters,
+//! * retained messages (late subscribers get the last value),
+//! * an in-process transport (lock-protected router + mpsc queues,
+//!   `Arc`-shared payloads so a 7.5 MB model broadcast is zero-copy),
+//! * a length-prefixed [`tcp`] transport for cross-process deployments
+//!   (the docker-analogue of the paper's edge broker).
+//!
+//! QoS is 0 (at-most-once) throughout — the paper's flow needs nothing
+//! stronger on a reliable transport.
+
+mod broker_core;
+mod client;
+mod message;
+mod pubsub;
+mod router;
+mod tcp;
+mod topic;
+
+pub use broker_core::Broker;
+pub use client::BrokerClient;
+pub use message::Message;
+pub use pubsub::{PubSub, TcpPubSub};
+pub use router::Router;
+pub use tcp::{TcpBrokerServer, TcpClient};
+pub use topic::{topic_matches, validate_filter, validate_topic};

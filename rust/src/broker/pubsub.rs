@@ -1,0 +1,114 @@
+//! Transport abstraction: the FL agents speak to *a* pub/sub endpoint —
+//! in-process ([`BrokerClient`]) for single-process deployments and
+//! benches, TCP ([`TcpPubSub`]) for real multi-process runs where each
+//! client is its own OS process attached to the edge broker.
+
+use super::{BrokerClient, Message, TcpClient};
+use std::time::Duration;
+
+/// What an FL agent needs from its messaging layer.
+pub trait PubSub: Send {
+    fn subscribe(&mut self, filter: &str) -> Result<(), String>;
+    fn unsubscribe(&mut self, filter: &str) -> Result<(), String>;
+    fn publish(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String>;
+    /// Publish with MQTT retained semantics (used by the join barrier so
+    /// a late-starting coordinator still sees earlier workers).
+    fn publish_retained(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String>;
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Message, String>;
+}
+
+impl PubSub for BrokerClient {
+    fn subscribe(&mut self, filter: &str) -> Result<(), String> {
+        BrokerClient::subscribe(self, filter)
+    }
+
+    fn unsubscribe(&mut self, filter: &str) -> Result<(), String> {
+        BrokerClient::unsubscribe(self, filter);
+        Ok(())
+    }
+
+    fn publish(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String> {
+        BrokerClient::publish(self, topic, payload).map(|_| ())
+    }
+
+    fn publish_retained(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String> {
+        BrokerClient::publish_retained(self, topic, payload).map(|_| ())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Message, String> {
+        BrokerClient::recv_timeout(self, timeout)
+    }
+}
+
+/// TCP-backed pub/sub endpoint (wraps [`TcpClient`]).
+pub struct TcpPubSub {
+    client: TcpClient,
+}
+
+impl TcpPubSub {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<TcpPubSub> {
+        Ok(TcpPubSub {
+            client: TcpClient::connect(addr)?,
+        })
+    }
+}
+
+impl PubSub for TcpPubSub {
+    fn subscribe(&mut self, filter: &str) -> Result<(), String> {
+        self.client.subscribe(filter).map_err(|e| e.to_string())
+    }
+
+    fn unsubscribe(&mut self, filter: &str) -> Result<(), String> {
+        self.client.unsubscribe(filter).map_err(|e| e.to_string())
+    }
+
+    fn publish(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String> {
+        self.client
+            .publish(topic, &payload)
+            .map_err(|e| e.to_string())
+    }
+
+    fn publish_retained(&mut self, topic: &str, payload: Vec<u8>) -> Result<(), String> {
+        self.client
+            .publish_retained(topic, &payload)
+            .map_err(|e| e.to_string())
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Message, String> {
+        self.client.recv(timeout).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut
+            {
+                "tcp: recv timeout".to_string()
+            } else {
+                format!("tcp: {e}")
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Broker, TcpBrokerServer};
+    use super::*;
+
+    #[test]
+    fn both_transports_satisfy_the_trait() {
+        fn roundtrip<C: PubSub>(mut c: C, settle: Duration) {
+            c.subscribe("trait/t").unwrap();
+            std::thread::sleep(settle);
+            c.publish("trait/t", b"x".to_vec()).unwrap();
+            let m = c.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(&**m.payload, b"x");
+            c.unsubscribe("trait/t").unwrap();
+        }
+        let broker = Broker::new();
+        roundtrip(broker.connect("inproc"), Duration::ZERO);
+
+        let server = TcpBrokerServer::start("127.0.0.1:0", broker).unwrap();
+        roundtrip(
+            TcpPubSub::connect(&server.addr()).unwrap(),
+            Duration::from_millis(100),
+        );
+    }
+}

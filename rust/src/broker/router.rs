@@ -1,0 +1,167 @@
+//! Subscription table + retained store: the broker's routing core.
+
+use super::{topic_matches, Message};
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+
+/// A subscriber endpoint: id + queue sender.
+struct Subscription {
+    client: u64,
+    filter: String,
+    tx: Sender<Message>,
+}
+
+/// Topic router. Not thread-safe by itself — [`super::Broker`] wraps it
+/// in a mutex (routing is cheap; payload delivery is just an Arc clone).
+#[derive(Default)]
+pub struct Router {
+    subs: Vec<Subscription>,
+    retained: HashMap<String, Message>,
+    delivered: u64,
+    dropped: u64,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Add a subscription; replays the retained message(s) matching the
+    /// filter (MQTT retained semantics).
+    pub fn subscribe(&mut self, client: u64, filter: &str, tx: Sender<Message>) {
+        for (topic, msg) in &self.retained {
+            if topic_matches(filter, topic) {
+                let _ = tx.send(msg.clone());
+            }
+        }
+        self.subs.push(Subscription {
+            client,
+            filter: filter.to_string(),
+            tx,
+        });
+    }
+
+    /// Remove one subscription (client + exact filter).
+    pub fn unsubscribe(&mut self, client: u64, filter: &str) {
+        self.subs
+            .retain(|s| !(s.client == client && s.filter == filter));
+    }
+
+    /// Remove all subscriptions of a client (disconnect).
+    pub fn disconnect(&mut self, client: u64) {
+        self.subs.retain(|s| s.client != client);
+    }
+
+    /// Deliver `msg` to every matching subscriber; store if retained.
+    /// MQTT semantics: a retained publish with an EMPTY payload clears
+    /// the retained message for that topic (and is not delivered).
+    /// Returns the number of deliveries.
+    pub fn publish(&mut self, msg: &Message) -> usize {
+        if msg.retain {
+            if msg.payload.is_empty() {
+                self.retained.remove(&msg.topic);
+                return 0;
+            }
+            self.retained.insert(msg.topic.clone(), msg.clone());
+        }
+        let mut delivered = 0;
+        for s in &self.subs {
+            if topic_matches(&s.filter, &msg.topic) {
+                if s.tx.send(msg.clone()).is_ok() {
+                    delivered += 1;
+                } else {
+                    self.dropped += 1;
+                }
+            }
+        }
+        self.delivered += delivered as u64;
+        delivered
+    }
+
+    /// (delivered, dropped) counters for metrics.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.delivered, self.dropped)
+    }
+
+    /// Number of active subscriptions.
+    pub fn subscription_count(&self) -> usize {
+        self.subs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn routes_to_matching_subscribers() {
+        let mut r = Router::new();
+        let (tx1, rx1) = channel();
+        let (tx2, rx2) = channel();
+        r.subscribe(1, "a/+", tx1);
+        r.subscribe(2, "a/b", tx2);
+        let n = r.publish(&Message::new("a/b", b"hi".to_vec()));
+        assert_eq!(n, 2);
+        assert_eq!(rx1.try_recv().unwrap().topic, "a/b");
+        assert_eq!(rx2.try_recv().unwrap().topic, "a/b");
+        let n = r.publish(&Message::new("a/c", b"yo".to_vec()));
+        assert_eq!(n, 1);
+        assert!(rx2.try_recv().is_err());
+        assert_eq!(rx1.try_recv().unwrap().topic, "a/c");
+    }
+
+    #[test]
+    fn retained_replayed_on_subscribe() {
+        let mut r = Router::new();
+        r.publish(&Message::new("cfg/x", b"1".to_vec()).retained());
+        let (tx, rx) = channel();
+        r.subscribe(1, "cfg/#", tx);
+        assert_eq!(&**rx.try_recv().unwrap().payload, b"1");
+    }
+
+    #[test]
+    fn retained_cleared_by_empty_payload() {
+        let mut r = Router::new();
+        r.publish(&Message::new("cfg/x", b"1".to_vec()).retained());
+        r.publish(&Message::new("cfg/x", Vec::new()).retained());
+        let (tx, rx) = channel();
+        r.subscribe(1, "cfg/x", tx);
+        assert!(rx.try_recv().is_err(), "cleared retained must not replay");
+    }
+
+    #[test]
+    fn retained_overwritten() {
+        let mut r = Router::new();
+        r.publish(&Message::new("cfg/x", b"1".to_vec()).retained());
+        r.publish(&Message::new("cfg/x", b"2".to_vec()).retained());
+        let (tx, rx) = channel();
+        r.subscribe(1, "cfg/x", tx);
+        assert_eq!(&**rx.try_recv().unwrap().payload, b"2");
+    }
+
+    #[test]
+    fn unsubscribe_and_disconnect() {
+        let mut r = Router::new();
+        let (tx, rx) = channel();
+        r.subscribe(1, "a", tx.clone());
+        r.subscribe(1, "b", tx);
+        r.unsubscribe(1, "a");
+        assert_eq!(r.publish(&Message::new("a", vec![])), 0);
+        assert_eq!(r.publish(&Message::new("b", vec![])), 1);
+        rx.try_recv().unwrap();
+        r.disconnect(1);
+        assert_eq!(r.publish(&Message::new("b", vec![])), 0);
+        assert_eq!(r.subscription_count(), 0);
+    }
+
+    #[test]
+    fn dead_receiver_counts_dropped() {
+        let mut r = Router::new();
+        let (tx, rx) = channel();
+        r.subscribe(1, "a", tx);
+        drop(rx);
+        assert_eq!(r.publish(&Message::new("a", vec![])), 0);
+        assert_eq!(r.stats().1, 1);
+    }
+}

@@ -1,0 +1,270 @@
+//! TCP transport for the broker — the cross-process face of the edge
+//! broker (the paper's deployment runs an MQTT broker as an edge
+//! service; this is our equivalent for multi-process runs).
+//!
+//! Wire protocol (all integers big-endian):
+//!
+//! ```text
+//! frame   := u32 length, then `length` bytes of body
+//! body    := opcode u8, topic_len u16, topic bytes, payload bytes
+//! opcode  := 1 SUB | 2 UNSUB | 3 PUB | 4 PUB_RETAIN
+//! ```
+//!
+//! Inbound PUB frames are injected into the in-process [`Broker`];
+//! subscriptions attach a forwarder that frames matched messages back to
+//! the socket. QoS 0, no acks.
+
+use super::{Broker, Message};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const OP_SUB: u8 = 1;
+const OP_UNSUB: u8 = 2;
+const OP_PUB: u8 = 3;
+const OP_PUB_RETAIN: u8 = 4;
+
+/// Hard cap on frame size (a JSON-coded 1.8 M-param model is ~30 MB;
+/// leave generous headroom).
+const MAX_FRAME: u32 = 256 * 1024 * 1024;
+
+fn write_frame(w: &mut impl Write, opcode: u8, topic: &str, payload: &[u8]) -> std::io::Result<()> {
+    let body_len = 1 + 2 + topic.len() + payload.len();
+    w.write_all(&(body_len as u32).to_be_bytes())?;
+    w.write_all(&[opcode])?;
+    w.write_all(&(topic.len() as u16).to_be_bytes())?;
+    w.write_all(topic.as_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+fn read_frame(r: &mut impl Read) -> std::io::Result<(u8, String, Vec<u8>)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_be_bytes(len4);
+    if len < 3 || len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    let opcode = body[0];
+    let tlen = u16::from_be_bytes([body[1], body[2]]) as usize;
+    if 3 + tlen > body.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "topic length exceeds frame",
+        ));
+    }
+    let topic = String::from_utf8(body[3..3 + tlen].to_vec())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let payload = body[3 + tlen..].to_vec();
+    Ok((opcode, topic, payload))
+}
+
+/// TCP front-end over an in-process [`Broker`].
+pub struct TcpBrokerServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpBrokerServer {
+    /// Bind and start accepting (`addr` like "127.0.0.1:0").
+    pub fn start(addr: &str, broker: Broker) -> std::io::Result<TcpBrokerServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let broker = broker.clone();
+                        let stop3 = stop2.clone();
+                        std::thread::spawn(move || serve_connection(stream, broker, stop3));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpBrokerServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// Bound address (use with port 0 for tests).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for TcpBrokerServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, broker: Broker, stop: Arc<AtomicBool>) {
+    // One broker client id per connection; its queue is drained by the
+    // forwarder thread below, subscriptions are managed by the reader.
+    let id = broker.alloc_id();
+    let (tx, rx) = std::sync::mpsc::channel::<Message>();
+    let writer = Arc::new(Mutex::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    }));
+
+    // Forwarder: in-proc queue → socket frames.
+    let stop_fwd = stop.clone();
+    let writer2 = writer.clone();
+    let forward = std::thread::spawn(move || loop {
+        if stop_fwd.load(Ordering::Relaxed) {
+            break;
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(msg) => {
+                let mut w = writer2.lock().unwrap();
+                if write_frame(&mut *w, OP_PUB, &msg.topic, &msg.payload).is_err() {
+                    break;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(_) => break,
+        }
+    });
+
+    // Reader: socket frames → broker calls.
+    let mut reader = stream;
+    let _ = reader.set_read_timeout(Some(Duration::from_millis(100)));
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match read_frame(&mut reader) {
+            Ok((OP_SUB, filter, _)) => {
+                let _ = broker.subscribe(id, &filter, tx.clone());
+            }
+            Ok((OP_UNSUB, filter, _)) => {
+                broker.unsubscribe(id, &filter);
+            }
+            Ok((OP_PUB, topic, payload)) => {
+                let _ = broker.publish(Message::new(topic, payload));
+            }
+            Ok((OP_PUB_RETAIN, topic, payload)) => {
+                let _ = broker.publish(Message::new(topic, payload).retained());
+            }
+            Ok(_) => break, // unknown opcode: drop connection
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    broker.disconnect(id);
+    drop(tx);
+    let _ = forward.join();
+    let _ = reader.shutdown(Shutdown::Both);
+}
+
+/// Client side of the TCP transport.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    /// Connect to a [`TcpBrokerServer`].
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpClient { stream })
+    }
+
+    /// Subscribe to a filter.
+    pub fn subscribe(&mut self, filter: &str) -> std::io::Result<()> {
+        write_frame(&mut self.stream, OP_SUB, filter, &[])
+    }
+
+    /// Remove a subscription.
+    pub fn unsubscribe(&mut self, filter: &str) -> std::io::Result<()> {
+        write_frame(&mut self.stream, OP_UNSUB, filter, &[])
+    }
+
+    /// Publish bytes to a topic.
+    pub fn publish(&mut self, topic: &str, payload: &[u8]) -> std::io::Result<()> {
+        write_frame(&mut self.stream, OP_PUB, topic, payload)
+    }
+
+    /// Publish with retention.
+    pub fn publish_retained(&mut self, topic: &str, payload: &[u8]) -> std::io::Result<()> {
+        write_frame(&mut self.stream, OP_PUB_RETAIN, topic, payload)
+    }
+
+    /// Blocking receive of the next message frame.
+    pub fn recv(&mut self, timeout: Duration) -> std::io::Result<Message> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let (op, topic, payload) = read_frame(&mut self.stream)?;
+        if op != OP_PUB {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unexpected opcode {op}"),
+            ));
+        }
+        Ok(Message::new(topic, payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PUB, "a/b", b"payload").unwrap();
+        let (op, topic, payload) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(op, OP_PUB);
+        assert_eq!(topic, "a/b");
+        assert_eq!(payload, b"payload");
+    }
+
+    #[test]
+    fn frame_rejects_bad_lengths() {
+        // Declared length too small.
+        let buf = 2u32.to_be_bytes().to_vec();
+        assert!(read_frame(&mut &buf[..]).is_err());
+        // Topic length exceeding body.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&5u32.to_be_bytes());
+        buf.push(OP_PUB);
+        buf.extend_from_slice(&100u16.to_be_bytes());
+        buf.extend_from_slice(b"ab");
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn empty_payload_frame() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_SUB, "fl/#", &[]).unwrap();
+        let (op, topic, payload) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(op, OP_SUB);
+        assert_eq!(topic, "fl/#");
+        assert!(payload.is_empty());
+    }
+}

@@ -1,0 +1,98 @@
+//! MQTT topic syntax: `/`-separated levels, `+` (single-level) and `#`
+//! (multi-level, final position) wildcards in filters.
+
+/// True if `topic` is a valid *publish* topic (no wildcards, non-empty
+/// levels allowed to be empty per MQTT but we forbid empty topic).
+pub fn validate_topic(topic: &str) -> Result<(), String> {
+    if topic.is_empty() {
+        return Err("empty topic".into());
+    }
+    if topic.contains('+') || topic.contains('#') {
+        return Err(format!("wildcard in publish topic {topic:?}"));
+    }
+    Ok(())
+}
+
+/// True if `filter` is a valid subscription filter.
+pub fn validate_filter(filter: &str) -> Result<(), String> {
+    if filter.is_empty() {
+        return Err("empty filter".into());
+    }
+    let levels: Vec<&str> = filter.split('/').collect();
+    for (i, lvl) in levels.iter().enumerate() {
+        match *lvl {
+            "#" => {
+                if i + 1 != levels.len() {
+                    return Err(format!("'#' must be final in {filter:?}"));
+                }
+            }
+            "+" => {}
+            l if l.contains('+') || l.contains('#') => {
+                return Err(format!("wildcard must occupy a whole level in {filter:?}"));
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+/// MQTT filter matching.
+pub fn topic_matches(filter: &str, topic: &str) -> bool {
+    let mut f = filter.split('/');
+    let mut t = topic.split('/');
+    loop {
+        match (f.next(), t.next()) {
+            (Some("#"), _) => return true,
+            (Some("+"), Some(_)) => {}
+            (Some(fl), Some(tl)) if fl == tl => {}
+            (None, None) => return true,
+            _ => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match() {
+        assert!(topic_matches("a/b/c", "a/b/c"));
+        assert!(!topic_matches("a/b/c", "a/b"));
+        assert!(!topic_matches("a/b", "a/b/c"));
+        assert!(!topic_matches("a/b/c", "a/b/d"));
+    }
+
+    #[test]
+    fn plus_wildcard() {
+        assert!(topic_matches("session/+/round", "session/42/round"));
+        assert!(!topic_matches("session/+/round", "session/42/x/round"));
+        assert!(topic_matches("+/+/+", "a/b/c"));
+        assert!(!topic_matches("+", "a/b"));
+    }
+
+    #[test]
+    fn hash_wildcard() {
+        assert!(topic_matches("session/#", "session/42/round"));
+        assert!(topic_matches("session/#", "session"));
+        assert!(topic_matches("#", "anything/at/all"));
+        assert!(!topic_matches("session/#", "other/42"));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(validate_topic("session/1/slot/0").is_ok());
+        assert!(validate_topic("a/+/b").is_err());
+        assert!(validate_topic("").is_err());
+        assert!(validate_filter("session/+/slot/#").is_ok());
+        assert!(validate_filter("a/#/b").is_err());
+        assert!(validate_filter("a/b+c").is_err());
+        assert!(validate_filter("").is_err());
+    }
+
+    #[test]
+    fn hash_matches_parent_level() {
+        // MQTT-conformant: "sport/#" matches "sport".
+        assert!(topic_matches("sport/#", "sport"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Flag parsing for the `repro` launcher and examples (substrate — no
+//! `clap` offline). Grammar: `prog [subcommand] [--key value|--key=value|
+//! --switch]... [positional]...`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token, if any (launcher subcommand).
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` pairs; bare `--switch` maps to "true".
+    flags: BTreeMap<String, String>,
+    /// Remaining positionals after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first token is NOT argv[0].
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    args.flags.insert(flag.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skips argv[0]).
+    pub fn parse_env() -> Result<Args, String> {
+        Args::parse_tokens(std::env::args().skip(1))
+    }
+
+    /// Raw flag value.
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    /// usize flag with default; error message names the flag.
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    /// f64 flag with default.
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got {v:?}")),
+        }
+    }
+
+    /// u64 flag with default (seeds).
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got {v:?}")),
+        }
+    }
+
+    /// Boolean switch: present (or `=true`) ⇒ true.
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_tokens(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("sim trailing --depth 4 --width=5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.usize_flag("depth", 0).unwrap(), 4);
+        assert_eq!(a.usize_flag("width", 0).unwrap(), 5);
+        assert!(a.bool_flag("verbose"));
+        assert_eq!(a.positional, vec!["trailing"]);
+    }
+
+    #[test]
+    fn switch_before_positional_consumes_it_as_value() {
+        // Documented ambiguity: `--verbose trailing` binds "trailing" as
+        // the value of --verbose. Callers place switches last or use `=`.
+        let a = parse("sim --verbose trailing");
+        assert_eq!(a.flag("verbose"), Some("trailing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_flag("rounds", 50).unwrap(), 50);
+        assert_eq!(a.f64_flag("inertia", 0.01).unwrap(), 0.01);
+        assert!(!a.bool_flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("run --rounds abc");
+        assert!(a.usize_flag("rounds", 1).is_err());
+    }
+
+    #[test]
+    fn switch_followed_by_flag() {
+        let a = parse("--dry-run --seed 9");
+        assert!(a.bool_flag("dry-run"));
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 9);
+    }
+}

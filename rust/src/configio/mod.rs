@@ -1,0 +1,18 @@
+//! Configuration system (substrate — no `clap`/`toml` offline).
+//!
+//! * [`toml_lite`] — the subset of TOML the scenario files use:
+//!   `[table]` headers, `key = value` with strings / integers / floats /
+//!   booleans / homogeneous arrays, comments.
+//! * [`cli`] — subcommand + `--flag value` / `--flag=value` parsing for
+//!   the `repro` launcher and the examples.
+//! * [`scenario`] — typed experiment configs (simulation grids, the
+//!   docker-analogue deployment) loadable from TOML or built from
+//!   presets; single source of truth shared by examples and benches.
+
+pub mod cli;
+pub mod scenario;
+pub mod toml_lite;
+
+pub use cli::Args;
+pub use scenario::{ClientSpec, DeployScenario, SimScenario};
+pub use toml_lite::TomlDoc;

@@ -1,0 +1,278 @@
+//! Typed experiment scenarios — the single source of truth shared by the
+//! examples, benches and the CLI launcher. Loadable from TOML-lite files
+//! or constructed from the paper's presets.
+
+use super::toml_lite::TomlDoc;
+use crate::pso::PsoConfig;
+
+/// Simulation scenario (paper §IV.A/B — Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimScenario {
+    /// Hierarchy depth D (levels of aggregators).
+    pub depth: usize,
+    /// Hierarchy width W (children per aggregator).
+    pub width: usize,
+    /// Trainers attached to each leaf-level aggregator (paper uses 2).
+    pub trainers_per_leaf: usize,
+    /// PSO hyper-parameters (swarm size, coefficients, iterations).
+    pub pso: PsoConfig,
+    /// Client attribute ranges (paper: pspeed ∈ (5,15), memcap ∈ (10,50),
+    /// mdatasize = 5).
+    pub pspeed_range: (f64, f64),
+    pub memcap_range: (f64, f64),
+    pub mdatasize: f64,
+    /// Root seed for client attributes + optimizer randomness.
+    pub seed: u64,
+}
+
+impl Default for SimScenario {
+    fn default() -> Self {
+        SimScenario {
+            depth: 3,
+            width: 4,
+            trainers_per_leaf: 2,
+            pso: PsoConfig::paper(),
+            pspeed_range: (5.0, 15.0),
+            memcap_range: (10.0, 50.0),
+            mdatasize: 5.0,
+            seed: 42,
+        }
+    }
+}
+
+impl SimScenario {
+    /// The paper's Fig. 3 panel grid: (depth, width, particles) for
+    /// panels (a)–(f). Width 4 with P=5 on the top row, P=10 on the
+    /// bottom row, growing depth left→right.
+    pub fn fig3_panels() -> Vec<(char, SimScenario)> {
+        let mut panels = Vec::new();
+        for (row, particles) in [(0usize, 5usize), (1, 10)] {
+            for (col, depth) in [3usize, 4, 5].iter().enumerate() {
+                let label = (b'a' + (row * 3 + col) as u8) as char;
+                let mut sc = SimScenario {
+                    depth: *depth,
+                    ..SimScenario::default()
+                };
+                sc.pso.particles = particles;
+                panels.push((label, sc));
+            }
+        }
+        panels
+    }
+
+    /// Number of aggregator slots (paper Eq. 5): Σ_{i=0}^{D-1} W^i.
+    pub fn dimensions(&self) -> usize {
+        let mut total = 0usize;
+        let mut level = 1usize;
+        for _ in 0..self.depth {
+            total += level;
+            level *= self.width;
+        }
+        total
+    }
+
+    /// Number of leaf-level aggregators: W^(D-1).
+    pub fn leaf_aggregators(&self) -> usize {
+        self.width.pow(self.depth as u32 - 1)
+    }
+
+    /// Total clients = aggregator slots + leaf trainers.
+    pub fn client_count(&self) -> usize {
+        self.dimensions() + self.leaf_aggregators() * self.trainers_per_leaf
+    }
+
+    /// Load from a TOML-lite file with `[sim]` and `[pso]` tables.
+    pub fn from_toml(doc: &TomlDoc) -> Result<SimScenario, String> {
+        let mut sc = SimScenario::default();
+        let get_usize = |t: &str, k: &str, d: usize| -> Result<usize, String> {
+            match doc.get(t, k) {
+                None => Ok(d),
+                Some(v) => v.as_usize().ok_or_else(|| format!("{t}.{k}: expected integer")),
+            }
+        };
+        let get_f64 = |t: &str, k: &str, d: f64| -> Result<f64, String> {
+            match doc.get(t, k) {
+                None => Ok(d),
+                Some(v) => v.as_f64().ok_or_else(|| format!("{t}.{k}: expected number")),
+            }
+        };
+        sc.depth = get_usize("sim", "depth", sc.depth)?;
+        sc.width = get_usize("sim", "width", sc.width)?;
+        sc.trainers_per_leaf = get_usize("sim", "trainers_per_leaf", sc.trainers_per_leaf)?;
+        sc.seed = get_usize("sim", "seed", sc.seed as usize)? as u64;
+        sc.mdatasize = get_f64("sim", "mdatasize", sc.mdatasize)?;
+        sc.pspeed_range = (
+            get_f64("sim", "pspeed_min", sc.pspeed_range.0)?,
+            get_f64("sim", "pspeed_max", sc.pspeed_range.1)?,
+        );
+        sc.memcap_range = (
+            get_f64("sim", "memcap_min", sc.memcap_range.0)?,
+            get_f64("sim", "memcap_max", sc.memcap_range.1)?,
+        );
+        sc.pso.particles = get_usize("pso", "particles", sc.pso.particles)?;
+        sc.pso.iterations = get_usize("pso", "iterations", sc.pso.iterations)?;
+        sc.pso.inertia = get_f64("pso", "inertia", sc.pso.inertia)?;
+        sc.pso.cognitive = get_f64("pso", "cognitive", sc.pso.cognitive)?;
+        sc.pso.social = get_f64("pso", "social", sc.pso.social)?;
+        sc.pso.velocity_factor = get_f64("pso", "velocity_factor", sc.pso.velocity_factor)?;
+        if sc.depth == 0 || sc.width == 0 {
+            return Err("sim.depth and sim.width must be >= 1".into());
+        }
+        Ok(sc)
+    }
+}
+
+/// One emulated client in the deployment scenario (docker substitute —
+/// DESIGN.md §4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientSpec {
+    /// Human label ("big", "mid0", "small3", ...).
+    pub name: String,
+    /// Compute slowdown multiplier (1.0 = full speed). Applied to both
+    /// training and aggregation wall time.
+    pub speed_factor: f64,
+    /// Extra aggregation slowdown modeling memory pressure / swap
+    /// (paper's 64 MB containers swap while merging 30 MB JSON models).
+    pub memory_pressure: f64,
+}
+
+/// Deployment scenario (paper §IV.C — Fig. 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployScenario {
+    pub clients: Vec<ClientSpec>,
+    /// Aggregation hierarchy depth/width over the clients.
+    pub depth: usize,
+    pub width: usize,
+    /// FL rounds to run (paper: 50).
+    pub rounds: usize,
+    /// Local SGD steps per trainer per round.
+    pub local_steps: usize,
+    /// Learning rate for local steps.
+    pub lr: f32,
+    pub pso: PsoConfig,
+    pub seed: u64,
+}
+
+impl DeployScenario {
+    /// The paper's 10-container docker scenario: one big client
+    /// (3 cores / 2 GB), two medium (1 core / 1 GB), seven small
+    /// (1 core / 64 MB + swap). Speed factors calibrate the same
+    /// ordering: big ≈ 3× faster than medium; small pays a heavy
+    /// aggregation penalty (swap thrash on 30 MB models).
+    pub fn paper_docker() -> DeployScenario {
+        let mut clients = vec![ClientSpec {
+            name: "big".into(),
+            speed_factor: 1.0,
+            memory_pressure: 1.0,
+        }];
+        for i in 0..2 {
+            clients.push(ClientSpec {
+                name: format!("mid{i}"),
+                speed_factor: 3.0,
+                memory_pressure: 1.5,
+            });
+        }
+        for i in 0..7 {
+            clients.push(ClientSpec {
+                name: format!("small{i}"),
+                speed_factor: 3.5,
+                memory_pressure: 6.0,
+            });
+        }
+        let mut pso = PsoConfig::paper();
+        // Live deployments pay one real FL round per fitness evaluation;
+        // a 5-particle swarm (the paper's small-swarm setting) pins
+        // within ~2 sweeps ≈ 10 rounds — matching Fig. 4's observed
+        // convergence "after the 10th round".
+        pso.particles = 5;
+        DeployScenario {
+            clients,
+            depth: 2,
+            width: 2,
+            rounds: 50,
+            local_steps: 1,
+            lr: 0.05,
+            pso,
+            seed: 7,
+        }
+    }
+
+    /// Aggregator slots in the deployment hierarchy (Eq. 5).
+    pub fn dimensions(&self) -> usize {
+        let mut total = 0;
+        let mut level = 1;
+        for _ in 0..self.depth {
+            total += level;
+            level *= self.width;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_eq5() {
+        // D=3, W=4: 1 + 4 + 16 = 21.
+        let sc = SimScenario::default();
+        assert_eq!(sc.dimensions(), 21);
+        assert_eq!(sc.leaf_aggregators(), 16);
+        assert_eq!(sc.client_count(), 21 + 32);
+    }
+
+    #[test]
+    fn fig3_panels_match_paper_grid() {
+        let panels = SimScenario::fig3_panels();
+        assert_eq!(panels.len(), 6);
+        assert_eq!(panels[0].0, 'a');
+        assert_eq!(panels[0].1.pso.particles, 5);
+        assert_eq!(panels[3].0, 'd');
+        assert_eq!(panels[3].1.pso.particles, 10);
+        // Client count grows left to right within a row.
+        assert!(panels[1].1.client_count() > panels[0].1.client_count());
+        assert!(panels[2].1.client_count() > panels[1].1.client_count());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+[sim]
+depth = 4
+width = 5
+seed = 9
+
+[pso]
+particles = 10
+inertia = 0.4
+"#,
+        )
+        .unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.depth, 4);
+        assert_eq!(sc.width, 5);
+        assert_eq!(sc.seed, 9);
+        assert_eq!(sc.pso.particles, 10);
+        assert!((sc.pso.inertia - 0.4).abs() < 1e-12);
+        // Unset keys keep paper defaults.
+        assert!((sc.pso.social - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_rejects_zero_depth() {
+        let doc = TomlDoc::parse("[sim]\ndepth = 0\n").unwrap();
+        assert!(SimScenario::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn paper_docker_composition() {
+        let d = DeployScenario::paper_docker();
+        assert_eq!(d.clients.len(), 10);
+        assert_eq!(d.rounds, 50);
+        assert_eq!(d.dimensions(), 3); // root + 2 leaf aggregators
+        // Exactly one full-speed client.
+        assert_eq!(d.clients.iter().filter(|c| c.speed_factor == 1.0).count(), 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! TOML-lite: the subset of TOML used by scenario files.
+//!
+//! Supported: `[table]` headers (one level), `key = value` entries with
+//! strings (`"..."`), integers, floats, booleans and homogeneous arrays,
+//! `#` comments, blank lines. Unsupported TOML (nested tables, dates,
+//! multi-line strings) is a parse error — scenarios do not need it.
+
+use std::collections::BTreeMap;
+
+/// One parsed TOML-lite value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `tables[""]` holds top-level keys.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Parse a document; errors carry the 1-based line number.
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.tables.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(format!("line {}: bad table name", lineno + 1));
+                }
+                current = name.to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(format!("line {}: empty key", lineno + 1));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+                doc.tables
+                    .get_mut(&current)
+                    .unwrap()
+                    .insert(key.to_string(), val);
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        TomlDoc::parse(&text)
+    }
+
+    /// Lookup `table.key`.
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if body.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let mut xs = Vec::new();
+        for part in body.split(',') {
+            xs.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(xs));
+    }
+    // Number: int first, then float.
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unparseable value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_values() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "fig3"   # trailing comment
+count = 42
+ratio = 0.25
+on = true
+seeds = [1, 2, 3]
+
+[pso]
+inertia = 0.01
+particles = [5, 10]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("fig3"));
+        assert_eq!(doc.get("", "count").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("", "ratio").unwrap().as_f64(), Some(0.25));
+        assert_eq!(doc.get("", "on").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("pso", "inertia").unwrap().as_f64(), Some(0.01));
+        let parts = doc.get("pso", "particles").unwrap().as_array().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_reverse() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64(), Some(3.0));
+        let doc = TomlDoc::parse("x = 3.5").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("good = 1\nbad line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(TomlDoc::parse("[table").is_err());
+        assert!(TomlDoc::parse("x = \"oops").is_err());
+        assert!(TomlDoc::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_str(), Some("a#b"));
+    }
+}

@@ -1,0 +1,85 @@
+//! Mini-batch iteration over a client shard (with wrap-around so any
+//! number of local steps is possible regardless of shard size).
+
+use super::SynthDataset;
+
+/// Cycling batch iterator producing `[batch, input_dim]` feature rows
+/// and `[batch]` labels for `ModelRuntime::train_step`.
+pub struct BatchIter<'a> {
+    data: &'a SynthDataset,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a SynthDataset, batch: usize) -> Self {
+        assert!(batch > 0 && !data.is_empty());
+        BatchIter {
+            data,
+            batch,
+            cursor: 0,
+        }
+    }
+
+    /// Next batch (wraps around the shard).
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let d = self.data.cfg.input_dim;
+        let n = self.data.len();
+        let mut x = Vec::with_capacity(self.batch * d);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let (feat, label) = self.data.sample(self.cursor);
+            x.extend_from_slice(feat);
+            y.push(label);
+            self.cursor = (self.cursor + 1) % n;
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SynthConfig;
+    use super::*;
+
+    fn data() -> SynthDataset {
+        SynthDataset::for_client(
+            SynthConfig {
+                input_dim: 8,
+                num_classes: 3,
+                samples_per_client: 10,
+                ..SynthConfig::default()
+            },
+            0,
+        )
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = data();
+        let mut it = BatchIter::new(&d, 4);
+        let (x, y) = it.next_batch();
+        assert_eq!(x.len(), 4 * 8);
+        assert_eq!(y.len(), 4);
+    }
+
+    #[test]
+    fn wraps_around() {
+        let d = data();
+        let mut it = BatchIter::new(&d, 7);
+        let (_, y1) = it.next_batch(); // samples 0..7
+        let (_, y2) = it.next_batch(); // samples 7..10 + 0..4 (wrap)
+        assert_eq!(y1.len(), 7);
+        assert_eq!(y2.len(), 7);
+        assert_eq!(y2[3], d.y[0], "wrap should restart at sample 0");
+    }
+
+    #[test]
+    fn batch_larger_than_shard_wraps_within_one_batch() {
+        let d = data();
+        let mut it = BatchIter::new(&d, 25);
+        let (x, y) = it.next_batch();
+        assert_eq!(x.len(), 25 * 8);
+        assert_eq!(y[0], y[10], "sample 0 repeats at index 10");
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic federated dataset (substrate; DESIGN.md §4).
+//!
+//! The paper measures processing delay, not accuracy, and never names its
+//! dataset — any fixed-size workload with a learnable signal preserves
+//! the measurement. We generate a deterministic 10-class Gaussian-blob
+//! classification problem in the MLP's 784-d input space, sharded
+//! per-client (each client gets its own slice, optionally non-IID by
+//! class skew) so the federated semantics are real.
+
+mod batches;
+mod synth;
+
+pub use batches::BatchIter;
+pub use synth::{SynthConfig, SynthDataset};

@@ -1,0 +1,64 @@
+//! Simulated client attributes (paper §IV.A).
+
+use crate::prng::{Pcg32, Rng};
+
+/// Per-client attributes used by the simulation fitness model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientAttrs {
+    /// Unique client id (index into the population).
+    pub client_id: usize,
+    /// Memory capacity (paper: uniform in (10, 50)).
+    pub memcap: f64,
+    /// Model data size processed/forwarded by the client (paper: fixed 5).
+    pub mdatasize: f64,
+    /// Processing speed (paper: uniform in (5, 15)).
+    pub pspeed: f64,
+}
+
+impl ClientAttrs {
+    /// Sample a population of `n` clients with the paper's attribute
+    /// distributions (or custom ranges from the scenario).
+    pub fn sample_population(
+        n: usize,
+        pspeed_range: (f64, f64),
+        memcap_range: (f64, f64),
+        mdatasize: f64,
+        rng: &mut Pcg32,
+    ) -> Vec<ClientAttrs> {
+        (0..n)
+            .map(|client_id| ClientAttrs {
+                client_id,
+                memcap: rng.uniform(memcap_range.0, memcap_range.1),
+                mdatasize,
+                pspeed: rng.uniform(pspeed_range.0, pspeed_range.1),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_respects_ranges() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        let pop = ClientAttrs::sample_population(500, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+        assert_eq!(pop.len(), 500);
+        for (i, c) in pop.iter().enumerate() {
+            assert_eq!(c.client_id, i);
+            assert!((5.0..15.0).contains(&c.pspeed));
+            assert!((10.0..50.0).contains(&c.memcap));
+            assert_eq!(c.mdatasize, 5.0);
+        }
+    }
+
+    #[test]
+    fn population_deterministic_per_seed() {
+        let mut a = Pcg32::seed_from_u64(9);
+        let mut b = Pcg32::seed_from_u64(9);
+        let pa = ClientAttrs::sample_population(50, (5.0, 15.0), (10.0, 50.0), 5.0, &mut a);
+        let pb = ClientAttrs::sample_population(50, (5.0, 15.0), (10.0, 50.0), 5.0, &mut b);
+        assert_eq!(pa, pb);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's fitness model: Total Processing Delay over an arrangement.
+//!
+//! * [`ClientAttrs`] — the simulated per-client attributes of §IV.A
+//!   (memory capacity, model data size, processing speed).
+//! * [`tpd`] — Eq. 6/7: per-aggregator cluster delay, per-level max,
+//!   summed bottom-up; plus the optional memory-pressure extension used
+//!   by the deployment emulation.
+
+mod client_attrs;
+mod tpd;
+
+pub use client_attrs::ClientAttrs;
+pub use tpd::{cluster_delay, tpd, tpd_with_memory, TpdBreakdown};

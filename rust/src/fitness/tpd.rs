@@ -1,0 +1,168 @@
+//! Total Processing Delay (paper Eq. 6–7).
+//!
+//! For aggregator `a` with processing buffer `children(a)`:
+//!
+//! ```text
+//! d_a = (mdatasize_a + Σ_{c ∈ children(a)} mdatasize_c) / pspeed_a      (Eq. 6)
+//! TPD = Σ_levels  max_{a ∈ level} d_a                                   (Eq. 7)
+//! ```
+//!
+//! computed bottom-up over the BFT levels, exactly as the paper's
+//! "Processing Fitness Function" box describes. The per-level `max`
+//! captures the bottleneck effect: a level finishes only when its
+//! slowest cluster does.
+
+use super::ClientAttrs;
+use crate::hierarchy::Arrangement;
+
+/// Cluster delay of one aggregator slot (Eq. 6).
+pub fn cluster_delay(arr: &Arrangement, attrs: &[ClientAttrs], slot: usize) -> f64 {
+    let agg = &attrs[arr.aggregators[slot]];
+    let buffer = arr.buffer_of(slot);
+    let data: f64 = agg.mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>();
+    data / agg.pspeed
+}
+
+/// Per-level breakdown of a TPD evaluation (kept for traces/plots).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TpdBreakdown {
+    /// Max cluster delay per level, bottom-up (leaf level first).
+    pub level_max: Vec<f64>,
+    /// Total processing delay (sum of `level_max`).
+    pub total: f64,
+}
+
+/// Total Processing Delay of an arrangement (Eq. 7), bottom-up.
+pub fn tpd(arr: &Arrangement, attrs: &[ClientAttrs]) -> TpdBreakdown {
+    let mut level_max = Vec::with_capacity(arr.spec.depth);
+    for level in arr.spec.levels_bottom_up() {
+        let m = level
+            .iter()
+            .map(|&s| cluster_delay(arr, attrs, s))
+            .fold(0.0_f64, f64::max);
+        level_max.push(m);
+    }
+    let total = level_max.iter().sum();
+    TpdBreakdown { level_max, total }
+}
+
+/// TPD with the memory-pressure extension (Algorithm 1 mentions
+/// "compute memory consumption and delays per level"): when the data an
+/// aggregator must hold exceeds its memory capacity, its cluster delay is
+/// scaled by `swap_penalty` — modeling the paper's 64 MB docker
+/// containers swapping while merging 30 MB JSON models. With
+/// `swap_penalty = 1.0` this reduces exactly to [`tpd`].
+pub fn tpd_with_memory(
+    arr: &Arrangement,
+    attrs: &[ClientAttrs],
+    swap_penalty: f64,
+) -> TpdBreakdown {
+    let mut level_max = Vec::with_capacity(arr.spec.depth);
+    for level in arr.spec.levels_bottom_up() {
+        let mut m = 0.0_f64;
+        for &s in &level {
+            let agg = &attrs[arr.aggregators[s]];
+            let buffer = arr.buffer_of(s);
+            let data: f64 =
+                agg.mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>();
+            let mut d = data / agg.pspeed;
+            if data > agg.memcap {
+                d *= swap_penalty;
+            }
+            m = m.max(d);
+        }
+        level_max.push(m);
+    }
+    let total = level_max.iter().sum();
+    TpdBreakdown { level_max, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy::HierarchySpec;
+
+    /// Fixed attrs: pspeed = 1 + id, mdatasize = 5, memcap = 100.
+    fn attrs(n: usize) -> Vec<ClientAttrs> {
+        (0..n)
+            .map(|client_id| ClientAttrs {
+                client_id,
+                memcap: 100.0,
+                mdatasize: 5.0,
+                pspeed: 1.0 + client_id as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cluster_delay_eq6() {
+        // depth 2, width 2: slots 0 (root), 1, 2 (leaves).
+        let spec = HierarchySpec::new(2, 2);
+        let a = Arrangement::from_position(spec, &[0, 1, 2], 5);
+        let at = attrs(5);
+        // Leaves 1, 2 get trainers 3 and 4 (round-robin): one each.
+        // Slot 1 (client 1, pspeed 2): (5 + 5) / 2 = 5.
+        assert!((cluster_delay(&a, &at, 1) - 5.0).abs() < 1e-12);
+        // Slot 2 (client 2, pspeed 3): (5 + 5) / 3.
+        assert!((cluster_delay(&a, &at, 2) - 10.0 / 3.0).abs() < 1e-12);
+        // Root (client 0, pspeed 1): (5 + 5 + 5) / 1 = 15.
+        assert!((cluster_delay(&a, &at, 0) - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpd_eq7_sums_level_maxima() {
+        let spec = HierarchySpec::new(2, 2);
+        let a = Arrangement::from_position(spec, &[0, 1, 2], 5);
+        let at = attrs(5);
+        let b = tpd(&a, &at);
+        // Bottom-up: leaf level max = max(5, 10/3) = 5; root = 15.
+        assert_eq!(b.level_max.len(), 2);
+        assert!((b.level_max[0] - 5.0).abs() < 1e-12);
+        assert!((b.level_max[1] - 15.0).abs() < 1e-12);
+        assert!((b.total - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn faster_root_lowers_tpd() {
+        let spec = HierarchySpec::new(2, 2);
+        let at = attrs(5);
+        let slow_root = tpd(&Arrangement::from_position(spec, &[0, 1, 2], 5), &at);
+        let fast_root = tpd(&Arrangement::from_position(spec, &[4, 1, 2], 5), &at);
+        assert!(fast_root.total < slow_root.total);
+    }
+
+    #[test]
+    fn memory_penalty_reduces_to_plain_tpd_at_one() {
+        let spec = HierarchySpec::new(3, 2);
+        let pos: Vec<usize> = (0..7).collect();
+        let a = Arrangement::from_position(spec, &pos, 12);
+        let at = attrs(12);
+        let plain = tpd(&a, &at);
+        let mem = tpd_with_memory(&a, &at, 1.0);
+        assert_eq!(plain, mem);
+    }
+
+    #[test]
+    fn memory_penalty_kicks_in_when_over_capacity() {
+        let spec = HierarchySpec::new(2, 2);
+        let mut at = attrs(5);
+        at[0].memcap = 10.0; // root holds 15 units > 10 ⇒ swaps
+        let a = Arrangement::from_position(spec, &[0, 1, 2], 5);
+        let plain = tpd(&a, &at);
+        let mem = tpd_with_memory(&a, &at, 4.0);
+        assert!(mem.total > plain.total);
+        // Only the root level got scaled: 5 + 15*4 = 65.
+        assert!((mem.total - 65.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deeper_hierarchies_have_more_levels() {
+        let at = attrs(100);
+        for depth in 2..5 {
+            let spec = HierarchySpec::new(depth, 2);
+            let pos: Vec<usize> = (0..spec.dimensions()).collect();
+            let a = Arrangement::from_position(spec, &pos, 100);
+            assert_eq!(tpd(&a, &at).level_max.len(), depth);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! The client agent: one per (emulated) device. Receives the round
+//! arrangement, plays whichever role the placement assigned it —
+//! trainer or aggregator ("agtrainer" candidacy in SDFLMQ terms) — and
+//! never reports anything but its model updates. All computation goes
+//! through the shared PJRT [`ModelRuntime`]; all communication goes
+//! through the broker.
+
+use super::codec::{ModelCodec, ModelUpdate};
+use super::emulation::{EmulatedClock, WorkKind};
+use super::messages::RoundStart;
+use super::roles;
+use crate::broker::PubSub;
+use crate::data::SynthDataset;
+use crate::hierarchy::Role;
+use crate::log_warn;
+use crate::runtime::ModelRuntime;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One FL client (thread body: [`ClientAgent::run`]), generic over the
+/// messaging transport: in-process for single-process deployments,
+/// TCP for real multi-process runs (`repro worker`).
+pub struct ClientAgent<C: PubSub = crate::broker::BrokerClient> {
+    pub id: usize,
+    session: String,
+    clock: EmulatedClock,
+    runtime: Arc<ModelRuntime>,
+    data: SynthDataset,
+    client: C,
+    /// How long an aggregator waits for its children before proceeding
+    /// with whatever arrived (failure resilience).
+    child_timeout: Duration,
+    /// Rotating batch cursor (persists across rounds).
+    cursor: usize,
+}
+
+impl<C: PubSub> ClientAgent<C> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        session: &str,
+        clock: EmulatedClock,
+        runtime: Arc<ModelRuntime>,
+        data: SynthDataset,
+        client: C,
+        child_timeout: Duration,
+    ) -> ClientAgent<C> {
+        assert_eq!(data.cfg.input_dim, runtime.meta.input_dim);
+        ClientAgent {
+            id,
+            session: session.to_string(),
+            clock,
+            runtime,
+            data,
+            client,
+            child_timeout,
+            cursor: 0,
+        }
+        .into_subscribed()
+    }
+
+    fn into_subscribed(mut self) -> Self {
+        self.client
+            .subscribe(&roles::round_topic(&self.session))
+            .expect("subscribe round");
+        self.client
+            .subscribe(&roles::shutdown_topic(&self.session))
+            .expect("subscribe shutdown");
+        // Join barrier: retained, so a coordinator that attaches later
+        // (multi-process deployments) still sees this worker.
+        self.client
+            .publish_retained(
+                &roles::join_topic(&self.session, self.id),
+                self.id.to_string().into_bytes(),
+            )
+            .expect("publish join");
+        self
+    }
+
+    /// Agent main loop; returns when the session shuts down.
+    pub fn run(mut self) {
+        let round_topic = roles::round_topic(&self.session);
+        let shutdown_topic = roles::shutdown_topic(&self.session);
+        loop {
+            let msg = match self.client.recv_timeout(Duration::from_secs(300)) {
+                Ok(m) => m,
+                Err(_) => return, // orphaned session
+            };
+            if msg.topic == shutdown_topic {
+                return;
+            }
+            if msg.topic != round_topic {
+                continue; // stale slot/global message from a finished round
+            }
+            let rs = match msg.text().ok().and_then(|t| RoundStart::from_json(t).ok()) {
+                Some(rs) => rs,
+                None => {
+                    log_warn!("agent", "client {}: malformed round message", self.id);
+                    continue;
+                }
+            };
+            if let Err(e) = self.handle_round(&rs) {
+                log_warn!("agent", "client {} round {}: {}", self.id, rs.round, e);
+            }
+        }
+    }
+
+    fn handle_round(&mut self, rs: &RoundStart) -> Result<(), String> {
+        let arr = rs.arrangement();
+        let codec = ModelCodec::from_name(&rs.codec)?;
+        match arr.role_of(self.id) {
+            Role::Trainer { parent_slot } => self.run_trainer(rs, parent_slot, codec),
+            Role::Aggregator { slot } => self.run_aggregator(rs, &arr, slot, codec),
+            Role::Idle => Ok(()),
+        }
+    }
+
+    /// Trainer role: receive the global model, run local SGD, send the
+    /// update to the parent aggregator's slot topic.
+    fn run_trainer(
+        &mut self,
+        rs: &RoundStart,
+        parent_slot: usize,
+        codec: ModelCodec,
+    ) -> Result<(), String> {
+        let global_topic = roles::global_topic(&self.session, rs.round);
+        self.client.subscribe(&global_topic)?;
+        let global = loop {
+            let msg = self
+                .client
+                .recv_timeout(self.child_timeout)
+                .map_err(|e| format!("waiting for global model: {e}"))?;
+            if msg.topic == global_topic && !msg.payload.is_empty() {
+                break ModelCodec::decode(&msg.payload)?;
+            }
+            if msg.topic == roles::shutdown_topic(&self.session) {
+                return Err("shutdown mid-round".into());
+            }
+            // Anything else (stale messages) is skipped.
+        };
+        let _ = self.client.unsubscribe(&global_topic);
+
+        let b = self.runtime.meta.train_batch;
+        let clock = self.clock.clone();
+        let (update, _elapsed) = clock.run(WorkKind::Train, || {
+            let mut params = global.params;
+            for _ in 0..rs.local_steps {
+                let (x, y) = self.draw_batch(b);
+                match self.runtime.train_step(&params, &x, &y, rs.lr) {
+                    Ok((np, _loss)) => params = np,
+                    Err(e) => return Err(format!("train_step: {e}")),
+                }
+            }
+            Ok(codec.encode(&ModelUpdate {
+                sender: self.id,
+                weight: self.data.len() as f32,
+                params,
+            }))
+        });
+        let payload = update?;
+        self.client
+            .publish(&roles::slot_topic(&self.session, rs.round, parent_slot), payload)?;
+        Ok(())
+    }
+
+    /// Aggregator role: subscribe the slot inbox, signal readiness,
+    /// collect child updates, aggregate, forward up (or publish the
+    /// round result from the root).
+    fn run_aggregator(
+        &mut self,
+        rs: &RoundStart,
+        arr: &crate::hierarchy::Arrangement,
+        slot: usize,
+        codec: ModelCodec,
+    ) -> Result<(), String> {
+        let slot_topic = roles::slot_topic(&self.session, rs.round, slot);
+        self.client.subscribe(&slot_topic)?;
+        // Ready barrier: the coordinator releases the global model only
+        // after every aggregator slot is listening — no lost updates.
+        self.client.publish(
+            &roles::ready_topic(&self.session, rs.round),
+            super::messages::ReadyMsg {
+                round: rs.round,
+                slot,
+                client: self.id,
+            }
+            .to_json()
+            .into_bytes(),
+        )?;
+
+        let expected = arr.buffer_of(slot).len();
+        let mut raw_updates: Vec<Vec<u8>> = Vec::with_capacity(expected);
+        while raw_updates.len() < expected {
+            let msg = match self.client.recv_timeout(self.child_timeout) {
+                Ok(m) => m,
+                Err(_) => {
+                    log_warn!(
+                        "agent",
+                        "aggregator {} slot {slot}: {}/{} children after timeout — proceeding",
+                        self.id,
+                        raw_updates.len(),
+                        expected
+                    );
+                    break;
+                }
+            };
+            if msg.topic == slot_topic {
+                raw_updates.push(msg.payload.to_vec());
+            } else if msg.topic == roles::shutdown_topic(&self.session) {
+                let _ = self.client.unsubscribe(&slot_topic);
+                return Err("shutdown mid-round".into());
+            }
+        }
+        let _ = self.client.unsubscribe(&slot_topic);
+        if raw_updates.is_empty() {
+            return Err(format!("aggregator slot {slot}: no child updates"));
+        }
+
+        // Decode + aggregate + encode, all inside the aggregation clock
+        // (this is the work the paper's memory-constrained containers
+        // swap on).
+        let (result, _elapsed) = self.clock.run(WorkKind::Aggregate, || {
+            let mut updates = Vec::with_capacity(raw_updates.len());
+            for raw in &raw_updates {
+                updates.push(ModelCodec::decode(raw)?);
+            }
+            let models: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+            let weights: Vec<f32> = updates.iter().map(|u| u.weight).collect();
+            let aggregated = self
+                .runtime
+                .aggregate(&models, &weights)
+                .map_err(|e| format!("aggregate: {e}"))?;
+            Ok::<Vec<u8>, String>(codec.encode(&ModelUpdate {
+                sender: self.id,
+                weight: weights.iter().sum(),
+                params: aggregated,
+            }))
+        });
+        let payload = result?;
+
+        let out_topic = match arr.spec.parent(slot) {
+            Some(parent) => roles::slot_topic(&self.session, rs.round, parent),
+            None => roles::result_topic(&self.session, rs.round),
+        };
+        self.client.publish(&out_topic, payload)?;
+        Ok(())
+    }
+
+    /// Draw a wrapped mini-batch from this client's shard.
+    fn draw_batch(&mut self, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let d = self.data.cfg.input_dim;
+        let n = self.data.len();
+        let mut x = Vec::with_capacity(batch * d);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (feat, label) = self.data.sample(self.cursor);
+            x.extend_from_slice(feat);
+            y.push(label);
+            self.cursor = (self.cursor + 1) % n;
+        }
+        (x, y)
+    }
+}

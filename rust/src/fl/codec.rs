@@ -1,0 +1,218 @@
+//! Model-update payload codecs.
+//!
+//! The paper's SDFLMQ writes model parameters as JSON (~30 MB for the
+//! 1.8 M-param MLP) — reproduced here as [`ModelCodec::Json`]. The
+//! [`ModelCodec::Binary`] variant is the perf alternative (little-endian
+//! f32, length-prefixed); ablation A4 quantifies the gap.
+//!
+//! Envelope (both codecs): sender id, aggregation weight, flat params.
+
+use crate::json::{self, Value};
+
+/// One model update as it travels between FL nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelUpdate {
+    /// Sending client id (`usize::MAX` marks a coordinator broadcast).
+    pub sender: usize,
+    /// Aggregation weight (e.g. sample count), summed up the hierarchy.
+    pub weight: f32,
+    pub params: Vec<f32>,
+}
+
+/// Wire format selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelCodec {
+    /// The paper's JSON format.
+    Json,
+    /// Length-prefixed little-endian f32 (perf variant).
+    Binary,
+}
+
+const BIN_MAGIC: &[u8; 4] = b"FLB1";
+
+impl ModelCodec {
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelCodec::Json => "json",
+            ModelCodec::Binary => "binary",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<ModelCodec, String> {
+        match name {
+            "json" => Ok(ModelCodec::Json),
+            "binary" => Ok(ModelCodec::Binary),
+            other => Err(format!("unknown codec {other:?}")),
+        }
+    }
+
+    /// Serialize an update.
+    pub fn encode(self, update: &ModelUpdate) -> Vec<u8> {
+        match self {
+            ModelCodec::Json => {
+                let v = Value::object(vec![
+                    ("sender", Value::from(update.sender as u64)),
+                    ("weight", Value::from(update.weight as f64)),
+                    ("params", Value::from_f32_slice(&update.params)),
+                ]);
+                json::to_string(&v).into_bytes()
+            }
+            ModelCodec::Binary => {
+                let mut out = Vec::with_capacity(16 + update.params.len() * 4);
+                out.extend_from_slice(BIN_MAGIC);
+                out.extend_from_slice(&(update.sender as u64).to_le_bytes());
+                out.extend_from_slice(&update.weight.to_le_bytes());
+                out.extend_from_slice(&(update.params.len() as u32).to_le_bytes());
+                // Bulk-copy the f32 payload (LE hosts: this is memcpy).
+                for &p in &update.params {
+                    out.extend_from_slice(&p.to_le_bytes());
+                }
+                out
+            }
+        }
+    }
+
+    /// Deserialize; auto-detects the wire format (binary magic vs JSON),
+    /// so mixed-codec sessions cannot mis-parse.
+    pub fn decode(bytes: &[u8]) -> Result<ModelUpdate, String> {
+        if bytes.starts_with(BIN_MAGIC) {
+            Self::decode_binary(bytes)
+        } else {
+            Self::decode_json(bytes)
+        }
+    }
+
+    fn decode_binary(bytes: &[u8]) -> Result<ModelUpdate, String> {
+        if bytes.len() < 20 {
+            return Err("binary update: truncated header".into());
+        }
+        let sender = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+        let weight = f32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let n = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+        let body = &bytes[20..];
+        if body.len() != n * 4 {
+            return Err(format!(
+                "binary update: payload {} bytes, expected {}",
+                body.len(),
+                n * 4
+            ));
+        }
+        let mut params = Vec::with_capacity(n);
+        for chunk in body.chunks_exact(4) {
+            params.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(ModelUpdate {
+            sender,
+            weight,
+            params,
+        })
+    }
+
+    fn decode_json(bytes: &[u8]) -> Result<ModelUpdate, String> {
+        let text = std::str::from_utf8(bytes).map_err(|e| e.to_string())?;
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let sender = v
+            .get("sender")
+            .and_then(Value::as_u64)
+            .ok_or("json update: bad sender")? as usize;
+        let weight = v
+            .get("weight")
+            .and_then(Value::as_f64)
+            .ok_or("json update: bad weight")? as f32;
+        let params = v
+            .get("params")
+            .and_then(Value::to_f32_vec)
+            .ok_or("json update: bad params")?;
+        Ok(ModelUpdate {
+            sender,
+            weight,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update() -> ModelUpdate {
+        ModelUpdate {
+            sender: 3,
+            weight: 256.0,
+            params: (0..1000).map(|i| (i as f32) * 0.001 - 0.5).collect(),
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let u = update();
+        let bytes = ModelCodec::Binary.encode(&u);
+        let back = ModelCodec::decode(&bytes).unwrap();
+        assert_eq!(u, back, "binary must be bit-exact");
+    }
+
+    #[test]
+    fn json_roundtrip_close() {
+        let u = update();
+        let bytes = ModelCodec::Json.encode(&u);
+        let back = ModelCodec::decode(&bytes).unwrap();
+        assert_eq!(back.sender, u.sender);
+        assert_eq!(back.weight, u.weight);
+        assert_eq!(back.params.len(), u.params.len());
+        for (a, b) in u.params.iter().zip(&back.params) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn json_is_larger_than_binary() {
+        // The paper's 30 MB-JSON observation, in miniature.
+        let u = update();
+        let j = ModelCodec::Json.encode(&u).len();
+        let b = ModelCodec::Binary.encode(&u).len();
+        assert!(j > b * 2, "json {j} bytes vs binary {b} bytes");
+    }
+
+    #[test]
+    fn autodetect_both() {
+        let u = update();
+        for codec in [ModelCodec::Json, ModelCodec::Binary] {
+            let back = ModelCodec::decode(&codec.encode(&u)).unwrap();
+            assert_eq!(back.sender, u.sender);
+        }
+    }
+
+    #[test]
+    fn corrupt_binary_rejected() {
+        let u = update();
+        let mut bytes = ModelCodec::Binary.encode(&u);
+        bytes.truncate(bytes.len() - 3);
+        assert!(ModelCodec::decode(&bytes).is_err());
+        assert!(ModelCodec::decode(b"FLB1").is_err());
+    }
+
+    #[test]
+    fn corrupt_json_rejected() {
+        assert!(ModelCodec::decode(b"{\"sender\": }").is_err());
+        assert!(ModelCodec::decode(b"{\"sender\":1,\"weight\":2}").is_err());
+    }
+
+    #[test]
+    fn codec_names_roundtrip() {
+        for c in [ModelCodec::Json, ModelCodec::Binary] {
+            assert_eq!(ModelCodec::from_name(c.name()).unwrap(), c);
+        }
+        assert!(ModelCodec::from_name("protobuf").is_err());
+    }
+
+    #[test]
+    fn special_values_binary() {
+        let u = ModelUpdate {
+            sender: usize::MAX,
+            weight: 0.5,
+            params: vec![f32::MIN, f32::MAX, 0.0, -0.0, 1e-38],
+        };
+        let back = ModelCodec::decode(&ModelCodec::Binary.encode(&u)).unwrap();
+        assert_eq!(u, back);
+    }
+}

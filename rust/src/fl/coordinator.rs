@@ -1,0 +1,322 @@
+//! The session coordinator: drives FL rounds, measures each round's
+//! wall-clock Total Processing Delay (the paper's black-box fitness
+//! signal), feeds it to the placement strategy, and records the series
+//! behind Fig. 4.
+
+use super::codec::{ModelCodec, ModelUpdate};
+use super::messages::{ReadyMsg, RoundStart};
+use super::roles;
+use crate::broker::BrokerClient;
+use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::log_info;
+use crate::metrics::{RoundRecord, RoundRecorder, Stopwatch};
+use crate::placement::{assert_valid_placement, PlacementStrategy};
+use crate::runtime::ModelRuntime;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Coordinator parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub session: String,
+    /// Hierarchy shape over the client population.
+    pub depth: usize,
+    pub width: usize,
+    pub client_count: usize,
+    /// Local SGD steps per trainer per round.
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Model payload codec for the session.
+    pub codec: ModelCodec,
+    /// Max wall-clock to wait for the ready barrier / round result.
+    pub round_timeout: Duration,
+    /// Evaluate global loss every N rounds (0 = never). Evaluation runs
+    /// *outside* the measured round delay.
+    pub eval_every: usize,
+    /// Seed for the initial global model.
+    pub model_seed: [u32; 2],
+    /// Data-generation seed — MUST match the agents' shards so the
+    /// held-out eval set comes from the same task (same class centers).
+    pub data_seed: u64,
+}
+
+impl CoordinatorConfig {
+    /// Aggregator slots (Eq. 5).
+    pub fn dimensions(&self) -> usize {
+        HierarchySpec::new(self.depth, self.width).dimensions()
+    }
+}
+
+/// The coordinator node.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    spec: HierarchySpec,
+    client: BrokerClient,
+    strategy: Box<dyn PlacementStrategy>,
+    runtime: Arc<ModelRuntime>,
+    /// Current global model (flat params).
+    global: Vec<f32>,
+    recorder: RoundRecorder,
+    /// Held-out eval batch.
+    eval_x: Vec<f32>,
+    eval_y: Vec<i32>,
+}
+
+impl Coordinator {
+    pub fn new(
+        cfg: CoordinatorConfig,
+        client: BrokerClient,
+        strategy: Box<dyn PlacementStrategy>,
+        runtime: Arc<ModelRuntime>,
+    ) -> Result<Coordinator> {
+        let spec = HierarchySpec::new(cfg.depth, cfg.width);
+        if cfg.client_count < spec.dimensions() {
+            return Err(anyhow!(
+                "need ≥ {} clients for a {}×{} hierarchy, have {}",
+                spec.dimensions(),
+                cfg.depth,
+                cfg.width,
+                cfg.client_count
+            ));
+        }
+        let global = runtime.init_params(cfg.model_seed)?;
+        // Held-out eval data: a reserved shard id far above any client.
+        let (eval_x, eval_y) = {
+            use crate::data::{SynthConfig, SynthDataset};
+            let data = SynthDataset::for_client(
+                SynthConfig {
+                    input_dim: runtime.meta.input_dim,
+                    num_classes: runtime.meta.num_classes,
+                    samples_per_client: runtime.meta.eval_batch,
+                    seed: cfg.data_seed,
+                    ..SynthConfig::default()
+                },
+                1_000_000,
+            );
+            (data.x.clone(), data.y.clone())
+        };
+        Ok(Coordinator {
+            cfg,
+            spec,
+            client,
+            strategy,
+            runtime,
+            global,
+            recorder: RoundRecorder::new(),
+            eval_x,
+            eval_y,
+        })
+    }
+
+    /// The recorded per-round measurements.
+    pub fn recorder(&self) -> &RoundRecorder {
+        &self.recorder
+    }
+
+    /// Current global model.
+    pub fn global_model(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Strategy label (for CSV output).
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// Block until `n` distinct clients have announced themselves on the
+    /// retained join topics (multi-process deployments start workers
+    /// asynchronously; rounds must not begin before everyone listens).
+    pub fn wait_for_clients(&mut self, n: usize, timeout: Duration) -> Result<()> {
+        let filter = roles::join_filter(&self.cfg.session);
+        self.client.subscribe(&filter).map_err(|e| anyhow!(e))?;
+        let mut seen = std::collections::BTreeSet::new();
+        let deadline = std::time::Instant::now() + timeout;
+        while seen.len() < n {
+            let remain = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| anyhow!("join barrier: {}/{} clients after {timeout:?}", seen.len(), n))?;
+            let msg = self
+                .client
+                .recv_timeout(remain.min(Duration::from_millis(500)))
+                .map_err(|_| ())
+                .ok();
+            if let Some(msg) = msg {
+                if let Ok(id) = msg.text().unwrap_or("").parse::<usize>() {
+                    seen.insert(id);
+                }
+            }
+        }
+        self.client.unsubscribe(&filter);
+        log_info!("coord", "join barrier complete: {} clients", seen.len());
+        Ok(())
+    }
+
+    /// Run one FL round; returns its record.
+    pub fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
+        let placement = self.strategy.propose(round);
+        assert_valid_placement(&placement, self.spec.dimensions(), self.cfg.client_count);
+        let arr = Arrangement::from_position(self.spec, &placement, self.cfg.client_count);
+
+        // Subscribe result/ready before announcing the round.
+        let ready_topic = roles::ready_topic(&self.cfg.session, round);
+        let result_topic = roles::result_topic(&self.cfg.session, round);
+        self.client.subscribe(&ready_topic).map_err(|e| anyhow!(e))?;
+        self.client.subscribe(&result_topic).map_err(|e| anyhow!(e))?;
+
+        let sw = Stopwatch::start();
+
+        // 1. Announce the arrangement.
+        let rs = RoundStart::from_arrangement(
+            round,
+            &arr,
+            self.cfg.local_steps,
+            self.cfg.lr,
+            self.cfg.codec.name(),
+        );
+        self.client
+            .publish(roles::round_topic(&self.cfg.session), rs.to_json().into_bytes())
+            .map_err(|e| anyhow!(e))?;
+
+        // 2. Ready barrier: every aggregator slot listening.
+        let dims = self.spec.dimensions();
+        let mut ready = vec![false; dims];
+        let mut ready_count = 0usize;
+        while ready_count < dims {
+            let msg = self
+                .client
+                .recv_timeout(self.cfg.round_timeout)
+                .map_err(|e| anyhow!("round {round}: ready barrier: {e}"))?;
+            if msg.topic == ready_topic {
+                let r = ReadyMsg::from_json(msg.text().map_err(|e| anyhow!(e))?)
+                    .map_err(|e| anyhow!(e))?;
+                if r.round == round && !std::mem::replace(&mut ready[r.slot], true) {
+                    ready_count += 1;
+                }
+            }
+        }
+
+        // 3. Release the global model. Retained + round-scoped: a trainer
+        // whose subscription lands after this publish (thread preemption
+        // under load) still receives it via retained replay — without
+        // this, QoS-0 delivery can starve a whole round.
+        let payload = Arc::new(self.cfg.codec.encode(&ModelUpdate {
+            sender: usize::MAX,
+            weight: 0.0,
+            params: std::mem::take(&mut self.global),
+        }));
+        let global_topic = roles::global_topic(&self.cfg.session, round);
+        self.client
+            .publish_shared_retained(&global_topic, payload)
+            .map_err(|e| anyhow!(e))?;
+
+        // 4. Wait for the root aggregate.
+        let new_global = loop {
+            let msg = self
+                .client
+                .recv_timeout(self.cfg.round_timeout)
+                .map_err(|e| anyhow!("round {round}: waiting for result: {e}"))?;
+            if msg.topic == result_topic {
+                break ModelCodec::decode(&msg.payload).map_err(|e| anyhow!(e))?;
+            }
+        };
+        let delay = sw.elapsed();
+        self.global = new_global.params;
+
+        self.client.unsubscribe(&ready_topic);
+        self.client.unsubscribe(&result_topic);
+        // Drop the retained global (7.5 MB/round would otherwise pile up
+        // in the broker's retained store).
+        let _ = self.client.clear_retained(&global_topic);
+
+        // 5. Black-box feedback to the optimizer.
+        self.strategy.feedback(&placement, delay.as_secs_f64());
+
+        // 6. Optional evaluation (outside the measured delay).
+        let loss = if self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0 {
+            let (loss, _acc) = self
+                .runtime
+                .evaluate(&self.global, &self.eval_x, &self.eval_y)?;
+            loss as f64
+        } else {
+            f64::NAN
+        };
+
+        let rec = RoundRecord {
+            round,
+            strategy: self.strategy.name().to_string(),
+            delay,
+            loss,
+            placement,
+        };
+        log_info!(
+            "coord",
+            "round {round} [{}] delay={:.3}s loss={:.4} placement={:?}",
+            rec.strategy,
+            delay.as_secs_f64(),
+            loss,
+            rec.placement
+        );
+        self.recorder.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Run `rounds` rounds.
+    pub fn run(&mut self, rounds: usize) -> Result<()> {
+        for r in 0..rounds {
+            self.run_round(r)?;
+        }
+        Ok(())
+    }
+
+    /// Evaluate the current global model on the held-out batch.
+    pub fn evaluate(&self) -> Result<(f32, f32)> {
+        Ok(self
+            .runtime
+            .evaluate(&self.global, &self.eval_x, &self.eval_y)?)
+    }
+
+    /// Broadcast session shutdown to all agents.
+    pub fn shutdown(&self) {
+        let _ = self
+            .client
+            .publish(roles::shutdown_topic(&self.cfg.session), Vec::new());
+    }
+
+    /// Persist the current global model (resume/serve workflows).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let last = self.recorder.records().last();
+        crate::runtime::checkpoint::save(
+            path,
+            &self.global,
+            &crate::runtime::CheckpointMeta {
+                param_count: self.global.len(),
+                round: last.map_or(0, |r| r.round),
+                session: self.cfg.session.clone(),
+                loss: last.map_or(f64::NAN, |r| r.loss),
+            },
+        )
+    }
+
+    /// Replace the global model from a checkpoint (e.g. to resume a
+    /// session). The parameter count must match the loaded artifacts.
+    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let (params, meta) = crate::runtime::checkpoint::load(path)?;
+        if params.len() != self.runtime.meta.param_count {
+            return Err(anyhow!(
+                "checkpoint has {} params, artifacts expect {}",
+                params.len(),
+                self.runtime.meta.param_count
+            ));
+        }
+        log_info!(
+            "coord",
+            "restored checkpoint {:?} (round {}, loss {:.4})",
+            path,
+            meta.round,
+            meta.loss
+        );
+        self.global = params;
+        Ok(())
+    }
+}

@@ -1,0 +1,108 @@
+//! Heterogeneous-client emulation — the docker substitute (DESIGN.md §4).
+//!
+//! The paper's testbed throttles clients with docker cpu/memory limits
+//! (1×3-core/2 GB, 2×1-core/1 GB, 7×1-core/64 MB+swap). PSO only needs a
+//! stable, placement-dependent delay landscape, so we reproduce the same
+//! signal by *stretching measured compute time*: a client with
+//! `speed_factor = s` sleeps `(s-1)·t` after a computation that took `t`,
+//! and aggregation work is additionally stretched by `memory_pressure`
+//! (swap thrash while merging 30 MB models). The code path (real PJRT
+//! training/aggregation, real pub/sub) is identical to full speed.
+
+use crate::configio::ClientSpec;
+use std::time::{Duration, Instant};
+
+/// Work categories with distinct throttle factors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkKind {
+    /// Local SGD training steps.
+    Train,
+    /// Model aggregation (decode + wavg + encode).
+    Aggregate,
+}
+
+/// Per-client virtual clock.
+#[derive(Debug, Clone)]
+pub struct EmulatedClock {
+    spec: ClientSpec,
+    /// Global time-scale multiplier (lets experiments compress the
+    /// paper's tens-of-seconds rounds into hundreds of ms).
+    pub time_scale: f64,
+}
+
+impl EmulatedClock {
+    pub fn new(spec: ClientSpec) -> EmulatedClock {
+        EmulatedClock {
+            spec,
+            time_scale: 1.0,
+        }
+    }
+
+    /// Effective slowdown multiplier for a work kind.
+    pub fn factor(&self, kind: WorkKind) -> f64 {
+        match kind {
+            WorkKind::Train => self.spec.speed_factor,
+            WorkKind::Aggregate => self.spec.speed_factor * self.spec.memory_pressure,
+        }
+    }
+
+    /// Run `f`, then sleep so total elapsed ≈ `factor(kind) · compute`.
+    /// Returns (result, emulated_duration).
+    pub fn run<T>(&self, kind: WorkKind, f: impl FnOnce() -> T) -> (T, Duration) {
+        let t0 = Instant::now();
+        let out = f();
+        let compute = t0.elapsed();
+        let extra = compute.mul_f64((self.factor(kind) - 1.0).max(0.0) * self.time_scale);
+        if !extra.is_zero() {
+            std::thread::sleep(extra);
+        }
+        (out, t0.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(speed: f64, mem: f64) -> ClientSpec {
+        ClientSpec {
+            name: "t".into(),
+            speed_factor: speed,
+            memory_pressure: mem,
+        }
+    }
+
+    #[test]
+    fn full_speed_adds_nothing() {
+        let clock = EmulatedClock::new(spec(1.0, 1.0));
+        let (out, d) = clock.run(WorkKind::Train, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        assert!(d < Duration::from_millis(12), "{d:?}");
+    }
+
+    #[test]
+    fn slow_client_is_proportionally_slower() {
+        let clock = EmulatedClock::new(spec(3.0, 1.0));
+        let (_, d) = clock.run(WorkKind::Train, || {
+            std::thread::sleep(Duration::from_millis(10));
+        });
+        assert!(d >= Duration::from_millis(28), "expected ≈3x: {d:?}");
+        assert!(d < Duration::from_millis(60), "{d:?}");
+    }
+
+    #[test]
+    fn memory_pressure_hits_aggregation_only() {
+        let clock = EmulatedClock::new(spec(1.0, 4.0));
+        assert_eq!(clock.factor(WorkKind::Train), 1.0);
+        assert_eq!(clock.factor(WorkKind::Aggregate), 4.0);
+    }
+
+    #[test]
+    fn factors_compose() {
+        let clock = EmulatedClock::new(spec(2.0, 3.0));
+        assert_eq!(clock.factor(WorkKind::Aggregate), 6.0);
+    }
+}

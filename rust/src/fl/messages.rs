@@ -1,0 +1,194 @@
+//! JSON control-plane messages (round orchestration). Model payloads go
+//! through [`super::codec`], not here.
+
+use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::json::{self, Value};
+
+/// Coordinator → everyone: the arrangement and hyper-parameters of a round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundStart {
+    pub round: usize,
+    /// Hierarchy shape.
+    pub depth: usize,
+    pub width: usize,
+    /// Client id per aggregator slot (BFT order) — the PSO position.
+    pub aggregators: Vec<usize>,
+    /// Trainer ids per leaf slot.
+    pub trainers: Vec<Vec<usize>>,
+    /// Local SGD steps per trainer.
+    pub local_steps: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// "json" | "binary" — model payload codec for this round.
+    pub codec: String,
+}
+
+impl RoundStart {
+    /// Build from an arrangement.
+    pub fn from_arrangement(
+        round: usize,
+        arr: &Arrangement,
+        local_steps: usize,
+        lr: f32,
+        codec: &str,
+    ) -> RoundStart {
+        RoundStart {
+            round,
+            depth: arr.spec.depth,
+            width: arr.spec.width,
+            aggregators: arr.aggregators.clone(),
+            trainers: arr.trainers.clone(),
+            local_steps,
+            lr,
+            codec: codec.to_string(),
+        }
+    }
+
+    /// Reconstruct the arrangement (agents recompute roles from it).
+    pub fn arrangement(&self) -> Arrangement {
+        Arrangement {
+            spec: HierarchySpec::new(self.depth, self.width),
+            aggregators: self.aggregators.clone(),
+            trainers: self.trainers.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let trainers = Value::Array(
+            self.trainers
+                .iter()
+                .map(|t| Value::Array(t.iter().map(|&c| Value::from(c)).collect()))
+                .collect(),
+        );
+        json::to_string(&Value::object(vec![
+            ("round", Value::from(self.round)),
+            ("depth", Value::from(self.depth)),
+            ("width", Value::from(self.width)),
+            (
+                "aggregators",
+                Value::Array(self.aggregators.iter().map(|&c| Value::from(c)).collect()),
+            ),
+            ("trainers", trainers),
+            ("local_steps", Value::from(self.local_steps)),
+            ("lr", Value::from(self.lr as f64)),
+            ("codec", Value::from(self.codec.as_str())),
+        ]))
+    }
+
+    pub fn from_json(text: &str) -> Result<RoundStart, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let usize_of = |key: &str| -> Result<usize, String> {
+            v.get(key)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| format!("round msg: bad {key}"))
+        };
+        let aggregators = v
+            .get("aggregators")
+            .and_then(Value::as_array)
+            .ok_or("round msg: bad aggregators")?
+            .iter()
+            .map(|x| x.as_usize().ok_or("bad aggregator id"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let trainers = v
+            .get("trainers")
+            .and_then(Value::as_array)
+            .ok_or("round msg: bad trainers")?
+            .iter()
+            .map(|t| {
+                t.as_array()
+                    .ok_or("bad trainer group")?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or("bad trainer id"))
+                    .collect::<Result<Vec<_>, _>>()
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(RoundStart {
+            round: usize_of("round")?,
+            depth: usize_of("depth")?,
+            width: usize_of("width")?,
+            aggregators,
+            trainers,
+            local_steps: usize_of("local_steps")?,
+            lr: v
+                .get("lr")
+                .and_then(Value::as_f64)
+                .ok_or("round msg: bad lr")? as f32,
+            codec: v
+                .get("codec")
+                .and_then(Value::as_str)
+                .ok_or("round msg: bad codec")?
+                .to_string(),
+        })
+    }
+}
+
+/// Aggregator → coordinator: "slot N subscribed, ready for updates".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadyMsg {
+    pub round: usize,
+    pub slot: usize,
+    pub client: usize,
+}
+
+impl ReadyMsg {
+    pub fn to_json(&self) -> String {
+        json::to_string(&Value::object(vec![
+            ("round", Value::from(self.round)),
+            ("slot", Value::from(self.slot)),
+            ("client", Value::from(self.client)),
+        ]))
+    }
+
+    pub fn from_json(text: &str) -> Result<ReadyMsg, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        let get = |k: &str| v.get(k).and_then(Value::as_usize).ok_or(format!("ready msg: bad {k}"));
+        Ok(ReadyMsg {
+            round: get("round")?,
+            slot: get("slot")?,
+            client: get("client")?,
+        })
+    }
+}
+
+/// Metadata accompanying a round result (root aggregator → coordinator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultMeta {
+    pub round: usize,
+    /// Total weight aggregated into the result (Σ sample counts).
+    pub weight: f32,
+    /// How many updates were aggregated at the root.
+    pub contributors: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy::HierarchySpec;
+
+    #[test]
+    fn round_start_roundtrip() {
+        let spec = HierarchySpec::new(2, 2);
+        let arr = Arrangement::from_position(spec, &[4, 1, 2], 8);
+        let rs = RoundStart::from_arrangement(7, &arr, 2, 0.05, "binary");
+        let back = RoundStart::from_json(&rs.to_json()).unwrap();
+        assert_eq!(rs, back);
+        assert_eq!(back.arrangement(), arr);
+    }
+
+    #[test]
+    fn ready_roundtrip() {
+        let r = ReadyMsg {
+            round: 3,
+            slot: 1,
+            client: 9,
+        };
+        assert_eq!(ReadyMsg::from_json(&r.to_json()).unwrap(), r);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(RoundStart::from_json("{}").is_err());
+        assert!(RoundStart::from_json("not json").is_err());
+        assert!(ReadyMsg::from_json("{\"round\":1}").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! SDFLMQ-style federated-learning framework over pub/sub (paper §II).
+//!
+//! Roles are topics: the coordinator announces each round's arrangement,
+//! aggregator slots subscribe to round-scoped slot topics, trainers and
+//! child aggregators publish model updates to their parent's slot topic,
+//! and the root aggregator publishes the round result. Clients never
+//! share internal metrics — the coordinator's only signal is the round's
+//! wall-clock processing delay (the paper's black-box constraint).
+//!
+//! Module map:
+//! * [`roles`] — the topic naming scheme.
+//! * [`messages`] — JSON control-plane messages (round start / ready).
+//! * [`codec`] — model-update payloads: JSON (the paper's ~30 MB format)
+//!   or length-prefixed binary (perf variant; ablation A4).
+//! * [`emulation`] — heterogeneous-client throttling (docker substitute).
+//! * [`agent`] — the client agent: trains and/or aggregates per role.
+//! * [`coordinator`] — drives rounds, measures TPD, feeds the placement
+//!   strategy, records Fig-4 data.
+//! * [`session`] — wires broker + agents + coordinator into a running
+//!   deployment.
+
+pub mod agent;
+pub mod codec;
+pub mod coordinator;
+pub mod emulation;
+pub mod messages;
+pub mod roles;
+pub mod session;
+
+pub use agent::ClientAgent;
+pub use codec::ModelCodec;
+pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use emulation::EmulatedClock;
+pub use messages::{ReadyMsg, ResultMeta, RoundStart};
+pub use session::Deployment;

@@ -1,0 +1,83 @@
+//! Topic naming: the SDFLMQ "roles are topics" scheme, round-scoped so
+//! a slow client's late update can never contaminate the next round.
+
+/// Round-announcement topic (coordinator → everyone).
+pub fn round_topic(session: &str) -> String {
+    format!("fl/{session}/round")
+}
+
+/// Global-model broadcast for a round (coordinator → trainers).
+pub fn global_topic(session: &str, round: usize) -> String {
+    format!("fl/{session}/r/{round}/global")
+}
+
+/// Aggregator slot inbox for a round (children → slot owner).
+pub fn slot_topic(session: &str, round: usize, slot: usize) -> String {
+    format!("fl/{session}/r/{round}/slot/{slot}")
+}
+
+/// Aggregator-ready barrier (slot owner → coordinator).
+pub fn ready_topic(session: &str, round: usize) -> String {
+    format!("fl/{session}/r/{round}/ready")
+}
+
+/// Round result (root aggregator → coordinator).
+pub fn result_topic(session: &str, round: usize) -> String {
+    format!("fl/{session}/r/{round}/result")
+}
+
+/// Session shutdown broadcast.
+pub fn shutdown_topic(session: &str) -> String {
+    format!("fl/{session}/shutdown")
+}
+
+/// Per-client join announcement (retained — the join barrier for
+/// multi-process deployments).
+pub fn join_topic(session: &str, client: usize) -> String {
+    format!("fl/{session}/join/{client}")
+}
+
+/// Subscription filter covering all join announcements of a session.
+pub fn join_filter(session: &str) -> String {
+    format!("fl/{session}/join/+")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{topic_matches, validate_topic};
+
+    #[test]
+    fn topics_are_valid_and_distinct() {
+        let ts = [
+            round_topic("s1"),
+            global_topic("s1", 3),
+            slot_topic("s1", 3, 0),
+            slot_topic("s1", 3, 1),
+            ready_topic("s1", 3),
+            result_topic("s1", 3),
+            shutdown_topic("s1"),
+        ];
+        for t in &ts {
+            validate_topic(t).unwrap();
+        }
+        let mut sorted = ts.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ts.len());
+    }
+
+    #[test]
+    fn round_scoping_prevents_cross_round_matches() {
+        assert!(!topic_matches(
+            &slot_topic("s", 4, 0),
+            &slot_topic("s", 5, 0)
+        ));
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        assert_ne!(round_topic("a"), round_topic("b"));
+        assert!(!topic_matches("fl/a/#", &round_topic("b")));
+    }
+}

@@ -1,0 +1,103 @@
+//! Deployment wiring: broker + agents + coordinator for one scenario —
+//! the programmatic equivalent of the paper's docker-compose setup.
+
+use super::agent::ClientAgent;
+use super::coordinator::{Coordinator, CoordinatorConfig};
+use super::emulation::EmulatedClock;
+use crate::broker::Broker;
+use crate::configio::DeployScenario;
+use crate::data::{SynthConfig, SynthDataset};
+use crate::placement::PlacementStrategy;
+use crate::runtime::ModelRuntime;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A running SDFL deployment (agents on threads, coordinator inline).
+pub struct Deployment {
+    pub coordinator: Coordinator,
+    pub broker: Broker,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Deployment {
+    /// Spawn one agent thread per client in the scenario and build the
+    /// coordinator with `strategy`.
+    pub fn launch(
+        scenario: &DeployScenario,
+        session: &str,
+        runtime: Arc<ModelRuntime>,
+        strategy: Box<dyn PlacementStrategy>,
+        time_scale: f64,
+    ) -> Result<Deployment> {
+        let broker = Broker::new();
+        let mut handles = Vec::with_capacity(scenario.clients.len());
+        // Generous child timeout: slowest emulated aggregation must fit.
+        let child_timeout = Duration::from_secs(120);
+
+        for (id, spec) in scenario.clients.iter().enumerate() {
+            let mut clock = EmulatedClock::new(spec.clone());
+            clock.time_scale = time_scale;
+            let data = SynthDataset::for_client(
+                SynthConfig {
+                    input_dim: runtime.meta.input_dim,
+                    num_classes: runtime.meta.num_classes,
+                    samples_per_client: 64,
+                    seed: scenario.seed,
+                    ..SynthConfig::default()
+                },
+                id,
+            );
+            let client = broker.connect(&spec.name);
+            let agent = ClientAgent::new(
+                id,
+                session,
+                clock,
+                runtime.clone(),
+                data,
+                client,
+                child_timeout,
+            );
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("agent-{id}"))
+                    .spawn(move || agent.run())
+                    .expect("spawn agent"),
+            );
+        }
+
+        let cfg = CoordinatorConfig {
+            session: session.to_string(),
+            depth: scenario.depth,
+            width: scenario.width,
+            client_count: scenario.clients.len(),
+            local_steps: scenario.local_steps,
+            lr: scenario.lr,
+            codec: super::ModelCodec::Binary,
+            round_timeout: Duration::from_secs(300),
+            eval_every: 1,
+            model_seed: [0, scenario.seed as u32],
+            data_seed: scenario.seed,
+        };
+        let coordinator = Coordinator::new(cfg, broker.connect("coordinator"), strategy, runtime)?;
+
+        Ok(Deployment {
+            coordinator,
+            broker,
+            handles,
+        })
+    }
+
+    /// Run `rounds` rounds, then return self for inspection.
+    pub fn run(&mut self, rounds: usize) -> Result<()> {
+        self.coordinator.run(rounds)
+    }
+
+    /// Shut down agents and join their threads.
+    pub fn shutdown(mut self) {
+        self.coordinator.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

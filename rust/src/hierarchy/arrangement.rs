@@ -1,0 +1,214 @@
+//! An [`Arrangement`] binds concrete client ids to the hierarchy's
+//! aggregator slots and distributes the remaining clients as trainers —
+//! the "Hierarchy Rearrangement" step of the paper's Algorithm 1.
+
+use super::HierarchySpec;
+
+/// A concrete client-to-role assignment for one FL round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arrangement {
+    pub spec: HierarchySpec,
+    /// Client id occupying each aggregator slot (BFT order). This is
+    /// exactly the PSO particle's position vector.
+    pub aggregators: Vec<usize>,
+    /// Trainer client ids attached to each leaf aggregator slot, indexed
+    /// by position within `spec.leaf_slots()`.
+    pub trainers: Vec<Vec<usize>>,
+}
+
+impl Arrangement {
+    /// Build from a position vector over `client_count` clients.
+    ///
+    /// Clients named in `position` become aggregators ("agtrainers" in
+    /// the paper — they also keep a processing buffer). All remaining
+    /// clients are drained from a buffer of available labels and spread
+    /// over the leaf aggregators round-robin, matching the paper's
+    /// "remaining clients are assigned trainer roles from a buffer of
+    /// available labels".
+    pub fn from_position(
+        spec: HierarchySpec,
+        position: &[usize],
+        client_count: usize,
+    ) -> Arrangement {
+        let dims = spec.dimensions();
+        assert_eq!(
+            position.len(),
+            dims,
+            "position length {} != dimensions {}",
+            position.len(),
+            dims
+        );
+        assert!(
+            client_count >= dims,
+            "need at least {dims} clients for {dims} aggregator slots"
+        );
+        debug_assert!(
+            {
+                let mut seen = vec![false; client_count];
+                position.iter().all(|&c| {
+                    c < client_count && !std::mem::replace(&mut seen[c], true)
+                })
+            },
+            "position must be distinct client ids < client_count"
+        );
+
+        let mut is_aggregator = vec![false; client_count];
+        for &c in position {
+            is_aggregator[c] = true;
+        }
+        // Buffer of available trainer labels, ascending for determinism.
+        let buffer: Vec<usize> = (0..client_count).filter(|&c| !is_aggregator[c]).collect();
+
+        let leaf_count = spec.leaf_slots().len();
+        let mut trainers: Vec<Vec<usize>> = vec![Vec::new(); leaf_count];
+        for (i, c) in buffer.into_iter().enumerate() {
+            trainers[i % leaf_count].push(c);
+        }
+
+        Arrangement {
+            spec,
+            aggregators: position.to_vec(),
+            trainers,
+        }
+    }
+
+    /// Clients whose round-trip the aggregator at `slot` waits for: the
+    /// contents of its processing buffer (trainers for leaf slots, child
+    /// aggregators otherwise).
+    pub fn buffer_of(&self, slot: usize) -> Vec<usize> {
+        if self.spec.is_leaf_slot(slot) {
+            let leaf_index = slot - self.spec.level_start(self.spec.depth - 1);
+            self.trainers[leaf_index].clone()
+        } else {
+            self.spec
+                .children(slot)
+                .into_iter()
+                .map(|s| self.aggregators[s])
+                .collect()
+        }
+    }
+
+    /// All trainer client ids (flattened).
+    pub fn all_trainers(&self) -> Vec<usize> {
+        self.trainers.iter().flatten().copied().collect()
+    }
+
+    /// Total clients represented (aggregators + trainers).
+    pub fn client_count(&self) -> usize {
+        self.aggregators.len() + self.trainers.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Role of a client in this arrangement.
+    pub fn role_of(&self, client: usize) -> Role {
+        if let Some(slot) = self.aggregators.iter().position(|&c| c == client) {
+            Role::Aggregator { slot }
+        } else {
+            for (i, t) in self.trainers.iter().enumerate() {
+                if t.contains(&client) {
+                    let slot = self.spec.level_start(self.spec.depth - 1) + i;
+                    return Role::Trainer { parent_slot: slot };
+                }
+            }
+            Role::Idle
+        }
+    }
+}
+
+/// A client's role within an arrangement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Occupies aggregator slot `slot` (BFT index).
+    Aggregator { slot: usize },
+    /// Trains and reports to the aggregator at `parent_slot`.
+    Trainer { parent_slot: usize },
+    /// Not part of this round (only possible if client_count changed).
+    Idle,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> HierarchySpec {
+        HierarchySpec::new(3, 2) // dims = 1 + 2 + 4 = 7
+    }
+
+    #[test]
+    fn trainers_are_the_complement() {
+        let s = spec();
+        let pos: Vec<usize> = vec![10, 3, 5, 0, 1, 2, 4];
+        let a = Arrangement::from_position(s, &pos, 12);
+        let mut all: Vec<usize> = a.all_trainers();
+        all.extend_from_slice(&a.aggregators);
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+        assert_eq!(a.client_count(), 12);
+    }
+
+    #[test]
+    fn trainer_distribution_is_balanced() {
+        let s = spec(); // 4 leaf slots
+        let pos: Vec<usize> = (0..7).collect();
+        let a = Arrangement::from_position(s, &pos, 17); // 10 trainers over 4 leaves
+        let sizes: Vec<usize> = a.trainers.iter().map(Vec::len).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn buffer_of_inner_slot_is_child_aggregators() {
+        let s = spec();
+        let pos: Vec<usize> = vec![6, 5, 4, 3, 2, 1, 0];
+        let a = Arrangement::from_position(s, &pos, 8);
+        // Root (slot 0) children are slots 1, 2 → clients 5, 4.
+        assert_eq!(a.buffer_of(0), vec![5, 4]);
+        // Slot 1 children are slots 3, 4 → clients 3, 2.
+        assert_eq!(a.buffer_of(1), vec![3, 2]);
+    }
+
+    #[test]
+    fn buffer_of_leaf_slot_is_trainers() {
+        let s = spec();
+        let pos: Vec<usize> = (0..7).collect();
+        let a = Arrangement::from_position(s, &pos, 11);
+        // Leaf slots are 3..7; trainers 7..11 distributed round-robin.
+        assert_eq!(a.buffer_of(3), vec![7]);
+        assert_eq!(a.buffer_of(4), vec![8]);
+        assert_eq!(a.buffer_of(5), vec![9]);
+        assert_eq!(a.buffer_of(6), vec![10]);
+    }
+
+    #[test]
+    fn roles_cover_everyone() {
+        let s = spec();
+        let pos: Vec<usize> = vec![1, 3, 5, 7, 9, 11, 13];
+        let a = Arrangement::from_position(s, &pos, 14);
+        let mut aggs = 0;
+        let mut trainers = 0;
+        for c in 0..14 {
+            match a.role_of(c) {
+                Role::Aggregator { .. } => aggs += 1,
+                Role::Trainer { .. } => trainers += 1,
+                Role::Idle => panic!("client {c} idle"),
+            }
+        }
+        assert_eq!(aggs, 7);
+        assert_eq!(trainers, 7);
+    }
+
+    #[test]
+    fn exact_fit_no_trainers() {
+        let s = HierarchySpec::new(2, 3); // dims 4
+        let a = Arrangement::from_position(s, &[0, 1, 2, 3], 4);
+        assert!(a.all_trainers().is_empty());
+        for slot in s.leaf_slots() {
+            assert!(a.buffer_of(slot).is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "position length")]
+    fn wrong_position_length_panics() {
+        let _ = Arrangement::from_position(spec(), &[0, 1], 10);
+    }
+}

@@ -1,0 +1,12 @@
+//! The SDFL aggregation hierarchy (paper §IV.A).
+//!
+//! A complete W-ary tree of aggregator *slots* with depth D, stored in
+//! breadth-first order (the paper constructs and traverses it by BFT).
+//! An [`Arrangement`] binds client ids to slots — the object PSO
+//! optimizes — plus the trainer-to-leaf assignment.
+
+mod arrangement;
+mod spec;
+
+pub use arrangement::{Arrangement, Role};
+pub use spec::HierarchySpec;

@@ -1,0 +1,176 @@
+//! Shape of the aggregation hierarchy: slot indexing in BFT order.
+
+/// A complete W-ary aggregator tree of depth D (slots only, no clients).
+///
+/// Slots are numbered in breadth-first order: slot 0 is the root, slots
+/// `1..=W` are level 1, and so on. With `dims = Σ_{i<D} W^i` (paper
+/// Eq. 5) the standard complete-tree arithmetic applies:
+/// `parent(s) = (s-1)/W`, `children(s) = s·W+1 ..= s·W+W`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HierarchySpec {
+    pub depth: usize,
+    pub width: usize,
+}
+
+impl HierarchySpec {
+    /// Construct; depth and width must be ≥ 1.
+    pub fn new(depth: usize, width: usize) -> HierarchySpec {
+        assert!(depth >= 1, "hierarchy depth must be >= 1");
+        assert!(width >= 1, "hierarchy width must be >= 1");
+        HierarchySpec { depth, width }
+    }
+
+    /// Total aggregator slots (paper Eq. 5): Σ_{i=0}^{D-1} W^i.
+    pub fn dimensions(&self) -> usize {
+        let mut total = 0usize;
+        let mut level = 1usize;
+        for _ in 0..self.depth {
+            total += level;
+            level *= self.width;
+        }
+        total
+    }
+
+    /// Number of slots on level `l` (0-based): W^l.
+    pub fn level_size(&self, l: usize) -> usize {
+        assert!(l < self.depth);
+        self.width.pow(l as u32)
+    }
+
+    /// First slot index of level `l`.
+    pub fn level_start(&self, l: usize) -> usize {
+        assert!(l < self.depth);
+        let mut start = 0;
+        let mut size = 1;
+        for _ in 0..l {
+            start += size;
+            size *= self.width;
+        }
+        start
+    }
+
+    /// Level of slot `s` (inverse of the BFT numbering).
+    pub fn level_of(&self, s: usize) -> usize {
+        assert!(s < self.dimensions());
+        let mut start = 0;
+        let mut size = 1;
+        for l in 0..self.depth {
+            if s < start + size {
+                return l;
+            }
+            start += size;
+            size *= self.width;
+        }
+        unreachable!()
+    }
+
+    /// Parent slot of `s` (None for the root).
+    pub fn parent(&self, s: usize) -> Option<usize> {
+        assert!(s < self.dimensions());
+        if s == 0 {
+            None
+        } else {
+            Some((s - 1) / self.width)
+        }
+    }
+
+    /// Child aggregator slots of `s` (empty for leaf-level slots).
+    pub fn children(&self, s: usize) -> Vec<usize> {
+        let dims = self.dimensions();
+        assert!(s < dims);
+        let first = s * self.width + 1;
+        (first..first + self.width).filter(|&c| c < dims).collect()
+    }
+
+    /// True if `s` is on the leaf aggregator level (D-1) — these slots
+    /// receive trainer children instead of aggregator children.
+    pub fn is_leaf_slot(&self, s: usize) -> bool {
+        self.level_of(s) == self.depth - 1
+    }
+
+    /// Slots on the leaf aggregator level, in BFT order.
+    pub fn leaf_slots(&self) -> Vec<usize> {
+        let start = self.level_start(self.depth - 1);
+        (start..self.dimensions()).collect()
+    }
+
+    /// Slot indices grouped by level, bottom-up (leaf level first) — the
+    /// traversal order of the paper's fitness function ("Traverse
+    /// hierarchy bottom-up").
+    pub fn levels_bottom_up(&self) -> Vec<Vec<usize>> {
+        (0..self.depth)
+            .rev()
+            .map(|l| {
+                let start = self.level_start(l);
+                (start..start + self.level_size(l)).collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimensions_match_eq5() {
+        assert_eq!(HierarchySpec::new(1, 4).dimensions(), 1);
+        assert_eq!(HierarchySpec::new(2, 2).dimensions(), 3);
+        assert_eq!(HierarchySpec::new(3, 4).dimensions(), 21);
+        assert_eq!(HierarchySpec::new(4, 4).dimensions(), 85);
+        assert_eq!(HierarchySpec::new(5, 4).dimensions(), 341);
+        assert_eq!(HierarchySpec::new(3, 5).dimensions(), 31);
+    }
+
+    #[test]
+    fn parent_child_consistency() {
+        let h = HierarchySpec::new(4, 3);
+        for s in 0..h.dimensions() {
+            for c in h.children(s) {
+                assert_eq!(h.parent(c), Some(s));
+                assert_eq!(h.level_of(c), h.level_of(s) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn leaf_slots_have_no_children() {
+        let h = HierarchySpec::new(3, 4);
+        for s in h.leaf_slots() {
+            assert!(h.is_leaf_slot(s));
+            assert!(h.children(s).is_empty());
+        }
+        assert_eq!(h.leaf_slots().len(), 16);
+    }
+
+    #[test]
+    fn levels_bottom_up_covers_all_slots_once() {
+        let h = HierarchySpec::new(4, 2);
+        let mut seen: Vec<usize> = h.levels_bottom_up().into_iter().flatten().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..h.dimensions()).collect::<Vec<_>>());
+        // First group is the leaf level.
+        assert_eq!(h.levels_bottom_up()[0], h.leaf_slots());
+    }
+
+    #[test]
+    fn level_start_and_size() {
+        let h = HierarchySpec::new(3, 4);
+        assert_eq!(h.level_start(0), 0);
+        assert_eq!(h.level_start(1), 1);
+        assert_eq!(h.level_start(2), 5);
+        assert_eq!(h.level_size(2), 16);
+        assert_eq!(h.level_of(0), 0);
+        assert_eq!(h.level_of(4), 1);
+        assert_eq!(h.level_of(5), 2);
+        assert_eq!(h.level_of(20), 2);
+    }
+
+    #[test]
+    fn depth_one_single_root() {
+        let h = HierarchySpec::new(1, 7);
+        assert_eq!(h.dimensions(), 1);
+        assert!(h.is_leaf_slot(0));
+        assert_eq!(h.parent(0), None);
+    }
+}

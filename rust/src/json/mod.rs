@@ -1,0 +1,134 @@
+//! Minimal JSON (substrate — no `serde`/`serde_json` in the offline image).
+//!
+//! Two consumers:
+//! * `fl::codec` — the paper's SDFLMQ framework ships model parameters as
+//!   JSON (~30 MB per 1.8 M-param model); we reproduce that wire format
+//!   and benchmark it against a binary codec (`ablation_codec`).
+//! * `runtime::artifacts` — parses `artifacts/meta.json`.
+//!
+//! Full RFC 8259 value model with strict parsing (UTF-8, escapes,
+//! exponents), insertion-ordered objects, and a fast bulk `f32`-array
+//! path for the codec hot loop.
+
+mod parse;
+mod value;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+pub use write::{to_string, to_string_pretty};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Value) -> Value {
+        parse(&to_string(v)).expect("roundtrip parse")
+    }
+
+    #[test]
+    fn roundtrip_scalars() {
+        for v in [
+            Value::Null,
+            Value::Bool(true),
+            Value::Bool(false),
+            Value::from(0.0),
+            Value::from(-12.5),
+            Value::from(1e-9),
+            Value::from(3_000_000_000.0_f64),
+            Value::from("hello"),
+            Value::from(""),
+        ] {
+            assert_eq!(roundtrip(&v), v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_string_escapes() {
+        let s = "quote\" backslash\\ newline\n tab\t unicode\u{263A} nul\u{0001}";
+        let v = Value::from(s);
+        assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let v = Value::object(vec![
+            ("id", Value::from(7.0)),
+            ("name", Value::from("agg_0")),
+            (
+                "children",
+                Value::Array(vec![Value::from(1.0), Value::from(2.0), Value::Null]),
+            ),
+            (
+                "attrs",
+                Value::object(vec![("pspeed", Value::from(9.25)), ("ok", Value::Bool(true))]),
+            ),
+        ]);
+        assert_eq!(roundtrip(&v), v);
+    }
+
+    #[test]
+    fn parse_whitespace_and_order() {
+        let v = parse(" { \"b\" : 1 , \"a\" : [ true , null ] } ").unwrap();
+        // Insertion order preserved.
+        let obj = v.as_object().unwrap();
+        assert_eq!(obj[0].0, "b");
+        assert_eq!(obj[1].0, "a");
+    }
+
+    #[test]
+    fn parse_errors() {
+        for bad in [
+            "", "{", "}", "[1,", "[1 2]", "{\"a\"}", "{\"a\":}", "tru", "nul", "01", "1.",
+            "\"unterminated", "{\"a\":1,}", "[1]trailing", "\"bad\\q\"", "+1", "--1",
+        ] {
+            assert!(parse(bad).is_err(), "should fail: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        let v = parse("\"\\u0041\\u263A\\uD83D\\uDE00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "A\u{263A}\u{1F600}");
+    }
+
+    #[test]
+    fn f32_array_fast_path() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.5 - 7.25).collect();
+        let v = Value::from_f32_slice(&xs);
+        let text = to_string(&v);
+        let back = parse(&text).unwrap();
+        let ys = back.to_f32_vec().unwrap();
+        assert_eq!(xs.len(), ys.len());
+        for (a, b) in xs.iter().zip(&ys) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn numbers_preserve_f64_precision() {
+        let v = parse("1.7976931348623157e308").unwrap();
+        assert_eq!(v.as_f64().unwrap(), f64::MAX);
+        let v = parse("-0.000123456789012345").unwrap();
+        assert!((v.as_f64().unwrap() + 0.000123456789012345).abs() < 1e-20);
+    }
+
+    #[test]
+    fn pretty_output_reparses() {
+        let v = Value::object(vec![
+            ("x", Value::Array(vec![Value::from(1.0)])),
+            ("y", Value::object(vec![("z", Value::Null)])),
+        ]);
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn deep_nesting_depth_limit() {
+        let mut s = String::new();
+        for _ in 0..100_000 {
+            s.push('[');
+        }
+        // Must error (depth guard), not blow the stack.
+        assert!(parse(&s).is_err());
+    }
+}

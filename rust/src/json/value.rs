@@ -1,0 +1,158 @@
+//! The JSON value model: insertion-ordered objects, f64 numbers.
+
+/// A JSON document node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All JSON numbers are f64 (RFC 8259 interoperable range).
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    /// Insertion-ordered key/value pairs (SDFLMQ messages care about
+    /// neither uniqueness-violation recovery nor hash lookup speed).
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Build an object from `(&str, Value)` pairs.
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Object(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    /// Bulk construction from an `f32` slice (model-codec fast path).
+    pub fn from_f32_slice(xs: &[f32]) -> Value {
+        Value::Array(xs.iter().map(|&x| Value::Num(f64::from(x))).collect())
+    }
+
+    /// Bulk extraction into `Vec<f32>`; `None` if any element is non-numeric.
+    pub fn to_f32_vec(&self) -> Option<Vec<f32>> {
+        match self {
+            Value::Array(xs) => {
+                let mut out = Vec::with_capacity(xs.len());
+                for x in xs {
+                    out.push(x.as_f64()? as f32);
+                }
+                Some(out)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_finds_first_match() {
+        let v = Value::object(vec![("a", Value::from(1.0)), ("b", Value::from(2.0))]);
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.0));
+        assert!(v.get("c").is_none());
+    }
+
+    #[test]
+    fn as_u64_rejects_fractions_and_negatives() {
+        assert_eq!(Value::from(5.0).as_u64(), Some(5));
+        assert_eq!(Value::from(5.5).as_u64(), None);
+        assert_eq!(Value::from(-1.0).as_u64(), None);
+    }
+
+    #[test]
+    fn to_f32_vec_rejects_mixed() {
+        let v = Value::Array(vec![Value::from(1.0), Value::Null]);
+        assert!(v.to_f32_vec().is_none());
+    }
+}

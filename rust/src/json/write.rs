@@ -1,0 +1,177 @@
+//! JSON serialization: compact (wire) and pretty (meta/config files).
+
+use super::Value;
+
+/// Compact serialization — the SDFLMQ wire form.
+pub fn to_string(v: &Value) -> String {
+    // Model payloads are ~30 MB of numbers; pre-sizing avoids most regrowth.
+    let mut out = String::with_capacity(estimate(v));
+    write_value(v, &mut out);
+    out
+}
+
+/// Two-space-indented serialization for human-read files.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out
+}
+
+fn estimate(v: &Value) -> usize {
+    match v {
+        Value::Null => 4,
+        Value::Bool(_) => 5,
+        Value::Num(_) => 12,
+        Value::Str(s) => s.len() + 2,
+        Value::Array(xs) => 2 + xs.iter().map(estimate).sum::<usize>() + xs.len(),
+        Value::Object(ps) => {
+            2 + ps
+                .iter()
+                .map(|(k, v)| k.len() + 4 + estimate(v))
+                .sum::<usize>()
+        }
+    }
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_number(*n, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Array(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Value::Object(ps) => {
+            out.push('{');
+            for (i, (k, x)) in ps.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_pretty(v: &Value, indent: usize, out: &mut String) {
+    match v {
+        Value::Array(xs) if !xs.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(indent + 1, out);
+                write_pretty(x, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push(']');
+        }
+        Value::Object(ps) if !ps.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in ps.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(indent + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_pretty(x, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push('}');
+        }
+        other => write_value(other, out),
+    }
+}
+
+fn push_indent(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Shortest-roundtrip f64 formatting: rust's `{}` for f64 already emits
+/// the shortest string that parses back exactly; integers get no ".0"
+/// (matching python's json for whole floats is NOT required — our parser
+/// reads both).
+fn write_number(n: f64, out: &mut String) {
+    if n.is_finite() {
+        if n.fract() == 0.0 && n.abs() < 1e15 {
+            out.push_str(&format!("{}", n as i64));
+        } else {
+            out.push_str(&format!("{n}"));
+        }
+    } else {
+        // JSON has no NaN/Inf; SDFLMQ payloads never contain them (model
+        // params are finite) — emit null defensively.
+        out.push_str("null");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+
+    #[test]
+    fn compact_has_no_spaces() {
+        let v = Value::object(vec![("a", Value::Array(vec![Value::from(1.0)]))]);
+        assert_eq!(to_string(&v), "{\"a\":[1]}");
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(to_string(&Value::from(42.0)), "42");
+        assert_eq!(to_string(&Value::from(-3.0)), "-3");
+        assert_eq!(to_string(&Value::from(2.5)), "2.5");
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(to_string(&Value::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let v = Value::from("\u{0001}\u{001F}");
+        let s = to_string(&v);
+        assert_eq!(s, "\"\\u0001\\u001f\"");
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+}

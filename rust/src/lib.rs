@@ -1,0 +1,37 @@
+//! # repro — Flag-Swap: PSO aggregation placement for hierarchical SDFL
+//!
+//! Reproduction of *"Towards a Distributed Federated Learning Aggregation
+//! Placement using Particle Swarm Intelligence"* (Ali-Pour et al., 2025)
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the SDFL coordination plane: an MQTT-lite
+//!   pub/sub [`broker`], the SDFLMQ-style [`fl`] framework
+//!   (roles-as-topics, coordinator, agtrainer agents, round FSM), the
+//!   paper's [`pso`] optimizer and the [`placement`] strategy zoo, the
+//!   [`hierarchy`] model and its [`fitness`] (TPD) function, plus the
+//!   [`sim`]ulator that regenerates the paper's Fig. 3.
+//! * **L2/L1 (python, build-time only)** — the 1.8 M-parameter MLP and
+//!   the Pallas aggregation/SGD kernels, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from rust through [`runtime`] (PJRT).
+//!
+//! The offline build image lacks tokio/serde/clap/criterion/rand/proptest,
+//! so their narrow slices are built from scratch here: [`prng`], [`json`],
+//! [`configio`], [`metrics`], [`logging`], [`bench`] and [`proplite`]
+//! (see DESIGN.md §4).
+
+pub mod bench;
+pub mod broker;
+pub mod configio;
+pub mod data;
+pub mod fitness;
+pub mod fl;
+pub mod hierarchy;
+pub mod json;
+pub mod logging;
+pub mod metrics;
+pub mod placement;
+pub mod prng;
+pub mod proplite;
+pub mod pso;
+pub mod runtime;
+pub mod sim;

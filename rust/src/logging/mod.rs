@@ -1,0 +1,153 @@
+//! Tiny leveled logger (substrate — no `env_logger` offline).
+//!
+//! Thread-safe, monotonic-timestamped, level-filtered via `REPRO_LOG`
+//! (error|warn|info|debug|trace, default info). Used by the broker,
+//! coordinator and agents; benches set `error` to keep hot loops quiet.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Log severity (ascending verbosity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // u8::MAX == uninitialized
+static START: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<()> = Mutex::new(());
+
+fn max_level() -> u8 {
+    let cur = MAX_LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let lvl = std::env::var("REPRO_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Override the level programmatically (benches/tests).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True if `level` would be emitted (guards expensive format args).
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Core emit function — use the [`crate::log_info!`]-family macros instead.
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    let _guard = SINK.lock().unwrap();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "[{:>9.4}s {} {}] {}",
+        t.as_secs_f64(),
+        level.tag(),
+        target,
+        msg
+    );
+}
+
+/// `log_error!(target, fmt...)`
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+/// `log_warn!(target, fmt...)`
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+/// `log_info!(target, fmt...)`
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+/// `log_debug!(target, fmt...)`
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+/// `log_trace!(target, fmt...)`
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn set_level_filters() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default-ish for other tests
+    }
+}

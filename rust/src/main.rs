@@ -1,0 +1,195 @@
+//! `repro` — CLI launcher for the Flag-Swap SDFL system.
+//!
+//! ```text
+//! repro sim        [--depth D --width W --particles P --iterations N --seed S --out csv]
+//! repro fig3       [--out-dir results]           # all six Fig-3 panels
+//! repro compare    [--rounds N --time-scale X]   # Fig-4: random vs uniform vs pso
+//! repro e2e        [--rounds N]                  # end-to-end PSO training run
+//! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
+//! ```
+
+use anyhow::{anyhow, Result};
+use repro::configio::{Args, SimScenario};
+use repro::sim::{ascii_plot, run_sim};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env().map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("sim") => cmd_sim(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("broker") => cmd_broker(&args),
+        Some("worker") => cmd_worker(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand {cmd:?}\n");
+            }
+            eprintln!(
+                "usage: repro <sim|fig3|compare|e2e|broker> [flags]\n\
+                 \n\
+                 sim      one PSO placement simulation (Fig-3 style)\n\
+                 fig3     regenerate all six Fig-3 panels to CSV\n\
+                 compare  Fig-4 deployment comparison (random/uniform/pso)\n\
+                 e2e      end-to-end PSO-placed federated training\n\
+                 broker   standalone TCP pub/sub broker\n\
+                 worker   one FL client process attached to a TCP broker"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn scenario_from_args(args: &Args) -> Result<SimScenario> {
+    let mut sc = SimScenario::default();
+    if let Some(path) = args.flag("config") {
+        let doc =
+            repro::configio::TomlDoc::load(std::path::Path::new(path)).map_err(|e| anyhow!(e))?;
+        sc = SimScenario::from_toml(&doc).map_err(|e| anyhow!(e))?;
+    }
+    sc.depth = args.usize_flag("depth", sc.depth).map_err(|e| anyhow!(e))?;
+    sc.width = args.usize_flag("width", sc.width).map_err(|e| anyhow!(e))?;
+    sc.seed = args.u64_flag("seed", sc.seed).map_err(|e| anyhow!(e))?;
+    sc.pso.particles = args
+        .usize_flag("particles", sc.pso.particles)
+        .map_err(|e| anyhow!(e))?;
+    sc.pso.iterations = args
+        .usize_flag("iterations", sc.pso.iterations)
+        .map_err(|e| anyhow!(e))?;
+    Ok(sc)
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let sc = scenario_from_args(args)?;
+    println!(
+        "sim: depth={} width={} clients={} slots={} particles={} iterations={}",
+        sc.depth,
+        sc.width,
+        sc.client_count(),
+        sc.dimensions(),
+        sc.pso.particles,
+        sc.pso.iterations
+    );
+    let result = run_sim(&sc);
+    let norm = result.trace.normalized();
+    println!(
+        "{}",
+        ascii_plot(
+            "normalized TPD vs PSO iteration",
+            &[
+                ("worst", 'r', &norm.worst),
+                ("mean", 'o', &norm.mean),
+                ("best", 'g', &norm.best),
+            ],
+            72,
+            18,
+        )
+    );
+    println!(
+        "best TPD {:.4} (placement {:?}), converged={}",
+        result.best_tpd, result.best_placement, result.converged
+    );
+    if let Some(out) = args.flag("out") {
+        result.trace.write_csv(std::path::Path::new(out))?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    for (label, sc) in SimScenario::fig3_panels() {
+        let result = run_sim(&sc);
+        let path = out_dir.join(format!("fig3_{label}.csv"));
+        result.trace.normalized().write_csv(&path)?;
+        println!(
+            "panel ({label}): D={} W={} P={} clients={} → best TPD {:.4}, converged={} → {}",
+            sc.depth,
+            sc.width,
+            sc.pso.particles,
+            sc.client_count(),
+            result.best_tpd,
+            result.converged,
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
+    let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
+    let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
+    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir)
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
+    repro::sim::run_e2e(rounds)
+}
+
+/// One FL client as its own OS process, attached to a TCP broker — the
+/// multi-process deployment mode (each paper "docker container" becomes
+/// one `repro worker`).
+fn cmd_worker(args: &Args) -> Result<()> {
+    use repro::broker::TcpPubSub;
+    use repro::configio::ClientSpec;
+    use repro::data::{SynthConfig, SynthDataset};
+    use repro::fl::{ClientAgent, EmulatedClock};
+    use repro::runtime::ModelRuntime;
+    use std::sync::Arc;
+
+    let id = args.usize_flag("id", 0).map_err(|e| anyhow!(e))?;
+    let session = args.str_flag("session", "dist");
+    let broker_addr = args.str_flag("broker", "127.0.0.1:1883");
+    let speed = args.f64_flag("speed", 1.0).map_err(|e| anyhow!(e))?;
+    let mem = args.f64_flag("mem", 1.0).map_err(|e| anyhow!(e))?;
+    let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
+    let data_seed = args.u64_flag("data-seed", 1234).map_err(|e| anyhow!(e))?;
+
+    let runtime = Arc::new(ModelRuntime::load_default()?);
+    let mut clock = EmulatedClock::new(ClientSpec {
+        name: format!("worker{id}"),
+        speed_factor: speed,
+        memory_pressure: mem,
+    });
+    clock.time_scale = time_scale;
+    let data = SynthDataset::for_client(
+        SynthConfig {
+            input_dim: runtime.meta.input_dim,
+            num_classes: runtime.meta.num_classes,
+            samples_per_client: 64,
+            seed: data_seed,
+            ..SynthConfig::default()
+        },
+        id,
+    );
+    let addr: std::net::SocketAddr = broker_addr.parse().map_err(|e| anyhow!("--broker: {e}"))?;
+    let transport = TcpPubSub::connect(&addr)?;
+    // Give the server a beat to register the control subscriptions that
+    // ClientAgent::new issues before the session starts.
+    println!("worker {id} attached to {addr} (session {session})");
+    let agent = ClientAgent::new(
+        id,
+        &session,
+        clock,
+        runtime,
+        data,
+        transport,
+        std::time::Duration::from_secs(120),
+    );
+    agent.run();
+    println!("worker {id} shut down");
+    Ok(())
+}
+
+fn cmd_broker(args: &Args) -> Result<()> {
+    let addr = args.str_flag("addr", "127.0.0.1:1883");
+    let broker = repro::broker::Broker::new();
+    let server = repro::broker::TcpBrokerServer::start(&addr, broker).map_err(|e| anyhow!(e))?;
+    println!("broker listening on {}", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

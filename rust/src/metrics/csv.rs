@@ -1,0 +1,110 @@
+//! CSV emission for experiment results (`results/*.csv`), with proper
+//! quoting so plots/spreadsheets ingest them directly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    columns: usize,
+}
+
+impl CsvWriter<BufWriter<File>> {
+    /// Create `path` (parents included) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = BufWriter::new(File::create(path)?);
+        let mut w = CsvWriter {
+            out: file,
+            columns: header.len(),
+        };
+        w.write_row(header)?;
+        Ok(w)
+    }
+}
+
+impl<W: Write> CsvWriter<W> {
+    /// Wrap any writer (tests use `Vec<u8>`).
+    pub fn new(out: W, header: &[&str]) -> std::io::Result<Self> {
+        let mut w = CsvWriter {
+            out,
+            columns: header.len(),
+        };
+        w.write_row(header)?;
+        Ok(w)
+    }
+
+    /// Write one row of string fields (must match the header width).
+    pub fn write_row<S: AsRef<str>>(&mut self, fields: &[S]) -> std::io::Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.columns,
+            "csv row width {} != header width {}",
+            fields.len(),
+            self.columns
+        );
+        let mut line = String::new();
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&quote(f.as_ref()));
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes())
+    }
+
+    /// Convenience: row of f64s formatted with 6 significant decimals.
+    pub fn write_f64_row(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x:.6}")).collect();
+        self.write_row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+            w.write_row(&["1", "x,y"]).unwrap();
+            w.write_f64_row(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n1.500000,2.000000\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn width_mismatch_panics() {
+        let mut buf = Vec::new();
+        let mut w = CsvWriter::new(&mut buf, &["a", "b"]).unwrap();
+        let _ = w.write_row(&["only-one"]);
+    }
+
+    #[test]
+    fn quotes_embedded_quotes() {
+        assert_eq!(quote("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(quote("plain"), "plain");
+    }
+}

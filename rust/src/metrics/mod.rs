@@ -1,0 +1,14 @@
+//! Round/record metrics: timers, per-round recorders, CSV emission and
+//! summary statistics. This is where the paper's black-box signal comes
+//! from — the coordinator measures each FL round's wall-clock Total
+//! Processing Delay here and feeds `-TPD` to PSO as fitness.
+
+mod csv;
+mod recorder;
+mod summary;
+mod timer;
+
+pub use csv::CsvWriter;
+pub use recorder::{RoundRecord, RoundRecorder};
+pub use summary::Summary;
+pub use timer::Stopwatch;

@@ -1,0 +1,181 @@
+//! Per-round measurement records — the data behind Fig. 4 and
+//! EXPERIMENTS.md.
+
+use std::time::Duration;
+
+/// One FL round's measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    /// 0-based round index.
+    pub round: usize,
+    /// Placement strategy label ("random" | "uniform" | "pso" | ...).
+    pub strategy: String,
+    /// Wall-clock processing delay of the round (the black-box signal).
+    pub delay: Duration,
+    /// Global-model training loss at round end (NaN if not evaluated).
+    pub loss: f64,
+    /// The aggregator placement used this round (client ids per slot).
+    pub placement: Vec<usize>,
+}
+
+/// Accumulates [`RoundRecord`]s for one experiment run.
+#[derive(Debug, Default, Clone)]
+pub struct RoundRecorder {
+    records: Vec<RoundRecord>,
+}
+
+impl RoundRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Total processing time across all rounds — the paper's headline
+    /// comparison metric ("about 43% minutes faster than random ...").
+    pub fn total_delay(&self) -> Duration {
+        self.records.iter().map(|r| r.delay).sum()
+    }
+
+    /// Mean per-round delay in seconds.
+    pub fn mean_delay_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.total_delay().as_secs_f64() / self.records.len() as f64
+    }
+
+    /// Per-round delays in seconds, in round order.
+    pub fn delays_secs(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.delay.as_secs_f64()).collect()
+    }
+
+    /// Export the records as JSON-lines (one object per round) — the
+    /// machine-readable round event log consumed by analysis tooling.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::json::{to_string, Value};
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for r in &self.records {
+            let v = Value::object(vec![
+                ("round", Value::from(r.round)),
+                ("strategy", Value::from(r.strategy.as_str())),
+                ("delay_s", Value::Num(r.delay.as_secs_f64())),
+                ("loss", Value::Num(r.loss)),
+                (
+                    "placement",
+                    Value::Array(r.placement.iter().map(|&c| Value::from(c)).collect()),
+                ),
+            ]);
+            writeln!(f, "{}", to_string(&v))?;
+        }
+        f.flush()
+    }
+
+    /// First round index from which the placement never changes again
+    /// (`None` if it keeps moving) — Fig. 4's "converged after round 10".
+    pub fn convergence_round(&self) -> Option<usize> {
+        let last = &self.records.last()?.placement;
+        let mut conv = self.records.len() - 1;
+        for (i, r) in self.records.iter().enumerate().rev() {
+            if &r.placement == last {
+                conv = i;
+            } else {
+                break;
+            }
+        }
+        // "Never changed" counts as converged at 0; "changed on the last
+        // round" means not converged.
+        if conv == self.records.len() - 1 && self.records.len() > 1 {
+            None
+        } else {
+            Some(conv)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, secs: f64, placement: Vec<usize>) -> RoundRecord {
+        RoundRecord {
+            round,
+            strategy: "test".into(),
+            delay: Duration::from_secs_f64(secs),
+            loss: f64::NAN,
+            placement,
+        }
+    }
+
+    #[test]
+    fn totals_and_means() {
+        let mut r = RoundRecorder::new();
+        r.push(rec(0, 1.0, vec![0]));
+        r.push(rec(1, 3.0, vec![0]));
+        assert!((r.total_delay().as_secs_f64() - 4.0).abs() < 1e-9);
+        assert!((r.mean_delay_secs() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn convergence_detected() {
+        let mut r = RoundRecorder::new();
+        r.push(rec(0, 1.0, vec![1, 2]));
+        r.push(rec(1, 1.0, vec![2, 1]));
+        r.push(rec(2, 1.0, vec![3, 1]));
+        r.push(rec(3, 1.0, vec![3, 1]));
+        r.push(rec(4, 1.0, vec![3, 1]));
+        assert_eq!(r.convergence_round(), Some(2));
+    }
+
+    #[test]
+    fn no_convergence_when_last_changes() {
+        let mut r = RoundRecorder::new();
+        r.push(rec(0, 1.0, vec![1]));
+        r.push(rec(1, 1.0, vec![2]));
+        assert_eq!(r.convergence_round(), None);
+    }
+
+    #[test]
+    fn jsonl_export_parses_back() {
+        let mut r = RoundRecorder::new();
+        r.push(rec(0, 1.5, vec![1, 2]));
+        r.push(rec(1, 2.5, vec![2, 1]));
+        let path = std::env::temp_dir().join("repro_recorder_test.jsonl");
+        r.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let v = crate::json::parse(line).unwrap();
+            assert_eq!(v.get("round").unwrap().as_usize(), Some(i));
+            assert!(v.get("delay_s").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(v.get("placement").unwrap().as_array().unwrap().len(), 2);
+        }
+    }
+
+    #[test]
+    fn stable_from_start() {
+        let mut r = RoundRecorder::new();
+        r.push(rec(0, 1.0, vec![5]));
+        r.push(rec(1, 1.0, vec![5]));
+        assert_eq!(r.convergence_round(), Some(0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Summary statistics over a series of measurements (bench reporting).
+
+/// Order statistics + moments for a sample of f64 measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from a sample (empty sample yields all-zero summary).
+    pub fn from(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p90: percentile(&sorted, 0.90),
+            p99: percentile(&sorted, 0.99),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// One-line human rendering used by the bench harness.
+    pub fn render(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.4}{u} std={:.4}{u} min={:.4}{u} p50={:.4}{u} p90={:.4}{u} p99={:.4}{u} max={:.4}{u}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p99, self.max,
+            u = unit
+        )
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[idx.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.p50, 2.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from(&[7.5]);
+        assert_eq!(s.p50, 7.5);
+        assert_eq!(s.p99, 7.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let s = Summary::from(&xs);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+}

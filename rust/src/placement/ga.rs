@@ -1,0 +1,245 @@
+//! Genetic-algorithm placement baseline (ablation A2).
+//!
+//! The paper's §II motivates PSO over GA via convergence speed
+//! ("GA yields premature convergence" [23]); this implementation lets us
+//! measure that claim under the identical black-box budget: a
+//! steady-state GA that evaluates exactly one individual per FL round.
+//!
+//! Representation matches the PSO particle: a vector of distinct client
+//! ids (one per slot). Operators: tournament selection, uniform
+//! crossover with increment-until-unique repair (the same repair rule
+//! the paper's PSO uses), and random-reset mutation.
+
+use super::PlacementStrategy;
+use crate::prng::{Pcg32, Rng};
+
+/// GA hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaConfig {
+    /// Population size (matched to the paper's PSO swarm: 10).
+    pub population: usize,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+    /// Elite individuals copied unchanged each generation.
+    pub elitism: usize,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 10,
+            tournament: 3,
+            mutation_rate: 0.1,
+            elitism: 2,
+        }
+    }
+}
+
+struct Individual {
+    genome: Vec<usize>,
+    /// Delay (lower better); +inf until evaluated.
+    delay: f64,
+}
+
+/// Steady-state GA under the black-box protocol.
+pub struct GaPlacement {
+    cfg: GaConfig,
+    dims: usize,
+    client_count: usize,
+    population: Vec<Individual>,
+    /// Next individual awaiting evaluation.
+    cursor: usize,
+    best: Vec<usize>,
+    best_delay: f64,
+    rng: Pcg32,
+}
+
+impl GaPlacement {
+    pub fn new(dims: usize, client_count: usize, cfg: GaConfig, mut rng: Pcg32) -> Self {
+        assert!(client_count >= dims);
+        let population = (0..cfg.population)
+            .map(|_| Individual {
+                genome: rng.sample_distinct(client_count, dims),
+                delay: f64::INFINITY,
+            })
+            .collect::<Vec<_>>();
+        let best = population[0].genome.clone();
+        GaPlacement {
+            cfg,
+            dims,
+            client_count,
+            population,
+            cursor: 0,
+            best,
+            best_delay: f64::INFINITY,
+            rng,
+        }
+    }
+
+    /// Best placement observed so far.
+    pub fn best(&self) -> &[usize] {
+        &self.best
+    }
+
+    pub fn best_delay(&self) -> f64 {
+        self.best_delay
+    }
+
+    fn tournament_pick(&mut self) -> usize {
+        let mut winner = self.rng.gen_range(self.population.len() as u64) as usize;
+        for _ in 1..self.cfg.tournament {
+            let challenger = self.rng.gen_range(self.population.len() as u64) as usize;
+            if self.population[challenger].delay < self.population[winner].delay {
+                winner = challenger;
+            }
+        }
+        winner
+    }
+
+    /// Uniform crossover + repair: child gene comes from either parent;
+    /// duplicates resolved by incrementing until unique (the paper's
+    /// repair rule, applied uniformly across optimizers for fairness).
+    fn crossover(&mut self, a: usize, b: usize) -> Vec<usize> {
+        let mut taken = vec![false; self.client_count];
+        let mut child = Vec::with_capacity(self.dims);
+        for d in 0..self.dims {
+            let gene = if self.rng.next_f64() < 0.5 {
+                self.population[a].genome[d]
+            } else {
+                self.population[b].genome[d]
+            };
+            let mut id = gene;
+            while taken[id] {
+                id = (id + 1) % self.client_count;
+            }
+            taken[id] = true;
+            child.push(id);
+        }
+        child
+    }
+
+    fn mutate(&mut self, genome: &mut [usize]) {
+        for d in 0..genome.len() {
+            if self.rng.next_f64() < self.cfg.mutation_rate {
+                let mut id = self.rng.gen_range(self.client_count as u64) as usize;
+                while genome.contains(&id) {
+                    id = (id + 1) % self.client_count;
+                }
+                genome[d] = id;
+            }
+        }
+    }
+
+    /// Breed the next generation once every individual has a delay.
+    fn next_generation(&mut self) {
+        let mut order: Vec<usize> = (0..self.population.len()).collect();
+        order.sort_by(|&i, &j| {
+            self.population[i]
+                .delay
+                .partial_cmp(&self.population[j].delay)
+                .unwrap()
+        });
+        let mut next: Vec<Individual> = Vec::with_capacity(self.population.len());
+        for &i in order.iter().take(self.cfg.elitism) {
+            next.push(Individual {
+                genome: self.population[i].genome.clone(),
+                delay: self.population[i].delay, // elites keep their score
+            });
+        }
+        while next.len() < self.population.len() {
+            let a = self.tournament_pick();
+            let b = self.tournament_pick();
+            let mut child = self.crossover(a, b);
+            self.mutate(&mut child);
+            next.push(Individual {
+                genome: child,
+                delay: f64::INFINITY,
+            });
+        }
+        self.population = next;
+        // Elites keep scores; evaluation cursor resumes at the first
+        // unevaluated child.
+        self.cursor = self.cfg.elitism.min(self.population.len() - 1);
+    }
+}
+
+impl PlacementStrategy for GaPlacement {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn propose(&mut self, _round: usize) -> Vec<usize> {
+        self.population[self.cursor].genome.clone()
+    }
+
+    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
+        debug_assert_eq!(placement, self.population[self.cursor].genome.as_slice());
+        self.population[self.cursor].delay = delay_secs;
+        if delay_secs < self.best_delay {
+            self.best_delay = delay_secs;
+            self.best = self.population[self.cursor].genome.clone();
+        }
+        // Advance to the next unevaluated individual, breeding a new
+        // generation when the population is fully scored.
+        self.cursor += 1;
+        if self.cursor >= self.population.len() {
+            self.next_generation();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improves_on_toy_landscape() {
+        let mut ga = GaPlacement::new(4, 25, GaConfig::default(), Pcg32::seed_from_u64(1));
+        let mut first_window = 0.0;
+        let mut last_window = 0.0;
+        for round in 0..200 {
+            let p = ga.propose(round);
+            let d = p.iter().sum::<usize>() as f64 + 1.0;
+            if round < 20 {
+                first_window += d;
+            }
+            if round >= 180 {
+                last_window += d;
+            }
+            ga.feedback(&p, d);
+        }
+        assert!(
+            last_window < first_window,
+            "GA failed to improve: first {first_window}, last {last_window}"
+        );
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut ga = GaPlacement::new(3, 12, GaConfig::default(), Pcg32::seed_from_u64(2));
+        let mut min_seen = f64::INFINITY;
+        for round in 0..80 {
+            let p = ga.propose(round);
+            let d = p.iter().map(|&c| (c * c) as f64).sum::<f64>();
+            min_seen = min_seen.min(d);
+            ga.feedback(&p, d);
+        }
+        assert!((ga.best_delay() - min_seen).abs() < 1e-9);
+    }
+
+    #[test]
+    fn genomes_stay_valid_across_generations() {
+        let mut ga = GaPlacement::new(5, 9, GaConfig::default(), Pcg32::seed_from_u64(3));
+        for round in 0..150 {
+            let p = ga.propose(round);
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), 5, "duplicate genes: {p:?}");
+            assert!(p.iter().all(|&c| c < 9));
+            ga.feedback(&p, 1.0 + round as f64 % 7.0);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Aggregation placement strategies (paper §IV.C + related-work
+//! baselines).
+//!
+//! Every strategy implements the black-box [`PlacementStrategy`]
+//! interface: propose a placement for the next round, receive the
+//! measured round delay afterwards. The paper compares:
+//! * [`RandomPlacement`] — SDFLMQ's built-in random strategy,
+//! * [`RoundRobinPlacement`] — SDFLMQ's uniform round-robin strategy,
+//! * [`PsoPlacement`] — Flag-Swap (the contribution).
+//!
+//! Two additional black-box meta-heuristics back the §II/§V claims
+//! (ablation A2): [`GaPlacement`] (genetic algorithm) and
+//! [`SaPlacement`] (simulated annealing).
+
+mod adaptive;
+mod ga;
+mod pso_placement;
+mod random;
+mod round_robin;
+mod sa;
+mod tabu;
+
+pub use adaptive::AdaptivePsoPlacement;
+pub use ga::{GaConfig, GaPlacement};
+pub use pso_placement::PsoPlacement;
+pub use random::RandomPlacement;
+pub use round_robin::RoundRobinPlacement;
+pub use sa::{SaConfig, SaPlacement};
+pub use tabu::{TabuConfig, TabuPlacement};
+
+/// A black-box placement optimizer: proposes aggregator placements and
+/// learns only from the measured round delay (never from client
+/// internals — the paper's privacy constraint).
+pub trait PlacementStrategy: Send {
+    /// Strategy label used in CSV output and plots.
+    fn name(&self) -> &'static str;
+
+    /// Placement for the next round: `dims` distinct client ids in BFT
+    /// slot order.
+    fn propose(&mut self, round: usize) -> Vec<usize>;
+
+    /// Black-box feedback: the wall-clock delay of the round that ran
+    /// `placement`. Baselines ignore it.
+    fn feedback(&mut self, placement: &[usize], delay_secs: f64);
+}
+
+/// Shared helper: validate a proposal (distinct ids within range).
+pub fn assert_valid_placement(placement: &[usize], dims: usize, client_count: usize) {
+    assert_eq!(placement.len(), dims, "placement has wrong arity");
+    let mut seen = vec![false; client_count];
+    for &c in placement {
+        assert!(c < client_count, "client id {c} out of range");
+        assert!(!std::mem::replace(&mut seen[c], true), "duplicate client {c}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+    use crate::pso::PsoConfig;
+
+    /// All strategies must emit valid placements for many rounds.
+    #[test]
+    fn all_strategies_emit_valid_placements() {
+        let dims = 3;
+        let cc = 10;
+        let mk: Vec<Box<dyn PlacementStrategy>> = vec![
+            Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(1))),
+            Box::new(RoundRobinPlacement::new(dims, cc)),
+            Box::new(PsoPlacement::new(
+                dims,
+                cc,
+                PsoConfig::paper(),
+                Pcg32::seed_from_u64(2),
+            )),
+            Box::new(GaPlacement::new(
+                dims,
+                cc,
+                GaConfig::default(),
+                Pcg32::seed_from_u64(3),
+            )),
+            Box::new(SaPlacement::new(
+                dims,
+                cc,
+                SaConfig::default(),
+                Pcg32::seed_from_u64(4),
+            )),
+        ];
+        for mut s in mk {
+            for round in 0..100 {
+                let p = s.propose(round);
+                assert_valid_placement(&p, dims, cc);
+                // Toy delay: favor low ids.
+                let d = p.iter().sum::<usize>() as f64 + 0.5;
+                s.feedback(&p, d);
+            }
+        }
+    }
+
+    /// Black-box optimizers should, on average, beat random on the toy
+    /// landscape after enough rounds.
+    #[test]
+    fn optimizers_beat_random_on_toy_landscape() {
+        let dims = 4;
+        let cc = 20;
+        let run = |mut s: Box<dyn PlacementStrategy>| -> f64 {
+            let mut total_late = 0.0;
+            for round in 0..120 {
+                let p = s.propose(round);
+                let d = p.iter().sum::<usize>() as f64 + 1.0;
+                if round >= 60 {
+                    total_late += d;
+                }
+                s.feedback(&p, d);
+            }
+            total_late / 60.0
+        };
+        let rand_avg = run(Box::new(RandomPlacement::new(
+            dims,
+            cc,
+            Pcg32::seed_from_u64(10),
+        )));
+        let pso_avg = run(Box::new(PsoPlacement::new(
+            dims,
+            cc,
+            PsoConfig::paper(),
+            Pcg32::seed_from_u64(11),
+        )));
+        let ga_avg = run(Box::new(GaPlacement::new(
+            dims,
+            cc,
+            GaConfig::default(),
+            Pcg32::seed_from_u64(12),
+        )));
+        let sa_avg = run(Box::new(SaPlacement::new(
+            dims,
+            cc,
+            SaConfig::default(),
+            Pcg32::seed_from_u64(13),
+        )));
+        assert!(pso_avg < rand_avg, "pso {pso_avg} !< random {rand_avg}");
+        assert!(ga_avg < rand_avg, "ga {ga_avg} !< random {rand_avg}");
+        assert!(sa_avg < rand_avg, "sa {sa_avg} !< random {rand_avg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate client")]
+    fn validator_catches_duplicates() {
+        assert_valid_placement(&[1, 1, 2], 3, 5);
+    }
+}

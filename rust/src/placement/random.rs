@@ -1,0 +1,63 @@
+//! Random placement — SDFLMQ's built-in baseline (paper §IV.C):
+//! every round draws a fresh random set of aggregators.
+
+use super::PlacementStrategy;
+use crate::prng::{Pcg32, Rng};
+
+/// Uniformly random distinct aggregator assignment per round.
+pub struct RandomPlacement {
+    dims: usize,
+    client_count: usize,
+    rng: Pcg32,
+}
+
+impl RandomPlacement {
+    pub fn new(dims: usize, client_count: usize, rng: Pcg32) -> Self {
+        assert!(client_count >= dims);
+        RandomPlacement {
+            dims,
+            client_count,
+            rng,
+        }
+    }
+}
+
+impl PlacementStrategy for RandomPlacement {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, _round: usize) -> Vec<usize> {
+        self.rng.sample_distinct(self.client_count, self.dims)
+    }
+
+    fn feedback(&mut self, _placement: &[usize], _delay_secs: f64) {
+        // Black-box baseline: learns nothing.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proposals_vary_between_rounds() {
+        let mut s = RandomPlacement::new(3, 30, Pcg32::seed_from_u64(1));
+        let a = s.propose(0);
+        let b = s.propose(1);
+        let c = s.propose(2);
+        assert!(a != b || b != c, "three identical random draws");
+    }
+
+    #[test]
+    fn covers_population_over_many_rounds() {
+        let mut s = RandomPlacement::new(2, 10, Pcg32::seed_from_u64(2));
+        let mut seen = vec![false; 10];
+        for r in 0..200 {
+            for c in s.propose(r) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "some client never sampled: {seen:?}");
+    }
+}

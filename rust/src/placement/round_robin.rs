@@ -1,0 +1,74 @@
+//! Uniform round-robin placement — SDFLMQ's built-in "uniform" baseline
+//! (paper §IV.C): aggregator duty rotates through the population so
+//! every client serves equally often.
+
+use super::PlacementStrategy;
+
+/// Rotating window of `dims` consecutive client ids.
+pub struct RoundRobinPlacement {
+    dims: usize,
+    client_count: usize,
+}
+
+impl RoundRobinPlacement {
+    pub fn new(dims: usize, client_count: usize) -> Self {
+        assert!(client_count >= dims);
+        RoundRobinPlacement { dims, client_count }
+    }
+}
+
+impl PlacementStrategy for RoundRobinPlacement {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn propose(&mut self, round: usize) -> Vec<usize> {
+        // Window advances by `dims` each round so the duty cycle is
+        // uniform: with cc=10, dims=3 → {0,1,2}, {3,4,5}, {6,7,8},
+        // {9,0,1}, ... Consecutive ids are always distinct (dims ≤ cc).
+        let start = (round * self.dims) % self.client_count;
+        (0..self.dims)
+            .map(|i| (start + i) % self.client_count)
+            .collect()
+    }
+
+    fn feedback(&mut self, _placement: &[usize], _delay_secs: f64) {
+        // Deterministic baseline: learns nothing.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotates_through_population() {
+        let mut s = RoundRobinPlacement::new(3, 10);
+        assert_eq!(s.propose(0), vec![0, 1, 2]);
+        assert_eq!(s.propose(1), vec![3, 4, 5]);
+        assert_eq!(s.propose(2), vec![6, 7, 8]);
+        assert_eq!(s.propose(3), vec![9, 0, 1]);
+    }
+
+    #[test]
+    fn duty_is_uniform_over_full_cycle() {
+        let mut s = RoundRobinPlacement::new(2, 8);
+        let mut count = vec![0usize; 8];
+        for r in 0..8 {
+            for c in s.propose(r) {
+                count[c] += 1;
+            }
+        }
+        // 8 rounds × 2 slots = 16 assignments over 8 clients = 2 each.
+        assert!(count.iter().all(|&c| c == 2), "{count:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = RoundRobinPlacement::new(4, 11);
+        let mut b = RoundRobinPlacement::new(4, 11);
+        for r in 0..30 {
+            assert_eq!(a.propose(r), b.propose(r));
+        }
+    }
+}

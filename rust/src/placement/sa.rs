@@ -1,0 +1,180 @@
+//! Simulated-annealing placement baseline (ablation A2).
+//!
+//! Single-state black-box search under the same one-evaluation-per-round
+//! protocol: propose a neighbour of the current placement (swap one slot
+//! to a new client, or swap two slots), accept per Metropolis with a
+//! geometrically cooling temperature.
+
+use super::PlacementStrategy;
+use crate::prng::{Pcg32, Rng};
+
+/// SA hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SaConfig {
+    /// Initial temperature, in delay units.
+    pub t0: f64,
+    /// Geometric cooling factor per round.
+    pub cooling: f64,
+    /// Minimum temperature floor.
+    pub t_min: f64,
+}
+
+impl Default for SaConfig {
+    fn default() -> Self {
+        SaConfig {
+            t0: 2.0,
+            cooling: 0.95,
+            t_min: 1e-3,
+        }
+    }
+}
+
+/// Metropolis search over placements.
+pub struct SaPlacement {
+    cfg: SaConfig,
+    dims: usize,
+    client_count: usize,
+    current: Vec<usize>,
+    current_delay: f64,
+    candidate: Vec<usize>,
+    best: Vec<usize>,
+    best_delay: f64,
+    temperature: f64,
+    rng: Pcg32,
+}
+
+impl SaPlacement {
+    pub fn new(dims: usize, client_count: usize, cfg: SaConfig, mut rng: Pcg32) -> Self {
+        assert!(client_count >= dims);
+        let current = rng.sample_distinct(client_count, dims);
+        SaPlacement {
+            cfg,
+            dims,
+            client_count,
+            candidate: current.clone(),
+            best: current.clone(),
+            current,
+            current_delay: f64::INFINITY,
+            best_delay: f64::INFINITY,
+            temperature: cfg.t0,
+            rng,
+        }
+    }
+
+    pub fn best(&self) -> &[usize] {
+        &self.best
+    }
+
+    pub fn best_delay(&self) -> f64 {
+        self.best_delay
+    }
+
+    /// Neighbour move: 50% replace one slot's client with an unused one,
+    /// 50% swap two slots (changes which cluster each client leads).
+    fn neighbour(&mut self) -> Vec<usize> {
+        let mut n = self.current.clone();
+        if self.dims >= 2 && self.rng.next_f64() < 0.5 {
+            let a = self.rng.gen_range(self.dims as u64) as usize;
+            let mut b = self.rng.gen_range(self.dims as u64) as usize;
+            while b == a {
+                b = self.rng.gen_range(self.dims as u64) as usize;
+            }
+            n.swap(a, b);
+        } else {
+            let slot = self.rng.gen_range(self.dims as u64) as usize;
+            let mut id = self.rng.gen_range(self.client_count as u64) as usize;
+            while n.contains(&id) {
+                id = (id + 1) % self.client_count;
+            }
+            n[slot] = id;
+        }
+        n
+    }
+}
+
+impl PlacementStrategy for SaPlacement {
+    fn name(&self) -> &'static str {
+        "sa"
+    }
+
+    fn propose(&mut self, round: usize) -> Vec<usize> {
+        if round == 0 || self.current_delay.is_infinite() {
+            // First evaluation scores the initial state.
+            self.candidate = self.current.clone();
+        } else {
+            self.candidate = self.neighbour();
+        }
+        self.candidate.clone()
+    }
+
+    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
+        debug_assert_eq!(placement, self.candidate.as_slice());
+        if delay_secs < self.best_delay {
+            self.best_delay = delay_secs;
+            self.best = placement.to_vec();
+        }
+        let accept = if delay_secs <= self.current_delay {
+            true
+        } else {
+            let d = delay_secs - self.current_delay;
+            self.rng.next_f64() < (-d / self.temperature.max(self.cfg.t_min)).exp()
+        };
+        if accept {
+            self.current = placement.to_vec();
+            self.current_delay = delay_secs;
+        }
+        self.temperature = (self.temperature * self.cfg.cooling).max(self.cfg.t_min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improves_on_toy_landscape() {
+        let mut sa = SaPlacement::new(4, 25, SaConfig::default(), Pcg32::seed_from_u64(1));
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for round in 0..200 {
+            let p = sa.propose(round);
+            let d = p.iter().sum::<usize>() as f64 + 1.0;
+            if round < 20 {
+                early += d;
+            }
+            if round >= 180 {
+                late += d;
+            }
+            sa.feedback(&p, d);
+        }
+        assert!(late < early, "SA failed to improve: early {early}, late {late}");
+    }
+
+    #[test]
+    fn temperature_cools_and_floors() {
+        let cfg = SaConfig {
+            t0: 1.0,
+            cooling: 0.5,
+            t_min: 0.1,
+        };
+        let mut sa = SaPlacement::new(2, 6, cfg, Pcg32::seed_from_u64(2));
+        for round in 0..30 {
+            let p = sa.propose(round);
+            sa.feedback(&p, 1.0);
+        }
+        assert!((sa.temperature - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proposals_always_distinct_ids() {
+        let mut sa = SaPlacement::new(3, 7, SaConfig::default(), Pcg32::seed_from_u64(3));
+        for round in 0..100 {
+            let p = sa.propose(round);
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), 3);
+            sa.feedback(&p, (round % 5) as f64);
+        }
+    }
+}

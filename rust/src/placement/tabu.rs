@@ -1,0 +1,246 @@
+//! Tabu-search placement baseline.
+//!
+//! The paper's related work (§V, [9]) uses a Tabu Search-based Placement
+//! (TSP) for edge-server placement in SDFL; this provides the analogous
+//! black-box comparator under our one-evaluation-per-round protocol:
+//! steepest-descent neighbour moves with a recency-based tabu list and
+//! aspiration (a tabu move is allowed if it beats the global best).
+
+use super::PlacementStrategy;
+use crate::prng::{Pcg32, Rng};
+use std::collections::VecDeque;
+
+/// Tabu-search hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TabuConfig {
+    /// Tabu tenure: how many rounds a reversed move stays forbidden.
+    pub tenure: usize,
+    /// Candidate neighbours generated per accepted move. Because the
+    /// black-box protocol yields ONE evaluation per round, candidates
+    /// are evaluated one-per-round and the best non-tabu candidate of
+    /// each batch is accepted.
+    pub candidates: usize,
+}
+
+impl Default for TabuConfig {
+    fn default() -> Self {
+        TabuConfig {
+            tenure: 12,
+            candidates: 6,
+        }
+    }
+}
+
+/// A move: slot index + the client id placed there.
+type Move = (usize, usize);
+
+/// Steepest-descent tabu search over placements.
+pub struct TabuPlacement {
+    cfg: TabuConfig,
+    dims: usize,
+    client_count: usize,
+    current: Vec<usize>,
+    /// Candidate batch currently being evaluated, with their delays.
+    batch: Vec<(Vec<usize>, Move, f64)>,
+    /// Index of the candidate awaiting evaluation.
+    cursor: usize,
+    tabu: VecDeque<Move>,
+    best: Vec<usize>,
+    best_delay: f64,
+    rng: Pcg32,
+}
+
+impl TabuPlacement {
+    pub fn new(dims: usize, client_count: usize, cfg: TabuConfig, mut rng: Pcg32) -> Self {
+        assert!(client_count >= dims);
+        let current = rng.sample_distinct(client_count, dims);
+        TabuPlacement {
+            cfg,
+            dims,
+            client_count,
+            best: current.clone(),
+            current,
+            batch: Vec::new(),
+            cursor: 0,
+            tabu: VecDeque::new(),
+            best_delay: f64::INFINITY,
+            rng,
+        }
+    }
+
+    pub fn best(&self) -> &[usize] {
+        &self.best
+    }
+
+    pub fn best_delay(&self) -> f64 {
+        self.best_delay
+    }
+
+    fn is_tabu(&self, mv: &Move) -> bool {
+        self.tabu.contains(mv)
+    }
+
+    fn push_tabu(&mut self, mv: Move) {
+        self.tabu.push_back(mv);
+        while self.tabu.len() > self.cfg.tenure {
+            self.tabu.pop_front();
+        }
+    }
+
+    /// Generate the next batch of neighbour candidates.
+    fn refill_batch(&mut self) {
+        self.batch.clear();
+        self.cursor = 0;
+        let mut guard = 0;
+        while self.batch.len() < self.cfg.candidates && guard < self.cfg.candidates * 10 {
+            guard += 1;
+            let slot = self.rng.gen_range(self.dims as u64) as usize;
+            let mut id = self.rng.gen_range(self.client_count as u64) as usize;
+            while self.current.contains(&id) {
+                id = (id + 1) % self.client_count;
+            }
+            let mv: Move = (slot, id);
+            if self.is_tabu(&mv) {
+                continue;
+            }
+            let mut cand = self.current.clone();
+            cand[slot] = id;
+            self.batch.push((cand, mv, f64::INFINITY));
+        }
+        if self.batch.is_empty() {
+            // Everything tabu (tiny spaces): fall back to a random restart.
+            let cand = self.rng.sample_distinct(self.client_count, self.dims);
+            self.batch.push((cand, (0, 0), f64::INFINITY));
+        }
+    }
+
+    /// Accept the best candidate of the evaluated batch.
+    fn accept_best(&mut self) {
+        let (idx, _) = self
+            .batch
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.2.partial_cmp(&b.2).unwrap())
+            .map(|(i, c)| (i, c.2))
+            .unwrap();
+        let (cand, mv, delay) = self.batch[idx].clone();
+        // Reverse move (slot back to its old occupant) becomes tabu.
+        let reverse: Move = (mv.0, self.current[mv.0]);
+        self.push_tabu(reverse);
+        self.current = cand;
+        if delay < self.best_delay {
+            self.best_delay = delay;
+            self.best = self.current.clone();
+        }
+        self.refill_batch();
+    }
+}
+
+impl PlacementStrategy for TabuPlacement {
+    fn name(&self) -> &'static str {
+        "tabu"
+    }
+
+    fn propose(&mut self, _round: usize) -> Vec<usize> {
+        if self.batch.is_empty() {
+            // First call evaluates the initial state, then batches begin.
+            return self.current.clone();
+        }
+        self.batch[self.cursor].0.clone()
+    }
+
+    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
+        if self.batch.is_empty() {
+            // Initial state evaluated.
+            debug_assert_eq!(placement, self.current.as_slice());
+            self.best_delay = delay_secs;
+            self.best = self.current.clone();
+            self.refill_batch();
+            return;
+        }
+        debug_assert_eq!(placement, self.batch[self.cursor].0.as_slice());
+        self.batch[self.cursor].2 = delay_secs;
+        // Aspiration: accept immediately if it beats the global best.
+        if delay_secs < self.best_delay {
+            self.accept_best();
+            return;
+        }
+        self.cursor += 1;
+        if self.cursor >= self.batch.len() {
+            self.accept_best();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(pos: &[usize]) -> f64 {
+        pos.chunks(2)
+            .map(|l| *l.iter().max().unwrap() as f64)
+            .sum::<f64>()
+            + 1.0
+    }
+
+    #[test]
+    fn improves_on_toy_landscape() {
+        let mut t = TabuPlacement::new(4, 25, TabuConfig::default(), Pcg32::seed_from_u64(1));
+        let mut early = 0.0;
+        let mut late = 0.0;
+        for round in 0..300 {
+            let p = t.propose(round);
+            let d = toy(&p);
+            if round < 30 {
+                early += d;
+            }
+            if round >= 270 {
+                late += d;
+            }
+            t.feedback(&p, d);
+        }
+        assert!(late < early, "tabu failed to improve: early {early}, late {late}");
+        assert!(t.best_delay() < early / 30.0);
+    }
+
+    #[test]
+    fn proposals_always_valid() {
+        let mut t = TabuPlacement::new(3, 8, TabuConfig::default(), Pcg32::seed_from_u64(2));
+        for round in 0..200 {
+            let p = t.propose(round);
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), 3, "{p:?}");
+            assert!(p.iter().all(|&c| c < 8));
+            t.feedback(&p, (round % 9) as f64 + 0.5);
+        }
+    }
+
+    #[test]
+    fn tabu_list_bounded_by_tenure() {
+        let cfg = TabuConfig {
+            tenure: 4,
+            candidates: 3,
+        };
+        let mut t = TabuPlacement::new(3, 10, cfg, Pcg32::seed_from_u64(3));
+        for round in 0..100 {
+            let p = t.propose(round);
+            t.feedback(&p, toy(&p));
+        }
+        assert!(t.tabu.len() <= 4);
+    }
+
+    #[test]
+    fn best_tracks_minimum_observed() {
+        let mut t = TabuPlacement::new(2, 12, TabuConfig::default(), Pcg32::seed_from_u64(4));
+        let mut min = f64::INFINITY;
+        for round in 0..120 {
+            let p = t.propose(round);
+            let d = toy(&p);
+            min = min.min(d);
+            t.feedback(&p, d);
+        }
+        assert!((t.best_delay() - min).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,146 @@
+//! Deterministic pseudo-random number generation (substrate).
+//!
+//! The offline crate set has no `rand`, so this module provides the two
+//! generators the system needs:
+//!
+//! * [`SplitMix64`] — seeding / state expansion (Steele et al., 2014).
+//! * [`Pcg32`] — the workhorse stream generator (O'Neill, 2014), used by
+//!   the PSO optimizer (`r1`, `r2` in Eq. 2 of the paper), the placement
+//!   baselines, the simulator's client-attribute sampling and the
+//!   synthetic dataset generator.
+//!
+//! Everything downstream takes an explicit generator so simulation runs,
+//! tests and benches are reproducible from a single seed.
+
+mod pcg32;
+mod splitmix64;
+
+pub use pcg32::Pcg32;
+pub use splitmix64::SplitMix64;
+
+/// Minimal RNG interface shared by both generators.
+pub trait Rng {
+    /// Next raw 32 bits.
+    fn next_u32(&mut self) -> u32;
+
+    /// Next raw 64 bits (two 32-bit draws by default).
+    fn next_u64(&mut self) -> u64 {
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
+    }
+
+    /// Uniform float in `[0, 1)` with 24 bits of mantissa entropy.
+    fn next_f64(&mut self) -> f64 {
+        f64::from(self.next_u32() >> 8) / f64::from(1u32 << 24)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift reduction
+    /// (unbiased enough for simulation purposes; exact debiasing loop).
+    fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        // Rejection-free path for powers of two.
+        if n.is_power_of_two() {
+            return self.next_u64() & (n - 1);
+        }
+        // Widening multiply with rejection to remove modulo bias.
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        let mut pool: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_range((n - i) as u64) as usize;
+            pool.swap(i, j);
+        }
+        pool.truncate(k);
+        pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Pcg32::seed_from_u64(1);
+        for n in [1u64, 2, 3, 7, 10, 1000] {
+            for _ in 0..200 {
+                assert!(rng.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        for _ in 0..1000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        for _ in 0..1000 {
+            let x = rng.uniform(5.0, 15.0);
+            assert!((5.0..15.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::seed_from_u64(4);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_unique_and_in_range() {
+        let mut rng = Pcg32::seed_from_u64(5);
+        let s = rng.sample_distinct(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn gen_range_roughly_uniform() {
+        let mut rng = Pcg32::seed_from_u64(6);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[rng.gen_range(10) as usize] += 1;
+        }
+        for c in counts {
+            // Each bin expects 10k; allow ±5%.
+            assert!((9_500..10_500).contains(&c), "counts={counts:?}");
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! PCG32 (XSH-RR 64/32) — O'Neill 2014. Small, fast, statistically solid;
+//! the workhorse generator behind PSO's stochastic terms, the baselines
+//! and the simulator.
+
+use super::{Rng, SplitMix64};
+
+const MULTIPLIER: u64 = 6_364_136_223_846_793_005;
+
+/// PCG32 state (64-bit state + odd stream increment).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create from explicit state/stream values (PCG reference `pcg32_srandom`).
+    pub fn new(initstate: u64, initseq: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (initseq << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(initstate);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive state and stream from one 64-bit seed via SplitMix64.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = sm.next();
+        let i = sm.next();
+        Self::new(s, i)
+    }
+
+    /// Split off an independent child stream (used to give every client /
+    /// particle / bench its own reproducible randomness).
+    pub fn split(&mut self) -> Self {
+        let s = self.next_u64();
+        let i = self.next_u64();
+        Self::new(s, i)
+    }
+}
+
+impl Rng for Pcg32 {
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(MULTIPLIER).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vectors() {
+        // First outputs of the PCG reference implementation with
+        // pcg32_srandom(42, 54).
+        let mut rng = Pcg32::new(42, 54);
+        let expected: [u32; 6] = [
+            0xa15c_02b7,
+            0x7b47_f409,
+            0xba1d_3330,
+            0x83d2_f293,
+            0xbfa4_784b,
+            0xcbed_606e,
+        ];
+        for e in expected {
+            assert_eq!(rng.next_u32(), e);
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg32::seed_from_u64(7);
+        let mut b = Pcg32::seed_from_u64(7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut root = Pcg32::seed_from_u64(9);
+        let mut c1 = root.split();
+        let mut c2 = root.split();
+        let collisions = (0..256).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(collisions < 3);
+    }
+}

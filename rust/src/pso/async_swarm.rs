@@ -1,0 +1,257 @@
+//! Steady-state PSO for live FL systems (Flag-Swap, DESIGN.md §5).
+//!
+//! In the real deployment a fitness evaluation *is* one FL round: the
+//! coordinator applies a candidate placement, runs the round, and
+//! reports the measured wall-clock delay back. This driver therefore
+//! exposes a propose/report interface — one particle per round, cycling
+//! through the swarm — instead of the synchronous `step` loop.
+
+use super::particle::derive_placement;
+use super::{Particle, PsoConfig};
+use crate::prng::Pcg32;
+
+/// Steady-state swarm: `propose()` → run round → `report(delay)`.
+pub struct AsyncSwarm {
+    pub cfg: PsoConfig,
+    particles: Vec<Particle>,
+    /// Continuous global-best position.
+    gbest: Vec<f64>,
+    gbest_fitness: f64,
+    client_count: usize,
+    rng: Pcg32,
+    /// Index of the particle whose position is currently "in flight".
+    cursor: usize,
+    /// Evaluations completed (rounds observed).
+    evaluations: usize,
+    /// Sweeps (full passes over the swarm) without a gbest improvement.
+    stale_sweeps: usize,
+    improved_this_sweep: bool,
+    /// When false, the swarm never pins: it keeps exploring forever
+    /// (pure steady-state PSO, used by the optimizer ablation). The
+    /// deployed Flag-Swap default is true — exploit gbest once converged.
+    pin_enabled: bool,
+}
+
+impl AsyncSwarm {
+    /// Initialize like the synchronous swarm (random distinct positions,
+    /// zero velocity).
+    pub fn new(dims: usize, client_count: usize, cfg: PsoConfig, mut rng: Pcg32) -> AsyncSwarm {
+        assert!(dims >= 1 && client_count >= dims);
+        let particles: Vec<Particle> = (0..cfg.particles)
+            .map(|_| Particle::init(dims, client_count, &mut rng))
+            .collect();
+        let gbest = particles[0].position.clone();
+        AsyncSwarm {
+            cfg,
+            particles,
+            gbest,
+            gbest_fitness: f64::NEG_INFINITY,
+            client_count,
+            rng,
+            cursor: 0,
+            evaluations: 0,
+            stale_sweeps: 0,
+            improved_this_sweep: false,
+            pin_enabled: true,
+        }
+    }
+
+    /// Disable gbest pinning (pure exploration — ablation A2).
+    pub fn set_pinning(&mut self, enabled: bool) {
+        self.pin_enabled = enabled;
+    }
+
+    /// The placement to run the next FL round with. After convergence
+    /// this pins the global best rather than continuing to explore.
+    pub fn propose(&self) -> Vec<usize> {
+        if self.pinned() {
+            self.gbest()
+        } else {
+            self.particles[self.cursor].placement(self.client_count)
+        }
+    }
+
+    /// Report the measured round delay for the placement returned by the
+    /// latest `propose()`. Updates pbest/gbest and advances the particle
+    /// (velocity + position update against the current bests).
+    pub fn report(&mut self, delay: f64) {
+        self.evaluations += 1;
+        if self.pinned() {
+            // Converged: keep running gbest; nothing to move.
+            return;
+        }
+        let fitness = -delay; // Eq. 1: f = −T
+        if fitness > self.gbest_fitness {
+            self.gbest_fitness = fitness;
+            self.gbest = self.particles[self.cursor].position.clone();
+            self.improved_this_sweep = true;
+        }
+        self.particles[self.cursor].observe(fitness);
+
+        // Move this particle toward the bests for its next proposal —
+        // but only once every particle has at least one observation
+        // (the first sweep evaluates the random initial positions).
+        if self.evaluations >= self.particles.len() {
+            let gbest = self.gbest.clone();
+            let p = &mut self.particles[self.cursor];
+            p.update_velocity(&gbest, &self.cfg, &mut self.rng);
+            p.update_position(self.client_count);
+        }
+
+        self.cursor = (self.cursor + 1) % self.particles.len();
+        if self.cursor == 0 {
+            if self.improved_this_sweep {
+                self.stale_sweeps = 0;
+            } else {
+                self.stale_sweeps += 1;
+            }
+            self.improved_this_sweep = false;
+        }
+    }
+
+    /// Best placement found so far.
+    pub fn gbest(&self) -> Vec<usize> {
+        derive_placement(&self.gbest, self.client_count)
+    }
+
+    /// Best (lowest) delay observed so far.
+    pub fn gbest_delay(&self) -> f64 {
+        -self.gbest_fitness
+    }
+
+    /// Swarm placements identical (paper's convergence condition).
+    pub fn positions_converged(&self) -> bool {
+        let first = self.particles[0].placement(self.client_count);
+        self.particles[1..]
+            .iter()
+            .all(|p| p.placement(self.client_count) == first)
+    }
+
+    /// Converged-and-pinned: identical placements, or two full sweeps
+    /// with no improvement after everyone was evaluated. Once true,
+    /// `propose` returns gbest forever (the exploit phase of Fig. 4).
+    pub fn pinned(&self) -> bool {
+        self.pin_enabled
+            && ((self.evaluations >= self.particles.len() && self.positions_converged())
+                || self.stale_sweeps >= 2)
+    }
+
+    /// Number of `report` calls so far.
+    pub fn evaluations(&self) -> usize {
+        self.evaluations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy delay model: placement of low ids is fast (TPD-like chunked
+    /// max so intermediate placements can improve on the incumbent).
+    fn delay_of(pos: &[usize]) -> f64 {
+        pos.chunks(2)
+            .map(|lvl| lvl.iter().copied().max().unwrap() as f64)
+            .sum::<f64>()
+            + 1.0
+    }
+
+    fn drive(mut swarm: AsyncSwarm, rounds: usize) -> (AsyncSwarm, Vec<f64>) {
+        let mut delays = Vec::new();
+        for _ in 0..rounds {
+            let placement = swarm.propose();
+            let d = delay_of(&placement);
+            delays.push(d);
+            swarm.report(d);
+        }
+        (swarm, delays)
+    }
+
+    fn new_swarm(seed: u64) -> AsyncSwarm {
+        AsyncSwarm::new(3, 12, PsoConfig::paper(), Pcg32::seed_from_u64(seed))
+    }
+
+    #[test]
+    fn improves_with_rounds() {
+        let (swarm, delays) = drive(new_swarm(1), 60);
+        let early: f64 = delays[..10].iter().sum::<f64>() / 10.0;
+        let late: f64 = delays[50..].iter().sum::<f64>() / 10.0;
+        assert!(
+            late < early,
+            "late rounds should be faster: early {early:.1} late {late:.1}"
+        );
+        let min = delays.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(swarm.gbest_delay() <= min + 1e-9);
+    }
+
+    #[test]
+    fn gbest_tracks_minimum_observed() {
+        let (swarm, delays) = drive(new_swarm(2), 40);
+        let min = delays.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!((swarm.gbest_delay() - min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pinning_happens_and_sticks_to_gbest() {
+        let (swarm, _) = drive(new_swarm(3), 200);
+        assert!(swarm.pinned(), "should pin within 200 toy rounds");
+        let p = swarm.propose();
+        assert_eq!(p, swarm.gbest());
+    }
+
+    #[test]
+    fn pinned_proposals_are_stable() {
+        let (mut swarm, _) = drive(new_swarm(4), 200);
+        assert!(swarm.pinned());
+        let a = swarm.propose();
+        swarm.report(delay_of(&a));
+        let b = swarm.propose();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn first_sweep_evaluates_initial_positions_unmoved() {
+        let mut swarm = new_swarm(5);
+        let initial: Vec<Vec<usize>> = swarm
+            .particles
+            .iter()
+            .map(|p| p.placement(12))
+            .collect();
+        for want in initial.iter().take(swarm.cfg.particles - 1) {
+            let got = swarm.propose();
+            assert_eq!(&got, want);
+            swarm.report(delay_of(&got));
+        }
+    }
+
+    #[test]
+    fn proposals_always_valid_placements() {
+        let mut swarm = new_swarm(6);
+        for _ in 0..100 {
+            let p = swarm.propose();
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), 3);
+            assert!(p.iter().all(|&c| c < 12));
+            swarm.report(delay_of(&p));
+        }
+    }
+
+    #[test]
+    fn converges_by_paper_scale() {
+        // Fig. 4: convergence within ~10 rounds of 50 on a 10-client,
+        // 3-slot problem. Allow some slack (stochastic), but the swarm
+        // must pin well before the 50-round budget.
+        let mut pinned_at = None;
+        let mut swarm = AsyncSwarm::new(3, 10, PsoConfig::paper(), Pcg32::seed_from_u64(7));
+        for round in 0..50 {
+            let p = swarm.propose();
+            swarm.report(delay_of(&p));
+            if pinned_at.is_none() && swarm.pinned() {
+                pinned_at = Some(round);
+            }
+        }
+        let at = pinned_at.expect("should pin within 50 rounds");
+        assert!(at <= 40, "pinned too late: round {at}");
+    }
+}

@@ -1,0 +1,67 @@
+//! PSO hyper-parameters (paper §III.C / §IV.B).
+
+/// Hyper-parameters for the placement PSO.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PsoConfig {
+    /// Swarm size P (paper simulates P ∈ {5, 10}).
+    pub particles: usize,
+    /// Iteration budget M (paper: 100 generations).
+    pub iterations: usize,
+    /// Inertia weight w (paper: 0.01 — strongly exploitative).
+    pub inertia: f64,
+    /// Cognitive coefficient c1 (paper: 0.01).
+    pub cognitive: f64,
+    /// Social coefficient c2 (paper: 1 — global best dominates).
+    pub social: f64,
+    /// Velocity clamp factor: Vmax = max(1, dims · velocity_factor)
+    /// (paper Eq. 3, typical value 0.1).
+    pub velocity_factor: f64,
+}
+
+impl PsoConfig {
+    /// The paper's configuration (§IV.B): w=0.01, c1=0.01, c2=1,
+    /// velocity_factor=0.1, 10 particles, 100 iterations.
+    pub fn paper() -> PsoConfig {
+        PsoConfig {
+            particles: 10,
+            iterations: 100,
+            inertia: 0.01,
+            cognitive: 0.01,
+            social: 1.0,
+            velocity_factor: 0.1,
+        }
+    }
+
+    /// Velocity clamp for a `dims`-dimensional search space (Eq. 3).
+    pub fn vmax(&self, dims: usize) -> f64 {
+        (dims as f64 * self.velocity_factor).max(1.0)
+    }
+}
+
+impl Default for PsoConfig {
+    fn default() -> Self {
+        PsoConfig::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values() {
+        let c = PsoConfig::paper();
+        assert_eq!(c.particles, 10);
+        assert_eq!(c.iterations, 100);
+        assert!((c.inertia - 0.01).abs() < 1e-12);
+        assert!((c.cognitive - 0.01).abs() < 1e-12);
+        assert!((c.social - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vmax_floor_is_one() {
+        let c = PsoConfig::paper();
+        assert_eq!(c.vmax(3), 1.0); // 0.3 < 1 ⇒ floor
+        assert_eq!(c.vmax(100), 10.0); // 10 > 1
+    }
+}

@@ -1,0 +1,24 @@
+//! Discrete Particle Swarm Optimization for aggregation placement —
+//! the paper's core contribution (§III, Algorithm 1).
+//!
+//! Positions are vectors of **distinct client ids**, one per aggregator
+//! slot. Velocities are real vectors updated per Eq. 2, clamped to
+//! ±Vmax (Eq. 3); positions advance by Eq. 4 (`(x + v) mod client_count`)
+//! with increment-until-unique duplicate resolution.
+//!
+//! Two drivers over the same particle state:
+//! * [`Swarm`] — synchronous: all particles evaluated each iteration
+//!   (the simulation mode behind Fig. 3).
+//! * [`AsyncSwarm`] — steady-state: one particle evaluated per FL round
+//!   against measured wall-clock delay (the live mode behind Fig. 4,
+//!   see DESIGN.md §5).
+
+mod async_swarm;
+mod config;
+mod particle;
+mod swarm;
+
+pub use async_swarm::AsyncSwarm;
+pub use config::PsoConfig;
+pub use particle::Particle;
+pub use swarm::{IterationStats, Swarm};

@@ -1,0 +1,228 @@
+//! One PSO particle: a candidate aggregator placement plus its velocity
+//! and personal best (paper §III.A–C).
+//!
+//! Positions are **continuous** (Eq. 4 applies `(x + v) mod client_count`
+//! to real-valued coordinates); the discrete client assignment is
+//! *derived* per evaluation by rounding + duplicate resolution
+//! ("Hierarchy Rearrangement" in Algorithm 1). Keeping the state
+//! continuous is what lets the swarm truly collapse onto one placement —
+//! with integer state, sub-0.5 velocities round to zero and particles
+//! freeze short of the global best.
+
+use super::PsoConfig;
+use crate::prng::{Pcg32, Rng};
+
+/// A particle in the placement space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Particle {
+    /// Continuous position, one coordinate per aggregator slot; each
+    /// coordinate lives on the ring `[0, client_count)`.
+    pub position: Vec<f64>,
+    /// Velocity vector (clamped to ±Vmax, Eq. 3).
+    pub velocity: Vec<f64>,
+    /// Personal best position (continuous, like `position`).
+    pub pbest: Vec<f64>,
+    /// Fitness of `pbest` (fitness = −TPD; higher is better).
+    pub pbest_fitness: f64,
+}
+
+impl Particle {
+    /// Random initialization (paper §III.C): a random draw of `dims`
+    /// distinct client ids, zero velocity, pbest = init.
+    pub fn init(dims: usize, client_count: usize, rng: &mut Pcg32) -> Particle {
+        let position: Vec<f64> = rng
+            .sample_distinct(client_count, dims)
+            .into_iter()
+            .map(|c| c as f64)
+            .collect();
+        Particle {
+            pbest: position.clone(),
+            position,
+            velocity: vec![0.0; dims],
+            pbest_fitness: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Velocity update (Eq. 2) + clamp (Eq. 3):
+    /// `v ← w·v + c1·r1·(pbest − x) + c2·r2·(gbest − x)`, with fresh
+    /// `r1, r2 ~ U[0,1)` per dimension (standard PSO).
+    pub fn update_velocity(&mut self, gbest: &[f64], cfg: &PsoConfig, rng: &mut Pcg32) {
+        let vmax = cfg.vmax(self.position.len());
+        for d in 0..self.velocity.len() {
+            let r1 = rng.next_f64();
+            let r2 = rng.next_f64();
+            let x = self.position[d];
+            let v = cfg.inertia * self.velocity[d]
+                + cfg.cognitive * r1 * (self.pbest[d] - x)
+                + cfg.social * r2 * (gbest[d] - x);
+            self.velocity[d] = v.clamp(-vmax, vmax);
+        }
+    }
+
+    /// Position update (Eq. 4): `x ← (x + v) mod client_count`,
+    /// continuous on the ring.
+    pub fn update_position(&mut self, client_count: usize) {
+        let cc = client_count as f64;
+        for d in 0..self.position.len() {
+            self.position[d] = (self.position[d] + self.velocity[d]).rem_euclid(cc);
+        }
+    }
+
+    /// Derive the discrete placement: round each coordinate to a client
+    /// id (mod client_count), then resolve duplicates by incrementing
+    /// until unique (paper §III.C).
+    pub fn placement(&self, client_count: usize) -> Vec<usize> {
+        derive_placement(&self.position, client_count)
+    }
+
+    /// Record a fitness observation for the current position; returns
+    /// true if it improved the personal best.
+    pub fn observe(&mut self, fitness: f64) -> bool {
+        if fitness > self.pbest_fitness {
+            self.pbest_fitness = fitness;
+            self.pbest = self.position.clone();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Round a continuous position to distinct client ids.
+pub fn derive_placement(position: &[f64], client_count: usize) -> Vec<usize> {
+    let cc = client_count as i64;
+    let mut taken = vec![false; client_count];
+    let mut out = Vec::with_capacity(position.len());
+    for &x in position {
+        let mut id = (x.round() as i64).rem_euclid(cc) as usize;
+        while taken[id] {
+            id = (id + 1) % client_count;
+        }
+        taken[id] = true;
+        out.push(id);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg32 {
+        Pcg32::seed_from_u64(11)
+    }
+
+    fn assert_distinct(p: &[usize], dims: usize, cc: usize) {
+        let mut s = p.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), dims, "duplicates in {p:?}");
+        assert!(p.iter().all(|&c| c < cc));
+    }
+
+    #[test]
+    fn init_is_distinct_and_in_range() {
+        let mut r = rng();
+        for _ in 0..20 {
+            let p = Particle::init(7, 20, &mut r);
+            assert_distinct(&p.placement(20), 7, 20);
+            assert!(p.velocity.iter().all(|&v| v == 0.0));
+            assert_eq!(p.pbest, p.position);
+        }
+    }
+
+    #[test]
+    fn velocity_is_clamped() {
+        let mut r = rng();
+        let cfg = PsoConfig {
+            social: 100.0, // force huge pulls
+            ..PsoConfig::paper()
+        };
+        let mut p = Particle::init(5, 50, &mut r);
+        let gbest = vec![49.0, 48.0, 47.0, 46.0, 45.0];
+        p.update_velocity(&gbest, &cfg, &mut r);
+        let vmax = cfg.vmax(5);
+        assert!(p.velocity.iter().all(|v| v.abs() <= vmax + 1e-12));
+    }
+
+    #[test]
+    fn placements_stay_valid_under_updates() {
+        let mut r = rng();
+        let cfg = PsoConfig::paper();
+        let mut p = Particle::init(10, 25, &mut r);
+        let gbest: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        for _ in 0..100 {
+            p.update_velocity(&gbest, &cfg, &mut r);
+            p.update_position(25);
+            assert!(p.position.iter().all(|&x| (0.0..25.0).contains(&x)));
+            assert_distinct(&p.placement(25), 10, 25);
+        }
+    }
+
+    #[test]
+    fn position_converges_to_gbest() {
+        // With the paper's coefficients the particle must actually reach
+        // the global best (the integer-state freeze this refactor fixes).
+        let mut r = rng();
+        let cfg = PsoConfig::paper();
+        let mut p = Particle::init(4, 30, &mut r);
+        let gbest = vec![3.0, 14.0, 7.0, 22.0];
+        for _ in 0..200 {
+            p.update_velocity(&gbest, &cfg, &mut r);
+            p.update_position(30);
+        }
+        assert_eq!(p.placement(30), vec![3, 14, 7, 22]);
+    }
+
+    #[test]
+    fn modulo_wraps_negative_moves() {
+        let mut p = Particle {
+            position: vec![0.0, 1.0],
+            velocity: vec![-1.4, 0.0],
+            pbest: vec![0.0, 1.0],
+            pbest_fitness: f64::NEG_INFINITY,
+        };
+        p.update_position(10);
+        // 0 - 1.4 wraps to 8.6 on the ring; rounds to 9.
+        assert!((p.position[0] - 8.6).abs() < 1e-9);
+        assert_eq!(p.placement(10), vec![9, 1]);
+    }
+
+    #[test]
+    fn duplicate_resolution_increments() {
+        assert_eq!(derive_placement(&[3.2, 2.9], 5), vec![3, 4]);
+        assert_eq!(derive_placement(&[0.0, 0.1, 0.2], 5), vec![0, 1, 2]);
+        // Wraps: 4 taken, increments to 0.
+        assert_eq!(derive_placement(&[4.0, 4.4], 5), vec![4, 0]);
+    }
+
+    #[test]
+    fn observe_updates_pbest_only_on_improvement() {
+        let mut r = rng();
+        let mut p = Particle::init(3, 10, &mut r);
+        assert!(p.observe(-5.0));
+        let best = p.position.clone();
+        p.position = vec![9.0, 8.0, 7.0];
+        assert!(!p.observe(-6.0)); // worse — pbest unchanged
+        assert_eq!(p.pbest, best);
+        assert!(p.observe(-4.0)); // better
+        assert_eq!(p.pbest, vec![9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn zero_velocity_zero_coeffs_is_fixed_point() {
+        let cfg = PsoConfig {
+            inertia: 0.0,
+            cognitive: 0.0,
+            social: 0.0,
+            ..PsoConfig::paper()
+        };
+        let mut r = rng();
+        let mut p = Particle::init(4, 12, &mut r);
+        let before = p.position.clone();
+        let gbest = before.clone();
+        p.update_velocity(&gbest, &cfg, &mut r);
+        p.update_position(12);
+        assert_eq!(p.position, before);
+    }
+}

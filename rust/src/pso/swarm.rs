@@ -1,0 +1,228 @@
+//! Synchronous PSO driver (Algorithm 1) — the simulation mode where the
+//! fitness function is evaluated instantly for every particle each
+//! iteration (Fig. 3).
+
+use super::{Particle, PsoConfig};
+use crate::prng::Pcg32;
+
+/// Per-iteration statistics (the grey/red/green/orange curves of Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterationStats {
+    /// TPD per particle this iteration (grey curves).
+    pub per_particle_tpd: Vec<f64>,
+    /// Worst (red), mean (orange), best (green) TPD this iteration.
+    pub worst: f64,
+    pub mean: f64,
+    pub best: f64,
+    /// Best TPD observed so far (monotone, = −gbest fitness).
+    pub gbest_tpd: f64,
+}
+
+/// Synchronous swarm over a placement search space.
+pub struct Swarm {
+    pub cfg: PsoConfig,
+    pub particles: Vec<Particle>,
+    /// Continuous global-best position.
+    pub gbest: Vec<f64>,
+    pub gbest_fitness: f64,
+    client_count: usize,
+    rng: Pcg32,
+}
+
+impl Swarm {
+    /// Initialize `cfg.particles` particles over `dims` slots and
+    /// `client_count` clients (paper §III.C: random positions, zero
+    /// velocities, pbest = init; gbest materializes on the first `step`,
+    /// which evaluates the initial fitness).
+    pub fn new(dims: usize, client_count: usize, cfg: PsoConfig, mut rng: Pcg32) -> Swarm {
+        assert!(dims >= 1 && client_count >= dims);
+        let particles = (0..cfg.particles)
+            .map(|_| Particle::init(dims, client_count, &mut rng))
+            .collect::<Vec<_>>();
+        let gbest = particles[0].position.clone();
+        Swarm {
+            cfg,
+            particles,
+            gbest,
+            gbest_fitness: f64::NEG_INFINITY,
+            client_count,
+            rng,
+        }
+    }
+
+    /// The discrete placement of the global best.
+    pub fn gbest_placement(&self) -> Vec<usize> {
+        super::particle::derive_placement(&self.gbest, self.client_count)
+    }
+
+    /// Evaluate all particles with `tpd_of` (lower TPD = better; fitness
+    /// is −TPD per the paper's Eq. 1), then update velocities/positions.
+    /// Returns this iteration's statistics.
+    ///
+    /// Order matches Algorithm 1: each particle is moved, evaluated, and
+    /// the bests updated, so later particles in the same iteration
+    /// already feel an improved gbest.
+    pub fn step<F: FnMut(&[usize]) -> f64>(&mut self, mut tpd_of: F) -> IterationStats {
+        let mut per_particle = Vec::with_capacity(self.particles.len());
+        for i in 0..self.particles.len() {
+            // First sweep: evaluate initial positions before moving
+            // (gbest is at -inf fitness until somebody has been scored).
+            if self.gbest_fitness > f64::NEG_INFINITY {
+                let gbest = self.gbest.clone();
+                let p = &mut self.particles[i];
+                p.update_velocity(&gbest, &self.cfg, &mut self.rng);
+                p.update_position(self.client_count);
+            }
+            let placement = self.particles[i].placement(self.client_count);
+            let t = tpd_of(&placement);
+            per_particle.push(t);
+            let fitness = -t;
+            self.particles[i].observe(fitness);
+            if fitness > self.gbest_fitness {
+                self.gbest_fitness = fitness;
+                self.gbest = self.particles[i].position.clone();
+            }
+        }
+        let worst = per_particle.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let best = per_particle.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean = per_particle.iter().sum::<f64>() / per_particle.len() as f64;
+        IterationStats {
+            per_particle_tpd: per_particle,
+            worst,
+            mean,
+            best,
+            gbest_tpd: -self.gbest_fitness,
+        }
+    }
+
+    /// Run `cfg.iterations` steps, collecting the per-iteration traces.
+    pub fn run<F: FnMut(&[usize]) -> f64>(&mut self, mut tpd_of: F) -> Vec<IterationStats> {
+        (0..self.cfg.iterations).map(|_| self.step(&mut tpd_of)).collect()
+    }
+
+    /// True when every particle proposes the same placement — the paper's
+    /// convergence condition ("all the particles suggest the same
+    /// placement which results in the global minimum TPD").
+    pub fn converged(&self) -> bool {
+        let first = self.particles[0].placement(self.client_count);
+        self.particles[1..]
+            .iter()
+            .all(|p| p.placement(self.client_count) == first)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy fitness shaped like the paper's TPD (Eq. 7): chunk the slots
+    /// into "levels" of 2 and sum the per-level maxima. Low client ids
+    /// are "fast".
+    fn toy_tpd(pos: &[usize]) -> f64 {
+        pos.chunks(2)
+            .map(|lvl| lvl.iter().copied().max().unwrap() as f64)
+            .sum()
+    }
+
+    fn swarm(dims: usize, cc: usize, particles: usize) -> Swarm {
+        let cfg = PsoConfig {
+            particles,
+            iterations: 100,
+            ..PsoConfig::paper()
+        };
+        Swarm::new(dims, cc, cfg, Pcg32::seed_from_u64(3))
+    }
+
+    #[test]
+    fn gbest_tpd_is_monotone_nonincreasing() {
+        let mut s = swarm(5, 30, 8);
+        let stats = s.run(toy_tpd);
+        for w in stats.windows(2) {
+            assert!(w[1].gbest_tpd <= w[0].gbest_tpd + 1e-12);
+        }
+    }
+
+    #[test]
+    fn improves_over_initial() {
+        let mut s = swarm(5, 40, 10);
+        let stats = s.run(toy_tpd);
+        let first = stats.first().unwrap().best;
+        let last = stats.last().unwrap().gbest_tpd;
+        assert!(
+            last < first,
+            "PSO failed to improve: first best {first}, final {last}"
+        );
+    }
+
+    #[test]
+    fn finds_near_optimal_on_toy_problem() {
+        // Optimal toy TPD for dims=4 (chunks of 2) is max(0,1)+max(2,3)=4.
+        let mut s = swarm(4, 20, 10);
+        let stats = s.run(toy_tpd);
+        let final_tpd = stats.last().unwrap().gbest_tpd;
+        let initial_mean = stats.first().unwrap().mean;
+        assert!(
+            final_tpd < initial_mean,
+            "gbest {final_tpd} should beat the random-init mean {initial_mean}"
+        );
+        // Random expectation ≈ 2·E[max of two of U{0..19}] ≈ 26; the
+        // paper's exploitative coefficients trade optimality for speed.
+        assert!(
+            final_tpd <= 20.0,
+            "expected clearly-better-than-random (≤20), got {final_tpd}"
+        );
+    }
+
+    #[test]
+    fn swarm_converges_to_single_placement() {
+        // The paper's convergence criterion: all particles end up
+        // proposing the same placement.
+        let mut s = swarm(4, 15, 5);
+        s.run(toy_tpd);
+        assert!(
+            s.converged(),
+            "swarm should converge within 100 iterations on a small problem"
+        );
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let mut s = swarm(3, 15, 6);
+        let st = s.step(toy_tpd);
+        assert_eq!(st.per_particle_tpd.len(), 6);
+        assert!(st.best <= st.mean && st.mean <= st.worst);
+        assert!(st.gbest_tpd <= st.best + 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed: u64| {
+            let cfg = PsoConfig::paper();
+            let mut s = Swarm::new(6, 25, cfg, Pcg32::seed_from_u64(seed));
+            s.run(toy_tpd).last().unwrap().gbest_tpd
+        };
+        assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn placements_stay_valid_throughout() {
+        let mut s = swarm(8, 20, 5);
+        for _ in 0..50 {
+            s.step(toy_tpd);
+            for p in &s.particles {
+                let mut q = p.placement(20);
+                q.sort_unstable();
+                q.dedup();
+                assert_eq!(q.len(), 8);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_fit_population_still_works() {
+        // client_count == dims: the only freedom is slot ordering.
+        let mut s = swarm(5, 5, 4);
+        let stats = s.run(|pos| pos.iter().enumerate().map(|(i, &c)| (i * c) as f64).sum());
+        assert!(stats.last().unwrap().gbest_tpd.is_finite());
+    }
+}

@@ -1,0 +1,169 @@
+//! `artifacts/meta.json`: the contract between the python build path and
+//! the rust runtime (parameter count, batch sizes, artifact filenames).
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed artifact metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Directory the artifacts live in.
+    pub dir: PathBuf,
+    /// Flat parameter-vector length P (1,863,690 for the paper's MLP).
+    pub param_count: usize,
+    /// MLP input dimension (784).
+    pub input_dim: usize,
+    /// Number of classes (10).
+    pub num_classes: usize,
+    /// Static train/eval batch sizes baked into the artifacts.
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    /// K (fan-in) → aggregate artifact filename.
+    pub aggregate: BTreeMap<usize, String>,
+    /// init / train_step / eval artifact filenames.
+    pub init_file: String,
+    pub train_step_file: String,
+    /// Optional heavy-ball momentum variant (absent in older exports).
+    pub train_step_momentum_file: Option<String>,
+    pub eval_file: String,
+}
+
+impl ArtifactMeta {
+    /// Load `dir/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let need = |key: &str| -> Result<&Value> {
+            v.get(key).ok_or_else(|| anyhow!("meta.json: missing {key:?}"))
+        };
+        let need_usize = |key: &str| -> Result<usize> {
+            need(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("meta.json: {key:?} not an integer"))
+        };
+        let arts = need("artifacts")?;
+        let art_str = |key: &str| -> Result<String> {
+            arts.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("meta.json: artifacts.{key} missing"))
+        };
+        let mut aggregate = BTreeMap::new();
+        let agg = arts
+            .get("aggregate")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow!("meta.json: artifacts.aggregate missing"))?;
+        for (k, file) in agg {
+            let k: usize = k.parse().map_err(|_| anyhow!("bad aggregate key {k:?}"))?;
+            let file = file
+                .as_str()
+                .ok_or_else(|| anyhow!("aggregate[{k}] not a string"))?;
+            aggregate.insert(k, file.to_string());
+        }
+        if aggregate.is_empty() {
+            return Err(anyhow!("meta.json: no aggregate artifacts"));
+        }
+        Ok(ArtifactMeta {
+            dir: dir.to_path_buf(),
+            param_count: need_usize("param_count")?,
+            input_dim: need_usize("input_dim")?,
+            num_classes: need_usize("num_classes")?,
+            train_batch: need_usize("train_batch")?,
+            eval_batch: need_usize("eval_batch")?,
+            aggregate,
+            init_file: art_str("init")?,
+            train_step_file: art_str("train_step")?,
+            train_step_momentum_file: arts
+                .get("train_step_momentum")
+                .and_then(Value::as_str)
+                .map(str::to_string),
+            eval_file: art_str("eval")?,
+        })
+    }
+
+    /// Default artifact directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest exported aggregate fan-in K' ≥ `k` (zero-weight padding
+    /// makes K' > k exact — see `test_wavg_zero_weight_child_ignored`).
+    pub fn aggregate_k_for(&self, k: usize) -> Result<usize> {
+        self.aggregate
+            .keys()
+            .copied()
+            .find(|&kk| kk >= k)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no aggregate artifact for fan-in {k} (max exported: {})",
+                    self.aggregate.keys().max().unwrap()
+                )
+            })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{
+  "param_count": 100,
+  "input_dim": 4,
+  "num_classes": 3,
+  "train_batch": 8,
+  "eval_batch": 16,
+  "aggregate_ks": [2, 4],
+  "artifacts": {
+    "init": "init.hlo.txt",
+    "train_step": "train_step_b8.hlo.txt",
+    "eval": "eval_b16.hlo.txt",
+    "aggregate": {"2": "aggregate_k2.hlo.txt", "4": "aggregate_k4.hlo.txt"}
+  }
+}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_meta() {
+        let dir = std::env::temp_dir().join("repro_meta_test");
+        write_meta(&dir);
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.param_count, 100);
+        assert_eq!(m.train_batch, 8);
+        assert_eq!(m.aggregate.len(), 2);
+        assert_eq!(m.init_file, "init.hlo.txt");
+    }
+
+    #[test]
+    fn aggregate_k_rounds_up() {
+        let dir = std::env::temp_dir().join("repro_meta_test2");
+        write_meta(&dir);
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.aggregate_k_for(1).unwrap(), 2);
+        assert_eq!(m.aggregate_k_for(2).unwrap(), 2);
+        assert_eq!(m.aggregate_k_for(3).unwrap(), 4);
+        assert!(m.aggregate_k_for(5).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

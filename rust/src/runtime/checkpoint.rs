@@ -1,0 +1,174 @@
+//! Model checkpointing: persist/restore the flat parameter vector, so a
+//! deployment can resume training or serve a converged model.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "RPCKPT1\n" | u32 header_len | header JSON | f32 params...
+//! ```
+//! The JSON header carries the parameter count plus free-form metadata
+//! (round, session, loss) for tooling.
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RPCKPT1\n";
+
+/// Checkpoint metadata (stored in the JSON header).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub param_count: usize,
+    /// FL round the model was captured at.
+    pub round: usize,
+    /// Session label.
+    pub session: String,
+    /// Eval loss at capture time (NaN if unknown).
+    pub loss: f64,
+}
+
+/// Write a checkpoint atomically (tmp + rename).
+pub fn save(path: &Path, params: &[f32], meta: &CheckpointMeta) -> Result<()> {
+    if meta.param_count != params.len() {
+        return Err(anyhow!(
+            "checkpoint meta param_count {} != params len {}",
+            meta.param_count,
+            params.len()
+        ));
+    }
+    let header = json::to_string(&Value::object(vec![
+        ("param_count", Value::from(meta.param_count)),
+        ("round", Value::from(meta.round)),
+        ("session", Value::from(meta.session.as_str())),
+        ("loss", Value::Num(meta.loss)),
+    ]));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("ckpt.tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        // SAFETY: f32 → bytes view, host-native layout.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(params.as_ptr().cast::<u8>(), std::mem::size_of_val(params))
+        };
+        f.write_all(bytes)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a checkpoint; validates magic, header and payload length.
+pub fn load(path: &Path) -> Result<(Vec<f32>, CheckpointMeta)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(anyhow!("{path:?}: not a repro checkpoint (bad magic)"));
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 20 {
+        return Err(anyhow!("{path:?}: implausible header length {hlen}"));
+    }
+    let mut header = vec![0u8; hlen];
+    f.read_exact(&mut header)?;
+    let v = json::parse(std::str::from_utf8(&header)?).map_err(|e| anyhow!("{e}"))?;
+    let meta = CheckpointMeta {
+        param_count: v
+            .get("param_count")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("checkpoint header missing param_count"))?,
+        round: v.get("round").and_then(Value::as_usize).unwrap_or(0),
+        session: v
+            .get("session")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
+        loss: v.get("loss").and_then(Value::as_f64).unwrap_or(f64::NAN),
+    };
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() != meta.param_count * 4 {
+        return Err(anyhow!(
+            "{path:?}: payload {} bytes, expected {}",
+            bytes.len(),
+            meta.param_count * 4
+        ));
+    }
+    let mut params = Vec::with_capacity(meta.param_count);
+    for chunk in bytes.chunks_exact(4) {
+        params.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((params, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("repro_ckpt_{name}"))
+    }
+
+    fn meta(n: usize) -> CheckpointMeta {
+        CheckpointMeta {
+            param_count: n,
+            round: 17,
+            session: "test".into(),
+            loss: 0.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let params: Vec<f32> = (0..5000).map(|i| (i as f32) * 0.37 - 9.0).collect();
+        let path = tmp("roundtrip");
+        save(&path, &params, &meta(5000)).unwrap();
+        let (back, m) = load(&path).unwrap();
+        assert_eq!(back, params, "payload must be bit-exact");
+        assert_eq!(m, meta(5000));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTACKPT........").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let params: Vec<f32> = vec![1.0; 100];
+        let path = tmp("trunc");
+        save(&path, &params, &meta(100)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_meta_mismatch() {
+        let params: Vec<f32> = vec![0.0; 10];
+        assert!(save(&tmp("mismatch"), &params, &meta(11)).is_err());
+    }
+
+    #[test]
+    fn special_floats_preserved() {
+        let params = vec![f32::MIN, f32::MAX, 0.0, -0.0, 1e-38, -1e38];
+        let path = tmp("special");
+        save(&path, &params, &meta(6)).unwrap();
+        let (back, _) = load(&path).unwrap();
+        assert_eq!(back.len(), 6);
+        for (a, b) in params.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

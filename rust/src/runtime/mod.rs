@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place rust touches XLA. Everything above it (the FL
+//! framework, the coordinator, the emulated clients) moves opaque flat
+//! `Vec<f32>` parameter vectors. Python never runs at request time.
+//!
+//! Interchange is HLO *text* (see aot.py / /opt/xla-example/README.md).
+
+mod artifacts;
+pub mod checkpoint;
+mod model_exec;
+
+pub use artifacts::ArtifactMeta;
+pub use checkpoint::CheckpointMeta;
+pub use model_exec::ModelRuntime;

@@ -1,0 +1,265 @@
+//! The compiled-model runtime: one PJRT CPU client + one compiled
+//! executable per artifact. Thread-safe (`&self` methods; the underlying
+//! PJRT CPU client serializes or parallelizes internally), shared across
+//! all emulated clients via `Arc`.
+
+use super::ArtifactMeta;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Loaded + compiled model graphs, ready to execute from the L3 hot path.
+pub struct ModelRuntime {
+    pub meta: ArtifactMeta,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    init_exe: xla::PjRtLoadedExecutable,
+    train_exe: xla::PjRtLoadedExecutable,
+    train_momentum_exe: Option<xla::PjRtLoadedExecutable>,
+    eval_exe: xla::PjRtLoadedExecutable,
+    /// Fan-in K → compiled aggregate executable.
+    agg_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the xla wrapper types hold raw pointers into the PJRT C API,
+// which is documented thread-safe for compilation and execution
+// (PJRT_Client/PJRT_LoadedExecutable methods may be called concurrently).
+// ModelRuntime exposes only &self execution over immutable executables.
+unsafe impl Send for ModelRuntime {}
+unsafe impl Sync for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Load every artifact under `dir` and compile on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<ModelRuntime> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = meta.path_of(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {path:?}"))
+        };
+        let init_exe = compile(&meta.init_file)?;
+        let train_exe = compile(&meta.train_step_file)?;
+        let train_momentum_exe = match &meta.train_step_momentum_file {
+            Some(f) => Some(compile(f)?),
+            None => None,
+        };
+        let eval_exe = compile(&meta.eval_file)?;
+        let mut agg_exes = BTreeMap::new();
+        for (&k, file) in &meta.aggregate {
+            agg_exes.insert(k, compile(file)?);
+        }
+        Ok(ModelRuntime {
+            meta,
+            client,
+            init_exe,
+            train_exe,
+            train_momentum_exe,
+            eval_exe,
+            agg_exes,
+        })
+    }
+
+    /// Load from the default artifact directory (`$REPRO_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<ModelRuntime> {
+        Self::load(&ArtifactMeta::default_dir())
+    }
+
+    /// Initialize a flat parameter vector from a 2-word threefry seed.
+    pub fn init_params(&self, seed: [u32; 2]) -> Result<Vec<f32>> {
+        let key = xla::Literal::vec1(&seed[..]);
+        let result = self.init_exe.execute::<xla::Literal>(&[key]).map_err(wrap)?;
+        let out = result[0][0].to_literal_sync().map_err(wrap)?.to_tuple1().map_err(wrap)?;
+        let params = out.to_vec::<f32>().map_err(wrap)?;
+        debug_assert_eq!(params.len(), self.meta.param_count);
+        Ok(params)
+    }
+
+    /// One local SGD step. `x` is row-major `[train_batch, input_dim]`,
+    /// `y` class ids `[train_batch]`. Returns (new_params, loss).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let b = self.meta.train_batch;
+        let d = self.meta.input_dim;
+        if params.len() != self.meta.param_count {
+            return Err(anyhow!(
+                "train_step: params len {} != {}",
+                params.len(),
+                self.meta.param_count
+            ));
+        }
+        if x.len() != b * d || y.len() != b {
+            return Err(anyhow!(
+                "train_step: batch shape mismatch (x {} want {}, y {} want {})",
+                x.len(),
+                b * d,
+                y.len(),
+                b
+            ));
+        }
+        let args = [
+            literal_f32(params, &[params.len()])?,
+            literal_f32(x, &[b, d])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(&[lr]),
+        ];
+        let result = self.train_exe.execute::<xla::Literal>(&args).map_err(wrap)?;
+        let (new_params, loss) = result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple2()
+            .map_err(wrap)?;
+        Ok((
+            new_params.to_vec::<f32>().map_err(wrap)?,
+            loss.get_first_element::<f32>().map_err(wrap)?,
+        ))
+    }
+
+    /// One heavy-ball momentum step (optional artifact). `velocity` is
+    /// the per-client momentum buffer; returns (params', velocity', loss).
+    pub fn train_step_momentum(
+        &self,
+        params: &[f32],
+        velocity: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let exe = self
+            .train_momentum_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("momentum artifact not exported — re-run `make artifacts`"))?;
+        let b = self.meta.train_batch;
+        let d = self.meta.input_dim;
+        if params.len() != self.meta.param_count || velocity.len() != params.len() {
+            return Err(anyhow!("train_step_momentum: param/velocity length mismatch"));
+        }
+        if x.len() != b * d || y.len() != b {
+            return Err(anyhow!("train_step_momentum: batch shape mismatch"));
+        }
+        let args = [
+            literal_f32(params, &[params.len()])?,
+            literal_f32(velocity, &[velocity.len()])?,
+            literal_f32(x, &[b, d])?,
+            xla::Literal::vec1(y),
+            xla::Literal::vec1(&[lr, mu]),
+        ];
+        let result = exe.execute::<xla::Literal>(&args).map_err(wrap)?;
+        let (new_p, new_v, loss) = result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple3()
+            .map_err(wrap)?;
+        Ok((
+            new_p.to_vec::<f32>().map_err(wrap)?,
+            new_v.to_vec::<f32>().map_err(wrap)?,
+            loss.get_first_element::<f32>().map_err(wrap)?,
+        ))
+    }
+
+    /// Whether the momentum artifact was exported and compiled.
+    pub fn has_momentum(&self) -> bool {
+        self.train_momentum_exe.is_some()
+    }
+
+    /// Evaluate on one `[eval_batch]`-sized batch: returns (loss, accuracy).
+    pub fn evaluate(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = self.meta.eval_batch;
+        let d = self.meta.input_dim;
+        if x.len() != b * d || y.len() != b {
+            return Err(anyhow!("evaluate: batch shape mismatch"));
+        }
+        let args = [
+            literal_f32(params, &[params.len()])?,
+            literal_f32(x, &[b, d])?,
+            xla::Literal::vec1(y),
+        ];
+        let result = self.eval_exe.execute::<xla::Literal>(&args).map_err(wrap)?;
+        let (loss, acc) = result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple2()
+            .map_err(wrap)?;
+        Ok((
+            loss.get_first_element::<f32>().map_err(wrap)?,
+            acc.get_first_element::<f32>().map_err(wrap)?,
+        ))
+    }
+
+    /// FedAvg over `models` with `weights` (raw, e.g. sample counts).
+    ///
+    /// Picks the smallest exported fan-in K' ≥ models.len() and zero-pads
+    /// both the stack and the weights — a zero-weight child contributes
+    /// nothing (L1 kernel invariant, tested in python and here).
+    pub fn aggregate(&self, models: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let p = self.meta.param_count;
+        let k = models.len();
+        if k == 0 {
+            return Err(anyhow!("aggregate: no models"));
+        }
+        if weights.len() != k {
+            return Err(anyhow!("aggregate: {} weights for {} models", weights.len(), k));
+        }
+        if weights.iter().any(|w| *w < 0.0) || weights.iter().sum::<f32>() <= 0.0 {
+            return Err(anyhow!("aggregate: weights must be non-negative with positive sum"));
+        }
+        for (i, m) in models.iter().enumerate() {
+            if m.len() != p {
+                return Err(anyhow!("aggregate: model {i} len {} != {p}", m.len()));
+            }
+        }
+        let kk = self.meta.aggregate_k_for(k)?;
+        let exe = &self.agg_exes[&kk];
+        // Stack into [K', P] row-major with zero padding, then hand the
+        // bytes straight to the literal (single copy into XLA).
+        let mut stacked = vec![0.0f32; kk * p];
+        for (i, m) in models.iter().enumerate() {
+            stacked[i * p..(i + 1) * p].copy_from_slice(m);
+        }
+        let mut w = vec![0.0f32; kk];
+        w[..k].copy_from_slice(weights);
+        let args = [literal_f32(&stacked, &[kk, p])?, xla::Literal::vec1(&w)];
+        let result = exe.execute::<xla::Literal>(&args).map_err(wrap)?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?
+            .to_tuple1()
+            .map_err(wrap)?;
+        Ok(out.to_vec::<f32>().map_err(wrap)?)
+    }
+}
+
+/// xla::Error does not implement std::error::Error compatibly with
+/// anyhow's blanket From; wrap by formatting.
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// View an f32 slice as raw bytes (host-native layout — exactly what the
+/// PJRT host-buffer API expects). Perf: avoids the `Literal::vec1` +
+/// `reshape` double copy on the 7.5–60 MB hot-path buffers
+/// (EXPERIMENTS.md §Perf iteration 2).
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and &[u8] has alignment 1.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) }
+}
+
+/// Build an f32 literal of arbitrary shape with a single copy.
+fn literal_f32(xs: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(dims.iter().product::<usize>(), xs.len());
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, f32_bytes(xs))
+        .map_err(wrap)
+}

@@ -1,0 +1,204 @@
+//! Fig-4 harness: the docker-analogue deployment comparison (random vs
+//! uniform round-robin vs PSO) and the end-to-end training driver.
+//! Shared by `repro compare` / `repro e2e`, the examples and the
+//! `fig4_deploy` bench so every entry point reports identical rows.
+
+use super::ascii_plot;
+use crate::configio::DeployScenario;
+use crate::fl::Deployment;
+use crate::metrics::{CsvWriter, RoundRecorder};
+use crate::placement::{PlacementStrategy, PsoPlacement, RandomPlacement, RoundRobinPlacement};
+use crate::prng::Pcg32;
+use crate::runtime::ModelRuntime;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Outcome of one strategy's deployment run.
+pub struct StrategyOutcome {
+    pub name: &'static str,
+    pub recorder: RoundRecorder,
+}
+
+/// Build the strategy by name for a scenario.
+pub fn make_strategy(name: &str, sc: &DeployScenario, seed: u64) -> Box<dyn PlacementStrategy> {
+    let dims = sc.dimensions();
+    let cc = sc.clients.len();
+    match name {
+        "random" => Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
+        "uniform" => Box::new(RoundRobinPlacement::new(dims, cc)),
+        "pso" => Box::new(PsoPlacement::new(
+            dims,
+            cc,
+            sc.pso,
+            Pcg32::seed_from_u64(seed),
+        )),
+        other => panic!("unknown strategy {other:?}"),
+    }
+}
+
+/// Run one strategy through a full deployment.
+pub fn run_strategy(
+    sc: &DeployScenario,
+    name: &'static str,
+    runtime: Arc<ModelRuntime>,
+    time_scale: f64,
+) -> Result<StrategyOutcome> {
+    let strategy = make_strategy(name, sc, sc.seed ^ 0xABCD);
+    let session = format!("fig4-{name}");
+    let mut dep = Deployment::launch(sc, &session, runtime, strategy, time_scale)?;
+    dep.run(sc.rounds)?;
+    let recorder = dep.coordinator.recorder().clone();
+    dep.shutdown();
+    Ok(StrategyOutcome { name, recorder })
+}
+
+/// The full Fig-4 comparison. Writes `results/fig4.csv` (per-round
+/// delays per strategy) and prints the paper-style summary (totals,
+/// convergence round, percentage improvements).
+pub fn run_fig4_comparison(rounds: usize, time_scale: f64, out_dir: &Path) -> Result<()> {
+    let runtime = Arc::new(
+        ModelRuntime::load_default().context("artifacts required — run `make artifacts`")?,
+    );
+    let mut sc = DeployScenario::paper_docker();
+    sc.rounds = rounds;
+
+    let mut outcomes = Vec::new();
+    for name in ["random", "uniform", "pso"] {
+        crate::log_info!("fig4", "running strategy {name} for {rounds} rounds");
+        outcomes.push(run_strategy(&sc, name, runtime.clone(), time_scale)?);
+    }
+    report_fig4(&outcomes, out_dir)?;
+    Ok(())
+}
+
+/// Render + persist the comparison (also used by the bench).
+pub fn report_fig4(outcomes: &[StrategyOutcome], out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let rounds = outcomes.iter().map(|o| o.recorder.len()).max().unwrap_or(0);
+
+    // CSV: round, <strategy> delay columns, <strategy> loss columns.
+    let mut header = vec!["round".to_string()];
+    for o in outcomes {
+        header.push(format!("{}_delay_s", o.name));
+    }
+    for o in outcomes {
+        header.push(format!("{}_loss", o.name));
+    }
+    let href: Vec<&str> = header.iter().map(String::as_str).collect();
+    let path = out_dir.join("fig4.csv");
+    let mut w = CsvWriter::create(&path, &href)?;
+    for r in 0..rounds {
+        let mut row = vec![r as f64];
+        for o in outcomes {
+            row.push(o.recorder.records().get(r).map_or(f64::NAN, |x| x.delay.as_secs_f64()));
+        }
+        for o in outcomes {
+            row.push(o.recorder.records().get(r).map_or(f64::NAN, |x| x.loss));
+        }
+        w.write_f64_row(&row)?;
+    }
+    w.flush()?;
+
+    // ASCII per-round delay plot (the Fig-4 left panel).
+    let series: Vec<(&str, char, Vec<f64>)> = outcomes
+        .iter()
+        .map(|o| {
+            let glyph = match o.name {
+                "random" => 'r',
+                "uniform" => 'u',
+                _ => 'p',
+            };
+            (o.name, glyph, o.recorder.delays_secs())
+        })
+        .collect();
+    let series_refs: Vec<(&str, char, &[f64])> = series
+        .iter()
+        .map(|(n, g, v)| (*n, *g, v.as_slice()))
+        .collect();
+    println!(
+        "{}",
+        ascii_plot("per-round processing delay (s)", &series_refs, 72, 16)
+    );
+
+    // Summary rows (the paper's headline numbers).
+    println!("=== Fig-4 summary ===");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>14}",
+        "strategy", "total (s)", "mean (s)", "p50 (s)", "converged@round"
+    );
+    let mut totals = std::collections::BTreeMap::new();
+    for o in outcomes {
+        let delays = o.recorder.delays_secs();
+        let total: f64 = delays.iter().sum();
+        totals.insert(o.name, total);
+        let summary = crate::metrics::Summary::from(&delays);
+        let conv = o
+            .recorder
+            .convergence_round()
+            .map(|r| r.to_string())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<10} {:>12.2} {:>12.3} {:>12.3} {:>14}",
+            o.name, total, summary.mean, summary.p50, conv
+        );
+    }
+    if let (Some(&pso), Some(&rand), Some(&uni)) =
+        (totals.get("pso"), totals.get("random"), totals.get("uniform"))
+    {
+        println!(
+            "\nPSO total processing time: {:.1}% faster than random, {:.1}% faster than uniform",
+            (1.0 - pso / rand) * 100.0,
+            (1.0 - pso / uni) * 100.0
+        );
+        println!("(paper reports ≈43% vs random, ≈32% vs uniform on its docker testbed)");
+    }
+    println!("per-round CSV: {}", path.display());
+    Ok(())
+}
+
+/// End-to-end driver: PSO-placed federated training of the 1.8 M-param
+/// MLP, logging delay + loss every round (EXPERIMENTS.md §E2E).
+pub fn run_e2e(rounds: usize) -> Result<()> {
+    let runtime = Arc::new(
+        ModelRuntime::load_default().context("artifacts required — run `make artifacts`")?,
+    );
+    let mut sc = DeployScenario::paper_docker();
+    sc.rounds = rounds;
+    let outcome = run_strategy(&sc, "pso", runtime.clone(), 1.0)?;
+
+    let losses: Vec<f64> = outcome.recorder.records().iter().map(|r| r.loss).collect();
+    let delays = outcome.recorder.delays_secs();
+    println!(
+        "{}",
+        ascii_plot(
+            "global-model eval loss vs round",
+            &[("loss", '*', &losses)],
+            72,
+            14
+        )
+    );
+    println!(
+        "{}",
+        ascii_plot(
+            "round processing delay (s) [pso]",
+            &[("delay", 'p', &delays)],
+            72,
+            12
+        )
+    );
+    let conv = outcome
+        .recorder
+        .convergence_round()
+        .map(|r| r.to_string())
+        .unwrap_or_else(|| "-".into());
+    println!(
+        "e2e: {} rounds, total {:.1}s, mean {:.3}s/round, placement converged @ round {}, final loss {:.4}",
+        rounds,
+        delays.iter().sum::<f64>(),
+        outcome.recorder.mean_delay_secs(),
+        conv,
+        losses.last().copied().unwrap_or(f64::NAN),
+    );
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Fig-3 simulator: PSO aggregation placement over simulated clients
+//! (paper §IV.A/B).
+//!
+//! Builds a client population with the paper's attribute distributions,
+//! runs the synchronous [`crate::pso::Swarm`] against the Eq. 6–7 TPD
+//! fitness, and records the per-iteration traces (per-particle TPD +
+//! worst/mean/best) that the paper plots.
+
+mod fig4;
+mod plot;
+mod runner;
+mod trace;
+
+pub use fig4::{make_strategy, report_fig4, run_e2e, run_fig4_comparison, run_strategy, StrategyOutcome};
+pub use plot::ascii_plot;
+pub use runner::{run_sim, SimResult};
+pub use trace::SimTrace;

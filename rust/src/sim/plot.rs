@@ -1,0 +1,101 @@
+//! Terminal ASCII rendering of Fig-3-style convergence curves, so the
+//! examples/benches can show the paper's plots without a plotting stack.
+
+/// Render series as an ASCII chart. Each `(label, glyph, series)` is
+/// drawn with its glyph; later series overdraw earlier ones.
+pub fn ascii_plot(
+    title: &str,
+    series: &[(&str, char, &[f64])],
+    width: usize,
+    height: usize,
+) -> String {
+    assert!(width >= 8 && height >= 4);
+    let n = series.iter().map(|(_, _, s)| s.len()).max().unwrap_or(0);
+    if n == 0 {
+        return format!("{title}\n(empty)\n");
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, _, s) in series {
+        for &v in *s {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return format!("{title}\n(no finite data)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (_, glyph, s) in series {
+        for (i, &v) in s.iter().enumerate() {
+            if !v.is_finite() {
+                continue;
+            }
+            let x = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+            let yf = (v - lo) / (hi - lo);
+            let y = ((1.0 - yf) * (height - 1) as f64).round() as usize;
+            grid[y.min(height - 1)][x] = *glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (r, row) in grid.iter().enumerate() {
+        let yval = hi - (hi - lo) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>11}0{:>w$}\n", "", n - 1, w = width - 1));
+    let legend: Vec<String> = series
+        .iter()
+        .map(|(label, glyph, _)| format!("{glyph}={label}"))
+        .collect();
+    out.push_str(&format!("{:>11}{}\n", "", legend.join("  ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let s: Vec<f64> = (0..50).map(|i| 10.0 - 0.1 * i as f64).collect();
+        let out = ascii_plot("test", &[("tpd", '*', &s)], 40, 10);
+        assert!(out.contains("test"));
+        assert!(out.contains('*'));
+        assert!(out.contains("*=tpd"));
+        // First grid row (max value) should contain the start of the series.
+        let first_row = out.lines().nth(1).unwrap();
+        assert!(first_row.contains('*'));
+    }
+
+    #[test]
+    fn constant_series_does_not_panic() {
+        let s = vec![5.0; 10];
+        let out = ascii_plot("const", &[("x", 'x', &s)], 20, 5);
+        assert!(out.contains('x'));
+    }
+
+    #[test]
+    fn empty_series_handled() {
+        let out = ascii_plot("none", &[("x", 'x', &[])], 20, 5);
+        assert!(out.contains("empty"));
+    }
+
+    #[test]
+    fn multiple_series_all_legended() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![3.0, 2.0, 1.0];
+        let out = ascii_plot("two", &[("up", 'u', &a), ("down", 'd', &b)], 20, 6);
+        assert!(out.contains("u=up"));
+        assert!(out.contains("d=down"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Simulation driver: scenario → population → PSO → trace.
+
+use super::SimTrace;
+use crate::configio::SimScenario;
+use crate::fitness::{tpd, ClientAttrs};
+use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::prng::Pcg32;
+use crate::pso::Swarm;
+
+/// Output of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub scenario: SimScenario,
+    pub trace: SimTrace,
+    /// Best placement found (client ids per slot).
+    pub best_placement: Vec<usize>,
+    /// TPD of `best_placement`.
+    pub best_tpd: f64,
+    /// Whether all particles converged to one placement (the paper's
+    /// convergence criterion).
+    pub converged: bool,
+    /// The simulated client population (for inspection / plots).
+    pub attrs: Vec<ClientAttrs>,
+}
+
+/// Run the Fig-3 simulation for one scenario.
+pub fn run_sim(scenario: &SimScenario) -> SimResult {
+    let spec = HierarchySpec::new(scenario.depth, scenario.width);
+    let dims = spec.dimensions();
+    let client_count = scenario.client_count();
+
+    let mut rng = Pcg32::seed_from_u64(scenario.seed);
+    let attrs = ClientAttrs::sample_population(
+        client_count,
+        scenario.pspeed_range,
+        scenario.memcap_range,
+        scenario.mdatasize,
+        &mut rng,
+    );
+
+    let mut swarm = Swarm::new(dims, client_count, scenario.pso, rng.split());
+    let stats = swarm.run(|pos| tpd(&Arrangement::from_position(spec, pos, client_count), &attrs).total);
+
+    let trace = SimTrace::from_stats(&stats);
+    SimResult {
+        scenario: scenario.clone(),
+        best_placement: swarm.gbest_placement(),
+        best_tpd: -swarm.gbest_fitness,
+        converged: swarm.converged(),
+        trace,
+        attrs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_scenario() -> SimScenario {
+        let mut sc = SimScenario {
+            depth: 3,
+            width: 2,
+            ..SimScenario::default()
+        };
+        sc.pso.iterations = 60;
+        sc.pso.particles = 5;
+        sc
+    }
+
+    #[test]
+    fn sim_improves_tpd() {
+        let r = run_sim(&quick_scenario());
+        let first_mean = r.trace.mean[0];
+        assert!(
+            r.best_tpd < first_mean,
+            "best {} should beat initial mean {}",
+            r.best_tpd,
+            first_mean
+        );
+    }
+
+    #[test]
+    fn best_placement_is_valid_and_matches_tpd() {
+        let sc = quick_scenario();
+        let r = run_sim(&sc);
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        assert_eq!(r.best_placement.len(), spec.dimensions());
+        let recomputed = tpd(
+            &Arrangement::from_position(spec, &r.best_placement, sc.client_count()),
+            &r.attrs,
+        )
+        .total;
+        assert!((recomputed - r.best_tpd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = run_sim(&quick_scenario());
+        let b = run_sim(&quick_scenario());
+        assert_eq!(a.best_placement, b.best_placement);
+        assert_eq!(a.trace.mean, b.trace.mean);
+    }
+
+    #[test]
+    fn trace_lengths_match_iterations() {
+        let sc = quick_scenario();
+        let r = run_sim(&sc);
+        assert_eq!(r.trace.iterations(), sc.pso.iterations);
+        assert_eq!(r.trace.per_particle.len(), sc.pso.particles);
+    }
+
+    #[test]
+    fn larger_swarm_not_worse() {
+        // Paper's observation: more particles find equal-or-better
+        // placements (Fig. 3 (a) vs (d)). Allow small tolerance since
+        // this is stochastic.
+        let mut small = quick_scenario();
+        small.pso.particles = 2;
+        small.pso.iterations = 100;
+        let mut large = quick_scenario();
+        large.pso.particles = 10;
+        large.pso.iterations = 100;
+        let r_small = run_sim(&small);
+        let r_large = run_sim(&large);
+        assert!(r_large.best_tpd <= r_small.best_tpd * 1.05);
+    }
+}

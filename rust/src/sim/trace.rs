@@ -1,0 +1,139 @@
+//! Per-iteration traces of a simulation run — the raw series behind the
+//! paper's Fig. 3 curves (grey per-particle, red worst, orange mean,
+//! green best) plus CSV export.
+
+use crate::metrics::CsvWriter;
+use crate::pso::IterationStats;
+use std::path::Path;
+
+/// Column-oriented trace: `per_particle[p][it]`, `worst/mean/best[it]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimTrace {
+    pub per_particle: Vec<Vec<f64>>,
+    pub worst: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub best: Vec<f64>,
+    pub gbest: Vec<f64>,
+}
+
+impl SimTrace {
+    /// Transpose the swarm's per-iteration stats into plottable series.
+    pub fn from_stats(stats: &[IterationStats]) -> SimTrace {
+        let particles = stats.first().map_or(0, |s| s.per_particle_tpd.len());
+        let mut per_particle = vec![Vec::with_capacity(stats.len()); particles];
+        let mut worst = Vec::with_capacity(stats.len());
+        let mut mean = Vec::with_capacity(stats.len());
+        let mut best = Vec::with_capacity(stats.len());
+        let mut gbest = Vec::with_capacity(stats.len());
+        for st in stats {
+            for (p, &t) in st.per_particle_tpd.iter().enumerate() {
+                per_particle[p].push(t);
+            }
+            worst.push(st.worst);
+            mean.push(st.mean);
+            best.push(st.best);
+            gbest.push(st.gbest_tpd);
+        }
+        SimTrace {
+            per_particle,
+            worst,
+            mean,
+            best,
+            gbest,
+        }
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.worst.len()
+    }
+
+    /// Normalize all series by the first iteration's worst TPD (the
+    /// paper plots normalized TPD).
+    pub fn normalized(&self) -> SimTrace {
+        let denom = self.worst.first().copied().unwrap_or(1.0).max(1e-12);
+        let norm = |v: &[f64]| v.iter().map(|x| x / denom).collect::<Vec<_>>();
+        SimTrace {
+            per_particle: self.per_particle.iter().map(|p| norm(p)).collect(),
+            worst: norm(&self.worst),
+            mean: norm(&self.mean),
+            best: norm(&self.best),
+            gbest: norm(&self.gbest),
+        }
+    }
+
+    /// Write `iteration,worst,mean,best,gbest,p0..pN` rows.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut header: Vec<String> = vec![
+            "iteration".into(),
+            "worst".into(),
+            "mean".into(),
+            "best".into(),
+            "gbest".into(),
+        ];
+        for p in 0..self.per_particle.len() {
+            header.push(format!("p{p}"));
+        }
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut w = CsvWriter::create(path, &header_refs)?;
+        for it in 0..self.iterations() {
+            let mut row = vec![
+                it as f64,
+                self.worst[it],
+                self.mean[it],
+                self.best[it],
+                self.gbest[it],
+            ];
+            for p in &self.per_particle {
+                row.push(p[it]);
+            }
+            w.write_f64_row(&row)?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats() -> Vec<IterationStats> {
+        (0..4)
+            .map(|i| {
+                let ts = vec![10.0 - i as f64, 12.0 - i as f64];
+                IterationStats {
+                    worst: ts[1],
+                    mean: (ts[0] + ts[1]) / 2.0,
+                    best: ts[0],
+                    gbest_tpd: ts[0],
+                    per_particle_tpd: ts,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn transpose_is_correct() {
+        let t = SimTrace::from_stats(&fake_stats());
+        assert_eq!(t.iterations(), 4);
+        assert_eq!(t.per_particle.len(), 2);
+        assert_eq!(t.per_particle[0], vec![10.0, 9.0, 8.0, 7.0]);
+        assert_eq!(t.worst, vec![12.0, 11.0, 10.0, 9.0]);
+    }
+
+    #[test]
+    fn normalized_starts_at_one() {
+        let t = SimTrace::from_stats(&fake_stats()).normalized();
+        assert!((t.worst[0] - 1.0).abs() < 1e-12);
+        assert!(t.best.iter().all(|&x| x <= 1.0));
+    }
+
+    #[test]
+    fn csv_roundtrip_row_count() {
+        let t = SimTrace::from_stats(&fake_stats());
+        let path = std::env::temp_dir().join("repro_trace_test.csv");
+        t.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 5); // header + 4 iterations
+        assert!(text.starts_with("iteration,worst,mean,best,gbest,p0,p1"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Broker integration: in-process and TCP transports, concurrency,
+//! retained semantics, large payloads.
+
+use repro::broker::{Broker, TcpBrokerServer, TcpClient};
+use std::time::Duration;
+
+#[test]
+fn inproc_fanout_to_many_subscribers() {
+    let broker = Broker::new();
+    let mut subs: Vec<_> = (0..20)
+        .map(|i| {
+            let mut c = broker.connect(&format!("sub{i}"));
+            c.subscribe("bench/topic").unwrap();
+            c
+        })
+        .collect();
+    let publisher = broker.connect("pub");
+    publisher.publish("bench/topic", vec![7u8; 1024]).unwrap();
+    for s in &mut subs {
+        let m = s.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.payload.len(), 1024);
+    }
+}
+
+#[test]
+fn inproc_many_publishers_one_subscriber() {
+    let broker = Broker::new();
+    let mut sub = broker.connect("sub");
+    sub.subscribe("w/+").unwrap();
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let b = broker.clone();
+            std::thread::spawn(move || {
+                let c = b.connect(&format!("p{t}"));
+                for i in 0..50 {
+                    c.publish(format!("w/{t}"), vec![i as u8]).unwrap();
+                }
+            })
+        })
+        .collect();
+    let mut got = 0;
+    while got < 400 {
+        sub.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        got += 1;
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn large_payload_shared_delivery() {
+    // A model-sized payload (7.5 MB) fans out without copying.
+    let broker = Broker::new();
+    let mut a = broker.connect("a");
+    let mut b = broker.connect("b");
+    a.subscribe("model").unwrap();
+    b.subscribe("model").unwrap();
+    let payload = std::sync::Arc::new(vec![1u8; 7_500_000]);
+    let p = broker.connect("pub");
+    p.publish_shared("model", payload.clone()).unwrap();
+    let ma = a.recv_timeout(Duration::from_secs(1)).unwrap();
+    let mb = b.recv_timeout(Duration::from_secs(1)).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&ma.payload, &payload));
+    assert!(std::sync::Arc::ptr_eq(&mb.payload, &payload));
+}
+
+#[test]
+fn tcp_roundtrip() {
+    let broker = Broker::new();
+    let server = TcpBrokerServer::start("127.0.0.1:0", broker.clone()).unwrap();
+    let addr = server.addr();
+
+    let mut sub = TcpClient::connect(&addr).unwrap();
+    sub.subscribe("fl/+/x").unwrap();
+    // Give the server a beat to register the subscription.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let mut pub_ = TcpClient::connect(&addr).unwrap();
+    pub_.publish("fl/7/x", b"hello over tcp").unwrap();
+
+    let msg = sub.recv(Duration::from_secs(2)).unwrap();
+    assert_eq!(msg.topic, "fl/7/x");
+    assert_eq!(&**msg.payload, b"hello over tcp");
+}
+
+#[test]
+fn tcp_bridges_to_inproc() {
+    // A TCP publisher reaches an in-process subscriber and vice versa.
+    let broker = Broker::new();
+    let server = TcpBrokerServer::start("127.0.0.1:0", broker.clone()).unwrap();
+
+    let mut inproc = broker.connect("inproc");
+    inproc.subscribe("bridge/in").unwrap();
+
+    let mut tcp = TcpClient::connect(&server.addr()).unwrap();
+    tcp.subscribe("bridge/out").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    tcp.publish("bridge/in", b"from tcp").unwrap();
+    let m = inproc.recv_timeout(Duration::from_secs(2)).unwrap();
+    assert_eq!(&**m.payload, b"from tcp");
+
+    inproc.publish("bridge/out", b"from inproc".to_vec()).unwrap();
+    let m = tcp.recv(Duration::from_secs(2)).unwrap();
+    assert_eq!(&**m.payload, b"from inproc");
+}
+
+#[test]
+fn tcp_retained_message() {
+    let broker = Broker::new();
+    let server = TcpBrokerServer::start("127.0.0.1:0", broker.clone()).unwrap();
+
+    let mut pub_ = TcpClient::connect(&server.addr()).unwrap();
+    pub_.publish_retained("cfg/model", b"v2").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // Late subscriber still receives it.
+    let mut sub = TcpClient::connect(&server.addr()).unwrap();
+    sub.subscribe("cfg/#").unwrap();
+    let m = sub.recv(Duration::from_secs(2)).unwrap();
+    assert_eq!(&**m.payload, b"v2");
+}
+
+#[test]
+fn tcp_large_frame() {
+    // A binary-coded model update (~7.5 MB) over the TCP transport.
+    let broker = Broker::new();
+    let server = TcpBrokerServer::start("127.0.0.1:0", broker.clone()).unwrap();
+
+    let mut sub = TcpClient::connect(&server.addr()).unwrap();
+    sub.subscribe("big").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    let payload: Vec<u8> = (0..7_500_000u32).map(|i| (i % 251) as u8).collect();
+    let mut pub_ = TcpClient::connect(&server.addr()).unwrap();
+    pub_.publish("big", &payload).unwrap();
+
+    let m = sub.recv(Duration::from_secs(10)).unwrap();
+    assert_eq!(m.payload.len(), payload.len());
+    assert_eq!(&**m.payload, &payload[..]);
+}

@@ -1,0 +1,296 @@
+//! Property-based tests (proplite) over the coordinator-side invariants:
+//! hierarchy arithmetic, arrangement/rearrangement, TPD, PSO state,
+//! placement strategies, JSON, codecs.
+
+use repro::fitness::{tpd, tpd_with_memory, ClientAttrs};
+use repro::fl::codec::{ModelCodec, ModelUpdate};
+use repro::hierarchy::{Arrangement, HierarchySpec, Role};
+use repro::json::{self, Value};
+use repro::placement::*;
+use repro::proplite::{forall, Gen};
+use repro::prng::{Pcg32, Rng};
+use repro::pso::{AsyncSwarm, PsoConfig, Swarm};
+
+fn random_spec(g: &mut Gen) -> HierarchySpec {
+    HierarchySpec::new(g.usize_in(1..5), g.usize_in(1..5))
+}
+
+fn random_population(g: &mut Gen, n: usize) -> Vec<ClientAttrs> {
+    let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+    ClientAttrs::sample_population(n, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+}
+
+#[test]
+fn prop_hierarchy_slot_arithmetic_consistent() {
+    forall("hierarchy slot arithmetic", 200, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        // Eq. 5 closed form.
+        let expect: usize = (0..spec.depth).map(|i| spec.width.pow(i as u32)).sum();
+        assert_eq!(dims, expect);
+        // Every non-root slot's parent's children contain it.
+        for s in 1..dims {
+            let parent = spec.parent(s).unwrap();
+            assert!(spec.children(parent).contains(&s));
+        }
+        // Level bookkeeping covers all slots exactly once.
+        let total: usize = (0..spec.depth).map(|l| spec.level_size(l)).sum();
+        assert_eq!(total, dims);
+    });
+}
+
+#[test]
+fn prop_arrangement_partitions_population() {
+    forall("arrangement partitions clients", 200, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..40);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        // Aggregators ∪ trainers = population, no overlap.
+        let mut seen = vec![0u8; cc];
+        for &c in &arr.aggregators {
+            seen[c] += 1;
+        }
+        for c in arr.all_trainers() {
+            seen[c] += 1;
+        }
+        assert!(seen.iter().all(|&n| n == 1), "partition violated");
+        // role_of agrees.
+        for c in 0..cc {
+            match arr.role_of(c) {
+                Role::Aggregator { slot } => assert_eq!(arr.aggregators[slot], c),
+                Role::Trainer { parent_slot } => {
+                    assert!(arr.buffer_of(parent_slot).contains(&c))
+                }
+                Role::Idle => panic!("client {c} idle in full arrangement"),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tpd_positive_and_bounded() {
+    forall("tpd positive and level-bounded", 150, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..30);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        let b = tpd(&arr, &attrs);
+        assert!(b.total > 0.0);
+        assert_eq!(b.level_max.len(), spec.depth);
+        // Total is the sum of level maxima.
+        assert!((b.level_max.iter().sum::<f64>() - b.total).abs() < 1e-9);
+        // Memory-penalized TPD with penalty 1 is identical; ≥ with more.
+        assert_eq!(tpd_with_memory(&arr, &attrs, 1.0), b);
+        assert!(tpd_with_memory(&arr, &attrs, 3.0).total >= b.total - 1e-12);
+    });
+}
+
+#[test]
+fn prop_tpd_swapping_fast_root_helps() {
+    forall("faster root never hurts", 100, |g| {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 3 + g.usize_in(1..20);
+        let mut attrs = random_population(g, cc);
+        // Make client 0 the slowest, client cc-1 the fastest.
+        attrs[0].pspeed = 5.0;
+        attrs[cc - 1].pspeed = 15.0;
+        let slow = tpd(&Arrangement::from_position(spec, &[0, 1, 2], cc), &attrs);
+        let fast = tpd(
+            &Arrangement::from_position(spec, &[cc - 1, 1, 2], cc),
+            &attrs,
+        );
+        assert!(fast.total <= slow.total + 1e-9);
+    });
+}
+
+#[test]
+fn prop_swarm_gbest_monotone_and_valid() {
+    forall("swarm invariants", 60, |g| {
+        let dims = g.usize_in(1..8);
+        let cc = dims + g.usize_in(1..20);
+        let cfg = PsoConfig {
+            particles: g.usize_in(2..8),
+            iterations: 30,
+            ..PsoConfig::paper()
+        };
+        let mut swarm = Swarm::new(dims, cc, cfg, Pcg32::seed_from_u64(g.u64_in(0..1 << 40)));
+        let stats = swarm.run(|pos| pos.iter().sum::<usize>() as f64 + 1.0);
+        for w in stats.windows(2) {
+            assert!(w[1].gbest_tpd <= w[0].gbest_tpd + 1e-12);
+        }
+        let gp = swarm.gbest_placement();
+        let mut s = gp.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), dims);
+        assert!(gp.iter().all(|&c| c < cc));
+    });
+}
+
+#[test]
+fn prop_async_swarm_gbest_equals_min_observed() {
+    forall("async swarm tracks min", 60, |g| {
+        let dims = g.usize_in(1..6);
+        let cc = dims + g.usize_in(1..15);
+        let mut swarm = AsyncSwarm::new(
+            dims,
+            cc,
+            PsoConfig::paper(),
+            Pcg32::seed_from_u64(g.u64_in(0..1 << 40)),
+        );
+        let mut min = f64::INFINITY;
+        for _ in 0..g.usize_in(5..60) {
+            let p = swarm.propose();
+            let d = p.iter().map(|&c| (c + 1) as f64).sum::<f64>();
+            // Once pinned, reports don't change gbest; min only tracks
+            // pre-pin observations.
+            if !swarm.pinned() {
+                min = min.min(d);
+            }
+            swarm.report(d);
+        }
+        if min.is_finite() {
+            assert!((swarm.gbest_delay() - min).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_strategies_always_valid() {
+    forall("strategies propose valid placements", 40, |g| {
+        let dims = g.usize_in(1..6);
+        let cc = dims + g.usize_in(1..15);
+        let seed = g.u64_in(0..1 << 40);
+        let strategies: Vec<Box<dyn PlacementStrategy>> = vec![
+            Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
+            Box::new(RoundRobinPlacement::new(dims, cc)),
+            Box::new(PsoPlacement::new(
+                dims,
+                cc,
+                PsoConfig::paper(),
+                Pcg32::seed_from_u64(seed),
+            )),
+            Box::new(GaPlacement::new(
+                dims,
+                cc,
+                GaConfig::default(),
+                Pcg32::seed_from_u64(seed),
+            )),
+            Box::new(SaPlacement::new(
+                dims,
+                cc,
+                SaConfig::default(),
+                Pcg32::seed_from_u64(seed),
+            )),
+        ];
+        for mut s in strategies {
+            for round in 0..30 {
+                let p = s.propose(round);
+                assert_valid_placement(&p, dims, cc);
+                s.feedback(&p, (round % 7) as f64 + 0.5);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    fn arb_value(g: &mut Gen, depth: usize) -> Value {
+        match if depth > 2 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64_in(-1e9, 1e9) * 1e6).round() / 1e6),
+            3 => {
+                let n = g.usize_in(0..12);
+                Value::Str((0..n).map(|_| char::from(g.usize_in(32..127) as u8)).collect())
+            }
+            4 => Value::Array((0..g.usize_in(0..5)).map(|_| arb_value(g, depth + 1)).collect()),
+            _ => Value::Object(
+                (0..g.usize_in(0..5))
+                    .map(|i| (format!("k{i}"), arb_value(g, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 300, |g| {
+        let v = arb_value(g, 0);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("reparse {text:?}: {e}"));
+        assert_eq!(back, v);
+    });
+}
+
+#[test]
+fn prop_model_codec_roundtrip() {
+    forall("model codec roundtrip", 120, |g| {
+        let n = g.usize_in(0..2000);
+        let params: Vec<f32> = (0..n).map(|_| g.f64_in(-10.0, 10.0) as f32).collect();
+        let update = ModelUpdate {
+            sender: g.usize_in(0..1000),
+            weight: g.f64_in(0.1, 1e6) as f32,
+            params,
+        };
+        // Binary: bit exact.
+        let bin = ModelCodec::decode(&ModelCodec::Binary.encode(&update)).unwrap();
+        assert_eq!(bin, update);
+        // JSON: close.
+        let js = ModelCodec::decode(&ModelCodec::Json.encode(&update)).unwrap();
+        assert_eq!(js.sender, update.sender);
+        assert_eq!(js.params.len(), update.params.len());
+        for (a, b) in update.params.iter().zip(&js.params) {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0));
+        }
+    });
+}
+
+#[test]
+fn prop_topic_matching_reflexive_and_wildcards() {
+    forall("topic matching", 200, |g| {
+        use repro::broker::topic_matches;
+        let n = g.usize_in(1..5);
+        let levels: Vec<String> = (0..n).map(|i| format!("l{}{}", i, g.usize_in(0..5))).collect();
+        let topic = levels.join("/");
+        // Exact self-match.
+        assert!(topic_matches(&topic, &topic));
+        // Replacing any one level with '+' still matches.
+        let k = g.usize_in(0..n);
+        let mut f = levels.clone();
+        f[k] = "+".into();
+        assert!(topic_matches(&f.join("/"), &topic));
+        // '#' prefix matches.
+        if n >= 2 {
+            let prefix = levels[..n - 1].join("/") + "/#";
+            assert!(topic_matches(&prefix, &topic));
+        }
+        // A different first level never matches.
+        let mut g2 = levels.clone();
+        g2[0] = "ZZZ".into();
+        assert!(!topic_matches(&g2.join("/"), &topic));
+    });
+}
+
+#[test]
+fn prop_round_robin_uniform_duty() {
+    forall("round robin uniform duty", 80, |g| {
+        let dims = g.usize_in(1..5);
+        let cc = dims + g.usize_in(0..12) + 1;
+        let mut s = RoundRobinPlacement::new(dims, cc);
+        let mut count = vec![0usize; cc];
+        // One full cycle of cc rounds covers each client dims times.
+        for r in 0..cc {
+            for c in s.propose(r) {
+                count[c] += 1;
+            }
+        }
+        assert!(
+            count.iter().all(|&n| n == dims),
+            "uneven duty: {count:?} (dims {dims}, cc {cc})"
+        );
+    });
+}

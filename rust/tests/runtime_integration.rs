@@ -1,0 +1,219 @@
+//! Runtime ↔ artifacts integration: the rust PJRT path must load every
+//! AOT artifact and produce numerics consistent with the python oracles.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use repro::runtime::ModelRuntime;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<&'static ModelRuntime> {
+    static RT: OnceLock<Option<ModelRuntime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        if !artifacts_dir().join("meta.json").exists() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+        Some(ModelRuntime::load(&artifacts_dir()).expect("loading artifacts"))
+    })
+    .as_ref()
+}
+
+fn fake_batch(rt: &ModelRuntime, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    use repro::prng::{Pcg32, Rng};
+    let mut rng = Pcg32::seed_from_u64(seed);
+    let d = rt.meta.input_dim;
+    let x: Vec<f32> = (0..b * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let y: Vec<i32> = (0..b)
+        .map(|_| rng.gen_range(rt.meta.num_classes as u64) as i32)
+        .collect();
+    (x, y)
+}
+
+#[test]
+fn init_params_shape_and_determinism() {
+    let Some(rt) = runtime() else { return };
+    let p1 = rt.init_params([0, 42]).unwrap();
+    let p2 = rt.init_params([0, 42]).unwrap();
+    assert_eq!(p1.len(), rt.meta.param_count);
+    assert_eq!(p1, p2, "init must be deterministic per seed");
+    let p3 = rt.init_params([1, 43]).unwrap();
+    assert_ne!(p1, p3, "different seeds must differ");
+    // He-init sanity: non-trivial spread, no NaNs.
+    assert!(p1.iter().all(|v| v.is_finite()));
+    let std = {
+        let mean = p1.iter().map(|&v| v as f64).sum::<f64>() / p1.len() as f64;
+        (p1.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / p1.len() as f64).sqrt()
+    };
+    assert!(std > 0.01 && std < 0.2, "init std {std}");
+}
+
+#[test]
+fn train_step_descends_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut params = rt.init_params([0, 7]).unwrap();
+    let (x, y) = fake_batch(rt, rt.meta.train_batch, 1);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (new_params, loss) = rt.train_step(&params, &x, &y, 0.1).unwrap();
+        params = new_params;
+        losses.push(loss);
+    }
+    assert!(
+        losses[5] < losses[0] * 0.5,
+        "loss should halve on a fixed batch: {losses:?}"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn train_step_initial_loss_near_log10() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params([0, 9]).unwrap();
+    let (x, y) = fake_batch(rt, rt.meta.train_batch, 2);
+    let (_, loss) = rt.train_step(&params, &x, &y, 0.0).unwrap();
+    assert!(
+        (loss - (10f32).ln()).abs() < 1.0,
+        "random-init CE loss should be ≈ ln(10), got {loss}"
+    );
+}
+
+#[test]
+fn train_step_zero_lr_is_identity() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params([3, 4]).unwrap();
+    let (x, y) = fake_batch(rt, rt.meta.train_batch, 3);
+    let (new_params, _) = rt.train_step(&params, &x, &y, 0.0).unwrap();
+    assert_eq!(params, new_params);
+}
+
+#[test]
+fn evaluate_returns_sane_metrics() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params([5, 6]).unwrap();
+    let (x, y) = fake_batch(rt, rt.meta.eval_batch, 4);
+    let (loss, acc) = rt.evaluate(&params, &x, &y).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn aggregate_identity_on_same_model() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params([1, 1]).unwrap();
+    let out = rt.aggregate(&[&params, &params, &params], &[1.0, 1.0, 1.0]).unwrap();
+    for (a, b) in params.iter().zip(&out) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn aggregate_midpoint_and_k_padding() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params([2, 2]).unwrap();
+    let b: Vec<f32> = a.iter().map(|v| v + 1.0).collect();
+    // K=2 exact artifact.
+    let mid = rt.aggregate(&[&a, &b], &[1.0, 1.0]).unwrap();
+    for i in (0..mid.len()).step_by(100_000) {
+        assert!((mid[i] - (a[i] + 0.5)).abs() < 1e-4);
+    }
+    // K=6 → padded into the k8 artifact; zero weights are inert.
+    let models = [&a[..], &b[..], &a[..], &b[..], &a[..], &b[..]];
+    let w = [1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0];
+    let mid6 = rt.aggregate(&models, &w).unwrap();
+    for i in (0..mid6.len()).step_by(100_000) {
+        assert!((mid6[i] - (a[i] + 0.5)).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn aggregate_weighted() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.init_params([8, 8]).unwrap();
+    let b: Vec<f32> = a.iter().map(|v| v + 4.0).collect();
+    // weights 3:1 ⇒ out = a + 1.0
+    let out = rt.aggregate(&[&a, &b], &[3.0, 1.0]).unwrap();
+    for i in (0..out.len()).step_by(50_000) {
+        assert!((out[i] - (a[i] + 1.0)).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn aggregate_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.init_params([0, 1]).unwrap();
+    assert!(rt.aggregate(&[], &[]).is_err());
+    assert!(rt.aggregate(&[&params], &[1.0, 2.0]).is_err());
+    assert!(rt.aggregate(&[&params], &[0.0]).is_err());
+    assert!(rt.aggregate(&[&params[..10]], &[1.0]).is_err());
+    let nine = vec![&params[..]; 9];
+    assert!(rt.aggregate(&nine, &[1.0; 9]).is_err(), "no K≥9 artifact");
+}
+
+#[test]
+fn momentum_step_matches_semantics() {
+    let Some(rt) = runtime() else { return };
+    if !rt.has_momentum() {
+        eprintln!("SKIP: momentum artifact not exported");
+        return;
+    }
+    let params = rt.init_params([4, 4]).unwrap();
+    let velocity = vec![0.0f32; params.len()];
+    let (x, y) = fake_batch(rt, rt.meta.train_batch, 9);
+    // mu = 0 with zero velocity must equal the plain SGD step.
+    let (p_sgd, _) = rt.train_step(&params, &x, &y, 0.1).unwrap();
+    let (p_mom, v_mom, _) = rt
+        .train_step_momentum(&params, &velocity, &x, &y, 0.1, 0.0)
+        .unwrap();
+    for (i, (a, b)) in p_sgd.iter().zip(&p_mom).enumerate().step_by(100_000) {
+        assert!((a - b).abs() < 1e-5, "at {i}: sgd {a} vs momentum {b}");
+    }
+    assert!(v_mom.iter().any(|&v| v != 0.0), "velocity should be the gradient");
+
+    // Momentum training descends on a fixed batch.
+    let mut p = params;
+    let mut v = vec![0.0f32; p.len()];
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (np, nv, loss) = rt.train_step_momentum(&p, &v, &x, &y, 0.05, 0.9).unwrap();
+        p = np;
+        v = nv;
+        losses.push(loss);
+    }
+    assert!(losses[5] < losses[0] * 0.5, "{losses:?}");
+}
+
+#[test]
+fn federated_micro_round_improves_loss() {
+    // The full semantic chain: K trainers step locally from the same
+    // global model on different shards; the aggregate beats the initial
+    // model on every shard. This is what the SDFL framework relies on.
+    let Some(rt) = runtime() else { return };
+    let global = rt.init_params([0, 99]).unwrap();
+    let mut locals: Vec<Vec<f32>> = Vec::new();
+    let mut batches = Vec::new();
+    for k in 0..3 {
+        let (x, y) = fake_batch(rt, rt.meta.train_batch, 50 + k);
+        let mut p = global.clone();
+        for _ in 0..3 {
+            let (np, _) = rt.train_step(&p, &x, &y, 0.1).unwrap();
+            p = np;
+        }
+        locals.push(p);
+        batches.push((x, y));
+    }
+    let refs: Vec<&[f32]> = locals.iter().map(Vec::as_slice).collect();
+    let agg = rt.aggregate(&refs, &[1.0, 1.0, 1.0]).unwrap();
+    for (x, y) in &batches {
+        let (_, loss_before) = rt.train_step(&global, x, y, 0.0).unwrap();
+        let (_, loss_after) = rt.train_step(&agg, x, y, 0.0).unwrap();
+        assert!(
+            loss_after < loss_before,
+            "aggregated model should beat init: {loss_after} vs {loss_before}"
+        );
+    }
+}
