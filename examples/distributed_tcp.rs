@@ -91,18 +91,20 @@ fn main() -> Result<()> {
         model_seed: [0, 7],
         data_seed: 1234,
     };
-    let strategy = Box::new(PsoPlacement::new(
+    let mut strategy = PsoPlacement::new(
         dims,
         workers,
         PsoConfig::paper(),
         Pcg32::seed_from_u64(5),
-    ));
-    let mut coord = Coordinator::new(cfg, broker.connect("coordinator"), strategy, runtime)?;
+    );
+    let mut coord = Coordinator::new(cfg, broker.connect("coordinator"), runtime)?;
 
     println!("waiting for {workers} workers to join ...");
     coord.wait_for_clients(workers, Duration::from_secs(60))?;
 
-    coord.run(rounds)?;
+    // Drive the optimizer through the live-session environment: every
+    // evaluation is one measured FL round over the TCP broker.
+    coord.run_session(&mut strategy, rounds)?;
 
     println!("\nper-round results:");
     for r in coord.recorder().records() {

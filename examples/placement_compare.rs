@@ -10,9 +10,11 @@
 //!
 //! ```sh
 //! cargo run --release --example placement_compare -- --rounds 50 --time-scale 1.0
+//! cargo run --release --example placement_compare -- --strategies random,uniform,pso,ga
 //! ```
 
 use repro::configio::Args;
+use repro::placement::registry;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env().unwrap_or_default();
@@ -21,5 +23,10 @@ fn main() -> anyhow::Result<()> {
         .f64_flag("time-scale", 1.0)
         .map_err(anyhow::Error::msg)?;
     let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
-    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir)
+    // Any registry strategies (default: the paper's random/uniform/pso).
+    let strategies = args.list_flag("strategies").unwrap_or_default();
+    for name in &strategies {
+        registry::canonical(name).map_err(anyhow::Error::msg)?;
+    }
+    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir, &strategies)
 }

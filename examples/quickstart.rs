@@ -11,7 +11,7 @@
 use repro::configio::SimScenario;
 use repro::fitness::{tpd, ClientAttrs};
 use repro::hierarchy::{Arrangement, HierarchySpec};
-use repro::placement::{PlacementStrategy, RandomPlacement, RoundRobinPlacement};
+use repro::placement::{RandomPlacement, RoundRobinPlacement, Stepwise};
 use repro::prng::Pcg32;
 use repro::sim::run_sim;
 
@@ -51,14 +51,27 @@ fn main() {
         .total
     };
 
-    let mut random = RandomPlacement::new(
+    // The Stepwise adapter exposes the classic one-placement-per-round
+    // protocol over any batched Optimizer.
+    let mut random = Stepwise::new(Box::new(RandomPlacement::new(
         spec.dimensions(),
         scenario.client_count(),
         Pcg32::seed_from_u64(1),
-    );
-    let mut uniform = RoundRobinPlacement::new(spec.dimensions(), scenario.client_count());
-    let avg = |s: &mut dyn PlacementStrategy| -> f64 {
-        (0..100).map(|r| tpd_of(&s.propose(r))).sum::<f64>() / 100.0
+    )));
+    let mut uniform = Stepwise::new(Box::new(RoundRobinPlacement::new(
+        spec.dimensions(),
+        scenario.client_count(),
+    )));
+    let avg = |s: &mut Stepwise| -> f64 {
+        (0..100)
+            .map(|r| {
+                let placement = s.propose(r);
+                let t = tpd_of(&placement);
+                s.feedback(t);
+                t
+            })
+            .sum::<f64>()
+            / 100.0
     };
     let rand_avg = avg(&mut random);
     let uni_avg = avg(&mut uniform);

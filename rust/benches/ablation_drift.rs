@@ -2,14 +2,16 @@
 //! variation. At round 150 the simulated system drifts (fast clients
 //! become slow and vice versa); plain Flag-Swap stays pinned to the
 //! stale placement while the adaptive variant detects the delay drift
-//! and re-optimizes.
+//! and re-optimizes. The drift is modeled as two [`AnalyticTpd`]
+//! environments the same registry-built optimizer is driven through in
+//! sequence.
 //!
 //! Run: `cargo bench --bench ablation_drift`
 
 use repro::bench::report_table;
-use repro::fitness::{tpd, ClientAttrs};
-use repro::hierarchy::{Arrangement, HierarchySpec};
-use repro::placement::{AdaptivePsoPlacement, PlacementStrategy, PsoPlacement, RandomPlacement};
+use repro::fitness::ClientAttrs;
+use repro::hierarchy::HierarchySpec;
+use repro::placement::{drive, registry, AnalyticTpd};
 use repro::prng::Pcg32;
 use repro::pso::PsoConfig;
 
@@ -24,7 +26,7 @@ fn main() {
     let cc = dims + 32;
 
     let mut rows = Vec::new();
-    for name in ["random", "pso", "pso-adaptive"] {
+    for name in ["random", "pso", "adaptive-pso"] {
         let mut pre = Vec::new();
         let mut post = Vec::new();
         for seed in 0..SEEDS {
@@ -40,35 +42,16 @@ fn main() {
                     ..c.clone()
                 })
                 .collect();
-            let mut strategy: Box<dyn PlacementStrategy> = match name {
-                "random" => Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
-                "pso" => Box::new(PsoPlacement::new(
-                    dims,
-                    cc,
-                    PsoConfig::paper(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                "pso-adaptive" => Box::new(AdaptivePsoPlacement::new(
-                    dims,
-                    cc,
-                    PsoConfig::paper(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                _ => unreachable!(),
-            };
-            for round in 0..ROUNDS {
-                let at = if round < DRIFT_AT { &attrs } else { &drifted };
-                let p = strategy.propose(round);
-                let t = tpd(&Arrangement::from_position(spec, &p, cc), at).total;
-                strategy.feedback(&p, t);
-                // Score the settled windows before/after the drift.
-                if (DRIFT_AT - 30..DRIFT_AT).contains(&round) {
-                    pre.push(t);
-                }
-                if (ROUNDS - 30..ROUNDS).contains(&round) {
-                    post.push(t);
-                }
-            }
+            let mut opt = registry::build_live(name, dims, cc, PsoConfig::paper(), seed)
+                .expect(name);
+            let mut env_pre = AnalyticTpd::new(spec, attrs);
+            let mut env_post = AnalyticTpd::new(spec, drifted);
+            let stable = drive(opt.as_mut(), &mut env_pre, DRIFT_AT).expect(name);
+            let after = drive(opt.as_mut(), &mut env_post, ROUNDS - DRIFT_AT).expect(name);
+            // Score the settled windows before/after the drift (all
+            // three strategies have group_size 1 → one row per round).
+            pre.extend(stable.stats[DRIFT_AT - 30..].iter().map(|s| s.best));
+            post.extend(after.stats[after.stats.len() - 30..].iter().map(|s| s.best));
         }
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         rows.push((name.to_string(), vec![mean(&pre), mean(&post)]));
@@ -79,8 +62,8 @@ fn main() {
         &rows,
     );
     println!(
-        "expected shape: pre-drift pso ≈ pso-adaptive (both converged);\n\
+        "expected shape: pre-drift pso ≈ adaptive-pso (both converged);\n\
          post-drift plain pso stays pinned to the stale placement while\n\
-         pso-adaptive restarts and re-converges to a low TPD."
+         adaptive-pso restarts and re-converges to a low TPD."
     );
 }

@@ -1,15 +1,17 @@
 //! Ablation A2: black-box optimizer comparison under an equal
 //! evaluation budget — backs the paper's §II claim that PSO converges
-//! faster/better than GA for this problem, and adds SA + pure random
-//! search as controls. All four run through the same black-box
-//! [`PlacementStrategy`] protocol (one TPD evaluation per "round").
+//! faster/better than GA for this problem, and adds SA, tabu search and
+//! pure random search as controls. Every optimizer is built through the
+//! strategy registry and driven against the [`AnalyticTpd`] environment
+//! by the generic `drive` loop — the same code path `repro sim
+//! --strategy <name>` uses.
 //!
 //! Run: `cargo bench --bench ablation_optimizers`
 
 use repro::bench::report_table;
-use repro::fitness::{tpd, ClientAttrs};
-use repro::hierarchy::{Arrangement, HierarchySpec};
-use repro::placement::*;
+use repro::fitness::ClientAttrs;
+use repro::hierarchy::HierarchySpec;
+use repro::placement::{drive, registry, AnalyticTpd, Optimizer, PsoPlacement};
 use repro::prng::Pcg32;
 use repro::pso::PsoConfig;
 
@@ -23,63 +25,30 @@ fn main() {
     let cc = dims + spec.leaf_slots().len() * 2; // 213 clients
 
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
-    for name in ["random", "pso", "pso-nopin", "ga", "sa", "tabu"] {
+    for name in ["random", "pso", "pso-nopin", "pso-batched", "ga", "sa", "tabu"] {
         let mut bests = Vec::new();
         let mut best_at_half = Vec::new();
         for seed in 0..SEEDS {
             let mut rng = Pcg32::seed_from_u64(1000 + seed);
             let attrs =
                 ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
-            let tpd_of = |pos: &[usize]| {
-                tpd(&Arrangement::from_position(spec, pos, cc), &attrs).total
-            };
-            let mut strategy: Box<dyn PlacementStrategy> = match name {
-                "random" => Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
-                "pso" => Box::new(PsoPlacement::new(
+            let mut env = AnalyticTpd::new(spec, attrs);
+            // "pso-nopin" isolates pure PSO search quality (no exploit
+            // phase); it is intentionally not a registry strategy.
+            let mut opt: Box<dyn Optimizer> = if name == "pso-nopin" {
+                Box::new(PsoPlacement::without_pinning(
                     dims,
                     cc,
                     PsoConfig::paper(),
                     Pcg32::seed_from_u64(seed),
-                )),
-                "pso-nopin" => Box::new(PsoPlacement::without_pinning(
-                    dims,
-                    cc,
-                    PsoConfig::paper(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                "ga" => Box::new(GaPlacement::new(
-                    dims,
-                    cc,
-                    GaConfig::default(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                "sa" => Box::new(SaPlacement::new(
-                    dims,
-                    cc,
-                    SaConfig::default(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                "tabu" => Box::new(TabuPlacement::new(
-                    dims,
-                    cc,
-                    TabuConfig::default(),
-                    Pcg32::seed_from_u64(seed),
-                )),
-                _ => unreachable!(),
+                ))
+            } else {
+                registry::build_live(name, dims, cc, PsoConfig::paper(), seed).expect(name)
             };
-            let mut best = f64::INFINITY;
-            let mut half = f64::INFINITY;
-            for round in 0..BUDGET {
-                let p = strategy.propose(round);
-                let t = tpd_of(&p);
-                strategy.feedback(&p, t);
-                best = best.min(t);
-                if round == BUDGET / 2 {
-                    half = best;
-                }
-            }
-            bests.push(best);
-            best_at_half.push(half);
+            let half = drive(opt.as_mut(), &mut env, BUDGET / 2).expect(name);
+            let full = drive(opt.as_mut(), &mut env, BUDGET - BUDGET / 2).expect(name);
+            best_at_half.push(half.best_delay);
+            bests.push(half.best_delay.min(full.best_delay));
         }
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
         rows.push((
@@ -93,9 +62,9 @@ fn main() {
         &rows,
     );
     println!(
-        "expected shape: pso-nopin/ga/sa beat random search. Deployed Flag-Swap\n\
-         ('pso') pins gbest after convergence — it stops searching early by\n\
-         design, trading search depth for stable low-delay production rounds\n\
-         (what Fig. 4 measures). pso-nopin isolates pure PSO search quality."
+        "expected shape: pso-nopin/pso-batched/ga/sa/tabu beat random search.\n\
+         Deployed Flag-Swap ('pso') pins gbest after convergence — it stops\n\
+         searching early by design, trading search depth for stable low-delay\n\
+         production rounds (what Fig. 4 measures)."
     );
 }

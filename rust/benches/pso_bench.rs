@@ -47,4 +47,38 @@ fn main() {
             black_box(tpd(&Arrangement::from_position(spec, &pos, cc), &attrs).total)
         });
     }
+
+    // Optimizer×Environment API: one full PSO iteration through the
+    // AnalyticTpd environment — exact mode pays one eval_batch dispatch
+    // per particle, batched mode one dispatch per iteration (the
+    // fig3_sim hot loop).
+    use repro::placement::{AnalyticTpd, Environment, Optimizer, SwarmOptimizer};
+    for (d, w) in [(4usize, 4usize), (5, 4)] {
+        let spec = HierarchySpec::new(d, w);
+        let dims = spec.dimensions();
+        let cc = dims + spec.leaf_slots().len() * 2;
+        let mut rng = Pcg32::seed_from_u64(4);
+        let attrs = ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+        let particles = PsoConfig::paper().particles;
+
+        let mut env = AnalyticTpd::new(spec, attrs.clone());
+        let mut exact = SwarmOptimizer::exact(dims, cc, PsoConfig::paper(), rng.split());
+        b.iter(&format!("iteration/exact D{d} dims={dims}"), || {
+            for _ in 0..particles {
+                let batch = exact.propose_batch(0);
+                let delays = env.eval_batch(&batch).unwrap();
+                exact.observe_batch(&batch, &delays);
+            }
+            black_box(())
+        });
+
+        let mut env = AnalyticTpd::new(spec, attrs);
+        let mut batched = SwarmOptimizer::batched(dims, cc, PsoConfig::paper(), rng.split());
+        b.iter(&format!("iteration/batched D{d} dims={dims}"), || {
+            let batch = batched.propose_batch(0);
+            let delays = env.eval_batch(&batch).unwrap();
+            batched.observe_batch(&batch, &delays);
+            black_box(())
+        });
+    }
 }

@@ -84,6 +84,18 @@ impl Args {
     pub fn bool_flag(&self, key: &str) -> bool {
         matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Comma-separated list flag (`--strategies random,uniform,pso`).
+    /// Empty entries are dropped; `None` when the flag is absent.
+    pub fn list_flag(&self, key: &str) -> Option<Vec<String>> {
+        self.flag(key).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +143,26 @@ mod tests {
         let a = parse("--dry-run --seed 9");
         assert!(a.bool_flag("dry-run"));
         assert_eq!(a.u64_flag("seed", 0).unwrap(), 9);
+    }
+
+    #[test]
+    fn sim_strategy_flag_parses() {
+        // `repro sim --strategy ga` — the registry-driven launcher form.
+        let a = parse("sim --strategy ga");
+        assert_eq!(a.subcommand.as_deref(), Some("sim"));
+        assert_eq!(a.flag("strategy"), Some("ga"));
+        assert_eq!(a.str_flag("strategy", "pso"), "ga");
+    }
+
+    #[test]
+    fn strategies_list_flag_parses() {
+        let a = parse("compare --strategies random,uniform,pso");
+        assert_eq!(
+            a.list_flag("strategies").unwrap(),
+            vec!["random", "uniform", "pso"]
+        );
+        assert_eq!(a.list_flag("absent"), None);
+        let b = parse("compare --strategies=ga,,sa");
+        assert_eq!(b.list_flag("strategies").unwrap(), vec!["ga", "sa"]);
     }
 }

@@ -23,6 +23,9 @@ pub struct SimScenario {
     pub mdatasize: f64,
     /// Root seed for client attributes + optimizer randomness.
     pub seed: u64,
+    /// Placement strategy (a `placement::registry` name; the CLI
+    /// `--strategy` flag overrides it).
+    pub strategy: String,
 }
 
 impl Default for SimScenario {
@@ -36,6 +39,7 @@ impl Default for SimScenario {
             memcap_range: (10.0, 50.0),
             mdatasize: 5.0,
             seed: 42,
+            strategy: "pso".to_string(),
         }
     }
 }
@@ -98,6 +102,12 @@ impl SimScenario {
         };
         sc.depth = get_usize("sim", "depth", sc.depth)?;
         sc.width = get_usize("sim", "width", sc.width)?;
+        if let Some(v) = doc.get("sim", "strategy") {
+            sc.strategy = v
+                .as_str()
+                .ok_or_else(|| "sim.strategy: expected string".to_string())?
+                .to_string();
+        }
         sc.trainers_per_leaf = get_usize("sim", "trainers_per_leaf", sc.trainers_per_leaf)?;
         sc.seed = get_usize("sim", "seed", sc.seed as usize)? as u64;
         sc.mdatasize = get_f64("sim", "mdatasize", sc.mdatasize)?;
@@ -258,6 +268,14 @@ inertia = 0.4
         assert!((sc.pso.inertia - 0.4).abs() < 1e-12);
         // Unset keys keep paper defaults.
         assert!((sc.pso.social - 1.0).abs() < 1e-12);
+        assert_eq!(sc.strategy, "pso");
+    }
+
+    #[test]
+    fn toml_strategy_key_parses() {
+        let doc = TomlDoc::parse("[sim]\nstrategy = \"ga\"\n").unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.strategy, "ga");
     }
 
     #[test]

@@ -1,7 +1,12 @@
-//! The session coordinator: drives FL rounds, measures each round's
+//! The session coordinator: executes FL rounds and measures each round's
 //! wall-clock Total Processing Delay (the paper's black-box fitness
-//! signal), feeds it to the placement strategy, and records the series
-//! behind Fig. 4.
+//! signal). Placement *search* lives outside: the coordinator exposes
+//! [`Coordinator::execute_round`] (run one round with a given placement)
+//! and [`LiveSession`] (the [`Environment`] adapter over measured
+//! rounds), and [`Coordinator::run_session`] drives any [`Optimizer`]
+//! through the generic [`drive`] loop — the XAIN-style controller /
+//! aggregator split that lets every strategy run against live rounds,
+//! emulated delays, or the analytic TPD model unchanged.
 
 use super::codec::{ModelCodec, ModelUpdate};
 use super::messages::{ReadyMsg, RoundStart};
@@ -10,7 +15,9 @@ use crate::broker::BrokerClient;
 use crate::hierarchy::{Arrangement, HierarchySpec};
 use crate::log_info;
 use crate::metrics::{RoundRecord, RoundRecorder, Stopwatch};
-use crate::placement::{assert_valid_placement, PlacementStrategy};
+use crate::placement::{
+    drive, validate_placement, Environment, Optimizer, Placement, PlacementError,
+};
 use crate::runtime::ModelRuntime;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -48,12 +55,12 @@ impl CoordinatorConfig {
     }
 }
 
-/// The coordinator node.
+/// The coordinator node: round execution + measurement (no placement
+/// policy of its own).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     spec: HierarchySpec,
     client: BrokerClient,
-    strategy: Box<dyn PlacementStrategy>,
     runtime: Arc<ModelRuntime>,
     /// Current global model (flat params).
     global: Vec<f32>,
@@ -61,13 +68,14 @@ pub struct Coordinator {
     /// Held-out eval batch.
     eval_x: Vec<f32>,
     eval_y: Vec<i32>,
+    /// Strategy label stamped on round records (set by `run_session`).
+    strategy_label: String,
 }
 
 impl Coordinator {
     pub fn new(
         cfg: CoordinatorConfig,
         client: BrokerClient,
-        strategy: Box<dyn PlacementStrategy>,
         runtime: Arc<ModelRuntime>,
     ) -> Result<Coordinator> {
         let spec = HierarchySpec::new(cfg.depth, cfg.width);
@@ -100,12 +108,12 @@ impl Coordinator {
             cfg,
             spec,
             client,
-            strategy,
             runtime,
             global,
             recorder: RoundRecorder::new(),
             eval_x,
             eval_y,
+            strategy_label: "manual".to_string(),
         })
     }
 
@@ -119,9 +127,15 @@ impl Coordinator {
         &self.global
     }
 
-    /// Strategy label (for CSV output).
-    pub fn strategy_name(&self) -> &'static str {
-        self.strategy.name()
+    /// Strategy label stamped on round records.
+    pub fn strategy_label(&self) -> &str {
+        &self.strategy_label
+    }
+
+    /// Override the label stamped on subsequent round records (set
+    /// automatically by [`Coordinator::run_session`]).
+    pub fn set_strategy_label(&mut self, label: &str) {
+        self.strategy_label = label.to_string();
     }
 
     /// Block until `n` distinct clients have announced themselves on the
@@ -152,11 +166,14 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Run one FL round; returns its record.
-    pub fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
-        let placement = self.strategy.propose(round);
-        assert_valid_placement(&placement, self.spec.dimensions(), self.cfg.client_count);
-        let arr = Arrangement::from_position(self.spec, &placement, self.cfg.client_count);
+    /// Execute one FL round with a given placement and measure its
+    /// wall-clock delay; returns the round's record. This is the
+    /// policy-free primitive both [`LiveSession`] and external drivers
+    /// build on.
+    pub fn execute_round(&mut self, round: usize, placement: &Placement) -> Result<RoundRecord> {
+        validate_placement(placement, self.spec.dimensions(), self.cfg.client_count)
+            .map_err(|e| anyhow!("round {round}: {e}"))?;
+        let arr = Arrangement::from_position(self.spec, placement, self.cfg.client_count);
 
         // Subscribe result/ready before announcing the round.
         let ready_topic = roles::ready_topic(&self.cfg.session, round);
@@ -229,10 +246,7 @@ impl Coordinator {
         // in the broker's retained store).
         let _ = self.client.clear_retained(&global_topic);
 
-        // 5. Black-box feedback to the optimizer.
-        self.strategy.feedback(&placement, delay.as_secs_f64());
-
-        // 6. Optional evaluation (outside the measured delay).
+        // 5. Optional evaluation (outside the measured delay).
         let loss = if self.cfg.eval_every > 0 && round % self.cfg.eval_every == 0 {
             let (loss, _acc) = self
                 .runtime
@@ -244,10 +258,10 @@ impl Coordinator {
 
         let rec = RoundRecord {
             round,
-            strategy: self.strategy.name().to_string(),
+            strategy: self.strategy_label.clone(),
             delay,
             loss,
-            placement,
+            placement: placement.to_vec(),
         };
         log_info!(
             "coord",
@@ -261,11 +275,13 @@ impl Coordinator {
         Ok(rec)
     }
 
-    /// Run `rounds` rounds.
-    pub fn run(&mut self, rounds: usize) -> Result<()> {
-        for r in 0..rounds {
-            self.run_round(r)?;
-        }
+    /// Drive `optimizer` for `rounds` live FL rounds through the
+    /// [`LiveSession`] environment: propose → execute round → observe
+    /// measured delay (the paper's black-box loop).
+    pub fn run_session(&mut self, optimizer: &mut dyn Optimizer, rounds: usize) -> Result<()> {
+        self.strategy_label = optimizer.name().to_string();
+        let mut env = LiveSession::new(self);
+        drive(optimizer, &mut env, rounds)?;
         Ok(())
     }
 
@@ -318,5 +334,37 @@ impl Coordinator {
         );
         self.global = params;
         Ok(())
+    }
+}
+
+/// The live-measurement [`Environment`]: every evaluation runs one real
+/// FL round through the coordinator and returns its measured wall-clock
+/// delay. Round numbering continues from the coordinator's recorder, so
+/// repeated sessions extend the same series.
+pub struct LiveSession<'a> {
+    coord: &'a mut Coordinator,
+    next_round: usize,
+}
+
+impl<'a> LiveSession<'a> {
+    pub fn new(coord: &'a mut Coordinator) -> LiveSession<'a> {
+        let next_round = coord.recorder.len();
+        LiveSession { coord, next_round }
+    }
+}
+
+impl Environment for LiveSession<'_> {
+    fn name(&self) -> &'static str {
+        "live-session"
+    }
+
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
+        let round = self.next_round;
+        let rec = self
+            .coord
+            .execute_round(round, placement)
+            .map_err(|e| PlacementError::Environment(format!("{e:#}")))?;
+        self.next_round += 1;
+        Ok(rec.delay.as_secs_f64())
     }
 }

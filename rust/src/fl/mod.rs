@@ -14,10 +14,11 @@
 //!   or length-prefixed binary (perf variant; ablation A4).
 //! * [`emulation`] — heterogeneous-client throttling (docker substitute).
 //! * [`agent`] — the client agent: trains and/or aggregates per role.
-//! * [`coordinator`] — drives rounds, measures TPD, feeds the placement
-//!   strategy, records Fig-4 data.
-//! * [`session`] — wires broker + agents + coordinator into a running
-//!   deployment.
+//! * [`coordinator`] — executes rounds, measures TPD, exposes the
+//!   [`LiveSession`] environment the placement optimizers run against,
+//!   records Fig-4 data.
+//! * [`session`] — wires broker + agents + coordinator + optimizer into
+//!   a running deployment.
 
 pub mod agent;
 pub mod codec;
@@ -29,7 +30,7 @@ pub mod session;
 
 pub use agent::ClientAgent;
 pub use codec::ModelCodec;
-pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use coordinator::{Coordinator, CoordinatorConfig, LiveSession};
 pub use emulation::EmulatedClock;
 pub use messages::{ReadyMsg, ResultMeta, RoundStart};
 pub use session::Deployment;

@@ -7,27 +7,29 @@ use super::emulation::EmulatedClock;
 use crate::broker::Broker;
 use crate::configio::DeployScenario;
 use crate::data::{SynthConfig, SynthDataset};
-use crate::placement::PlacementStrategy;
+use crate::placement::Optimizer;
 use crate::runtime::ModelRuntime;
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// A running SDFL deployment (agents on threads, coordinator inline).
+/// A running SDFL deployment (agents on threads, coordinator inline,
+/// placement optimizer driven through the live-session environment).
 pub struct Deployment {
     pub coordinator: Coordinator,
     pub broker: Broker,
+    optimizer: Box<dyn Optimizer>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Deployment {
     /// Spawn one agent thread per client in the scenario and build the
-    /// coordinator with `strategy`.
+    /// coordinator; `optimizer` proposes each round's placement.
     pub fn launch(
         scenario: &DeployScenario,
         session: &str,
         runtime: Arc<ModelRuntime>,
-        strategy: Box<dyn PlacementStrategy>,
+        optimizer: Box<dyn Optimizer>,
         time_scale: f64,
     ) -> Result<Deployment> {
         let broker = Broker::new();
@@ -79,18 +81,25 @@ impl Deployment {
             model_seed: [0, scenario.seed as u32],
             data_seed: scenario.seed,
         };
-        let coordinator = Coordinator::new(cfg, broker.connect("coordinator"), strategy, runtime)?;
+        let coordinator = Coordinator::new(cfg, broker.connect("coordinator"), runtime)?;
 
         Ok(Deployment {
             coordinator,
             broker,
+            optimizer,
             handles,
         })
     }
 
-    /// Run `rounds` rounds, then return self for inspection.
+    /// Run `rounds` rounds (optimizer propose → live round → observe),
+    /// then return self for inspection.
     pub fn run(&mut self, rounds: usize) -> Result<()> {
-        self.coordinator.run(rounds)
+        self.coordinator.run_session(self.optimizer.as_mut(), rounds)
+    }
+
+    /// The placement optimizer driving this deployment.
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        &*self.optimizer
     }
 
     /// Shut down agents and join their threads.

@@ -7,7 +7,10 @@
 //! * **L3 (this crate)** — the SDFL coordination plane: an MQTT-lite
 //!   pub/sub [`broker`], the SDFLMQ-style [`fl`] framework
 //!   (roles-as-topics, coordinator, agtrainer agents, round FSM), the
-//!   paper's [`pso`] optimizer and the [`placement`] strategy zoo, the
+//!   paper's [`pso`] optimizer and the [`placement`] layer — a
+//!   registry-driven `Optimizer` × `Environment` API running every
+//!   strategy (PSO, GA, SA, tabu, adaptive, baselines) against every
+//!   delay oracle (analytic TPD, emulated testbed, live rounds) — the
 //!   [`hierarchy`] model and its [`fitness`] (TPD) function, plus the
 //!   [`sim`]ulator that regenerates the paper's Fig. 3.
 //! * **L2/L1 (python, build-time only)** — the 1.8 M-parameter MLP and

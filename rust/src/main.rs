@@ -1,16 +1,17 @@
 //! `repro` — CLI launcher for the Flag-Swap SDFL system.
 //!
 //! ```text
-//! repro sim        [--depth D --width W --particles P --iterations N --seed S --out csv]
+//! repro sim        [--strategy NAME --depth D --width W --particles P --iterations N --seed S --out csv]
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
-//! repro compare    [--rounds N --time-scale X]   # Fig-4: random vs uniform vs pso
+//! repro compare    [--rounds N --time-scale X --strategies a,b,c]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
 //! ```
 
 use anyhow::{anyhow, Result};
 use repro::configio::{Args, SimScenario};
-use repro::sim::{ascii_plot, run_sim};
+use repro::placement::registry;
+use repro::sim::{ascii_plot, run_sim, run_sim_with};
 
 fn main() -> Result<()> {
     let args = Args::parse_env().map_err(|e| anyhow!(e))?;
@@ -28,12 +29,23 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: repro <sim|fig3|compare|e2e|broker> [flags]\n\
                  \n\
-                 sim      one PSO placement simulation (Fig-3 style)\n\
+                 sim      one placement simulation (Fig-3 style); --strategy NAME\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
-                 compare  Fig-4 deployment comparison (random/uniform/pso)\n\
+                 compare  Fig-4 deployment comparison; --strategies a,b,c\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
-                 worker   one FL client process attached to a TCP broker"
+                 worker   one FL client process attached to a TCP broker\n\
+                 \n\
+                 choosing a strategy (--strategy / --strategies):\n\
+                 \x20 pso           the paper's Flag-Swap PSO (default; in sim: exact Algorithm 1)\n\
+                 \x20 pso-batched   synchronous PSO, whole swarm scored per dispatch\n\
+                 \x20 adaptive-pso  Flag-Swap + drift detection and swarm restart\n\
+                 \x20 random        SDFLMQ's random baseline\n\
+                 \x20 round-robin   SDFLMQ's uniform rotation (alias: uniform)\n\
+                 \x20 ga | sa | tabu  black-box meta-heuristic comparators (ablation A2)\n\
+                 Pick pso for the paper's behavior, adaptive-pso for drifting\n\
+                 systems, random/round-robin as baselines, ga/sa/tabu to\n\
+                 benchmark alternative optimizers under the same budget."
             );
             std::process::exit(2);
         }
@@ -60,9 +72,11 @@ fn scenario_from_args(args: &Args) -> Result<SimScenario> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    let sc = scenario_from_args(args)?;
+    let mut sc = scenario_from_args(args)?;
+    sc.strategy = args.str_flag("strategy", &sc.strategy);
     println!(
-        "sim: depth={} width={} clients={} slots={} particles={} iterations={}",
+        "sim: strategy={} depth={} width={} clients={} slots={} particles={} iterations={}",
+        sc.strategy,
         sc.depth,
         sc.width,
         sc.client_count(),
@@ -70,12 +84,12 @@ fn cmd_sim(args: &Args) -> Result<()> {
         sc.pso.particles,
         sc.pso.iterations
     );
-    let result = run_sim(&sc);
+    let result = run_sim_with(&sc, &sc.strategy).map_err(|e| anyhow!(e))?;
     let norm = result.trace.normalized();
     println!(
         "{}",
         ascii_plot(
-            "normalized TPD vs PSO iteration",
+            &format!("normalized TPD vs iteration [{}]", result.strategy),
             &[
                 ("worst", 'r', &norm.worst),
                 ("mean", 'o', &norm.mean),
@@ -86,8 +100,8 @@ fn cmd_sim(args: &Args) -> Result<()> {
         )
     );
     println!(
-        "best TPD {:.4} (placement {:?}), converged={}",
-        result.best_tpd, result.best_placement, result.converged
+        "best TPD {:.4} (placement {:?}), converged={}, {} evaluations",
+        result.best_tpd, result.best_placement, result.converged, result.evaluations
     );
     if let Some(out) = args.flag("out") {
         result.trace.write_csv(std::path::Path::new(out))?;
@@ -121,7 +135,12 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
     let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
     let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
-    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir)
+    let strategies = args.list_flag("strategies").unwrap_or_default();
+    // Fail fast on typos before paying for a deployment run.
+    for name in &strategies {
+        registry::canonical(name).map_err(|e| anyhow!(e))?;
+    }
+    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir, &strategies)
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {

@@ -9,7 +9,7 @@
 //! swarm — re-seeding one particle at the incumbent placement so good
 //! structure survives the reset.
 
-use super::{PlacementStrategy, PsoPlacement};
+use super::{Optimizer, OptimizerState, Placement, PlacementError, PsoPlacement};
 use crate::log_info;
 use crate::prng::Pcg32;
 use crate::pso::PsoConfig;
@@ -75,35 +75,65 @@ impl AdaptivePsoPlacement {
     }
 }
 
-impl PlacementStrategy for AdaptivePsoPlacement {
+impl Optimizer for AdaptivePsoPlacement {
     fn name(&self) -> &'static str {
-        "pso-adaptive"
+        "adaptive-pso"
     }
 
-    fn propose(&mut self, round: usize) -> Vec<usize> {
-        self.inner.propose(round)
+    fn propose_batch(&mut self, round: usize) -> Vec<Placement> {
+        self.inner.propose_batch(round)
     }
 
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
-        let was_pinned = self.inner.pinned();
-        self.inner.feedback(placement, delay_secs);
-        if was_pinned {
-            let baseline = *self.baseline.get_or_insert(delay_secs.max(self.inner.gbest_delay()));
-            if delay_secs > baseline * self.drift_factor {
-                self.drift_rounds += 1;
-                if self.drift_rounds >= self.drift_patience {
-                    self.restart();
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &delay_secs) in placements.iter().zip(delays) {
+            let was_pinned = self.inner.pinned();
+            self.inner
+                .observe_batch(std::slice::from_ref(p), &[delay_secs]);
+            if was_pinned {
+                let baseline =
+                    *self.baseline.get_or_insert(delay_secs.max(self.inner.gbest_delay()));
+                if delay_secs > baseline * self.drift_factor {
+                    self.drift_rounds += 1;
+                    if self.drift_rounds >= self.drift_patience {
+                        self.restart();
+                    }
+                } else {
+                    self.drift_rounds = 0;
                 }
-            } else {
-                self.drift_rounds = 0;
             }
         }
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        self.inner.best()
+    }
+
+    fn converged(&self) -> bool {
+        self.inner.pinned()
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = state.best.clone() {
+            let inner_state =
+                OptimizerState { name: self.inner.name().to_string(), best: Some((placement, delay)) };
+            self.inner.restore(&inner_state)?;
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// One propose/observe cycle against a toy landscape.
+    fn step(s: &mut AdaptivePsoPlacement, round: usize, delay_of: impl Fn(&[usize]) -> f64) -> f64 {
+        let p = s.propose_batch(round).pop().unwrap();
+        let d = delay_of(&p);
+        s.observe_batch(std::slice::from_ref(&p), &[d]);
+        d
+    }
 
     /// Landscape whose "fast client" changes at a drift point.
     fn delay(pos: &[usize], drifted: bool) -> f64 {
@@ -127,10 +157,7 @@ mod tests {
         // Phase 1: stable system, let it converge.
         let mut last_stable = f64::INFINITY;
         for round in 0..120 {
-            let p = s.propose(round);
-            let d = delay(&p, false);
-            s.feedback(&p, d);
-            last_stable = d;
+            last_stable = step(&mut s, round, |p| delay(p, false));
         }
         assert!(s.pinned(), "should pin in the stable phase");
         // Random expectation ≈ E[max of 2 U{0..20}] + E[U{0..20}] + 1 ≈ 25.
@@ -139,10 +166,7 @@ mod tests {
         // Phase 2: the system drifts — the pinned placement is now bad.
         let mut recovered = f64::INFINITY;
         for round in 120..400 {
-            let p = s.propose(round);
-            let d = delay(&p, true);
-            s.feedback(&p, d);
-            recovered = d;
+            recovered = step(&mut s, round, |p| delay(p, true));
         }
         assert!(s.restarts >= 1, "drift should trigger a restart");
         assert!(
@@ -155,9 +179,7 @@ mod tests {
     fn no_restart_without_drift() {
         let mut s = AdaptivePsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(2));
         for round in 0..200 {
-            let p = s.propose(round);
-            let d = delay(&p, false);
-            s.feedback(&p, d);
+            step(&mut s, round, |p| delay(p, false));
         }
         assert_eq!(s.restarts, 0, "stable system must not restart");
     }
@@ -167,19 +189,13 @@ mod tests {
         let mut s = AdaptivePsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(3));
         // Converge first.
         for round in 0..120 {
-            let p = s.propose(round);
-            let d = delay(&p, false);
-            s.feedback(&p, d);
+            step(&mut s, round, |p| delay(p, false));
         }
         assert!(s.pinned());
         // One-off spikes below the patience threshold.
         for round in 120..200 {
-            let p = s.propose(round);
-            let mut d = delay(&p, false);
-            if round % 10 == 0 {
-                d *= 5.0; // isolated spike
-            }
-            s.feedback(&p, d);
+            let spike = if round % 10 == 0 { 5.0 } else { 1.0 };
+            step(&mut s, round, |p| delay(p, false) * spike);
         }
         assert_eq!(s.restarts, 0, "isolated spikes must not restart the swarm");
     }

@@ -1,0 +1,231 @@
+//! Delay oracles — the [`Environment`] side of the Optimizer/Environment
+//! split.
+//!
+//! An environment turns a candidate [`Placement`] into the paper's
+//! black-box signal: the round's processing delay. Three implementations
+//! cover the repo's three execution tiers:
+//!
+//! * [`AnalyticTpd`] — the closed-form Eq. 6–7 TPD model over a sampled
+//!   client population (the Fig-3 simulation fitness). Its `eval_batch`
+//!   scores a whole swarm in one dispatch.
+//! * [`EmulatedDelay`] — a calibrated analytic model of the emulated
+//!   docker testbed, built from the same throttle factors
+//!   [`crate::fl::emulation::EmulatedClock`] applies to real compute
+//!   (speed factor on training, speed × memory pressure on aggregation).
+//! * [`crate::fl::LiveSession`] — a *real* measured FL round through the
+//!   broker + agent + runtime stack (defined next to the coordinator).
+
+use super::{validate_placement, Placement, PlacementError};
+use crate::configio::ClientSpec;
+use crate::fitness::{tpd, ClientAttrs};
+use crate::fl::emulation::{EmulatedClock, WorkKind};
+use crate::hierarchy::{Arrangement, HierarchySpec};
+
+/// A delay oracle: scores candidate placements.
+pub trait Environment {
+    /// Environment label for logs and CSV output.
+    fn name(&self) -> &'static str;
+
+    /// Delay of one placement (seconds, or TPD units for analytic
+    /// environments — the optimizers only compare magnitudes).
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError>;
+
+    /// Delays for a batch of placements, in order. The default loops
+    /// over [`Environment::eval`]; analytic environments override this
+    /// to score the whole batch in one dispatch.
+    fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
+        batch.iter().map(|p| self.eval(p)).collect()
+    }
+}
+
+/// The Eq. 6–7 Total Processing Delay model over a simulated population
+/// (paper §IV.A/B) — the fitness behind Fig. 3.
+pub struct AnalyticTpd {
+    spec: HierarchySpec,
+    attrs: Vec<ClientAttrs>,
+}
+
+impl AnalyticTpd {
+    pub fn new(spec: HierarchySpec, attrs: Vec<ClientAttrs>) -> AnalyticTpd {
+        assert!(attrs.len() >= spec.dimensions(), "population smaller than slot count");
+        AnalyticTpd { spec, attrs }
+    }
+
+    /// The simulated client population.
+    pub fn attrs(&self) -> &[ClientAttrs] {
+        &self.attrs
+    }
+
+    fn tpd_of(&self, placement: &[usize]) -> f64 {
+        tpd(
+            &Arrangement::from_position(self.spec, placement, self.attrs.len()),
+            &self.attrs,
+        )
+        .total
+    }
+}
+
+impl Environment for AnalyticTpd {
+    fn name(&self) -> &'static str {
+        "analytic-tpd"
+    }
+
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
+        validate_placement(placement, self.spec.dimensions(), self.attrs.len())?;
+        Ok(self.tpd_of(placement))
+    }
+
+    fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
+        // One dispatch for the whole batch: validate everything first,
+        // then score in a tight loop (no per-candidate virtual calls).
+        let dims = self.spec.dimensions();
+        for p in batch {
+            validate_placement(p, dims, self.attrs.len())?;
+        }
+        Ok(batch.iter().map(|p| self.tpd_of(p)).collect())
+    }
+}
+
+/// Analytic delay model of the emulated heterogeneous testbed
+/// (DESIGN.md §4): what a round *would* cost given each client's
+/// [`EmulatedClock`] throttle factors, without running broker traffic or
+/// training. Useful for fast registry-driven experiments on deployment
+/// scenarios.
+///
+/// The model mirrors the real round structure: all trainers work in
+/// parallel (slowest trainer gates the leaf level), then each hierarchy
+/// level aggregates bottom-up (slowest cluster gates its level; cluster
+/// cost scales with fan-in, aggregation pays the memory-pressure
+/// factor).
+pub struct EmulatedDelay {
+    spec: HierarchySpec,
+    clocks: Vec<EmulatedClock>,
+    /// Seconds of full-speed compute one local training phase costs.
+    pub train_unit_secs: f64,
+    /// Seconds of full-speed compute per model merged during aggregation.
+    pub agg_unit_secs: f64,
+}
+
+impl EmulatedDelay {
+    pub fn new(depth: usize, width: usize, clients: &[ClientSpec]) -> EmulatedDelay {
+        let spec = HierarchySpec::new(depth, width);
+        assert!(clients.len() >= spec.dimensions(), "population smaller than slot count");
+        EmulatedDelay {
+            spec,
+            clocks: clients.iter().map(|c| EmulatedClock::new(c.clone())).collect(),
+            train_unit_secs: 1.0,
+            agg_unit_secs: 0.5,
+        }
+    }
+
+    /// Build for a deployment scenario's hierarchy and client mix.
+    pub fn from_scenario(sc: &crate::configio::DeployScenario) -> EmulatedDelay {
+        EmulatedDelay::new(sc.depth, sc.width, &sc.clients)
+    }
+
+    fn delay_of(&self, placement: &[usize]) -> f64 {
+        let arr = Arrangement::from_position(self.spec, placement, self.clocks.len());
+        // Phase 1: local training in parallel — the slowest trainer
+        // (or training aggregator) gates the round start of aggregation.
+        let train = arr
+            .all_trainers()
+            .into_iter()
+            .map(|c| self.clocks[c].factor(WorkKind::Train) * self.train_unit_secs)
+            .fold(0.0_f64, f64::max);
+        // Phase 2: aggregation bottom-up, one level at a time.
+        let mut total = train;
+        for level in self.spec.levels_bottom_up() {
+            let level_max = level
+                .iter()
+                .map(|&slot| {
+                    let agg = arr.aggregators[slot];
+                    let fan_in = arr.buffer_of(slot).len() + 1;
+                    self.clocks[agg].factor(WorkKind::Aggregate)
+                        * self.agg_unit_secs
+                        * fan_in as f64
+                })
+                .fold(0.0_f64, f64::max);
+            total += level_max;
+        }
+        total
+    }
+}
+
+impl Environment for EmulatedDelay {
+    fn name(&self) -> &'static str {
+        "emulated-delay"
+    }
+
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
+        validate_placement(placement, self.spec.dimensions(), self.clocks.len())?;
+        Ok(self.delay_of(placement))
+    }
+
+    fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
+        let dims = self.spec.dimensions();
+        for p in batch {
+            validate_placement(p, dims, self.clocks.len())?;
+        }
+        Ok(batch.iter().map(|p| self.delay_of(p)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::DeployScenario;
+    use crate::prng::Pcg32;
+
+    fn population(n: usize) -> Vec<ClientAttrs> {
+        let mut rng = Pcg32::seed_from_u64(1);
+        ClientAttrs::sample_population(n, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+    }
+
+    #[test]
+    fn analytic_batch_matches_single_evals() {
+        let spec = HierarchySpec::new(2, 2);
+        let mut env = AnalyticTpd::new(spec, population(8));
+        let batch: Vec<Placement> = vec![
+            Placement::new(vec![0, 1, 2]),
+            Placement::new(vec![5, 6, 7]),
+            Placement::new(vec![3, 0, 4]),
+        ];
+        let batched = env.eval_batch(&batch).unwrap();
+        let singles: Vec<f64> = batch.iter().map(|p| env.eval(p).unwrap()).collect();
+        assert_eq!(batched, singles);
+        assert!(batched.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn analytic_rejects_invalid_placements() {
+        let spec = HierarchySpec::new(2, 2);
+        let mut env = AnalyticTpd::new(spec, population(8));
+        let err = env.eval(&Placement::new(vec![0, 0, 1])).unwrap_err();
+        assert!(matches!(err, PlacementError::DuplicateClient { .. }), "{err}");
+        let err = env
+            .eval_batch(&[Placement::new(vec![0, 1])])
+            .unwrap_err();
+        assert!(matches!(err, PlacementError::WrongArity { .. }), "{err}");
+    }
+
+    #[test]
+    fn emulated_delay_punishes_slow_aggregators() {
+        // Paper's docker mix: client 0 fast, clients 3+ memory-starved.
+        let sc = DeployScenario::paper_docker();
+        let mut env = EmulatedDelay::from_scenario(&sc);
+        let fast_root = env.eval(&Placement::new(vec![0, 1, 2])).unwrap();
+        let slow_root = env.eval(&Placement::new(vec![9, 1, 2])).unwrap();
+        assert!(
+            slow_root > fast_root,
+            "memory-starved root must cost more: {slow_root} !> {fast_root}"
+        );
+    }
+
+    #[test]
+    fn emulated_delay_is_deterministic() {
+        let sc = DeployScenario::paper_docker();
+        let mut env = EmulatedDelay::from_scenario(&sc);
+        let p = Placement::new(vec![4, 2, 7]);
+        assert_eq!(env.eval(&p).unwrap(), env.eval(&p).unwrap());
+    }
+}

@@ -10,7 +10,7 @@
 //! crossover with increment-until-unique repair (the same repair rule
 //! the paper's PSO uses), and random-reset mutation.
 
-use super::PlacementStrategy;
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
 use crate::prng::{Pcg32, Rng};
 
 /// GA hyper-parameters.
@@ -78,11 +78,8 @@ impl GaPlacement {
         }
     }
 
-    /// Best placement observed so far.
-    pub fn best(&self) -> &[usize] {
-        &self.best
-    }
-
+    /// Best (lowest) delay observed so far (`Optimizer::best` returns the
+    /// matching placement).
     pub fn best_delay(&self) -> f64 {
         self.best_delay
     }
@@ -165,51 +162,75 @@ impl GaPlacement {
     }
 }
 
-impl PlacementStrategy for GaPlacement {
+impl Optimizer for GaPlacement {
     fn name(&self) -> &'static str {
         "ga"
     }
 
-    fn propose(&mut self, _round: usize) -> Vec<usize> {
-        self.population[self.cursor].genome.clone()
+    /// The whole unevaluated cohort of the current generation — a real
+    /// batch, so analytic environments score an entire generation in one
+    /// dispatch (elites keep their scores and are not re-proposed).
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
+        self.population[self.cursor..]
+            .iter()
+            .map(|ind| Placement::new(ind.genome.clone()))
+            .collect()
     }
 
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
-        debug_assert_eq!(placement, self.population[self.cursor].genome.as_slice());
-        self.population[self.cursor].delay = delay_secs;
-        if delay_secs < self.best_delay {
-            self.best_delay = delay_secs;
-            self.best = self.population[self.cursor].genome.clone();
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &delay) in placements.iter().zip(delays) {
+            debug_assert_eq!(p.as_slice(), self.population[self.cursor].genome.as_slice());
+            self.population[self.cursor].delay = delay;
+            if delay < self.best_delay {
+                self.best_delay = delay;
+                self.best = self.population[self.cursor].genome.clone();
+            }
+            // Advance to the next unevaluated individual, breeding a new
+            // generation when the population is fully scored. A truncated
+            // batch (budget boundary) simply leaves the cohort partially
+            // scored; the next propose_batch resumes from the cursor.
+            self.cursor += 1;
+            if self.cursor >= self.population.len() {
+                self.next_generation();
+            }
         }
-        // Advance to the next unevaluated individual, breeding a new
-        // generation when the population is fully scored.
-        self.cursor += 1;
-        if self.cursor >= self.population.len() {
-            self.next_generation();
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        if self.best_delay.is_finite() {
+            Some((Placement::new(self.best.clone()), self.best_delay))
+        } else {
+            None
         }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = &state.best {
+            super::validate_placement(placement, self.dims, self.client_count)?;
+            // Re-seed individual 0 with the checkpointed incumbent so the
+            // restored population keeps its best structure.
+            self.best = placement.to_vec();
+            self.best_delay = *delay;
+            self.population[0].genome = placement.to_vec();
+            self.population[0].delay = *delay;
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::testkit;
 
     #[test]
     fn improves_on_toy_landscape() {
         let mut ga = GaPlacement::new(4, 25, GaConfig::default(), Pcg32::seed_from_u64(1));
-        let mut first_window = 0.0;
-        let mut last_window = 0.0;
-        for round in 0..200 {
-            let p = ga.propose(round);
-            let d = p.iter().sum::<usize>() as f64 + 1.0;
-            if round < 20 {
-                first_window += d;
-            }
-            if round >= 180 {
-                last_window += d;
-            }
-            ga.feedback(&p, d);
-        }
+        let delays =
+            testkit::run_toy_validated(&mut ga, 4, 25, 200, |p| p.iter().sum::<usize>() as f64 + 1.0);
+        let first_window: f64 = delays[..20].iter().sum();
+        let last_window: f64 = delays[180..].iter().sum();
         assert!(
             last_window < first_window,
             "GA failed to improve: first {first_window}, last {last_window}"
@@ -219,27 +240,36 @@ mod tests {
     #[test]
     fn best_tracks_minimum() {
         let mut ga = GaPlacement::new(3, 12, GaConfig::default(), Pcg32::seed_from_u64(2));
-        let mut min_seen = f64::INFINITY;
-        for round in 0..80 {
-            let p = ga.propose(round);
-            let d = p.iter().map(|&c| (c * c) as f64).sum::<f64>();
-            min_seen = min_seen.min(d);
-            ga.feedback(&p, d);
-        }
+        let delays = testkit::run_toy_validated(&mut ga, 3, 12, 80, |p| {
+            p.iter().map(|&c| (c * c) as f64).sum::<f64>()
+        });
+        let min_seen = delays.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!((ga.best_delay() - min_seen).abs() < 1e-9);
     }
 
     #[test]
     fn genomes_stay_valid_across_generations() {
         let mut ga = GaPlacement::new(5, 9, GaConfig::default(), Pcg32::seed_from_u64(3));
-        for round in 0..150 {
-            let p = ga.propose(round);
-            let mut q = p.clone();
-            q.sort_unstable();
-            q.dedup();
-            assert_eq!(q.len(), 5, "duplicate genes: {p:?}");
-            assert!(p.iter().all(|&c| c < 9));
-            ga.feedback(&p, 1.0 + round as f64 % 7.0);
-        }
+        let mut counter = 0usize;
+        testkit::run_toy_validated(&mut ga, 5, 9, 150, |_| {
+            counter += 1;
+            1.0 + (counter as f64) % 7.0
+        });
+    }
+
+    #[test]
+    fn first_batch_is_the_whole_population() {
+        let mut ga = GaPlacement::new(3, 12, GaConfig::default(), Pcg32::seed_from_u64(4));
+        let batch = ga.propose_batch(0);
+        assert_eq!(batch.len(), GaConfig::default().population);
+        // After scoring the cohort, the next batch skips the elites.
+        let delays: Vec<f64> =
+            batch.iter().map(|p| p.iter().sum::<usize>() as f64).collect();
+        ga.observe_batch(&batch, &delays);
+        let next = ga.propose_batch(1);
+        assert_eq!(
+            next.len(),
+            GaConfig::default().population - GaConfig::default().elitism
+        );
     }
 }

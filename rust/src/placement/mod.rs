@@ -1,56 +1,439 @@
-//! Aggregation placement strategies (paper §IV.C + related-work
-//! baselines).
+//! Aggregation-placement optimization — the unified `Optimizer` /
+//! [`Environment`] API (paper §IV.C + related-work baselines).
 //!
-//! Every strategy implements the black-box [`PlacementStrategy`]
-//! interface: propose a placement for the next round, receive the
-//! measured round delay afterwards. The paper compares:
-//! * [`RandomPlacement`] — SDFLMQ's built-in random strategy,
-//! * [`RoundRobinPlacement`] — SDFLMQ's uniform round-robin strategy,
-//! * [`PsoPlacement`] — Flag-Swap (the contribution).
+//! The paper's core loop is *black-box* placement search: propose which
+//! clients should hold the aggregator slots, observe only the resulting
+//! round delay, repeat. This module factors that loop into two traits so
+//! every search strategy runs against every delay oracle through one
+//! code path:
 //!
-//! Two additional black-box meta-heuristics back the §II/§V claims
-//! (ablation A2): [`GaPlacement`] (genetic algorithm) and
-//! [`SaPlacement`] (simulated annealing).
+//! * [`Optimizer`] — proposes batches of candidate [`Placement`]s and
+//!   learns from the observed delays. Implementations: [`SwarmOptimizer`]
+//!   (the paper's synchronous PSO, exact Algorithm-1 semantics or a
+//!   batched whole-swarm-per-call variant), [`PsoPlacement`] (Flag-Swap's
+//!   steady-state live PSO), [`RandomPlacement`], [`RoundRobinPlacement`],
+//!   [`GaPlacement`] (proposes whole generation cohorts), [`SaPlacement`],
+//!   [`TabuPlacement`] and [`AdaptivePsoPlacement`].
+//! * [`Environment`] — scores placements: [`AnalyticTpd`] (the Eq. 6–7
+//!   TPD model over a simulated population, one dispatch per batch),
+//!   [`EmulatedDelay`] (the docker-substitute throttling model from
+//!   [`crate::fl::emulation`]), and [`crate::fl::LiveSession`] (a real
+//!   measured FL round through broker + agents).
+//!
+//! [`registry`] maps strategy names (`"pso"`, `"random"`, `"round-robin"`,
+//! `"ga"`, `"sa"`, `"tabu"`, `"adaptive-pso"`, `"pso-batched"`) to boxed
+//! optimizers, and [`drive`] is the generic evaluation loop connecting an
+//! optimizer to an environment under a fixed evaluation budget.
+//! Validation is `Result`-based ([`validate_placement`] /
+//! [`PlacementError`]); [`assert_valid_placement`] remains as a thin
+//! panicking wrapper for tests.
 
 mod adaptive;
+mod environment;
 mod ga;
 mod pso_placement;
+mod pso_sim;
 mod random;
+pub mod registry;
 mod round_robin;
 mod sa;
 mod tabu;
 
 pub use adaptive::AdaptivePsoPlacement;
+pub use environment::{AnalyticTpd, EmulatedDelay, Environment};
 pub use ga::{GaConfig, GaPlacement};
 pub use pso_placement::PsoPlacement;
+pub use pso_sim::SwarmOptimizer;
 pub use random::RandomPlacement;
 pub use round_robin::RoundRobinPlacement;
 pub use sa::{SaConfig, SaPlacement};
 pub use tabu::{TabuConfig, TabuPlacement};
 
-/// A black-box placement optimizer: proposes aggregator placements and
-/// learns only from the measured round delay (never from client
-/// internals — the paper's privacy constraint).
-pub trait PlacementStrategy: Send {
-    /// Strategy label used in CSV output and plots.
-    fn name(&self) -> &'static str;
+use crate::pso::IterationStats;
+use std::fmt;
 
-    /// Placement for the next round: `dims` distinct client ids in BFT
-    /// slot order.
-    fn propose(&mut self, round: usize) -> Vec<usize>;
+/// A candidate aggregator placement: `dims` distinct client ids in BFT
+/// slot order. Derefs to `[usize]` for slice-style access.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Placement(Vec<usize>);
 
-    /// Black-box feedback: the wall-clock delay of the round that ran
-    /// `placement`. Baselines ignore it.
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64);
+impl Placement {
+    pub fn new(ids: Vec<usize>) -> Placement {
+        Placement(ids)
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn into_vec(self) -> Vec<usize> {
+        self.0
+    }
 }
 
-/// Shared helper: validate a proposal (distinct ids within range).
+impl std::ops::Deref for Placement {
+    type Target = [usize];
+
+    fn deref(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl AsRef<[usize]> for Placement {
+    fn as_ref(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+impl From<Vec<usize>> for Placement {
+    fn from(ids: Vec<usize>) -> Placement {
+        Placement(ids)
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.0)
+    }
+}
+
+/// Errors from placement validation, the strategy registry, optimizer
+/// checkpoint restore, and environment evaluation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlacementError {
+    /// Placement length differs from the number of aggregator slots.
+    WrongArity { expected: usize, got: usize },
+    /// A client id exceeds the population size.
+    ClientOutOfRange { client: usize, client_count: usize },
+    /// The same client appears in two slots.
+    DuplicateClient { client: usize },
+    /// Strategy name not present in [`registry`].
+    UnknownStrategy { name: String },
+    /// [`Optimizer::restore`] got a snapshot from a different strategy.
+    StateMismatch { expected: String, got: String },
+    /// The environment failed to produce a delay (e.g. a live round
+    /// timed out).
+    Environment(String),
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlacementError::WrongArity { expected, got } => {
+                write!(f, "placement has wrong arity: expected {expected} slots, got {got}")
+            }
+            PlacementError::ClientOutOfRange { client, client_count } => {
+                write!(f, "client id {client} out of range (population {client_count})")
+            }
+            PlacementError::DuplicateClient { client } => {
+                write!(f, "duplicate client {client} in placement")
+            }
+            PlacementError::UnknownStrategy { name } => {
+                write!(
+                    f,
+                    "unknown strategy {name:?}; valid strategies: {}",
+                    registry::NAMES.join(", ")
+                )
+            }
+            PlacementError::StateMismatch { expected, got } => {
+                write!(f, "optimizer state for {got:?} cannot restore a {expected:?} optimizer")
+            }
+            PlacementError::Environment(msg) => write!(f, "environment error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Validate a proposal: correct arity, ids in range, no duplicates.
+/// Uses a `u64` bitmask when the population fits in one word (the hot
+/// per-round path never allocates for the paper-scale populations).
+pub fn validate_placement(
+    placement: &[usize],
+    dims: usize,
+    client_count: usize,
+) -> Result<(), PlacementError> {
+    if placement.len() != dims {
+        return Err(PlacementError::WrongArity { expected: dims, got: placement.len() });
+    }
+    if client_count <= 64 {
+        let mut seen = 0u64;
+        for &c in placement {
+            if c >= client_count {
+                return Err(PlacementError::ClientOutOfRange { client: c, client_count });
+            }
+            let bit = 1u64 << c;
+            if seen & bit != 0 {
+                return Err(PlacementError::DuplicateClient { client: c });
+            }
+            seen |= bit;
+        }
+    } else {
+        let mut seen = vec![false; client_count];
+        for &c in placement {
+            if c >= client_count {
+                return Err(PlacementError::ClientOutOfRange { client: c, client_count });
+            }
+            if std::mem::replace(&mut seen[c], true) {
+                return Err(PlacementError::DuplicateClient { client: c });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Panicking wrapper over [`validate_placement`] for tests and
+/// assert-style call sites.
 pub fn assert_valid_placement(placement: &[usize], dims: usize, client_count: usize) {
-    assert_eq!(placement.len(), dims, "placement has wrong arity");
-    let mut seen = vec![false; client_count];
-    for &c in placement {
-        assert!(c < client_count, "client id {c} out of range");
-        assert!(!std::mem::replace(&mut seen[c], true), "duplicate client {c}");
+    if let Err(e) = validate_placement(placement, dims, client_count) {
+        panic!("invalid placement: {e}");
+    }
+}
+
+/// Snapshot of an optimizer's transferable state (checkpointing hook).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerState {
+    /// Canonical strategy name the snapshot came from.
+    pub name: String,
+    /// Best placement observed so far and its delay.
+    pub best: Option<(Placement, f64)>,
+}
+
+/// Shared guard for [`Optimizer::restore`] implementations: a snapshot
+/// may only restore the strategy that produced it.
+pub fn check_state_name(expected: &str, state: &OptimizerState) -> Result<(), PlacementError> {
+    if state.name != expected {
+        return Err(PlacementError::StateMismatch {
+            expected: expected.to_string(),
+            got: state.name.clone(),
+        });
+    }
+    Ok(())
+}
+
+/// A black-box placement optimizer: proposes batches of candidate
+/// placements and learns only from observed round delays (never from
+/// client internals — the paper's privacy constraint).
+///
+/// Batching is the primitive: single-candidate strategies return
+/// one-element batches, while population strategies (the synchronous PSO
+/// swarm, the GA's generation cohort) hand the whole population to the
+/// environment in one call. The driver may truncate a batch at the
+/// evaluation budget, so `observe_batch` must accept a *prefix* of the
+/// proposed batch.
+pub trait Optimizer: Send {
+    /// Canonical strategy label (a [`registry`] key) used in CSV output
+    /// and plots.
+    fn name(&self) -> &'static str;
+
+    /// Candidate placements to evaluate next. `round` counts
+    /// propose/observe cycles (FL rounds in live mode).
+    fn propose_batch(&mut self, round: usize) -> Vec<Placement>;
+
+    /// Delays for (a prefix of) the latest proposed batch, in order.
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]);
+
+    /// Best placement observed so far with its delay, if any.
+    fn best(&self) -> Option<(Placement, f64)> {
+        None
+    }
+
+    /// Whether the optimizer considers the search converged.
+    fn converged(&self) -> bool {
+        false
+    }
+
+    /// How many evaluations form one logical iteration for trace
+    /// grouping (e.g. the PSO swarm size). Defaults to 1.
+    fn group_size(&self) -> usize {
+        1
+    }
+
+    /// Snapshot transferable state for checkpointing.
+    fn state(&self) -> OptimizerState {
+        OptimizerState { name: self.name().to_string(), best: self.best() }
+    }
+
+    /// Restore from a snapshot produced by [`Optimizer::state`] on the
+    /// same strategy. The default implementation only validates the
+    /// strategy name (via [`check_state_name`]); stateful optimizers
+    /// additionally re-seed their incumbent from `state.best`.
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        check_state_name(self.name(), state)
+    }
+}
+
+/// Adapter exposing the classic one-placement-per-round protocol
+/// (`propose` → run round → `feedback`) over any batched [`Optimizer`].
+///
+/// Queues batch proposals and forwards delays back to the optimizer once
+/// the whole batch is scored. If a caller abandons a batch (proposes
+/// without feeding back), the partially-scored prefix is still observed
+/// before the next batch is requested.
+pub struct Stepwise {
+    opt: Box<dyn Optimizer>,
+    batch: Vec<Placement>,
+    /// Index of the next batch element to hand out.
+    next: usize,
+    delays: Vec<f64>,
+}
+
+impl Stepwise {
+    pub fn new(opt: Box<dyn Optimizer>) -> Stepwise {
+        Stepwise { opt, batch: Vec::new(), next: 0, delays: Vec::new() }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.opt.name()
+    }
+
+    /// The next placement to evaluate.
+    pub fn propose(&mut self, round: usize) -> Placement {
+        if self.next >= self.batch.len() {
+            self.flush();
+            self.batch = self.opt.propose_batch(round);
+            assert!(
+                !self.batch.is_empty(),
+                "optimizer {} proposed an empty batch",
+                self.opt.name()
+            );
+        }
+        let p = self.batch[self.next].clone();
+        self.next += 1;
+        p
+    }
+
+    /// Report the delay of the most recently proposed placement.
+    pub fn feedback(&mut self, delay: f64) {
+        self.delays.push(delay);
+        if self.next >= self.batch.len() && self.delays.len() == self.batch.len() {
+            self.flush();
+        }
+    }
+
+    /// Observe whatever prefix of the current batch has delays.
+    fn flush(&mut self) {
+        let k = self.delays.len().min(self.batch.len());
+        if k > 0 {
+            self.opt.observe_batch(&self.batch[..k], &self.delays[..k]);
+        }
+        self.batch.clear();
+        self.delays.clear();
+        self.next = 0;
+    }
+
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        &*self.opt
+    }
+
+    pub fn optimizer_mut(&mut self) -> &mut dyn Optimizer {
+        &mut *self.opt
+    }
+
+    /// Flush any scored prefix and hand the optimizer back.
+    pub fn into_inner(mut self) -> Box<dyn Optimizer> {
+        self.flush();
+        self.opt
+    }
+}
+
+/// Outcome of [`drive`]: per-iteration statistics (grouped by the
+/// optimizer's [`Optimizer::group_size`]) plus the best observation.
+#[derive(Debug, Clone)]
+pub struct DriveOutcome {
+    pub stats: Vec<IterationStats>,
+    pub best_placement: Option<Placement>,
+    pub best_delay: f64,
+    pub evaluations: usize,
+}
+
+/// The generic optimization loop: repeatedly ask `opt` for a batch,
+/// score it in `env` (one [`Environment::eval_batch`] dispatch per
+/// batch), and feed the delays back — until `max_evals` evaluations have
+/// been spent. Batches are truncated at the budget boundary, so the loop
+/// performs *exactly* `max_evals` evaluations.
+pub fn drive(
+    opt: &mut dyn Optimizer,
+    env: &mut dyn Environment,
+    max_evals: usize,
+) -> Result<DriveOutcome, PlacementError> {
+    let group = opt.group_size().max(1);
+    let mut out = DriveOutcome {
+        stats: Vec::new(),
+        best_placement: None,
+        best_delay: f64::INFINITY,
+        evaluations: 0,
+    };
+    let mut buf: Vec<f64> = Vec::with_capacity(group);
+    let mut round = 0usize;
+    while out.evaluations < max_evals {
+        let mut batch = opt.propose_batch(round);
+        if batch.is_empty() {
+            return Err(PlacementError::Environment(format!(
+                "optimizer {} proposed an empty batch",
+                opt.name()
+            )));
+        }
+        batch.truncate(max_evals - out.evaluations);
+        let delays = env.eval_batch(&batch)?;
+        debug_assert_eq!(delays.len(), batch.len());
+        opt.observe_batch(&batch, &delays);
+        for (p, &d) in batch.iter().zip(&delays) {
+            out.evaluations += 1;
+            if d < out.best_delay {
+                out.best_delay = d;
+                out.best_placement = Some(p.clone());
+            }
+            buf.push(d);
+            if buf.len() == group {
+                out.stats.push(stats_row(std::mem::take(&mut buf), out.best_delay));
+            }
+        }
+        round += 1;
+    }
+    // A trailing partial group (budget not divisible by group_size) is
+    // still counted in best/evaluations but emits no trace row.
+    Ok(out)
+}
+
+fn stats_row(per_particle_tpd: Vec<f64>, gbest_tpd: f64) -> IterationStats {
+    let worst = per_particle_tpd.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let best = per_particle_tpd.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = per_particle_tpd.iter().sum::<f64>() / per_particle_tpd.len() as f64;
+    IterationStats { per_particle_tpd, worst, mean, best, gbest_tpd }
+}
+
+#[cfg(test)]
+pub(crate) mod testkit {
+    use super::Optimizer;
+
+    /// Drive an optimizer against a toy delay function for exactly
+    /// `rounds` evaluations, validating every proposal; returns the
+    /// per-evaluation delays in order.
+    pub fn run_toy_validated(
+        opt: &mut dyn Optimizer,
+        dims: usize,
+        client_count: usize,
+        rounds: usize,
+        mut delay_of: impl FnMut(&[usize]) -> f64,
+    ) -> Vec<f64> {
+        let mut delays = Vec::with_capacity(rounds);
+        let mut round = 0usize;
+        while delays.len() < rounds {
+            let mut batch = opt.propose_batch(round);
+            batch.truncate(rounds - delays.len());
+            let ds: Vec<f64> = batch
+                .iter()
+                .map(|p| {
+                    super::assert_valid_placement(p.as_slice(), dims, client_count);
+                    delay_of(p.as_slice())
+                })
+                .collect();
+            delays.extend(&ds);
+            opt.observe_batch(&batch, &ds);
+            round += 1;
+        }
+        delays
     }
 }
 
@@ -60,93 +443,153 @@ mod tests {
     use crate::prng::Pcg32;
     use crate::pso::PsoConfig;
 
-    /// All strategies must emit valid placements for many rounds.
+    /// Every registered strategy must emit valid placements for many
+    /// rounds (conformance — includes tabu and adaptive-pso).
     #[test]
     fn all_strategies_emit_valid_placements() {
         let dims = 3;
         let cc = 10;
-        let mk: Vec<Box<dyn PlacementStrategy>> = vec![
-            Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(1))),
-            Box::new(RoundRobinPlacement::new(dims, cc)),
-            Box::new(PsoPlacement::new(
-                dims,
-                cc,
-                PsoConfig::paper(),
-                Pcg32::seed_from_u64(2),
-            )),
-            Box::new(GaPlacement::new(
-                dims,
-                cc,
-                GaConfig::default(),
-                Pcg32::seed_from_u64(3),
-            )),
-            Box::new(SaPlacement::new(
-                dims,
-                cc,
-                SaConfig::default(),
-                Pcg32::seed_from_u64(4),
-            )),
-        ];
-        for mut s in mk {
-            for round in 0..100 {
-                let p = s.propose(round);
-                assert_valid_placement(&p, dims, cc);
-                // Toy delay: favor low ids.
-                let d = p.iter().sum::<usize>() as f64 + 0.5;
-                s.feedback(&p, d);
-            }
+        for name in registry::NAMES {
+            let mut opt = registry::build_live(name, dims, cc, PsoConfig::paper(), 7)
+                .unwrap_or_else(|e| panic!("build {name}: {e}"));
+            testkit::run_toy_validated(opt.as_mut(), dims, cc, 100, |p| {
+                p.iter().sum::<usize>() as f64 + 0.5
+            });
         }
     }
 
     /// Black-box optimizers should, on average, beat random on the toy
-    /// landscape after enough rounds.
+    /// landscape after enough rounds (now also covers tabu and
+    /// adaptive-pso).
     #[test]
     fn optimizers_beat_random_on_toy_landscape() {
         let dims = 4;
         let cc = 20;
-        let run = |mut s: Box<dyn PlacementStrategy>| -> f64 {
-            let mut total_late = 0.0;
-            for round in 0..120 {
-                let p = s.propose(round);
-                let d = p.iter().sum::<usize>() as f64 + 1.0;
-                if round >= 60 {
-                    total_late += d;
-                }
-                s.feedback(&p, d);
-            }
-            total_late / 60.0
+        let run = |name: &str, seed: u64| -> f64 {
+            let mut opt = registry::build_live(name, dims, cc, PsoConfig::paper(), seed).unwrap();
+            let delays = testkit::run_toy_validated(opt.as_mut(), dims, cc, 120, |p| {
+                p.iter().sum::<usize>() as f64 + 1.0
+            });
+            delays[60..].iter().sum::<f64>() / 60.0
         };
-        let rand_avg = run(Box::new(RandomPlacement::new(
-            dims,
-            cc,
-            Pcg32::seed_from_u64(10),
-        )));
-        let pso_avg = run(Box::new(PsoPlacement::new(
-            dims,
-            cc,
-            PsoConfig::paper(),
-            Pcg32::seed_from_u64(11),
-        )));
-        let ga_avg = run(Box::new(GaPlacement::new(
-            dims,
-            cc,
-            GaConfig::default(),
-            Pcg32::seed_from_u64(12),
-        )));
-        let sa_avg = run(Box::new(SaPlacement::new(
-            dims,
-            cc,
-            SaConfig::default(),
-            Pcg32::seed_from_u64(13),
-        )));
-        assert!(pso_avg < rand_avg, "pso {pso_avg} !< random {rand_avg}");
-        assert!(ga_avg < rand_avg, "ga {ga_avg} !< random {rand_avg}");
-        assert!(sa_avg < rand_avg, "sa {sa_avg} !< random {rand_avg}");
+        let rand_avg = run("random", 10);
+        for (name, seed) in
+            [("pso", 11), ("ga", 12), ("sa", 13), ("tabu", 14), ("adaptive-pso", 15)]
+        {
+            let avg = run(name, seed);
+            assert!(avg < rand_avg, "{name} {avg} !< random {rand_avg}");
+        }
+    }
+
+    #[test]
+    fn validator_reports_typed_errors() {
+        assert_eq!(
+            validate_placement(&[1, 1, 2], 3, 5),
+            Err(PlacementError::DuplicateClient { client: 1 })
+        );
+        assert_eq!(
+            validate_placement(&[0, 9], 2, 5),
+            Err(PlacementError::ClientOutOfRange { client: 9, client_count: 5 })
+        );
+        assert_eq!(
+            validate_placement(&[0, 1], 3, 5),
+            Err(PlacementError::WrongArity { expected: 3, got: 2 })
+        );
+        assert_eq!(validate_placement(&[4, 0, 2], 3, 5), Ok(()));
+    }
+
+    #[test]
+    fn validator_large_population_fallback_agrees() {
+        // client_count > 64 exercises the Vec<bool> path.
+        let p: Vec<usize> = (0..40).map(|i| i * 3).collect();
+        assert_eq!(validate_placement(&p, 40, 200), Ok(()));
+        let mut dup = p.clone();
+        dup[39] = dup[0];
+        assert_eq!(
+            validate_placement(&dup, 40, 200),
+            Err(PlacementError::DuplicateClient { client: dup[0] })
+        );
+        assert_eq!(
+            validate_placement(&[199, 200], 2, 200),
+            Err(PlacementError::ClientOutOfRange { client: 200, client_count: 200 })
+        );
     }
 
     #[test]
     #[should_panic(expected = "duplicate client")]
-    fn validator_catches_duplicates() {
+    fn assert_wrapper_catches_duplicates() {
         assert_valid_placement(&[1, 1, 2], 3, 5);
+    }
+
+    #[test]
+    fn stepwise_matches_direct_batch_order_for_ga() {
+        // The Stepwise adapter must feed a batched optimizer the same
+        // (placement, delay) sequence the raw batch protocol produces.
+        let delay_of = |p: &[usize]| p.iter().map(|&c| (c * c) as f64).sum::<f64>() + 1.0;
+
+        let mut direct = GaPlacement::new(3, 12, GaConfig::default(), Pcg32::seed_from_u64(5));
+        let direct_delays = testkit::run_toy_validated(&mut direct, 3, 12, 60, delay_of);
+
+        let mut step = Stepwise::new(Box::new(GaPlacement::new(
+            3,
+            12,
+            GaConfig::default(),
+            Pcg32::seed_from_u64(5),
+        )));
+        let mut step_delays = Vec::new();
+        for round in 0..60 {
+            let p = step.propose(round);
+            assert_valid_placement(p.as_slice(), 3, 12);
+            let d = delay_of(p.as_slice());
+            step.feedback(d);
+            step_delays.push(d);
+        }
+        assert_eq!(direct_delays, step_delays);
+    }
+
+    #[test]
+    fn state_restore_roundtrips_best() {
+        let mut sa = SaPlacement::new(3, 15, SaConfig::default(), Pcg32::seed_from_u64(3));
+        testkit::run_toy_validated(&mut sa, 3, 15, 50, |p| p.iter().sum::<usize>() as f64 + 1.0);
+        let snapshot = sa.state();
+        assert_eq!(snapshot.name, "sa");
+        let (best_p, best_d) = snapshot.best.clone().expect("sa tracks a best");
+
+        let mut fresh = SaPlacement::new(3, 15, SaConfig::default(), Pcg32::seed_from_u64(99));
+        fresh.restore(&snapshot).expect("same-strategy restore");
+        let (p2, d2) = fresh.best().expect("restored best");
+        assert_eq!(p2, best_p);
+        assert!((d2 - best_d).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_strategy() {
+        let sa = SaPlacement::new(3, 15, SaConfig::default(), Pcg32::seed_from_u64(3));
+        let snapshot = sa.state();
+        let mut rr = RoundRobinPlacement::new(3, 15);
+        let err = rr.restore(&snapshot).unwrap_err();
+        assert!(matches!(err, PlacementError::StateMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn drive_respects_budget_and_groups() {
+        use crate::fitness::ClientAttrs;
+        use crate::hierarchy::HierarchySpec;
+        let spec = HierarchySpec::new(2, 2);
+        let mut rng = Pcg32::seed_from_u64(8);
+        let attrs = ClientAttrs::sample_population(8, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+        let mut env = AnalyticTpd::new(spec, attrs);
+        let mut opt = registry::build_live("ga", 3, 8, PsoConfig::paper(), 2).unwrap();
+        let out = drive(opt.as_mut(), &mut env, 25).unwrap();
+        assert_eq!(out.evaluations, 25);
+        // group_size 1 → one trace row per evaluation.
+        assert_eq!(out.stats.len(), 25);
+        assert!(out.best_delay.is_finite());
+        let best = out.best_placement.expect("saw evaluations");
+        assert_valid_placement(best.as_slice(), 3, 8);
+        // gbest series is monotone non-increasing.
+        for w in out.stats.windows(2) {
+            assert!(w[1].gbest_tpd <= w[0].gbest_tpd + 1e-12);
+        }
     }
 }

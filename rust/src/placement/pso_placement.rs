@@ -1,8 +1,8 @@
-//! Flag-Swap: the paper's PSO placement as a [`PlacementStrategy`] —
+//! Flag-Swap: the paper's live PSO placement as an [`Optimizer`] —
 //! a thin adapter over [`crate::pso::AsyncSwarm`] (one fitness
 //! evaluation per FL round, see DESIGN.md §5).
 
-use super::PlacementStrategy;
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
 use crate::prng::Pcg32;
 use crate::pso::{AsyncSwarm, PsoConfig};
 
@@ -44,42 +44,78 @@ impl PsoPlacement {
     }
 }
 
-impl PlacementStrategy for PsoPlacement {
+impl Optimizer for PsoPlacement {
     fn name(&self) -> &'static str {
         "pso"
     }
 
-    fn propose(&mut self, _round: usize) -> Vec<usize> {
-        self.swarm.propose()
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
+        vec![Placement::new(self.swarm.propose())]
     }
 
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
-        debug_assert_eq!(
-            placement,
-            self.swarm.propose().as_slice(),
-            "feedback must follow the matching propose()"
-        );
-        self.swarm.report(delay_secs);
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &delay) in placements.iter().zip(delays) {
+            debug_assert_eq!(
+                p.as_slice(),
+                self.swarm.propose().as_slice(),
+                "feedback must follow the matching propose"
+            );
+            self.swarm.report(delay);
+        }
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        if self.swarm.gbest_delay().is_finite() {
+            Some((Placement::new(self.swarm.gbest()), self.swarm.gbest_delay()))
+        } else {
+            None
+        }
+    }
+
+    fn converged(&self) -> bool {
+        self.swarm.pinned()
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = &state.best {
+            if placement.len() != self.swarm.dims() {
+                return Err(PlacementError::WrongArity {
+                    expected: self.swarm.dims(),
+                    got: placement.len(),
+                });
+            }
+            self.swarm.seed_gbest(placement, *delay);
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::testkit;
 
     #[test]
     fn learns_toy_landscape() {
         let mut s = PsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(1));
-        let mut last = f64::INFINITY;
-        for round in 0..150 {
-            let p = s.propose(round);
-            let d = p.iter().sum::<usize>() as f64 + 1.0;
-            s.feedback(&p, d);
-            last = d;
-        }
+        let delays =
+            testkit::run_toy_validated(&mut s, 3, 15, 150, |p| p.iter().sum::<usize>() as f64 + 1.0);
+        let last = *delays.last().unwrap();
         // Optimal is 0+1+2+1 = 4; accept anything clearly better than the
         // random expectation (~22).
         assert!(last <= 12.0, "final delay {last}");
         assert!(s.pinned());
+    }
+
+    #[test]
+    fn restore_seeds_the_incumbent() {
+        let mut a = PsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(2));
+        testkit::run_toy_validated(&mut a, 3, 15, 60, |p| p.iter().sum::<usize>() as f64 + 1.0);
+        let snap = a.state();
+        let mut b = PsoPlacement::new(3, 15, PsoConfig::paper(), Pcg32::seed_from_u64(3));
+        b.restore(&snap).unwrap();
+        assert_eq!(b.gbest(), a.gbest());
+        assert!((b.gbest_delay() - a.gbest_delay()).abs() < 1e-12);
     }
 }

@@ -1,0 +1,155 @@
+//! The paper's synchronous PSO (Algorithm 1) as an [`Optimizer`] — the
+//! simulation-mode counterpart of the live [`super::PsoPlacement`].
+//!
+//! Two proposal modes over the same [`Swarm`] state:
+//!
+//! * **exact** (`"pso"`) — one-particle batches replaying Algorithm 1
+//!   verbatim: each particle moves against the gbest *as of its turn*,
+//!   so a same-seed run through the registry reproduces the legacy
+//!   `run_sim` trace bit-for-bit. [`Optimizer::group_size`] is the swarm
+//!   size, so the driver groups per-particle evaluations back into the
+//!   paper's per-iteration trace rows.
+//! * **batched** (`"pso-batched"`) — whole-swarm batches: all particles
+//!   move first, then the environment scores the entire iteration in a
+//!   single [`super::Environment::eval_batch`] dispatch (classic
+//!   two-phase synchronous PSO; no within-iteration gbest visibility).
+
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
+use crate::prng::Pcg32;
+use crate::pso::{PsoConfig, Swarm};
+
+/// Synchronous-PSO placement optimizer over a [`Swarm`].
+pub struct SwarmOptimizer {
+    swarm: Swarm,
+    batched: bool,
+}
+
+impl SwarmOptimizer {
+    /// Algorithm-1-exact mode (registry name `"pso"`).
+    pub fn exact(dims: usize, client_count: usize, cfg: PsoConfig, rng: Pcg32) -> SwarmOptimizer {
+        SwarmOptimizer { swarm: Swarm::new(dims, client_count, cfg, rng), batched: false }
+    }
+
+    /// Whole-swarm-per-call mode (registry name `"pso-batched"`).
+    pub fn batched(dims: usize, client_count: usize, cfg: PsoConfig, rng: Pcg32) -> SwarmOptimizer {
+        SwarmOptimizer { swarm: Swarm::new(dims, client_count, cfg, rng), batched: true }
+    }
+
+    /// The underlying swarm (trace inspection, convergence checks).
+    pub fn swarm(&self) -> &Swarm {
+        &self.swarm
+    }
+}
+
+impl Optimizer for SwarmOptimizer {
+    fn name(&self) -> &'static str {
+        if self.batched {
+            "pso-batched"
+        } else {
+            "pso"
+        }
+    }
+
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
+        if self.batched {
+            self.swarm.begin_iteration().into_iter().map(Placement::new).collect()
+        } else {
+            vec![Placement::new(self.swarm.propose_next())]
+        }
+    }
+
+    fn observe_batch(&mut self, _placements: &[Placement], delays: &[f64]) {
+        if self.batched {
+            self.swarm.complete_iteration(delays);
+        } else {
+            for &d in delays {
+                self.swarm.observe_next(d);
+            }
+        }
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        if self.swarm.gbest_fitness > f64::NEG_INFINITY {
+            Some((Placement::new(self.swarm.gbest_placement()), -self.swarm.gbest_fitness))
+        } else {
+            None
+        }
+    }
+
+    fn converged(&self) -> bool {
+        self.swarm.converged()
+    }
+
+    fn group_size(&self) -> usize {
+        self.swarm.cfg.particles
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = &state.best {
+            let dims = self.swarm.particles[0].position.len();
+            if placement.len() != dims {
+                return Err(PlacementError::WrongArity { expected: dims, got: placement.len() });
+            }
+            self.swarm.seed_gbest(placement, *delay);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::testkit;
+
+    fn toy(pos: &[usize]) -> f64 {
+        pos.chunks(2).map(|l| *l.iter().max().unwrap() as f64).sum::<f64>() + 1.0
+    }
+
+    #[test]
+    fn exact_mode_replays_algorithm_one() {
+        // Driving the optimizer through the batch protocol must equal
+        // driving the raw swarm through step() — same seeds, same toys.
+        let cfg = PsoConfig { particles: 5, iterations: 40, ..PsoConfig::paper() };
+        let mut legacy = Swarm::new(4, 16, cfg, Pcg32::seed_from_u64(9));
+        let mut legacy_tpds = Vec::new();
+        for _ in 0..40 {
+            let st = legacy.step(toy);
+            legacy_tpds.extend(st.per_particle_tpd);
+        }
+
+        let mut opt = SwarmOptimizer::exact(4, 16, cfg, Pcg32::seed_from_u64(9));
+        let new_tpds = testkit::run_toy_validated(&mut opt, 4, 16, 40 * 5, toy);
+
+        assert_eq!(legacy_tpds, new_tpds);
+        assert_eq!(opt.swarm().gbest_placement(), legacy.gbest_placement());
+    }
+
+    #[test]
+    fn batched_mode_proposes_whole_swarm() {
+        let cfg = PsoConfig { particles: 6, iterations: 50, ..PsoConfig::paper() };
+        let mut opt = SwarmOptimizer::batched(3, 12, cfg, Pcg32::seed_from_u64(4));
+        let batch = opt.propose_batch(0);
+        assert_eq!(batch.len(), 6);
+        let delays = testkit::run_toy_validated(&mut opt, 3, 12, 6 * 49, toy);
+        let early: f64 = delays[..6].iter().sum::<f64>() / 6.0;
+        let (_, best) = opt.best().expect("evaluated");
+        assert!(best < early, "batched PSO should improve: best {best}, early mean {early}");
+    }
+
+    #[test]
+    fn restore_warm_starts_gbest() {
+        let cfg = PsoConfig::paper();
+        let mut a = SwarmOptimizer::exact(3, 10, cfg, Pcg32::seed_from_u64(1));
+        testkit::run_toy_validated(&mut a, 3, 10, 60, toy);
+        let snap = a.state();
+        assert_eq!(snap.name, "pso");
+
+        let mut b = SwarmOptimizer::exact(3, 10, cfg, Pcg32::seed_from_u64(2));
+        b.restore(&snap).unwrap();
+        let (bp, bd) = b.best().expect("restored");
+        let (ap, ad) = a.best().unwrap();
+        assert_eq!(ap, bp);
+        assert!((ad - bd).abs() < 1e-12);
+    }
+}

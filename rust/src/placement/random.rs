@@ -1,7 +1,7 @@
 //! Random placement — SDFLMQ's built-in baseline (paper §IV.C):
 //! every round draws a fresh random set of aggregators.
 
-use super::PlacementStrategy;
+use super::{Optimizer, Placement};
 use crate::prng::{Pcg32, Rng};
 
 /// Uniformly random distinct aggregator assignment per round.
@@ -22,16 +22,16 @@ impl RandomPlacement {
     }
 }
 
-impl PlacementStrategy for RandomPlacement {
+impl Optimizer for RandomPlacement {
     fn name(&self) -> &'static str {
         "random"
     }
 
-    fn propose(&mut self, _round: usize) -> Vec<usize> {
-        self.rng.sample_distinct(self.client_count, self.dims)
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
+        vec![Placement::new(self.rng.sample_distinct(self.client_count, self.dims))]
     }
 
-    fn feedback(&mut self, _placement: &[usize], _delay_secs: f64) {
+    fn observe_batch(&mut self, _placements: &[Placement], _delays: &[f64]) {
         // Black-box baseline: learns nothing.
     }
 }
@@ -40,12 +40,16 @@ impl PlacementStrategy for RandomPlacement {
 mod tests {
     use super::*;
 
+    fn draw(s: &mut RandomPlacement, round: usize) -> Placement {
+        s.propose_batch(round).pop().unwrap()
+    }
+
     #[test]
     fn proposals_vary_between_rounds() {
         let mut s = RandomPlacement::new(3, 30, Pcg32::seed_from_u64(1));
-        let a = s.propose(0);
-        let b = s.propose(1);
-        let c = s.propose(2);
+        let a = draw(&mut s, 0);
+        let b = draw(&mut s, 1);
+        let c = draw(&mut s, 2);
         assert!(a != b || b != c, "three identical random draws");
     }
 
@@ -54,7 +58,7 @@ mod tests {
         let mut s = RandomPlacement::new(2, 10, Pcg32::seed_from_u64(2));
         let mut seen = vec![false; 10];
         for r in 0..200 {
-            for c in s.propose(r) {
+            for &c in draw(&mut s, r).iter() {
                 seen[c] = true;
             }
         }

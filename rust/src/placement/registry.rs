@@ -1,0 +1,141 @@
+//! String-keyed strategy registry: one place that maps strategy names to
+//! boxed [`Optimizer`]s, shared by `repro sim`, `repro compare`, the
+//! benches and the examples — so every strategy runs in every
+//! environment through the same factory.
+//!
+//! Canonical names (see [`NAMES`]): `pso`, `pso-batched`, `random`,
+//! `round-robin`, `ga`, `sa`, `tabu`, `adaptive-pso`. Aliases accepted
+//! for backward compatibility: `uniform` → `round-robin`,
+//! `pso-adaptive` → `adaptive-pso`.
+
+use super::{
+    AdaptivePsoPlacement, GaConfig, GaPlacement, Optimizer, PlacementError, PsoPlacement,
+    RandomPlacement, RoundRobinPlacement, SaConfig, SaPlacement, SwarmOptimizer, TabuConfig,
+    TabuPlacement,
+};
+use crate::configio::SimScenario;
+use crate::prng::Pcg32;
+use crate::pso::PsoConfig;
+
+/// Every registered strategy name, in presentation order.
+pub const NAMES: [&str; 8] =
+    ["pso", "pso-batched", "random", "round-robin", "ga", "sa", "tabu", "adaptive-pso"];
+
+/// Resolve a (possibly aliased) name to its canonical registry key.
+pub fn canonical(name: &str) -> Result<&'static str, PlacementError> {
+    match name {
+        "pso" => Ok("pso"),
+        "pso-batched" => Ok("pso-batched"),
+        "random" => Ok("random"),
+        "round-robin" | "uniform" => Ok("round-robin"),
+        "ga" => Ok("ga"),
+        "sa" => Ok("sa"),
+        "tabu" => Ok("tabu"),
+        "adaptive-pso" | "pso-adaptive" => Ok("adaptive-pso"),
+        other => Err(PlacementError::UnknownStrategy { name: other.to_string() }),
+    }
+}
+
+/// Build a simulation-mode optimizer for a scenario: `pso` is the
+/// paper's synchronous Algorithm-1 swarm ([`SwarmOptimizer::exact`],
+/// reproducing the legacy `run_sim` trace for the same seed), and the
+/// RNG stream is supplied by the caller so the simulation pipeline can
+/// split it off the population sampler.
+pub fn build_sim(
+    name: &str,
+    sc: &SimScenario,
+    rng: Pcg32,
+) -> Result<Box<dyn Optimizer>, PlacementError> {
+    let dims = sc.dimensions();
+    let cc = sc.client_count();
+    Ok(match canonical(name)? {
+        "pso" => Box::new(SwarmOptimizer::exact(dims, cc, sc.pso, rng)),
+        "pso-batched" => Box::new(SwarmOptimizer::batched(dims, cc, sc.pso, rng)),
+        "random" => Box::new(RandomPlacement::new(dims, cc, rng)),
+        "round-robin" => Box::new(RoundRobinPlacement::new(dims, cc)),
+        "ga" => Box::new(GaPlacement::new(dims, cc, GaConfig::default(), rng)),
+        "sa" => Box::new(SaPlacement::new(dims, cc, SaConfig::default(), rng)),
+        "tabu" => Box::new(TabuPlacement::new(dims, cc, TabuConfig::default(), rng)),
+        "adaptive-pso" => Box::new(AdaptivePsoPlacement::new(dims, cc, sc.pso, rng)),
+        _ => unreachable!("canonical() covers every registry key"),
+    })
+}
+
+/// Build a simulation-mode optimizer from a scenario + seed (the
+/// CLI-facing factory).
+pub fn build(name: &str, sc: &SimScenario, seed: u64) -> Result<Box<dyn Optimizer>, PlacementError> {
+    build_sim(name, sc, Pcg32::seed_from_u64(seed))
+}
+
+/// Build a live/deployment-mode optimizer: `pso` is Flag-Swap's
+/// steady-state [`PsoPlacement`] (one evaluation per FL round, gbest
+/// pinning after convergence — the Fig-4 behavior).
+pub fn build_live(
+    name: &str,
+    dims: usize,
+    client_count: usize,
+    pso: PsoConfig,
+    seed: u64,
+) -> Result<Box<dyn Optimizer>, PlacementError> {
+    let rng = Pcg32::seed_from_u64(seed);
+    Ok(match canonical(name)? {
+        "pso" => Box::new(PsoPlacement::new(dims, client_count, pso, rng)),
+        "pso-batched" => Box::new(SwarmOptimizer::batched(dims, client_count, pso, rng)),
+        "random" => Box::new(RandomPlacement::new(dims, client_count, rng)),
+        "round-robin" => Box::new(RoundRobinPlacement::new(dims, client_count)),
+        "ga" => Box::new(GaPlacement::new(dims, client_count, GaConfig::default(), rng)),
+        "sa" => Box::new(SaPlacement::new(dims, client_count, SaConfig::default(), rng)),
+        "tabu" => Box::new(TabuPlacement::new(dims, client_count, TabuConfig::default(), rng)),
+        "adaptive-pso" => Box::new(AdaptivePsoPlacement::new(dims, client_count, pso, rng)),
+        _ => unreachable!("canonical() covers every registry key"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_name_round_trips() {
+        let sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        for name in NAMES {
+            let opt = build(name, &sc, 42).unwrap_or_else(|e| panic!("build({name}): {e}"));
+            assert_eq!(opt.name(), name, "canonical name must round-trip");
+            let live = build_live(name, 3, 10, PsoConfig::paper(), 42)
+                .unwrap_or_else(|e| panic!("build_live({name}): {e}"));
+            assert_eq!(live.name(), name);
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_strategies() {
+        let uniform = build_live("uniform", 3, 10, PsoConfig::paper(), 1).unwrap();
+        assert_eq!(uniform.name(), "round-robin");
+        let adaptive = build_live("pso-adaptive", 3, 10, PsoConfig::paper(), 1).unwrap();
+        assert_eq!(adaptive.name(), "adaptive-pso");
+    }
+
+    #[test]
+    fn unknown_name_lists_valid_strategies() {
+        let err = build_live("simulated-annealing", 3, 10, PsoConfig::paper(), 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown strategy"), "{msg}");
+        // The error is actionable: it names the valid keys.
+        for name in NAMES {
+            assert!(msg.contains(name), "error should list {name:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn built_optimizers_propose_valid_placements() {
+        let sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        let dims = sc.dimensions();
+        let cc = sc.client_count();
+        for name in NAMES {
+            let mut opt = build(name, &sc, 7).unwrap();
+            crate::placement::testkit::run_toy_validated(opt.as_mut(), dims, cc, 30, |p| {
+                p.iter().sum::<usize>() as f64 + 1.0
+            });
+        }
+    }
+}

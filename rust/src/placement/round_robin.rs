@@ -1,8 +1,9 @@
 //! Uniform round-robin placement — SDFLMQ's built-in "uniform" baseline
 //! (paper §IV.C): aggregator duty rotates through the population so
-//! every client serves equally often.
+//! every client serves equally often. Registry name `round-robin`
+//! (`uniform` accepted as an alias).
 
-use super::PlacementStrategy;
+use super::{Optimizer, Placement};
 
 /// Rotating window of `dims` consecutive client ids.
 pub struct RoundRobinPlacement {
@@ -17,22 +18,24 @@ impl RoundRobinPlacement {
     }
 }
 
-impl PlacementStrategy for RoundRobinPlacement {
+impl Optimizer for RoundRobinPlacement {
     fn name(&self) -> &'static str {
-        "uniform"
+        "round-robin"
     }
 
-    fn propose(&mut self, round: usize) -> Vec<usize> {
+    fn propose_batch(&mut self, round: usize) -> Vec<Placement> {
         // Window advances by `dims` each round so the duty cycle is
         // uniform: with cc=10, dims=3 → {0,1,2}, {3,4,5}, {6,7,8},
         // {9,0,1}, ... Consecutive ids are always distinct (dims ≤ cc).
         let start = (round * self.dims) % self.client_count;
-        (0..self.dims)
-            .map(|i| (start + i) % self.client_count)
-            .collect()
+        vec![Placement::new(
+            (0..self.dims)
+                .map(|i| (start + i) % self.client_count)
+                .collect(),
+        )]
     }
 
-    fn feedback(&mut self, _placement: &[usize], _delay_secs: f64) {
+    fn observe_batch(&mut self, _placements: &[Placement], _delays: &[f64]) {
         // Deterministic baseline: learns nothing.
     }
 }
@@ -41,13 +44,17 @@ impl PlacementStrategy for RoundRobinPlacement {
 mod tests {
     use super::*;
 
+    fn draw(s: &mut RoundRobinPlacement, round: usize) -> Vec<usize> {
+        s.propose_batch(round).pop().unwrap().into_vec()
+    }
+
     #[test]
     fn rotates_through_population() {
         let mut s = RoundRobinPlacement::new(3, 10);
-        assert_eq!(s.propose(0), vec![0, 1, 2]);
-        assert_eq!(s.propose(1), vec![3, 4, 5]);
-        assert_eq!(s.propose(2), vec![6, 7, 8]);
-        assert_eq!(s.propose(3), vec![9, 0, 1]);
+        assert_eq!(draw(&mut s, 0), vec![0, 1, 2]);
+        assert_eq!(draw(&mut s, 1), vec![3, 4, 5]);
+        assert_eq!(draw(&mut s, 2), vec![6, 7, 8]);
+        assert_eq!(draw(&mut s, 3), vec![9, 0, 1]);
     }
 
     #[test]
@@ -55,7 +62,7 @@ mod tests {
         let mut s = RoundRobinPlacement::new(2, 8);
         let mut count = vec![0usize; 8];
         for r in 0..8 {
-            for c in s.propose(r) {
+            for &c in draw(&mut s, r).iter() {
                 count[c] += 1;
             }
         }
@@ -68,7 +75,7 @@ mod tests {
         let mut a = RoundRobinPlacement::new(4, 11);
         let mut b = RoundRobinPlacement::new(4, 11);
         for r in 0..30 {
-            assert_eq!(a.propose(r), b.propose(r));
+            assert_eq!(draw(&mut a, r), draw(&mut b, r));
         }
     }
 }

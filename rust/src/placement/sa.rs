@@ -5,7 +5,7 @@
 //! to a new client, or swap two slots), accept per Metropolis with a
 //! geometrically cooling temperature.
 
-use super::PlacementStrategy;
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
 use crate::prng::{Pcg32, Rng};
 
 /// SA hyper-parameters.
@@ -61,10 +61,8 @@ impl SaPlacement {
         }
     }
 
-    pub fn best(&self) -> &[usize] {
-        &self.best
-    }
-
+    /// Best (lowest) delay observed so far (`Optimizer::best` returns the
+    /// matching placement).
     pub fn best_delay(&self) -> f64 {
         self.best_delay
     }
@@ -92,61 +90,76 @@ impl SaPlacement {
     }
 }
 
-impl PlacementStrategy for SaPlacement {
+impl Optimizer for SaPlacement {
     fn name(&self) -> &'static str {
         "sa"
     }
 
-    fn propose(&mut self, round: usize) -> Vec<usize> {
+    fn propose_batch(&mut self, round: usize) -> Vec<Placement> {
         if round == 0 || self.current_delay.is_infinite() {
             // First evaluation scores the initial state.
             self.candidate = self.current.clone();
         } else {
             self.candidate = self.neighbour();
         }
-        self.candidate.clone()
+        vec![Placement::new(self.candidate.clone())]
     }
 
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
-        debug_assert_eq!(placement, self.candidate.as_slice());
-        if delay_secs < self.best_delay {
-            self.best_delay = delay_secs;
-            self.best = placement.to_vec();
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &delay_secs) in placements.iter().zip(delays) {
+            debug_assert_eq!(p.as_slice(), self.candidate.as_slice());
+            if delay_secs < self.best_delay {
+                self.best_delay = delay_secs;
+                self.best = p.to_vec();
+            }
+            let accept = if delay_secs <= self.current_delay {
+                true
+            } else {
+                let d = delay_secs - self.current_delay;
+                self.rng.next_f64() < (-d / self.temperature.max(self.cfg.t_min)).exp()
+            };
+            if accept {
+                self.current = p.to_vec();
+                self.current_delay = delay_secs;
+            }
+            self.temperature = (self.temperature * self.cfg.cooling).max(self.cfg.t_min);
         }
-        let accept = if delay_secs <= self.current_delay {
-            true
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        if self.best_delay.is_finite() {
+            Some((Placement::new(self.best.clone()), self.best_delay))
         } else {
-            let d = delay_secs - self.current_delay;
-            self.rng.next_f64() < (-d / self.temperature.max(self.cfg.t_min)).exp()
-        };
-        if accept {
-            self.current = placement.to_vec();
-            self.current_delay = delay_secs;
+            None
         }
-        self.temperature = (self.temperature * self.cfg.cooling).max(self.cfg.t_min);
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = &state.best {
+            super::validate_placement(placement, self.dims, self.client_count)?;
+            // Resume the walk from the checkpointed incumbent.
+            self.best = placement.to_vec();
+            self.best_delay = *delay;
+            self.current = placement.to_vec();
+            self.current_delay = *delay;
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::testkit;
 
     #[test]
     fn improves_on_toy_landscape() {
         let mut sa = SaPlacement::new(4, 25, SaConfig::default(), Pcg32::seed_from_u64(1));
-        let mut early = 0.0;
-        let mut late = 0.0;
-        for round in 0..200 {
-            let p = sa.propose(round);
-            let d = p.iter().sum::<usize>() as f64 + 1.0;
-            if round < 20 {
-                early += d;
-            }
-            if round >= 180 {
-                late += d;
-            }
-            sa.feedback(&p, d);
-        }
+        let delays =
+            testkit::run_toy_validated(&mut sa, 4, 25, 200, |p| p.iter().sum::<usize>() as f64 + 1.0);
+        let early: f64 = delays[..20].iter().sum();
+        let late: f64 = delays[180..].iter().sum();
         assert!(late < early, "SA failed to improve: early {early}, late {late}");
     }
 
@@ -158,23 +171,17 @@ mod tests {
             t_min: 0.1,
         };
         let mut sa = SaPlacement::new(2, 6, cfg, Pcg32::seed_from_u64(2));
-        for round in 0..30 {
-            let p = sa.propose(round);
-            sa.feedback(&p, 1.0);
-        }
+        testkit::run_toy_validated(&mut sa, 2, 6, 30, |_| 1.0);
         assert!((sa.temperature - 0.1).abs() < 1e-12);
     }
 
     #[test]
     fn proposals_always_distinct_ids() {
         let mut sa = SaPlacement::new(3, 7, SaConfig::default(), Pcg32::seed_from_u64(3));
-        for round in 0..100 {
-            let p = sa.propose(round);
-            let mut q = p.clone();
-            q.sort_unstable();
-            q.dedup();
-            assert_eq!(q.len(), 3);
-            sa.feedback(&p, (round % 5) as f64);
-        }
+        let mut round = 0usize;
+        testkit::run_toy_validated(&mut sa, 3, 7, 100, |_| {
+            round += 1;
+            (round % 5) as f64
+        });
     }
 }

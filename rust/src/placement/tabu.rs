@@ -6,7 +6,7 @@
 //! steepest-descent neighbour moves with a recency-based tabu list and
 //! aspiration (a tabu move is allowed if it beats the global best).
 
-use super::PlacementStrategy;
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
 use crate::prng::{Pcg32, Rng};
 use std::collections::VecDeque;
 
@@ -68,10 +68,8 @@ impl TabuPlacement {
         }
     }
 
-    pub fn best(&self) -> &[usize] {
-        &self.best
-    }
-
+    /// Best (lowest) delay observed so far (`Optimizer::best` returns the
+    /// matching placement).
     pub fn best_delay(&self) -> f64 {
         self.best_delay
     }
@@ -136,45 +134,75 @@ impl TabuPlacement {
     }
 }
 
-impl PlacementStrategy for TabuPlacement {
+impl Optimizer for TabuPlacement {
     fn name(&self) -> &'static str {
         "tabu"
     }
 
-    fn propose(&mut self, _round: usize) -> Vec<usize> {
+    /// One candidate at a time: the aspiration rule (accept a move the
+    /// moment it beats the global best, skipping the rest of the
+    /// candidate batch) only works when evaluations stay sequential —
+    /// batching the whole candidate list would spend live FL rounds on
+    /// candidates aspiration would have skipped.
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
         if self.batch.is_empty() {
             // First call evaluates the initial state, then batches begin.
-            return self.current.clone();
+            return vec![Placement::new(self.current.clone())];
         }
-        self.batch[self.cursor].0.clone()
+        vec![Placement::new(self.batch[self.cursor].0.clone())]
     }
 
-    fn feedback(&mut self, placement: &[usize], delay_secs: f64) {
-        if self.batch.is_empty() {
-            // Initial state evaluated.
-            debug_assert_eq!(placement, self.current.as_slice());
-            self.best_delay = delay_secs;
-            self.best = self.current.clone();
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &delay_secs) in placements.iter().zip(delays) {
+            if self.batch.is_empty() {
+                // Initial state evaluated.
+                debug_assert_eq!(p.as_slice(), self.current.as_slice());
+                self.best_delay = delay_secs;
+                self.best = self.current.clone();
+                self.refill_batch();
+                continue;
+            }
+            debug_assert_eq!(p.as_slice(), self.batch[self.cursor].0.as_slice());
+            self.batch[self.cursor].2 = delay_secs;
+            // Aspiration: accept immediately if it beats the global best.
+            if delay_secs < self.best_delay {
+                self.accept_best();
+                continue;
+            }
+            self.cursor += 1;
+            if self.cursor >= self.batch.len() {
+                self.accept_best();
+            }
+        }
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        if self.best_delay.is_finite() {
+            Some((Placement::new(self.best.clone()), self.best_delay))
+        } else {
+            None
+        }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((placement, delay)) = &state.best {
+            super::validate_placement(placement, self.dims, self.client_count)?;
+            // Resume the search from the checkpointed incumbent with a
+            // fresh candidate batch around it.
+            self.best = placement.to_vec();
+            self.best_delay = *delay;
+            self.current = placement.to_vec();
             self.refill_batch();
-            return;
         }
-        debug_assert_eq!(placement, self.batch[self.cursor].0.as_slice());
-        self.batch[self.cursor].2 = delay_secs;
-        // Aspiration: accept immediately if it beats the global best.
-        if delay_secs < self.best_delay {
-            self.accept_best();
-            return;
-        }
-        self.cursor += 1;
-        if self.cursor >= self.batch.len() {
-            self.accept_best();
-        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::testkit;
 
     fn toy(pos: &[usize]) -> f64 {
         pos.chunks(2)
@@ -186,19 +214,9 @@ mod tests {
     #[test]
     fn improves_on_toy_landscape() {
         let mut t = TabuPlacement::new(4, 25, TabuConfig::default(), Pcg32::seed_from_u64(1));
-        let mut early = 0.0;
-        let mut late = 0.0;
-        for round in 0..300 {
-            let p = t.propose(round);
-            let d = toy(&p);
-            if round < 30 {
-                early += d;
-            }
-            if round >= 270 {
-                late += d;
-            }
-            t.feedback(&p, d);
-        }
+        let delays = testkit::run_toy_validated(&mut t, 4, 25, 300, toy);
+        let early: f64 = delays[..30].iter().sum();
+        let late: f64 = delays[270..].iter().sum();
         assert!(late < early, "tabu failed to improve: early {early}, late {late}");
         assert!(t.best_delay() < early / 30.0);
     }
@@ -206,15 +224,11 @@ mod tests {
     #[test]
     fn proposals_always_valid() {
         let mut t = TabuPlacement::new(3, 8, TabuConfig::default(), Pcg32::seed_from_u64(2));
-        for round in 0..200 {
-            let p = t.propose(round);
-            let mut q = p.clone();
-            q.sort_unstable();
-            q.dedup();
-            assert_eq!(q.len(), 3, "{p:?}");
-            assert!(p.iter().all(|&c| c < 8));
-            t.feedback(&p, (round % 9) as f64 + 0.5);
-        }
+        let mut round = 0usize;
+        testkit::run_toy_validated(&mut t, 3, 8, 200, |_| {
+            round += 1;
+            (round % 9) as f64 + 0.5
+        });
     }
 
     #[test]
@@ -224,23 +238,15 @@ mod tests {
             candidates: 3,
         };
         let mut t = TabuPlacement::new(3, 10, cfg, Pcg32::seed_from_u64(3));
-        for round in 0..100 {
-            let p = t.propose(round);
-            t.feedback(&p, toy(&p));
-        }
+        testkit::run_toy_validated(&mut t, 3, 10, 100, toy);
         assert!(t.tabu.len() <= 4);
     }
 
     #[test]
     fn best_tracks_minimum_observed() {
         let mut t = TabuPlacement::new(2, 12, TabuConfig::default(), Pcg32::seed_from_u64(4));
-        let mut min = f64::INFINITY;
-        for round in 0..120 {
-            let p = t.propose(round);
-            let d = toy(&p);
-            min = min.min(d);
-            t.feedback(&p, d);
-        }
+        let delays = testkit::run_toy_validated(&mut t, 2, 12, 120, toy);
+        let min = delays.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!((t.best_delay() - min).abs() < 1e-9);
     }
 }

@@ -109,6 +109,19 @@ impl AsyncSwarm {
         }
     }
 
+    /// Aggregator slots per placement (the search dimensionality).
+    pub fn dims(&self) -> usize {
+        self.particles[0].position.len()
+    }
+
+    /// Seed the global best from a checkpointed placement + delay (the
+    /// optimizer restore hook): the swarm resumes warm, pulled toward
+    /// the incumbent.
+    pub fn seed_gbest(&mut self, placement: &[usize], delay: f64) {
+        self.gbest = placement.iter().map(|&c| c as f64).collect();
+        self.gbest_fitness = -delay;
+    }
+
     /// Best placement found so far.
     pub fn gbest(&self) -> Vec<usize> {
         derive_placement(&self.gbest, self.client_count)

@@ -27,6 +27,10 @@ pub struct Swarm {
     pub gbest_fitness: f64,
     client_count: usize,
     rng: Pcg32,
+    /// Index of the particle whose evaluation is next (incremental API).
+    cursor: usize,
+    /// TPDs observed so far in the in-flight sweep (incremental API).
+    pending: Vec<f64>,
 }
 
 impl Swarm {
@@ -47,6 +51,8 @@ impl Swarm {
             gbest_fitness: f64::NEG_INFINITY,
             client_count,
             rng,
+            cursor: 0,
+            pending: Vec::new(),
         }
     }
 
@@ -55,27 +61,85 @@ impl Swarm {
         super::particle::derive_placement(&self.gbest, self.client_count)
     }
 
-    /// Evaluate all particles with `tpd_of` (lower TPD = better; fitness
-    /// is −TPD per the paper's Eq. 1), then update velocities/positions.
-    /// Returns this iteration's statistics.
-    ///
-    /// Order matches Algorithm 1: each particle is moved, evaluated, and
-    /// the bests updated, so later particles in the same iteration
-    /// already feel an improved gbest.
-    pub fn step<F: FnMut(&[usize]) -> f64>(&mut self, mut tpd_of: F) -> IterationStats {
-        let mut per_particle = Vec::with_capacity(self.particles.len());
-        for i in 0..self.particles.len() {
-            // First sweep: evaluate initial positions before moving
-            // (gbest is at -inf fitness until somebody has been scored).
-            if self.gbest_fitness > f64::NEG_INFINITY {
-                let gbest = self.gbest.clone();
-                let p = &mut self.particles[i];
+    /// Seed the global best from a checkpointed placement + delay (the
+    /// optimizer restore hook): the swarm resumes warm, pulled toward
+    /// the incumbent.
+    pub fn seed_gbest(&mut self, placement: &[usize], delay: f64) {
+        self.gbest = placement.iter().map(|&c| c as f64).collect();
+        self.gbest_fitness = -delay;
+    }
+
+    /// Incremental API, step 1 of 2: move the cursor particle (once a
+    /// gbest exists) and return the placement to evaluate next. Matches
+    /// Algorithm 1 exactly: each particle is moved against the gbest *as
+    /// of its turn*, so later particles in the same sweep already feel
+    /// improvements from earlier ones. Must alternate with
+    /// [`Swarm::observe_next`].
+    pub fn propose_next(&mut self) -> Vec<usize> {
+        debug_assert_eq!(
+            self.pending.len(),
+            self.cursor,
+            "propose_next must alternate with observe_next"
+        );
+        // First sweep: evaluate initial positions before moving
+        // (gbest is at -inf fitness until somebody has been scored).
+        if self.gbest_fitness > f64::NEG_INFINITY {
+            let gbest = self.gbest.clone();
+            let p = &mut self.particles[self.cursor];
+            p.update_velocity(&gbest, &self.cfg, &mut self.rng);
+            p.update_position(self.client_count);
+        }
+        self.particles[self.cursor].placement(self.client_count)
+    }
+
+    /// Incremental API, step 2 of 2: record the TPD of the placement
+    /// returned by the latest [`Swarm::propose_next`]. Returns the sweep
+    /// statistics when this observation completes a full pass over the
+    /// swarm.
+    pub fn observe_next(&mut self, t: f64) -> Option<IterationStats> {
+        let i = self.cursor;
+        self.pending.push(t);
+        let fitness = -t;
+        self.particles[i].observe(fitness);
+        if fitness > self.gbest_fitness {
+            self.gbest_fitness = fitness;
+            self.gbest = self.particles[i].position.clone();
+        }
+        self.cursor += 1;
+        if self.cursor == self.particles.len() {
+            self.cursor = 0;
+            let per_particle = std::mem::take(&mut self.pending);
+            Some(self.stats_for(per_particle))
+        } else {
+            None
+        }
+    }
+
+    /// Batched API, step 1 of 2: move *all* particles against the current
+    /// gbest and return every placement — letting the environment score a
+    /// whole iteration in one dispatch. Classic two-phase synchronous
+    /// PSO: unlike [`Swarm::step`]/[`Swarm::propose_next`], particles do
+    /// not see same-iteration gbest improvements.
+    pub fn begin_iteration(&mut self) -> Vec<Vec<usize>> {
+        debug_assert!(
+            self.cursor == 0 && self.pending.is_empty(),
+            "begin_iteration during an in-flight incremental sweep"
+        );
+        if self.gbest_fitness > f64::NEG_INFINITY {
+            let gbest = self.gbest.clone();
+            for p in &mut self.particles {
                 p.update_velocity(&gbest, &self.cfg, &mut self.rng);
                 p.update_position(self.client_count);
             }
-            let placement = self.particles[i].placement(self.client_count);
-            let t = tpd_of(&placement);
-            per_particle.push(t);
+        }
+        self.particles.iter().map(|p| p.placement(self.client_count)).collect()
+    }
+
+    /// Batched API, step 2 of 2: absorb the delays for (a prefix of) the
+    /// placements returned by [`Swarm::begin_iteration`].
+    pub fn complete_iteration(&mut self, tpds: &[f64]) -> IterationStats {
+        debug_assert!(tpds.len() <= self.particles.len());
+        for (i, &t) in tpds.iter().enumerate() {
             let fitness = -t;
             self.particles[i].observe(fitness);
             if fitness > self.gbest_fitness {
@@ -83,6 +147,10 @@ impl Swarm {
                 self.gbest = self.particles[i].position.clone();
             }
         }
+        self.stats_for(tpds.to_vec())
+    }
+
+    fn stats_for(&self, per_particle: Vec<f64>) -> IterationStats {
         let worst = per_particle.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let best = per_particle.iter().cloned().fold(f64::INFINITY, f64::min);
         let mean = per_particle.iter().sum::<f64>() / per_particle.len() as f64;
@@ -92,6 +160,22 @@ impl Swarm {
             mean,
             best,
             gbest_tpd: -self.gbest_fitness,
+        }
+    }
+
+    /// Evaluate all particles with `tpd_of` (lower TPD = better; fitness
+    /// is −TPD per the paper's Eq. 1), updating velocities/positions.
+    /// Returns this iteration's statistics.
+    ///
+    /// Implemented over the incremental API, so closure-driven and
+    /// batch-driven callers share one Algorithm-1 implementation.
+    pub fn step<F: FnMut(&[usize]) -> f64>(&mut self, mut tpd_of: F) -> IterationStats {
+        loop {
+            let placement = self.propose_next();
+            let t = tpd_of(&placement);
+            if let Some(stats) = self.observe_next(t) {
+                return stats;
+            }
         }
     }
 
@@ -224,5 +308,64 @@ mod tests {
         let mut s = swarm(5, 5, 4);
         let stats = s.run(|pos| pos.iter().enumerate().map(|(i, &c)| (i * c) as f64).sum());
         assert!(stats.last().unwrap().gbest_tpd.is_finite());
+    }
+
+    #[test]
+    fn incremental_api_matches_step_exactly() {
+        // propose_next/observe_next is the primitive step() is built on;
+        // driving it by hand must yield identical sweeps (same RNG
+        // consumption, same placements, same stats).
+        let mut a = swarm(4, 20, 6);
+        let mut b = swarm(4, 20, 6);
+        for _ in 0..30 {
+            let sa = a.step(toy_tpd);
+            let mut sb = None;
+            while sb.is_none() {
+                let p = b.propose_next();
+                sb = b.observe_next(toy_tpd(&p));
+            }
+            assert_eq!(Some(sa), sb);
+        }
+        assert_eq!(a.gbest_placement(), b.gbest_placement());
+    }
+
+    #[test]
+    fn batched_iterations_improve_and_stay_valid() {
+        // Two-phase mode: whole-swarm proposals, one scoring pass per
+        // iteration. Semantics differ from Algorithm 1 (no within-sweep
+        // gbest visibility) but the search must still descend.
+        let mut s = swarm(4, 20, 8);
+        let mut first_mean = None;
+        let mut last = f64::INFINITY;
+        for _ in 0..100 {
+            let batch = s.begin_iteration();
+            assert_eq!(batch.len(), 8);
+            for p in &batch {
+                let mut q = p.clone();
+                q.sort_unstable();
+                q.dedup();
+                assert_eq!(q.len(), 4);
+            }
+            let tpds: Vec<f64> = batch.iter().map(|p| toy_tpd(p)).collect();
+            let stats = s.complete_iteration(&tpds);
+            first_mean.get_or_insert(stats.mean);
+            last = stats.gbest_tpd;
+        }
+        assert!(
+            last < first_mean.unwrap(),
+            "batched swarm failed to improve: first mean {:?}, final gbest {last}",
+            first_mean
+        );
+    }
+
+    #[test]
+    fn seed_gbest_warm_starts_the_swarm() {
+        let mut s = swarm(3, 12, 4);
+        s.seed_gbest(&[0, 1, 2], 2.5);
+        assert_eq!(s.gbest_placement(), vec![0, 1, 2]);
+        assert!((-s.gbest_fitness - 2.5).abs() < 1e-12);
+        // A warm gbest means the very first sweep already moves.
+        let p = s.propose_next();
+        assert_eq!(p.len(), 3);
     }
 }

@@ -1,70 +1,73 @@
 //! Fig-4 harness: the docker-analogue deployment comparison (random vs
-//! uniform round-robin vs PSO) and the end-to-end training driver.
-//! Shared by `repro compare` / `repro e2e`, the examples and the
-//! `fig4_deploy` bench so every entry point reports identical rows.
+//! uniform round-robin vs PSO, plus any other registered strategy) and
+//! the end-to-end training driver. Shared by `repro compare` /
+//! `repro e2e`, the examples and the `fig4_deploy` bench so every entry
+//! point reports identical rows. Strategies are built through
+//! [`registry`], so `--strategies ga,sa,tabu` works everywhere.
 
 use super::ascii_plot;
 use crate::configio::DeployScenario;
 use crate::fl::Deployment;
 use crate::metrics::{CsvWriter, RoundRecorder};
-use crate::placement::{PlacementStrategy, PsoPlacement, RandomPlacement, RoundRobinPlacement};
-use crate::prng::Pcg32;
+use crate::placement::registry;
 use crate::runtime::ModelRuntime;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
 
+/// The paper's Fig-4 strategy line-up (seed-compatible labels: the
+/// round-robin baseline keeps its paper name "uniform").
+pub const DEFAULT_STRATEGIES: [&str; 3] = ["random", "uniform", "pso"];
+
 /// Outcome of one strategy's deployment run.
 pub struct StrategyOutcome {
-    pub name: &'static str,
+    /// The requested strategy name (alias preserved for CSV headers).
+    pub name: String,
     pub recorder: RoundRecorder,
 }
 
-/// Build the strategy by name for a scenario.
-pub fn make_strategy(name: &str, sc: &DeployScenario, seed: u64) -> Box<dyn PlacementStrategy> {
-    let dims = sc.dimensions();
-    let cc = sc.clients.len();
-    match name {
-        "random" => Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
-        "uniform" => Box::new(RoundRobinPlacement::new(dims, cc)),
-        "pso" => Box::new(PsoPlacement::new(
-            dims,
-            cc,
-            sc.pso,
-            Pcg32::seed_from_u64(seed),
-        )),
-        other => panic!("unknown strategy {other:?}"),
-    }
-}
-
-/// Run one strategy through a full deployment.
+/// Run one strategy (any [`registry`] name or alias) through a full
+/// deployment.
 pub fn run_strategy(
     sc: &DeployScenario,
-    name: &'static str,
+    name: &str,
     runtime: Arc<ModelRuntime>,
     time_scale: f64,
 ) -> Result<StrategyOutcome> {
-    let strategy = make_strategy(name, sc, sc.seed ^ 0xABCD);
+    let optimizer =
+        registry::build_live(name, sc.dimensions(), sc.clients.len(), sc.pso, sc.seed ^ 0xABCD)
+            .map_err(|e| anyhow!(e))?;
     let session = format!("fig4-{name}");
-    let mut dep = Deployment::launch(sc, &session, runtime, strategy, time_scale)?;
+    let mut dep = Deployment::launch(sc, &session, runtime, optimizer, time_scale)?;
     dep.run(sc.rounds)?;
     let recorder = dep.coordinator.recorder().clone();
     dep.shutdown();
-    Ok(StrategyOutcome { name, recorder })
+    Ok(StrategyOutcome { name: name.to_string(), recorder })
 }
 
-/// The full Fig-4 comparison. Writes `results/fig4.csv` (per-round
+/// The full Fig-4 comparison over `strategies` (registry names; empty ⇒
+/// the paper's default trio). Writes `results/fig4.csv` (per-round
 /// delays per strategy) and prints the paper-style summary (totals,
 /// convergence round, percentage improvements).
-pub fn run_fig4_comparison(rounds: usize, time_scale: f64, out_dir: &Path) -> Result<()> {
+pub fn run_fig4_comparison(
+    rounds: usize,
+    time_scale: f64,
+    out_dir: &Path,
+    strategies: &[String],
+) -> Result<()> {
     let runtime = Arc::new(
         ModelRuntime::load_default().context("artifacts required — run `make artifacts`")?,
     );
     let mut sc = DeployScenario::paper_docker();
     sc.rounds = rounds;
 
+    let names: Vec<String> = if strategies.is_empty() {
+        DEFAULT_STRATEGIES.iter().map(|s| s.to_string()).collect()
+    } else {
+        strategies.to_vec()
+    };
     let mut outcomes = Vec::new();
-    for name in ["random", "uniform", "pso"] {
+    for name in &names {
         crate::log_info!("fig4", "running strategy {name} for {rounds} rounds");
         outcomes.push(run_strategy(&sc, name, runtime.clone(), time_scale)?);
     }
@@ -104,12 +107,16 @@ pub fn report_fig4(outcomes: &[StrategyOutcome], out_dir: &Path) -> Result<()> {
     let series: Vec<(&str, char, Vec<f64>)> = outcomes
         .iter()
         .map(|o| {
-            let glyph = match o.name {
+            let glyph = match o.name.as_str() {
                 "random" => 'r',
-                "uniform" => 'u',
+                "uniform" | "round-robin" => 'u',
+                "ga" => 'g',
+                "sa" => 's',
+                "tabu" => 't',
+                "adaptive-pso" | "pso-adaptive" => 'a',
                 _ => 'p',
             };
-            (o.name, glyph, o.recorder.delays_secs())
+            (o.name.as_str(), glyph, o.recorder.delays_secs())
         })
         .collect();
     let series_refs: Vec<(&str, char, &[f64])> = series
@@ -124,14 +131,14 @@ pub fn report_fig4(outcomes: &[StrategyOutcome], out_dir: &Path) -> Result<()> {
     // Summary rows (the paper's headline numbers).
     println!("=== Fig-4 summary ===");
     println!(
-        "{:<10} {:>12} {:>12} {:>12} {:>14}",
+        "{:<14} {:>12} {:>12} {:>12} {:>14}",
         "strategy", "total (s)", "mean (s)", "p50 (s)", "converged@round"
     );
     let mut totals = std::collections::BTreeMap::new();
     for o in outcomes {
         let delays = o.recorder.delays_secs();
         let total: f64 = delays.iter().sum();
-        totals.insert(o.name, total);
+        totals.insert(o.name.as_str(), total);
         let summary = crate::metrics::Summary::from(&delays);
         let conv = o
             .recorder
@@ -139,7 +146,7 @@ pub fn report_fig4(outcomes: &[StrategyOutcome], out_dir: &Path) -> Result<()> {
             .map(|r| r.to_string())
             .unwrap_or_else(|| "-".into());
         println!(
-            "{:<10} {:>12.2} {:>12.3} {:>12.3} {:>14}",
+            "{:<14} {:>12.2} {:>12.3} {:>12.3} {:>14}",
             o.name, total, summary.mean, summary.p50, conv
         );
     }

@@ -1,32 +1,42 @@
-//! Simulation driver: scenario → population → PSO → trace.
+//! Simulation driver: scenario → population → optimizer × environment →
+//! trace. Any registered strategy runs against the [`AnalyticTpd`]
+//! environment through the generic [`drive`] loop; `"pso"` replays the
+//! paper's Algorithm 1 exactly (same seed ⇒ same trace as the original
+//! closure-driven `run_sim`).
 
 use super::SimTrace;
 use crate::configio::SimScenario;
-use crate::fitness::{tpd, ClientAttrs};
-use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::fitness::ClientAttrs;
+use crate::hierarchy::HierarchySpec;
+use crate::placement::{drive, registry, AnalyticTpd, PlacementError};
 use crate::prng::Pcg32;
-use crate::pso::Swarm;
 
 /// Output of one simulation run.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub scenario: SimScenario,
+    /// Canonical strategy name the run used.
+    pub strategy: String,
     pub trace: SimTrace,
     /// Best placement found (client ids per slot).
     pub best_placement: Vec<usize>,
     /// TPD of `best_placement`.
     pub best_tpd: f64,
-    /// Whether all particles converged to one placement (the paper's
-    /// convergence criterion).
+    /// Whether the optimizer reports convergence (for PSO: all particles
+    /// propose one placement — the paper's criterion).
     pub converged: bool,
     /// The simulated client population (for inspection / plots).
     pub attrs: Vec<ClientAttrs>,
+    /// Fitness evaluations spent (= iterations × particles).
+    pub evaluations: usize,
 }
 
-/// Run the Fig-3 simulation for one scenario.
-pub fn run_sim(scenario: &SimScenario) -> SimResult {
+/// Run one simulation with any registered strategy against the analytic
+/// TPD environment, under the scenario's evaluation budget
+/// (`pso.iterations × pso.particles`, the same budget the paper's swarm
+/// spends).
+pub fn run_sim_with(scenario: &SimScenario, strategy: &str) -> Result<SimResult, PlacementError> {
     let spec = HierarchySpec::new(scenario.depth, scenario.width);
-    let dims = spec.dimensions();
     let client_count = scenario.client_count();
 
     let mut rng = Pcg32::seed_from_u64(scenario.seed);
@@ -38,18 +48,38 @@ pub fn run_sim(scenario: &SimScenario) -> SimResult {
         &mut rng,
     );
 
-    let mut swarm = Swarm::new(dims, client_count, scenario.pso, rng.split());
-    let stats = swarm.run(|pos| tpd(&Arrangement::from_position(spec, pos, client_count), &attrs).total);
+    // The optimizer draws from a stream split *after* population
+    // sampling — exactly the legacy `run_sim` seeding, so PSO runs are
+    // reproducible against the original pipeline.
+    let mut opt = registry::build_sim(strategy, scenario, rng.split())?;
+    let mut env = AnalyticTpd::new(spec, attrs);
 
-    let trace = SimTrace::from_stats(&stats);
-    SimResult {
+    let budget = scenario.pso.iterations * scenario.pso.particles;
+    let outcome = drive(opt.as_mut(), &mut env, budget)?;
+
+    let (best_placement, best_tpd) = match opt.best() {
+        Some((p, t)) => (p.into_vec(), t),
+        None => (
+            outcome.best_placement.clone().map(|p| p.into_vec()).unwrap_or_default(),
+            outcome.best_delay,
+        ),
+    };
+
+    Ok(SimResult {
         scenario: scenario.clone(),
-        best_placement: swarm.gbest_placement(),
-        best_tpd: -swarm.gbest_fitness,
-        converged: swarm.converged(),
-        trace,
-        attrs,
-    }
+        strategy: opt.name().to_string(),
+        trace: SimTrace::from_stats(&outcome.stats),
+        best_placement,
+        best_tpd,
+        converged: opt.converged(),
+        attrs: env.attrs().to_vec(),
+        evaluations: outcome.evaluations,
+    })
+}
+
+/// Run the Fig-3 simulation for one scenario with the paper's PSO.
+pub fn run_sim(scenario: &SimScenario) -> SimResult {
+    run_sim_with(scenario, "pso").expect("pso is always registered")
 }
 
 #[cfg(test)]
@@ -81,6 +111,8 @@ mod tests {
 
     #[test]
     fn best_placement_is_valid_and_matches_tpd() {
+        use crate::fitness::tpd;
+        use crate::hierarchy::Arrangement;
         let sc = quick_scenario();
         let r = run_sim(&sc);
         let spec = HierarchySpec::new(sc.depth, sc.width);
@@ -107,6 +139,7 @@ mod tests {
         let r = run_sim(&sc);
         assert_eq!(r.trace.iterations(), sc.pso.iterations);
         assert_eq!(r.trace.per_particle.len(), sc.pso.particles);
+        assert_eq!(r.evaluations, sc.pso.iterations * sc.pso.particles);
     }
 
     #[test]
@@ -123,5 +156,60 @@ mod tests {
         let r_small = run_sim(&small);
         let r_large = run_sim(&large);
         assert!(r_large.best_tpd <= r_small.best_tpd * 1.05);
+    }
+
+    #[test]
+    fn every_registered_strategy_runs_the_quick_scenario() {
+        let sc = quick_scenario();
+        for name in registry::NAMES {
+            let r = run_sim_with(&sc, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.strategy, name);
+            assert_eq!(r.evaluations, sc.pso.iterations * sc.pso.particles);
+            assert!(r.best_tpd.is_finite() && r.best_tpd > 0.0, "{name}: {}", r.best_tpd);
+            assert_eq!(r.best_placement.len(), sc.dimensions());
+            // Traces are plottable for every strategy.
+            assert!(r.trace.iterations() > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_is_a_helpful_error() {
+        let err = run_sim_with(&quick_scenario(), "annealing").unwrap_err();
+        assert!(err.to_string().contains("valid strategies"), "{err}");
+    }
+
+    #[test]
+    fn registry_pso_reproduces_the_legacy_swarm_pipeline() {
+        // The acceptance check for the API swap: the registry-driven
+        // `"pso"` path must equal a hand-built Swarm driven by the
+        // original closure loop, seed for seed.
+        use crate::fitness::tpd;
+        use crate::hierarchy::Arrangement;
+        use crate::pso::Swarm;
+        let sc = quick_scenario();
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let cc = sc.client_count();
+        let mut rng = Pcg32::seed_from_u64(sc.seed);
+        let attrs = ClientAttrs::sample_population(
+            cc,
+            sc.pspeed_range,
+            sc.memcap_range,
+            sc.mdatasize,
+            &mut rng,
+        );
+        let mut swarm = Swarm::new(spec.dimensions(), cc, sc.pso, rng.split());
+        let stats = swarm.run(|pos| {
+            tpd(&Arrangement::from_position(spec, pos, cc), &attrs).total
+        });
+        let legacy_trace = SimTrace::from_stats(&stats);
+        let legacy_best = -swarm.gbest_fitness;
+
+        let r = run_sim_with(&sc, "pso").unwrap();
+        assert_eq!(r.trace.per_particle, legacy_trace.per_particle);
+        assert_eq!(r.trace.gbest, legacy_trace.gbest);
+        assert_eq!(r.trace.mean, legacy_trace.mean);
+        assert_eq!(r.best_placement, swarm.gbest_placement());
+        assert!((r.best_tpd - legacy_best).abs() < 1e-12);
+        assert_eq!(r.converged, swarm.converged());
     }
 }

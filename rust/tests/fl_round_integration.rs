@@ -4,7 +4,7 @@
 
 use repro::configio::{ClientSpec, DeployScenario};
 use repro::fl::Deployment;
-use repro::placement::{PlacementStrategy, PsoPlacement, RandomPlacement, RoundRobinPlacement};
+use repro::placement::{Optimizer, PsoPlacement, RandomPlacement, RoundRobinPlacement};
 use repro::prng::Pcg32;
 use repro::pso::PsoConfig;
 use repro::runtime::ModelRuntime;
@@ -46,7 +46,7 @@ fn fast_scenario() -> DeployScenario {
     }
 }
 
-fn run_rounds(strategy: Box<dyn PlacementStrategy>, rounds: usize) -> Option<(Vec<f64>, Vec<f64>)> {
+fn run_rounds(strategy: Box<dyn Optimizer>, rounds: usize) -> Option<(Vec<f64>, Vec<f64>)> {
     let rt = runtime()?;
     let sc = fast_scenario();
     let session = format!("test-{}-{}", strategy.name(), rounds);
@@ -214,11 +214,15 @@ fn dead_client_does_not_wedge_the_round() {
     // rounds wedge only if BOTH the leaf timeout and the coordinator
     // timeout were misconfigured; with 3 slots over 6 clients, client 5
     // is an aggregator in rounds 1 and 3).
-    let strategy = Box::new(RoundRobinPlacement::new(sc.dimensions(), sc.clients.len()));
-    let mut coord = Coordinator::new(cfg, broker.connect("coord"), strategy, rt).unwrap();
-    // Only run rounds where 5 is a trainer (rounds 0 and 2: placements
-    // {0,1,2} and {0,1,2}... rotation: r0 {0,1,2}, r1 {3,4,5}).
-    let rec0 = coord.run_round(0).expect("round 0 with dead trainer");
+    let mut strategy = RoundRobinPlacement::new(sc.dimensions(), sc.clients.len());
+    let mut coord = Coordinator::new(cfg, broker.connect("coord"), rt).unwrap();
+    // Only run the round where 5 is a trainer (round 0: rotation gives
+    // placement {0,1,2}), driving the policy-free execute_round
+    // primitive with an explicitly proposed placement.
+    let placement = strategy.propose_batch(0).pop().unwrap();
+    let rec0 = coord
+        .execute_round(0, &placement)
+        .expect("round 0 with dead trainer");
     assert!(rec0.delay.as_secs_f64() < 60.0);
     coord.shutdown();
     for h in handles {
@@ -270,10 +274,11 @@ fn json_codec_session_works() {
         model_seed: [0, 5],
         data_seed: 1234,
     };
-    let strategy = Box::new(RoundRobinPlacement::new(sc.dimensions(), sc.clients.len()));
-    let mut coord = Coordinator::new(cfg, broker.connect("coord"), strategy, rt).unwrap();
-    coord.run(2).expect("json rounds");
+    let mut strategy = RoundRobinPlacement::new(sc.dimensions(), sc.clients.len());
+    let mut coord = Coordinator::new(cfg, broker.connect("coord"), rt).unwrap();
+    coord.run_session(&mut strategy, 2).expect("json rounds");
     assert_eq!(coord.recorder().len(), 2);
+    assert_eq!(coord.recorder().records()[0].strategy, "round-robin");
     coord.shutdown();
     for h in handles {
         let _ = h.join();

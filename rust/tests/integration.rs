@@ -42,12 +42,13 @@ fn sim_strategies_rank_like_the_paper() {
     let tpd_of =
         |pos: &[usize]| tpd(&Arrangement::from_position(spec, pos, cc), &attrs).total;
 
-    let run = |mut s: Box<dyn PlacementStrategy>| -> f64 {
+    let run = |s: Box<dyn Optimizer>| -> f64 {
+        let mut s = Stepwise::new(s);
         let mut last20 = Vec::new();
         for round in 0..100 {
             let p = s.propose(round);
             let t = tpd_of(&p);
-            s.feedback(&p, t);
+            s.feedback(t);
             if round >= 80 {
                 last20.push(t);
             }
@@ -98,7 +99,9 @@ fn trace_csv_has_all_series() {
 
 #[test]
 fn trace_from_stats_roundtrip_with_runner() {
-    // SimTrace::from_stats on a raw swarm run agrees with run_sim.
+    // The pre-refactor pipeline (raw Swarm + fitness closure) agrees
+    // exactly with the registry-driven run_sim — the acceptance check
+    // that the Optimizer/Environment API swap changed no behavior.
     use repro::pso::Swarm;
     let sc = SimScenario {
         depth: 2,
@@ -120,6 +123,34 @@ fn trace_from_stats_roundtrip_with_runner() {
     let trace = SimTrace::from_stats(&stats);
     let r = run_sim(&sc);
     assert_eq!(trace.gbest, r.trace.gbest);
+    assert_eq!(trace.per_particle, r.trace.per_particle);
+    assert_eq!(trace.mean, r.trace.mean);
+    assert_eq!(trace.worst, r.trace.worst);
+    assert_eq!(trace.best, r.trace.best);
+    assert_eq!(r.best_placement, swarm.gbest_placement());
+    assert!((r.best_tpd - -swarm.gbest_fitness).abs() < 1e-12);
+}
+
+#[test]
+fn registry_strategies_run_the_sim_pipeline() {
+    // `repro sim --strategy <name>` works for every registered strategy
+    // and writes a plottable trace.
+    let mut sc = SimScenario {
+        depth: 2,
+        width: 2,
+        ..SimScenario::default()
+    };
+    sc.pso.iterations = 20;
+    sc.pso.particles = 4;
+    for name in repro::placement::registry::NAMES {
+        let r = repro::sim::run_sim_with(&sc, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(r.strategy, name);
+        assert!(r.best_tpd.is_finite());
+        let path = std::env::temp_dir().join(format!("repro_sim_{name}.csv"));
+        r.trace.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > 1, "{name}: empty trace CSV");
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -194,7 +225,12 @@ fn pso_recovers_after_outlier_delays() {
     // later clean measurements still converge it.
     let dims = 3;
     let cc = 12;
-    let mut s = PsoPlacement::new(dims, cc, PsoConfig::paper(), Pcg32::seed_from_u64(3));
+    let mut s = Stepwise::new(Box::new(PsoPlacement::new(
+        dims,
+        cc,
+        PsoConfig::paper(),
+        Pcg32::seed_from_u64(3),
+    )));
     let mut rng = Pcg32::seed_from_u64(4);
     let base = |p: &[usize]| -> f64 {
         p.chunks(2).map(|l| *l.iter().max().unwrap() as f64).sum::<f64>() + 1.0
@@ -207,7 +243,7 @@ fn pso_recovers_after_outlier_delays() {
         if round < 30 && rng.next_f64() < 0.1 {
             d *= 20.0;
         }
-        s.feedback(&p, d);
+        s.feedback(d);
         last = d;
     }
     assert!(last < 12.0, "should still converge to a good placement, got {last}");

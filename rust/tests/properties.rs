@@ -163,39 +163,33 @@ fn prop_async_swarm_gbest_equals_min_observed() {
 
 #[test]
 fn prop_strategies_always_valid() {
+    // Every registry strategy (including tabu and adaptive-pso), driven
+    // through the Stepwise adapter over the batched Optimizer protocol.
     forall("strategies propose valid placements", 40, |g| {
         let dims = g.usize_in(1..6);
         let cc = dims + g.usize_in(1..15);
         let seed = g.u64_in(0..1 << 40);
-        let strategies: Vec<Box<dyn PlacementStrategy>> = vec![
-            Box::new(RandomPlacement::new(dims, cc, Pcg32::seed_from_u64(seed))),
-            Box::new(RoundRobinPlacement::new(dims, cc)),
-            Box::new(PsoPlacement::new(
-                dims,
-                cc,
-                PsoConfig::paper(),
-                Pcg32::seed_from_u64(seed),
-            )),
-            Box::new(GaPlacement::new(
-                dims,
-                cc,
-                GaConfig::default(),
-                Pcg32::seed_from_u64(seed),
-            )),
-            Box::new(SaPlacement::new(
-                dims,
-                cc,
-                SaConfig::default(),
-                Pcg32::seed_from_u64(seed),
-            )),
-        ];
-        for mut s in strategies {
+        for name in registry::NAMES {
+            let opt = registry::build_live(name, dims, cc, PsoConfig::paper(), seed)
+                .unwrap_or_else(|e| panic!("build {name}: {e}"));
+            let mut s = Stepwise::new(opt);
             for round in 0..30 {
                 let p = s.propose(round);
                 assert_valid_placement(&p, dims, cc);
-                s.feedback(&p, (round % 7) as f64 + 0.5);
+                s.feedback((round % 7) as f64 + 0.5);
             }
         }
+    });
+}
+
+#[test]
+fn prop_registry_rejects_unknown_names() {
+    forall("registry errors are actionable", 20, |g| {
+        let bogus = format!("strategy-{}", g.usize_in(0..1000));
+        let err = registry::build_live(&bogus, 2, 5, PsoConfig::paper(), 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&bogus));
+        assert!(msg.contains("round-robin"), "should list valid names: {msg}");
     });
 }
 
@@ -284,7 +278,7 @@ fn prop_round_robin_uniform_duty() {
         let mut count = vec![0usize; cc];
         // One full cycle of cc rounds covers each client dims times.
         for r in 0..cc {
-            for c in s.propose(r) {
+            for &c in s.propose_batch(r).pop().unwrap().iter() {
                 count[c] += 1;
             }
         }

@@ -1,0 +1,180 @@
+//! Offline stand-in for the `anyhow` crate: the API subset this
+//! workspace uses (`Error`, `Result`, `anyhow!`, `Context`,
+//! `Error::msg`, blanket `From<E: std::error::Error>`), with the same
+//! formatting conventions — `{}` shows the outermost context, `{:#}`
+//! shows the whole chain joined with `": "`.
+//!
+//! The build image has no registry access, so this path crate keeps the
+//! workspace self-contained. Swapping in the real `anyhow` is a one-line
+//! change in the root `Cargo.toml`.
+
+use std::fmt;
+
+/// A dynamic error: a root message plus context frames (innermost
+/// first in storage, outermost first when displayed).
+pub struct Error {
+    msg: String,
+    /// Context frames, pushed outermost-last.
+    context: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            context: Vec::new(),
+        }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// All frames, outermost first (ending with the root message).
+    fn chain_strings(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost context first.
+            let mut first = true;
+            for frame in self.chain_strings() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            // `{}`: the outermost frame only.
+            write!(f, "{}", self.context.last().unwrap_or(&self.msg))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            None => write!(f, "{}", self.msg),
+            Some(outer) => {
+                write!(f, "{outer}")?;
+                write!(f, "\n\nCaused by:")?;
+                for frame in self.context.iter().rev().skip(1) {
+                    write!(f, "\n    {frame}")?;
+                }
+                write!(f, "\n    {}", self.msg)
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context-attachment extension for `Result` (both foreign error types
+/// and `anyhow::Error` itself, mirroring the real crate).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or
+/// format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::from(io_err()).context("opening file");
+        assert_eq!(format!("{e}"), "opening file");
+    }
+
+    #[test]
+    fn alternate_shows_chain() {
+        let e: Error = Error::from(io_err()).context("opening file").context("loading config");
+        assert_eq!(format!("{e:#}"), "loading config: opening file: gone");
+    }
+
+    #[test]
+    fn context_on_foreign_result() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading meta").unwrap_err();
+        assert!(format!("{e:#}").contains("reading meta"));
+        assert!(format!("{e:#}").contains("gone"));
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("base {}", 7));
+        let e = r.with_context(|| format!("frame {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "frame 1: base 7");
+    }
+
+    #[test]
+    fn macro_accepts_displayable_expression() {
+        let msg = String::from("already a string");
+        let e = anyhow!(msg);
+        assert_eq!(format!("{e}"), "already a string");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}
