@@ -1,0 +1,55 @@
+//! Fleet matrix: the discrete-event tier end to end in ~60 lines.
+//!
+//! 1. Pick a slice of the built-in dynamic-scenario catalog (static /
+//!    churn / dropout / straggler variants of the paper's hierarchy).
+//! 2. Race four placement strategies across OS threads, every cell
+//!    scored by the `EventDrivenEnv` virtual-time simulator.
+//! 3. Print the ranked standings — the library form of `repro fleet`.
+//!
+//! ```sh
+//! cargo run --release --example fleet_matrix
+//! ```
+
+use repro::des::{builtin_catalog, report_fleet, run_fleet, EventDrivenEnv, FleetConfig};
+use repro::fitness::ClientAttrs;
+use repro::hierarchy::HierarchySpec;
+use repro::placement::{AnalyticTpd, Environment, Placement};
+use repro::prng::{Pcg32, Rng};
+
+fn main() {
+    // --- 1. The EventDrivenEnv is a drop-in AnalyticTpd replacement. ---
+    let spec = HierarchySpec::new(3, 4);
+    let cc = 53;
+    let mut rng = Pcg32::seed_from_u64(42);
+    let attrs = ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+    let p = Placement::new(rng.sample_distinct(cc, spec.dimensions()));
+    let analytic = AnalyticTpd::new(spec, attrs.clone()).eval(&p).unwrap();
+    let virtual_time = EventDrivenEnv::conformance(spec, attrs).eval(&p).unwrap();
+    println!(
+        "one placement, two oracles: analytic TPD {analytic:.6} vs virtual-time {virtual_time:.6}"
+    );
+    assert!((analytic - virtual_time).abs() < 1e-9, "conformance");
+
+    // --- 2. A scenario × strategy matrix across OS threads. ---
+    let scenarios: Vec<_> = builtin_catalog()
+        .into_iter()
+        .filter(|s| s.name.starts_with("paper"))
+        .collect();
+    let strategies: Vec<String> = ["pso", "random", "round-robin", "ga"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    println!(
+        "\nracing {} strategies over {} dynamic scenarios: {}",
+        strategies.len(),
+        scenarios.len(),
+        scenarios.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
+    );
+    let cells = run_fleet(&scenarios, &strategies, &FleetConfig { threads: 0, evals: Some(60) })
+        .expect("fleet run");
+
+    // --- 3. Ranked standings (and the CSV `repro fleet` writes). ---
+    report_fleet(&cells, None).expect("report");
+    let pso_wins = cells.iter().filter(|c| c.strategy == "pso" && c.rank == 1).count();
+    println!("pso won {pso_wins}/{} scenarios outright", scenarios.len());
+}

@@ -1,0 +1,103 @@
+//! Bench des-µ: virtual-time batch scoring throughput of the
+//! discrete-event oracle at 100 / 1k / 10k clients, against the
+//! closed-form `AnalyticTpd` dispatch on the same populations — the
+//! "10k-client scenarios run in milliseconds" claim, measured.
+//!
+//! Run: `cargo bench --bench des_bench`
+
+use repro::bench::{black_box, Bencher};
+use repro::configio::{DynamicsSpec, NetSpec, SimScenario};
+use repro::des::EventDrivenEnv;
+use repro::fitness::ClientAttrs;
+use repro::hierarchy::HierarchySpec;
+use repro::placement::{AnalyticTpd, Environment, Placement};
+use repro::prng::{Pcg32, Rng};
+
+/// (label, trainers_per_leaf) on the paper's D3 W4 shape (21 slots,
+/// 16 leaves): 101 / 997 / 10 005 clients.
+const SIZES: [(&str, usize); 3] = [("100", 5), ("1k", 61), ("10k", 624)];
+
+fn scenario(tpl: usize) -> SimScenario {
+    SimScenario {
+        depth: 3,
+        width: 4,
+        trainers_per_leaf: tpl,
+        env: "event-driven".to_string(),
+        ..SimScenario::default()
+    }
+}
+
+fn population(sc: &SimScenario) -> (Vec<ClientAttrs>, Vec<Placement>) {
+    let mut rng = Pcg32::seed_from_u64(sc.seed);
+    let cc = sc.client_count();
+    let attrs = ClientAttrs::sample_population(
+        cc,
+        sc.pspeed_range,
+        sc.memcap_range,
+        sc.mdatasize,
+        &mut rng,
+    );
+    let batch: Vec<Placement> = (0..10)
+        .map(|_| Placement::new(rng.sample_distinct(cc, sc.dimensions())))
+        .collect();
+    (attrs, batch)
+}
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+
+    for (label, tpl) in SIZES {
+        let sc = scenario(tpl);
+        let cc = sc.client_count();
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let (attrs, batch) = population(&sc);
+        // Fewer samples at 10k clients: each iteration scores 10 whole
+        // virtual rounds over the full population.
+        let b = if cc > 5_000 { Bencher::new(10, 2) } else { Bencher::new(30, 3) };
+
+        let mut analytic = AnalyticTpd::new(spec, attrs.clone());
+        b.iter_throughput(&format!("analytic/batch10 cc={label}"), || {
+            black_box(analytic.eval_batch(&batch).unwrap());
+            batch.len()
+        });
+
+        // Conformance configuration: identical scores, event-driven path.
+        let mut des = EventDrivenEnv::conformance(spec, attrs.clone());
+        b.iter_throughput(&format!("des-static/batch10 cc={label}"), || {
+            black_box(des.eval_batch(&batch).unwrap());
+            batch.len()
+        });
+
+        // Fully dynamic scenario: jittered contended links + churn +
+        // dropout + stragglers + drift (the fleet workload).
+        let mut dynamic = scenario(tpl);
+        dynamic.des.train_unit = 1.0;
+        dynamic.des.net = NetSpec {
+            latency_range_s: (0.001, 0.02),
+            bandwidth_range: (5.0, 50.0),
+            agg_ingress: 500.0,
+            jitter_sigma: 0.5,
+        };
+        dynamic.des.dynamics = DynamicsSpec {
+            dropout_prob: 0.1,
+            churn_leave_prob: 0.05,
+            churn_join_prob: 0.5,
+            straggler_prob: 0.3,
+            straggler_frac: 0.2,
+            straggler_slowdown: 4.0,
+            drift_sigma: 0.05,
+        };
+        let mut des_dyn = EventDrivenEnv::from_scenario(&dynamic, attrs);
+        b.iter_throughput(&format!("des-dynamic/batch10 cc={label}"), || {
+            black_box(des_dyn.eval_batch(&batch).unwrap());
+            batch.len()
+        });
+        println!(
+            "  ({} clients, {} slots; des fired {} events over {} rounds)\n",
+            cc,
+            sc.dimensions(),
+            des_dyn.events_fired,
+            des_dyn.rounds_simulated
+        );
+    }
+}

@@ -64,6 +64,14 @@ impl Args {
         }
     }
 
+    /// Optional usize flag: `None` when absent (no default applies,
+    /// e.g. `repro fleet --evals` overriding per-scenario budgets).
+    pub fn opt_usize_flag(&self, key: &str) -> Result<Option<usize>, String> {
+        self.flag(key)
+            .map(|v| v.parse().map_err(|_| format!("--{key}: expected integer, got {v:?}")))
+            .transpose()
+    }
+
     /// f64 flag with default.
     pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.flag(key) {
@@ -152,6 +160,17 @@ mod tests {
         assert_eq!(a.subcommand.as_deref(), Some("sim"));
         assert_eq!(a.flag("strategy"), Some("ga"));
         assert_eq!(a.str_flag("strategy", "pso"), "ga");
+    }
+
+    #[test]
+    fn fleet_flags_parse() {
+        let a = parse("fleet --scenarios builtin --strategies pso,random --threads 8 --evals 40");
+        assert_eq!(a.subcommand.as_deref(), Some("fleet"));
+        assert_eq!(a.str_flag("scenarios", "builtin"), "builtin");
+        assert_eq!(a.usize_flag("threads", 0).unwrap(), 8);
+        assert_eq!(a.opt_usize_flag("evals").unwrap(), Some(40));
+        assert_eq!(a.opt_usize_flag("absent").unwrap(), None);
+        assert!(parse("fleet --evals x").opt_usize_flag("evals").is_err());
     }
 
     #[test]

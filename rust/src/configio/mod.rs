@@ -14,5 +14,5 @@ pub mod scenario;
 pub mod toml_lite;
 
 pub use cli::Args;
-pub use scenario::{ClientSpec, DeployScenario, SimScenario};
+pub use scenario::{ClientSpec, DeployScenario, DesSpec, DynamicsSpec, NetSpec, SimScenario};
 pub use toml_lite::TomlDoc;

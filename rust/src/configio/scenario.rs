@@ -26,6 +26,15 @@ pub struct SimScenario {
     /// Placement strategy (a `placement::registry` name; the CLI
     /// `--strategy` flag overrides it).
     pub strategy: String,
+    /// Delay oracle (a `placement::registry` environment name:
+    /// `analytic` or `event-driven`; the CLI `--env` flag overrides it).
+    pub env: String,
+    /// Discrete-event extensions (network model + dynamic behaviors)
+    /// consumed by `des::EventDrivenEnv`. All-off by default, in which
+    /// case the event-driven oracle reproduces [`AnalyticTpd`] scores.
+    ///
+    /// [`AnalyticTpd`]: crate::placement::AnalyticTpd
+    pub des: DesSpec,
 }
 
 impl Default for SimScenario {
@@ -40,6 +49,8 @@ impl Default for SimScenario {
             mdatasize: 5.0,
             seed: 42,
             strategy: "pso".to_string(),
+            env: "analytic".to_string(),
+            des: DesSpec::default(),
         }
     }
 }
@@ -125,10 +136,169 @@ impl SimScenario {
         sc.pso.cognitive = get_f64("pso", "cognitive", sc.pso.cognitive)?;
         sc.pso.social = get_f64("pso", "social", sc.pso.social)?;
         sc.pso.velocity_factor = get_f64("pso", "velocity_factor", sc.pso.velocity_factor)?;
+        if let Some(v) = doc.get("sim", "env") {
+            sc.env = v
+                .as_str()
+                .ok_or_else(|| "sim.env: expected string".to_string())?
+                .to_string();
+        }
+        sc.des.train_unit = get_f64("des", "train_unit", sc.des.train_unit)?;
+        if let Some(v) = doc.get("des", "pipelined") {
+            sc.des.pipelined = v
+                .as_bool()
+                .ok_or_else(|| "des.pipelined: expected boolean".to_string())?;
+        }
+        let n = &mut sc.des.net;
+        n.latency_range_s = (
+            get_f64("net", "latency_min", n.latency_range_s.0)?,
+            get_f64("net", "latency_max", n.latency_range_s.1)?,
+        );
+        n.bandwidth_range = (
+            get_f64("net", "bandwidth_min", n.bandwidth_range.0)?,
+            get_f64("net", "bandwidth_max", n.bandwidth_range.1)?,
+        );
+        n.agg_ingress = get_f64("net", "agg_ingress", n.agg_ingress)?;
+        n.jitter_sigma = get_f64("net", "jitter_sigma", n.jitter_sigma)?;
+        let d = &mut sc.des.dynamics;
+        d.dropout_prob = get_f64("dynamics", "dropout", d.dropout_prob)?;
+        d.churn_leave_prob = get_f64("dynamics", "leave", d.churn_leave_prob)?;
+        d.churn_join_prob = get_f64("dynamics", "join", d.churn_join_prob)?;
+        d.straggler_prob = get_f64("dynamics", "straggler_prob", d.straggler_prob)?;
+        d.straggler_frac = get_f64("dynamics", "straggler_frac", d.straggler_frac)?;
+        d.straggler_slowdown = get_f64("dynamics", "straggler_slowdown", d.straggler_slowdown)?;
+        d.drift_sigma = get_f64("dynamics", "drift", d.drift_sigma)?;
         if sc.depth == 0 || sc.width == 0 {
             return Err("sim.depth and sim.width must be >= 1".into());
         }
+        sc.des.validate()?;
         Ok(sc)
+    }
+}
+
+/// Per-link network parameters for the discrete-event simulator
+/// (`des::NetworkModel` samples each client's uplink from these ranges).
+/// Bandwidths are model-data units per virtual second (the same units as
+/// `ClientAttrs::mdatasize`); `0.0` means "unlimited" for bandwidth-like
+/// fields. All-zero defaults make the network free — the conformance
+/// configuration where event-driven scores equal the analytic TPD.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetSpec {
+    /// Per-client uplink propagation latency range (virtual seconds).
+    pub latency_range_s: (f64, f64),
+    /// Per-client uplink bandwidth range (data units / virtual second;
+    /// 0.0 = unlimited).
+    pub bandwidth_range: (f64, f64),
+    /// Shared ingress capacity at each aggregator — concurrent uploads
+    /// into the same aggregator serialize through it (0.0 = unlimited,
+    /// i.e. no contention).
+    pub agg_ingress: f64,
+    /// Lognormal jitter sigma applied per transfer to the link latency
+    /// (0.0 = deterministic links).
+    pub jitter_sigma: f64,
+}
+
+/// Dynamic-behavior parameters for the discrete-event scenario catalog.
+/// All probabilities are per round; all-zero defaults mean a static
+/// population (the conformance configuration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsSpec {
+    /// Per-trainer probability of silently dropping out of one round
+    /// (its update never arrives; the aggregator merges the rest).
+    pub dropout_prob: f64,
+    /// Churn: per-round probability that a present trainer leaves the
+    /// session (stays away until it rejoins).
+    pub churn_leave_prob: f64,
+    /// Churn: per-round probability that a departed trainer rejoins.
+    pub churn_join_prob: f64,
+    /// Probability that a round suffers a straggler burst.
+    pub straggler_prob: f64,
+    /// Fraction of clients slowed during a straggler burst.
+    pub straggler_frac: f64,
+    /// Compute slowdown multiplier applied to burst victims (>= 1).
+    pub straggler_slowdown: f64,
+    /// Per-round lognormal drift sigma on each client's effective speed
+    /// (a bounded random walk; 0.0 = stationary speeds).
+    pub drift_sigma: f64,
+}
+
+impl Default for DynamicsSpec {
+    fn default() -> Self {
+        DynamicsSpec {
+            dropout_prob: 0.0,
+            churn_leave_prob: 0.0,
+            churn_join_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 1.0,
+            drift_sigma: 0.0,
+        }
+    }
+}
+
+impl DynamicsSpec {
+    /// True when every dynamic behavior is switched off.
+    pub fn is_static(&self) -> bool {
+        self.dropout_prob == 0.0
+            && self.churn_leave_prob == 0.0
+            && self.churn_join_prob == 0.0
+            && self.straggler_prob == 0.0
+            && self.drift_sigma == 0.0
+    }
+}
+
+/// Discrete-event extensions of a [`SimScenario`] (TOML tables `[des]`,
+/// `[net]` and `[dynamics]`). The defaults are the *conformance*
+/// configuration: zero-cost links, no jitter, no churn/dropout, no
+/// training cost and level-barrier synchronization — under which
+/// `des::EventDrivenEnv` reproduces the analytic Eq. 6–7 TPD exactly.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DesSpec {
+    /// Work units of one local training phase (delay = train_unit /
+    /// effective pspeed; 0.0 = training not modeled, matching the
+    /// analytic TPD which only counts aggregation).
+    pub train_unit: f64,
+    /// `false` = level-barrier synchronization (the paper's Eq. 7
+    /// semantics: a level's merges start only when the whole level below
+    /// delivered); `true` = fully event-driven overlap (each aggregator
+    /// merges as soon as *its own* inputs arrive — never slower).
+    pub pipelined: bool,
+    pub net: NetSpec,
+    pub dynamics: DynamicsSpec,
+}
+
+impl DesSpec {
+    /// Reject out-of-range parameters with an actionable message.
+    pub fn validate(&self) -> Result<(), String> {
+        let prob = |name: &str, p: f64| -> Result<(), String> {
+            if (0.0..=1.0).contains(&p) {
+                Ok(())
+            } else {
+                Err(format!("dynamics.{name}: probability {p} outside [0, 1]"))
+            }
+        };
+        prob("dropout", self.dynamics.dropout_prob)?;
+        prob("leave", self.dynamics.churn_leave_prob)?;
+        prob("join", self.dynamics.churn_join_prob)?;
+        prob("straggler_prob", self.dynamics.straggler_prob)?;
+        prob("straggler_frac", self.dynamics.straggler_frac)?;
+        if self.dynamics.straggler_slowdown < 1.0 {
+            return Err(format!(
+                "dynamics.straggler_slowdown: {} must be >= 1",
+                self.dynamics.straggler_slowdown
+            ));
+        }
+        for (name, (lo, hi)) in [
+            ("net.latency", self.net.latency_range_s),
+            ("net.bandwidth", self.net.bandwidth_range),
+        ] {
+            if lo < 0.0 || hi < lo {
+                return Err(format!("{name}: bad range ({lo}, {hi})"));
+            }
+        }
+        if self.net.agg_ingress < 0.0 || self.net.jitter_sigma < 0.0 || self.train_unit < 0.0 {
+            return Err("net/des parameters must be non-negative".into());
+        }
+        Ok(())
     }
 }
 
@@ -276,6 +446,72 @@ inertia = 0.4
         let doc = TomlDoc::parse("[sim]\nstrategy = \"ga\"\n").unwrap();
         let sc = SimScenario::from_toml(&doc).unwrap();
         assert_eq!(sc.strategy, "ga");
+    }
+
+    #[test]
+    fn toml_des_tables_parse() {
+        let doc = TomlDoc::parse(
+            r#"
+[sim]
+depth = 3
+width = 2
+env = "event-driven"
+
+[des]
+train_unit = 2.5
+pipelined = true
+
+[net]
+latency_min = 0.001
+latency_max = 0.02
+bandwidth_min = 5.0
+bandwidth_max = 50.0
+agg_ingress = 100.0
+jitter_sigma = 0.5
+
+[dynamics]
+dropout = 0.1
+leave = 0.05
+join = 0.5
+straggler_prob = 0.3
+straggler_frac = 0.2
+straggler_slowdown = 4.0
+drift = 0.05
+"#,
+        )
+        .unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.env, "event-driven");
+        assert!(sc.des.pipelined);
+        assert!((sc.des.train_unit - 2.5).abs() < 1e-12);
+        assert_eq!(sc.des.net.latency_range_s, (0.001, 0.02));
+        assert_eq!(sc.des.net.bandwidth_range, (5.0, 50.0));
+        assert_eq!(sc.des.net.agg_ingress, 100.0);
+        assert!(!sc.des.dynamics.is_static());
+        assert_eq!(sc.des.dynamics.dropout_prob, 0.1);
+        assert_eq!(sc.des.dynamics.straggler_slowdown, 4.0);
+    }
+
+    #[test]
+    fn toml_defaults_are_conformance_config() {
+        let doc = TomlDoc::parse("[sim]\ndepth = 2\n").unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.env, "analytic");
+        assert_eq!(sc.des, DesSpec::default());
+        assert!(sc.des.dynamics.is_static());
+        assert!(!sc.des.pipelined);
+        assert_eq!(sc.des.train_unit, 0.0);
+    }
+
+    #[test]
+    fn toml_rejects_bad_probabilities() {
+        let doc = TomlDoc::parse("[dynamics]\ndropout = 1.5\n").unwrap();
+        let err = SimScenario::from_toml(&doc).unwrap_err();
+        assert!(err.contains("dropout"), "{err}");
+        let doc = TomlDoc::parse("[dynamics]\nstraggler_slowdown = 0.5\n").unwrap();
+        assert!(SimScenario::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[net]\nlatency_min = 0.5\nlatency_max = 0.1\n").unwrap();
+        assert!(SimScenario::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! The `repro fleet` runner: a scenario × strategy matrix executed
+//! across OS threads, every cell driving one registry optimizer against
+//! the event-driven oracle in virtual time. Results are deterministic
+//! per seed and independent of the thread count — each cell derives all
+//! of its randomness from its scenario's seed, and cells are ranked and
+//! reported in a fixed order after the join.
+
+use super::round::EventDrivenEnv;
+use super::scenarios::NamedScenario;
+use crate::fitness::ClientAttrs;
+use crate::metrics::{rank_ascending, CsvWriter};
+use crate::placement::{drive, registry, PlacementError};
+use crate::prng::Pcg32;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fleet execution parameters.
+#[derive(Debug, Clone, Default)]
+pub struct FleetConfig {
+    /// Worker OS threads (0 = one per available core).
+    pub threads: usize,
+    /// Evaluation budget override per cell (None = the scenario's
+    /// `pso.iterations × pso.particles`).
+    pub evals: Option<usize>,
+}
+
+/// One scored (scenario, strategy) cell of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetCell {
+    pub scenario: String,
+    pub strategy: String,
+    pub clients: usize,
+    pub slots: usize,
+    pub evaluations: usize,
+    /// Best virtual-time round delay the strategy found.
+    pub best_delay: f64,
+    /// Mean delay across the whole search (exploration cost).
+    pub mean_delay: f64,
+    /// Events the simulator fired for this cell.
+    pub events: u64,
+    /// Rank of `best_delay` among the scenario's strategies (1 = won).
+    pub rank: usize,
+}
+
+/// Run one cell: seed-derived population + dynamics, registry optimizer,
+/// generic `drive` loop against the scenario's configured delay oracle
+/// (`sim.env`; the built-in catalog uses `event-driven` throughout, but
+/// user TOML scenarios may pick `analytic`).
+fn run_cell(
+    ns: &NamedScenario,
+    strategy: &str,
+    evals: Option<usize>,
+) -> Result<FleetCell, PlacementError> {
+    let sc = &ns.sim;
+    let cc = sc.client_count();
+    // Same seeding discipline as `sim::run_sim_with`: population first,
+    // optimizer stream split off after.
+    let mut rng = Pcg32::seed_from_u64(sc.seed);
+    let attrs = ClientAttrs::sample_population(
+        cc,
+        sc.pspeed_range,
+        sc.memcap_range,
+        sc.mdatasize,
+        &mut rng,
+    );
+    let mut opt = registry::build_sim(strategy, sc, rng.split())?;
+    let budget = evals.unwrap_or(sc.pso.iterations * sc.pso.particles).max(1);
+    // The event-driven oracle is built concretely to keep its event
+    // counter; any other registry environment goes through the factory.
+    let (out, events) = if registry::canonical_env(&sc.env)? == "event-driven" {
+        let mut env = EventDrivenEnv::from_scenario(sc, attrs);
+        (drive(opt.as_mut(), &mut env, budget)?, env.events_fired)
+    } else {
+        let mut env = registry::build_sim_env(&sc.env, sc, attrs)?;
+        (drive(opt.as_mut(), env.as_mut(), budget)?, 0)
+    };
+    let mean_delay = if out.stats.is_empty() {
+        out.best_delay
+    } else {
+        out.stats.iter().map(|s| s.mean).sum::<f64>() / out.stats.len() as f64
+    };
+    Ok(FleetCell {
+        scenario: ns.name.clone(),
+        strategy: opt.name().to_string(),
+        clients: cc,
+        slots: sc.dimensions(),
+        evaluations: out.evaluations,
+        best_delay: out.best_delay,
+        mean_delay,
+        events,
+        rank: 0,
+    })
+}
+
+/// Run the full matrix. Cells are scheduled over `cfg.threads` workers;
+/// the returned vector is ordered scenario-major (catalog order) with
+/// per-scenario ranks filled in.
+pub fn run_fleet(
+    scenarios: &[NamedScenario],
+    strategies: &[String],
+    cfg: &FleetConfig,
+) -> Result<Vec<FleetCell>, PlacementError> {
+    // Fail fast on a typo or an empty matrix (reachable from the CLI via
+    // `--strategies ,` or a bad scenario TOML) before paying for
+    // thousands of simulations.
+    if scenarios.is_empty() || strategies.is_empty() {
+        return Err(PlacementError::Environment(
+            "fleet matrix is empty: need at least one scenario and one strategy".into(),
+        ));
+    }
+    for s in strategies {
+        registry::canonical(s)?;
+    }
+    for ns in scenarios {
+        registry::canonical_env(&ns.sim.env)?;
+    }
+    let jobs: Vec<(usize, usize)> = (0..scenarios.len())
+        .flat_map(|si| (0..strategies.len()).map(move |ti| (si, ti)))
+        .collect();
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.threads
+    }
+    .min(jobs.len());
+
+    type CellSlot = Option<Result<FleetCell, PlacementError>>;
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<CellSlot>> = Mutex::new(vec![None; jobs.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let j = next.fetch_add(1, Ordering::Relaxed);
+                let Some(&(si, ti)) = jobs.get(j) else { break };
+                let cell = run_cell(&scenarios[si], &strategies[ti], cfg.evals);
+                slots.lock().expect("fleet results lock")[j] = Some(cell);
+            });
+        }
+    });
+
+    let mut cells = Vec::with_capacity(jobs.len());
+    for slot in slots.into_inner().expect("fleet results lock") {
+        cells.push(slot.expect("every job ran")?);
+    }
+    // Rank strategies within each scenario (cells are scenario-major).
+    for chunk in cells.chunks_mut(strategies.len()) {
+        let delays: Vec<f64> = chunk.iter().map(|c| c.best_delay).collect();
+        for (cell, rank) in chunk.iter_mut().zip(rank_ascending(&delays)) {
+            cell.rank = rank;
+        }
+    }
+    Ok(cells)
+}
+
+/// Per-strategy aggregate over the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrategyStanding {
+    pub strategy: String,
+    /// Mean rank across scenarios (1.0 = won everything).
+    pub mean_rank: f64,
+    /// Scenarios won outright.
+    pub wins: usize,
+    /// Geometric-mean of `best_delay / scenario winner's best_delay`
+    /// (1.0 = always optimal; 2.0 = on average 2× the winner).
+    pub regret: f64,
+}
+
+/// Aggregate cells into the final standings, best mean rank first.
+pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
+    let mut order: Vec<&str> = Vec::new();
+    for c in cells {
+        if !order.contains(&c.strategy.as_str()) {
+            order.push(&c.strategy);
+        }
+    }
+    // Scenario winners for the regret ratio.
+    let mut winner: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+    for c in cells {
+        let w = winner.entry(&c.scenario).or_insert(f64::INFINITY);
+        *w = w.min(c.best_delay);
+    }
+    let mut out: Vec<StrategyStanding> = order
+        .iter()
+        .map(|&s| {
+            let mine: Vec<&FleetCell> = cells.iter().filter(|c| c.strategy == s).collect();
+            let n = mine.len().max(1) as f64;
+            let mean_rank = mine.iter().map(|c| c.rank as f64).sum::<f64>() / n;
+            let wins = mine.iter().filter(|c| c.rank == 1).count();
+            let log_regret = mine
+                .iter()
+                .map(|c| (c.best_delay / winner[c.scenario.as_str()]).ln())
+                .sum::<f64>()
+                / n;
+            StrategyStanding {
+                strategy: s.to_string(),
+                mean_rank,
+                wins,
+                regret: log_regret.exp(),
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.mean_rank.total_cmp(&b.mean_rank));
+    out
+}
+
+/// Print the ranked summary and (optionally) write the full matrix CSV.
+/// The CSV contains only seed-deterministic columns, so identical seeds
+/// produce byte-identical files regardless of thread count.
+pub fn report_fleet(cells: &[FleetCell], csv: Option<&Path>) -> std::io::Result<()> {
+    let scenarios: std::collections::BTreeSet<&str> =
+        cells.iter().map(|c| c.scenario.as_str()).collect();
+    let total_evals: usize = cells.iter().map(|c| c.evaluations).sum();
+    let total_events: u64 = cells.iter().map(|c| c.events).sum();
+    println!(
+        "fleet: {} scenarios × {} strategies = {} cells, {} evaluations, {} virtual events",
+        scenarios.len(),
+        cells.len() / scenarios.len().max(1),
+        cells.len(),
+        total_evals,
+        total_events,
+    );
+    println!("\n=== fleet standings (by mean rank) ===");
+    println!(
+        "{:<14} {:>10} {:>6} {:>10}",
+        "strategy", "mean rank", "wins", "regret ×"
+    );
+    for s in standings(cells) {
+        println!(
+            "{:<14} {:>10.2} {:>6} {:>10.3}",
+            s.strategy, s.mean_rank, s.wins, s.regret
+        );
+    }
+    if let Some(path) = csv {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "scenario", "strategy", "clients", "slots", "evaluations", "best_delay",
+                "mean_delay", "rank",
+            ],
+        )?;
+        for c in cells {
+            w.write_row(&[
+                c.scenario.clone(),
+                c.strategy.clone(),
+                c.clients.to_string(),
+                c.slots.to_string(),
+                c.evaluations.to_string(),
+                format!("{:.9}", c.best_delay),
+                format!("{:.9}", c.mean_delay),
+                c.rank.to_string(),
+            ])?;
+        }
+        w.flush()?;
+        println!("matrix CSV: {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::SimScenario;
+
+    fn tiny_matrix() -> (Vec<NamedScenario>, Vec<String>) {
+        let mut a = SimScenario {
+            depth: 2,
+            width: 2,
+            env: "event-driven".into(),
+            ..SimScenario::default()
+        };
+        a.pso.particles = 3;
+        a.pso.iterations = 5;
+        let mut b = a.clone();
+        b.seed = 9;
+        b.des.dynamics.dropout_prob = 0.2;
+        let mut c = a.clone();
+        c.seed = 13;
+        c.env = "analytic".into();
+        let scenarios = vec![
+            NamedScenario { name: "a".into(), sim: a },
+            NamedScenario { name: "b-dropout".into(), sim: b },
+            NamedScenario { name: "c-analytic".into(), sim: c },
+        ];
+        let strategies = vec!["pso".to_string(), "random".to_string(), "round-robin".to_string()];
+        (scenarios, strategies)
+    }
+
+    #[test]
+    fn fleet_results_are_independent_of_thread_count() {
+        let (scenarios, strategies) = tiny_matrix();
+        let one = run_fleet(
+            &scenarios,
+            &strategies,
+            &FleetConfig { threads: 1, evals: None },
+        )
+        .unwrap();
+        let many = run_fleet(
+            &scenarios,
+            &strategies,
+            &FleetConfig { threads: 4, evals: None },
+        )
+        .unwrap();
+        assert_eq!(one, many);
+        assert_eq!(one.len(), 9);
+        // Scenario-major order; competition ranks start at 1 and stay in
+        // range (ties share a rank).
+        for chunk in one.chunks(3) {
+            let ranks: Vec<usize> = chunk.iter().map(|c| c.rank).collect();
+            assert_eq!(ranks.iter().min(), Some(&1), "{ranks:?}");
+            assert!(ranks.iter().all(|&r| (1..=3).contains(&r)), "{ranks:?}");
+            assert!(chunk.iter().all(|c| c.scenario == chunk[0].scenario));
+            assert!(chunk.iter().all(|c| c.best_delay.is_finite() && c.best_delay > 0.0));
+            assert!(chunk.iter().all(|c| c.evaluations == 15));
+        }
+        // The scenario's env is honored: event-driven cells count events,
+        // the analytic scenario fires none.
+        assert!(one.iter().filter(|c| c.scenario == "a").all(|c| c.events > 0));
+        assert!(one.iter().filter(|c| c.scenario == "c-analytic").all(|c| c.events == 0));
+    }
+
+    #[test]
+    fn fleet_rejects_unknown_strategies_and_empty_matrices_up_front() {
+        let (scenarios, strategies) = tiny_matrix();
+        let err = run_fleet(
+            &scenarios,
+            &["pso".to_string(), "nope".to_string()],
+            &FleetConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, PlacementError::UnknownStrategy { .. }), "{err}");
+        // `repro fleet --strategies ,` reaches the library as an empty
+        // list — a typed error, not a panic.
+        let err = run_fleet(&scenarios, &[], &FleetConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        let err = run_fleet(&[], &strategies, &FleetConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        // A typo'd env in any scenario TOML fails before the matrix runs.
+        let mut bad = scenarios.clone();
+        bad[0].sim.env = "dokcer".into();
+        let err = run_fleet(&bad, &strategies, &FleetConfig::default()).unwrap_err();
+        assert!(matches!(err, PlacementError::UnknownEnvironment { .. }), "{err}");
+    }
+
+    #[test]
+    fn evals_override_caps_the_budget() {
+        let (scenarios, strategies) = tiny_matrix();
+        let cells = run_fleet(
+            &scenarios[..1],
+            &strategies[..2],
+            &FleetConfig { threads: 2, evals: Some(7) },
+        )
+        .unwrap();
+        assert!(cells.iter().all(|c| c.evaluations == 7));
+    }
+
+    #[test]
+    fn standings_rank_winner_first_with_unit_regret() {
+        let (scenarios, strategies) = tiny_matrix();
+        let cells =
+            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 2, evals: None }).unwrap();
+        let table = standings(&cells);
+        assert_eq!(table.len(), 3);
+        assert!(table.windows(2).all(|w| w[0].mean_rank <= w[1].mean_rank));
+        let total_wins: usize = table.iter().map(|s| s.wins).sum();
+        // At least one winner per scenario; ties can add more.
+        assert!(total_wins >= 3, "wins {total_wins}");
+        for s in &table {
+            assert!(s.regret >= 1.0 - 1e-12, "{}: regret {}", s.strategy, s.regret);
+        }
+    }
+
+    #[test]
+    fn report_writes_deterministic_csv() {
+        let (scenarios, strategies) = tiny_matrix();
+        let cells =
+            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 3, evals: None }).unwrap();
+        let path = std::env::temp_dir().join("repro_fleet_test.csv");
+        report_fleet(&cells, Some(&path)).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        let cells2 =
+            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 1, evals: None }).unwrap();
+        report_fleet(&cells2, Some(&path)).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second, "CSV must be byte-identical per seed");
+        assert_eq!(first.lines().count(), 10); // header + 9 cells
+    }
+}

@@ -1,0 +1,39 @@
+//! Discrete-event simulation of hierarchical FL rounds — the scale and
+//! dynamic-scenario tier the closed-form model cannot reach.
+//!
+//! The paper scores a placement with the Total Processing Delay of
+//! Eq. 6–7: per-aggregator cluster delay
+//! `d_a = (mdatasize_a + Σ_{c ∈ buffer(a)} mdatasize_c) / pspeed_a`
+//! summed over per-level maxima, bottom-up. This module replays that
+//! round as *events on a virtual clock* instead of a formula, which
+//! makes churn, dropout, stragglers, link contention and 10k-client
+//! populations all simulable in milliseconds of wall time.
+//!
+//! ## Event types ↔ paper terms
+//!
+//! | event | paper term |
+//! |-------|-----------|
+//! | `TrainDone { client }` | local training the round waits on before any aggregation (§IV.C round anatomy; not part of Eq. 6, so its workload defaults to 0) |
+//! | `Arrive` / `Deliver { slot }` | an update entering aggregator *a*'s *processing buffer* (`buffer(a)` in Eq. 6) after crossing the network; `Deliver` is delayed by the shared-ingress queue — the contention term Eq. 6 has no word for |
+//! | `AggDone { slot }` | cluster delay `d_a` elapsing: merge starts when the buffer is full and costs `(mdatasize_a + Σ mdatasize_c) / pspeed_a` virtual seconds — Eq. 6 verbatim |
+//! | root `AggDone` | the round's TPD. In [`SyncMode::LevelBarrier`] each level starts only when the level below finished (Eq. 7's per-level `max`, summed), so with a free network the virtual completion time *equals* Eq. 7's TPD; [`SyncMode::Pipelined`] lets subtrees overlap and is never slower |
+//!
+//! [`EventDrivenEnv`] packages this as the fourth
+//! [`crate::placement::Environment`] oracle (selectable anywhere
+//! `analytic` is, e.g. `repro sim --env event-driven`), [`scenarios`]
+//! holds the dynamic-scenario catalog (churn / dropout / straggler /
+//! jitter / drift / 10k-client cases, loadable from TOML), and
+//! [`fleet`] runs the scenario × strategy matrix across OS threads for
+//! `repro fleet`.
+
+pub mod engine;
+pub mod fleet;
+pub mod network;
+pub mod round;
+pub mod scenarios;
+
+pub use engine::EventQueue;
+pub use fleet::{report_fleet, run_fleet, standings, FleetCell, FleetConfig, StrategyStanding};
+pub use network::{LinkParams, NetworkModel};
+pub use round::{simulate_round, EventDrivenEnv, RoundOutcome, RoundRealization, SyncMode};
+pub use scenarios::{builtin_catalog, load_dir, Dynamics, NamedScenario};

@@ -1,0 +1,170 @@
+//! Link-level network model for the event-driven simulator: per-client
+//! uplinks (propagation latency + serialization bandwidth, optional
+//! lognormal jitter) and a shared ingress capacity at each aggregator
+//! through which concurrent uploads serialize (the contention the
+//! closed-form Eq. 6–7 model cannot express).
+
+use crate::configio::NetSpec;
+use crate::prng::{Pcg32, Rng};
+
+/// One client's uplink.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkParams {
+    /// Propagation latency (virtual seconds).
+    pub latency_s: f64,
+    /// Serialization bandwidth (data units / virtual second;
+    /// `f64::INFINITY` = free).
+    pub bandwidth: f64,
+}
+
+/// The scenario's network: every client's uplink plus the shared
+/// aggregator-side ingress capacity and the jitter amplitude.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    pub uplinks: Vec<LinkParams>,
+    /// Ingress service rate at each aggregator (data units / virtual
+    /// second). Uploads into the same aggregator queue FIFO through it;
+    /// `f64::INFINITY` disables contention.
+    pub agg_ingress: f64,
+    /// Lognormal sigma applied per transfer to the link latency.
+    pub jitter_sigma: f64,
+}
+
+impl NetworkModel {
+    /// The free network: zero latency, unlimited bandwidth, no
+    /// contention, no jitter — transfers are instantaneous, which is the
+    /// conformance configuration against the analytic TPD.
+    pub fn zero_cost(clients: usize) -> NetworkModel {
+        NetworkModel {
+            uplinks: vec![
+                LinkParams {
+                    latency_s: 0.0,
+                    bandwidth: f64::INFINITY,
+                };
+                clients
+            ],
+            agg_ingress: f64::INFINITY,
+            jitter_sigma: 0.0,
+        }
+    }
+
+    /// Sample per-client uplinks from a [`NetSpec`]'s ranges (a spec
+    /// bandwidth of `0.0` means unlimited).
+    pub fn sample(clients: usize, spec: &NetSpec, rng: &mut Pcg32) -> NetworkModel {
+        let unlimited = |x: f64| if x == 0.0 { f64::INFINITY } else { x };
+        let range = |rng: &mut Pcg32, (lo, hi): (f64, f64)| {
+            if hi > lo {
+                rng.uniform(lo, hi)
+            } else {
+                lo
+            }
+        };
+        let uplinks = (0..clients)
+            .map(|_| LinkParams {
+                latency_s: range(rng, spec.latency_range_s),
+                bandwidth: unlimited(range(rng, spec.bandwidth_range)),
+            })
+            .collect();
+        NetworkModel {
+            uplinks,
+            agg_ingress: unlimited(spec.agg_ingress),
+            jitter_sigma: spec.jitter_sigma,
+        }
+    }
+
+    /// Sender-side delay of uploading `data` units from `client`:
+    /// jittered latency + serialization time. The receiver-side ingress
+    /// queueing is resolved by the event loop (it needs arrival order).
+    pub fn transfer_delay(&self, client: usize, data: f64, jitter: &mut Option<Pcg32>) -> f64 {
+        let link = &self.uplinks[client];
+        let jitter_mult = match jitter {
+            Some(rng) => rng.lognormal(self.jitter_sigma),
+            None => 1.0,
+        };
+        link.latency_s * jitter_mult + data / link.bandwidth
+    }
+
+    /// Ingress service time of `data` units at an aggregator (0 when
+    /// contention is disabled).
+    pub fn ingress_service(&self, data: f64) -> f64 {
+        data / self.agg_ingress
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cost_transfers_are_instant() {
+        let net = NetworkModel::zero_cost(5);
+        let mut jitter = None;
+        for c in 0..5 {
+            assert_eq!(net.transfer_delay(c, 5.0, &mut jitter), 0.0);
+        }
+        assert_eq!(net.ingress_service(30.0), 0.0);
+    }
+
+    #[test]
+    fn transfer_is_latency_plus_serialization() {
+        let net = NetworkModel {
+            uplinks: vec![LinkParams {
+                latency_s: 0.01,
+                bandwidth: 10.0,
+            }],
+            agg_ingress: 20.0,
+            jitter_sigma: 0.0,
+        };
+        let mut jitter = None;
+        assert!((net.transfer_delay(0, 5.0, &mut jitter) - 0.51).abs() < 1e-12);
+        assert!((net.ingress_service(5.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_links_respect_ranges() {
+        let spec = NetSpec {
+            latency_range_s: (0.001, 0.02),
+            bandwidth_range: (5.0, 50.0),
+            agg_ingress: 100.0,
+            jitter_sigma: 0.3,
+        };
+        let mut rng = Pcg32::seed_from_u64(1);
+        let net = NetworkModel::sample(200, &spec, &mut rng);
+        assert_eq!(net.uplinks.len(), 200);
+        for l in &net.uplinks {
+            assert!((0.001..0.02).contains(&l.latency_s));
+            assert!((5.0..50.0).contains(&l.bandwidth));
+        }
+        assert_eq!(net.agg_ingress, 100.0);
+    }
+
+    #[test]
+    fn zero_spec_bandwidth_means_unlimited() {
+        let mut rng = Pcg32::seed_from_u64(2);
+        let net = NetworkModel::sample(3, &NetSpec::default(), &mut rng);
+        assert!(net.uplinks.iter().all(|l| l.bandwidth.is_infinite()));
+        assert!(net.agg_ingress.is_infinite());
+    }
+
+    #[test]
+    fn jitter_perturbs_latency_only() {
+        let net = NetworkModel {
+            uplinks: vec![LinkParams {
+                latency_s: 1.0,
+                bandwidth: f64::INFINITY,
+            }],
+            agg_ingress: f64::INFINITY,
+            jitter_sigma: 0.5,
+        };
+        let mut jitter = Some(Pcg32::seed_from_u64(3));
+        let draws: Vec<f64> = (0..100).map(|_| net.transfer_delay(0, 5.0, &mut jitter)).collect();
+        assert!(draws.iter().all(|&d| d > 0.0 && d.is_finite()));
+        // Jitter actually varies the delay.
+        assert!(draws.iter().any(|&d| (d - draws[0]).abs() > 1e-9));
+        // Same seed reproduces the same sequence.
+        let mut jitter2 = Some(Pcg32::seed_from_u64(3));
+        let draws2: Vec<f64> =
+            (0..100).map(|_| net.transfer_delay(0, 5.0, &mut jitter2)).collect();
+        assert_eq!(draws, draws2);
+    }
+}

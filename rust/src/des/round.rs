@@ -1,0 +1,542 @@
+//! One FL round as a discrete-event simulation, and the
+//! [`EventDrivenEnv`] delay oracle built on it.
+//!
+//! Events model the paper's round anatomy (see the module docs in
+//! [`crate::des`] for the Eq. 6–7 mapping): trainers finish local work
+//! (`TrainDone`), updates travel the network and queue through the
+//! receiving aggregator's shared ingress (`Arrive` → `Deliver`), and an
+//! aggregator merges once its processing buffer is full (`AggDone`),
+//! forwarding its own update upward until the root completes the round.
+
+use super::engine::EventQueue;
+use super::network::NetworkModel;
+use super::scenarios::Dynamics;
+use crate::configio::SimScenario;
+use crate::fitness::ClientAttrs;
+use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::placement::{validate_placement, Environment, Placement, PlacementError};
+use crate::prng::Pcg32;
+
+/// Synchronization semantics of the simulated round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// The paper's Eq. 7 semantics: a level's merges start only once the
+    /// whole level below has delivered (the coordinator FSM's per-level
+    /// barrier). With a free network and zero training this reproduces
+    /// the analytic TPD exactly.
+    LevelBarrier,
+    /// Fully event-driven overlap: each aggregator merges the moment its
+    /// own buffer fills. Never slower than [`SyncMode::LevelBarrier`].
+    Pipelined,
+}
+
+/// One round's realized dynamics, shared by every placement scored in
+/// the same batch so candidates compete under identical conditions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRealization {
+    /// Which clients participate this round *when assigned as trainers*
+    /// (aggregator slots always serve — the session would abort
+    /// otherwise, and the paper's agtrainers are the stable nodes).
+    pub active: Vec<bool>,
+    /// Per-client compute slowdown multiplier (>= 1 slows; straggler
+    /// bursts × speed drift). Effective speed = `pspeed / slowdown`.
+    pub slowdown: Vec<f64>,
+    /// Seeds this round's per-transfer jitter stream.
+    pub round_seed: u64,
+}
+
+impl RoundRealization {
+    /// The static realization: everyone present, nominal speeds.
+    pub fn all_on(clients: usize, round_seed: u64) -> RoundRealization {
+        RoundRealization {
+            active: vec![true; clients],
+            slowdown: vec![1.0; clients],
+            round_seed,
+        }
+    }
+}
+
+/// Result of simulating one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundOutcome {
+    /// Virtual time at which the root finished aggregating — the round's
+    /// total processing delay.
+    pub tpd: f64,
+    /// Events fired by the queue.
+    pub events: u64,
+    /// Trainers whose update never arrived (churned away or dropped).
+    pub dropped_trainers: usize,
+}
+
+enum Ev {
+    /// A trainer finished local training and starts uploading.
+    TrainDone { client: usize },
+    /// An upload reached aggregator `slot`'s ingress (pre-queueing).
+    Arrive { slot: usize, data: f64 },
+    /// An upload cleared the ingress and sits in `slot`'s buffer.
+    Deliver { slot: usize },
+    /// Aggregator `slot` finished merging its buffer (Eq. 6 delay).
+    AggDone { slot: usize },
+}
+
+/// Simulate one FL round for `arr` under the given network and realized
+/// dynamics. `train_unit` is the local-training workload (0 = training
+/// not modeled, matching the analytic TPD).
+pub fn simulate_round(
+    arr: &Arrangement,
+    attrs: &[ClientAttrs],
+    net: &NetworkModel,
+    real: &RoundRealization,
+    train_unit: f64,
+    mode: SyncMode,
+) -> RoundOutcome {
+    let spec = arr.spec;
+    let dims = spec.dimensions();
+    debug_assert_eq!(attrs.len(), real.active.len());
+    let pspeed_eff = |c: usize| attrs[c].pspeed / real.slowdown[c];
+
+    // Per-slot expectations: how many deliveries fill the buffer, and
+    // the Eq. 6 merge delay once it does. Inner slots always hear from
+    // every child aggregator; leaf slots only from *active* trainers.
+    let mut expected = vec![0usize; dims];
+    let mut merge_delay = vec![0.0f64; dims];
+    let mut parent_slot = vec![usize::MAX; attrs.len()];
+    let mut dropped_trainers = 0usize;
+    for slot in 0..dims {
+        let agg = arr.aggregators[slot];
+        let buffer = arr.buffer_of(slot);
+        let data = if spec.is_leaf_slot(slot) {
+            // Same left-fold sum as `fitness::cluster_delay`, restricted
+            // to active trainers, so the all-on case is bit-identical.
+            let mut sum = 0.0f64;
+            for &t in &buffer {
+                parent_slot[t] = slot;
+                if real.active[t] {
+                    expected[slot] += 1;
+                    sum += attrs[t].mdatasize;
+                } else {
+                    dropped_trainers += 1;
+                }
+            }
+            attrs[agg].mdatasize + sum
+        } else {
+            expected[slot] = buffer.len();
+            attrs[agg].mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>()
+        };
+        merge_delay[slot] = data / pspeed_eff(agg);
+    }
+
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut jitter = (net.jitter_sigma > 0.0).then(|| Pcg32::seed_from_u64(real.round_seed));
+    let mut received = vec![0usize; dims];
+    let mut ingress_free = vec![0.0f64; dims];
+
+    // Level bookkeeping for the barrier mode (levels leaf-first, as in
+    // `levels_bottom_up`).
+    let levels = spec.levels_bottom_up();
+    let mut level_of = vec![0usize; dims];
+    for (li, level) in levels.iter().enumerate() {
+        for &s in level {
+            level_of[s] = li;
+        }
+    }
+    let mut level_waiting: Vec<usize> = levels.iter().map(Vec::len).collect();
+
+    // Kick off: trainers start training; slots whose buffer is already
+    // full (no active trainers / exact-fit leaves) are ready at t = 0.
+    for slot in 0..dims {
+        if spec.is_leaf_slot(slot) {
+            for t in arr.buffer_of(slot) {
+                if real.active[t] {
+                    q.schedule_at(train_unit / pspeed_eff(t), Ev::TrainDone { client: t });
+                }
+            }
+        }
+        if expected[slot] == 0 {
+            q.schedule_at(0.0, Ev::Deliver { slot });
+            // Deliver on an empty buffer marks readiness without
+            // incrementing `received` past `expected`; see below.
+        }
+    }
+
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Ev::TrainDone { client } => {
+                let slot = parent_slot[client];
+                let dt = net.transfer_delay(client, attrs[client].mdatasize, &mut jitter);
+                q.schedule_at(t + dt, Ev::Arrive { slot, data: attrs[client].mdatasize });
+            }
+            Ev::Arrive { slot, data } => {
+                // FIFO ingress queue: chronological pop order guarantees
+                // arrivals are serviced in arrival order.
+                let start = if t > ingress_free[slot] { t } else { ingress_free[slot] };
+                let done = start + net.ingress_service(data);
+                ingress_free[slot] = done;
+                q.schedule_at(done, Ev::Deliver { slot });
+            }
+            Ev::Deliver { slot } => {
+                if expected[slot] > 0 {
+                    received[slot] += 1;
+                    if received[slot] < expected[slot] {
+                        continue;
+                    }
+                }
+                // Buffer full: this slot may merge.
+                match mode {
+                    SyncMode::Pipelined => {
+                        q.schedule_at(t + merge_delay[slot], Ev::AggDone { slot });
+                    }
+                    SyncMode::LevelBarrier => {
+                        let li = level_of[slot];
+                        level_waiting[li] -= 1;
+                        if level_waiting[li] == 0 {
+                            for &s in &levels[li] {
+                                q.schedule_at(t + merge_delay[s], Ev::AggDone { slot: s });
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::AggDone { slot } => {
+                if slot == 0 {
+                    return RoundOutcome { tpd: t, events: q.processed(), dropped_trainers };
+                }
+                let parent = spec.parent(slot).expect("non-root slot has a parent");
+                let c = arr.aggregators[slot];
+                let dt = net.transfer_delay(c, attrs[c].mdatasize, &mut jitter);
+                q.schedule_at(t + dt, Ev::Arrive { slot: parent, data: attrs[c].mdatasize });
+            }
+        }
+    }
+    unreachable!("event queue drained before the root aggregation completed")
+}
+
+/// The fourth [`Environment`] oracle: scores placements by simulating a
+/// whole FL round in virtual time over the configured network and
+/// dynamic-scenario state. Every `eval`/`eval_batch` call is one virtual
+/// round; all placements inside one batch are scored under the *same*
+/// realized dynamics so candidates compete fairly, and the dynamics
+/// advance once per batch.
+pub struct EventDrivenEnv {
+    spec: HierarchySpec,
+    attrs: Vec<ClientAttrs>,
+    net: NetworkModel,
+    train_unit: f64,
+    mode: SyncMode,
+    dynamics: Dynamics,
+    realization: RoundRealization,
+    /// Virtual FL rounds simulated so far (batches + single evals).
+    pub rounds_simulated: usize,
+    /// Total events fired across all simulated rounds.
+    pub events_fired: u64,
+}
+
+impl EventDrivenEnv {
+    pub fn new(
+        spec: HierarchySpec,
+        attrs: Vec<ClientAttrs>,
+        net: NetworkModel,
+        train_unit: f64,
+        mode: SyncMode,
+        mut dynamics: Dynamics,
+    ) -> EventDrivenEnv {
+        assert!(
+            attrs.len() >= spec.dimensions(),
+            "population smaller than slot count"
+        );
+        assert_eq!(net.uplinks.len(), attrs.len(), "one uplink per client");
+        let realization = dynamics.next_round(attrs.len());
+        EventDrivenEnv {
+            spec,
+            attrs,
+            net,
+            train_unit,
+            mode,
+            dynamics,
+            realization,
+            rounds_simulated: 0,
+            events_fired: 0,
+        }
+    }
+
+    /// The conformance configuration: free network, no jitter, static
+    /// population, zero training cost, level-barrier mode — scores equal
+    /// [`crate::placement::AnalyticTpd`] for identical placements.
+    pub fn conformance(spec: HierarchySpec, attrs: Vec<ClientAttrs>) -> EventDrivenEnv {
+        let net = NetworkModel::zero_cost(attrs.len());
+        EventDrivenEnv::new(spec, attrs, net, 0.0, SyncMode::LevelBarrier, Dynamics::off())
+    }
+
+    /// Build from a scenario's `[des]`/`[net]`/`[dynamics]` extensions.
+    /// The network and dynamics draw from streams derived from the
+    /// scenario seed, independent of the population/optimizer streams.
+    pub fn from_scenario(sc: &SimScenario, attrs: Vec<ClientAttrs>) -> EventDrivenEnv {
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let mut rng = Pcg32::seed_from_u64(sc.seed ^ 0x0DE5_CA7A_106B_00C5);
+        let net = NetworkModel::sample(attrs.len(), &sc.des.net, &mut rng);
+        let dynamics = Dynamics::new(sc.des.dynamics.clone(), rng.split());
+        let mode = if sc.des.pipelined { SyncMode::Pipelined } else { SyncMode::LevelBarrier };
+        EventDrivenEnv::new(spec, attrs, net, sc.des.train_unit, mode, dynamics)
+    }
+
+    /// The simulated client population.
+    pub fn attrs(&self) -> &[ClientAttrs] {
+        &self.attrs
+    }
+
+    /// The realization the *next* eval/batch will be scored under.
+    pub fn realization(&self) -> &RoundRealization {
+        &self.realization
+    }
+
+    fn score(&mut self, placement: &[usize]) -> f64 {
+        let arr = Arrangement::from_position(self.spec, placement, self.attrs.len());
+        let out = simulate_round(
+            &arr,
+            &self.attrs,
+            &self.net,
+            &self.realization,
+            self.train_unit,
+            self.mode,
+        );
+        self.events_fired += out.events;
+        out.tpd
+    }
+
+    fn advance_round(&mut self) {
+        self.realization = self.dynamics.next_round(self.attrs.len());
+        self.rounds_simulated += 1;
+    }
+}
+
+impl Environment for EventDrivenEnv {
+    fn name(&self) -> &'static str {
+        "event-driven"
+    }
+
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
+        validate_placement(placement, self.spec.dimensions(), self.attrs.len())?;
+        let tpd = self.score(placement);
+        self.advance_round();
+        Ok(tpd)
+    }
+
+    fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
+        let dims = self.spec.dimensions();
+        for p in batch {
+            validate_placement(p, dims, self.attrs.len())?;
+        }
+        let delays = batch.iter().map(|p| self.score(p)).collect();
+        self.advance_round();
+        Ok(delays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::{DesSpec, DynamicsSpec, NetSpec};
+    use crate::fitness::tpd;
+    use crate::prng::Rng;
+
+    fn population(n: usize, seed: u64) -> Vec<ClientAttrs> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        ClientAttrs::sample_population(n, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+    }
+
+    fn random_placements(
+        spec: HierarchySpec,
+        cc: usize,
+        count: usize,
+        seed: u64,
+    ) -> Vec<Placement> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        (0..count)
+            .map(|_| Placement::new(rng.sample_distinct(cc, spec.dimensions())))
+            .collect()
+    }
+
+    #[test]
+    fn barrier_mode_reproduces_analytic_tpd_exactly() {
+        for (d, w) in [(1usize, 3usize), (2, 2), (3, 4), (4, 2)] {
+            let spec = HierarchySpec::new(d, w);
+            let cc = spec.dimensions() + spec.leaf_slots().len() * 2 + 3;
+            let attrs = population(cc, 7 + d as u64);
+            let real = RoundRealization::all_on(cc, 0);
+            let net = NetworkModel::zero_cost(cc);
+            for p in random_placements(spec, cc, 8, 11) {
+                let arr = Arrangement::from_position(spec, &p, cc);
+                let expect = tpd(&arr, &attrs).total;
+                let out =
+                    simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier);
+                assert!(
+                    (out.tpd - expect).abs() < 1e-9,
+                    "D{d} W{w}: des {} != analytic {}",
+                    out.tpd,
+                    expect
+                );
+                assert_eq!(out.dropped_trainers, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_mode_is_never_slower_than_barrier() {
+        let spec = HierarchySpec::new(3, 3);
+        let cc = spec.dimensions() + 20;
+        let attrs = population(cc, 3);
+        let real = RoundRealization::all_on(cc, 0);
+        let net = NetworkModel::zero_cost(cc);
+        let mut strictly_faster = 0;
+        for p in random_placements(spec, cc, 12, 5) {
+            let arr = Arrangement::from_position(spec, &p, cc);
+            let barrier = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier);
+            let piped = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::Pipelined);
+            assert!(piped.tpd <= barrier.tpd + 1e-12, "{} > {}", piped.tpd, barrier.tpd);
+            strictly_faster += (piped.tpd < barrier.tpd - 1e-9) as usize;
+        }
+        assert!(strictly_faster > 0, "overlap should win somewhere");
+    }
+
+    #[test]
+    fn training_and_network_costs_extend_the_round() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 9;
+        let attrs = population(cc, 4);
+        let real = RoundRealization::all_on(cc, 0);
+        let arr = Arrangement::from_position(spec, &[0, 1, 2], cc);
+        let free = NetworkModel::zero_cost(cc);
+        let base = simulate_round(&arr, &attrs, &free, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        let trained =
+            simulate_round(&arr, &attrs, &free, &real, 10.0, SyncMode::LevelBarrier).tpd;
+        assert!(trained > base, "{trained} !> {base}");
+        let mut slow = NetworkModel::zero_cost(cc);
+        for l in &mut slow.uplinks {
+            l.latency_s = 0.25;
+            l.bandwidth = 10.0;
+        }
+        let netted = simulate_round(&arr, &attrs, &slow, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        assert!(netted > base, "{netted} !> {base}");
+    }
+
+    #[test]
+    fn ingress_contention_serializes_uploads() {
+        // Wide leaf fan-in: many trainers upload into one aggregator.
+        let spec = HierarchySpec::new(1, 1);
+        let cc = 11;
+        let attrs = population(cc, 6);
+        let real = RoundRealization::all_on(cc, 0);
+        let arr = Arrangement::from_position(spec, &[0], cc);
+        let mut net = NetworkModel::zero_cost(cc);
+        let free = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        net.agg_ingress = 2.0; // 10 uploads × 5 units / 2 per s = 25 s queueing
+        let contended = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        assert!(
+            contended >= free + 24.0,
+            "contention must serialize: {contended} vs {free}"
+        );
+    }
+
+    #[test]
+    fn dropped_trainers_shrink_the_merge() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 15;
+        let attrs = population(cc, 9);
+        let arr = Arrangement::from_position(spec, &[0, 1, 2], cc);
+        let net = NetworkModel::zero_cost(cc);
+        let full = RoundRealization::all_on(cc, 0);
+        let mut half = full.clone();
+        for t in arr.all_trainers().into_iter().step_by(2) {
+            half.active[t] = false;
+        }
+        let base = simulate_round(&arr, &attrs, &net, &full, 0.0, SyncMode::LevelBarrier);
+        let degraded = simulate_round(&arr, &attrs, &net, &half, 0.0, SyncMode::LevelBarrier);
+        assert!(degraded.dropped_trainers > 0);
+        // Less data to merge at the leaves ⇒ never slower.
+        assert!(degraded.tpd <= base.tpd + 1e-12);
+        assert!(degraded.tpd < base.tpd, "dropouts must shrink leaf merges");
+    }
+
+    #[test]
+    fn stragglers_slow_the_round() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 9;
+        let attrs = population(cc, 2);
+        let arr = Arrangement::from_position(spec, &[0, 1, 2], cc);
+        let net = NetworkModel::zero_cost(cc);
+        let nominal = RoundRealization::all_on(cc, 0);
+        let mut burst = nominal.clone();
+        burst.slowdown = vec![4.0; cc];
+        let base = simulate_round(&arr, &attrs, &net, &nominal, 0.0, SyncMode::LevelBarrier);
+        let slow = simulate_round(&arr, &attrs, &net, &burst, 0.0, SyncMode::LevelBarrier);
+        assert!((slow.tpd - base.tpd * 4.0).abs() < 1e-9, "{} vs {}", slow.tpd, base.tpd);
+    }
+
+    #[test]
+    fn env_batch_matches_singles_in_static_scenarios() {
+        let spec = HierarchySpec::new(2, 3);
+        let cc = 20;
+        let attrs = population(cc, 5);
+        let batch = random_placements(spec, cc, 5, 3);
+        let mut env = EventDrivenEnv::conformance(spec, attrs.clone());
+        let batched = env.eval_batch(&batch).unwrap();
+        let mut env2 = EventDrivenEnv::conformance(spec, attrs);
+        let singles: Vec<f64> = batch.iter().map(|p| env2.eval(p).unwrap()).collect();
+        assert_eq!(batched, singles);
+        assert_eq!(env.rounds_simulated, 1);
+        assert_eq!(env2.rounds_simulated, 5);
+        assert!(env.events_fired > 0);
+    }
+
+    #[test]
+    fn env_rejects_invalid_placements() {
+        let spec = HierarchySpec::new(2, 2);
+        let mut env = EventDrivenEnv::conformance(spec, population(8, 1));
+        let err = env.eval(&Placement::new(vec![0, 0, 1])).unwrap_err();
+        assert!(matches!(err, PlacementError::DuplicateClient { .. }), "{err}");
+        let err = env.eval_batch(&[Placement::new(vec![0, 1])]).unwrap_err();
+        assert!(matches!(err, PlacementError::WrongArity { .. }), "{err}");
+    }
+
+    #[test]
+    fn dynamic_env_is_deterministic_per_seed_and_fair_within_a_batch() {
+        let mut sc = SimScenario { depth: 2, width: 3, ..SimScenario::default() };
+        sc.seed = 77;
+        sc.des = DesSpec {
+            train_unit: 1.0,
+            pipelined: false,
+            net: NetSpec {
+                latency_range_s: (0.001, 0.05),
+                bandwidth_range: (5.0, 50.0),
+                agg_ingress: 50.0,
+                jitter_sigma: 0.4,
+            },
+            dynamics: DynamicsSpec {
+                dropout_prob: 0.2,
+                churn_leave_prob: 0.05,
+                churn_join_prob: 0.5,
+                straggler_prob: 0.5,
+                straggler_frac: 0.3,
+                straggler_slowdown: 4.0,
+                drift_sigma: 0.05,
+            },
+        };
+        let cc = sc.client_count();
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let attrs = population(cc, sc.seed);
+        let batch = random_placements(spec, cc, 6, 8);
+
+        let mut a = EventDrivenEnv::from_scenario(&sc, attrs.clone());
+        let mut b = EventDrivenEnv::from_scenario(&sc, attrs);
+        for _ in 0..5 {
+            let da = a.eval_batch(&batch).unwrap();
+            let db = b.eval_batch(&batch).unwrap();
+            assert_eq!(da, db, "same seed must reproduce the same virtual rounds");
+            // Identical placements in one batch score identically (same
+            // realization + same per-eval jitter stream).
+            let dup = a.eval_batch(&[batch[0].clone(), batch[0].clone()]).unwrap();
+            assert_eq!(dup[0], dup[1]);
+            let _ = b.eval_batch(&[batch[0].clone(), batch[0].clone()]).unwrap();
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Dynamic-scenario catalog: the per-round dynamics state machine
+//! (churn, dropout, straggler bursts, speed drift) plus a built-in
+//! matrix of named scenarios — from the paper's Fig-3 shapes up to
+//! 10k-client populations — and a loader for user TOML directories.
+
+use super::round::RoundRealization;
+use crate::configio::{DesSpec, DynamicsSpec, NetSpec, SimScenario, TomlDoc};
+use crate::prng::{Pcg32, Rng};
+
+/// Session-lifetime dynamics: evolves churn membership and speed drift
+/// across rounds and realizes one [`RoundRealization`] per round.
+#[derive(Debug, Clone)]
+pub struct Dynamics {
+    spec: DynamicsSpec,
+    /// Churn membership (applies to clients assigned as trainers).
+    present: Vec<bool>,
+    /// Drift random-walk state (slowdown component, clamped).
+    drift: Vec<f64>,
+    rng: Pcg32,
+}
+
+impl Dynamics {
+    pub fn new(spec: DynamicsSpec, rng: Pcg32) -> Dynamics {
+        Dynamics { spec, present: Vec::new(), drift: Vec::new(), rng }
+    }
+
+    /// The static no-op dynamics (conformance configuration).
+    pub fn off() -> Dynamics {
+        Dynamics::new(DynamicsSpec::default(), Pcg32::seed_from_u64(0))
+    }
+
+    /// Realize the next round for a population of `n` clients.
+    pub fn next_round(&mut self, n: usize) -> RoundRealization {
+        if self.present.len() != n {
+            self.present = vec![true; n];
+            self.drift = vec![1.0; n];
+        }
+        let round_seed = self.rng.next_u64();
+        let s = self.spec.clone();
+        // Churn: leave/rejoin transitions on the membership state.
+        if s.churn_leave_prob > 0.0 || s.churn_join_prob > 0.0 {
+            for p in &mut self.present {
+                let flip = if *p { s.churn_leave_prob } else { s.churn_join_prob };
+                if flip > 0.0 && self.rng.next_f64() < flip {
+                    *p = !*p;
+                }
+            }
+        }
+        // Speed drift: bounded lognormal random walk per client.
+        if s.drift_sigma > 0.0 {
+            for d in &mut self.drift {
+                *d = (*d * self.rng.lognormal(s.drift_sigma)).clamp(0.25, 4.0);
+            }
+        }
+        let mut slowdown = self.drift.clone();
+        // Straggler burst: this round, a sampled fraction runs slower.
+        if s.straggler_prob > 0.0 && self.rng.next_f64() < s.straggler_prob {
+            let k = ((n as f64 * s.straggler_frac).ceil() as usize).min(n);
+            for i in self.rng.sample_distinct(n, k) {
+                slowdown[i] *= s.straggler_slowdown;
+            }
+        }
+        // Dropout: per-round one-off absences on top of churn.
+        let mut active = self.present.clone();
+        if s.dropout_prob > 0.0 {
+            for a in &mut active {
+                if *a && self.rng.next_f64() < s.dropout_prob {
+                    *a = false;
+                }
+            }
+        }
+        RoundRealization { active, slowdown, round_seed }
+    }
+}
+
+/// A catalog entry: a scenario plus its presentation name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedScenario {
+    pub name: String,
+    pub sim: SimScenario,
+}
+
+/// Dynamics variants crossed with every base size in the built-in
+/// catalog (name suffix, spec editor).
+fn variants() -> Vec<(&'static str, fn(&mut DesSpec))> {
+    vec![
+        ("static", |_| {}),
+        ("dropout", |d| d.dynamics.dropout_prob = 0.15),
+        ("churn", |d| {
+            d.dynamics.churn_leave_prob = 0.05;
+            d.dynamics.churn_join_prob = 0.5;
+        }),
+        ("straggler", |d| {
+            d.dynamics.straggler_prob = 0.3;
+            d.dynamics.straggler_frac = 0.2;
+            d.dynamics.straggler_slowdown = 4.0;
+        }),
+        ("jitter", |d| {
+            d.net.latency_range_s = (0.001, 0.02);
+            d.net.bandwidth_range = (5.0, 50.0);
+            d.net.jitter_sigma = 0.5;
+        }),
+        ("drift", |d| d.dynamics.drift_sigma = 0.05),
+    ]
+}
+
+/// The built-in scenario matrix: four population scales (7 → 10k+
+/// clients) × six dynamics variants, plus a contended-uplink case and a
+/// 10k-client everything-on stress case. 26 scenarios, every one with a
+/// distinct seed, all scored by the event-driven oracle.
+pub fn builtin_catalog() -> Vec<NamedScenario> {
+    // (name, depth, width, trainers_per_leaf, pso iterations)
+    let sizes: [(&str, usize, usize, usize, usize); 4] = [
+        ("tiny", 2, 2, 2, 20),      // 7 clients
+        ("paper", 3, 4, 2, 12),     // 53 clients (Fig-3 panel a)
+        ("deep", 4, 4, 2, 8),       // 213 clients (Fig-3 panel b)
+        ("mega10k", 3, 4, 625, 4),  // 10 021 clients
+    ];
+    let mut catalog = Vec::new();
+    let base = |name: &str, i: usize| -> SimScenario {
+        let (_, depth, width, tpl, iters) = sizes[i];
+        let mut sc = SimScenario {
+            depth,
+            width,
+            trainers_per_leaf: tpl,
+            env: "event-driven".to_string(),
+            ..SimScenario::default()
+        };
+        sc.pso.particles = 5;
+        sc.pso.iterations = iters;
+        // Distinct, stable seed per scenario name.
+        sc.seed = 1000 + catalog_seed(name);
+        sc
+    };
+    for (i, (size, ..)) in sizes.iter().enumerate() {
+        for (variant, edit) in variants() {
+            let name = format!("{size}-{variant}");
+            let mut sc = base(&name, i);
+            edit(&mut sc.des);
+            catalog.push(NamedScenario { name, sim: sc });
+        }
+    }
+    // Contended shared uplink at the paper scale.
+    let mut contended = base("paper-contended", 1);
+    contended.des.net.latency_range_s = (0.001, 0.01);
+    contended.des.net.bandwidth_range = (5.0, 50.0);
+    contended.des.net.agg_ingress = 25.0;
+    catalog.push(NamedScenario { name: "paper-contended".into(), sim: contended });
+    // Everything on at 10k clients.
+    let mut mixed = base("mega10k-mixed", 3);
+    for (_, edit) in variants() {
+        edit(&mut mixed.des);
+    }
+    mixed.des.net.agg_ingress = 500.0;
+    mixed.des.train_unit = 1.0;
+    catalog.push(NamedScenario { name: "mega10k-mixed".into(), sim: mixed });
+    catalog
+}
+
+/// FNV-1a over the scenario name — stable seeds without global state.
+fn catalog_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h % 100_000
+}
+
+/// Load every `*.toml` scenario in a directory (sorted by file name;
+/// the scenario name is the file stem). Files use the `[sim]`/`[pso]`
+/// tables plus the `[des]`/`[net]`/`[dynamics]` extensions.
+pub fn load_dir(dir: &std::path::Path) -> Result<Vec<NamedScenario>, String> {
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("{dir:?}: {e}"))?
+        .filter_map(|r| r.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("{dir:?}: no .toml scenario files"));
+    }
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let doc = TomlDoc::load(&p)?;
+        let sim = SimScenario::from_toml(&doc).map_err(|e| format!("{p:?}: {e}"))?;
+        let name = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("scenario")
+            .to_string();
+        out.push(NamedScenario { name, sim });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_the_acceptance_matrix() {
+        let cat = builtin_catalog();
+        assert!(cat.len() >= 20, "only {} scenarios", cat.len());
+        let names: Vec<&str> = cat.iter().map(|s| s.name.as_str()).collect();
+        for required in ["churn", "dropout", "straggler"] {
+            assert!(
+                names.iter().any(|n| n.contains(required)),
+                "missing a {required} scenario"
+            );
+        }
+        // 10k-client cases present, including dynamic ones.
+        let mega: Vec<&NamedScenario> =
+            cat.iter().filter(|s| s.sim.client_count() >= 10_000).collect();
+        assert!(mega.len() >= 4, "only {} 10k-client scenarios", mega.len());
+        assert!(mega.iter().any(|s| !s.sim.des.dynamics.is_static()));
+        // Names and seeds are unique (independent randomness per cell).
+        let mut uniq: Vec<&str> = names.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), cat.len(), "duplicate scenario names");
+        let mut seeds: Vec<u64> = cat.iter().map(|s| s.sim.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), cat.len(), "seed collision in catalog");
+        // Everything is scored by the event-driven oracle.
+        assert!(cat.iter().all(|s| s.sim.env == "event-driven"));
+    }
+
+    #[test]
+    fn dynamics_are_deterministic_per_seed() {
+        let spec = DynamicsSpec {
+            dropout_prob: 0.2,
+            churn_leave_prob: 0.1,
+            churn_join_prob: 0.4,
+            straggler_prob: 0.5,
+            straggler_frac: 0.25,
+            straggler_slowdown: 3.0,
+            drift_sigma: 0.1,
+        };
+        let mut a = Dynamics::new(spec.clone(), Pcg32::seed_from_u64(9));
+        let mut b = Dynamics::new(spec, Pcg32::seed_from_u64(9));
+        for _ in 0..20 {
+            assert_eq!(a.next_round(30), b.next_round(30));
+        }
+    }
+
+    #[test]
+    fn static_dynamics_realize_identity() {
+        let mut d = Dynamics::off();
+        for _ in 0..5 {
+            let r = d.next_round(12);
+            assert!(r.active.iter().all(|&a| a));
+            assert!(r.slowdown.iter().all(|&s| s == 1.0));
+        }
+    }
+
+    #[test]
+    fn churn_members_come_and_go() {
+        let spec = DynamicsSpec {
+            churn_leave_prob: 0.3,
+            churn_join_prob: 0.3,
+            ..DynamicsSpec::default()
+        };
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(4));
+        let mut ever_absent = vec![false; 40];
+        let mut rejoined = false;
+        let mut was_absent = vec![false; 40];
+        for _ in 0..40 {
+            let r = d.next_round(40);
+            for (i, &on) in r.active.iter().enumerate() {
+                if !on {
+                    ever_absent[i] = true;
+                    was_absent[i] = true;
+                } else if was_absent[i] {
+                    rejoined = true;
+                    was_absent[i] = false;
+                }
+            }
+        }
+        assert!(ever_absent.iter().any(|&x| x), "nobody ever left");
+        assert!(rejoined, "nobody ever rejoined");
+    }
+
+    #[test]
+    fn drift_stays_bounded() {
+        let spec = DynamicsSpec { drift_sigma: 0.5, ..DynamicsSpec::default() };
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(8));
+        for _ in 0..200 {
+            let r = d.next_round(10);
+            assert!(r.slowdown.iter().all(|&s| (0.25..=4.0).contains(&s)));
+        }
+    }
+
+    #[test]
+    fn load_dir_roundtrips_toml_scenarios() {
+        let dir = std::env::temp_dir().join("repro_des_scenarios_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("b_churny.toml"),
+            "[sim]\ndepth = 2\nwidth = 2\nenv = \"event-driven\"\n[dynamics]\nleave = 0.1\njoin = 0.5\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("a_static.toml"), "[sim]\ndepth = 3\nwidth = 2\n").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let got = load_dir(&dir).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].name, "a_static");
+        assert_eq!(got[1].name, "b_churny");
+        assert_eq!(got[1].sim.des.dynamics.churn_leave_prob, 0.1);
+        assert!(load_dir(&dir.join("missing")).is_err());
+    }
+}

@@ -301,6 +301,18 @@ impl Coordinator {
 
     /// Persist the current global model (resume/serve workflows).
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.save_checkpoint_with(path, None)
+    }
+
+    /// Persist the current global model together with a placement
+    /// optimizer's transferable state, so the resumed session restores
+    /// its search progress too (use [`crate::placement::Optimizer::state`]
+    /// to take the snapshot).
+    pub fn save_checkpoint_with(
+        &self,
+        path: &std::path::Path,
+        optimizer: Option<crate::placement::OptimizerState>,
+    ) -> Result<()> {
         let last = self.recorder.records().last();
         crate::runtime::checkpoint::save(
             path,
@@ -310,14 +322,38 @@ impl Coordinator {
                 round: last.map_or(0, |r| r.round),
                 session: self.cfg.session.clone(),
                 loss: last.map_or(f64::NAN, |r| r.loss),
+                optimizer,
             },
         )
     }
 
     /// Replace the global model from a checkpoint (e.g. to resume a
     /// session). The parameter count must match the loaded artifacts.
-    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+    /// Returns the checkpoint metadata so the caller can also restore
+    /// the placement optimizer (`meta.optimizer`).
+    pub fn restore_checkpoint(
+        &mut self,
+        path: &std::path::Path,
+    ) -> Result<crate::runtime::CheckpointMeta> {
         let (params, meta) = crate::runtime::checkpoint::load(path)?;
+        self.install_checkpoint(params, &meta)?;
+        Ok(meta)
+    }
+
+    /// Parameter count the loaded artifacts expect (checkpoint
+    /// compatibility pre-checks).
+    pub fn expected_param_count(&self) -> usize {
+        self.runtime.meta.param_count
+    }
+
+    /// Install an already-loaded checkpoint payload — for callers that
+    /// inspect the metadata before committing (one file read, no state
+    /// touched on error). The parameter count must match the artifacts.
+    pub fn install_checkpoint(
+        &mut self,
+        params: Vec<f32>,
+        meta: &crate::runtime::CheckpointMeta,
+    ) -> Result<()> {
         if params.len() != self.runtime.meta.param_count {
             return Err(anyhow!(
                 "checkpoint has {} params, artifacts expect {}",
@@ -327,9 +363,9 @@ impl Coordinator {
         }
         log_info!(
             "coord",
-            "restored checkpoint {:?} (round {}, loss {:.4})",
-            path,
+            "restored checkpoint (round {}, session {:?}, loss {:.4})",
             meta.round,
+            meta.session,
             meta.loss
         );
         self.global = params;

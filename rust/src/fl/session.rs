@@ -102,6 +102,39 @@ impl Deployment {
         &*self.optimizer
     }
 
+    /// Persist the global model *and* the optimizer's transferable state
+    /// in one checkpoint, so `restore_checkpoint` resumes both.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        self.coordinator
+            .save_checkpoint_with(path, Some(self.optimizer.state()))
+    }
+
+    /// Restore the global model and, when the checkpoint carries one,
+    /// the placement-optimizer snapshot (the snapshot must come from the
+    /// same strategy, at this deployment's shape). Validation runs
+    /// before any state is replaced: the parameter count is pre-checked,
+    /// and `Optimizer::restore` implementations validate the snapshot
+    /// (strategy name + placement shape) before mutating — so a
+    /// mismatched checkpoint leaves the deployment untouched.
+    pub fn restore_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let (params, meta) = crate::runtime::checkpoint::load(path)?;
+        if params.len() != self.coordinator.expected_param_count() {
+            return Err(anyhow::anyhow!(
+                "checkpoint has {} params, artifacts expect {}",
+                params.len(),
+                self.coordinator.expected_param_count()
+            ));
+        }
+        // Optimizer first: its restore is validate-then-mutate, and the
+        // model install below can no longer fail after the pre-check.
+        if let Some(state) = &meta.optimizer {
+            self.optimizer
+                .restore(state)
+                .map_err(|e| anyhow::anyhow!("restoring optimizer: {e}"))?;
+        }
+        self.coordinator.install_checkpoint(params, &meta)
+    }
+
     /// Shut down agents and join their threads.
     pub fn shutdown(mut self) {
         self.coordinator.shutdown();

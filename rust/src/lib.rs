@@ -11,8 +11,11 @@
 //!   registry-driven `Optimizer` × `Environment` API running every
 //!   strategy (PSO, GA, SA, tabu, adaptive, baselines) against every
 //!   delay oracle (analytic TPD, emulated testbed, live rounds) — the
-//!   [`hierarchy`] model and its [`fitness`] (TPD) function, plus the
-//!   [`sim`]ulator that regenerates the paper's Fig. 3.
+//!   [`hierarchy`] model and its [`fitness`] (TPD) function, the
+//!   [`sim`]ulator that regenerates the paper's Fig. 3, and the [`des`]
+//!   discrete-event tier (virtual-time rounds over a contended network
+//!   with churn/dropout/straggler dynamics, the scenario catalog and
+//!   the multi-threaded `repro fleet` matrix runner).
 //! * **L2/L1 (python, build-time only)** — the 1.8 M-parameter MLP and
 //!   the Pallas aggregation/SGD kernels, AOT-lowered to HLO text in
 //!   `artifacts/` and executed from rust through [`runtime`] (PJRT).
@@ -26,6 +29,7 @@ pub mod bench;
 pub mod broker;
 pub mod configio;
 pub mod data;
+pub mod des;
 pub mod fitness;
 pub mod fl;
 pub mod hierarchy;

@@ -1,8 +1,9 @@
 //! `repro` — CLI launcher for the Flag-Swap SDFL system.
 //!
 //! ```text
-//! repro sim        [--strategy NAME --depth D --width W --particles P --iterations N --seed S --out csv]
+//! repro sim        [--strategy NAME --env analytic|event-driven --depth D --width W --particles P --iterations N --seed S --out csv]
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
+//! repro fleet      [--scenarios builtin|DIR --strategies a,b,c --threads N --evals N --out csv]
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
@@ -18,6 +19,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(&args),
         Some("fig3") => cmd_fig3(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("broker") => cmd_broker(&args),
@@ -27,10 +29,12 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: repro <sim|fig3|compare|e2e|broker> [flags]\n\
+                "usage: repro <sim|fig3|fleet|compare|e2e|broker> [flags]\n\
                  \n\
-                 sim      one placement simulation (Fig-3 style); --strategy NAME\n\
+                 sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
+                 fleet    scenario × strategy matrix on the discrete-event simulator;\n\
+                 \x20        --scenarios builtin|DIR --strategies a,b,c --threads N --evals N --out csv\n\
                  compare  Fig-4 deployment comparison; --strategies a,b,c\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
@@ -45,7 +49,13 @@ fn main() -> Result<()> {
                  \x20 ga | sa | tabu  black-box meta-heuristic comparators (ablation A2)\n\
                  Pick pso for the paper's behavior, adaptive-pso for drifting\n\
                  systems, random/round-robin as baselines, ga/sa/tabu to\n\
-                 benchmark alternative optimizers under the same budget."
+                 benchmark alternative optimizers under the same budget.\n\
+                 \n\
+                 choosing a delay oracle (--env, sim/fleet tier):\n\
+                 \x20 analytic      closed-form Eq. 6-7 TPD (default)\n\
+                 \x20 event-driven  discrete-event virtual-time round (alias: des);\n\
+                 \x20               enable churn/dropout/stragglers/jitter via the\n\
+                 \x20               [des]/[net]/[dynamics] tables of --config TOML"
             );
             std::process::exit(2);
         }
@@ -74,9 +84,11 @@ fn scenario_from_args(args: &Args) -> Result<SimScenario> {
 fn cmd_sim(args: &Args) -> Result<()> {
     let mut sc = scenario_from_args(args)?;
     sc.strategy = args.str_flag("strategy", &sc.strategy);
+    sc.env = args.str_flag("env", &sc.env);
     println!(
-        "sim: strategy={} depth={} width={} clients={} slots={} particles={} iterations={}",
+        "sim: strategy={} env={} depth={} width={} clients={} slots={} particles={} iterations={}",
         sc.strategy,
+        sc.env,
         sc.depth,
         sc.width,
         sc.client_count(),
@@ -128,6 +140,36 @@ fn cmd_fig3(args: &Args) -> Result<()> {
             path.display()
         );
     }
+    Ok(())
+}
+
+/// Scenario × strategy matrix on the discrete-event simulator, across
+/// OS threads, with a ranked summary + CSV — the scale/dynamics tier
+/// (`repro fleet --scenarios builtin --strategies pso,random,...`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use repro::des::{builtin_catalog, load_dir, report_fleet, run_fleet, FleetConfig};
+    let src = args.str_flag("scenarios", "builtin");
+    let scenarios = if src == "builtin" {
+        builtin_catalog()
+    } else {
+        load_dir(std::path::Path::new(&src)).map_err(|e| anyhow!(e))?
+    };
+    let strategies = args.list_flag("strategies").unwrap_or_else(|| {
+        registry::NAMES.iter().map(|s| s.to_string()).collect()
+    });
+    let cfg = FleetConfig {
+        threads: args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?,
+        evals: args.opt_usize_flag("evals").map_err(|e| anyhow!(e))?,
+    };
+    println!(
+        "fleet: {} scenarios ({src}) × {} strategies, threads={}",
+        scenarios.len(),
+        strategies.len(),
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+    );
+    let cells = run_fleet(&scenarios, &strategies, &cfg).map_err(|e| anyhow!(e))?;
+    let out = std::path::PathBuf::from(args.str_flag("out", "results/fleet.csv"));
+    report_fleet(&cells, Some(&out))?;
     Ok(())
 }
 

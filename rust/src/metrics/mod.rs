@@ -10,5 +10,5 @@ mod timer;
 
 pub use csv::CsvWriter;
 pub use recorder::{RoundRecord, RoundRecorder};
-pub use summary::Summary;
+pub use summary::{rank_ascending, Summary};
 pub use timer::Stopwatch;

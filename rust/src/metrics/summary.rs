@@ -55,6 +55,24 @@ impl Summary {
     }
 }
 
+/// Competition ranks (1-based, ascending: smallest value gets rank 1,
+/// ties share the lowest rank and the next distinct value skips — "1224"
+/// ranking); NaNs sort last. Used by the fleet runner to rank strategies
+/// inside each scenario, so tying the winner still counts as a win.
+pub fn rank_ascending(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
+    let mut ranks = vec![0usize; xs.len()];
+    let mut rank = 1usize;
+    for (pos, &i) in idx.iter().enumerate() {
+        if pos > 0 && xs[i].total_cmp(&xs[idx[pos - 1]]).is_gt() {
+            rank = pos + 1;
+        }
+        ranks[i] = rank;
+    }
+    ranks
+}
+
 /// Nearest-rank percentile over a pre-sorted sample.
 fn percentile(sorted: &[f64], q: f64) -> f64 {
     let idx = ((sorted.len() as f64) * q).ceil() as usize;
@@ -88,6 +106,19 @@ mod tests {
         assert_eq!(s.p50, 7.5);
         assert_eq!(s.p99, 7.5);
         assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn rank_ascending_is_competition_ranking() {
+        assert_eq!(rank_ascending(&[3.0, 1.0, 2.0]), vec![3, 1, 2]);
+        // Ties share the lowest rank; the next distinct value skips.
+        assert_eq!(rank_ascending(&[2.0, 1.0, 1.0]), vec![3, 1, 1]);
+        assert_eq!(rank_ascending(&[5.0, 5.0, 5.0]), vec![1, 1, 1]);
+        assert_eq!(rank_ascending(&[1.0, 1.0, 2.0, 2.0, 3.0]), vec![1, 1, 3, 3, 5]);
+        assert_eq!(rank_ascending(&[]), Vec::<usize>::new());
+        // NaN sorts last instead of poisoning the ordering.
+        let r = rank_ascending(&[f64::NAN, 1.0]);
+        assert_eq!(r, vec![2, 1]);
     }
 
     #[test]

@@ -2,12 +2,16 @@
 //! split.
 //!
 //! An environment turns a candidate [`Placement`] into the paper's
-//! black-box signal: the round's processing delay. Three implementations
-//! cover the repo's three execution tiers:
+//! black-box signal: the round's processing delay. Four implementations
+//! cover the repo's execution tiers:
 //!
 //! * [`AnalyticTpd`] — the closed-form Eq. 6–7 TPD model over a sampled
 //!   client population (the Fig-3 simulation fitness). Its `eval_batch`
 //!   scores a whole swarm in one dispatch.
+//! * [`crate::des::EventDrivenEnv`] — a discrete-event virtual-time
+//!   round over a contended network with churn/dropout/straggler
+//!   dynamics; in its all-off conformance configuration it reproduces
+//!   [`AnalyticTpd`] exactly (registry name `event-driven`).
 //! * [`EmulatedDelay`] — a calibrated analytic model of the emulated
 //!   docker testbed, built from the same throttle factors
 //!   [`crate::fl::emulation::EmulatedClock`] applies to real compute

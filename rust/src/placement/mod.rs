@@ -16,6 +16,8 @@
 //!   [`TabuPlacement`] and [`AdaptivePsoPlacement`].
 //! * [`Environment`] — scores placements: [`AnalyticTpd`] (the Eq. 6–7
 //!   TPD model over a simulated population, one dispatch per batch),
+//!   [`EventDrivenEnv`] (the [`crate::des`] virtual-time round over a
+//!   contended network with churn/dropout/straggler dynamics),
 //!   [`EmulatedDelay`] (the docker-substitute throttling model from
 //!   [`crate::fl::emulation`]), and [`crate::fl::LiveSession`] (a real
 //!   measured FL round through broker + agents).
@@ -40,6 +42,7 @@ mod sa;
 mod tabu;
 
 pub use adaptive::AdaptivePsoPlacement;
+pub use crate::des::EventDrivenEnv;
 pub use environment::{AnalyticTpd, EmulatedDelay, Environment};
 pub use ga::{GaConfig, GaPlacement};
 pub use pso_placement::PsoPlacement;
@@ -109,6 +112,9 @@ pub enum PlacementError {
     DuplicateClient { client: usize },
     /// Strategy name not present in [`registry`].
     UnknownStrategy { name: String },
+    /// Environment name not present in [`registry`] (see
+    /// [`registry::ENV_NAMES`]).
+    UnknownEnvironment { name: String },
     /// [`Optimizer::restore`] got a snapshot from a different strategy.
     StateMismatch { expected: String, got: String },
     /// The environment failed to produce a delay (e.g. a live round
@@ -133,6 +139,13 @@ impl fmt::Display for PlacementError {
                     f,
                     "unknown strategy {name:?}; valid strategies: {}",
                     registry::NAMES.join(", ")
+                )
+            }
+            PlacementError::UnknownEnvironment { name } => {
+                write!(
+                    f,
+                    "unknown environment {name:?}; valid environments: {}",
+                    registry::ENV_NAMES.join(", ")
                 )
             }
             PlacementError::StateMismatch { expected, got } => {

@@ -9,17 +9,24 @@
 //! `pso-adaptive` → `adaptive-pso`.
 
 use super::{
-    AdaptivePsoPlacement, GaConfig, GaPlacement, Optimizer, PlacementError, PsoPlacement,
-    RandomPlacement, RoundRobinPlacement, SaConfig, SaPlacement, SwarmOptimizer, TabuConfig,
-    TabuPlacement,
+    AdaptivePsoPlacement, AnalyticTpd, Environment, EventDrivenEnv, GaConfig, GaPlacement,
+    Optimizer, PlacementError, PsoPlacement, RandomPlacement, RoundRobinPlacement, SaConfig,
+    SaPlacement, SwarmOptimizer, TabuConfig, TabuPlacement,
 };
 use crate::configio::SimScenario;
+use crate::fitness::ClientAttrs;
+use crate::hierarchy::HierarchySpec;
 use crate::prng::Pcg32;
 use crate::pso::PsoConfig;
 
 /// Every registered strategy name, in presentation order.
 pub const NAMES: [&str; 8] =
     ["pso", "pso-batched", "random", "round-robin", "ga", "sa", "tabu", "adaptive-pso"];
+
+/// Every registered simulation-tier environment (delay oracle) name.
+/// Aliases: `analytic-tpd`/`tpd` → `analytic`, `des`/`event` →
+/// `event-driven`.
+pub const ENV_NAMES: [&str; 2] = ["analytic", "event-driven"];
 
 /// Resolve a (possibly aliased) name to its canonical registry key.
 pub fn canonical(name: &str) -> Result<&'static str, PlacementError> {
@@ -34,6 +41,34 @@ pub fn canonical(name: &str) -> Result<&'static str, PlacementError> {
         "adaptive-pso" | "pso-adaptive" => Ok("adaptive-pso"),
         other => Err(PlacementError::UnknownStrategy { name: other.to_string() }),
     }
+}
+
+/// Resolve a (possibly aliased) environment name to its canonical key.
+pub fn canonical_env(name: &str) -> Result<&'static str, PlacementError> {
+    match name {
+        "analytic" | "analytic-tpd" | "tpd" => Ok("analytic"),
+        "event-driven" | "des" | "event" => Ok("event-driven"),
+        other => Err(PlacementError::UnknownEnvironment { name: other.to_string() }),
+    }
+}
+
+/// Build a simulation-tier delay oracle over an already-sampled
+/// population: `analytic` is the closed-form Eq. 6–7 [`AnalyticTpd`],
+/// `event-driven` is the [`crate::des`] virtual-time simulator
+/// configured from the scenario's `[des]`/`[net]`/`[dynamics]`
+/// extensions. Every registry strategy runs against either through the
+/// same [`super::drive`] loop.
+pub fn build_sim_env(
+    name: &str,
+    sc: &SimScenario,
+    attrs: Vec<ClientAttrs>,
+) -> Result<Box<dyn Environment>, PlacementError> {
+    let spec = HierarchySpec::new(sc.depth, sc.width);
+    Ok(match canonical_env(name)? {
+        "analytic" => Box::new(AnalyticTpd::new(spec, attrs)),
+        "event-driven" => Box::new(EventDrivenEnv::from_scenario(sc, attrs)),
+        _ => unreachable!("canonical_env() covers every environment key"),
+    })
 }
 
 /// Build a simulation-mode optimizer for a scenario: `pso` is the
@@ -123,6 +158,45 @@ mod tests {
         // The error is actionable: it names the valid keys.
         for name in NAMES {
             assert!(msg.contains(name), "error should list {name:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn env_names_round_trip_and_reject_unknowns() {
+        for name in ENV_NAMES {
+            assert_eq!(canonical_env(name).unwrap(), name);
+        }
+        assert_eq!(canonical_env("des").unwrap(), "event-driven");
+        assert_eq!(canonical_env("tpd").unwrap(), "analytic");
+        let err = canonical_env("docker").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("event-driven"), "{msg}");
+    }
+
+    #[test]
+    fn every_environment_scores_every_strategy() {
+        use crate::fitness::ClientAttrs;
+        use crate::placement::drive;
+        let mut sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        sc.pso.particles = 3;
+        sc.pso.iterations = 4;
+        let mut rng = Pcg32::seed_from_u64(sc.seed);
+        let attrs = ClientAttrs::sample_population(
+            sc.client_count(),
+            sc.pspeed_range,
+            sc.memcap_range,
+            sc.mdatasize,
+            &mut rng,
+        );
+        for env_name in ENV_NAMES {
+            for name in NAMES {
+                let mut opt = build_sim(name, &sc, rng.split()).unwrap();
+                let mut env = build_sim_env(env_name, &sc, attrs.clone()).unwrap();
+                let out = drive(opt.as_mut(), env.as_mut(), 12)
+                    .unwrap_or_else(|e| panic!("{env_name}/{name}: {e}"));
+                assert_eq!(out.evaluations, 12);
+                assert!(out.best_delay.is_finite() && out.best_delay > 0.0);
+            }
         }
     }
 

@@ -56,6 +56,23 @@ pub trait Rng {
         lo + (hi - lo) * self.next_f64()
     }
 
+    /// Standard normal via Box–Muller (two uniform draws per sample).
+    fn normal(&mut self) -> f64 {
+        // 1 - u ∈ (0, 1] keeps the log argument away from zero.
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Lognormal multiplier `exp(sigma · N(0,1))` — median 1, used for
+    /// link jitter and speed drift. `sigma = 0` returns exactly 1.
+    fn lognormal(&mut self, sigma: f64) -> f64 {
+        if sigma == 0.0 {
+            return 1.0;
+        }
+        (sigma * self.normal()).exp()
+    }
+
     /// Fisher–Yates shuffle.
     fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -129,6 +146,33 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 20);
         assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn normal_moments_are_sane() {
+        let mut rng = Pcg32::seed_from_u64(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn lognormal_is_positive_with_unit_median() {
+        let mut rng = Pcg32::seed_from_u64(12);
+        let mut above = 0usize;
+        for _ in 0..10_000 {
+            let x = rng.lognormal(0.7);
+            assert!(x > 0.0 && x.is_finite());
+            if x > 1.0 {
+                above += 1;
+            }
+        }
+        // Median 1 ⇒ roughly half the draws land above 1.
+        assert!((4_000..6_000).contains(&above), "above={above}");
+        assert_eq!(rng.lognormal(0.0), 1.0);
     }
 
     #[test]

@@ -1,14 +1,18 @@
-//! Model checkpointing: persist/restore the flat parameter vector, so a
-//! deployment can resume training or serve a converged model.
+//! Model checkpointing: persist/restore the flat parameter vector plus
+//! the placement optimizer's transferable state, so a resumed session
+//! restores both its model *and* its search progress.
 //!
 //! Format (little-endian):
 //! ```text
 //! magic "RPCKPT1\n" | u32 header_len | header JSON | f32 params...
 //! ```
 //! The JSON header carries the parameter count plus free-form metadata
-//! (round, session, loss) for tooling.
+//! (round, session, loss, optimizer snapshot) for tooling. Headers
+//! written before the optimizer extension simply lack the `optimizer`
+//! key and load as `optimizer: None`.
 
 use crate::json::{self, Value};
+use crate::placement::{OptimizerState, Placement};
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
@@ -25,6 +29,10 @@ pub struct CheckpointMeta {
     pub session: String,
     /// Eval loss at capture time (NaN if unknown).
     pub loss: f64,
+    /// Placement-optimizer snapshot (strategy name + best observation),
+    /// restored into the same strategy via `Optimizer::restore`. `None`
+    /// for model-only checkpoints and pre-extension files.
+    pub optimizer: Option<OptimizerState>,
 }
 
 /// Write a checkpoint atomically (tmp + rename).
@@ -36,12 +44,24 @@ pub fn save(path: &Path, params: &[f32], meta: &CheckpointMeta) -> Result<()> {
             params.len()
         ));
     }
-    let header = json::to_string(&Value::object(vec![
+    let mut fields = vec![
         ("param_count", Value::from(meta.param_count)),
         ("round", Value::from(meta.round)),
         ("session", Value::from(meta.session.as_str())),
         ("loss", Value::Num(meta.loss)),
-    ]));
+    ];
+    if let Some(opt) = &meta.optimizer {
+        let mut o = vec![("strategy", Value::from(opt.name.as_str()))];
+        if let Some((p, d)) = &opt.best {
+            o.push((
+                "best_placement",
+                Value::Array(p.iter().map(|&c| Value::from(c)).collect()),
+            ));
+            o.push(("best_delay", Value::Num(*d)));
+        }
+        fields.push(("optimizer", Value::object(o)));
+    }
+    let header = json::to_string(&Value::object(fields));
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -93,6 +113,8 @@ pub fn load(path: &Path) -> Result<(Vec<f32>, CheckpointMeta)> {
             .unwrap_or("")
             .to_string(),
         loss: v.get("loss").and_then(Value::as_f64).unwrap_or(f64::NAN),
+        optimizer: parse_optimizer(v.get("optimizer"))
+            .map_err(|e| anyhow!("{path:?}: {e}"))?,
     };
     let mut bytes = Vec::new();
     f.read_to_end(&mut bytes)?;
@@ -110,6 +132,34 @@ pub fn load(path: &Path) -> Result<(Vec<f32>, CheckpointMeta)> {
     Ok((params, meta))
 }
 
+/// Decode the optional optimizer snapshot from the header: missing key
+/// ⇒ `None` (pre-extension checkpoints); present but malformed ⇒ error.
+fn parse_optimizer(v: Option<&Value>) -> Result<Option<OptimizerState>, String> {
+    let Some(v) = v else { return Ok(None) };
+    let name = v
+        .get("strategy")
+        .and_then(Value::as_str)
+        .ok_or("optimizer snapshot missing strategy name")?
+        .to_string();
+    let best = match v.get("best_placement") {
+        None => None,
+        Some(arr) => {
+            let ids = arr
+                .as_array()
+                .ok_or("optimizer best_placement is not an array")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("optimizer best_placement holds a non-integer"))
+                .collect::<Result<Vec<usize>, _>>()?;
+            let delay = v
+                .get("best_delay")
+                .and_then(Value::as_f64)
+                .ok_or("optimizer best_placement without best_delay")?;
+            Some((Placement::new(ids), delay))
+        }
+    };
+    Ok(Some(OptimizerState { name, best }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +174,7 @@ mod tests {
             round: 17,
             session: "test".into(),
             loss: 0.25,
+            optimizer: None,
         }
     }
 
@@ -158,6 +209,62 @@ mod tests {
     fn rejects_meta_mismatch() {
         let params: Vec<f32> = vec![0.0; 10];
         assert!(save(&tmp("mismatch"), &params, &meta(11)).is_err());
+    }
+
+    #[test]
+    fn optimizer_state_roundtrips() {
+        let params: Vec<f32> = vec![1.0; 16];
+        let mut m = meta(16);
+        m.optimizer = Some(OptimizerState {
+            name: "sa".into(),
+            best: Some((Placement::new(vec![4, 0, 9]), 12.625)),
+        });
+        let path = tmp("optstate");
+        save(&path, &params, &m).unwrap();
+        let (_, back) = load(&path).unwrap();
+        assert_eq!(back, m);
+        // Snapshot without a best observation (fresh optimizer).
+        m.optimizer = Some(OptimizerState { name: "pso".into(), best: None });
+        save(&path, &params, &m).unwrap();
+        let (_, back) = load(&path).unwrap();
+        assert_eq!(back.optimizer, m.optimizer);
+    }
+
+    #[test]
+    fn model_only_checkpoints_load_without_optimizer() {
+        // The pre-extension header shape: no "optimizer" key at all.
+        let path = tmp("no_opt");
+        save(&path, &[0.5; 4], &meta(4)).unwrap();
+        let (_, m) = load(&path).unwrap();
+        assert_eq!(m.optimizer, None);
+    }
+
+    #[test]
+    fn restored_state_feeds_a_live_optimizer() {
+        use crate::placement::{registry, Optimizer};
+        use crate::pso::PsoConfig;
+        // Run a strategy, snapshot it through a checkpoint file, restore
+        // into a fresh instance of the same strategy.
+        let mut opt = registry::build_live("tabu", 3, 12, PsoConfig::paper(), 5).unwrap();
+        for round in 0..30 {
+            let batch = opt.propose_batch(round);
+            let delays: Vec<f64> =
+                batch.iter().map(|p| p.iter().sum::<usize>() as f64 + 1.0).collect();
+            opt.observe_batch(&batch, &delays);
+        }
+        let mut m = meta(4);
+        m.optimizer = Some(opt.state());
+        let path = tmp("live_restore");
+        save(&path, &[0.0; 4], &m).unwrap();
+        let (_, back) = load(&path).unwrap();
+        let snapshot = back.optimizer.expect("optimizer persisted");
+
+        let mut fresh = registry::build_live("tabu", 3, 12, PsoConfig::paper(), 99).unwrap();
+        fresh.restore(&snapshot).expect("same-strategy restore");
+        assert_eq!(fresh.best(), opt.best());
+        // Wrong strategy is still rejected after the file roundtrip.
+        let mut other = registry::build_live("random", 3, 12, PsoConfig::paper(), 1).unwrap();
+        assert!(other.restore(&snapshot).is_err());
     }
 
     #[test]

@@ -7,8 +7,7 @@
 use super::SimTrace;
 use crate::configio::SimScenario;
 use crate::fitness::ClientAttrs;
-use crate::hierarchy::HierarchySpec;
-use crate::placement::{drive, registry, AnalyticTpd, PlacementError};
+use crate::placement::{drive, registry, PlacementError};
 use crate::prng::Pcg32;
 
 /// Output of one simulation run.
@@ -31,12 +30,16 @@ pub struct SimResult {
     pub evaluations: usize,
 }
 
-/// Run one simulation with any registered strategy against the analytic
-/// TPD environment, under the scenario's evaluation budget
+/// Run one simulation with any registered strategy against any
+/// registered simulation-tier environment (`analytic` or
+/// `event-driven`), under the scenario's evaluation budget
 /// (`pso.iterations × pso.particles`, the same budget the paper's swarm
 /// spends).
-pub fn run_sim_with(scenario: &SimScenario, strategy: &str) -> Result<SimResult, PlacementError> {
-    let spec = HierarchySpec::new(scenario.depth, scenario.width);
+pub fn run_sim_in(
+    scenario: &SimScenario,
+    strategy: &str,
+    env_name: &str,
+) -> Result<SimResult, PlacementError> {
     let client_count = scenario.client_count();
 
     let mut rng = Pcg32::seed_from_u64(scenario.seed);
@@ -52,10 +55,10 @@ pub fn run_sim_with(scenario: &SimScenario, strategy: &str) -> Result<SimResult,
     // sampling — exactly the legacy `run_sim` seeding, so PSO runs are
     // reproducible against the original pipeline.
     let mut opt = registry::build_sim(strategy, scenario, rng.split())?;
-    let mut env = AnalyticTpd::new(spec, attrs);
+    let mut env = registry::build_sim_env(env_name, scenario, attrs.clone())?;
 
     let budget = scenario.pso.iterations * scenario.pso.particles;
-    let outcome = drive(opt.as_mut(), &mut env, budget)?;
+    let outcome = drive(opt.as_mut(), env.as_mut(), budget)?;
 
     let (best_placement, best_tpd) = match opt.best() {
         Some((p, t)) => (p.into_vec(), t),
@@ -72,9 +75,16 @@ pub fn run_sim_with(scenario: &SimScenario, strategy: &str) -> Result<SimResult,
         best_placement,
         best_tpd,
         converged: opt.converged(),
-        attrs: env.attrs().to_vec(),
+        attrs,
         evaluations: outcome.evaluations,
     })
+}
+
+/// Run one simulation with any registered strategy against the
+/// scenario's configured environment (`sim.env`, `analytic` unless the
+/// scenario says otherwise).
+pub fn run_sim_with(scenario: &SimScenario, strategy: &str) -> Result<SimResult, PlacementError> {
+    run_sim_in(scenario, strategy, &scenario.env)
 }
 
 /// Run the Fig-3 simulation for one scenario with the paper's PSO.
@@ -85,6 +95,7 @@ pub fn run_sim(scenario: &SimScenario) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hierarchy::HierarchySpec;
 
     fn quick_scenario() -> SimScenario {
         let mut sc = SimScenario {
@@ -176,6 +187,39 @@ mod tests {
     fn unknown_strategy_is_a_helpful_error() {
         let err = run_sim_with(&quick_scenario(), "annealing").unwrap_err();
         assert!(err.to_string().contains("valid strategies"), "{err}");
+    }
+
+    #[test]
+    fn unknown_environment_is_a_helpful_error() {
+        let err = run_sim_in(&quick_scenario(), "pso", "docker").unwrap_err();
+        assert!(err.to_string().contains("valid environments"), "{err}");
+    }
+
+    #[test]
+    fn event_driven_env_is_selectable_everywhere_analytic_is() {
+        // `sim.env = "des"` (alias) routes the whole pipeline through the
+        // discrete-event oracle; in the default (conformance) scenario
+        // configuration its scores are the analytic Eq. 6–7 TPD, so the
+        // best placement's recomputed TPD matches the reported delay.
+        use crate::fitness::tpd;
+        use crate::hierarchy::Arrangement;
+        let mut sc = quick_scenario();
+        sc.env = "des".to_string();
+        for name in ["pso", "ga", "random"] {
+            let r = run_sim_with(&sc, name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.evaluations, sc.pso.iterations * sc.pso.particles);
+            let spec = HierarchySpec::new(sc.depth, sc.width);
+            let recomputed = tpd(
+                &Arrangement::from_position(spec, &r.best_placement, sc.client_count()),
+                &r.attrs,
+            )
+            .total;
+            assert!(
+                (recomputed - r.best_tpd).abs() < 1e-9,
+                "{name}: des best {} != analytic recompute {recomputed}",
+                r.best_tpd
+            );
+        }
     }
 
     #[test]

@@ -154,6 +154,73 @@ fn registry_strategies_run_the_sim_pipeline() {
 }
 
 // ---------------------------------------------------------------------
+// The discrete-event tier (des): conformance + fleet matrix.
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_driven_env_reproduces_analytic_batch_scores() {
+    // Acceptance: with zero jitter, no churn and zero link cost, the
+    // EventDrivenEnv must reproduce AnalyticTpd batch scores to 1e-9
+    // for identical placements, deterministically across two runs.
+    use repro::des::EventDrivenEnv;
+    let spec = HierarchySpec::new(3, 4); // the paper's Fig-3 shape
+    let dims = spec.dimensions();
+    let cc = dims + 32;
+    let mut rng = Pcg32::seed_from_u64(21);
+    let attrs = ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+    let batch: Vec<Placement> = (0..32)
+        .map(|_| Placement::new(rng.sample_distinct(cc, dims)))
+        .collect();
+
+    let mut analytic = AnalyticTpd::new(spec, attrs.clone());
+    let expect = analytic.eval_batch(&batch).unwrap();
+
+    let mut des = EventDrivenEnv::conformance(spec, attrs.clone());
+    let got = des.eval_batch(&batch).unwrap();
+    assert_eq!(got.len(), expect.len());
+    for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+        assert!(
+            (g - e).abs() < 1e-9,
+            "placement {i}: des {g} != analytic {e} (|Δ| = {})",
+            (g - e).abs()
+        );
+    }
+
+    // Same-seed determinism: a second, independently constructed run
+    // produces bit-identical scores.
+    let mut des2 = EventDrivenEnv::conformance(spec, attrs);
+    let got2 = des2.eval_batch(&batch).unwrap();
+    assert_eq!(got, got2, "two same-seed runs must agree exactly");
+}
+
+#[test]
+fn fleet_matrix_runs_dynamic_scenarios_deterministically() {
+    // A miniature `repro fleet`: built-in-catalog-style scenarios
+    // (static + churn + dropout + straggler) × three strategies, run
+    // twice with different thread counts — identical cells both times.
+    use repro::des::{builtin_catalog, run_fleet, standings, FleetConfig};
+    let scenarios: Vec<_> = builtin_catalog()
+        .into_iter()
+        .filter(|s| s.name.starts_with("tiny") || s.name.starts_with("paper"))
+        .collect();
+    assert!(scenarios.len() >= 8);
+    let strategies: Vec<String> =
+        ["pso", "random", "round-robin"].iter().map(|s| s.to_string()).collect();
+    let cfg = |threads| FleetConfig { threads, evals: Some(15) };
+    let a = run_fleet(&scenarios, &strategies, &cfg(1)).unwrap();
+    let b = run_fleet(&scenarios, &strategies, &cfg(4)).unwrap();
+    assert_eq!(a, b, "fleet results must not depend on thread count");
+    assert_eq!(a.len(), scenarios.len() * strategies.len());
+    assert!(a.iter().all(|c| c.best_delay.is_finite() && c.best_delay > 0.0));
+    let table = standings(&a);
+    assert_eq!(table.len(), strategies.len());
+    let wins: usize = table.iter().map(|s| s.wins).sum();
+    // Competition ranking: at least one winner per scenario (ties share
+    // rank 1 and add wins).
+    assert!(wins >= scenarios.len(), "wins {wins} < {}", scenarios.len());
+}
+
+// ---------------------------------------------------------------------
 // Failure injection on the messaging plane (no PJRT required).
 // ---------------------------------------------------------------------
 

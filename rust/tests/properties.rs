@@ -2,6 +2,7 @@
 //! hierarchy arithmetic, arrangement/rearrangement, TPD, PSO state,
 //! placement strategies, JSON, codecs.
 
+use repro::des::{simulate_round, NetworkModel, RoundRealization, SyncMode};
 use repro::fitness::{tpd, tpd_with_memory, ClientAttrs};
 use repro::fl::codec::{ModelCodec, ModelUpdate};
 use repro::hierarchy::{Arrangement, HierarchySpec, Role};
@@ -106,6 +107,80 @@ fn prop_tpd_swapping_fast_root_helps() {
             &attrs,
         );
         assert!(fast.total <= slow.total + 1e-9);
+    });
+}
+
+#[test]
+fn prop_event_driven_round_conforms_across_shapes() {
+    // For every hierarchy shape: the free-network, static, level-barrier
+    // discrete-event round equals the closed-form Eq. 6–7 TPD, and the
+    // pipelined mode is never slower.
+    forall("des round matches analytic TPD", 80, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..30);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        let expect = tpd(&arr, &attrs).total;
+        let net = NetworkModel::zero_cost(cc);
+        let real = RoundRealization::all_on(cc, 0);
+        let barrier = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier);
+        assert!(
+            (barrier.tpd - expect).abs() < 1e-9,
+            "des {} != analytic {expect}",
+            barrier.tpd
+        );
+        let piped = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::Pipelined);
+        assert!(piped.tpd <= barrier.tpd + 1e-12);
+        assert!(piped.events > 0 && barrier.events > 0);
+    });
+}
+
+#[test]
+fn prop_validator_fallback_path_beyond_word_size() {
+    // client_count > 64 always takes the Vec<bool> branch of
+    // `validate_placement` — only the u64-bitmask fast path runs at
+    // paper scale, so exercise every error class here.
+    forall("validate_placement >64-client fallback", 200, |g| {
+        let cc = 65 + g.usize_in(0..400);
+        let dims = 1 + g.usize_in(0..40);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..1 << 40));
+        let pos = rng.sample_distinct(cc, dims);
+        assert_eq!(validate_placement(&pos, dims, cc), Ok(()));
+        if dims >= 2 {
+            let mut dup = pos.clone();
+            dup[dims - 1] = dup[0];
+            assert_eq!(
+                validate_placement(&dup, dims, cc),
+                Err(PlacementError::DuplicateClient { client: dup[0] })
+            );
+        }
+        let mut oob = pos.clone();
+        oob[dims - 1] = cc + g.usize_in(0..10);
+        assert_eq!(
+            validate_placement(&oob, dims, cc),
+            Err(PlacementError::ClientOutOfRange { client: oob[dims - 1], client_count: cc })
+        );
+        assert_eq!(
+            validate_placement(&pos[..dims - 1], dims, cc),
+            Err(PlacementError::WrongArity { expected: dims, got: dims - 1 })
+        );
+    });
+}
+
+#[test]
+fn prop_validator_paths_agree_on_shared_domain() {
+    // Any placement over ids < 64 can be validated by both branches
+    // (bitmask at cc = 64, fallback at cc > 64); verdicts — including
+    // which duplicate is reported first — must be identical.
+    forall("bitmask and fallback validators agree", 300, |g| {
+        let dims = 1 + g.usize_in(0..12);
+        let p: Vec<usize> = (0..dims).map(|_| g.usize_in(0..64)).collect();
+        let bitmask = validate_placement(&p, dims, 64);
+        let fallback = validate_placement(&p, dims, 65 + g.usize_in(0..200));
+        assert_eq!(bitmask, fallback, "paths disagree on {p:?}");
     });
 }
 
