@@ -45,8 +45,10 @@ fn main() {
         scenarios.len(),
         scenarios.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", ")
     );
-    let cells = run_fleet(&scenarios, &strategies, &FleetConfig { threads: 0, evals: Some(60) })
-        .expect("fleet run");
+    // Three replicates per cell: the standings report replicate means
+    // ± 95% CIs and a paired sign test of the leader vs the field.
+    let cfg = FleetConfig { threads: 0, evals: Some(60), replicates: 3 };
+    let cells = run_fleet(&scenarios, &strategies, &cfg).expect("fleet run");
 
     // --- 3. Ranked standings (and the CSV `repro fleet` writes). ---
     report_fleet(&cells, None).expect("report");

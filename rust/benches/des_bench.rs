@@ -77,6 +77,7 @@ fn main() {
             bandwidth_range: (5.0, 50.0),
             agg_ingress: 500.0,
             jitter_sigma: 0.5,
+            ..NetSpec::default()
         };
         dynamic.des.dynamics = DynamicsSpec {
             dropout_prob: 0.1,
@@ -86,6 +87,7 @@ fn main() {
             straggler_frac: 0.2,
             straggler_slowdown: 4.0,
             drift_sigma: 0.05,
+            ..DynamicsSpec::default()
         };
         let mut des_dyn = EventDrivenEnv::from_scenario(&dynamic, attrs);
         b.iter_throughput(&format!("des-dynamic/batch10 cc={label}"), || {

@@ -164,13 +164,19 @@ mod tests {
 
     #[test]
     fn fleet_flags_parse() {
-        let a = parse("fleet --scenarios builtin --strategies pso,random --threads 8 --evals 40");
+        let a = parse(
+            "fleet --scenarios builtin --filter tiny --strategies pso,random \
+             --threads 8 --evals 40 --replicates 5",
+        );
         assert_eq!(a.subcommand.as_deref(), Some("fleet"));
         assert_eq!(a.str_flag("scenarios", "builtin"), "builtin");
+        assert_eq!(a.flag("filter"), Some("tiny"));
         assert_eq!(a.usize_flag("threads", 0).unwrap(), 8);
+        assert_eq!(a.usize_flag("replicates", 1).unwrap(), 5);
         assert_eq!(a.opt_usize_flag("evals").unwrap(), Some(40));
         assert_eq!(a.opt_usize_flag("absent").unwrap(), None);
         assert!(parse("fleet --evals x").opt_usize_flag("evals").is_err());
+        assert!(parse("fleet --replicates x").usize_flag("replicates", 1).is_err());
     }
 
     #[test]

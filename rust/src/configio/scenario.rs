@@ -159,6 +159,14 @@ impl SimScenario {
         );
         n.agg_ingress = get_f64("net", "agg_ingress", n.agg_ingress)?;
         n.jitter_sigma = get_f64("net", "jitter_sigma", n.jitter_sigma)?;
+        n.up_mult_range = (
+            get_f64("net", "up_min", n.up_mult_range.0)?,
+            get_f64("net", "up_max", n.up_mult_range.1)?,
+        );
+        n.down_mult_range = (
+            get_f64("net", "down_min", n.down_mult_range.0)?,
+            get_f64("net", "down_max", n.down_mult_range.1)?,
+        );
         let d = &mut sc.des.dynamics;
         d.dropout_prob = get_f64("dynamics", "dropout", d.dropout_prob)?;
         d.churn_leave_prob = get_f64("dynamics", "leave", d.churn_leave_prob)?;
@@ -167,6 +175,11 @@ impl SimScenario {
         d.straggler_frac = get_f64("dynamics", "straggler_frac", d.straggler_frac)?;
         d.straggler_slowdown = get_f64("dynamics", "straggler_slowdown", d.straggler_slowdown)?;
         d.drift_sigma = get_f64("dynamics", "drift", d.drift_sigma)?;
+        d.corr_fail_prob = get_f64("dynamics", "corr_fail_prob", d.corr_fail_prob)?;
+        d.corr_fail_frac = get_f64("dynamics", "corr_fail_frac", d.corr_fail_frac)?;
+        d.partition_prob = get_f64("dynamics", "partition_prob", d.partition_prob)?;
+        d.partition_frac = get_f64("dynamics", "partition_frac", d.partition_frac)?;
+        d.partition_rounds = get_usize("dynamics", "partition_rounds", d.partition_rounds)?;
         if sc.depth == 0 || sc.width == 0 {
             return Err("sim.depth and sim.width must be >= 1".into());
         }
@@ -195,6 +208,29 @@ pub struct NetSpec {
     /// Lognormal jitter sigma applied per transfer to the link latency
     /// (0.0 = deterministic links).
     pub jitter_sigma: f64,
+    /// Bandwidth asymmetry: per-client *upload* multiplier range applied
+    /// to the sampled base bandwidth (TOML `up_min`/`up_max`). `(0, 0)`
+    /// disables the mechanism (multiplier 1). Enabled ranges must be
+    /// strictly positive.
+    pub up_mult_range: (f64, f64),
+    /// Bandwidth asymmetry: per-client *download* multiplier range
+    /// (TOML `down_min`/`down_max`). A client's download capacity caps
+    /// the ingress service rate whenever it serves as an aggregator,
+    /// so asymmetric links make placement quality download-sensitive.
+    /// `(0, 0)` disables (unlimited downlink; only `agg_ingress` caps).
+    pub down_mult_range: (f64, f64),
+}
+
+impl NetSpec {
+    /// Whether the upload-multiplier mechanism is switched on.
+    pub fn up_asymmetry_enabled(&self) -> bool {
+        self.up_mult_range != (0.0, 0.0)
+    }
+
+    /// Whether the download-multiplier mechanism is switched on.
+    pub fn down_asymmetry_enabled(&self) -> bool {
+        self.down_mult_range != (0.0, 0.0)
+    }
 }
 
 /// Dynamic-behavior parameters for the discrete-event scenario catalog.
@@ -219,6 +255,23 @@ pub struct DynamicsSpec {
     /// Per-round lognormal drift sigma on each client's effective speed
     /// (a bounded random walk; 0.0 = stationary speeds).
     pub drift_sigma: f64,
+    /// Correlated failures: per-round probability that a *region* of
+    /// clients (a contiguous id block — think one rack or one edge
+    /// site) fails together for that round (TOML `corr_fail_prob`).
+    pub corr_fail_prob: f64,
+    /// Fraction of the population inside the failing region (TOML
+    /// `corr_fail_frac`). Must be in (0, 1] when the mechanism is on.
+    pub corr_fail_frac: f64,
+    /// Network partition: per-round probability that a partition event
+    /// *starts* (TOML `partition_prob`). While one is active no new one
+    /// starts.
+    pub partition_prob: f64,
+    /// Fraction of the population cut off by a partition (TOML
+    /// `partition_frac`). Must be in (0, 1] when the mechanism is on.
+    pub partition_frac: f64,
+    /// Rounds a partition lasts once started (TOML `partition_rounds`).
+    /// Must be >= 1 when the mechanism is on.
+    pub partition_rounds: usize,
 }
 
 impl Default for DynamicsSpec {
@@ -231,6 +284,11 @@ impl Default for DynamicsSpec {
             straggler_frac: 0.0,
             straggler_slowdown: 1.0,
             drift_sigma: 0.0,
+            corr_fail_prob: 0.0,
+            corr_fail_frac: 0.0,
+            partition_prob: 0.0,
+            partition_frac: 0.0,
+            partition_rounds: 0,
         }
     }
 }
@@ -243,6 +301,8 @@ impl DynamicsSpec {
             && self.churn_join_prob == 0.0
             && self.straggler_prob == 0.0
             && self.drift_sigma == 0.0
+            && self.corr_fail_prob == 0.0
+            && self.partition_prob == 0.0
     }
 }
 
@@ -281,11 +341,28 @@ impl DesSpec {
         prob("join", self.dynamics.churn_join_prob)?;
         prob("straggler_prob", self.dynamics.straggler_prob)?;
         prob("straggler_frac", self.dynamics.straggler_frac)?;
+        prob("corr_fail_prob", self.dynamics.corr_fail_prob)?;
+        prob("corr_fail_frac", self.dynamics.corr_fail_frac)?;
+        prob("partition_prob", self.dynamics.partition_prob)?;
+        prob("partition_frac", self.dynamics.partition_frac)?;
         if self.dynamics.straggler_slowdown < 1.0 {
             return Err(format!(
                 "dynamics.straggler_slowdown: {} must be >= 1",
                 self.dynamics.straggler_slowdown
             ));
+        }
+        if self.dynamics.corr_fail_prob > 0.0 && self.dynamics.corr_fail_frac == 0.0 {
+            return Err("dynamics.corr_fail_frac: must be > 0 when corr_fail_prob is".into());
+        }
+        if self.dynamics.partition_prob > 0.0 {
+            if self.dynamics.partition_frac == 0.0 {
+                return Err("dynamics.partition_frac: must be > 0 when partition_prob is".into());
+            }
+            if self.dynamics.partition_rounds == 0 {
+                return Err(
+                    "dynamics.partition_rounds: must be >= 1 when partition_prob is > 0".into()
+                );
+            }
         }
         for (name, (lo, hi)) in [
             ("net.latency", self.net.latency_range_s),
@@ -293,6 +370,18 @@ impl DesSpec {
         ] {
             if lo < 0.0 || hi < lo {
                 return Err(format!("{name}: bad range ({lo}, {hi})"));
+            }
+        }
+        for (name, range, enabled) in [
+            ("net.up_min/up_max", self.net.up_mult_range, self.net.up_asymmetry_enabled()),
+            ("net.down_min/down_max", self.net.down_mult_range, self.net.down_asymmetry_enabled()),
+        ] {
+            if enabled && (range.0 <= 0.0 || range.1 < range.0) {
+                return Err(format!(
+                    "{name}: multiplier range ({}, {}) must be positive with max >= min \
+                     (or (0, 0) to disable)",
+                    range.0, range.1
+                ));
             }
         }
         if self.net.agg_ingress < 0.0 || self.net.jitter_sigma < 0.0 || self.train_unit < 0.0 {
@@ -501,6 +590,78 @@ drift = 0.05
         assert!(sc.des.dynamics.is_static());
         assert!(!sc.des.pipelined);
         assert_eq!(sc.des.train_unit, 0.0);
+    }
+
+    #[test]
+    fn toml_new_mechanism_keys_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+[sim]
+depth = 2
+width = 2
+env = "event-driven"
+
+[net]
+bandwidth_min = 5.0
+bandwidth_max = 50.0
+up_min = 0.5
+up_max = 1.0
+down_min = 0.25
+down_max = 1.0
+
+[dynamics]
+corr_fail_prob = 0.2
+corr_fail_frac = 0.3
+partition_prob = 0.1
+partition_frac = 0.25
+partition_rounds = 3
+"#,
+        )
+        .unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.des.net.up_mult_range, (0.5, 1.0));
+        assert_eq!(sc.des.net.down_mult_range, (0.25, 1.0));
+        assert!(sc.des.net.up_asymmetry_enabled() && sc.des.net.down_asymmetry_enabled());
+        assert_eq!(sc.des.dynamics.corr_fail_prob, 0.2);
+        assert_eq!(sc.des.dynamics.corr_fail_frac, 0.3);
+        assert_eq!(sc.des.dynamics.partition_prob, 0.1);
+        assert_eq!(sc.des.dynamics.partition_frac, 0.25);
+        assert_eq!(sc.des.dynamics.partition_rounds, 3);
+        assert!(!sc.des.dynamics.is_static());
+    }
+
+    #[test]
+    fn toml_defaults_leave_new_mechanisms_off() {
+        let doc = TomlDoc::parse("[sim]\ndepth = 2\n").unwrap();
+        let sc = SimScenario::from_toml(&doc).unwrap();
+        assert!(!sc.des.net.up_asymmetry_enabled());
+        assert!(!sc.des.net.down_asymmetry_enabled());
+        assert_eq!(sc.des.dynamics.corr_fail_prob, 0.0);
+        assert_eq!(sc.des.dynamics.partition_prob, 0.0);
+        assert!(sc.des.dynamics.is_static());
+    }
+
+    #[test]
+    fn toml_rejects_bad_new_mechanism_parameters() {
+        // Partition with no duration.
+        let doc =
+            TomlDoc::parse("[dynamics]\npartition_prob = 0.2\npartition_frac = 0.3\n").unwrap();
+        let err = SimScenario::from_toml(&doc).unwrap_err();
+        assert!(err.contains("partition_rounds"), "{err}");
+        // Correlated failure with no region size.
+        let doc = TomlDoc::parse("[dynamics]\ncorr_fail_prob = 0.2\n").unwrap();
+        let err = SimScenario::from_toml(&doc).unwrap_err();
+        assert!(err.contains("corr_fail_frac"), "{err}");
+        // Out-of-range probability.
+        let doc = TomlDoc::parse("[dynamics]\npartition_prob = 1.5\n").unwrap();
+        assert!(SimScenario::from_toml(&doc).is_err());
+        // Zero-crossing asymmetry multiplier range.
+        let doc = TomlDoc::parse("[net]\nup_min = 0.0\nup_max = 2.0\n").unwrap();
+        let err = SimScenario::from_toml(&doc).unwrap_err();
+        assert!(err.contains("up_min"), "{err}");
+        // Inverted range.
+        let doc = TomlDoc::parse("[net]\ndown_min = 1.0\ndown_max = 0.5\n").unwrap();
+        assert!(SimScenario::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -1,16 +1,37 @@
-//! The `repro fleet` runner: a scenario × strategy matrix executed
-//! across OS threads, every cell driving one registry optimizer against
-//! the event-driven oracle in virtual time. Results are deterministic
-//! per seed and independent of the thread count — each cell derives all
-//! of its randomness from its scenario's seed, and cells are ranked and
-//! reported in a fixed order after the join.
+//! The `repro fleet` runner: a scenario × strategy × replicate matrix
+//! executed across OS threads, every cell driving one registry optimizer
+//! against the event-driven oracle in virtual time. Results are
+//! deterministic per seed and independent of the thread count — each
+//! job derives all of its randomness from its scenario's seed (plus a
+//! per-replicate derivation), and cells are ranked and reported in a
+//! fixed order after the join.
+//!
+//! ## Statistics
+//!
+//! A single seed per cell makes the standings a lottery: one lucky
+//! dynamics realization can flip who "wins" a scenario. With
+//! `--replicates R` every (scenario, strategy) cell is scored `R` times
+//! under `R` *derived* seeds. The seed for replicate `r` depends only on
+//! the scenario (not the strategy), so within a scenario all strategies
+//! face the identical population, network and dynamics *process* per
+//! replicate — paired trials. The pairing is evaluation-exact between
+//! strategies that propose one candidate per round (every registry
+//! strategy except `ga` and `pso-batched`): [`EventDrivenEnv`] advances
+//! its realization once per `eval_batch`, so cohort-batching optimizers
+//! see the same realization sequence per *batch* rather than per
+//! evaluation. Cells then report the replicate mean ± a
+//! 95% Student-t confidence interval, per-scenario ranks are computed on
+//! replicate means, and [`significance_matrix`] runs a paired sign test
+//! of the best-ranked strategy against every other over the
+//! (scenario, replicate) pairs.
 
 use super::round::EventDrivenEnv;
 use super::scenarios::NamedScenario;
 use crate::fitness::ClientAttrs;
-use crate::metrics::{rank_ascending, CsvWriter};
+use crate::log_warn;
+use crate::metrics::{mean_ci, paired_sign_test, rank_ascending, CsvWriter, SignTest};
 use crate::placement::{drive, registry, PlacementError};
-use crate::prng::Pcg32;
+use crate::prng::{Pcg32, SplitMix64};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -20,39 +41,83 @@ use std::sync::Mutex;
 pub struct FleetConfig {
     /// Worker OS threads (0 = one per available core).
     pub threads: usize,
-    /// Evaluation budget override per cell (None = the scenario's
+    /// Evaluation budget override per replicate (None = the scenario's
     /// `pso.iterations × pso.particles`).
     pub evals: Option<usize>,
+    /// Replicates per (scenario, strategy) cell (0 and 1 both mean a
+    /// single run). Replicate seeds are derived from the scenario seed
+    /// only, so all strategies within a scenario share each replicate's
+    /// dynamics realization.
+    pub replicates: usize,
 }
 
-/// One scored (scenario, strategy) cell of the matrix.
+/// One (scenario, strategy) cell of the matrix: a replicate set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetCell {
     pub scenario: String,
     pub strategy: String,
     pub clients: usize,
     pub slots: usize,
+    /// Evaluations spent per replicate (equal across replicates).
     pub evaluations: usize,
-    /// Best virtual-time round delay the strategy found.
+    /// Best virtual-time round delay found, one entry per replicate in
+    /// replicate order.
+    pub replicate_delays: Vec<f64>,
+    /// Mean of `replicate_delays` — the cell's ranking statistic.
     pub best_delay: f64,
-    /// Mean delay across the whole search (exploration cost).
+    /// Half-width of the 95% Student-t CI over `replicate_delays`
+    /// (0.0 for a single replicate).
+    pub ci95: f64,
+    /// Mean delay across the whole search (exploration cost), averaged
+    /// over replicates.
     pub mean_delay: f64,
-    /// Events the simulator fired for this cell.
+    /// Events the simulator fired for this cell, totalled over
+    /// replicates.
     pub events: u64,
     /// Rank of `best_delay` among the scenario's strategies (1 = won).
     pub rank: usize,
 }
 
-/// Run one cell: seed-derived population + dynamics, registry optimizer,
-/// generic `drive` loop against the scenario's configured delay oracle
-/// (`sim.env`; the built-in catalog uses `event-driven` throughout, but
-/// user TOML scenarios may pick `analytic`).
-fn run_cell(
+/// One replicate's raw result (pre-aggregation).
+#[derive(Debug, Clone)]
+struct ReplicateRun {
+    strategy: String,
+    evaluations: usize,
+    best_delay: f64,
+    mean_delay: f64,
+    events: u64,
+}
+
+/// Derive the seed for replicate `r` of a scenario. Replicate 0 keeps
+/// the scenario's own seed, so `--replicates 1` reproduces the
+/// single-run fleet byte for byte; later replicates walk a SplitMix64
+/// stream salted off the scenario seed. Strategy-independent by
+/// construction: candidates within a scenario compete under identical
+/// realizations each replicate.
+fn replicate_seed(base: u64, r: usize) -> u64 {
+    if r == 0 {
+        return base;
+    }
+    let mut sm = SplitMix64::new(base ^ 0xF1EE_7C0D_ED5E_ED5Eu64);
+    let mut seed = 0u64;
+    for _ in 0..r {
+        seed = sm.next();
+    }
+    seed
+}
+
+/// Run one replicate: seed-derived population + dynamics, registry
+/// optimizer, generic `drive` loop against the scenario's configured
+/// delay oracle (`sim.env`; the built-in catalog uses `event-driven`
+/// throughout, but user TOML scenarios may pick `analytic`).
+fn run_replicate(
     ns: &NamedScenario,
     strategy: &str,
     evals: Option<usize>,
-) -> Result<FleetCell, PlacementError> {
-    let sc = &ns.sim;
+    seed: u64,
+) -> Result<ReplicateRun, PlacementError> {
+    let mut sc = ns.sim.clone();
+    sc.seed = seed;
     let cc = sc.client_count();
     // Same seeding discipline as `sim::run_sim_with`: population first,
     // optimizer stream split off after.
@@ -64,15 +129,15 @@ fn run_cell(
         sc.mdatasize,
         &mut rng,
     );
-    let mut opt = registry::build_sim(strategy, sc, rng.split())?;
+    let mut opt = registry::build_sim(strategy, &sc, rng.split())?;
     let budget = evals.unwrap_or(sc.pso.iterations * sc.pso.particles).max(1);
     // The event-driven oracle is built concretely to keep its event
     // counter; any other registry environment goes through the factory.
     let (out, events) = if registry::canonical_env(&sc.env)? == "event-driven" {
-        let mut env = EventDrivenEnv::from_scenario(sc, attrs);
+        let mut env = EventDrivenEnv::from_scenario(&sc, attrs);
         (drive(opt.as_mut(), &mut env, budget)?, env.events_fired)
     } else {
-        let mut env = registry::build_sim_env(&sc.env, sc, attrs)?;
+        let mut env = registry::build_sim_env(&sc.env, &sc, attrs)?;
         (drive(opt.as_mut(), env.as_mut(), budget)?, 0)
     };
     let mean_delay = if out.stats.is_empty() {
@@ -80,22 +145,18 @@ fn run_cell(
     } else {
         out.stats.iter().map(|s| s.mean).sum::<f64>() / out.stats.len() as f64
     };
-    Ok(FleetCell {
-        scenario: ns.name.clone(),
+    Ok(ReplicateRun {
         strategy: opt.name().to_string(),
-        clients: cc,
-        slots: sc.dimensions(),
         evaluations: out.evaluations,
         best_delay: out.best_delay,
         mean_delay,
         events,
-        rank: 0,
     })
 }
 
-/// Run the full matrix. Cells are scheduled over `cfg.threads` workers;
-/// the returned vector is ordered scenario-major (catalog order) with
-/// per-scenario ranks filled in.
+/// Run the full matrix. Replicate jobs are scheduled over `cfg.threads`
+/// workers; the returned vector is ordered scenario-major (catalog
+/// order) with per-scenario ranks (on replicate means) filled in.
 pub fn run_fleet(
     scenarios: &[NamedScenario],
     strategies: &[String],
@@ -109,14 +170,29 @@ pub fn run_fleet(
             "fleet matrix is empty: need at least one scenario and one strategy".into(),
         ));
     }
+    // Canonicalize and reject duplicates: two entries that resolve to
+    // the same optimizer (e.g. `uniform` and `round-robin`) would
+    // double-count that strategy's cells and desync the paired
+    // significance series.
+    let mut canon: Vec<&'static str> = Vec::with_capacity(strategies.len());
     for s in strategies {
-        registry::canonical(s)?;
+        let c = registry::canonical(s)?;
+        if canon.contains(&c) {
+            return Err(PlacementError::DuplicateStrategy { name: s.clone() });
+        }
+        canon.push(c);
     }
     for ns in scenarios {
         registry::canonical_env(&ns.sim.env)?;
     }
-    let jobs: Vec<(usize, usize)> = (0..scenarios.len())
-        .flat_map(|si| (0..strategies.len()).map(move |ti| (si, ti)))
+    let replicates = cfg.replicates.max(1);
+    // Job j = ((si · |strategies|) + ti) · R + r — replicate-level
+    // parallelism, so even a two-cell matrix saturates the workers.
+    let jobs: Vec<(usize, usize, usize)> = (0..scenarios.len())
+        .flat_map(|si| {
+            (0..strategies.len())
+                .flat_map(move |ti| (0..replicates).map(move |r| (si, ti, r)))
+        })
         .collect();
     let threads = if cfg.threads == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -125,25 +201,52 @@ pub fn run_fleet(
     }
     .min(jobs.len());
 
-    type CellSlot = Option<Result<FleetCell, PlacementError>>;
+    type RunSlot = Option<Result<ReplicateRun, PlacementError>>;
     let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<CellSlot>> = Mutex::new(vec![None; jobs.len()]);
+    let slots: Mutex<Vec<RunSlot>> = Mutex::new(vec![None; jobs.len()]);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
                 let j = next.fetch_add(1, Ordering::Relaxed);
-                let Some(&(si, ti)) = jobs.get(j) else { break };
-                let cell = run_cell(&scenarios[si], &strategies[ti], cfg.evals);
-                slots.lock().expect("fleet results lock")[j] = Some(cell);
+                let Some(&(si, ti, r)) = jobs.get(j) else { break };
+                let ns = &scenarios[si];
+                let seed = replicate_seed(ns.sim.seed, r);
+                let run = run_replicate(ns, &strategies[ti], cfg.evals, seed);
+                slots.lock().expect("fleet results lock")[j] = Some(run);
             });
         }
     });
 
-    let mut cells = Vec::with_capacity(jobs.len());
+    let mut runs = Vec::with_capacity(jobs.len());
     for slot in slots.into_inner().expect("fleet results lock") {
-        cells.push(slot.expect("every job ran")?);
+        runs.push(slot.expect("every job ran")?);
     }
-    // Rank strategies within each scenario (cells are scenario-major).
+    // Aggregate replicate runs into cells (jobs are replicate-minor).
+    let mut cells = Vec::with_capacity(scenarios.len() * strategies.len());
+    for (si, ns) in scenarios.iter().enumerate() {
+        for ti in 0..strategies.len() {
+            let base = ((si * strategies.len()) + ti) * replicates;
+            let set = &runs[base..base + replicates];
+            let replicate_delays: Vec<f64> = set.iter().map(|x| x.best_delay).collect();
+            let ci = mean_ci(&replicate_delays);
+            debug_assert!(set.iter().all(|x| x.evaluations == set[0].evaluations));
+            cells.push(FleetCell {
+                scenario: ns.name.clone(),
+                strategy: set[0].strategy.clone(),
+                clients: ns.sim.client_count(),
+                slots: ns.sim.dimensions(),
+                evaluations: set[0].evaluations,
+                best_delay: ci.mean,
+                ci95: ci.half_width,
+                mean_delay: set.iter().map(|x| x.mean_delay).sum::<f64>() / replicates as f64,
+                events: set.iter().map(|x| x.events).sum(),
+                replicate_delays,
+                rank: 0,
+            });
+        }
+    }
+    // Rank strategies within each scenario on their replicate means
+    // (cells are scenario-major).
     for chunk in cells.chunks_mut(strategies.len()) {
         let delays: Vec<f64> = chunk.iter().map(|c| c.best_delay).collect();
         for (cell, rank) in chunk.iter_mut().zip(rank_ascending(&delays)) {
@@ -157,16 +260,28 @@ pub fn run_fleet(
 #[derive(Debug, Clone, PartialEq)]
 pub struct StrategyStanding {
     pub strategy: String,
-    /// Mean rank across scenarios (1.0 = won everything).
+    /// Mean rank across scenarios (1.0 = won everything), ranks taken
+    /// on replicate means.
     pub mean_rank: f64,
     /// Scenarios won outright.
     pub wins: usize,
     /// Geometric-mean of `best_delay / scenario winner's best_delay`
     /// (1.0 = always optimal; 2.0 = on average 2× the winner).
     pub regret: f64,
+    /// Mean normalized delay: every (scenario, replicate) delay divided
+    /// by its scenario winner's mean delay, averaged — the arithmetic,
+    /// CI-carrying cousin of `regret` (scale-free across the catalog's
+    /// 7-to-10k-client spread).
+    pub mean_ratio: f64,
+    /// Half-width of the 95% Student-t CI on `mean_ratio`.
+    pub ratio_ci: f64,
 }
 
 /// Aggregate cells into the final standings, best mean rank first.
+/// Scenarios whose winner delay is zero or non-finite cannot anchor a
+/// meaningful ratio — `ln(0)` would poison the geometric mean into
+/// `-inf`/NaN and silently corrupt the sort — so those terms contribute
+/// a neutral regret of 1.0 and a warning is logged instead.
 pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
     let mut order: Vec<&str> = Vec::new();
     for c in cells {
@@ -174,11 +289,20 @@ pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
             order.push(&c.strategy);
         }
     }
-    // Scenario winners for the regret ratio.
+    // Scenario winners (on replicate means) for the regret ratio.
     let mut winner: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
     for c in cells {
         let w = winner.entry(&c.scenario).or_insert(f64::INFINITY);
         *w = w.min(c.best_delay);
+    }
+    for (scenario, &w) in &winner {
+        if !(w.is_finite() && w > 0.0) {
+            log_warn!(
+                "fleet",
+                "scenario {scenario:?} winner delay {w} is unusable as a regret anchor; \
+                 treating its regret terms as 1.0"
+            );
+        }
     }
     let mut out: Vec<StrategyStanding> = order
         .iter()
@@ -189,14 +313,40 @@ pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
             let wins = mine.iter().filter(|c| c.rank == 1).count();
             let log_regret = mine
                 .iter()
-                .map(|c| (c.best_delay / winner[c.scenario.as_str()]).ln())
+                .map(|c| {
+                    let ratio = c.best_delay / winner[c.scenario.as_str()];
+                    // Guard: zero/NaN winner (or cell) delays collapse to
+                    // the neutral ratio instead of poisoning the mean.
+                    if ratio.is_finite() && ratio > 0.0 {
+                        ratio.ln()
+                    } else {
+                        0.0
+                    }
+                })
                 .sum::<f64>()
                 / n;
+            let ratios: Vec<f64> = mine
+                .iter()
+                .flat_map(|c| {
+                    let w = winner[c.scenario.as_str()];
+                    c.replicate_delays.iter().map(move |&d| {
+                        let r = d / w;
+                        if r.is_finite() && r > 0.0 {
+                            r
+                        } else {
+                            1.0
+                        }
+                    })
+                })
+                .collect();
+            let ci = mean_ci(&ratios);
             StrategyStanding {
                 strategy: s.to_string(),
                 mean_rank,
                 wins,
                 regret: log_regret.exp(),
+                mean_ratio: ci.mean,
+                ratio_ci: ci.half_width,
             }
         })
         .collect();
@@ -204,39 +354,119 @@ pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
     out
 }
 
-/// Print the ranked summary and (optionally) write the full matrix CSV.
-/// The CSV contains only seed-deterministic columns, so identical seeds
-/// produce byte-identical files regardless of thread count.
+/// The paired-significance report: the best-ranked strategy tested
+/// against every other with a two-sided paired sign test over the
+/// (scenario, replicate) delay pairs. Replicate seeds are shared across
+/// strategies within a scenario, so each pair compares the identical
+/// population/network/dynamics process; between same-cadence strategies
+/// (everything except the cohort-batching `ga`/`pso-batched`) the two
+/// sides even see the identical per-evaluation realization sequence —
+/// exactly the pairing the sign test wants. Comparisons involving a
+/// cohort-batching strategy remain seed-deterministic but are paired at
+/// replicate granularity only.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SignificanceMatrix {
+    /// Strategy with the best mean rank.
+    pub best: String,
+    /// `(other strategy, sign test of best vs other)`, in standings
+    /// order. `a_wins` counts pairs where `best` was strictly faster.
+    pub versus: Vec<(String, SignTest)>,
+}
+
+/// Compute the significance matrix from ranked cells. `None` when the
+/// matrix has fewer than two strategies (nothing to compare).
+pub fn significance_matrix(cells: &[FleetCell]) -> Option<SignificanceMatrix> {
+    significance_for(&standings(cells), cells)
+}
+
+/// [`significance_matrix`] over an already-computed standings table
+/// (avoids re-aggregating — and re-warning — inside `report_fleet`).
+fn significance_for(
+    table: &[StrategyStanding],
+    cells: &[FleetCell],
+) -> Option<SignificanceMatrix> {
+    if table.len() < 2 {
+        return None;
+    }
+    let best = table[0].strategy.clone();
+    let delays_of = |strategy: &str| -> Vec<f64> {
+        cells
+            .iter()
+            .filter(|c| c.strategy == strategy)
+            .flat_map(|c| c.replicate_delays.iter().copied())
+            .collect()
+    };
+    let best_delays = delays_of(&best);
+    let versus = table[1..]
+        .iter()
+        .map(|s| {
+            let other = delays_of(&s.strategy);
+            (s.strategy.clone(), paired_sign_test(&best_delays, &other))
+        })
+        .collect();
+    Some(SignificanceMatrix { best, versus })
+}
+
+/// `foo.csv` → `foo.sig.csv`: where the significance matrix lands next
+/// to the cell matrix.
+fn sig_csv_path(path: &Path) -> std::path::PathBuf {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("fleet");
+    path.with_file_name(format!("{stem}.sig.csv"))
+}
+
+/// Print the ranked summary + significance matrix and (optionally)
+/// write the full matrix CSV (plus `<out>.sig.csv` with the sign-test
+/// rows). The CSVs contain only seed-deterministic columns, so
+/// identical seeds produce byte-identical files regardless of thread
+/// count.
 pub fn report_fleet(cells: &[FleetCell], csv: Option<&Path>) -> std::io::Result<()> {
     let scenarios: std::collections::BTreeSet<&str> =
         cells.iter().map(|c| c.scenario.as_str()).collect();
-    let total_evals: usize = cells.iter().map(|c| c.evaluations).sum();
+    let replicates = cells.first().map_or(0, |c| c.replicate_delays.len());
+    let total_evals: usize = cells.iter().map(|c| c.evaluations * c.replicate_delays.len()).sum();
     let total_events: u64 = cells.iter().map(|c| c.events).sum();
     println!(
-        "fleet: {} scenarios × {} strategies = {} cells, {} evaluations, {} virtual events",
+        "fleet: {} scenarios × {} strategies × {} replicates = {} cells, {} evaluations, {} virtual events",
         scenarios.len(),
         cells.len() / scenarios.len().max(1),
+        replicates,
         cells.len(),
         total_evals,
         total_events,
     );
-    println!("\n=== fleet standings (by mean rank) ===");
+    println!("\n=== fleet standings (by mean rank; delay ×best ± 95% CI) ===");
     println!(
-        "{:<14} {:>10} {:>6} {:>10}",
-        "strategy", "mean rank", "wins", "regret ×"
+        "{:<14} {:>10} {:>6} {:>10} {:>20}",
+        "strategy", "mean rank", "wins", "regret ×", "delay ×best ± CI"
     );
-    for s in standings(cells) {
+    let table = standings(cells);
+    for s in &table {
         println!(
-            "{:<14} {:>10.2} {:>6} {:>10.3}",
-            s.strategy, s.mean_rank, s.wins, s.regret
+            "{:<14} {:>10.2} {:>6} {:>10.3} {:>13.3} ± {:.3}",
+            s.strategy, s.mean_rank, s.wins, s.regret, s.mean_ratio, s.ratio_ci
         );
+    }
+    let sig = significance_for(&table, cells);
+    if let Some(sig) = &sig {
+        println!(
+            "\n=== significance: paired sign test, {} vs each (n = {} scenario×replicate pairs) ===",
+            sig.best,
+            cells.iter().filter(|c| c.strategy == sig.best).map(|c| c.replicate_delays.len()).sum::<usize>(),
+        );
+        println!("{:<14} {:>8} {:>8} {:>6} {:>10}", "vs strategy", "wins", "losses", "ties", "p");
+        for (name, t) in &sig.versus {
+            println!(
+                "{:<14} {:>8} {:>8} {:>6} {:>10.6}",
+                name, t.a_wins, t.b_wins, t.ties, t.p_value
+            );
+        }
     }
     if let Some(path) = csv {
         let mut w = CsvWriter::create(
             path,
             &[
-                "scenario", "strategy", "clients", "slots", "evaluations", "best_delay",
-                "mean_delay", "rank",
+                "scenario", "strategy", "clients", "slots", "evaluations", "replicates",
+                "best_delay_mean", "best_delay_ci95", "mean_delay", "rank",
             ],
         )?;
         for c in cells {
@@ -246,13 +476,34 @@ pub fn report_fleet(cells: &[FleetCell], csv: Option<&Path>) -> std::io::Result<
                 c.clients.to_string(),
                 c.slots.to_string(),
                 c.evaluations.to_string(),
+                c.replicate_delays.len().to_string(),
                 format!("{:.9}", c.best_delay),
+                format!("{:.9}", c.ci95),
                 format!("{:.9}", c.mean_delay),
                 c.rank.to_string(),
             ])?;
         }
         w.flush()?;
         println!("matrix CSV: {}", path.display());
+        if let Some(sig) = &sig {
+            let sig_path = sig_csv_path(path);
+            let mut w = CsvWriter::create(
+                &sig_path,
+                &["best_strategy", "vs_strategy", "best_wins", "losses", "ties", "p_value"],
+            )?;
+            for (name, t) in &sig.versus {
+                w.write_row(&[
+                    sig.best.clone(),
+                    name.clone(),
+                    t.a_wins.to_string(),
+                    t.b_wins.to_string(),
+                    t.ties.to_string(),
+                    format!("{:.6}", t.p_value),
+                ])?;
+            }
+            w.flush()?;
+            println!("significance CSV: {}", sig_path.display());
+        }
     }
     Ok(())
 }
@@ -286,19 +537,37 @@ mod tests {
         (scenarios, strategies)
     }
 
+    /// A synthetic two-strategy cell pair for standings-level tests.
+    fn synthetic_cell(scenario: &str, strategy: &str, delays: &[f64], rank: usize) -> FleetCell {
+        let ci = mean_ci(delays);
+        FleetCell {
+            scenario: scenario.into(),
+            strategy: strategy.into(),
+            clients: 7,
+            slots: 3,
+            evaluations: 10,
+            replicate_delays: delays.to_vec(),
+            best_delay: ci.mean,
+            ci95: ci.half_width,
+            mean_delay: ci.mean,
+            events: 0,
+            rank,
+        }
+    }
+
     #[test]
     fn fleet_results_are_independent_of_thread_count() {
         let (scenarios, strategies) = tiny_matrix();
         let one = run_fleet(
             &scenarios,
             &strategies,
-            &FleetConfig { threads: 1, evals: None },
+            &FleetConfig { threads: 1, ..FleetConfig::default() },
         )
         .unwrap();
         let many = run_fleet(
             &scenarios,
             &strategies,
-            &FleetConfig { threads: 4, evals: None },
+            &FleetConfig { threads: 4, ..FleetConfig::default() },
         )
         .unwrap();
         assert_eq!(one, many);
@@ -312,11 +581,54 @@ mod tests {
             assert!(chunk.iter().all(|c| c.scenario == chunk[0].scenario));
             assert!(chunk.iter().all(|c| c.best_delay.is_finite() && c.best_delay > 0.0));
             assert!(chunk.iter().all(|c| c.evaluations == 15));
+            // Single replicate: degenerate CI, one delay equal to the mean.
+            assert!(chunk.iter().all(|c| c.replicate_delays == vec![c.best_delay]));
+            assert!(chunk.iter().all(|c| c.ci95 == 0.0));
         }
         // The scenario's env is honored: event-driven cells count events,
         // the analytic scenario fires none.
         assert!(one.iter().filter(|c| c.scenario == "a").all(|c| c.events > 0));
         assert!(one.iter().filter(|c| c.scenario == "c-analytic").all(|c| c.events == 0));
+    }
+
+    #[test]
+    fn replicates_derive_distinct_seeds_and_pair_across_strategies() {
+        let (scenarios, strategies) = tiny_matrix();
+        let cells = run_fleet(
+            &scenarios,
+            &strategies[..2],
+            &FleetConfig { threads: 2, evals: Some(10), replicates: 3 },
+        )
+        .unwrap();
+        assert_eq!(cells.len(), 6);
+        for c in &cells {
+            assert_eq!(c.replicate_delays.len(), 3);
+            // Distinct derived seeds ⇒ distinct populations ⇒ the
+            // replicate delays differ from one another.
+            let mut uniq = c.replicate_delays.clone();
+            uniq.sort_by(f64::total_cmp);
+            uniq.dedup();
+            assert!(uniq.len() > 1, "replicates identical: {:?}", c.replicate_delays);
+            // The mean is the ranking statistic.
+            let mean = c.replicate_delays.iter().sum::<f64>() / 3.0;
+            assert!((c.best_delay - mean).abs() < 1e-12);
+            assert!(c.ci95 > 0.0, "non-degenerate replicate set must have a CI");
+        }
+        // Replicate 0 keeps the scenario seed: it equals the
+        // single-replicate run exactly.
+        let single = run_fleet(
+            &scenarios,
+            &strategies[..2],
+            &FleetConfig { threads: 1, evals: Some(10), replicates: 1 },
+        )
+        .unwrap();
+        for (c3, c1) in cells.iter().zip(&single) {
+            assert_eq!(c3.replicate_delays[0], c1.replicate_delays[0]);
+        }
+        // Derived seeds are distinct for many replicates.
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..64).map(|r| replicate_seed(42, r)).collect();
+        assert_eq!(seeds.len(), 64);
     }
 
     #[test]
@@ -329,6 +641,17 @@ mod tests {
         )
         .unwrap_err();
         assert!(matches!(err, PlacementError::UnknownStrategy { .. }), "{err}");
+        // Alias-duplicated strategies (uniform == round-robin) would
+        // double-count cells and desync the significance pairing —
+        // rejected before any simulation runs.
+        let err = run_fleet(
+            &scenarios,
+            &["pso".to_string(), "uniform".to_string(), "round-robin".to_string()],
+            &FleetConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, PlacementError::DuplicateStrategy { .. }), "{err}");
+        assert!(err.to_string().contains("duplicate strategy"), "{err}");
         // `repro fleet --strategies ,` reaches the library as an empty
         // list — a typed error, not a panic.
         let err = run_fleet(&scenarios, &[], &FleetConfig::default()).unwrap_err();
@@ -348,17 +671,22 @@ mod tests {
         let cells = run_fleet(
             &scenarios[..1],
             &strategies[..2],
-            &FleetConfig { threads: 2, evals: Some(7) },
+            &FleetConfig { threads: 2, evals: Some(7), replicates: 2 },
         )
         .unwrap();
         assert!(cells.iter().all(|c| c.evaluations == 7));
+        assert!(cells.iter().all(|c| c.replicate_delays.len() == 2));
     }
 
     #[test]
     fn standings_rank_winner_first_with_unit_regret() {
         let (scenarios, strategies) = tiny_matrix();
-        let cells =
-            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 2, evals: None }).unwrap();
+        let cells = run_fleet(
+            &scenarios,
+            &strategies,
+            &FleetConfig { threads: 2, replicates: 2, ..FleetConfig::default() },
+        )
+        .unwrap();
         let table = standings(&cells);
         assert_eq!(table.len(), 3);
         assert!(table.windows(2).all(|w| w[0].mean_rank <= w[1].mean_rank));
@@ -367,22 +695,77 @@ mod tests {
         assert!(total_wins >= 3, "wins {total_wins}");
         for s in &table {
             assert!(s.regret >= 1.0 - 1e-12, "{}: regret {}", s.strategy, s.regret);
+            assert!(s.mean_ratio.is_finite() && s.mean_ratio > 0.0);
+            assert!(s.ratio_ci.is_finite() && s.ratio_ci >= 0.0);
         }
+    }
+
+    #[test]
+    fn standings_regret_survives_zero_and_nan_winner_delays() {
+        // A degenerate scenario whose winner delay is 0 (or NaN) must
+        // not poison the geometric regret into -inf/NaN: those terms
+        // collapse to the neutral 1.0 and the sort stays meaningful.
+        let cells = vec![
+            synthetic_cell("zero", "alpha", &[0.0, 0.0], 1),
+            synthetic_cell("zero", "beta", &[2.0, 2.0], 2),
+            synthetic_cell("nan", "alpha", &[f64::NAN], 2),
+            synthetic_cell("nan", "beta", &[1.0], 1),
+            synthetic_cell("sane", "alpha", &[1.0], 1),
+            synthetic_cell("sane", "beta", &[3.0], 2),
+        ];
+        let table = standings(&cells);
+        assert_eq!(table.len(), 2);
+        for s in &table {
+            assert!(s.regret.is_finite(), "{}: regret {}", s.strategy, s.regret);
+            assert!(s.regret >= 1.0 - 1e-12, "{}: regret {}", s.strategy, s.regret);
+            assert!(s.mean_ratio.is_finite(), "{}: ratio {}", s.strategy, s.mean_ratio);
+        }
+        // alpha's only usable regret term is the "sane" win (ratio 1);
+        // beta's is 3× — beta carries the larger regret.
+        let by_name = |n: &str| table.iter().find(|s| s.strategy == n).unwrap();
+        assert!(by_name("beta").regret > by_name("alpha").regret);
+    }
+
+    #[test]
+    fn significance_matrix_pairs_best_against_each() {
+        // beta strictly faster on all 6 (scenario, replicate) pairs but
+        // one: sign test must see 5 wins, 1 loss.
+        let cells = vec![
+            synthetic_cell("s1", "alpha", &[2.0, 3.0, 4.0], 2),
+            synthetic_cell("s1", "beta", &[1.0, 2.0, 3.0], 1),
+            synthetic_cell("s2", "alpha", &[1.0, 5.0, 6.0], 2),
+            synthetic_cell("s2", "beta", &[1.5, 4.0, 5.0], 1),
+        ];
+        let sig = significance_matrix(&cells).expect("two strategies");
+        assert_eq!(sig.best, "beta");
+        assert_eq!(sig.versus.len(), 1);
+        let (name, t) = &sig.versus[0];
+        assert_eq!(name, "alpha");
+        assert_eq!((t.a_wins, t.b_wins, t.ties), (5, 1, 0));
+        assert!(t.p_value > 0.0 && t.p_value <= 1.0);
+        // One strategy ⇒ no matrix.
+        assert!(significance_matrix(&cells[..1]).is_none());
     }
 
     #[test]
     fn report_writes_deterministic_csv() {
         let (scenarios, strategies) = tiny_matrix();
-        let cells =
-            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 3, evals: None }).unwrap();
+        let cfg = |threads| FleetConfig { threads, replicates: 2, ..FleetConfig::default() };
+        let cells = run_fleet(&scenarios, &strategies, &cfg(3)).unwrap();
         let path = std::env::temp_dir().join("repro_fleet_test.csv");
         report_fleet(&cells, Some(&path)).unwrap();
+        let sig_path = sig_csv_path(&path);
         let first = std::fs::read_to_string(&path).unwrap();
-        let cells2 =
-            run_fleet(&scenarios, &strategies, &FleetConfig { threads: 1, evals: None }).unwrap();
+        let first_sig = std::fs::read_to_string(&sig_path).unwrap();
+        let cells2 = run_fleet(&scenarios, &strategies, &cfg(1)).unwrap();
         report_fleet(&cells2, Some(&path)).unwrap();
         let second = std::fs::read_to_string(&path).unwrap();
+        let second_sig = std::fs::read_to_string(&sig_path).unwrap();
         assert_eq!(first, second, "CSV must be byte-identical per seed");
+        assert_eq!(first_sig, second_sig, "sig CSV must be byte-identical per seed");
         assert_eq!(first.lines().count(), 10); // header + 9 cells
+        assert!(first.lines().next().unwrap().contains("best_delay_ci95"));
+        assert_eq!(first_sig.lines().count(), 3); // header + 2 comparisons
+        assert!(first_sig.lines().next().unwrap().contains("p_value"));
     }
 }

@@ -22,9 +22,11 @@
 //! [`crate::placement::Environment`] oracle (selectable anywhere
 //! `analytic` is, e.g. `repro sim --env event-driven`), [`scenarios`]
 //! holds the dynamic-scenario catalog (churn / dropout / straggler /
-//! jitter / drift / 10k-client cases, loadable from TOML), and
-//! [`fleet`] runs the scenario × strategy matrix across OS threads for
-//! `repro fleet`.
+//! jitter / drift / correlated-failure / partition / asymmetric-links /
+//! 10k-client cases, loadable from TOML), and [`fleet`] runs the
+//! scenario × strategy × replicate matrix across OS threads for
+//! `repro fleet`, reporting replicate means ± 95% CIs and a paired
+//! sign-test significance matrix.
 
 pub mod engine;
 pub mod fleet;
@@ -33,7 +35,10 @@ pub mod round;
 pub mod scenarios;
 
 pub use engine::EventQueue;
-pub use fleet::{report_fleet, run_fleet, standings, FleetCell, FleetConfig, StrategyStanding};
+pub use fleet::{
+    report_fleet, run_fleet, significance_matrix, standings, FleetCell, FleetConfig,
+    SignificanceMatrix, StrategyStanding,
+};
 pub use network::{LinkParams, NetworkModel};
 pub use round::{simulate_round, EventDrivenEnv, RoundOutcome, RoundRealization, SyncMode};
 pub use scenarios::{builtin_catalog, load_dir, Dynamics, NamedScenario};

@@ -7,14 +7,21 @@
 use crate::configio::NetSpec;
 use crate::prng::{Pcg32, Rng};
 
-/// One client's uplink.
+/// One client's link (asymmetric: upload and download sides differ).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinkParams {
     /// Propagation latency (virtual seconds).
     pub latency_s: f64,
-    /// Serialization bandwidth (data units / virtual second;
-    /// `f64::INFINITY` = free).
+    /// Upload serialization bandwidth (data units / virtual second;
+    /// `f64::INFINITY` = free). Already includes the scenario's
+    /// per-client upload multiplier when bandwidth asymmetry is on.
     pub bandwidth: f64,
+    /// Download capacity (data units / virtual second). Caps the
+    /// ingress service rate whenever this client serves as an
+    /// aggregator — the bandwidth-asymmetry mechanism. `f64::INFINITY`
+    /// (the default when asymmetry is off) leaves `agg_ingress` as the
+    /// only ingress limit.
+    pub down_bandwidth: f64,
 }
 
 /// The scenario's network: every client's uplink plus the shared
@@ -40,6 +47,7 @@ impl NetworkModel {
                 LinkParams {
                     latency_s: 0.0,
                     bandwidth: f64::INFINITY,
+                    down_bandwidth: f64::INFINITY,
                 };
                 clients
             ],
@@ -48,8 +56,12 @@ impl NetworkModel {
         }
     }
 
-    /// Sample per-client uplinks from a [`NetSpec`]'s ranges (a spec
-    /// bandwidth of `0.0` means unlimited).
+    /// Sample per-client links from a [`NetSpec`]'s ranges (a spec
+    /// bandwidth of `0.0` means unlimited). With bandwidth asymmetry on,
+    /// each client's upload bandwidth is the sampled base times an
+    /// up-multiplier, and its download capacity the base times a
+    /// down-multiplier; asymmetry draws happen only when the mechanism
+    /// is enabled, so symmetric scenarios keep their exact RNG streams.
     pub fn sample(clients: usize, spec: &NetSpec, rng: &mut Pcg32) -> NetworkModel {
         let unlimited = |x: f64| if x == 0.0 { f64::INFINITY } else { x };
         let range = |rng: &mut Pcg32, (lo, hi): (f64, f64)| {
@@ -60,9 +72,20 @@ impl NetworkModel {
             }
         };
         let uplinks = (0..clients)
-            .map(|_| LinkParams {
-                latency_s: range(rng, spec.latency_range_s),
-                bandwidth: unlimited(range(rng, spec.bandwidth_range)),
+            .map(|_| {
+                let latency_s = range(rng, spec.latency_range_s);
+                let base = unlimited(range(rng, spec.bandwidth_range));
+                let up = if spec.up_asymmetry_enabled() {
+                    range(rng, spec.up_mult_range)
+                } else {
+                    1.0
+                };
+                let down_bandwidth = if spec.down_asymmetry_enabled() {
+                    base * range(rng, spec.down_mult_range)
+                } else {
+                    f64::INFINITY
+                };
+                LinkParams { latency_s, bandwidth: base * up, down_bandwidth }
             })
             .collect();
         NetworkModel {
@@ -84,10 +107,12 @@ impl NetworkModel {
         link.latency_s * jitter_mult + data / link.bandwidth
     }
 
-    /// Ingress service time of `data` units at an aggregator (0 when
-    /// contention is disabled).
-    pub fn ingress_service(&self, data: f64) -> f64 {
-        data / self.agg_ingress
+    /// Ingress service time of `data` units at the aggregator hosted by
+    /// client `agg_client`: the shared ingress capacity and the hosting
+    /// client's own download bandwidth both cap the rate (0 when both
+    /// are unlimited).
+    pub fn ingress_service(&self, agg_client: usize, data: f64) -> f64 {
+        data / self.agg_ingress.min(self.uplinks[agg_client].down_bandwidth)
     }
 }
 
@@ -102,7 +127,7 @@ mod tests {
         for c in 0..5 {
             assert_eq!(net.transfer_delay(c, 5.0, &mut jitter), 0.0);
         }
-        assert_eq!(net.ingress_service(30.0), 0.0);
+        assert_eq!(net.ingress_service(0, 30.0), 0.0);
     }
 
     #[test]
@@ -111,13 +136,14 @@ mod tests {
             uplinks: vec![LinkParams {
                 latency_s: 0.01,
                 bandwidth: 10.0,
+                down_bandwidth: f64::INFINITY,
             }],
             agg_ingress: 20.0,
             jitter_sigma: 0.0,
         };
         let mut jitter = None;
         assert!((net.transfer_delay(0, 5.0, &mut jitter) - 0.51).abs() < 1e-12);
-        assert!((net.ingress_service(5.0) - 0.25).abs() < 1e-12);
+        assert!((net.ingress_service(0, 5.0) - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -127,6 +153,7 @@ mod tests {
             bandwidth_range: (5.0, 50.0),
             agg_ingress: 100.0,
             jitter_sigma: 0.3,
+            ..NetSpec::default()
         };
         let mut rng = Pcg32::seed_from_u64(1);
         let net = NetworkModel::sample(200, &spec, &mut rng);
@@ -134,6 +161,7 @@ mod tests {
         for l in &net.uplinks {
             assert!((0.001..0.02).contains(&l.latency_s));
             assert!((5.0..50.0).contains(&l.bandwidth));
+            assert!(l.down_bandwidth.is_infinite(), "symmetric spec leaves downlink free");
         }
         assert_eq!(net.agg_ingress, 100.0);
     }
@@ -147,11 +175,55 @@ mod tests {
     }
 
     #[test]
+    fn asymmetric_links_scale_up_and_down_sides_independently() {
+        let spec = NetSpec {
+            bandwidth_range: (10.0, 10.0), // fixed base isolates the multipliers
+            up_mult_range: (0.5, 0.9),
+            down_mult_range: (0.1, 0.4),
+            ..NetSpec::default()
+        };
+        let mut rng = Pcg32::seed_from_u64(9);
+        let net = NetworkModel::sample(100, &spec, &mut rng);
+        for l in &net.uplinks {
+            assert!((5.0..9.0).contains(&l.bandwidth), "up {:?}", l);
+            assert!((1.0..4.0).contains(&l.down_bandwidth), "down {:?}", l);
+        }
+        // A weak downlink caps ingress below the shared capacity.
+        let mut weak = net.clone();
+        weak.agg_ingress = 100.0;
+        weak.uplinks[0].down_bandwidth = 2.0;
+        assert!((weak.ingress_service(0, 10.0) - 5.0).abs() < 1e-12);
+        // A strong downlink leaves agg_ingress as the binding cap.
+        weak.uplinks[1].down_bandwidth = 1e6;
+        assert!((weak.ingress_service(1, 10.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_spec_rng_stream_is_unchanged_by_asymmetry_support() {
+        // The asymmetry draws are gated: a symmetric spec must sample
+        // the exact same links it did before the mechanism existed.
+        let spec = NetSpec {
+            latency_range_s: (0.001, 0.02),
+            bandwidth_range: (5.0, 50.0),
+            ..NetSpec::default()
+        };
+        let a = NetworkModel::sample(50, &spec, &mut Pcg32::seed_from_u64(7));
+        // Reference: draw latency and bandwidth pairs straight off the
+        // same stream.
+        let mut rng = Pcg32::seed_from_u64(7);
+        for l in &a.uplinks {
+            assert_eq!(l.latency_s, rng.uniform(0.001, 0.02));
+            assert_eq!(l.bandwidth, rng.uniform(5.0, 50.0));
+        }
+    }
+
+    #[test]
     fn jitter_perturbs_latency_only() {
         let net = NetworkModel {
             uplinks: vec![LinkParams {
                 latency_s: 1.0,
                 bandwidth: f64::INFINITY,
+                down_bandwidth: f64::INFINITY,
             }],
             agg_ingress: f64::INFINITY,
             jitter_sigma: 0.5,

@@ -168,9 +168,11 @@ pub fn simulate_round(
             }
             Ev::Arrive { slot, data } => {
                 // FIFO ingress queue: chronological pop order guarantees
-                // arrivals are serviced in arrival order.
+                // arrivals are serviced in arrival order. Service rate is
+                // capped by both the shared ingress and the hosting
+                // client's own download bandwidth (asymmetric links).
                 let start = if t > ingress_free[slot] { t } else { ingress_free[slot] };
-                let done = start + net.ingress_service(data);
+                let done = start + net.ingress_service(arr.aggregators[slot], data);
                 ingress_free[slot] = done;
                 q.schedule_at(done, Ev::Deliver { slot });
             }
@@ -420,6 +422,30 @@ mod tests {
     }
 
     #[test]
+    fn weak_aggregator_downlink_throttles_its_ingress() {
+        // Same shape, same uploads; give the root's hosting client a
+        // weak downlink — every upload must now serialize through it.
+        let spec = HierarchySpec::new(1, 1);
+        let cc = 11;
+        let attrs = population(cc, 6);
+        let real = RoundRealization::all_on(cc, 0);
+        let arr = Arrangement::from_position(spec, &[0], cc);
+        let mut net = NetworkModel::zero_cost(cc);
+        let free = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        net.uplinks[0].down_bandwidth = 2.0; // root is client 0
+        let throttled =
+            simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        // 10 uploads × 5 units / 2 per s = 25 s of queueing.
+        assert!(throttled >= free + 24.0, "downlink cap must bind: {throttled} vs {free}");
+        // The same cap on a non-aggregator client changes nothing.
+        let mut other = NetworkModel::zero_cost(cc);
+        other.uplinks[5].down_bandwidth = 2.0;
+        let unaffected =
+            simulate_round(&arr, &attrs, &other, &real, 0.0, SyncMode::LevelBarrier).tpd;
+        assert_eq!(unaffected, free);
+    }
+
+    #[test]
     fn ingress_contention_serializes_uploads() {
         // Wide leaf fan-in: many trainers upload into one aggregator.
         let spec = HierarchySpec::new(1, 1);
@@ -510,6 +536,8 @@ mod tests {
                 bandwidth_range: (5.0, 50.0),
                 agg_ingress: 50.0,
                 jitter_sigma: 0.4,
+                up_mult_range: (0.5, 1.0),
+                down_mult_range: (0.25, 1.0),
             },
             dynamics: DynamicsSpec {
                 dropout_prob: 0.2,
@@ -519,6 +547,11 @@ mod tests {
                 straggler_frac: 0.3,
                 straggler_slowdown: 4.0,
                 drift_sigma: 0.05,
+                corr_fail_prob: 0.2,
+                corr_fail_frac: 0.25,
+                partition_prob: 0.1,
+                partition_frac: 0.25,
+                partition_rounds: 2,
             },
         };
         let cc = sc.client_count();

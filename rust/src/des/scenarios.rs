@@ -1,14 +1,24 @@
 //! Dynamic-scenario catalog: the per-round dynamics state machine
-//! (churn, dropout, straggler bursts, speed drift) plus a built-in
-//! matrix of named scenarios — from the paper's Fig-3 shapes up to
-//! 10k-client populations — and a loader for user TOML directories.
+//! (churn, dropout, straggler bursts, speed drift, correlated regional
+//! failures, multi-round network partitions) plus a built-in matrix of
+//! named scenarios — from the paper's Fig-3 shapes up to 10k-client
+//! populations — and a loader for user TOML directories.
 
 use super::round::RoundRealization;
 use crate::configio::{DesSpec, DynamicsSpec, NetSpec, SimScenario, TomlDoc};
 use crate::prng::{Pcg32, Rng};
 
-/// Session-lifetime dynamics: evolves churn membership and speed drift
-/// across rounds and realizes one [`RoundRealization`] per round.
+/// Session-lifetime dynamics: evolves churn membership, speed drift and
+/// partition state across rounds and realizes one [`RoundRealization`]
+/// per round.
+///
+/// Invariants the fleet's statistics rely on (property-tested in
+/// `tests/properties.rs`): the same seed yields the identical
+/// realization sequence; the live-client count never leaves `[1, n]`
+/// (a fully-dark round is floored to one deterministic survivor); and
+/// because `active` only gates clients *assigned as trainers* — slots
+/// always serve — no failure mechanism can orphan an aggregator that
+/// still has uploads scheduled toward it.
 #[derive(Debug, Clone)]
 pub struct Dynamics {
     spec: DynamicsSpec,
@@ -16,12 +26,15 @@ pub struct Dynamics {
     present: Vec<bool>,
     /// Drift random-walk state (slowdown component, clamped).
     drift: Vec<f64>,
+    /// Active network partition: (region start, region len, rounds left
+    /// *after* the current one).
+    partition: Option<(usize, usize, usize)>,
     rng: Pcg32,
 }
 
 impl Dynamics {
     pub fn new(spec: DynamicsSpec, rng: Pcg32) -> Dynamics {
-        Dynamics { spec, present: Vec::new(), drift: Vec::new(), rng }
+        Dynamics { spec, present: Vec::new(), drift: Vec::new(), partition: None, rng }
     }
 
     /// The static no-op dynamics (conformance configuration).
@@ -34,6 +47,7 @@ impl Dynamics {
         if self.present.len() != n {
             self.present = vec![true; n];
             self.drift = vec![1.0; n];
+            self.partition = None;
         }
         let round_seed = self.rng.next_u64();
         let s = self.spec.clone();
@@ -69,7 +83,47 @@ impl Dynamics {
                 }
             }
         }
+        // Correlated failure: one contiguous id region (a rack / edge
+        // site) fails together for this round only, re-sampled per round.
+        if s.corr_fail_prob > 0.0 && self.rng.next_f64() < s.corr_fail_prob {
+            let start = self.rng.gen_range(n as u64) as usize;
+            mark_region_inactive(&mut active, start, region_len(n, s.corr_fail_frac));
+        }
+        // Network partition: a sampled region goes unreachable and stays
+        // unreachable for `partition_rounds` consecutive rounds.
+        if s.partition_prob > 0.0 {
+            if self.partition.is_none() && self.rng.next_f64() < s.partition_prob {
+                let start = self.rng.gen_range(n as u64) as usize;
+                self.partition =
+                    Some((start, region_len(n, s.partition_frac), s.partition_rounds));
+            }
+            if let Some((start, len, rounds_left)) = self.partition {
+                mark_region_inactive(&mut active, start, len);
+                self.partition =
+                    (rounds_left > 1).then_some((start, len, rounds_left - 1));
+            }
+        }
+        // Live-count floor: a session with zero reachable trainers is
+        // not a round the paper's protocol can run, so one
+        // deterministically-chosen survivor always participates.
+        if !active.iter().any(|&a| a) {
+            active[(round_seed % n as u64) as usize] = true;
+        }
         RoundRealization { active, slowdown, round_seed }
+    }
+}
+
+/// Clients inside a failing region: `ceil(n · frac)`, clamped to
+/// `[1, n]` (a region never empties the whole mechanism into a no-op).
+fn region_len(n: usize, frac: f64) -> usize {
+    ((n as f64 * frac).ceil() as usize).clamp(1, n)
+}
+
+/// Deactivate the contiguous (wrapping) id region `start..start+len`.
+fn mark_region_inactive(active: &mut [bool], start: usize, len: usize) {
+    let n = active.len();
+    for i in 0..len.min(n) {
+        active[(start + i) % n] = false;
     }
 }
 
@@ -101,13 +155,28 @@ fn variants() -> Vec<(&'static str, fn(&mut DesSpec))> {
             d.net.jitter_sigma = 0.5;
         }),
         ("drift", |d| d.dynamics.drift_sigma = 0.05),
+        ("corrfail", |d| {
+            d.dynamics.corr_fail_prob = 0.25;
+            d.dynamics.corr_fail_frac = 0.3;
+        }),
+        ("partition", |d| {
+            d.dynamics.partition_prob = 0.15;
+            d.dynamics.partition_frac = 0.25;
+            d.dynamics.partition_rounds = 3;
+        }),
+        ("asym", |d| {
+            d.net.latency_range_s = (0.001, 0.01);
+            d.net.bandwidth_range = (5.0, 50.0);
+            d.net.up_mult_range = (0.5, 1.0);
+            d.net.down_mult_range = (0.2, 1.0);
+        }),
     ]
 }
 
 /// The built-in scenario matrix: four population scales (7 → 10k+
-/// clients) × six dynamics variants, plus a contended-uplink case and a
-/// 10k-client everything-on stress case. 26 scenarios, every one with a
-/// distinct seed, all scored by the event-driven oracle.
+/// clients) × nine dynamics variants, plus a contended-uplink case and
+/// a 10k-client everything-on stress case. 38 scenarios, every one with
+/// a distinct seed, all scored by the event-driven oracle.
 pub fn builtin_catalog() -> Vec<NamedScenario> {
     // (name, depth, width, trainers_per_leaf, pso iterations)
     let sizes: [(&str, usize, usize, usize, usize); 4] = [
@@ -201,13 +270,26 @@ mod tests {
     #[test]
     fn catalog_covers_the_acceptance_matrix() {
         let cat = builtin_catalog();
-        assert!(cat.len() >= 20, "only {} scenarios", cat.len());
+        assert!(cat.len() >= 34, "only {} scenarios", cat.len());
         let names: Vec<&str> = cat.iter().map(|s| s.name.as_str()).collect();
-        for required in ["churn", "dropout", "straggler"] {
+        for required in ["churn", "dropout", "straggler", "corrfail", "partition", "asym"] {
             assert!(
                 names.iter().any(|n| n.contains(required)),
                 "missing a {required} scenario"
             );
+        }
+        // The new mechanisms are actually switched on in their variants.
+        let by_suffix = |suffix: &str| {
+            cat.iter()
+                .find(|s| s.name == format!("tiny-{suffix}"))
+                .unwrap_or_else(|| panic!("no tiny-{suffix}"))
+        };
+        assert!(by_suffix("corrfail").sim.des.dynamics.corr_fail_prob > 0.0);
+        assert!(by_suffix("partition").sim.des.dynamics.partition_rounds >= 1);
+        assert!(by_suffix("asym").sim.des.net.down_asymmetry_enabled());
+        // Every built-in passes its own validation (the TOML gate).
+        for s in &cat {
+            s.sim.des.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
         }
         // 10k-client cases present, including dynamic ones.
         let mega: Vec<&NamedScenario> =
@@ -237,11 +319,85 @@ mod tests {
             straggler_frac: 0.25,
             straggler_slowdown: 3.0,
             drift_sigma: 0.1,
+            corr_fail_prob: 0.3,
+            corr_fail_frac: 0.2,
+            partition_prob: 0.2,
+            partition_frac: 0.25,
+            partition_rounds: 2,
         };
         let mut a = Dynamics::new(spec.clone(), Pcg32::seed_from_u64(9));
         let mut b = Dynamics::new(spec, Pcg32::seed_from_u64(9));
         for _ in 0..20 {
             assert_eq!(a.next_round(30), b.next_round(30));
+        }
+    }
+
+    #[test]
+    fn correlated_failure_takes_out_a_region_together() {
+        let spec = DynamicsSpec {
+            corr_fail_prob: 1.0, // every round has a failing region
+            corr_fail_frac: 0.25,
+            ..DynamicsSpec::default()
+        };
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(21));
+        let n = 40;
+        for _ in 0..30 {
+            let r = d.next_round(n);
+            let down: Vec<usize> =
+                (0..n).filter(|&i| !r.active[i]).collect();
+            // ceil(40 · 0.25) = 10 contiguous (wrapping) ids fail.
+            assert_eq!(down.len(), 10, "{down:?}");
+            let start = down[0];
+            let contiguous = (0..n).any(|s| {
+                (0..down.len()).all(|k| !r.active[(s + k) % n])
+                    && down.len() == r.active.iter().filter(|&&a| !a).count()
+            });
+            assert!(contiguous, "region not contiguous: {down:?} (first {start})");
+        }
+    }
+
+    #[test]
+    fn partition_outage_spans_consecutive_rounds() {
+        let spec = DynamicsSpec {
+            partition_prob: 1.0, // starts immediately, restarts when over
+            partition_frac: 0.2,
+            partition_rounds: 3,
+            ..DynamicsSpec::default()
+        };
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(5));
+        let n = 30;
+        // Collect the inactive set per round; the same region must stay
+        // down for 3 rounds before a new one is sampled.
+        let downs: Vec<Vec<usize>> = (0..9)
+            .map(|_| {
+                let r = d.next_round(n);
+                (0..n).filter(|&i| !r.active[i]).collect()
+            })
+            .collect();
+        for chunk in downs.chunks(3) {
+            assert_eq!(chunk[0], chunk[1]);
+            assert_eq!(chunk[1], chunk[2]);
+            assert_eq!(chunk[0].len(), 6); // ceil(30 · 0.2)
+        }
+        // Across epochs the region re-samples (same would be a 1-in-30
+        // coincidence for this seed; assert it differs somewhere).
+        assert!(downs[0] != downs[3] || downs[3] != downs[6], "region never moved");
+    }
+
+    #[test]
+    fn live_count_never_hits_zero_even_under_total_failure() {
+        // corr_fail_frac 1.0 would darken everyone; the floor keeps one.
+        let spec = DynamicsSpec {
+            corr_fail_prob: 1.0,
+            corr_fail_frac: 1.0,
+            dropout_prob: 1.0,
+            ..DynamicsSpec::default()
+        };
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(3));
+        for _ in 0..20 {
+            let r = d.next_round(15);
+            let live = r.active.iter().filter(|&&a| a).count();
+            assert_eq!(live, 1, "floor must keep exactly the one survivor");
         }
     }
 

@@ -3,7 +3,7 @@
 //! ```text
 //! repro sim        [--strategy NAME --env analytic|event-driven --depth D --width W --particles P --iterations N --seed S --out csv]
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
-//! repro fleet      [--scenarios builtin|DIR --strategies a,b,c --threads N --evals N --out csv]
+//! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R --out csv]
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
@@ -33,8 +33,10 @@ fn main() -> Result<()> {
                  \n\
                  sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
-                 fleet    scenario × strategy matrix on the discrete-event simulator;\n\
-                 \x20        --scenarios builtin|DIR --strategies a,b,c --threads N --evals N --out csv\n\
+                 fleet    scenario × strategy × replicate matrix on the discrete-event simulator;\n\
+                 \x20        --scenarios builtin|DIR --filter SUBSTR --strategies a,b,c\n\
+                 \x20        --threads N --evals N --replicates R --out csv\n\
+                 \x20        (replicates report mean ± 95% CI and a paired sign-test matrix)\n\
                  compare  Fig-4 deployment comparison; --strategies a,b,c\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
@@ -149,22 +151,32 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 fn cmd_fleet(args: &Args) -> Result<()> {
     use repro::des::{builtin_catalog, load_dir, report_fleet, run_fleet, FleetConfig};
     let src = args.str_flag("scenarios", "builtin");
-    let scenarios = if src == "builtin" {
+    let mut scenarios = if src == "builtin" {
         builtin_catalog()
     } else {
         load_dir(std::path::Path::new(&src)).map_err(|e| anyhow!(e))?
     };
+    // `--filter SUBSTR` keeps only matching scenario names (e.g.
+    // `--filter tiny` for a smoke run over the smallest populations).
+    if let Some(filter) = args.flag("filter") {
+        scenarios.retain(|s| s.name.contains(filter));
+        if scenarios.is_empty() {
+            return Err(anyhow!("--filter {filter:?} matched no scenario"));
+        }
+    }
     let strategies = args.list_flag("strategies").unwrap_or_else(|| {
         registry::NAMES.iter().map(|s| s.to_string()).collect()
     });
     let cfg = FleetConfig {
         threads: args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?,
         evals: args.opt_usize_flag("evals").map_err(|e| anyhow!(e))?,
+        replicates: args.usize_flag("replicates", 1).map_err(|e| anyhow!(e))?,
     };
     println!(
-        "fleet: {} scenarios ({src}) × {} strategies, threads={}",
+        "fleet: {} scenarios ({src}) × {} strategies × {} replicates, threads={}",
         scenarios.len(),
         strategies.len(),
+        cfg.replicates.max(1),
         if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
     );
     let cells = run_fleet(&scenarios, &strategies, &cfg).map_err(|e| anyhow!(e))?;

@@ -10,5 +10,5 @@ mod timer;
 
 pub use csv::CsvWriter;
 pub use recorder::{RoundRecord, RoundRecorder};
-pub use summary::{rank_ascending, Summary};
+pub use summary::{mean_ci, paired_sign_test, rank_ascending, MeanCi, SignTest, Summary};
 pub use timer::Stopwatch;

@@ -79,6 +79,129 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx.clamp(1, sorted.len()) - 1]
 }
 
+/// Sample mean with a two-sided 95% Student-t confidence interval,
+/// the statistic behind the fleet's replicate columns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanCi {
+    pub n: usize,
+    pub mean: f64,
+    /// Half-width of the 95% CI (`mean ± half_width`). Degenerate
+    /// samples (n <= 1, or all values equal) report `0.0` so the
+    /// statistic stays finite and CSV-printable.
+    pub half_width: f64,
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom.
+fn t_critical_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        1..=30 => TABLE[df - 1],
+        31..=40 => 2.021,
+        41..=60 => 2.000,
+        61..=120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// Mean ± 95% CI (Student-t) of a sample. `n = 0` yields all zeros and
+/// `n = 1` a degenerate zero-width interval — both deterministic, finite
+/// values rather than NaNs, so downstream sorting/CSV stay well-formed.
+pub fn mean_ci(samples: &[f64]) -> MeanCi {
+    let n = samples.len();
+    if n == 0 {
+        return MeanCi { n: 0, mean: 0.0, half_width: 0.0 };
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    if n == 1 {
+        return MeanCi { n, mean, half_width: 0.0 };
+    }
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+    MeanCi { n, mean, half_width: t_critical_95(n - 1) * (var / n as f64).sqrt() }
+}
+
+/// Result of a two-sided exact paired sign test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SignTest {
+    /// Pairs where the first series was strictly smaller (better, for
+    /// delays).
+    pub a_wins: usize,
+    /// Pairs where the second series was strictly smaller.
+    pub b_wins: usize,
+    /// Exactly-equal pairs (dropped from the test, the usual treatment).
+    pub ties: usize,
+    /// Two-sided p-value of H0 "neither series is systematically
+    /// smaller" (exact binomial, `2·min(tails)` capped at 1; `1.0` when
+    /// every pair ties).
+    pub p_value: f64,
+}
+
+/// Two-sided exact paired sign test over two equal-length series — the
+/// fleet's significance test between two strategies' per-(scenario,
+/// replicate) delays. Distribution-free, so it is safe on the wildly
+/// non-normal delay scales the scenario catalog mixes. Symmetric:
+/// swapping the series swaps `a_wins`/`b_wins` and keeps `p_value`.
+pub fn paired_sign_test(a: &[f64], b: &[f64]) -> SignTest {
+    assert_eq!(a.len(), b.len(), "paired sign test needs equal-length series");
+    let (mut a_wins, mut b_wins, mut ties) = (0usize, 0usize, 0usize);
+    for (&x, &y) in a.iter().zip(b) {
+        match x.total_cmp(&y) {
+            std::cmp::Ordering::Less => a_wins += 1,
+            std::cmp::Ordering::Greater => b_wins += 1,
+            std::cmp::Ordering::Equal => ties += 1,
+        }
+    }
+    let n = a_wins + b_wins;
+    let p_value = if n == 0 {
+        1.0
+    } else {
+        let k = a_wins.min(b_wins);
+        (2.0 * binomial_cdf_half(n, k)).min(1.0)
+    };
+    SignTest { a_wins, b_wins, ties, p_value }
+}
+
+/// P(X <= k) for X ~ Binomial(n, 1/2). Exact summation for the sizes the
+/// fleet produces; falls back to a continuity-corrected normal
+/// approximation once `0.5^n` underflows f64.
+fn binomial_cdf_half(n: usize, k: usize) -> f64 {
+    if k >= n {
+        return 1.0;
+    }
+    if n <= 1000 {
+        // pmf(i) built iteratively: pmf(0) = 0.5^n, pmf(i+1) = pmf(i)·(n-i)/(i+1).
+        let mut pmf = 0.5f64.powi(n as i32);
+        let mut cdf = pmf;
+        for i in 0..k {
+            pmf *= (n - i) as f64 / (i + 1) as f64;
+            cdf += pmf;
+        }
+        cdf.min(1.0)
+    } else {
+        // Normal approximation with continuity correction.
+        let mean = n as f64 / 2.0;
+        let sd = (n as f64).sqrt() / 2.0;
+        normal_cdf((k as f64 + 0.5 - mean) / sd)
+    }
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun 7.1.26 erf polynomial
+/// (|error| < 1.5e-7 — plenty for a significance report).
+fn normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let (sign, x) = if x < 0.0 { (-1.0, -x) } else { (1.0, x) };
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = t
+        * (0.254_829_592
+            + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    let erf = sign * (1.0 - poly * (-x * x).exp());
+    0.5 * (1.0 + erf)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,5 +249,110 @@ mod tests {
         let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
         let s = Summary::from(&xs);
         assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn mean_ci_matches_hand_computation() {
+        // Sample [1, 2, 3, 4]: mean 2.5, s = sqrt(5/3), df = 3 → t = 3.182.
+        let ci = mean_ci(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ci.n, 4);
+        assert!((ci.mean - 2.5).abs() < 1e-12);
+        let expect = 3.182 * (5.0f64 / 3.0).sqrt() / 2.0;
+        assert!((ci.half_width - expect).abs() < 1e-9, "{} vs {expect}", ci.half_width);
+    }
+
+    #[test]
+    fn mean_ci_degenerate_single_sample() {
+        let ci = mean_ci(&[7.25]);
+        assert_eq!(ci, MeanCi { n: 1, mean: 7.25, half_width: 0.0 });
+        let empty = mean_ci(&[]);
+        assert_eq!(empty, MeanCi { n: 0, mean: 0.0, half_width: 0.0 });
+    }
+
+    #[test]
+    fn mean_ci_all_equal_samples_have_zero_width() {
+        let ci = mean_ci(&[3.5; 12]);
+        assert_eq!(ci.mean, 3.5);
+        assert_eq!(ci.half_width, 0.0);
+        assert!(ci.half_width.is_finite());
+    }
+
+    #[test]
+    fn mean_ci_shrinks_with_more_samples() {
+        // Same alternating spread, growing n: the interval must tighten.
+        let sample = |n: usize| -> Vec<f64> {
+            (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 3.0 }).collect()
+        };
+        let small = mean_ci(&sample(4));
+        let big = mean_ci(&sample(64));
+        assert!(big.half_width < small.half_width);
+        assert!(big.half_width > 0.0);
+    }
+
+    #[test]
+    fn rank_ascending_on_replicate_means_with_exact_ties() {
+        // Replicate means that tie exactly (identical realizations can
+        // produce identical delays): competition ranking shares rank 1.
+        let means = [2.0, 2.0, 5.0];
+        assert_eq!(rank_ascending(&means), vec![1, 1, 3]);
+        let all_tied = [4.25, 4.25, 4.25, 4.25];
+        assert_eq!(rank_ascending(&all_tied), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn paired_sign_test_exact_small_sample() {
+        // a < b on every one of 5 pairs: p = 2 · 0.5^5 = 0.0625.
+        let a = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 3.0, 4.0, 5.0, 6.0];
+        let t = paired_sign_test(&a, &b);
+        assert_eq!((t.a_wins, t.b_wins, t.ties), (5, 0, 0));
+        assert!((t.p_value - 0.0625).abs() < 1e-12, "{}", t.p_value);
+    }
+
+    #[test]
+    fn paired_sign_test_is_symmetric() {
+        let a = [1.0, 5.0, 2.0, 9.0, 4.0, 4.0, 8.0];
+        let b = [2.0, 3.0, 2.0, 1.0, 6.0, 7.0, 3.0];
+        let ab = paired_sign_test(&a, &b);
+        let ba = paired_sign_test(&b, &a);
+        assert_eq!(ab.a_wins, ba.b_wins);
+        assert_eq!(ab.b_wins, ba.a_wins);
+        assert_eq!(ab.ties, ba.ties);
+        assert!((ab.p_value - ba.p_value).abs() < 1e-15);
+        assert!(ab.p_value <= 1.0 && ab.p_value > 0.0);
+    }
+
+    #[test]
+    fn paired_sign_test_all_ties_is_insignificant() {
+        let a = [2.0, 2.0, 2.0];
+        let t = paired_sign_test(&a, &a);
+        assert_eq!((t.a_wins, t.b_wins, t.ties), (0, 0, 3));
+        assert_eq!(t.p_value, 1.0);
+    }
+
+    #[test]
+    fn paired_sign_test_balanced_split_is_insignificant() {
+        // 3 wins each way out of 6: p must be 1 (capped two-sided).
+        let a = [1.0, 1.0, 1.0, 9.0, 9.0, 9.0];
+        let b = [5.0, 5.0, 5.0, 5.0, 5.0, 5.0];
+        let t = paired_sign_test(&a, &b);
+        assert_eq!((t.a_wins, t.b_wins), (3, 3));
+        assert_eq!(t.p_value, 1.0);
+    }
+
+    #[test]
+    fn binomial_tail_large_n_uses_normal_tail_sanely() {
+        // Far-out tail at large n: tiny p, never NaN/negative.
+        let a = vec![1.0; 1500];
+        let b = vec![2.0; 1500];
+        let t = paired_sign_test(&a, &b);
+        assert!(t.p_value >= 0.0 && t.p_value < 1e-6, "{}", t.p_value);
+        // Balanced at large n: p ≈ 1.
+        let mut c = vec![0.0; 1500];
+        for (i, x) in c.iter_mut().enumerate() {
+            *x = if i % 2 == 0 { 0.5 } else { 1.5 };
+        }
+        let u = paired_sign_test(&c, &vec![1.0; 1500]);
+        assert!(u.p_value > 0.9, "{}", u.p_value);
     }
 }

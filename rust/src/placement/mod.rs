@@ -112,6 +112,9 @@ pub enum PlacementError {
     DuplicateClient { client: usize },
     /// Strategy name not present in [`registry`].
     UnknownStrategy { name: String },
+    /// The same strategy (after alias resolution) listed twice where a
+    /// set of distinct strategies is required (e.g. the fleet matrix).
+    DuplicateStrategy { name: String },
     /// Environment name not present in [`registry`] (see
     /// [`registry::ENV_NAMES`]).
     UnknownEnvironment { name: String },
@@ -140,6 +143,9 @@ impl fmt::Display for PlacementError {
                     "unknown strategy {name:?}; valid strategies: {}",
                     registry::NAMES.join(", ")
                 )
+            }
+            PlacementError::DuplicateStrategy { name } => {
+                write!(f, "duplicate strategy {name:?}: each strategy may appear only once")
             }
             PlacementError::UnknownEnvironment { name } => {
                 write!(

@@ -1,0 +1,137 @@
+//! Integration tests for the statistical fleet runner: thread-count
+//! independence at the CSV byte level, golden coverage of the
+//! CI/significance columns, and the adaptive-pso-vs-pso drift study the
+//! ROADMAP asks for.
+
+use repro::configio::SimScenario;
+use repro::des::{
+    builtin_catalog, report_fleet, run_fleet, significance_matrix, standings, FleetConfig,
+    NamedScenario,
+};
+
+/// The statistical fleet CSV schema (golden): any column rename or
+/// reorder is a deliberate, test-visible change.
+const MATRIX_HEADER: &str = "scenario,strategy,clients,slots,evaluations,replicates,\
+                             best_delay_mean,best_delay_ci95,mean_delay,rank";
+const SIG_HEADER: &str = "best_strategy,vs_strategy,best_wins,losses,ties,p_value";
+
+#[test]
+fn fleet_csv_is_byte_identical_across_thread_counts() {
+    // A small builtin matrix (every tiny-population variant, including
+    // the correlated-failure / partition / asymmetric-bandwidth ones) at
+    // --threads 1 vs --threads 4 with --replicates 3: the report files
+    // must come out byte-identical.
+    let scenarios: Vec<NamedScenario> = builtin_catalog()
+        .into_iter()
+        .filter(|s| s.name.starts_with("tiny"))
+        .collect();
+    assert!(scenarios.len() >= 9, "tiny slice should cover all variants");
+    let strategies: Vec<String> = ["pso", "random"].iter().map(|s| s.to_string()).collect();
+    let cfg = |threads| FleetConfig { threads, evals: Some(12), replicates: 3 };
+
+    let dir = std::env::temp_dir().join("repro_fleet_integration");
+    let _ = std::fs::remove_dir_all(&dir);
+    let write = |threads: usize, tag: &str| -> (String, String) {
+        let cells = run_fleet(&scenarios, &strategies, &cfg(threads)).unwrap();
+        let path = dir.join(format!("fleet_{tag}.csv"));
+        report_fleet(&cells, Some(&path)).unwrap();
+        let matrix = std::fs::read_to_string(&path).unwrap();
+        let sig = std::fs::read_to_string(dir.join(format!("fleet_{tag}.sig.csv"))).unwrap();
+        (matrix, sig)
+    };
+    let (matrix1, sig1) = write(1, "t1");
+    let (matrix4, sig4) = write(4, "t4");
+    assert_eq!(matrix1, matrix4, "matrix CSV must not depend on --threads");
+    assert_eq!(sig1, sig4, "significance CSV must not depend on --threads");
+
+    // Golden column coverage for the new statistics.
+    assert_eq!(matrix1.lines().next().unwrap(), MATRIX_HEADER);
+    assert_eq!(sig1.lines().next().unwrap(), SIG_HEADER);
+    assert_eq!(matrix1.lines().count(), 1 + scenarios.len() * strategies.len());
+    assert_eq!(sig1.lines().count(), 1 + (strategies.len() - 1));
+    // Every data row carries the replicate count and a parseable,
+    // non-negative CI; ranks stay in [1, #strategies].
+    for line in matrix1.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), 10, "{line}");
+        assert_eq!(cols[5], "3", "replicates column: {line}");
+        let ci: f64 = cols[7].parse().unwrap();
+        assert!(ci.is_finite() && ci >= 0.0, "{line}");
+        let mean: f64 = cols[6].parse().unwrap();
+        assert!(mean.is_finite() && mean > 0.0, "{line}");
+        let rank: usize = cols[9].parse().unwrap();
+        assert!((1..=strategies.len()).contains(&rank), "{line}");
+    }
+    // The sign-test row compares the two strategies over all
+    // scenario×replicate pairs.
+    let sig_cols: Vec<&str> = sig1.lines().nth(1).unwrap().split(',').collect();
+    let pairs: usize = sig_cols[2].parse::<usize>().unwrap()
+        + sig_cols[3].parse::<usize>().unwrap()
+        + sig_cols[4].parse::<usize>().unwrap();
+    assert_eq!(pairs, scenarios.len() * 3);
+    let p: f64 = sig_cols[5].parse().unwrap();
+    assert!((0.0..=1.0).contains(&p), "p-value {p}");
+}
+
+/// Build one drift-heavy tiny scenario (the ROADMAP's "teach
+/// adaptive-pso to exploit EventDrivenEnv's drift" study shape).
+fn drift_scenario(name: &str, depth: usize, width: usize, seed: u64) -> NamedScenario {
+    let mut sc = SimScenario {
+        depth,
+        width,
+        env: "event-driven".into(),
+        ..SimScenario::default()
+    };
+    sc.seed = seed;
+    // Strong speed drift: the per-client random walk reshuffles which
+    // clients are fast, so a placement pinned early goes stale.
+    sc.des.dynamics.drift_sigma = 0.35;
+    sc.des.train_unit = 1.0;
+    NamedScenario { name: name.to_string(), sim: sc }
+}
+
+#[test]
+fn adaptive_pso_tracks_drift_at_least_as_well_as_plain_pso() {
+    // The drift study: across >= 5 paired replicates of six drift-heavy
+    // scenarios, adaptive-pso (variance-tuned restart detector) must
+    // beat or tie plain pso on mean rank. Replicate seeds are shared
+    // between the two strategies, so every comparison is under
+    // identical drift realizations.
+    let scenarios = vec![
+        drift_scenario("drift-a", 2, 2, 101),
+        drift_scenario("drift-b", 2, 2, 202),
+        drift_scenario("drift-c", 2, 2, 303),
+        drift_scenario("drift-d", 2, 3, 404),
+        drift_scenario("drift-e", 2, 3, 505),
+        drift_scenario("drift-f", 2, 3, 606),
+    ];
+    let strategies: Vec<String> = ["pso", "adaptive-pso"].iter().map(|s| s.to_string()).collect();
+    let cfg = FleetConfig { threads: 0, evals: Some(300), replicates: 5 };
+    let cells = run_fleet(&scenarios, &strategies, &cfg).unwrap();
+    assert!(cells.iter().all(|c| c.replicate_delays.len() == 5));
+
+    let table = standings(&cells);
+    let by_name = |n: &str| table.iter().find(|s| s.strategy == n).unwrap();
+    let adaptive = by_name("adaptive-pso");
+    let plain = by_name("pso");
+    assert!(
+        adaptive.mean_rank <= plain.mean_rank,
+        "adaptive-pso mean rank {} should beat or tie pso {} on drift scenarios \
+         (regret {:.3} vs {:.3})",
+        adaptive.mean_rank,
+        plain.mean_rank,
+        adaptive.regret,
+        plain.regret
+    );
+    // The paired sign test over the 30 (scenario, replicate) pairs backs
+    // the same direction: adaptive cannot lose significantly.
+    let sig = significance_matrix(&cells).unwrap();
+    if sig.best == "pso" {
+        let (_, t) = &sig.versus[0];
+        assert!(
+            t.p_value > 0.05,
+            "pso must not be significantly faster than adaptive-pso under drift: p={}",
+            t.p_value
+        );
+    }
+}

@@ -206,7 +206,7 @@ fn fleet_matrix_runs_dynamic_scenarios_deterministically() {
     assert!(scenarios.len() >= 8);
     let strategies: Vec<String> =
         ["pso", "random", "round-robin"].iter().map(|s| s.to_string()).collect();
-    let cfg = |threads| FleetConfig { threads, evals: Some(15) };
+    let cfg = |threads| FleetConfig { threads, evals: Some(15), ..FleetConfig::default() };
     let a = run_fleet(&scenarios, &strategies, &cfg(1)).unwrap();
     let b = run_fleet(&scenarios, &strategies, &cfg(4)).unwrap();
     assert_eq!(a, b, "fleet results must not depend on thread count");

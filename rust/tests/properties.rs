@@ -2,7 +2,8 @@
 //! hierarchy arithmetic, arrangement/rearrangement, TPD, PSO state,
 //! placement strategies, JSON, codecs.
 
-use repro::des::{simulate_round, NetworkModel, RoundRealization, SyncMode};
+use repro::configio::DynamicsSpec;
+use repro::des::{simulate_round, Dynamics, NetworkModel, RoundRealization, SyncMode};
 use repro::fitness::{tpd, tpd_with_memory, ClientAttrs};
 use repro::fl::codec::{ModelCodec, ModelUpdate};
 use repro::hierarchy::{Arrangement, HierarchySpec, Role};
@@ -135,6 +136,127 @@ fn prop_event_driven_round_conforms_across_shapes() {
         let piped = simulate_round(&arr, &attrs, &net, &real, 0.0, SyncMode::Pipelined);
         assert!(piped.tpd <= barrier.tpd + 1e-12);
         assert!(piped.events > 0 && barrier.events > 0);
+    });
+}
+
+/// Randomized dynamics spec exercising every mechanism, including the
+/// correlated-failure and partition state machines.
+fn random_dynamics_spec(g: &mut Gen) -> DynamicsSpec {
+    DynamicsSpec {
+        dropout_prob: g.f64_in(0.0, 0.5),
+        churn_leave_prob: g.f64_in(0.0, 0.5),
+        churn_join_prob: g.f64_in(0.0, 0.8),
+        straggler_prob: g.f64_in(0.0, 0.8),
+        straggler_frac: g.f64_in(0.0, 1.0),
+        straggler_slowdown: 1.0 + g.f64_in(0.0, 4.0),
+        drift_sigma: g.f64_in(0.0, 0.3),
+        corr_fail_prob: g.f64_in(0.0, 0.6),
+        corr_fail_frac: g.f64_in(0.01, 0.6),
+        partition_prob: g.f64_in(0.0, 0.5),
+        partition_frac: g.f64_in(0.01, 0.6),
+        partition_rounds: 1 + g.usize_in(0..4),
+    }
+}
+
+#[test]
+fn prop_dynamics_live_count_stays_within_population_bounds() {
+    // Churn (and every failure mechanism stacked on top) never drives
+    // the live-client count below 1 or above n.
+    forall("dynamics live-count bounds", 120, |g| {
+        let spec = random_dynamics_spec(g);
+        let n = 1 + g.usize_in(0..60);
+        let mut d = Dynamics::new(spec, Pcg32::seed_from_u64(g.u64_in(0..1 << 40)));
+        for _ in 0..25 {
+            let r = d.next_round(n);
+            assert_eq!(r.active.len(), n);
+            assert_eq!(r.slowdown.len(), n);
+            let live = r.active.iter().filter(|&&a| a).count();
+            assert!((1..=n).contains(&live), "live {live} outside [1, {n}]");
+            assert!(r.slowdown.iter().all(|&s| s.is_finite() && s > 0.0));
+        }
+    });
+}
+
+#[test]
+fn prop_dynamics_same_seed_identical_realization_sequence() {
+    forall("dynamics same-seed determinism", 80, |g| {
+        let spec = random_dynamics_spec(g);
+        let seed = g.u64_in(0..1 << 40);
+        let n = 2 + g.usize_in(0..40);
+        let mut a = Dynamics::new(spec.clone(), Pcg32::seed_from_u64(seed));
+        let mut b = Dynamics::new(spec, Pcg32::seed_from_u64(seed));
+        for _ in 0..15 {
+            assert_eq!(a.next_round(n), b.next_round(n));
+        }
+    });
+}
+
+#[test]
+fn prop_realizations_shared_across_an_eval_batch() {
+    // Inside one eval_batch every placement is scored under the same
+    // realization and the same per-eval jitter stream: identical
+    // placements in a batch must score identically, whatever dynamics
+    // are active.
+    use repro::configio::SimScenario;
+    use repro::des::EventDrivenEnv;
+    use repro::placement::Environment;
+    forall("batch shares one realization", 40, |g| {
+        let mut sc = SimScenario {
+            depth: 1 + g.usize_in(0..3),
+            width: 1 + g.usize_in(0..3),
+            env: "event-driven".into(),
+            ..SimScenario::default()
+        };
+        sc.seed = g.u64_in(0..1 << 40);
+        sc.des.train_unit = g.f64_in(0.0, 2.0);
+        sc.des.net.jitter_sigma = g.f64_in(0.0, 0.5);
+        sc.des.dynamics = random_dynamics_spec(g);
+        let cc = sc.client_count();
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..1 << 40));
+        let p = Placement::new(rng.sample_distinct(cc, spec.dimensions()));
+        let q = Placement::new(rng.sample_distinct(cc, spec.dimensions()));
+        let mut env = EventDrivenEnv::from_scenario(&sc, attrs);
+        for _ in 0..4 {
+            let batch = vec![p.clone(), q.clone(), p.clone()];
+            let delays = env.eval_batch(&batch).unwrap();
+            assert_eq!(delays[0], delays[2], "same placement, same batch, same score");
+        }
+    });
+}
+
+#[test]
+fn prop_failure_mechanisms_never_orphan_a_serving_aggregator() {
+    // Correlated failures and partitions only silence clients *assigned
+    // as trainers*; aggregator slots always serve. Consequently every
+    // round completes: the root aggregation fires (simulate_round would
+    // hit unreachable!() on a drained queue otherwise) with a finite,
+    // positive TPD, no matter how hard the failure mechanisms hit.
+    forall("corrfail/partition rounds always complete", 60, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..30);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        let net = NetworkModel::zero_cost(cc);
+        let mut dyn_spec = random_dynamics_spec(g);
+        // Bias hard toward the new mechanisms, up to total blackout.
+        dyn_spec.corr_fail_prob = g.f64_in(0.5, 1.0);
+        dyn_spec.corr_fail_frac = g.f64_in(0.5, 1.0);
+        dyn_spec.partition_prob = g.f64_in(0.5, 1.0);
+        dyn_spec.partition_frac = g.f64_in(0.5, 1.0);
+        let mut d = Dynamics::new(dyn_spec, Pcg32::seed_from_u64(g.u64_in(0..1 << 40)));
+        for _ in 0..8 {
+            let real = d.next_round(cc);
+            let out = simulate_round(&arr, &attrs, &net, &real, 1.0, SyncMode::LevelBarrier);
+            assert!(out.tpd.is_finite() && out.tpd > 0.0, "tpd {}", out.tpd);
+            assert!(out.dropped_trainers <= cc - dims);
+            let piped = simulate_round(&arr, &attrs, &net, &real, 1.0, SyncMode::Pipelined);
+            assert!(piped.tpd <= out.tpd + 1e-12);
+        }
     });
 }
 
