@@ -11,6 +11,7 @@
 //! ```
 
 use repro::des::{builtin_catalog, report_fleet, run_fleet, EventDrivenEnv, FleetConfig};
+use repro::exp::{run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
 use repro::fitness::ClientAttrs;
 use repro::hierarchy::HierarchySpec;
 use repro::placement::{AnalyticTpd, Environment, Placement};
@@ -54,4 +55,22 @@ fn main() {
     report_fleet(&cells, None).expect("report");
     let pso_wins = cells.iter().filter(|c| c.strategy == "pso" && c.rank == 1).count();
     println!("pso won {pso_wins}/{} scenarios outright", scenarios.len());
+
+    // --- 4. The same matrix as an adaptive experiment plan: replicates
+    // stop early per scenario once the leader's 95% CI separates from
+    // every rival (`repro fleet --replicates 2..6`). ---
+    let plan = ExperimentPlan {
+        scenarios,
+        strategies,
+        evals: Some(60),
+        env_override: None,
+        replicates: ReplicateRange { min: 2, max: 6 },
+    };
+    let adaptive = run_plan(&plan, &TrialScheduler::new(0)).expect("adaptive plan");
+    let spent: usize = adaptive.iter().map(|c| c.replicate_delays.len()).sum();
+    println!(
+        "\nadaptive 2..6: spent {spent} replicate trials over {} cells (max would be {})",
+        adaptive.len(),
+        adaptive.len() * 6
+    );
 }

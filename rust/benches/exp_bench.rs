@@ -1,0 +1,45 @@
+//! Bench exp-µ: experiment-engine throughput — the same tiny-catalog
+//! matrix run at a fixed replicate count vs an adaptive range, plus the
+//! replicates each mode actually spends. Adaptive allocation should
+//! spend no more replicates than `max` and, on clearly-separated
+//! scenarios, markedly fewer — this bench makes the saving visible.
+//!
+//! Run: `cargo bench --bench exp_bench`
+
+use repro::bench::{black_box, Bencher};
+use repro::des::builtin_catalog;
+use repro::exp::{run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
+
+fn plan(replicates: ReplicateRange) -> ExperimentPlan {
+    ExperimentPlan {
+        scenarios: builtin_catalog()
+            .into_iter()
+            .filter(|s| s.name.starts_with("tiny"))
+            .collect(),
+        strategies: ["pso", "random", "round-robin"].iter().map(|s| s.to_string()).collect(),
+        evals: Some(20),
+        env_override: None,
+        replicates,
+    }
+}
+
+fn main() {
+    repro::logging::set_level(repro::logging::Level::Error);
+    let sched = TrialScheduler::new(0);
+    let b = Bencher::new(10, 2);
+
+    for (label, range) in [
+        ("fixed r=8", ReplicateRange::fixed(8)),
+        ("adaptive r=2..8", ReplicateRange { min: 2, max: 8 }),
+    ] {
+        let p = plan(range);
+        let cells = run_plan(&p, &sched).expect("plan runs");
+        let spent: usize = cells.iter().map(|c| c.replicate_delays.len()).sum();
+        println!("{label}: {} cells, {} replicate trials", cells.len(), spent);
+        // Throughput unit = replicate trials completed per second.
+        b.iter_throughput(&format!("exp/tiny-matrix {label}"), || {
+            let cells = run_plan(&p, &sched).expect("plan runs");
+            black_box(cells.iter().map(|c| c.replicate_delays.len()).sum())
+        });
+    }
+}

@@ -17,6 +17,11 @@ pub struct Args {
 
 impl Args {
     /// Parse from an explicit token list (tests) — first token is NOT argv[0].
+    ///
+    /// A repeated flag is a hard error: silently keeping the first (or
+    /// last) occurrence turns `--evals 10 --evals 99` into whichever
+    /// budget the caller did *not* mean, which is exactly the kind of
+    /// quiet misconfiguration a reproduction harness cannot afford.
     pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args, String> {
         let mut args = Args::default();
         let mut it = tokens.into_iter().peekable();
@@ -26,11 +31,11 @@ impl Args {
                     return Err("bare '--' not supported".into());
                 }
                 if let Some((k, v)) = flag.split_once('=') {
-                    args.flags.insert(k.to_string(), v.to_string());
+                    insert_unique(&mut args.flags, k, v.to_string())?;
                 } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                    args.flags.insert(flag.to_string(), it.next().unwrap());
+                    insert_unique(&mut args.flags, flag, it.next().unwrap())?;
                 } else {
-                    args.flags.insert(flag.to_string(), "true".to_string());
+                    insert_unique(&mut args.flags, flag, "true".to_string())?;
                 }
             } else if args.subcommand.is_none() && args.positional.is_empty() {
                 args.subcommand = Some(tok);
@@ -95,6 +100,8 @@ impl Args {
 
     /// Comma-separated list flag (`--strategies random,uniform,pso`).
     /// Empty entries are dropped; `None` when the flag is absent.
+    /// Repeating the flag itself is a parse-time error; lists are
+    /// expressed in one comma-separated value.
     pub fn list_flag(&self, key: &str) -> Option<Vec<String>> {
         self.flag(key).map(|v| {
             v.split(',')
@@ -104,6 +111,22 @@ impl Args {
                 .collect()
         })
     }
+}
+
+/// Insert a flag, rejecting duplicates with an actionable message.
+fn insert_unique(
+    flags: &mut BTreeMap<String, String>,
+    key: &str,
+    value: String,
+) -> Result<(), String> {
+    if let Some(first) = flags.get(key) {
+        return Err(format!(
+            "--{key} given more than once ({first:?}, then {value:?}); \
+             each flag may appear at most once"
+        ));
+    }
+    flags.insert(key.to_string(), value);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -177,6 +200,34 @@ mod tests {
         assert_eq!(a.opt_usize_flag("absent").unwrap(), None);
         assert!(parse("fleet --evals x").opt_usize_flag("evals").is_err());
         assert!(parse("fleet --replicates x").usize_flag("replicates", 1).is_err());
+    }
+
+    #[test]
+    fn duplicate_flags_are_a_hard_error() {
+        // `--evals 10 --evals 99` used to silently keep the first value;
+        // now every repetition form is rejected with both values named.
+        let err = Args::parse_tokens(
+            "fleet --evals 10 --evals 99".split_whitespace().map(String::from),
+        )
+        .unwrap_err();
+        assert!(err.contains("--evals"), "{err}");
+        assert!(err.contains("10") && err.contains("99"), "{err}");
+        assert!(err.contains("more than once"), "{err}");
+        // `=` and space forms collide too.
+        let err = Args::parse_tokens(
+            "sim --seed=1 --seed 2".split_whitespace().map(String::from),
+        )
+        .unwrap_err();
+        assert!(err.contains("--seed"), "{err}");
+        // Repeated bare switches as well.
+        let err = Args::parse_tokens(
+            "sim --verbose --verbose".split_whitespace().map(String::from),
+        )
+        .unwrap_err();
+        assert!(err.contains("--verbose"), "{err}");
+        // Distinct flags still parse.
+        let a = parse("sim --seed 1 --evals 2");
+        assert_eq!(a.u64_flag("seed", 0).unwrap(), 1);
     }
 
     #[test]

@@ -1,42 +1,41 @@
-//! The `repro fleet` runner: a scenario × strategy × replicate matrix
-//! executed across OS threads, every cell driving one registry optimizer
-//! against the event-driven oracle in virtual time. Results are
-//! deterministic per seed and independent of the thread count — each
-//! job derives all of its randomness from its scenario's seed (plus a
-//! per-replicate derivation), and cells are ranked and reported in a
-//! fixed order after the join.
+//! The `repro fleet` runner — now a thin adapter over the experiment
+//! engine ([`crate::exp`]): a fixed-replicate [`ExperimentPlan`] over a
+//! scenario catalog, scheduled on a [`TrialScheduler`] and reported by
+//! the shared [`crate::exp::report_cells`] builder. The fixed
+//! `--replicates R` behavior (job order, seed derivation, CSV bytes) is
+//! frozen: this module's tests pin it, and the engine's adaptive
+//! allocator degenerates to exactly this path when `min == max`.
 //!
 //! ## Statistics
 //!
 //! A single seed per cell makes the standings a lottery: one lucky
 //! dynamics realization can flip who "wins" a scenario. With
 //! `--replicates R` every (scenario, strategy) cell is scored `R` times
-//! under `R` *derived* seeds. The seed for replicate `r` depends only on
-//! the scenario (not the strategy), so within a scenario all strategies
-//! face the identical population, network and dynamics *process* per
-//! replicate — paired trials. The pairing is evaluation-exact between
-//! strategies that propose one candidate per round (every registry
-//! strategy except `ga` and `pso-batched`): [`EventDrivenEnv`] advances
-//! its realization once per `eval_batch`, so cohort-batching optimizers
-//! see the same realization sequence per *batch* rather than per
-//! evaluation. Cells then report the replicate mean ± a
-//! 95% Student-t confidence interval, per-scenario ranks are computed on
-//! replicate means, and [`significance_matrix`] runs a paired sign test
-//! of the best-ranked strategy against every other over the
-//! (scenario, replicate) pairs.
+//! under `R` *derived* seeds (see [`crate::exp::replicate_seed`]). The
+//! seed for replicate `r` depends only on the scenario (not the
+//! strategy), so within a scenario all strategies face the identical
+//! population, network and dynamics *process* per replicate — paired
+//! trials. Cells report the replicate mean ± a 95% Student-t CI,
+//! per-scenario ranks are computed on replicate means, and
+//! [`significance_matrix`] runs a paired sign test (plus a Wilcoxon
+//! signed-rank test with rank-biserial effect size) of the best-ranked
+//! strategy against every other over the (scenario, replicate) pairs.
+//! The adaptive `--replicates MIN..MAX` syntax lives in the engine; see
+//! [`crate::exp::ReplicateRange`].
 
-use super::round::EventDrivenEnv;
 use super::scenarios::NamedScenario;
-use crate::fitness::ClientAttrs;
-use crate::log_warn;
-use crate::metrics::{mean_ci, paired_sign_test, rank_ascending, CsvWriter, SignTest};
-use crate::placement::{drive, registry, PlacementError};
-use crate::prng::{Pcg32, SplitMix64};
-use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::exp::{run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
+use crate::placement::PlacementError;
 
-/// Fleet execution parameters.
+pub use crate::exp::report_cells as report_fleet;
+pub use crate::exp::{
+    replicate_seed, significance_matrix, standings, ExperimentCell as FleetCell,
+    SignificanceMatrix, StrategyStanding, VersusRow,
+};
+
+/// Fleet execution parameters (the classic fixed-replicate surface; the
+/// CLI's adaptive `--replicates MIN..MAX` builds an [`ExperimentPlan`]
+/// directly).
 #[derive(Debug, Clone, Default)]
 pub struct FleetConfig {
     /// Worker OS threads (0 = one per available core).
@@ -51,467 +50,30 @@ pub struct FleetConfig {
     pub replicates: usize,
 }
 
-/// One (scenario, strategy) cell of the matrix: a replicate set.
-#[derive(Debug, Clone, PartialEq)]
-pub struct FleetCell {
-    pub scenario: String,
-    pub strategy: String,
-    pub clients: usize,
-    pub slots: usize,
-    /// Evaluations spent per replicate (equal across replicates).
-    pub evaluations: usize,
-    /// Best virtual-time round delay found, one entry per replicate in
-    /// replicate order.
-    pub replicate_delays: Vec<f64>,
-    /// Mean of `replicate_delays` — the cell's ranking statistic.
-    pub best_delay: f64,
-    /// Half-width of the 95% Student-t CI over `replicate_delays`
-    /// (0.0 for a single replicate).
-    pub ci95: f64,
-    /// Mean delay across the whole search (exploration cost), averaged
-    /// over replicates.
-    pub mean_delay: f64,
-    /// Events the simulator fired for this cell, totalled over
-    /// replicates.
-    pub events: u64,
-    /// Rank of `best_delay` among the scenario's strategies (1 = won).
-    pub rank: usize,
-}
-
-/// One replicate's raw result (pre-aggregation).
-#[derive(Debug, Clone)]
-struct ReplicateRun {
-    strategy: String,
-    evaluations: usize,
-    best_delay: f64,
-    mean_delay: f64,
-    events: u64,
-}
-
-/// Derive the seed for replicate `r` of a scenario. Replicate 0 keeps
-/// the scenario's own seed, so `--replicates 1` reproduces the
-/// single-run fleet byte for byte; later replicates walk a SplitMix64
-/// stream salted off the scenario seed. Strategy-independent by
-/// construction: candidates within a scenario compete under identical
-/// realizations each replicate.
-fn replicate_seed(base: u64, r: usize) -> u64 {
-    if r == 0 {
-        return base;
-    }
-    let mut sm = SplitMix64::new(base ^ 0xF1EE_7C0D_ED5E_ED5Eu64);
-    let mut seed = 0u64;
-    for _ in 0..r {
-        seed = sm.next();
-    }
-    seed
-}
-
-/// Run one replicate: seed-derived population + dynamics, registry
-/// optimizer, generic `drive` loop against the scenario's configured
-/// delay oracle (`sim.env`; the built-in catalog uses `event-driven`
-/// throughout, but user TOML scenarios may pick `analytic`).
-fn run_replicate(
-    ns: &NamedScenario,
-    strategy: &str,
-    evals: Option<usize>,
-    seed: u64,
-) -> Result<ReplicateRun, PlacementError> {
-    let mut sc = ns.sim.clone();
-    sc.seed = seed;
-    let cc = sc.client_count();
-    // Same seeding discipline as `sim::run_sim_with`: population first,
-    // optimizer stream split off after.
-    let mut rng = Pcg32::seed_from_u64(sc.seed);
-    let attrs = ClientAttrs::sample_population(
-        cc,
-        sc.pspeed_range,
-        sc.memcap_range,
-        sc.mdatasize,
-        &mut rng,
-    );
-    let mut opt = registry::build_sim(strategy, &sc, rng.split())?;
-    let budget = evals.unwrap_or(sc.pso.iterations * sc.pso.particles).max(1);
-    // The event-driven oracle is built concretely to keep its event
-    // counter; any other registry environment goes through the factory.
-    let (out, events) = if registry::canonical_env(&sc.env)? == "event-driven" {
-        let mut env = EventDrivenEnv::from_scenario(&sc, attrs);
-        (drive(opt.as_mut(), &mut env, budget)?, env.events_fired)
-    } else {
-        let mut env = registry::build_sim_env(&sc.env, &sc, attrs)?;
-        (drive(opt.as_mut(), env.as_mut(), budget)?, 0)
-    };
-    let mean_delay = if out.stats.is_empty() {
-        out.best_delay
-    } else {
-        out.stats.iter().map(|s| s.mean).sum::<f64>() / out.stats.len() as f64
-    };
-    Ok(ReplicateRun {
-        strategy: opt.name().to_string(),
-        evaluations: out.evaluations,
-        best_delay: out.best_delay,
-        mean_delay,
-        events,
-    })
-}
-
-/// Run the full matrix. Replicate jobs are scheduled over `cfg.threads`
-/// workers; the returned vector is ordered scenario-major (catalog
-/// order) with per-scenario ranks (on replicate means) filled in.
+/// Run the full matrix at a fixed replicate count. Replicate jobs are
+/// scheduled over `cfg.threads` workers; the returned vector is ordered
+/// scenario-major (catalog order) with per-scenario ranks (on replicate
+/// means) filled in.
 pub fn run_fleet(
     scenarios: &[NamedScenario],
     strategies: &[String],
     cfg: &FleetConfig,
 ) -> Result<Vec<FleetCell>, PlacementError> {
-    // Fail fast on a typo or an empty matrix (reachable from the CLI via
-    // `--strategies ,` or a bad scenario TOML) before paying for
-    // thousands of simulations.
-    if scenarios.is_empty() || strategies.is_empty() {
-        return Err(PlacementError::Environment(
-            "fleet matrix is empty: need at least one scenario and one strategy".into(),
-        ));
-    }
-    // Canonicalize and reject duplicates: two entries that resolve to
-    // the same optimizer (e.g. `uniform` and `round-robin`) would
-    // double-count that strategy's cells and desync the paired
-    // significance series.
-    let mut canon: Vec<&'static str> = Vec::with_capacity(strategies.len());
-    for s in strategies {
-        let c = registry::canonical(s)?;
-        if canon.contains(&c) {
-            return Err(PlacementError::DuplicateStrategy { name: s.clone() });
-        }
-        canon.push(c);
-    }
-    for ns in scenarios {
-        registry::canonical_env(&ns.sim.env)?;
-    }
-    let replicates = cfg.replicates.max(1);
-    // Job j = ((si · |strategies|) + ti) · R + r — replicate-level
-    // parallelism, so even a two-cell matrix saturates the workers.
-    let jobs: Vec<(usize, usize, usize)> = (0..scenarios.len())
-        .flat_map(|si| {
-            (0..strategies.len())
-                .flat_map(move |ti| (0..replicates).map(move |r| (si, ti, r)))
-        })
-        .collect();
-    let threads = if cfg.threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    } else {
-        cfg.threads
-    }
-    .min(jobs.len());
-
-    type RunSlot = Option<Result<ReplicateRun, PlacementError>>;
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<RunSlot>> = Mutex::new(vec![None; jobs.len()]);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let j = next.fetch_add(1, Ordering::Relaxed);
-                let Some(&(si, ti, r)) = jobs.get(j) else { break };
-                let ns = &scenarios[si];
-                let seed = replicate_seed(ns.sim.seed, r);
-                let run = run_replicate(ns, &strategies[ti], cfg.evals, seed);
-                slots.lock().expect("fleet results lock")[j] = Some(run);
-            });
-        }
-    });
-
-    let mut runs = Vec::with_capacity(jobs.len());
-    for slot in slots.into_inner().expect("fleet results lock") {
-        runs.push(slot.expect("every job ran")?);
-    }
-    // Aggregate replicate runs into cells (jobs are replicate-minor).
-    let mut cells = Vec::with_capacity(scenarios.len() * strategies.len());
-    for (si, ns) in scenarios.iter().enumerate() {
-        for ti in 0..strategies.len() {
-            let base = ((si * strategies.len()) + ti) * replicates;
-            let set = &runs[base..base + replicates];
-            let replicate_delays: Vec<f64> = set.iter().map(|x| x.best_delay).collect();
-            let ci = mean_ci(&replicate_delays);
-            debug_assert!(set.iter().all(|x| x.evaluations == set[0].evaluations));
-            cells.push(FleetCell {
-                scenario: ns.name.clone(),
-                strategy: set[0].strategy.clone(),
-                clients: ns.sim.client_count(),
-                slots: ns.sim.dimensions(),
-                evaluations: set[0].evaluations,
-                best_delay: ci.mean,
-                ci95: ci.half_width,
-                mean_delay: set.iter().map(|x| x.mean_delay).sum::<f64>() / replicates as f64,
-                events: set.iter().map(|x| x.events).sum(),
-                replicate_delays,
-                rank: 0,
-            });
-        }
-    }
-    // Rank strategies within each scenario on their replicate means
-    // (cells are scenario-major).
-    for chunk in cells.chunks_mut(strategies.len()) {
-        let delays: Vec<f64> = chunk.iter().map(|c| c.best_delay).collect();
-        for (cell, rank) in chunk.iter_mut().zip(rank_ascending(&delays)) {
-            cell.rank = rank;
-        }
-    }
-    Ok(cells)
-}
-
-/// Per-strategy aggregate over the matrix.
-#[derive(Debug, Clone, PartialEq)]
-pub struct StrategyStanding {
-    pub strategy: String,
-    /// Mean rank across scenarios (1.0 = won everything), ranks taken
-    /// on replicate means.
-    pub mean_rank: f64,
-    /// Scenarios won outright.
-    pub wins: usize,
-    /// Geometric-mean of `best_delay / scenario winner's best_delay`
-    /// (1.0 = always optimal; 2.0 = on average 2× the winner).
-    pub regret: f64,
-    /// Mean normalized delay: every (scenario, replicate) delay divided
-    /// by its scenario winner's mean delay, averaged — the arithmetic,
-    /// CI-carrying cousin of `regret` (scale-free across the catalog's
-    /// 7-to-10k-client spread).
-    pub mean_ratio: f64,
-    /// Half-width of the 95% Student-t CI on `mean_ratio`.
-    pub ratio_ci: f64,
-}
-
-/// Aggregate cells into the final standings, best mean rank first.
-/// Scenarios whose winner delay is zero or non-finite cannot anchor a
-/// meaningful ratio — `ln(0)` would poison the geometric mean into
-/// `-inf`/NaN and silently corrupt the sort — so those terms contribute
-/// a neutral regret of 1.0 and a warning is logged instead.
-pub fn standings(cells: &[FleetCell]) -> Vec<StrategyStanding> {
-    let mut order: Vec<&str> = Vec::new();
-    for c in cells {
-        if !order.contains(&c.strategy.as_str()) {
-            order.push(&c.strategy);
-        }
-    }
-    // Scenario winners (on replicate means) for the regret ratio.
-    let mut winner: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
-    for c in cells {
-        let w = winner.entry(&c.scenario).or_insert(f64::INFINITY);
-        *w = w.min(c.best_delay);
-    }
-    for (scenario, &w) in &winner {
-        if !(w.is_finite() && w > 0.0) {
-            log_warn!(
-                "fleet",
-                "scenario {scenario:?} winner delay {w} is unusable as a regret anchor; \
-                 treating its regret terms as 1.0"
-            );
-        }
-    }
-    let mut out: Vec<StrategyStanding> = order
-        .iter()
-        .map(|&s| {
-            let mine: Vec<&FleetCell> = cells.iter().filter(|c| c.strategy == s).collect();
-            let n = mine.len().max(1) as f64;
-            let mean_rank = mine.iter().map(|c| c.rank as f64).sum::<f64>() / n;
-            let wins = mine.iter().filter(|c| c.rank == 1).count();
-            let log_regret = mine
-                .iter()
-                .map(|c| {
-                    let ratio = c.best_delay / winner[c.scenario.as_str()];
-                    // Guard: zero/NaN winner (or cell) delays collapse to
-                    // the neutral ratio instead of poisoning the mean.
-                    if ratio.is_finite() && ratio > 0.0 {
-                        ratio.ln()
-                    } else {
-                        0.0
-                    }
-                })
-                .sum::<f64>()
-                / n;
-            let ratios: Vec<f64> = mine
-                .iter()
-                .flat_map(|c| {
-                    let w = winner[c.scenario.as_str()];
-                    c.replicate_delays.iter().map(move |&d| {
-                        let r = d / w;
-                        if r.is_finite() && r > 0.0 {
-                            r
-                        } else {
-                            1.0
-                        }
-                    })
-                })
-                .collect();
-            let ci = mean_ci(&ratios);
-            StrategyStanding {
-                strategy: s.to_string(),
-                mean_rank,
-                wins,
-                regret: log_regret.exp(),
-                mean_ratio: ci.mean,
-                ratio_ci: ci.half_width,
-            }
-        })
-        .collect();
-    out.sort_by(|a, b| a.mean_rank.total_cmp(&b.mean_rank));
-    out
-}
-
-/// The paired-significance report: the best-ranked strategy tested
-/// against every other with a two-sided paired sign test over the
-/// (scenario, replicate) delay pairs. Replicate seeds are shared across
-/// strategies within a scenario, so each pair compares the identical
-/// population/network/dynamics process; between same-cadence strategies
-/// (everything except the cohort-batching `ga`/`pso-batched`) the two
-/// sides even see the identical per-evaluation realization sequence —
-/// exactly the pairing the sign test wants. Comparisons involving a
-/// cohort-batching strategy remain seed-deterministic but are paired at
-/// replicate granularity only.
-#[derive(Debug, Clone, PartialEq)]
-pub struct SignificanceMatrix {
-    /// Strategy with the best mean rank.
-    pub best: String,
-    /// `(other strategy, sign test of best vs other)`, in standings
-    /// order. `a_wins` counts pairs where `best` was strictly faster.
-    pub versus: Vec<(String, SignTest)>,
-}
-
-/// Compute the significance matrix from ranked cells. `None` when the
-/// matrix has fewer than two strategies (nothing to compare).
-pub fn significance_matrix(cells: &[FleetCell]) -> Option<SignificanceMatrix> {
-    significance_for(&standings(cells), cells)
-}
-
-/// [`significance_matrix`] over an already-computed standings table
-/// (avoids re-aggregating — and re-warning — inside `report_fleet`).
-fn significance_for(
-    table: &[StrategyStanding],
-    cells: &[FleetCell],
-) -> Option<SignificanceMatrix> {
-    if table.len() < 2 {
-        return None;
-    }
-    let best = table[0].strategy.clone();
-    let delays_of = |strategy: &str| -> Vec<f64> {
-        cells
-            .iter()
-            .filter(|c| c.strategy == strategy)
-            .flat_map(|c| c.replicate_delays.iter().copied())
-            .collect()
+    let plan = ExperimentPlan {
+        scenarios: scenarios.to_vec(),
+        strategies: strategies.to_vec(),
+        evals: cfg.evals,
+        env_override: None,
+        replicates: ReplicateRange::fixed(cfg.replicates),
     };
-    let best_delays = delays_of(&best);
-    let versus = table[1..]
-        .iter()
-        .map(|s| {
-            let other = delays_of(&s.strategy);
-            (s.strategy.clone(), paired_sign_test(&best_delays, &other))
-        })
-        .collect();
-    Some(SignificanceMatrix { best, versus })
-}
-
-/// `foo.csv` → `foo.sig.csv`: where the significance matrix lands next
-/// to the cell matrix.
-fn sig_csv_path(path: &Path) -> std::path::PathBuf {
-    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("fleet");
-    path.with_file_name(format!("{stem}.sig.csv"))
-}
-
-/// Print the ranked summary + significance matrix and (optionally)
-/// write the full matrix CSV (plus `<out>.sig.csv` with the sign-test
-/// rows). The CSVs contain only seed-deterministic columns, so
-/// identical seeds produce byte-identical files regardless of thread
-/// count.
-pub fn report_fleet(cells: &[FleetCell], csv: Option<&Path>) -> std::io::Result<()> {
-    let scenarios: std::collections::BTreeSet<&str> =
-        cells.iter().map(|c| c.scenario.as_str()).collect();
-    let replicates = cells.first().map_or(0, |c| c.replicate_delays.len());
-    let total_evals: usize = cells.iter().map(|c| c.evaluations * c.replicate_delays.len()).sum();
-    let total_events: u64 = cells.iter().map(|c| c.events).sum();
-    println!(
-        "fleet: {} scenarios × {} strategies × {} replicates = {} cells, {} evaluations, {} virtual events",
-        scenarios.len(),
-        cells.len() / scenarios.len().max(1),
-        replicates,
-        cells.len(),
-        total_evals,
-        total_events,
-    );
-    println!("\n=== fleet standings (by mean rank; delay ×best ± 95% CI) ===");
-    println!(
-        "{:<14} {:>10} {:>6} {:>10} {:>20}",
-        "strategy", "mean rank", "wins", "regret ×", "delay ×best ± CI"
-    );
-    let table = standings(cells);
-    for s in &table {
-        println!(
-            "{:<14} {:>10.2} {:>6} {:>10.3} {:>13.3} ± {:.3}",
-            s.strategy, s.mean_rank, s.wins, s.regret, s.mean_ratio, s.ratio_ci
-        );
-    }
-    let sig = significance_for(&table, cells);
-    if let Some(sig) = &sig {
-        println!(
-            "\n=== significance: paired sign test, {} vs each (n = {} scenario×replicate pairs) ===",
-            sig.best,
-            cells.iter().filter(|c| c.strategy == sig.best).map(|c| c.replicate_delays.len()).sum::<usize>(),
-        );
-        println!("{:<14} {:>8} {:>8} {:>6} {:>10}", "vs strategy", "wins", "losses", "ties", "p");
-        for (name, t) in &sig.versus {
-            println!(
-                "{:<14} {:>8} {:>8} {:>6} {:>10.6}",
-                name, t.a_wins, t.b_wins, t.ties, t.p_value
-            );
-        }
-    }
-    if let Some(path) = csv {
-        let mut w = CsvWriter::create(
-            path,
-            &[
-                "scenario", "strategy", "clients", "slots", "evaluations", "replicates",
-                "best_delay_mean", "best_delay_ci95", "mean_delay", "rank",
-            ],
-        )?;
-        for c in cells {
-            w.write_row(&[
-                c.scenario.clone(),
-                c.strategy.clone(),
-                c.clients.to_string(),
-                c.slots.to_string(),
-                c.evaluations.to_string(),
-                c.replicate_delays.len().to_string(),
-                format!("{:.9}", c.best_delay),
-                format!("{:.9}", c.ci95),
-                format!("{:.9}", c.mean_delay),
-                c.rank.to_string(),
-            ])?;
-        }
-        w.flush()?;
-        println!("matrix CSV: {}", path.display());
-        if let Some(sig) = &sig {
-            let sig_path = sig_csv_path(path);
-            let mut w = CsvWriter::create(
-                &sig_path,
-                &["best_strategy", "vs_strategy", "best_wins", "losses", "ties", "p_value"],
-            )?;
-            for (name, t) in &sig.versus {
-                w.write_row(&[
-                    sig.best.clone(),
-                    name.clone(),
-                    t.a_wins.to_string(),
-                    t.b_wins.to_string(),
-                    t.ties.to_string(),
-                    format!("{:.6}", t.p_value),
-                ])?;
-            }
-            w.flush()?;
-            println!("significance CSV: {}", sig_path.display());
-        }
-    }
-    Ok(())
+    run_plan(&plan, &TrialScheduler::new(cfg.threads))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::configio::SimScenario;
+    use crate::metrics::mean_ci;
 
     fn tiny_matrix() -> (Vec<NamedScenario>, Vec<String>) {
         let mut a = SimScenario {
@@ -535,24 +97,6 @@ mod tests {
         ];
         let strategies = vec!["pso".to_string(), "random".to_string(), "round-robin".to_string()];
         (scenarios, strategies)
-    }
-
-    /// A synthetic two-strategy cell pair for standings-level tests.
-    fn synthetic_cell(scenario: &str, strategy: &str, delays: &[f64], rank: usize) -> FleetCell {
-        let ci = mean_ci(delays);
-        FleetCell {
-            scenario: scenario.into(),
-            strategy: strategy.into(),
-            clients: 7,
-            slots: 3,
-            evaluations: 10,
-            replicate_delays: delays.to_vec(),
-            best_delay: ci.mean,
-            ci95: ci.half_width,
-            mean_delay: ci.mean,
-            events: 0,
-            rank,
-        }
     }
 
     #[test]
@@ -613,6 +157,7 @@ mod tests {
             let mean = c.replicate_delays.iter().sum::<f64>() / 3.0;
             assert!((c.best_delay - mean).abs() < 1e-12);
             assert!(c.ci95 > 0.0, "non-degenerate replicate set must have a CI");
+            assert!((c.ci95 - mean_ci(&c.replicate_delays).half_width).abs() < 1e-12);
         }
         // Replicate 0 keeps the scenario seed: it equals the
         // single-replicate run exactly.
@@ -701,71 +246,29 @@ mod tests {
     }
 
     #[test]
-    fn standings_regret_survives_zero_and_nan_winner_delays() {
-        // A degenerate scenario whose winner delay is 0 (or NaN) must
-        // not poison the geometric regret into -inf/NaN: those terms
-        // collapse to the neutral 1.0 and the sort stays meaningful.
-        let cells = vec![
-            synthetic_cell("zero", "alpha", &[0.0, 0.0], 1),
-            synthetic_cell("zero", "beta", &[2.0, 2.0], 2),
-            synthetic_cell("nan", "alpha", &[f64::NAN], 2),
-            synthetic_cell("nan", "beta", &[1.0], 1),
-            synthetic_cell("sane", "alpha", &[1.0], 1),
-            synthetic_cell("sane", "beta", &[3.0], 2),
-        ];
-        let table = standings(&cells);
-        assert_eq!(table.len(), 2);
-        for s in &table {
-            assert!(s.regret.is_finite(), "{}: regret {}", s.strategy, s.regret);
-            assert!(s.regret >= 1.0 - 1e-12, "{}: regret {}", s.strategy, s.regret);
-            assert!(s.mean_ratio.is_finite(), "{}: ratio {}", s.strategy, s.mean_ratio);
-        }
-        // alpha's only usable regret term is the "sane" win (ratio 1);
-        // beta's is 3× — beta carries the larger regret.
-        let by_name = |n: &str| table.iter().find(|s| s.strategy == n).unwrap();
-        assert!(by_name("beta").regret > by_name("alpha").regret);
-    }
-
-    #[test]
-    fn significance_matrix_pairs_best_against_each() {
-        // beta strictly faster on all 6 (scenario, replicate) pairs but
-        // one: sign test must see 5 wins, 1 loss.
-        let cells = vec![
-            synthetic_cell("s1", "alpha", &[2.0, 3.0, 4.0], 2),
-            synthetic_cell("s1", "beta", &[1.0, 2.0, 3.0], 1),
-            synthetic_cell("s2", "alpha", &[1.0, 5.0, 6.0], 2),
-            synthetic_cell("s2", "beta", &[1.5, 4.0, 5.0], 1),
-        ];
-        let sig = significance_matrix(&cells).expect("two strategies");
-        assert_eq!(sig.best, "beta");
-        assert_eq!(sig.versus.len(), 1);
-        let (name, t) = &sig.versus[0];
-        assert_eq!(name, "alpha");
-        assert_eq!((t.a_wins, t.b_wins, t.ties), (5, 1, 0));
-        assert!(t.p_value > 0.0 && t.p_value <= 1.0);
-        // One strategy ⇒ no matrix.
-        assert!(significance_matrix(&cells[..1]).is_none());
-    }
-
-    #[test]
     fn report_writes_deterministic_csv() {
         let (scenarios, strategies) = tiny_matrix();
         let cfg = |threads| FleetConfig { threads, replicates: 2, ..FleetConfig::default() };
         let cells = run_fleet(&scenarios, &strategies, &cfg(3)).unwrap();
-        let path = std::env::temp_dir().join("repro_fleet_test.csv");
+        let dir = std::env::temp_dir().join("repro_fleet_adapter_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("fleet.csv");
         report_fleet(&cells, Some(&path)).unwrap();
-        let sig_path = sig_csv_path(&path);
+        let sig_path = dir.join("fleet.sig.csv");
+        let effect_path = dir.join("fleet.effect.csv");
         let first = std::fs::read_to_string(&path).unwrap();
         let first_sig = std::fs::read_to_string(&sig_path).unwrap();
+        let first_effect = std::fs::read_to_string(&effect_path).unwrap();
         let cells2 = run_fleet(&scenarios, &strategies, &cfg(1)).unwrap();
         report_fleet(&cells2, Some(&path)).unwrap();
-        let second = std::fs::read_to_string(&path).unwrap();
-        let second_sig = std::fs::read_to_string(&sig_path).unwrap();
-        assert_eq!(first, second, "CSV must be byte-identical per seed");
-        assert_eq!(first_sig, second_sig, "sig CSV must be byte-identical per seed");
+        assert_eq!(first, std::fs::read_to_string(&path).unwrap());
+        assert_eq!(first_sig, std::fs::read_to_string(&sig_path).unwrap());
+        assert_eq!(first_effect, std::fs::read_to_string(&effect_path).unwrap());
         assert_eq!(first.lines().count(), 10); // header + 9 cells
         assert!(first.lines().next().unwrap().contains("best_delay_ci95"));
         assert_eq!(first_sig.lines().count(), 3); // header + 2 comparisons
         assert!(first_sig.lines().next().unwrap().contains("p_value"));
+        assert_eq!(first_effect.lines().count(), 3);
+        assert!(first_effect.lines().next().unwrap().contains("effect_size"));
     }
 }

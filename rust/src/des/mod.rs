@@ -23,10 +23,12 @@
 //! `analytic` is, e.g. `repro sim --env event-driven`), [`scenarios`]
 //! holds the dynamic-scenario catalog (churn / dropout / straggler /
 //! jitter / drift / correlated-failure / partition / asymmetric-links /
-//! 10k-client cases, loadable from TOML), and [`fleet`] runs the
-//! scenario × strategy × replicate matrix across OS threads for
-//! `repro fleet`, reporting replicate means ± 95% CIs and a paired
-//! sign-test significance matrix.
+//! 10k-client cases, loadable from TOML, each mechanism addressable for
+//! ablation via [`scenarios::MECHANISMS`]), and [`fleet`] adapts the
+//! scenario × strategy × replicate matrix of `repro fleet` onto the
+//! experiment engine ([`crate::exp`]), reporting replicate means ± 95%
+//! CIs, a paired sign-test significance matrix and Wilcoxon
+//! signed-rank effect sizes.
 
 pub mod engine;
 pub mod fleet;
@@ -37,8 +39,11 @@ pub mod scenarios;
 pub use engine::EventQueue;
 pub use fleet::{
     report_fleet, run_fleet, significance_matrix, standings, FleetCell, FleetConfig,
-    SignificanceMatrix, StrategyStanding,
+    SignificanceMatrix, StrategyStanding, VersusRow,
 };
 pub use network::{LinkParams, NetworkModel};
 pub use round::{simulate_round, EventDrivenEnv, RoundOutcome, RoundRealization, SyncMode};
-pub use scenarios::{builtin_catalog, load_dir, Dynamics, NamedScenario};
+pub use scenarios::{
+    builtin_catalog, disable_mechanism, load_dir, mechanism_enabled, Dynamics, NamedScenario,
+    MECHANISMS,
+};

@@ -134,6 +134,70 @@ pub struct NamedScenario {
     pub sim: SimScenario,
 }
 
+/// The ablatable mechanism registry: every dynamic/network behavior a
+/// scenario can switch on, addressable by a stable dotted key (used by
+/// `repro ablate --mechanisms k1,k2`). Each entry is `(key, summary)`.
+pub const MECHANISMS: [(&str, &str); 9] = [
+    ("dynamics.dropout", "per-round trainer dropout"),
+    ("dynamics.churn", "leave/rejoin membership churn"),
+    ("dynamics.straggler", "straggler bursts"),
+    ("dynamics.drift", "per-client speed-drift random walk"),
+    ("dynamics.corr_fail", "correlated regional failures"),
+    ("dynamics.partition", "multi-round network partitions"),
+    ("net.jitter", "lognormal per-transfer latency jitter"),
+    ("net.contention", "shared aggregator ingress capacity"),
+    ("net.asym", "up/down bandwidth asymmetry"),
+];
+
+fn unknown_mechanism(key: &str) -> String {
+    let valid: Vec<&str> = MECHANISMS.iter().map(|(k, _)| *k).collect();
+    format!("unknown mechanism {key:?}; valid mechanisms: {}", valid.join(", "))
+}
+
+/// Whether `key`'s mechanism is switched on in `des`.
+pub fn mechanism_enabled(des: &DesSpec, key: &str) -> Result<bool, String> {
+    Ok(match key {
+        "dynamics.dropout" => des.dynamics.dropout_prob > 0.0,
+        "dynamics.churn" => {
+            des.dynamics.churn_leave_prob > 0.0 || des.dynamics.churn_join_prob > 0.0
+        }
+        "dynamics.straggler" => des.dynamics.straggler_prob > 0.0,
+        "dynamics.drift" => des.dynamics.drift_sigma > 0.0,
+        "dynamics.corr_fail" => des.dynamics.corr_fail_prob > 0.0,
+        "dynamics.partition" => des.dynamics.partition_prob > 0.0,
+        "net.jitter" => des.net.jitter_sigma > 0.0,
+        "net.contention" => des.net.agg_ingress > 0.0,
+        "net.asym" => des.net.up_asymmetry_enabled() || des.net.down_asymmetry_enabled(),
+        other => return Err(unknown_mechanism(other)),
+    })
+}
+
+/// Switch `key`'s mechanism off in place (the one-mechanism-off
+/// scenario variants `repro ablate` materializes). Disabling an
+/// already-off mechanism is a no-op, so ablated variants of a scenario
+/// that never had the mechanism reproduce the baseline bit for bit.
+pub fn disable_mechanism(des: &mut DesSpec, key: &str) -> Result<(), String> {
+    match key {
+        "dynamics.dropout" => des.dynamics.dropout_prob = 0.0,
+        "dynamics.churn" => {
+            des.dynamics.churn_leave_prob = 0.0;
+            des.dynamics.churn_join_prob = 0.0;
+        }
+        "dynamics.straggler" => des.dynamics.straggler_prob = 0.0,
+        "dynamics.drift" => des.dynamics.drift_sigma = 0.0,
+        "dynamics.corr_fail" => des.dynamics.corr_fail_prob = 0.0,
+        "dynamics.partition" => des.dynamics.partition_prob = 0.0,
+        "net.jitter" => des.net.jitter_sigma = 0.0,
+        "net.contention" => des.net.agg_ingress = 0.0,
+        "net.asym" => {
+            des.net.up_mult_range = (0.0, 0.0);
+            des.net.down_mult_range = (0.0, 0.0);
+        }
+        other => return Err(unknown_mechanism(other)),
+    }
+    Ok(())
+}
+
 /// Dynamics variants crossed with every base size in the built-in
 /// catalog (name suffix, spec editor).
 fn variants() -> Vec<(&'static str, fn(&mut DesSpec))> {
@@ -446,6 +510,42 @@ mod tests {
             let r = d.next_round(10);
             assert!(r.slowdown.iter().all(|&s| (0.25..=4.0).contains(&s)));
         }
+    }
+
+    #[test]
+    fn mechanism_registry_covers_every_catalog_variant() {
+        // Every dynamics variant in the catalog is addressable by a
+        // mechanism key, toggling off round-trips validation, and
+        // disabling an off mechanism is a spec no-op.
+        let cat = builtin_catalog();
+        for (key, _) in MECHANISMS {
+            let hit = cat
+                .iter()
+                .any(|s| mechanism_enabled(&s.sim.des, key).unwrap());
+            assert!(hit, "no builtin scenario enables {key}");
+        }
+        let mixed = cat.iter().find(|s| s.name == "mega10k-mixed").unwrap();
+        for (key, _) in MECHANISMS {
+            assert!(mechanism_enabled(&mixed.sim.des, key).unwrap(), "{key} off in mixed");
+            let mut des = mixed.sim.des.clone();
+            disable_mechanism(&mut des, key).unwrap();
+            assert!(!mechanism_enabled(&des, key).unwrap(), "{key} survived disabling");
+            des.validate().unwrap_or_else(|e| panic!("{key}: disabled spec invalid: {e}"));
+            // Only that mechanism changed: re-disabling is idempotent.
+            let mut again = des.clone();
+            disable_mechanism(&mut again, key).unwrap();
+            assert_eq!(des, again);
+        }
+        // Disabling a mechanism that was never on leaves the spec
+        // untouched (the ablate no-op contract).
+        let tiny = cat.iter().find(|s| s.name == "tiny-static").unwrap();
+        let mut des = tiny.sim.des.clone();
+        disable_mechanism(&mut des, "dynamics.corr_fail").unwrap();
+        assert_eq!(des, tiny.sim.des);
+        // Unknown keys are actionable errors.
+        let err = mechanism_enabled(&des, "dynamics.gremlins").unwrap_err();
+        assert!(err.contains("valid mechanisms"), "{err}");
+        assert!(disable_mechanism(&mut des, "net.gremlins").is_err());
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Per-mechanism ablation: `repro ablate` materializes one-mechanism-off
+//! variants of a dynamic scenario and reports how much round delay each
+//! mechanism contributes, with paired 95% CIs.
+//!
+//! Every variant keeps the scenario's seed, so replicate `r` of the
+//! baseline and of each variant share the identical population and (up
+//! to the mechanism's own RNG draws) the same dynamics process — the
+//! per-replicate deltas are paired differences, and their Student-t CI
+//! is the honest error bar on the mechanism's contribution. A mechanism
+//! that was never enabled produces a byte-identical variant, so its
+//! delta is exactly zero (and a warning is logged).
+
+use super::engine::run_plan;
+use super::plan::{ExperimentPlan, ReplicateRange};
+use super::scheduler::TrialScheduler;
+use crate::des::scenarios::{disable_mechanism, mechanism_enabled, MECHANISMS};
+use crate::des::NamedScenario;
+use crate::log_warn;
+use crate::metrics::{mean_ci, CsvWriter, MeanCi};
+use crate::placement::PlacementError;
+use std::path::Path;
+
+/// One mechanism's measured contribution to the scenario's delay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MechanismEffect {
+    /// Registry key (`dynamics.corr_fail`, `net.asym`, ...).
+    pub mechanism: String,
+    /// Whether the scenario had the mechanism switched on (off ⇒ the
+    /// ablated variant is byte-identical and the delta is exactly 0).
+    pub enabled: bool,
+    /// Replicate mean ± 95% CI with the mechanism removed.
+    pub ablated: MeanCi,
+    /// Paired per-replicate `baseline − ablated` differences, mean ±
+    /// 95% CI. Positive = the mechanism slows the round.
+    pub delta: MeanCi,
+}
+
+/// The full ablation study over one scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AblationOutcome {
+    pub scenario: String,
+    pub strategy: String,
+    pub evaluations: usize,
+    pub replicates: usize,
+    /// Replicate mean ± 95% CI of the untouched scenario.
+    pub baseline: MeanCi,
+    pub effects: Vec<MechanismEffect>,
+}
+
+/// Ablation parameters.
+#[derive(Debug, Clone)]
+pub struct AblationConfig {
+    /// Registry strategy evaluated under every variant.
+    pub strategy: String,
+    /// Evaluation budget override per replicate.
+    pub evals: Option<usize>,
+    /// Paired replicates per variant (fixed — the adaptive allocator's
+    /// leader-vs-rivals rule has no meaning across variants).
+    pub replicates: usize,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        AblationConfig { strategy: "pso".into(), evals: None, replicates: 3 }
+    }
+}
+
+/// The mechanism keys enabled in a scenario — the default `--mechanisms`
+/// set for `repro ablate`.
+pub fn enabled_mechanisms(ns: &NamedScenario) -> Vec<String> {
+    MECHANISMS
+        .iter()
+        .filter(|(k, _)| mechanism_enabled(&ns.sim.des, k).unwrap_or(false))
+        .map(|(k, _)| k.to_string())
+        .collect()
+}
+
+/// Run the ablation: baseline + one variant per mechanism, all through
+/// the experiment engine (one plan, one scheduler), then fold the cells
+/// into per-mechanism paired deltas.
+pub fn run_ablation(
+    ns: &NamedScenario,
+    mechanisms: &[String],
+    cfg: &AblationConfig,
+    sched: &TrialScheduler,
+) -> Result<AblationOutcome, PlacementError> {
+    if mechanisms.is_empty() {
+        return Err(PlacementError::Environment(format!(
+            "nothing to ablate in scenario {:?}: no mechanisms requested and none enabled \
+             (pass --mechanisms, e.g. --mechanisms dynamics.dropout,net.jitter)",
+            ns.name
+        )));
+    }
+    let mut scenarios = vec![ns.clone()];
+    let mut enabled_flags = Vec::with_capacity(mechanisms.len());
+    let mut seen: Vec<&str> = Vec::with_capacity(mechanisms.len());
+    for key in mechanisms {
+        if seen.contains(&key.as_str()) {
+            // A repeated key would double the trial cost and emit two
+            // identically-named variants/rows.
+            return Err(PlacementError::Environment(format!(
+                "mechanism {key:?} listed more than once"
+            )));
+        }
+        seen.push(key);
+        let enabled = mechanism_enabled(&ns.sim.des, key)
+            .map_err(PlacementError::Environment)?;
+        if !enabled {
+            log_warn!(
+                "ablate",
+                "mechanism {key} is not enabled in scenario {:?}; its delta will be exactly 0",
+                ns.name
+            );
+        }
+        let mut variant = ns.clone();
+        variant.name = format!("{}-no-{key}", ns.name);
+        disable_mechanism(&mut variant.sim.des, key).map_err(PlacementError::Environment)?;
+        scenarios.push(variant);
+        enabled_flags.push(enabled);
+    }
+    let plan = ExperimentPlan {
+        scenarios,
+        strategies: vec![cfg.strategy.clone()],
+        evals: cfg.evals,
+        env_override: None,
+        replicates: ReplicateRange::fixed(cfg.replicates),
+    };
+    let cells = run_plan(&plan, sched)?;
+    let baseline = &cells[0];
+    let effects = mechanisms
+        .iter()
+        .zip(&enabled_flags)
+        .zip(&cells[1..])
+        .map(|((key, &enabled), cell)| {
+            let deltas: Vec<f64> = baseline
+                .replicate_delays
+                .iter()
+                .zip(&cell.replicate_delays)
+                .map(|(b, a)| b - a)
+                .collect();
+            MechanismEffect {
+                mechanism: key.clone(),
+                enabled,
+                ablated: mean_ci(&cell.replicate_delays),
+                delta: mean_ci(&deltas),
+            }
+        })
+        .collect();
+    Ok(AblationOutcome {
+        scenario: ns.name.clone(),
+        strategy: baseline.strategy.clone(),
+        evaluations: baseline.evaluations,
+        replicates: baseline.replicate_delays.len(),
+        baseline: mean_ci(&baseline.replicate_delays),
+        effects,
+    })
+}
+
+/// Print the ablation table and optionally persist it as CSV. Rows are
+/// deterministic per scenario seed and independent of the thread count.
+pub fn report_ablation(out: &AblationOutcome, csv: Option<&Path>) -> std::io::Result<()> {
+    println!(
+        "ablation: scenario {} · strategy {} · {} replicates × {} evaluations",
+        out.scenario, out.strategy, out.replicates, out.evaluations
+    );
+    println!(
+        "baseline delay: {:.6} ± {:.6} (95% CI over replicate bests)\n",
+        out.baseline.mean, out.baseline.half_width
+    );
+    println!(
+        "{:<22} {:>22} {:>22} {:>9}",
+        "mechanism off", "ablated delay ± CI", "delta ± CI", "share"
+    );
+    for e in &out.effects {
+        let share = if out.baseline.mean != 0.0 {
+            format!("{:>+8.1}%", 100.0 * e.delta.mean / out.baseline.mean)
+        } else {
+            "       -".to_string()
+        };
+        let tag = if e.enabled { "" } else { "  (mechanism was off)" };
+        println!(
+            "{:<22} {:>12.6} ± {:>7.6} {:>12.6} ± {:>7.6} {share}{tag}",
+            e.mechanism,
+            e.ablated.mean,
+            e.ablated.half_width,
+            e.delta.mean,
+            e.delta.half_width,
+        );
+    }
+    if let Some(path) = csv {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "scenario", "strategy", "mechanism", "enabled", "replicates",
+                "baseline_mean", "baseline_ci95", "ablated_mean", "ablated_ci95",
+                "delta_mean", "delta_ci95", "delta_pct",
+            ],
+        )?;
+        for e in &out.effects {
+            let pct = if out.baseline.mean != 0.0 {
+                100.0 * e.delta.mean / out.baseline.mean
+            } else {
+                f64::NAN
+            };
+            w.write_row(&[
+                out.scenario.clone(),
+                out.strategy.clone(),
+                e.mechanism.clone(),
+                e.enabled.to_string(),
+                out.replicates.to_string(),
+                format!("{:.9}", out.baseline.mean),
+                format!("{:.9}", out.baseline.half_width),
+                format!("{:.9}", e.ablated.mean),
+                format!("{:.9}", e.ablated.half_width),
+                format!("{:.9}", e.delta.mean),
+                format!("{:.9}", e.delta.half_width),
+                format!("{:.6}", pct),
+            ])?;
+        }
+        w.flush()?;
+        println!("\nablation CSV: {}", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::builtin_catalog;
+
+    fn builtin(name: &str) -> NamedScenario {
+        builtin_catalog().into_iter().find(|s| s.name == name).unwrap()
+    }
+
+    #[test]
+    fn ablation_reports_paired_deltas_with_cis_on_a_builtin_scenario() {
+        // The acceptance scenario: a real catalog entry, one enabled
+        // mechanism, per-mechanism deltas with 95% CIs.
+        let ns = builtin("tiny-straggler");
+        let cfg = AblationConfig { evals: Some(30), replicates: 4, ..AblationConfig::default() };
+        let out = run_ablation(
+            &ns,
+            &["dynamics.straggler".to_string()],
+            &cfg,
+            &TrialScheduler::new(2),
+        )
+        .unwrap();
+        assert_eq!(out.scenario, "tiny-straggler");
+        assert_eq!(out.strategy, "pso");
+        assert_eq!(out.replicates, 4);
+        assert!(out.baseline.mean.is_finite() && out.baseline.mean > 0.0);
+        assert_eq!(out.effects.len(), 1);
+        let e = &out.effects[0];
+        assert!(e.enabled);
+        assert!(e.ablated.mean.is_finite() && e.ablated.mean > 0.0);
+        assert!(e.delta.mean.is_finite());
+        assert!(e.delta.half_width.is_finite() && e.delta.half_width >= 0.0);
+        // Deterministic and thread-count independent.
+        let again = run_ablation(
+            &ns,
+            &["dynamics.straggler".to_string()],
+            &cfg,
+            &TrialScheduler::new(1),
+        )
+        .unwrap();
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn disabled_mechanisms_yield_exactly_zero_deltas() {
+        // Ablating a mechanism the scenario never enabled produces a
+        // byte-identical variant: same seeds, same trials, delta == 0.
+        let ns = builtin("tiny-static");
+        let cfg = AblationConfig { evals: Some(20), replicates: 3, ..AblationConfig::default() };
+        let out = run_ablation(
+            &ns,
+            &["dynamics.corr_fail".to_string()],
+            &cfg,
+            &TrialScheduler::new(2),
+        )
+        .unwrap();
+        let e = &out.effects[0];
+        assert!(!e.enabled);
+        assert_eq!(e.delta.mean, 0.0);
+        assert_eq!(e.delta.half_width, 0.0);
+        assert_eq!(e.ablated.mean, out.baseline.mean);
+    }
+
+    #[test]
+    fn enabled_mechanisms_default_and_empty_request_error() {
+        let ns = builtin("tiny-dropout");
+        assert_eq!(enabled_mechanisms(&ns), vec!["dynamics.dropout".to_string()]);
+        let none = enabled_mechanisms(&builtin("tiny-static"));
+        assert!(none.is_empty());
+        let err = run_ablation(&ns, &[], &AblationConfig::default(), &TrialScheduler::new(1))
+            .unwrap_err();
+        assert!(err.to_string().contains("nothing to ablate"), "{err}");
+        // Unknown mechanism keys are typed, actionable errors.
+        let err = run_ablation(
+            &ns,
+            &["dynamics.gremlins".to_string()],
+            &AblationConfig { evals: Some(5), replicates: 1, ..AblationConfig::default() },
+            &TrialScheduler::new(1),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("valid mechanisms"), "{err}");
+        // Repeated keys are rejected before any trial runs.
+        let err = run_ablation(
+            &ns,
+            &["dynamics.dropout".to_string(), "dynamics.dropout".to_string()],
+            &AblationConfig { evals: Some(5), replicates: 1, ..AblationConfig::default() },
+            &TrialScheduler::new(1),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn report_ablation_writes_deterministic_csv() {
+        let ns = builtin("tiny-dropout");
+        let cfg = AblationConfig { evals: Some(20), replicates: 3, ..AblationConfig::default() };
+        let out =
+            run_ablation(&ns, &enabled_mechanisms(&ns), &cfg, &TrialScheduler::new(2)).unwrap();
+        let dir = std::env::temp_dir().join("repro_exp_ablate_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("ablate.csv");
+        report_ablation(&out, Some(&path)).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        report_ablation(&out, Some(&path)).unwrap();
+        assert_eq!(first, std::fs::read_to_string(&path).unwrap());
+        assert!(first.lines().next().unwrap().contains("delta_ci95"));
+        assert_eq!(first.lines().count(), 1 + out.effects.len());
+    }
+}

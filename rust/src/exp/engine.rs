@@ -1,0 +1,272 @@
+//! The experiment engine: turn an [`ExperimentPlan`] into scheduled
+//! replicate trials and aggregate them into ranked cells.
+//!
+//! ## Adaptive replicate allocation
+//!
+//! With an adaptive range (`--replicates MIN..MAX`) the engine first
+//! runs `MIN` replicates for every cell, then adds one replicate at a
+//! time *per scenario* (every strategy in the scenario advances
+//! together, keeping the trials paired) until either
+//!
+//! * the scenario's leader separates: the leader's 95% CI upper bound
+//!   lies strictly below every rival's CI lower bound on the replicate
+//!   means, or
+//! * `MAX` replicates have been spent.
+//!
+//! The stop rule reads only *completed* replicate sets — batch
+//! composition is a pure function of prior results, and every trial
+//! derives its randomness from `(scenario seed, replicate)` — so the
+//! allocation (and therefore every CSV byte) is independent of
+//! `--threads`. With `MIN == MAX` the engine degenerates to the fixed
+//! `--replicates R` fleet semantics, job for job.
+
+use super::plan::{replicate_seed, ExperimentPlan};
+use super::report::ExperimentCell;
+use super::scheduler::TrialScheduler;
+use super::trial::{run_cell_trial, TrialOutcome};
+use crate::metrics::{mean_ci, rank_ascending};
+use crate::placement::PlacementError;
+
+/// Does the leader's 95% CI separate from every rival's? `sets` holds
+/// one replicate-delay vector per strategy (a scenario's row). With a
+/// single strategy there is no rival to separate from, so the answer is
+/// vacuously true (the allocator stops at `min`). Sets with fewer than
+/// two replicates have degenerate zero-width CIs that say nothing
+/// about variance — they never separate, so a `--replicates 1..N`
+/// range always spends at least two replicates before stopping instead
+/// of degenerating back into the single-seed lottery. Non-finite means
+/// never separate either — such a scenario runs to `max` and is
+/// surfaced by the report instead of being silently truncated.
+pub(crate) fn ci_separated(sets: &[Vec<f64>]) -> bool {
+    if sets.len() < 2 {
+        return true;
+    }
+    if sets.iter().any(|s| s.len() < 2) {
+        return false;
+    }
+    let cis: Vec<_> = sets.iter().map(|s| mean_ci(s)).collect();
+    let leader = match (0..cis.len()).min_by(|&a, &b| cis[a].mean.total_cmp(&cis[b].mean)) {
+        Some(i) => i,
+        None => return true,
+    };
+    if !cis[leader].mean.is_finite() {
+        return false;
+    }
+    cis.iter().enumerate().all(|(i, rival)| {
+        i == leader
+            || cis[leader].mean + cis[leader].half_width < rival.mean - rival.half_width
+    })
+}
+
+/// Run the plan's full cell grid through `sched`. The returned vector
+/// is ordered scenario-major (plan order) with per-scenario competition
+/// ranks (on replicate means) filled in.
+pub fn run_plan(
+    plan: &ExperimentPlan,
+    sched: &TrialScheduler,
+) -> Result<Vec<ExperimentCell>, PlacementError> {
+    plan.validate()?;
+    let n_sc = plan.scenarios.len();
+    let n_st = plan.strategies.len();
+    let (rmin, rmax) = (plan.replicates.min, plan.replicates.max);
+    // runs[si * n_st + ti] = completed replicate outcomes, in replicate
+    // order.
+    let mut runs: Vec<Vec<TrialOutcome>> = (0..n_sc * n_st).map(|_| Vec::new()).collect();
+    let mut active = vec![true; n_sc];
+    // Replicates completed so far per scenario (uniform across its
+    // strategies — the pairing invariant).
+    let mut done = vec![0usize; n_sc];
+    loop {
+        // Batch: bring every active scenario up to `min`, then advance
+        // one replicate at a time. Job order is scenario-major with the
+        // replicate index innermost — identical to the fixed-R fleet.
+        let mut jobs: Vec<(usize, usize, usize)> = Vec::new();
+        for si in 0..n_sc {
+            if !active[si] {
+                continue;
+            }
+            let target = if done[si] == 0 { rmin } else { done[si] + 1 };
+            for ti in 0..n_st {
+                for r in done[si]..target {
+                    jobs.push((si, ti, r));
+                }
+            }
+        }
+        if jobs.is_empty() {
+            break;
+        }
+        let results = sched.run(jobs.len(), |j| {
+            let (si, ti, r) = jobs[j];
+            let ns = &plan.scenarios[si];
+            let mut sc = ns.sim.clone();
+            sc.seed = replicate_seed(ns.sim.seed, r);
+            let env = plan.env_of(ns).to_string();
+            run_cell_trial(&sc, &plan.strategies[ti], &env, plan.evals, false)
+        });
+        // Collect in job order (first error wins deterministically).
+        for (&(si, ti, _), res) in jobs.iter().zip(results) {
+            runs[si * n_st + ti].push(res?);
+        }
+        for si in 0..n_sc {
+            if !active[si] {
+                continue;
+            }
+            done[si] = if done[si] == 0 { rmin } else { done[si] + 1 };
+            if done[si] >= rmax {
+                active[si] = false;
+                continue;
+            }
+            let sets: Vec<Vec<f64>> = (0..n_st)
+                .map(|ti| runs[si * n_st + ti].iter().map(|t| t.best_delay).collect())
+                .collect();
+            if ci_separated(&sets) {
+                active[si] = false;
+            }
+        }
+        if active.iter().all(|a| !a) {
+            break;
+        }
+    }
+
+    // Aggregate replicate runs into cells (scenario-major).
+    let mut cells = Vec::with_capacity(n_sc * n_st);
+    for (si, ns) in plan.scenarios.iter().enumerate() {
+        for ti in 0..n_st {
+            let set = &runs[si * n_st + ti];
+            let replicate_delays: Vec<f64> = set.iter().map(|t| t.best_delay).collect();
+            let ci = mean_ci(&replicate_delays);
+            debug_assert!(set.iter().all(|t| t.evaluations == set[0].evaluations));
+            cells.push(ExperimentCell {
+                scenario: ns.name.clone(),
+                strategy: set[0].strategy.clone(),
+                clients: ns.sim.client_count(),
+                slots: ns.sim.dimensions(),
+                evaluations: set[0].evaluations,
+                best_delay: ci.mean,
+                ci95: ci.half_width,
+                mean_delay: set.iter().map(|t| t.mean_delay).sum::<f64>() / set.len() as f64,
+                events: set.iter().map(|t| t.events).sum(),
+                replicate_delays,
+                rank: 0,
+            });
+        }
+    }
+    // Rank strategies within each scenario on their replicate means.
+    for chunk in cells.chunks_mut(n_st) {
+        let delays: Vec<f64> = chunk.iter().map(|c| c.best_delay).collect();
+        for (cell, rank) in chunk.iter_mut().zip(rank_ascending(&delays)) {
+            cell.rank = rank;
+        }
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::SimScenario;
+    use crate::des::NamedScenario;
+    use crate::exp::ReplicateRange;
+
+    fn tiny_plan(strategies: &[&str], replicates: ReplicateRange) -> ExperimentPlan {
+        let mut a = SimScenario {
+            depth: 2,
+            width: 2,
+            env: "event-driven".into(),
+            ..SimScenario::default()
+        };
+        a.pso.particles = 3;
+        a.pso.iterations = 5;
+        let mut b = a.clone();
+        b.seed = 9;
+        b.des.dynamics.dropout_prob = 0.2;
+        ExperimentPlan {
+            scenarios: vec![
+                NamedScenario { name: "a".into(), sim: a },
+                NamedScenario { name: "b-dropout".into(), sim: b },
+            ],
+            strategies: strategies.iter().map(|s| s.to_string()).collect(),
+            evals: Some(10),
+            env_override: None,
+            replicates,
+        }
+    }
+
+    #[test]
+    fn ci_separation_rule() {
+        // Far-apart tight sets separate.
+        assert!(ci_separated(&[vec![1.0, 1.1, 0.9], vec![9.0, 9.1, 8.9]]));
+        // Overlapping intervals do not.
+        assert!(!ci_separated(&[vec![1.0, 5.0, 3.0], vec![3.5, 6.0, 2.0]]));
+        // The leader must clear EVERY rival.
+        assert!(!ci_separated(&[
+            vec![1.0, 1.1, 0.9],
+            vec![1.05, 1.15, 0.95],
+            vec![9.0, 9.1, 8.9],
+        ]));
+        // Identical means never separate (equal leader and rival).
+        assert!(!ci_separated(&[vec![2.0, 2.0], vec![2.0, 2.0]]));
+        // Single replicates have degenerate zero-width CIs that carry
+        // no variance information: never separated, so a 1..N range
+        // always spends a second replicate.
+        assert!(!ci_separated(&[vec![1.0], vec![2.0]]));
+        assert!(!ci_separated(&[vec![1.0, 1.1], vec![9.0]]));
+        // One strategy: vacuously separated (no rival to resolve).
+        assert!(ci_separated(&[vec![1.0, 2.0]]));
+        // Non-finite leader means never separate.
+        assert!(!ci_separated(&[vec![f64::NAN, f64::NAN], vec![1.0, 1.2]]));
+    }
+
+    #[test]
+    fn adaptive_counts_stay_in_range_uniform_and_thread_independent() {
+        let plan = tiny_plan(&["pso", "random"], ReplicateRange { min: 2, max: 6 });
+        let one = run_plan(&plan, &TrialScheduler::new(1)).unwrap();
+        let many = run_plan(&plan, &TrialScheduler::new(8)).unwrap();
+        assert_eq!(one, many, "allocation must not depend on thread count");
+        for chunk in one.chunks(2) {
+            let used: Vec<usize> = chunk.iter().map(|c| c.replicate_delays.len()).collect();
+            assert!(used.iter().all(|&u| (2..=6).contains(&u)), "{used:?}");
+            assert_eq!(used[0], used[1], "paired strategies must share the count");
+        }
+    }
+
+    #[test]
+    fn min_one_adaptive_ranges_still_spend_two_replicates() {
+        // --replicates 1..N must not collapse into the single-seed
+        // lottery: a 1-replicate set has a zero-width CI that proves
+        // nothing, so every scenario buys a second replicate first.
+        let plan = tiny_plan(&["pso", "random"], ReplicateRange { min: 1, max: 5 });
+        let cells = run_plan(&plan, &TrialScheduler::new(2)).unwrap();
+        assert!(cells.iter().all(|c| (2..=5).contains(&c.replicate_delays.len())));
+    }
+
+    #[test]
+    fn single_strategy_plans_stop_at_min() {
+        let plan = tiny_plan(&["random"], ReplicateRange { min: 2, max: 9 });
+        let cells = run_plan(&plan, &TrialScheduler::new(2)).unwrap();
+        assert!(cells.iter().all(|c| c.replicate_delays.len() == 2));
+    }
+
+    #[test]
+    fn fixed_range_matches_min_equals_max_adaptive_degenerate() {
+        let fixed = tiny_plan(&["pso", "random"], ReplicateRange::fixed(3));
+        let degen = tiny_plan(&["pso", "random"], ReplicateRange { min: 3, max: 3 });
+        assert_eq!(
+            run_plan(&fixed, &TrialScheduler::new(2)).unwrap(),
+            run_plan(&degen, &TrialScheduler::new(4)).unwrap(),
+        );
+    }
+
+    #[test]
+    fn env_override_pins_the_oracle_for_every_cell() {
+        let mut plan = tiny_plan(&["random"], ReplicateRange::fixed(1));
+        // Scenario env is event-driven (events > 0); overriding to
+        // analytic must silence the simulator for every cell.
+        plan.env_override = Some("analytic".into());
+        let cells = run_plan(&plan, &TrialScheduler::new(1)).unwrap();
+        assert!(cells.iter().all(|c| c.events == 0));
+        plan.env_override = None;
+        let cells = run_plan(&plan, &TrialScheduler::new(1)).unwrap();
+        assert!(cells.iter().all(|c| c.events > 0));
+    }
+}

@@ -1,0 +1,43 @@
+//! The experiment engine — one plan → schedule → report pipeline behind
+//! every comparative claim the reproduction makes.
+//!
+//! The paper's headline numbers are *comparisons* (Fig. 4: PSO ≈43%
+//! faster than random, ≈32% faster than uniform placement; Fig. 3:
+//! swarm-size and depth sweeps). This module owns the machinery for
+//! producing such comparisons trustworthily:
+//!
+//! | concept | type | paper anchor |
+//! |---------|------|--------------|
+//! | what to compare | [`ExperimentPlan`] (scenario × strategy × env × replicate) | the Fig. 3 panel grid, the Fig. 4 strategy line-up |
+//! | how to execute | [`TrialScheduler`] (deterministic thread pool) + [`run_cell_trial`] | one trial = one seeded optimizer-vs-oracle run |
+//! | how many seeds | [`ReplicateRange`] + the adaptive allocator in [`run_plan`] | replaces the single-seed lottery behind any one table entry |
+//! | what to report | [`report_cells`]: ranks, standings, sign test, Wilcoxon signed-rank + rank-biserial | the "X% faster" claims, with error bars and significance |
+//! | why it is faster | [`run_ablation`] (`repro ablate`): one-mechanism-off deltas | attributes delay to churn/jitter/contention/... mechanisms |
+//!
+//! `des::fleet` is a thin adapter over this engine (its fixed
+//! `--replicates R` CSVs are byte-frozen), `sim::runner` routes
+//! `repro sim`/`fig3` through [`run_cell_trial`] on a
+//! [`TrialScheduler`], and the sim-tier `repro compare --replicates`
+//! builds a one-scenario plan. The live tier (`fl::LiveSession`) stays
+//! single-replicate — a real testbed round cannot be re-seeded — and
+//! says so in its report.
+
+pub mod ablate;
+pub mod engine;
+pub mod plan;
+pub mod report;
+pub mod scheduler;
+pub mod trial;
+
+pub use ablate::{
+    enabled_mechanisms, report_ablation, run_ablation, AblationConfig, AblationOutcome,
+    MechanismEffect,
+};
+pub use engine::run_plan;
+pub use plan::{replicate_seed, ExperimentPlan, ReplicateRange};
+pub use report::{
+    report_cells, significance_matrix, standings, ExperimentCell, SignificanceMatrix,
+    StrategyStanding, VersusRow,
+};
+pub use scheduler::TrialScheduler;
+pub use trial::{run_cell_trial, TrialOutcome};

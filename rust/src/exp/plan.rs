@@ -1,0 +1,211 @@
+//! Experiment plans: the declarative description of a comparison —
+//! which scenarios, which strategies, which delay oracle, how many
+//! replicates — that the engine turns into scheduled trials.
+//!
+//! A plan's cell grid is scenario × strategy × replicate; the
+//! environment axis rides on each scenario (`sim.env`) unless
+//! [`ExperimentPlan::env_override`] pins one oracle for the whole plan.
+//! Replicate seeds are derived from the scenario seed only (SplitMix64
+//! stream), so within a scenario every strategy faces the identical
+//! population/network/dynamics process per replicate — paired trials.
+
+use crate::des::NamedScenario;
+use crate::placement::{registry, PlacementError};
+use crate::prng::SplitMix64;
+
+/// Inclusive replicate budget `[min, max]` per (scenario, strategy)
+/// cell. `min == max` is a fixed count (the classic `--replicates R`);
+/// `min < max` enables the adaptive allocator: the engine runs `min`
+/// replicates, then adds one replicate at a time to a scenario until
+/// the leader's 95% CI separates from every rival or `max` is reached.
+///
+/// CLI syntax: `R` (fixed) or `MIN..MAX` (adaptive, **inclusive** of
+/// `MAX` — this is a replicate budget, not a Rust range).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicateRange {
+    pub min: usize,
+    pub max: usize,
+}
+
+impl ReplicateRange {
+    /// A fixed replicate count (0 and 1 both mean a single run, the
+    /// historical `FleetConfig::replicates` contract).
+    pub fn fixed(r: usize) -> ReplicateRange {
+        let r = r.max(1);
+        ReplicateRange { min: r, max: r }
+    }
+
+    /// Whether the range is a single fixed count (no adaptation).
+    pub fn is_fixed(&self) -> bool {
+        self.min == self.max
+    }
+
+    /// Parse the CLI syntax: `"5"` or `"2..10"` (inclusive).
+    pub fn parse(s: &str) -> Result<ReplicateRange, String> {
+        let parse_one = |tok: &str| -> Result<usize, String> {
+            tok.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("--replicates: expected integer, got {tok:?}"))
+        };
+        match s.split_once("..") {
+            None => Ok(ReplicateRange::fixed(parse_one(s)?)),
+            Some((lo, hi)) => {
+                let min = parse_one(lo)?.max(1);
+                let max = parse_one(hi)?;
+                if max < min {
+                    return Err(format!(
+                        "--replicates: empty range {s:?} (max {max} < min {min}; \
+                         the syntax is MIN..MAX, inclusive)"
+                    ));
+                }
+                Ok(ReplicateRange { min, max })
+            }
+        }
+    }
+}
+
+/// One experiment: the full cell grid the engine will schedule.
+#[derive(Debug, Clone)]
+pub struct ExperimentPlan {
+    /// Scenarios (catalog order is report order).
+    pub scenarios: Vec<NamedScenario>,
+    /// Registry strategy names (aliases accepted, duplicates rejected).
+    pub strategies: Vec<String>,
+    /// Evaluation budget override per replicate (None = each scenario's
+    /// `pso.iterations × pso.particles`).
+    pub evals: Option<usize>,
+    /// Delay oracle override for every cell (None = each scenario's
+    /// `sim.env`).
+    pub env_override: Option<String>,
+    /// Replicates per cell (fixed or adaptive).
+    pub replicates: ReplicateRange,
+}
+
+impl ExperimentPlan {
+    /// Fail fast on a typo or an empty grid before paying for
+    /// simulations: at least one scenario and strategy, no
+    /// alias-duplicated strategies (they would double-count cells and
+    /// desync the paired significance series), and every environment
+    /// name resolvable.
+    pub fn validate(&self) -> Result<(), PlacementError> {
+        if self.scenarios.is_empty() || self.strategies.is_empty() {
+            return Err(PlacementError::Environment(
+                "experiment plan is empty: need at least one scenario and one strategy".into(),
+            ));
+        }
+        let mut canon: Vec<&'static str> = Vec::with_capacity(self.strategies.len());
+        for s in &self.strategies {
+            let c = registry::canonical(s)?;
+            if canon.contains(&c) {
+                return Err(PlacementError::DuplicateStrategy { name: s.clone() });
+            }
+            canon.push(c);
+        }
+        if let Some(env) = &self.env_override {
+            registry::canonical_env(env)?;
+        } else {
+            for ns in &self.scenarios {
+                registry::canonical_env(&ns.sim.env)?;
+            }
+        }
+        if self.replicates.min == 0 || self.replicates.max < self.replicates.min {
+            return Err(PlacementError::Environment(format!(
+                "bad replicate range {}..{}: need 1 <= min <= max",
+                self.replicates.min, self.replicates.max
+            )));
+        }
+        Ok(())
+    }
+
+    /// The environment name cell (si) runs under.
+    pub fn env_of(&self, scenario: &NamedScenario) -> &str {
+        self.env_override.as_deref().unwrap_or(&scenario.sim.env)
+    }
+}
+
+/// Derive the seed for replicate `r` of a scenario. Replicate 0 keeps
+/// the scenario's own seed, so `--replicates 1` reproduces the
+/// single-run fleet byte for byte; later replicates walk a SplitMix64
+/// stream salted off the scenario seed. Strategy-independent by
+/// construction: candidates within a scenario compete under identical
+/// realizations each replicate.
+pub fn replicate_seed(base: u64, r: usize) -> u64 {
+    if r == 0 {
+        return base;
+    }
+    let mut sm = SplitMix64::new(base ^ 0xF1EE_7C0D_ED5E_ED5Eu64);
+    let mut seed = 0u64;
+    for _ in 0..r {
+        seed = sm.next();
+    }
+    seed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::SimScenario;
+
+    fn plan_of(strategies: &[&str]) -> ExperimentPlan {
+        ExperimentPlan {
+            scenarios: vec![NamedScenario {
+                name: "t".into(),
+                sim: SimScenario { depth: 2, width: 2, ..SimScenario::default() },
+            }],
+            strategies: strategies.iter().map(|s| s.to_string()).collect(),
+            evals: None,
+            env_override: None,
+            replicates: ReplicateRange::fixed(1),
+        }
+    }
+
+    #[test]
+    fn replicate_range_parses_fixed_and_adaptive() {
+        assert_eq!(ReplicateRange::parse("5").unwrap(), ReplicateRange { min: 5, max: 5 });
+        assert_eq!(ReplicateRange::parse("2..10").unwrap(), ReplicateRange { min: 2, max: 10 });
+        // 0 clamps to 1 (the historical `--replicates 0` contract).
+        assert_eq!(ReplicateRange::parse("0").unwrap(), ReplicateRange::fixed(1));
+        assert_eq!(ReplicateRange::parse("0..3").unwrap(), ReplicateRange { min: 1, max: 3 });
+        // A one-point range is fixed.
+        assert!(ReplicateRange::parse("4..4").unwrap().is_fixed());
+        assert!(ReplicateRange::parse("x").is_err());
+        assert!(ReplicateRange::parse("2..z").is_err());
+        let err = ReplicateRange::parse("5..2").unwrap_err();
+        assert!(err.contains("inclusive"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let mut p = plan_of(&["pso", "nope"]);
+        assert!(matches!(p.validate(), Err(PlacementError::UnknownStrategy { .. })));
+        p = plan_of(&["uniform", "round-robin"]);
+        assert!(matches!(p.validate(), Err(PlacementError::DuplicateStrategy { .. })));
+        p = plan_of(&[]);
+        assert!(p.validate().unwrap_err().to_string().contains("empty"));
+        p = plan_of(&["pso"]);
+        p.scenarios.clear();
+        assert!(p.validate().unwrap_err().to_string().contains("empty"));
+        p = plan_of(&["pso"]);
+        p.scenarios[0].sim.env = "dokcer".into();
+        assert!(matches!(p.validate(), Err(PlacementError::UnknownEnvironment { .. })));
+        // An env override is validated instead of the scenarios' envs.
+        p.env_override = Some("des".into());
+        p.validate().unwrap();
+        p.env_override = Some("dokcer".into());
+        assert!(matches!(p.validate(), Err(PlacementError::UnknownEnvironment { .. })));
+        p = plan_of(&["pso"]);
+        p.replicates = ReplicateRange { min: 3, max: 2 };
+        assert!(p.validate().unwrap_err().to_string().contains("replicate range"));
+    }
+
+    #[test]
+    fn replicate_seeds_are_distinct_and_anchor_replicate_zero() {
+        assert_eq!(replicate_seed(42, 0), 42);
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..64).map(|r| replicate_seed(42, r)).collect();
+        assert_eq!(seeds.len(), 64);
+        // Strategy-independent: the derivation has no strategy input, and
+        // the same (base, r) always maps to the same seed.
+        assert_eq!(replicate_seed(7, 5), replicate_seed(7, 5));
+    }
+}

@@ -1,0 +1,494 @@
+//! The report builder: ranked cells → standings, paired significance
+//! (sign test + Wilcoxon signed-rank + rank-biserial effect size) and
+//! the deterministic CSV trio (`<out>.csv`, `<out>.sig.csv`,
+//! `<out>.effect.csv`).
+//!
+//! The matrix and sig CSV schemas are frozen (golden-tested in
+//! `rust/tests/fleet_integration.rs`): the engine refactor and the
+//! adaptive allocator must not move a byte at a fixed replicate count.
+//! The new effect-size statistics therefore land in their own
+//! `<out>.effect.csv` next to the other two.
+
+use crate::log_warn;
+use crate::metrics::{
+    mean_ci, paired_sign_test, wilcoxon_signed_rank, CsvWriter, SignTest, Wilcoxon,
+};
+use std::path::Path;
+
+/// One (scenario, strategy) cell of an experiment: a replicate set.
+/// (Re-exported as `des::FleetCell` for the fleet adapter.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentCell {
+    pub scenario: String,
+    pub strategy: String,
+    pub clients: usize,
+    pub slots: usize,
+    /// Evaluations spent per replicate (equal across replicates).
+    pub evaluations: usize,
+    /// Best virtual-time round delay found, one entry per replicate in
+    /// replicate order. Its length is the cell's `replicates_used` —
+    /// under adaptive allocation scenarios stop at different counts.
+    pub replicate_delays: Vec<f64>,
+    /// Mean of `replicate_delays` — the cell's ranking statistic.
+    pub best_delay: f64,
+    /// Half-width of the 95% Student-t CI over `replicate_delays`
+    /// (0.0 for a single replicate).
+    pub ci95: f64,
+    /// Mean delay across the whole search (exploration cost), averaged
+    /// over replicates.
+    pub mean_delay: f64,
+    /// Events the simulator fired for this cell, totalled over
+    /// replicates.
+    pub events: u64,
+    /// Rank of `best_delay` among the scenario's strategies (1 = won).
+    pub rank: usize,
+}
+
+/// Per-strategy aggregate over the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrategyStanding {
+    pub strategy: String,
+    /// Mean rank across scenarios (1.0 = won everything), ranks taken
+    /// on replicate means.
+    pub mean_rank: f64,
+    /// Scenarios won outright.
+    pub wins: usize,
+    /// Geometric-mean of `best_delay / scenario winner's best_delay`
+    /// (1.0 = always optimal; 2.0 = on average 2× the winner).
+    pub regret: f64,
+    /// Mean normalized delay: every (scenario, replicate) delay divided
+    /// by its scenario winner's mean delay, averaged — the arithmetic,
+    /// CI-carrying cousin of `regret` (scale-free across the catalog's
+    /// 7-to-10k-client spread).
+    pub mean_ratio: f64,
+    /// Half-width of the 95% Student-t CI on `mean_ratio`.
+    pub ratio_ci: f64,
+}
+
+/// Aggregate cells into the final standings, best mean rank first.
+/// Scenarios whose winner delay is zero or non-finite cannot anchor a
+/// meaningful ratio — `ln(0)` would poison the geometric mean into
+/// `-inf`/NaN and silently corrupt the sort — so those terms contribute
+/// a neutral regret of 1.0 and a warning is logged instead.
+pub fn standings(cells: &[ExperimentCell]) -> Vec<StrategyStanding> {
+    let mut order: Vec<&str> = Vec::new();
+    for c in cells {
+        if !order.contains(&c.strategy.as_str()) {
+            order.push(&c.strategy);
+        }
+    }
+    // Scenario winners (on replicate means) for the regret ratio.
+    let mut winner: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+    for c in cells {
+        let w = winner.entry(&c.scenario).or_insert(f64::INFINITY);
+        *w = w.min(c.best_delay);
+    }
+    for (scenario, &w) in &winner {
+        if !(w.is_finite() && w > 0.0) {
+            log_warn!(
+                "exp",
+                "scenario {scenario:?} winner delay {w} is unusable as a regret anchor; \
+                 treating its regret terms as 1.0"
+            );
+        }
+    }
+    let mut out: Vec<StrategyStanding> = order
+        .iter()
+        .map(|&s| {
+            let mine: Vec<&ExperimentCell> = cells.iter().filter(|c| c.strategy == s).collect();
+            let n = mine.len().max(1) as f64;
+            let mean_rank = mine.iter().map(|c| c.rank as f64).sum::<f64>() / n;
+            let wins = mine.iter().filter(|c| c.rank == 1).count();
+            let log_regret = mine
+                .iter()
+                .map(|c| {
+                    let ratio = c.best_delay / winner[c.scenario.as_str()];
+                    // Guard: zero/NaN winner (or cell) delays collapse to
+                    // the neutral ratio instead of poisoning the mean.
+                    if ratio.is_finite() && ratio > 0.0 {
+                        ratio.ln()
+                    } else {
+                        0.0
+                    }
+                })
+                .sum::<f64>()
+                / n;
+            let ratios: Vec<f64> = mine
+                .iter()
+                .flat_map(|c| {
+                    let w = winner[c.scenario.as_str()];
+                    c.replicate_delays.iter().map(move |&d| {
+                        let r = d / w;
+                        if r.is_finite() && r > 0.0 {
+                            r
+                        } else {
+                            1.0
+                        }
+                    })
+                })
+                .collect();
+            let ci = mean_ci(&ratios);
+            StrategyStanding {
+                strategy: s.to_string(),
+                mean_rank,
+                wins,
+                regret: log_regret.exp(),
+                mean_ratio: ci.mean,
+                ratio_ci: ci.half_width,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.mean_rank.total_cmp(&b.mean_rank));
+    out
+}
+
+/// One comparison row of the significance matrix: the best-ranked
+/// strategy against one rival over the paired (scenario, replicate)
+/// delay series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VersusRow {
+    /// The rival strategy.
+    pub strategy: String,
+    /// Two-sided exact paired sign test (`sign.a_wins` counts pairs
+    /// where the best strategy was strictly faster).
+    pub sign: SignTest,
+    /// Wilcoxon signed-rank over the same pairs with both sides divided
+    /// by their scenario winner's mean delay (scale-free across the
+    /// catalog's 7-to-10k-client spread), with the matched-pairs
+    /// rank-biserial correlation as effect size (positive = the best
+    /// strategy is faster).
+    pub wilcoxon: Wilcoxon,
+}
+
+/// The paired-significance report: the best-ranked strategy tested
+/// against every other over the (scenario, replicate) delay pairs.
+/// Replicate seeds are shared across strategies within a scenario, so
+/// each pair compares the identical population/network/dynamics
+/// process; between same-cadence strategies (everything except the
+/// cohort-batching `ga`/`pso-batched`) the two sides even see the
+/// identical per-evaluation realization sequence — exactly the pairing
+/// the sign and signed-rank tests want. Under adaptive allocation the
+/// per-scenario replicate counts differ, but within a scenario both
+/// sides always hold the same count, so the series stay aligned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SignificanceMatrix {
+    /// Strategy with the best mean rank.
+    pub best: String,
+    /// One row per rival, in standings order.
+    pub versus: Vec<VersusRow>,
+}
+
+/// Compute the significance matrix from ranked cells. `None` when the
+/// matrix has fewer than two strategies (nothing to compare).
+pub fn significance_matrix(cells: &[ExperimentCell]) -> Option<SignificanceMatrix> {
+    significance_for(&standings(cells), cells)
+}
+
+/// [`significance_matrix`] over an already-computed standings table
+/// (avoids re-aggregating — and re-warning — inside [`report_cells`]).
+fn significance_for(
+    table: &[StrategyStanding],
+    cells: &[ExperimentCell],
+) -> Option<SignificanceMatrix> {
+    if table.len() < 2 {
+        return None;
+    }
+    let best = table[0].strategy.clone();
+    // Per-scenario anchors for the signed-rank test: the catalog mixes
+    // 7-client and 10k-client scenarios whose delays differ by orders
+    // of magnitude, and Wilcoxon ranks |differences| — unnormalized,
+    // the big scenarios would monopolize every top rank and the effect
+    // size would ignore the small ones. Dividing both sides of a pair
+    // by its scenario winner's mean makes the ranks scale-free (the
+    // same anchor standings' `mean_ratio` uses); the sign test needs no
+    // anchor because positive scaling never flips a sign. Degenerate
+    // winners (zero/NaN) fall back to a neutral 1.0 anchor.
+    let mut winner: std::collections::BTreeMap<&str, f64> = std::collections::BTreeMap::new();
+    for c in cells {
+        let w = winner.entry(&c.scenario).or_insert(f64::INFINITY);
+        *w = w.min(c.best_delay);
+    }
+    let anchor = |scenario: &str| -> f64 {
+        let w = winner[scenario];
+        if w.is_finite() && w > 0.0 {
+            w
+        } else {
+            1.0
+        }
+    };
+    let delays_of = |strategy: &str, normalized: bool| -> Vec<f64> {
+        cells
+            .iter()
+            .filter(|c| c.strategy == strategy)
+            .flat_map(|c| {
+                let div = if normalized { anchor(&c.scenario) } else { 1.0 };
+                c.replicate_delays.iter().map(move |&d| d / div)
+            })
+            .collect()
+    };
+    let best_raw = delays_of(&best, false);
+    let best_norm = delays_of(&best, true);
+    let versus = table[1..]
+        .iter()
+        .map(|s| VersusRow {
+            strategy: s.strategy.clone(),
+            sign: paired_sign_test(&best_raw, &delays_of(&s.strategy, false)),
+            wilcoxon: wilcoxon_signed_rank(&best_norm, &delays_of(&s.strategy, true)),
+        })
+        .collect();
+    Some(SignificanceMatrix { best, versus })
+}
+
+/// `foo.csv` → `foo.sig.csv`: where the significance matrix lands next
+/// to the cell matrix.
+pub(crate) fn sig_csv_path(path: &Path) -> std::path::PathBuf {
+    suffixed_csv_path(path, "sig")
+}
+
+/// `foo.csv` → `foo.effect.csv`: where the effect sizes land.
+pub(crate) fn effect_csv_path(path: &Path) -> std::path::PathBuf {
+    suffixed_csv_path(path, "effect")
+}
+
+fn suffixed_csv_path(path: &Path, tag: &str) -> std::path::PathBuf {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("fleet");
+    path.with_file_name(format!("{stem}.{tag}.csv"))
+}
+
+/// Print the ranked summary + significance matrix and (optionally)
+/// write the matrix CSV plus `<out>.sig.csv` (sign-test rows, frozen
+/// schema) and `<out>.effect.csv` (Wilcoxon + rank-biserial rows). The
+/// CSVs contain only seed-deterministic columns, so identical seeds
+/// produce byte-identical files regardless of thread count.
+pub fn report_cells(cells: &[ExperimentCell], csv: Option<&Path>) -> std::io::Result<()> {
+    let scenarios: std::collections::BTreeSet<&str> =
+        cells.iter().map(|c| c.scenario.as_str()).collect();
+    let rep_min = cells.iter().map(|c| c.replicate_delays.len()).min().unwrap_or(0);
+    let rep_max = cells.iter().map(|c| c.replicate_delays.len()).max().unwrap_or(0);
+    let rep_str = if rep_min == rep_max {
+        format!("{rep_min}")
+    } else {
+        format!("{rep_min}..{rep_max} (adaptive)")
+    };
+    let total_evals: usize = cells.iter().map(|c| c.evaluations * c.replicate_delays.len()).sum();
+    let total_events: u64 = cells.iter().map(|c| c.events).sum();
+    println!(
+        "experiment: {} scenarios × {} strategies × {} replicates = {} cells, {} evaluations, {} virtual events",
+        scenarios.len(),
+        cells.len() / scenarios.len().max(1),
+        rep_str,
+        cells.len(),
+        total_evals,
+        total_events,
+    );
+    println!("\n=== standings (by mean rank; delay ×best ± 95% CI) ===");
+    println!(
+        "{:<14} {:>10} {:>6} {:>10} {:>20}",
+        "strategy", "mean rank", "wins", "regret ×", "delay ×best ± CI"
+    );
+    let table = standings(cells);
+    for s in &table {
+        println!(
+            "{:<14} {:>10.2} {:>6} {:>10.3} {:>13.3} ± {:.3}",
+            s.strategy, s.mean_rank, s.wins, s.regret, s.mean_ratio, s.ratio_ci
+        );
+    }
+    let sig = significance_for(&table, cells);
+    if let Some(sig) = &sig {
+        println!(
+            "\n=== significance: paired tests, {} vs each (n = {} scenario×replicate pairs) ===",
+            sig.best,
+            cells.iter().filter(|c| c.strategy == sig.best).map(|c| c.replicate_delays.len()).sum::<usize>(),
+        );
+        println!(
+            "{:<14} {:>8} {:>8} {:>6} {:>10} {:>12} {:>9}",
+            "vs strategy", "wins", "losses", "ties", "sign p", "wilcoxon p", "effect r"
+        );
+        for row in &sig.versus {
+            println!(
+                "{:<14} {:>8} {:>8} {:>6} {:>10.6} {:>12.6} {:>+9.3}",
+                row.strategy,
+                row.sign.a_wins,
+                row.sign.b_wins,
+                row.sign.ties,
+                row.sign.p_value,
+                row.wilcoxon.p_value,
+                row.wilcoxon.rank_biserial,
+            );
+        }
+    }
+    if let Some(path) = csv {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "scenario", "strategy", "clients", "slots", "evaluations", "replicates",
+                "best_delay_mean", "best_delay_ci95", "mean_delay", "rank",
+            ],
+        )?;
+        for c in cells {
+            w.write_row(&[
+                c.scenario.clone(),
+                c.strategy.clone(),
+                c.clients.to_string(),
+                c.slots.to_string(),
+                c.evaluations.to_string(),
+                c.replicate_delays.len().to_string(),
+                format!("{:.9}", c.best_delay),
+                format!("{:.9}", c.ci95),
+                format!("{:.9}", c.mean_delay),
+                c.rank.to_string(),
+            ])?;
+        }
+        w.flush()?;
+        println!("matrix CSV: {}", path.display());
+        if let Some(sig) = &sig {
+            let sig_path = sig_csv_path(path);
+            let mut w = CsvWriter::create(
+                &sig_path,
+                &["best_strategy", "vs_strategy", "best_wins", "losses", "ties", "p_value"],
+            )?;
+            for row in &sig.versus {
+                w.write_row(&[
+                    sig.best.clone(),
+                    row.strategy.clone(),
+                    row.sign.a_wins.to_string(),
+                    row.sign.b_wins.to_string(),
+                    row.sign.ties.to_string(),
+                    format!("{:.6}", row.sign.p_value),
+                ])?;
+            }
+            w.flush()?;
+            println!("significance CSV: {}", sig_path.display());
+            let effect_path = effect_csv_path(path);
+            let mut w = CsvWriter::create(
+                &effect_path,
+                &[
+                    "best_strategy", "vs_strategy", "pairs", "w_plus", "w_minus",
+                    "wilcoxon_p", "effect_size",
+                ],
+            )?;
+            for row in &sig.versus {
+                w.write_row(&[
+                    sig.best.clone(),
+                    row.strategy.clone(),
+                    row.wilcoxon.n.to_string(),
+                    format!("{:.1}", row.wilcoxon.w_plus),
+                    format!("{:.1}", row.wilcoxon.w_minus),
+                    format!("{:.6}", row.wilcoxon.p_value),
+                    format!("{:.6}", row.wilcoxon.rank_biserial),
+                ])?;
+            }
+            w.flush()?;
+            println!("effect-size CSV: {}", effect_path.display());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic cell for standings-level tests.
+    pub(crate) fn synthetic_cell(
+        scenario: &str,
+        strategy: &str,
+        delays: &[f64],
+        rank: usize,
+    ) -> ExperimentCell {
+        let ci = mean_ci(delays);
+        ExperimentCell {
+            scenario: scenario.into(),
+            strategy: strategy.into(),
+            clients: 7,
+            slots: 3,
+            evaluations: 10,
+            replicate_delays: delays.to_vec(),
+            best_delay: ci.mean,
+            ci95: ci.half_width,
+            mean_delay: ci.mean,
+            events: 0,
+            rank,
+        }
+    }
+
+    #[test]
+    fn standings_regret_survives_zero_and_nan_winner_delays() {
+        // A degenerate scenario whose winner delay is 0 (or NaN) must
+        // not poison the geometric regret into -inf/NaN: those terms
+        // collapse to the neutral 1.0 and the sort stays meaningful.
+        let cells = vec![
+            synthetic_cell("zero", "alpha", &[0.0, 0.0], 1),
+            synthetic_cell("zero", "beta", &[2.0, 2.0], 2),
+            synthetic_cell("nan", "alpha", &[f64::NAN], 2),
+            synthetic_cell("nan", "beta", &[1.0], 1),
+            synthetic_cell("sane", "alpha", &[1.0], 1),
+            synthetic_cell("sane", "beta", &[3.0], 2),
+        ];
+        let table = standings(&cells);
+        assert_eq!(table.len(), 2);
+        for s in &table {
+            assert!(s.regret.is_finite(), "{}: regret {}", s.strategy, s.regret);
+            assert!(s.regret >= 1.0 - 1e-12, "{}: regret {}", s.strategy, s.regret);
+            assert!(s.mean_ratio.is_finite(), "{}: ratio {}", s.strategy, s.mean_ratio);
+        }
+        // alpha's only usable regret term is the "sane" win (ratio 1);
+        // beta's is 3× — beta carries the larger regret.
+        let by_name = |n: &str| table.iter().find(|s| s.strategy == n).unwrap();
+        assert!(by_name("beta").regret > by_name("alpha").regret);
+    }
+
+    #[test]
+    fn significance_matrix_pairs_best_against_each() {
+        // beta strictly faster on all 6 (scenario, replicate) pairs but
+        // one: sign test must see 5 wins, 1 loss, and the signed-rank
+        // effect must point beta's way.
+        let cells = vec![
+            synthetic_cell("s1", "alpha", &[2.0, 3.0, 4.0], 2),
+            synthetic_cell("s1", "beta", &[1.0, 2.0, 3.0], 1),
+            synthetic_cell("s2", "alpha", &[1.0, 5.0, 6.0], 2),
+            synthetic_cell("s2", "beta", &[1.5, 4.0, 5.0], 1),
+        ];
+        let sig = significance_matrix(&cells).expect("two strategies");
+        assert_eq!(sig.best, "beta");
+        assert_eq!(sig.versus.len(), 1);
+        let row = &sig.versus[0];
+        assert_eq!(row.strategy, "alpha");
+        assert_eq!((row.sign.a_wins, row.sign.b_wins, row.sign.ties), (5, 1, 0));
+        assert!(row.sign.p_value > 0.0 && row.sign.p_value <= 1.0);
+        assert_eq!(row.wilcoxon.n, 6);
+        assert!(row.wilcoxon.rank_biserial > 0.0, "best must carry a positive effect");
+        assert!(row.wilcoxon.p_value > 0.0 && row.wilcoxon.p_value <= 1.0);
+        // One strategy ⇒ no matrix.
+        assert!(significance_matrix(&cells[..1]).is_none());
+    }
+
+    #[test]
+    fn report_writes_the_effect_csv_next_to_matrix_and_sig() {
+        let cells = vec![
+            synthetic_cell("s1", "alpha", &[2.0, 3.0], 2),
+            synthetic_cell("s1", "beta", &[1.0, 2.0], 1),
+        ];
+        let dir = std::env::temp_dir().join("repro_exp_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("out.csv");
+        report_cells(&cells, Some(&path)).unwrap();
+        let matrix = std::fs::read_to_string(&path).unwrap();
+        let sig = std::fs::read_to_string(sig_csv_path(&path)).unwrap();
+        let effect = std::fs::read_to_string(effect_csv_path(&path)).unwrap();
+        // Frozen schemas for matrix + sig; the effect CSV is the new
+        // home of the Wilcoxon columns.
+        assert!(matrix.starts_with(
+            "scenario,strategy,clients,slots,evaluations,replicates,\
+             best_delay_mean,best_delay_ci95,mean_delay,rank"
+        ));
+        assert!(sig.starts_with("best_strategy,vs_strategy,best_wins,losses,ties,p_value"));
+        assert!(effect.starts_with(
+            "best_strategy,vs_strategy,pairs,w_plus,w_minus,wilcoxon_p,effect_size"
+        ));
+        assert_eq!(effect.lines().count(), 2);
+        // Deterministic: a second report produces identical bytes.
+        report_cells(&cells, Some(&path)).unwrap();
+        assert_eq!(effect, std::fs::read_to_string(effect_csv_path(&path)).unwrap());
+    }
+}

@@ -1,0 +1,98 @@
+//! The trial scheduler: the atomic-queue `std::thread::scope` worker
+//! pool that `des::fleet` used to hard-code, generalized to any
+//! `Fn(usize) -> T` trial. Results land in a slot vector indexed by job
+//! id, so the output order — and therefore every downstream statistic —
+//! is independent of the thread count and of which worker ran which
+//! job.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A deterministic fan-out executor over OS threads.
+#[derive(Debug, Clone, Copy)]
+pub struct TrialScheduler {
+    /// Worker OS threads (0 = one per available core).
+    threads: usize,
+}
+
+impl TrialScheduler {
+    pub fn new(threads: usize) -> TrialScheduler {
+        TrialScheduler { threads }
+    }
+
+    /// Worker count for a batch of `jobs` trials.
+    fn resolve(&self, jobs: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            self.threads
+        };
+        t.min(jobs)
+    }
+
+    /// Run `jobs` trials and return their results in job order. The
+    /// trial function must derive all of its randomness from the job
+    /// index (e.g. via scenario/replicate seeds) — under that contract
+    /// the returned vector is byte-identical for any thread count.
+    pub fn run<T, F>(&self, jobs: usize, trial: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if jobs == 0 {
+            return Vec::new();
+        }
+        let threads = self.resolve(jobs);
+        if threads <= 1 {
+            return (0..jobs).map(trial).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..jobs).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let j = next.fetch_add(1, Ordering::Relaxed);
+                    if j >= jobs {
+                        break;
+                    }
+                    let out = trial(j);
+                    slots.lock().expect("trial scheduler slots lock")[j] = Some(out);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .expect("trial scheduler slots lock")
+            .into_iter()
+            .map(|s| s.expect("every trial job ran"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_job_order_for_any_thread_count() {
+        let f = |j: usize| j * j;
+        let expect: Vec<usize> = (0..40).map(f).collect();
+        for threads in [0, 1, 3, 8, 64] {
+            assert_eq!(TrialScheduler::new(threads).run(40, f), expect, "threads={threads}");
+        }
+        assert_eq!(TrialScheduler::new(4).run(0, f), Vec::<usize>::new());
+        // More workers than jobs is fine (workers are capped at jobs).
+        assert_eq!(TrialScheduler::new(16).run(2, f), vec![0, 1]);
+    }
+
+    #[test]
+    fn trials_run_concurrently_but_slot_deterministically() {
+        // Each trial sleeps inversely to its index, so completion order
+        // is roughly reversed — slots must still come back in job order.
+        let f = |j: usize| {
+            std::thread::sleep(std::time::Duration::from_micros((20 - j as u64) * 50));
+            j
+        };
+        assert_eq!(TrialScheduler::new(8).run(20, f), (0..20).collect::<Vec<_>>());
+    }
+}

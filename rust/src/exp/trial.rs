@@ -1,0 +1,146 @@
+//! One trial = one optimizer driven against one delay oracle under one
+//! seed. This is the single code path behind `repro sim`, the sim-tier
+//! `repro compare`, `repro fleet` and `repro ablate` — previously
+//! `sim::runner` and `des::fleet` each hand-rolled this loop with
+//! subtly duplicated seeding discipline.
+
+use crate::configio::SimScenario;
+use crate::des::EventDrivenEnv;
+use crate::fitness::ClientAttrs;
+use crate::placement::{drive, registry, Placement, PlacementError};
+use crate::prng::Pcg32;
+use crate::pso::IterationStats;
+
+/// Everything a single trial can report. Heavy fields (`stats`,
+/// `attrs`) are only populated when the caller asks for a trace —
+/// fleet-scale runs aggregate thousands of trials and keep cells light.
+#[derive(Debug, Clone)]
+pub struct TrialOutcome {
+    /// Canonical strategy name the trial ran (alias-resolved).
+    pub strategy: String,
+    /// Fitness evaluations spent.
+    pub evaluations: usize,
+    /// Best delay observed by the drive loop (the fleet's ranking raw
+    /// material).
+    pub best_delay: f64,
+    /// The drive loop's best placement (None only for a zero-eval run).
+    pub drive_best_placement: Option<Placement>,
+    /// The optimizer's own notion of its best, when it tracks one
+    /// (e.g. adaptive-pso re-measures its incumbent under drift).
+    pub opt_best: Option<(Placement, f64)>,
+    /// Whether the optimizer reports convergence.
+    pub converged: bool,
+    /// Mean delay across the whole search (exploration cost).
+    pub mean_delay: f64,
+    /// Events the discrete-event simulator fired (0 for analytic runs).
+    pub events: u64,
+    /// Per-iteration trace rows (empty unless `keep_trace`).
+    pub stats: Vec<IterationStats>,
+    /// The sampled client population (empty unless `keep_trace`).
+    pub attrs: Vec<ClientAttrs>,
+}
+
+/// Run one trial: seed-derived population, registry optimizer, generic
+/// [`drive`] loop against the named delay oracle. The seeding
+/// discipline is the legacy `run_sim` contract — population sampled
+/// first from `sc.seed`, the optimizer stream split off after — so
+/// same-seed runs reproduce the original pipeline bit for bit. The
+/// event-driven oracle is built concretely to keep its event counter;
+/// any other environment goes through the registry factory.
+pub fn run_cell_trial(
+    sc: &SimScenario,
+    strategy: &str,
+    env_name: &str,
+    evals: Option<usize>,
+    keep_trace: bool,
+) -> Result<TrialOutcome, PlacementError> {
+    let cc = sc.client_count();
+    let mut rng = Pcg32::seed_from_u64(sc.seed);
+    let attrs = ClientAttrs::sample_population(
+        cc,
+        sc.pspeed_range,
+        sc.memcap_range,
+        sc.mdatasize,
+        &mut rng,
+    );
+    let mut opt = registry::build_sim(strategy, sc, rng.split())?;
+    let budget = evals.unwrap_or(sc.pso.iterations * sc.pso.particles).max(1);
+    let kept_attrs = if keep_trace { attrs.clone() } else { Vec::new() };
+    let (out, events) = if registry::canonical_env(env_name)? == "event-driven" {
+        let mut env = EventDrivenEnv::from_scenario(sc, attrs);
+        (drive(opt.as_mut(), &mut env, budget)?, env.events_fired)
+    } else {
+        let mut env = registry::build_sim_env(env_name, sc, attrs)?;
+        (drive(opt.as_mut(), env.as_mut(), budget)?, 0)
+    };
+    let mean_delay = if out.stats.is_empty() {
+        out.best_delay
+    } else {
+        out.stats.iter().map(|s| s.mean).sum::<f64>() / out.stats.len() as f64
+    };
+    Ok(TrialOutcome {
+        strategy: opt.name().to_string(),
+        evaluations: out.evaluations,
+        best_delay: out.best_delay,
+        drive_best_placement: out.best_placement,
+        opt_best: opt.best(),
+        converged: opt.converged(),
+        mean_delay,
+        events,
+        stats: if keep_trace { out.stats } else { Vec::new() },
+        attrs: kept_attrs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SimScenario {
+        let mut sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        sc.pso.particles = 3;
+        sc.pso.iterations = 5;
+        sc
+    }
+
+    #[test]
+    fn trial_is_deterministic_and_trace_gating_only_drops_heavy_fields() {
+        let sc = tiny();
+        let full = run_cell_trial(&sc, "pso", "analytic", None, true).unwrap();
+        let lean = run_cell_trial(&sc, "pso", "analytic", None, false).unwrap();
+        assert_eq!(full.best_delay, lean.best_delay);
+        assert_eq!(full.mean_delay, lean.mean_delay);
+        assert_eq!(full.evaluations, lean.evaluations);
+        assert_eq!(full.evaluations, 15);
+        assert_eq!(full.strategy, "pso");
+        assert!(!full.stats.is_empty() && !full.attrs.is_empty());
+        assert!(lean.stats.is_empty() && lean.attrs.is_empty());
+        assert_eq!(full.attrs.len(), sc.client_count());
+    }
+
+    #[test]
+    fn event_driven_trials_count_events_and_honor_eval_overrides() {
+        let sc = tiny();
+        let t = run_cell_trial(&sc, "random", "event-driven", Some(7), false).unwrap();
+        assert_eq!(t.evaluations, 7);
+        assert!(t.events > 0, "des oracle must fire events");
+        let a = run_cell_trial(&sc, "random", "analytic", Some(7), false).unwrap();
+        assert_eq!(a.events, 0, "analytic oracle fires none");
+        // The default-config des oracle is conformant to the analytic
+        // TPD, so the same seed scores identically under both.
+        assert!((t.best_delay - a.best_delay).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_names_are_typed_errors() {
+        let sc = tiny();
+        assert!(matches!(
+            run_cell_trial(&sc, "nope", "analytic", None, false),
+            Err(PlacementError::UnknownStrategy { .. })
+        ));
+        assert!(matches!(
+            run_cell_trial(&sc, "pso", "docker", None, false),
+            Err(PlacementError::UnknownEnvironment { .. })
+        ));
+    }
+}

@@ -30,6 +30,7 @@ pub mod broker;
 pub mod configio;
 pub mod data;
 pub mod des;
+pub mod exp;
 pub mod fitness;
 pub mod fl;
 pub mod hierarchy;

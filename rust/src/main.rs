@@ -3,14 +3,17 @@
 //! ```text
 //! repro sim        [--strategy NAME --env analytic|event-driven --depth D --width W --particles P --iterations N --seed S --out csv]
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
-//! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R --out csv]
-//! repro compare    [--rounds N --time-scale X --strategies a,b,c]
+//! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R|MIN..MAX --out csv]
+//! repro compare    [--rounds N --time-scale X --strategies a,b,c --env live|analytic|event-driven --replicates R|MIN..MAX]
+//! repro ablate     --scenario NAME [--mechanisms k1,k2 --strategy pso --evals N --replicates R --threads N --out csv]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
 //! ```
 
 use anyhow::{anyhow, Result};
 use repro::configio::{Args, SimScenario};
+use repro::des::NamedScenario;
+use repro::exp::{report_cells, run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
 use repro::placement::registry;
 use repro::sim::{ascii_plot, run_sim, run_sim_with};
 
@@ -21,6 +24,7 @@ fn main() -> Result<()> {
         Some("fig3") => cmd_fig3(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
+        Some("ablate") => cmd_ablate(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("broker") => cmd_broker(&args),
         Some("worker") => cmd_worker(&args),
@@ -29,15 +33,23 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: repro <sim|fig3|fleet|compare|e2e|broker> [flags]\n\
+                "usage: repro <sim|fig3|fleet|compare|ablate|e2e|broker> [flags]\n\
                  \n\
                  sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
                  fleet    scenario × strategy × replicate matrix on the discrete-event simulator;\n\
                  \x20        --scenarios builtin|DIR --filter SUBSTR --strategies a,b,c\n\
-                 \x20        --threads N --evals N --replicates R --out csv\n\
-                 \x20        (replicates report mean ± 95% CI and a paired sign-test matrix)\n\
-                 compare  Fig-4 deployment comparison; --strategies a,b,c\n\
+                 \x20        --threads N --evals N --replicates R|MIN..MAX --out csv\n\
+                 \x20        (replicates report mean ± 95% CI, a paired sign-test matrix and\n\
+                 \x20        Wilcoxon effect sizes; MIN..MAX adapts the count per scenario,\n\
+                 \x20        stopping once the leader's CI separates from every rival)\n\
+                 compare  strategy comparison; --strategies a,b,c\n\
+                 \x20        --env live (default): the Fig-4 deployment testbed, 1 replicate\n\
+                 \x20        --env analytic|event-driven: sim-tier, supports --replicates,\n\
+                 \x20        --depth/--width/--seed/--evals/--config like `repro sim`\n\
+                 ablate   per-mechanism ablation of a dynamic scenario (one-mechanism-off deltas);\n\
+                 \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
+                 \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
                  worker   one FL client process attached to a TCP broker\n\
@@ -57,7 +69,12 @@ fn main() -> Result<()> {
                  \x20 analytic      closed-form Eq. 6-7 TPD (default)\n\
                  \x20 event-driven  discrete-event virtual-time round (alias: des);\n\
                  \x20               enable churn/dropout/stragglers/jitter via the\n\
-                 \x20               [des]/[net]/[dynamics] tables of --config TOML"
+                 \x20               [des]/[net]/[dynamics] tables of --config TOML\n\
+                 \n\
+                 ablatable mechanisms (--mechanisms, ablate tier):\n\
+                 \x20 dynamics.dropout | dynamics.churn | dynamics.straggler | dynamics.drift |\n\
+                 \x20 dynamics.corr_fail | dynamics.partition | net.jitter | net.contention |\n\
+                 \x20 net.asym   (default: every mechanism the scenario enables)"
             );
             std::process::exit(2);
         }
@@ -145,11 +162,9 @@ fn cmd_fig3(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Scenario × strategy matrix on the discrete-event simulator, across
-/// OS threads, with a ranked summary + CSV — the scale/dynamics tier
-/// (`repro fleet --scenarios builtin --strategies pso,random,...`).
-fn cmd_fleet(args: &Args) -> Result<()> {
-    use repro::des::{builtin_catalog, load_dir, report_fleet, run_fleet, FleetConfig};
+/// Load `--scenarios builtin|DIR`, optionally filtered by `--filter`.
+fn scenarios_from_args(args: &Args) -> Result<Vec<NamedScenario>> {
+    use repro::des::{builtin_catalog, load_dir};
     let src = args.str_flag("scenarios", "builtin");
     let mut scenarios = if src == "builtin" {
         builtin_catalog()
@@ -164,37 +179,124 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             return Err(anyhow!("--filter {filter:?} matched no scenario"));
         }
     }
+    Ok(scenarios)
+}
+
+/// Scenario × strategy matrix on the discrete-event simulator, across
+/// OS threads, with a ranked summary + CSV — the scale/dynamics tier
+/// (`repro fleet --scenarios builtin --strategies pso,random,...`).
+/// `--replicates MIN..MAX` (inclusive) switches on the adaptive
+/// allocator: scenarios whose leader separates early stop spending
+/// replicates.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let scenarios = scenarios_from_args(args)?;
     let strategies = args.list_flag("strategies").unwrap_or_else(|| {
         registry::NAMES.iter().map(|s| s.to_string()).collect()
     });
-    let cfg = FleetConfig {
-        threads: args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?,
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?;
+    let replicates =
+        ReplicateRange::parse(&args.str_flag("replicates", "1")).map_err(|e| anyhow!(e))?;
+    let plan = ExperimentPlan {
+        scenarios,
+        strategies,
         evals: args.opt_usize_flag("evals").map_err(|e| anyhow!(e))?,
-        replicates: args.usize_flag("replicates", 1).map_err(|e| anyhow!(e))?,
+        env_override: None,
+        replicates,
+    };
+    let rep_str = if replicates.is_fixed() {
+        format!("{}", replicates.min)
+    } else {
+        format!("{}..{} (adaptive)", replicates.min, replicates.max)
     };
     println!(
-        "fleet: {} scenarios ({src}) × {} strategies × {} replicates, threads={}",
-        scenarios.len(),
-        strategies.len(),
-        cfg.replicates.max(1),
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+        "fleet: {} scenarios ({}) × {} strategies × {} replicates, threads={}",
+        plan.scenarios.len(),
+        args.str_flag("scenarios", "builtin"),
+        plan.strategies.len(),
+        rep_str,
+        if threads == 0 { "auto".to_string() } else { threads.to_string() },
     );
-    let cells = run_fleet(&scenarios, &strategies, &cfg).map_err(|e| anyhow!(e))?;
+    let cells = run_plan(&plan, &TrialScheduler::new(threads)).map_err(|e| anyhow!(e))?;
     let out = std::path::PathBuf::from(args.str_flag("out", "results/fleet.csv"));
-    report_fleet(&cells, Some(&out))?;
+    report_cells(&cells, Some(&out))?;
     Ok(())
 }
 
+/// Strategy comparison. `--env live` (default) runs the Fig-4
+/// deployment testbed — one replicate per strategy, because a live
+/// round measures a real (emulated-clock) testbed that cannot be
+/// re-seeded. `--env analytic|event-driven` runs a replicated sim-tier
+/// comparison through the experiment engine instead.
 fn cmd_compare(args: &Args) -> Result<()> {
-    let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
-    let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
-    let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
     let strategies = args.list_flag("strategies").unwrap_or_default();
     // Fail fast on typos before paying for a deployment run.
     for name in &strategies {
         registry::canonical(name).map_err(|e| anyhow!(e))?;
     }
-    repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir, &strategies)
+    let env = args.str_flag("env", "live");
+    let replicates =
+        ReplicateRange::parse(&args.str_flag("replicates", "1")).map_err(|e| anyhow!(e))?;
+    if env == "live" {
+        if replicates.max > 1 {
+            println!(
+                "note: the live tier (fl::LiveSession) measures real testbed rounds and runs \
+                 exactly 1 replicate per strategy; use --env analytic|event-driven for \
+                 replicated comparisons with CIs"
+            );
+        }
+        let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
+        let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
+        let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
+        return repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir, &strategies);
+    }
+    // Sim-tier replicated comparison: one-scenario plan, any oracle.
+    let mut sc = scenario_from_args(args)?;
+    sc.env = env;
+    let strategies = if strategies.is_empty() {
+        repro::sim::DEFAULT_STRATEGIES.iter().map(|s| s.to_string()).collect()
+    } else {
+        strategies
+    };
+    let plan = ExperimentPlan {
+        scenarios: vec![NamedScenario { name: "compare".into(), sim: sc }],
+        strategies,
+        evals: args.opt_usize_flag("evals").map_err(|e| anyhow!(e))?,
+        env_override: None,
+        replicates,
+    };
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?;
+    let cells = run_plan(&plan, &TrialScheduler::new(threads)).map_err(|e| anyhow!(e))?;
+    let out = args.flag("out").map(std::path::PathBuf::from);
+    report_cells(&cells, out.as_deref())?;
+    Ok(())
+}
+
+/// Per-mechanism ablation: re-run one scenario with each mechanism
+/// switched off and report the paired delay deltas with 95% CIs.
+fn cmd_ablate(args: &Args) -> Result<()> {
+    use repro::exp::{enabled_mechanisms, report_ablation, run_ablation, AblationConfig};
+    let name = args
+        .flag("scenario")
+        .ok_or_else(|| anyhow!("--scenario NAME required (e.g. --scenario paper-contended)"))?;
+    let scenarios = scenarios_from_args(args)?;
+    let ns = scenarios
+        .iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow!("unknown scenario {name:?} (try `repro fleet` names)"))?;
+    let mechanisms = args
+        .list_flag("mechanisms")
+        .unwrap_or_else(|| enabled_mechanisms(ns));
+    let cfg = AblationConfig {
+        strategy: args.str_flag("strategy", "pso"),
+        evals: args.opt_usize_flag("evals").map_err(|e| anyhow!(e))?,
+        replicates: args.usize_flag("replicates", 3).map_err(|e| anyhow!(e))?,
+    };
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?;
+    let sched = TrialScheduler::new(threads);
+    let outcome = run_ablation(ns, &mechanisms, &cfg, &sched).map_err(|e| anyhow!(e))?;
+    let out = args.flag("out").map(std::path::PathBuf::from);
+    report_ablation(&outcome, out.as_deref())?;
+    Ok(())
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {

@@ -12,8 +12,11 @@ pub struct CsvWriter<W: Write> {
 }
 
 impl CsvWriter<BufWriter<File>> {
-    /// Create `path` (parents included) and write the header row.
-    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<Self> {
+    /// Create `path` (parents included) and write the header row. The
+    /// header takes any string-ish slice (`&[&str]`, `&[String]`, ...),
+    /// so callers with computed column names pass them directly instead
+    /// of hand-rolling a `Vec<&str>` view first.
+    pub fn create<S: AsRef<str>>(path: &Path, header: &[S]) -> std::io::Result<Self> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -29,7 +32,7 @@ impl CsvWriter<BufWriter<File>> {
 
 impl<W: Write> CsvWriter<W> {
     /// Wrap any writer (tests use `Vec<u8>`).
-    pub fn new(out: W, header: &[&str]) -> std::io::Result<Self> {
+    pub fn new<S: AsRef<str>>(out: W, header: &[S]) -> std::io::Result<Self> {
         let mut w = CsvWriter {
             out,
             columns: header.len(),
@@ -106,5 +109,20 @@ mod tests {
     fn quotes_embedded_quotes() {
         assert_eq!(quote("say \"hi\""), "\"say \"\"hi\"\"\"");
         assert_eq!(quote("plain"), "plain");
+    }
+
+    #[test]
+    fn owned_string_headers_need_no_ref_view() {
+        // The idiom the sim/fleet writers used to hand-roll:
+        // Vec<String> header → Vec<&str> → CsvWriter. Now direct.
+        let header: Vec<String> = (0..3).map(|i| format!("c{i}")).collect();
+        let mut buf = Vec::new();
+        {
+            let mut w = CsvWriter::new(&mut buf, &header).unwrap();
+            w.write_f64_row(&[1.0, 2.0, 3.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("c0,c1,c2\n"));
     }
 }

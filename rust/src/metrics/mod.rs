@@ -10,5 +10,8 @@ mod timer;
 
 pub use csv::CsvWriter;
 pub use recorder::{RoundRecord, RoundRecorder};
-pub use summary::{mean_ci, paired_sign_test, rank_ascending, MeanCi, SignTest, Summary};
+pub use summary::{
+    mean_ci, paired_sign_test, rank_ascending, rank_biserial, wilcoxon_signed_rank, MeanCi,
+    SignTest, Summary, Wilcoxon,
+};
 pub use timer::Stopwatch;

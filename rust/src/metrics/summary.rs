@@ -165,6 +165,133 @@ pub fn paired_sign_test(a: &[f64], b: &[f64]) -> SignTest {
     SignTest { a_wins, b_wins, ties, p_value }
 }
 
+/// Result of a two-sided Wilcoxon signed-rank test with the
+/// matched-pairs rank-biserial correlation as effect size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Wilcoxon {
+    /// Pairs used by the test (zero and non-finite differences are
+    /// dropped, the standard Wilcoxon treatment).
+    pub n: usize,
+    /// Sum of the |difference| ranks where the *first* series was
+    /// strictly smaller (better, for delays).
+    pub w_plus: f64,
+    /// Sum of the ranks where the second series was strictly smaller.
+    pub w_minus: f64,
+    /// Two-sided p-value of H0 "the differences are symmetric about 0".
+    pub p_value: f64,
+    /// Matched-pairs rank-biserial correlation
+    /// `(w_plus − w_minus) / (n(n+1)/2)` ∈ [−1, 1]: +1 = the first
+    /// series smaller on every pair, 0 = no systematic direction.
+    pub rank_biserial: f64,
+    /// Whether the exact null distribution was used (n ≤ 25, no ties
+    /// among |differences|); otherwise the tie-corrected,
+    /// continuity-corrected normal approximation.
+    pub exact: bool,
+}
+
+/// Two-sided Wilcoxon signed-rank test over two equal-length paired
+/// series. Unlike the sign test it weights pairs by the *magnitude*
+/// rank of their difference, so it detects consistent-but-small shifts
+/// the sign test dilutes — at the price of assuming the difference
+/// distribution is symmetric under H0. Zero differences are dropped;
+/// ties among |differences| share average ranks. Exact null
+/// distribution (subset-sum DP over ranks) for n ≤ 25 without ties;
+/// beyond that, the normal approximation with the standard tie
+/// correction `Σ(t³−t)/48` and a 0.5 continuity correction.
+pub fn wilcoxon_signed_rank(a: &[f64], b: &[f64]) -> Wilcoxon {
+    assert_eq!(a.len(), b.len(), "wilcoxon signed-rank needs equal-length series");
+    // d > 0 ⇔ the first series is smaller — the same orientation as
+    // `paired_sign_test::a_wins`.
+    let diffs: Vec<f64> = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| y - x)
+        .filter(|d| d.is_finite() && *d != 0.0)
+        .collect();
+    let n = diffs.len();
+    if n == 0 {
+        return Wilcoxon {
+            n: 0,
+            w_plus: 0.0,
+            w_minus: 0.0,
+            p_value: 1.0,
+            rank_biserial: 0.0,
+            exact: true,
+        };
+    }
+    // Average ranks of |d| (ascending); record tie-group sizes for the
+    // normal path's variance correction.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| diffs[i].abs().total_cmp(&diffs[j].abs()));
+    let mut ranks = vec![0.0f64; n];
+    let mut tie_groups: Vec<usize> = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let mut j = i + 1;
+        while j < n && diffs[idx[j]].abs() == diffs[idx[i]].abs() {
+            j += 1;
+        }
+        tie_groups.push(j - i);
+        let avg = (i + 1 + j) as f64 / 2.0;
+        for k in i..j {
+            ranks[idx[k]] = avg;
+        }
+        i = j;
+    }
+    let has_ties = tie_groups.iter().any(|&t| t > 1);
+    let w_plus: f64 = (0..n).filter(|&k| diffs[k] > 0.0).map(|k| ranks[k]).sum();
+    let total = (n * (n + 1)) as f64 / 2.0;
+    let w_minus = total - w_plus;
+    let w_min = w_plus.min(w_minus);
+    let (p_value, exact) = if n <= 25 && !has_ties {
+        // Without ties every rank is an integer, so w_min is too.
+        (wilcoxon_exact_two_sided(n, w_min.round() as usize), true)
+    } else {
+        let mu = total / 2.0;
+        let tie_term: f64 =
+            tie_groups.iter().map(|&t| (t * t * t - t) as f64).sum::<f64>() / 48.0;
+        let var = (n * (n + 1) * (2 * n + 1)) as f64 / 24.0 - tie_term;
+        if var <= 0.0 {
+            (1.0, false)
+        } else {
+            let z = (w_min + 0.5 - mu) / var.sqrt();
+            ((2.0 * normal_cdf(z)).min(1.0), false)
+        }
+    };
+    Wilcoxon {
+        n,
+        w_plus,
+        w_minus,
+        p_value,
+        rank_biserial: (w_plus - w_minus) / total,
+        exact,
+    }
+}
+
+/// Matched-pairs rank-biserial correlation of two paired series — the
+/// effect size companion to [`wilcoxon_signed_rank`] (positive = the
+/// first series is systematically smaller).
+pub fn rank_biserial(a: &[f64], b: &[f64]) -> f64 {
+    wilcoxon_signed_rank(a, b).rank_biserial
+}
+
+/// Exact two-sided p-value for the signed-rank statistic: P(W ≤ w)
+/// doubled, where W's null distribution is the subset-sum count over
+/// ranks 1..=n (each pair signs + or − with probability ½). Counts stay
+/// below 2^25 for the exact range, so f64 accumulation is lossless.
+fn wilcoxon_exact_two_sided(n: usize, w: usize) -> f64 {
+    let total = n * (n + 1) / 2;
+    let mut counts = vec![0.0f64; total + 1];
+    counts[0] = 1.0;
+    for r in 1..=n {
+        for s in (r..=total).rev() {
+            counts[s] += counts[s - r];
+        }
+    }
+    let cdf: f64 = counts[..=w.min(total)].iter().sum::<f64>() * 0.5f64.powi(n as i32);
+    (2.0 * cdf).min(1.0)
+}
+
 /// P(X <= k) for X ~ Binomial(n, 1/2). Exact summation for the sizes the
 /// fleet produces; falls back to a continuity-corrected normal
 /// approximation once `0.5^n` underflows f64.
@@ -338,6 +465,100 @@ mod tests {
         let t = paired_sign_test(&a, &b);
         assert_eq!((t.a_wins, t.b_wins), (3, 3));
         assert_eq!(t.p_value, 1.0);
+    }
+
+    #[test]
+    fn wilcoxon_all_one_direction_matches_the_exact_table() {
+        // n = 5, every difference positive: W− = 0, two-sided
+        // p = 2 · (1/2)^5 = 0.0625 — the textbook smallest-p row.
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 4.0, 6.0, 8.0, 10.0];
+        let t = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(t.n, 5);
+        assert!(t.exact);
+        assert_eq!((t.w_plus, t.w_minus), (15.0, 0.0));
+        assert!((t.p_value - 0.0625).abs() < 1e-12, "{}", t.p_value);
+        assert_eq!(t.rank_biserial, 1.0);
+        assert_eq!(rank_biserial(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn wilcoxon_matches_the_n10_critical_value_table() {
+        // Standard table: at n = 10 the two-sided α = 0.05 critical
+        // value is W = 8 — exactly P = 0.048828125; W = 9 is already
+        // 0.064453125 (> 0.05). Distinct magnitudes 1..10; negatives at
+        // magnitude ranks {1, 3, 4} give W = 8, ranks {1, 3, 5} give 9.
+        let zeros = [0.0; 10];
+        let d8 = [-1.0, 2.0, -3.0, -4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let t = wilcoxon_signed_rank(&zeros, &d8);
+        assert!(t.exact);
+        assert_eq!(t.w_minus, 8.0);
+        assert!((t.p_value - 0.048828125).abs() < 1e-12, "{}", t.p_value);
+        let d9 = [-1.0, 2.0, -3.0, 4.0, -5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        let t = wilcoxon_signed_rank(&zeros, &d9);
+        assert_eq!(t.w_minus, 9.0);
+        assert!((t.p_value - 0.064453125).abs() < 1e-12, "{}", t.p_value);
+        // n = 6, W = 1: p = 2 · (2/64) = 0.0625.
+        let d = [10.0, -1.0, 20.0, 30.0, 40.0, 50.0];
+        let t = wilcoxon_signed_rank(&[0.0; 6], &d);
+        assert_eq!(t.w_minus, 1.0);
+        assert!((t.p_value - 0.0625).abs() < 1e-12, "{}", t.p_value);
+    }
+
+    #[test]
+    fn wilcoxon_handles_ties_and_zeros_via_the_corrected_normal_path() {
+        // The classic worked example (9 non-zero pairs, tied |d|
+        // magnitudes): average ranks give W+ = 18, W− = 27; the
+        // tie-corrected normal approximation lands near p ≈ 0.635
+        // (cross-checked against an independent Python computation).
+        let a = [125.0, 115.0, 130.0, 140.0, 140.0, 115.0, 140.0, 125.0, 140.0, 135.0];
+        let b = [110.0, 122.0, 125.0, 120.0, 140.0, 124.0, 123.0, 137.0, 135.0, 145.0];
+        let t = wilcoxon_signed_rank(&a, &b);
+        assert_eq!(t.n, 9, "the zero pair is dropped");
+        assert!(!t.exact, "tied magnitudes must use the normal path");
+        assert!((t.w_plus - 18.0).abs() < 1e-12, "{}", t.w_plus);
+        assert!((t.w_minus - 27.0).abs() < 1e-12, "{}", t.w_minus);
+        assert!((t.p_value - 0.6352893188).abs() < 1e-6, "{}", t.p_value);
+        assert!((t.rank_biserial + 0.2).abs() < 1e-12, "{}", t.rank_biserial);
+    }
+
+    #[test]
+    fn wilcoxon_is_symmetric_and_degenerates_sanely() {
+        let a = [1.0, 5.0, 2.0, 9.0, 4.0, 4.5, 8.0];
+        let b = [2.0, 3.0, 2.5, 1.0, 6.0, 7.0, 3.0];
+        let ab = wilcoxon_signed_rank(&a, &b);
+        let ba = wilcoxon_signed_rank(&b, &a);
+        assert_eq!(ab.w_plus, ba.w_minus);
+        assert_eq!(ab.w_minus, ba.w_plus);
+        assert!((ab.p_value - ba.p_value).abs() < 1e-12);
+        assert!((ab.rank_biserial + ba.rank_biserial).abs() < 1e-12);
+        // All-equal series: every pair drops, p = 1, zero effect.
+        let t = wilcoxon_signed_rank(&[3.0; 4], &[3.0; 4]);
+        assert_eq!((t.n, t.p_value, t.rank_biserial), (0, 1.0, 0.0));
+        // Non-finite differences are dropped, not propagated.
+        let t = wilcoxon_signed_rank(&[1.0, f64::NAN, 2.0], &[3.0, 1.0, 5.0]);
+        assert_eq!(t.n, 2);
+        assert!(t.p_value.is_finite());
+    }
+
+    #[test]
+    fn wilcoxon_large_n_normal_path_is_sane() {
+        // 40 distinct-magnitude positive differences: far beyond the
+        // exact range, strongly one-sided — tiny p, full effect.
+        let a: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..40).map(|i| i as f64 + 1.0 + i as f64 * 0.01).collect();
+        let t = wilcoxon_signed_rank(&a, &b);
+        assert!(!t.exact);
+        assert_eq!(t.n, 40);
+        assert!(t.p_value < 1e-6, "{}", t.p_value);
+        assert_eq!(t.rank_biserial, 1.0);
+        // Alternating direction with matched magnitudes: p ≈ 1.
+        let sign = |i: usize| if i % 2 == 0 { 1.0 } else { -1.0 };
+        let c: Vec<f64> = (0..40).map(|i| sign(i) * (i + 1) as f64).collect();
+        let zeros = vec![0.0; 40];
+        let t = wilcoxon_signed_rank(&zeros, &c);
+        assert!(t.p_value > 0.5, "{}", t.p_value);
+        assert!(t.rank_biserial.abs() < 0.2, "{}", t.rank_biserial);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use super::ascii_plot;
 use crate::configio::DeployScenario;
+use crate::exp::TrialScheduler;
 use crate::fl::Deployment;
 use crate::metrics::{CsvWriter, RoundRecorder};
 use crate::placement::registry;
@@ -66,10 +67,20 @@ pub fn run_fig4_comparison(
     } else {
         strategies.to_vec()
     };
-    let mut outcomes = Vec::new();
+    // Each strategy's deployment is one trial on the experiment
+    // scheduler. Live sessions share one broker/runtime and measure
+    // real (emulated-clock) rounds, so the pool is pinned to a single
+    // worker and strategies are dispatched one batch at a time — the
+    // same scheduling surface as the sim tier, but a failed deployment
+    // still aborts the comparison before the next strategy pays for a
+    // full testbed run. Each trial is one replicate (a live round
+    // cannot be re-seeded).
+    let sched = TrialScheduler::new(1);
+    let mut outcomes = Vec::with_capacity(names.len());
     for name in &names {
         crate::log_info!("fig4", "running strategy {name} for {rounds} rounds");
-        outcomes.push(run_strategy(&sc, name, runtime.clone(), time_scale)?);
+        let mut batch = sched.run(1, |_| run_strategy(&sc, name, runtime.clone(), time_scale));
+        outcomes.push(batch.pop().expect("one trial per strategy")?);
     }
     report_fig4(&outcomes, out_dir)?;
     Ok(())
@@ -88,9 +99,8 @@ pub fn report_fig4(outcomes: &[StrategyOutcome], out_dir: &Path) -> Result<()> {
     for o in outcomes {
         header.push(format!("{}_loss", o.name));
     }
-    let href: Vec<&str> = header.iter().map(String::as_str).collect();
     let path = out_dir.join("fig4.csv");
-    let mut w = CsvWriter::create(&path, &href)?;
+    let mut w = CsvWriter::create(&path, &header)?;
     for r in 0..rounds {
         let mut row = vec![r as f64];
         for o in outcomes {

@@ -11,7 +11,9 @@ mod plot;
 mod runner;
 mod trace;
 
-pub use fig4::{report_fig4, run_e2e, run_fig4_comparison, run_strategy, StrategyOutcome};
+pub use fig4::{
+    report_fig4, run_e2e, run_fig4_comparison, run_strategy, StrategyOutcome, DEFAULT_STRATEGIES,
+};
 pub use plot::ascii_plot;
 pub use runner::{run_sim, run_sim_in, run_sim_with, SimResult};
 pub use trace::SimTrace;

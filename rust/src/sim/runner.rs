@@ -1,14 +1,16 @@
 //! Simulation driver: scenario → population → optimizer × environment →
-//! trace. Any registered strategy runs against the [`AnalyticTpd`]
-//! environment through the generic [`drive`] loop; `"pso"` replays the
-//! paper's Algorithm 1 exactly (same seed ⇒ same trace as the original
-//! closure-driven `run_sim`).
+//! trace. A `repro sim` run is a one-cell experiment: the trial is
+//! executed by [`crate::exp::run_cell_trial`] on a
+//! [`crate::exp::TrialScheduler`] — the same code path `repro fleet`,
+//! `repro compare` and `repro ablate` schedule at scale — and `"pso"`
+//! replays the paper's Algorithm 1 exactly (same seed ⇒ same trace as
+//! the original closure-driven `run_sim`).
 
 use super::SimTrace;
 use crate::configio::SimScenario;
+use crate::exp::{run_cell_trial, TrialScheduler};
 use crate::fitness::ClientAttrs;
-use crate::placement::{drive, registry, PlacementError};
-use crate::prng::Pcg32;
+use crate::placement::PlacementError;
 
 /// Output of one simulation run.
 #[derive(Debug, Clone)]
@@ -40,43 +42,29 @@ pub fn run_sim_in(
     strategy: &str,
     env_name: &str,
 ) -> Result<SimResult, PlacementError> {
-    let client_count = scenario.client_count();
-
-    let mut rng = Pcg32::seed_from_u64(scenario.seed);
-    let attrs = ClientAttrs::sample_population(
-        client_count,
-        scenario.pspeed_range,
-        scenario.memcap_range,
-        scenario.mdatasize,
-        &mut rng,
-    );
-
-    // The optimizer draws from a stream split *after* population
-    // sampling — exactly the legacy `run_sim` seeding, so PSO runs are
-    // reproducible against the original pipeline.
-    let mut opt = registry::build_sim(strategy, scenario, rng.split())?;
-    let mut env = registry::build_sim_env(env_name, scenario, attrs.clone())?;
-
-    let budget = scenario.pso.iterations * scenario.pso.particles;
-    let outcome = drive(opt.as_mut(), env.as_mut(), budget)?;
-
-    let (best_placement, best_tpd) = match opt.best() {
-        Some((p, t)) => (p.into_vec(), t),
+    // One-cell experiment: a single trial scheduled like any fleet
+    // replicate. `run_cell_trial` keeps the legacy seeding discipline
+    // (population sampled from `scenario.seed`, the optimizer stream
+    // split off after), so PSO runs reproduce the original pipeline.
+    let mut results = TrialScheduler::new(1)
+        .run(1, |_| run_cell_trial(scenario, strategy, env_name, None, true));
+    let t = results.pop().expect("one-cell plan yields one trial")?;
+    let (best_placement, best_tpd) = match t.opt_best {
+        Some((p, d)) => (p.into_vec(), d),
         None => (
-            outcome.best_placement.clone().map(|p| p.into_vec()).unwrap_or_default(),
-            outcome.best_delay,
+            t.drive_best_placement.map(|p| p.into_vec()).unwrap_or_default(),
+            t.best_delay,
         ),
     };
-
     Ok(SimResult {
         scenario: scenario.clone(),
-        strategy: opt.name().to_string(),
-        trace: SimTrace::from_stats(&outcome.stats),
+        strategy: t.strategy,
+        trace: SimTrace::from_stats(&t.stats),
         best_placement,
         best_tpd,
-        converged: opt.converged(),
-        attrs,
-        evaluations: outcome.evaluations,
+        converged: t.converged,
+        attrs: t.attrs,
+        evaluations: t.evaluations,
     })
 }
 
@@ -96,6 +84,8 @@ pub fn run_sim(scenario: &SimScenario) -> SimResult {
 mod tests {
     use super::*;
     use crate::hierarchy::HierarchySpec;
+    use crate::placement::registry;
+    use crate::prng::Pcg32;
 
     fn quick_scenario() -> SimScenario {
         let mut sc = SimScenario {

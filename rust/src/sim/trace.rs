@@ -73,8 +73,7 @@ impl SimTrace {
         for p in 0..self.per_particle.len() {
             header.push(format!("p{p}"));
         }
-        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
-        let mut w = CsvWriter::create(path, &header_refs)?;
+        let mut w = CsvWriter::create(path, &header)?;
         for it in 0..self.iterations() {
             let mut row = vec![
                 it as f64,

@@ -1,19 +1,29 @@
-//! Integration tests for the statistical fleet runner: thread-count
-//! independence at the CSV byte level, golden coverage of the
-//! CI/significance columns, and the adaptive-pso-vs-pso drift study the
-//! ROADMAP asks for.
+//! Integration tests for the statistical fleet runner and the
+//! experiment engine behind it: thread-count independence at the CSV
+//! byte level (fixed and adaptive replicate allocation), golden
+//! coverage of the CI/significance/effect columns, and the
+//! adaptive-pso-vs-pso drift study the ROADMAP asks for.
 
 use repro::configio::SimScenario;
 use repro::des::{
     builtin_catalog, report_fleet, run_fleet, significance_matrix, standings, FleetConfig,
     NamedScenario,
 };
+use repro::exp::{run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
 
-/// The statistical fleet CSV schema (golden): any column rename or
-/// reorder is a deliberate, test-visible change.
+/// The statistical fleet CSV schemas (golden): any column rename or
+/// reorder is a deliberate, test-visible change. The matrix and sig
+/// schemas are frozen at their PR 3 shape — the engine refactor must
+/// reproduce them byte for byte at a fixed `--replicates R`; the new
+/// Wilcoxon/effect-size statistics live in their own `.effect.csv`.
 const MATRIX_HEADER: &str = "scenario,strategy,clients,slots,evaluations,replicates,\
                              best_delay_mean,best_delay_ci95,mean_delay,rank";
 const SIG_HEADER: &str = "best_strategy,vs_strategy,best_wins,losses,ties,p_value";
+const EFFECT_HEADER: &str = "best_strategy,vs_strategy,pairs,w_plus,w_minus,wilcoxon_p,effect_size";
+
+fn tiny_scenarios() -> Vec<NamedScenario> {
+    builtin_catalog().into_iter().filter(|s| s.name.starts_with("tiny")).collect()
+}
 
 #[test]
 fn fleet_csv_is_byte_identical_across_thread_counts() {
@@ -21,34 +31,36 @@ fn fleet_csv_is_byte_identical_across_thread_counts() {
     // the correlated-failure / partition / asymmetric-bandwidth ones) at
     // --threads 1 vs --threads 4 with --replicates 3: the report files
     // must come out byte-identical.
-    let scenarios: Vec<NamedScenario> = builtin_catalog()
-        .into_iter()
-        .filter(|s| s.name.starts_with("tiny"))
-        .collect();
+    let scenarios = tiny_scenarios();
     assert!(scenarios.len() >= 9, "tiny slice should cover all variants");
     let strategies: Vec<String> = ["pso", "random"].iter().map(|s| s.to_string()).collect();
     let cfg = |threads| FleetConfig { threads, evals: Some(12), replicates: 3 };
 
     let dir = std::env::temp_dir().join("repro_fleet_integration");
     let _ = std::fs::remove_dir_all(&dir);
-    let write = |threads: usize, tag: &str| -> (String, String) {
+    let write = |threads: usize, tag: &str| -> (String, String, String) {
         let cells = run_fleet(&scenarios, &strategies, &cfg(threads)).unwrap();
         let path = dir.join(format!("fleet_{tag}.csv"));
         report_fleet(&cells, Some(&path)).unwrap();
         let matrix = std::fs::read_to_string(&path).unwrap();
         let sig = std::fs::read_to_string(dir.join(format!("fleet_{tag}.sig.csv"))).unwrap();
-        (matrix, sig)
+        let effect =
+            std::fs::read_to_string(dir.join(format!("fleet_{tag}.effect.csv"))).unwrap();
+        (matrix, sig, effect)
     };
-    let (matrix1, sig1) = write(1, "t1");
-    let (matrix4, sig4) = write(4, "t4");
+    let (matrix1, sig1, effect1) = write(1, "t1");
+    let (matrix4, sig4, effect4) = write(4, "t4");
     assert_eq!(matrix1, matrix4, "matrix CSV must not depend on --threads");
     assert_eq!(sig1, sig4, "significance CSV must not depend on --threads");
+    assert_eq!(effect1, effect4, "effect CSV must not depend on --threads");
 
-    // Golden column coverage for the new statistics.
+    // Golden column coverage for the statistics.
     assert_eq!(matrix1.lines().next().unwrap(), MATRIX_HEADER);
     assert_eq!(sig1.lines().next().unwrap(), SIG_HEADER);
+    assert_eq!(effect1.lines().next().unwrap(), EFFECT_HEADER);
     assert_eq!(matrix1.lines().count(), 1 + scenarios.len() * strategies.len());
     assert_eq!(sig1.lines().count(), 1 + (strategies.len() - 1));
+    assert_eq!(effect1.lines().count(), 1 + (strategies.len() - 1));
     // Every data row carries the replicate count and a parseable,
     // non-negative CI; ranks stay in [1, #strategies].
     for line in matrix1.lines().skip(1) {
@@ -71,6 +83,69 @@ fn fleet_csv_is_byte_identical_across_thread_counts() {
     assert_eq!(pairs, scenarios.len() * 3);
     let p: f64 = sig_cols[5].parse().unwrap();
     assert!((0.0..=1.0).contains(&p), "p-value {p}");
+    // The effect row: used pairs ≤ total pairs (exact-zero diffs drop),
+    // a valid p and an effect size in [−1, 1].
+    let eff_cols: Vec<&str> = effect1.lines().nth(1).unwrap().split(',').collect();
+    assert_eq!(eff_cols.len(), 7);
+    assert!(eff_cols[2].parse::<usize>().unwrap() <= scenarios.len() * 3);
+    let wp: f64 = eff_cols[5].parse().unwrap();
+    assert!((0.0..=1.0).contains(&wp), "wilcoxon p {wp}");
+    let r: f64 = eff_cols[6].parse().unwrap();
+    assert!((-1.0..=1.0).contains(&r), "effect size {r}");
+}
+
+#[test]
+fn adaptive_allocation_is_deterministic_across_thread_counts() {
+    // The same plan with --replicates 2..10 at --threads 1 vs 8 must
+    // yield byte-identical matrix + sig + effect CSVs and identical
+    // per-cell replicate counts — the allocator's stop rule reads only
+    // completed replicate sets, so thread scheduling cannot leak in.
+    let plan = |scenarios: Vec<NamedScenario>| ExperimentPlan {
+        scenarios,
+        strategies: ["pso", "random", "round-robin"].iter().map(|s| s.to_string()).collect(),
+        evals: Some(12),
+        env_override: None,
+        replicates: ReplicateRange { min: 2, max: 10 },
+    };
+    let dir = std::env::temp_dir().join("repro_fleet_adaptive_integration");
+    let _ = std::fs::remove_dir_all(&dir);
+    let write = |threads: usize, tag: &str| -> (Vec<usize>, String, String, String) {
+        let cells = run_plan(&plan(tiny_scenarios()), &TrialScheduler::new(threads)).unwrap();
+        let path = dir.join(format!("adaptive_{tag}.csv"));
+        repro::exp::report_cells(&cells, Some(&path)).unwrap();
+        let used = cells.iter().map(|c| c.replicate_delays.len()).collect();
+        let matrix = std::fs::read_to_string(&path).unwrap();
+        let sig =
+            std::fs::read_to_string(dir.join(format!("adaptive_{tag}.sig.csv"))).unwrap();
+        let effect =
+            std::fs::read_to_string(dir.join(format!("adaptive_{tag}.effect.csv"))).unwrap();
+        (used, matrix, sig, effect)
+    };
+    let (used1, matrix1, sig1, effect1) = write(1, "t1");
+    let (used8, matrix8, sig8, effect8) = write(8, "t8");
+    assert_eq!(used1, used8, "replicate allocation must not depend on --threads");
+    assert_eq!(matrix1, matrix8);
+    assert_eq!(sig1, sig8);
+    assert_eq!(effect1, effect8);
+
+    // Counts stay inside the range and are uniform within a scenario
+    // (paired trials), and the matrix CSV's replicates column reports
+    // the per-cell count actually used.
+    assert_eq!(used1.len() % 3, 0);
+    for chunk in used1.chunks(3) {
+        assert!(chunk.iter().all(|&u| (2..=10).contains(&u)), "{chunk:?}");
+        assert!(chunk.iter().all(|&u| u == chunk[0]), "unpaired counts {chunk:?}");
+    }
+    for (line, &used) in matrix1.lines().skip(1).zip(&used1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols[5], used.to_string(), "{line}");
+    }
+    // A fixed plan through the same engine still pins the legacy
+    // replicates column everywhere (min == max degenerates exactly).
+    let mut fixed = plan(tiny_scenarios());
+    fixed.replicates = ReplicateRange::fixed(2);
+    let cells = run_plan(&fixed, &TrialScheduler::new(4)).unwrap();
+    assert!(cells.iter().all(|c| c.replicate_delays.len() == 2));
 }
 
 /// Build one drift-heavy tiny scenario (the ROADMAP's "teach
@@ -127,11 +202,11 @@ fn adaptive_pso_tracks_drift_at_least_as_well_as_plain_pso() {
     // the same direction: adaptive cannot lose significantly.
     let sig = significance_matrix(&cells).unwrap();
     if sig.best == "pso" {
-        let (_, t) = &sig.versus[0];
+        let row = &sig.versus[0];
         assert!(
-            t.p_value > 0.05,
+            row.sign.p_value > 0.05,
             "pso must not be significantly faster than adaptive-pso under drift: p={}",
-            t.p_value
+            row.sign.p_value
         );
     }
 }
