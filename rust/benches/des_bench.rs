@@ -61,6 +61,27 @@ fn main() {
             batch.len()
         });
 
+        // One-swap neighbors of a fixed base: the delta fast path SA /
+        // tabu / adaptive probing hit.
+        let mut delta_env = AnalyticTpd::new(spec, attrs.clone());
+        let base = batch[0].clone();
+        delta_env.eval(&base).unwrap();
+        let mut rng = Pcg32::seed_from_u64(99);
+        let neighbors: Vec<Placement> = (0..10)
+            .map(|_| {
+                let mut p = base.as_slice().to_vec();
+                let (slot, id) = repro::placement::draw_slot_replacement(&base, cc, &mut rng);
+                p[slot] = id;
+                Placement::new(p)
+            })
+            .collect();
+        b.iter_throughput(&format!("analytic-delta/batch10 cc={label}"), || {
+            for p in &neighbors {
+                black_box(delta_env.eval(p).unwrap());
+            }
+            neighbors.len()
+        });
+
         // Conformance configuration: identical scores, event-driven path.
         let mut des = EventDrivenEnv::conformance(spec, attrs.clone());
         b.iter_throughput(&format!("des-static/batch10 cc={label}"), || {

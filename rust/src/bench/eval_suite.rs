@@ -1,0 +1,374 @@
+//! The `eval` bench suite behind `repro bench --suite eval`: measures
+//! delay-oracle throughput (evaluations/second) at the four catalog
+//! population shapes and emits the machine-readable `BENCH_eval.json`
+//! artifact that tracks the repo's perf trajectory.
+//!
+//! Cases per shape (`tiny` 7 / `paper` 53 / `deep` 213 / `mega10k`
+//! 10 021 clients):
+//!
+//! * `analytic` — [`AnalyticTpd::eval_batch`] over the zero-allocation
+//!   scratch path (random candidates, so every evaluation streams the
+//!   full population — no delta shortcuts).
+//! * `analytic-delta` — one-swap neighbors of a fixed base placement
+//!   through [`Environment::eval`], exercising the delta fast path the
+//!   SA/tabu/probe strategies hit.
+//! * `analytic-legacy` — the pre-scratch reference pipeline
+//!   (`Arrangement::from_position` + `fitness::tpd` per candidate),
+//!   kept callable so the speedup is measured *by the same harness* in
+//!   the same process, not against a stale log.
+//! * `emulated` — [`EmulatedDelay::eval_batch`] over the throttle-model
+//!   oracle.
+//! * `event-driven` — [`crate::des::EventDrivenEnv::eval_batch`] in the
+//!   conformance configuration (the DES cost floor: heap + tables
+//!   reused via [`crate::des::RoundScratch`]).
+//!
+//! The JSON schema (validated on every write, and by the CI smoke step):
+//!
+//! ```json
+//! {
+//!   "suite": "eval", "version": 1,
+//!   "samples": 30, "warmup": 3, "batch": 32,
+//!   "results": [
+//!     { "case": "analytic/mega10k", "oracle": "analytic",
+//!       "shape": "mega10k", "clients": 10021, "slots": 21,
+//!       "batch": 32, "evals_per_sec": 1.23e6,
+//!       "mean_us_per_batch": 26.0, "p50_us": 25.5, "p90_us": 27.1,
+//!       "std_us": 0.8 }
+//!   ]
+//! }
+//! ```
+
+use super::{black_box, Bencher};
+use crate::configio::ClientSpec;
+use crate::des::EventDrivenEnv;
+use crate::fitness::{tpd, ClientAttrs};
+use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::json::{self, Value};
+use crate::metrics::Summary;
+use crate::placement::{AnalyticTpd, EmulatedDelay, Environment, Placement};
+use crate::prng::{Pcg32, Rng};
+
+/// Suite knobs (CLI: `--samples`, `--warmup`, `--batch`).
+#[derive(Debug, Clone, Copy)]
+pub struct SuiteConfig {
+    pub samples: usize,
+    pub warmup: usize,
+    /// Candidates scored per timed batch (a typical swarm dispatch).
+    pub batch: usize,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        SuiteConfig { samples: 30, warmup: 3, batch: 32 }
+    }
+}
+
+/// One timed case of the suite.
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    /// `oracle/shape`, e.g. `analytic/mega10k`.
+    pub case: String,
+    pub oracle: &'static str,
+    pub shape: &'static str,
+    pub clients: usize,
+    pub slots: usize,
+    pub batch: usize,
+    /// Throughput derived from the mean per-batch latency.
+    pub evals_per_sec: f64,
+    /// Per-batch latency distribution (µs).
+    pub summary: Summary,
+}
+
+/// The four catalog population shapes:
+/// (label, depth, width, trainers per leaf).
+pub const SHAPES: [(&str, usize, usize, usize); 4] = [
+    ("tiny", 2, 2, 2),       // 7 clients
+    ("paper", 3, 4, 2),      // 53 clients (Fig-3 panel a)
+    ("deep", 4, 4, 2),       // 213 clients (Fig-3 panel b)
+    ("mega10k", 3, 4, 625),  // 10 021 clients
+];
+
+fn shape_population(depth: usize, width: usize, tpl: usize, seed: u64) -> Vec<ClientAttrs> {
+    let spec = HierarchySpec::new(depth, width);
+    let cc = spec.dimensions() + spec.leaf_slots().len() * tpl;
+    let mut rng = Pcg32::seed_from_u64(seed);
+    ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+}
+
+fn random_batch(spec: HierarchySpec, cc: usize, count: usize, seed: u64) -> Vec<Placement> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    (0..count).map(|_| Placement::new(rng.sample_distinct(cc, spec.dimensions()))).collect()
+}
+
+/// One-swap neighbors of `base` — drawn by the strategies' own shared
+/// move ([`crate::placement::draw_slot_replacement`]), so this case
+/// measures exactly the proposal shape the delta path recognizes.
+fn neighbor_batch(base: &[usize], cc: usize, count: usize, seed: u64) -> Vec<Placement> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    (0..count)
+        .map(|_| {
+            let mut p = base.to_vec();
+            let (slot, id) = crate::placement::draw_slot_replacement(base, cc, &mut rng);
+            p[slot] = id;
+            Placement::new(p)
+        })
+        .collect()
+}
+
+fn case(
+    b: &Bencher,
+    oracle: &'static str,
+    shape: &'static str,
+    clients: usize,
+    slots: usize,
+    batch: usize,
+    mut run: impl FnMut() -> usize,
+) -> BenchCase {
+    let summary = b.iter_throughput(&format!("{oracle}/{shape}"), &mut run);
+    // Throughput from the mean per-batch latency (µs → s).
+    let evals_per_sec = batch as f64 / (summary.mean * 1e-6).max(1e-12);
+    BenchCase {
+        case: format!("{oracle}/{shape}"),
+        oracle,
+        shape,
+        clients,
+        slots,
+        batch,
+        evals_per_sec,
+        summary,
+    }
+}
+
+/// Run the whole suite. Deterministic inputs (seeded per shape); the
+/// timings are whatever the hardware gives.
+pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
+    let b = Bencher::new(cfg.samples, cfg.warmup);
+    let mut cases = Vec::new();
+    for (shape, depth, width, tpl) in SHAPES {
+        let spec = HierarchySpec::new(depth, width);
+        let dims = spec.dimensions();
+        let attrs = shape_population(depth, width, tpl, 0xE7A1 ^ dims as u64);
+        let cc = attrs.len();
+        let batch = random_batch(spec, cc, cfg.batch, 17 + dims as u64);
+
+        // Scratch-based analytic oracle (full streaming path).
+        let mut analytic = AnalyticTpd::new(spec, attrs.clone());
+        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, || {
+            analytic.eval_batch(&batch).unwrap().len()
+        }));
+
+        // Delta fast path: one-swap neighbors of a fixed base.
+        let base = batch[0].clone();
+        let neighbors = neighbor_batch(&base, cc, cfg.batch, 23 + dims as u64);
+        let mut delta_env = AnalyticTpd::new(spec, attrs.clone());
+        delta_env.eval(&base).unwrap();
+        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, || {
+            for p in &neighbors {
+                black_box(delta_env.eval(p).unwrap());
+            }
+            neighbors.len()
+        }));
+
+        // The pre-scratch reference pipeline, same candidates.
+        let legacy_attrs = attrs.clone();
+        cases.push(case(&b, "analytic-legacy", shape, cc, dims, cfg.batch, || {
+            for p in &batch {
+                black_box(tpd(&Arrangement::from_position(spec, p, cc), &legacy_attrs).total);
+            }
+            batch.len()
+        }));
+
+        // Emulated-testbed throttle model.
+        let specs: Vec<ClientSpec> = (0..cc)
+            .map(|i| ClientSpec {
+                name: format!("c{i}"),
+                speed_factor: [1.0, 0.5, 0.25][i % 3],
+                memory_pressure: [1.0, 2.0][i % 2],
+            })
+            .collect();
+        let mut emulated = EmulatedDelay::new(depth, width, &specs);
+        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, || {
+            emulated.eval_batch(&batch).unwrap().len()
+        }));
+
+        // Event-driven oracle, conformance configuration.
+        let mut des = EventDrivenEnv::conformance(spec, attrs);
+        cases.push(case(&b, "event-driven", shape, cc, dims, cfg.batch, || {
+            des.eval_batch(&batch).unwrap().len()
+        }));
+    }
+    cases
+}
+
+/// Print the scratch-vs-legacy speedup per shape (the acceptance
+/// criterion `repro bench --suite eval` exists to track).
+pub fn print_speedups(cases: &[BenchCase]) {
+    println!("\n=== analytic scratch path vs legacy arrangement pipeline ===");
+    for (shape, ..) in SHAPES {
+        let rate = |oracle: &str| {
+            cases
+                .iter()
+                .find(|c| c.oracle == oracle && c.shape == shape)
+                .map(|c| c.evals_per_sec)
+        };
+        if let (Some(fast), Some(delta), Some(slow)) =
+            (rate("analytic"), rate("analytic-delta"), rate("analytic-legacy"))
+        {
+            println!(
+                "{shape:<10} scratch {fast:>12.0}/s  delta {delta:>12.0}/s  legacy {slow:>12.0}/s  speedup ×{:.1} (delta ×{:.1})",
+                fast / slow.max(1e-12),
+                delta / slow.max(1e-12),
+            );
+        }
+    }
+}
+
+/// Serialize the suite to the `BENCH_eval.json` document.
+pub fn suite_to_json(cfg: &SuiteConfig, cases: &[BenchCase]) -> Value {
+    let results = cases
+        .iter()
+        .map(|c| {
+            Value::object(vec![
+                ("case", Value::from(c.case.as_str())),
+                ("oracle", Value::from(c.oracle)),
+                ("shape", Value::from(c.shape)),
+                ("clients", Value::from(c.clients)),
+                ("slots", Value::from(c.slots)),
+                ("batch", Value::from(c.batch)),
+                ("evals_per_sec", Value::from(c.evals_per_sec)),
+                ("mean_us_per_batch", Value::from(c.summary.mean)),
+                ("p50_us", Value::from(c.summary.p50)),
+                ("p90_us", Value::from(c.summary.p90)),
+                ("std_us", Value::from(c.summary.std)),
+            ])
+        })
+        .collect();
+    Value::object(vec![
+        ("suite", Value::from("eval")),
+        ("version", Value::from(1usize)),
+        ("samples", Value::from(cfg.samples)),
+        ("warmup", Value::from(cfg.warmup)),
+        ("batch", Value::from(cfg.batch)),
+        ("results", Value::Array(results)),
+    ])
+}
+
+/// Validate a `BENCH_eval.json` document (schema + sanity): used after
+/// every write and by the CI bench smoke step, so a malformed artifact
+/// can never land silently.
+pub fn validate_bench_json(doc: &Value) -> Result<(), String> {
+    let field = |v: &Value, k: &str| -> Result<Value, String> {
+        v.get(k).cloned().ok_or_else(|| format!("missing field {k:?}"))
+    };
+    if field(doc, "suite")?.as_str() != Some("eval") {
+        return Err("suite must be \"eval\"".into());
+    }
+    for k in ["version", "samples", "warmup", "batch"] {
+        field(doc, k)?.as_usize().ok_or_else(|| format!("{k} must be a non-negative integer"))?;
+    }
+    let results = field(doc, "results")?;
+    let results = results.as_array().ok_or("results must be an array")?;
+    if results.is_empty() {
+        return Err("results must not be empty".into());
+    }
+    for (i, r) in results.iter().enumerate() {
+        for k in ["case", "oracle", "shape"] {
+            field(r, k)?.as_str().ok_or_else(|| format!("results[{i}].{k} must be a string"))?;
+        }
+        for k in ["clients", "slots", "batch"] {
+            field(r, k)?
+                .as_usize()
+                .ok_or_else(|| format!("results[{i}].{k} must be an integer"))?;
+        }
+        for k in ["evals_per_sec", "mean_us_per_batch", "p50_us", "p90_us", "std_us"] {
+            let x = field(r, k)?
+                .as_f64()
+                .ok_or_else(|| format!("results[{i}].{k} must be a number"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("results[{i}].{k} = {x} is not a finite non-negative number"));
+            }
+        }
+        if field(r, "evals_per_sec")?.as_f64().unwrap_or(0.0) <= 0.0 {
+            return Err(format!("results[{i}].evals_per_sec must be positive"));
+        }
+    }
+    Ok(())
+}
+
+/// Write the suite JSON to `path`, then re-parse and re-validate the
+/// bytes on disk (self-checking artifact).
+pub fn write_bench_json(
+    path: &std::path::Path,
+    cfg: &SuiteConfig,
+    cases: &[BenchCase],
+) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("{dir:?}: {e}"))?;
+        }
+    }
+    let doc = suite_to_json(cfg, cases);
+    std::fs::write(path, json::to_string_pretty(&doc)).map_err(|e| format!("{path:?}: {e}"))?;
+    let back = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    let parsed = json::parse(&back).map_err(|e| format!("re-parse of {path:?} failed: {e}"))?;
+    validate_bench_json(&parsed).map_err(|e| format!("schema check of {path:?} failed: {e}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SuiteConfig {
+        SuiteConfig { samples: 1, warmup: 0, batch: 2 }
+    }
+
+    #[test]
+    fn suite_covers_every_oracle_at_every_shape() {
+        let cases = run_eval_suite(&tiny_cfg());
+        assert_eq!(cases.len(), SHAPES.len() * 5);
+        for c in &cases {
+            assert!(c.evals_per_sec > 0.0, "{}: {}", c.case, c.evals_per_sec);
+            assert!(c.clients >= c.slots);
+            assert_eq!(c.batch, 2);
+        }
+        // The mega10k shape really is the 10k-client case.
+        let mega = cases.iter().find(|c| c.case == "analytic/mega10k").unwrap();
+        assert_eq!(mega.clients, 10_021);
+        assert_eq!(mega.slots, 21);
+        print_speedups(&cases);
+    }
+
+    #[test]
+    fn json_roundtrips_and_validates() {
+        let cfg = tiny_cfg();
+        let cases = run_eval_suite(&cfg);
+        let doc = suite_to_json(&cfg, &cases);
+        validate_bench_json(&doc).unwrap();
+        let parsed = json::parse(&json::to_string_pretty(&doc)).unwrap();
+        validate_bench_json(&parsed).unwrap();
+        // Write path self-checks too.
+        let dir = std::env::temp_dir().join("repro_bench_eval_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH_eval.json");
+        write_bench_json(&path, &cfg, &cases).unwrap();
+        assert!(path.exists());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_bench_json(&Value::object(vec![])).is_err());
+        let wrong_suite = Value::object(vec![("suite", Value::from("foo"))]);
+        assert!(validate_bench_json(&wrong_suite).is_err());
+        let empty = Value::object(vec![
+            ("suite", Value::from("eval")),
+            ("version", Value::from(1usize)),
+            ("samples", Value::from(1usize)),
+            ("warmup", Value::from(0usize)),
+            ("batch", Value::from(2usize)),
+            ("results", Value::Array(vec![])),
+        ]);
+        let err = validate_bench_json(&empty).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+    }
+}

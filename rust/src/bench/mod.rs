@@ -4,6 +4,12 @@
 //! warmup + sample statistics, and [`report_table`] for paper-style
 //! result tables. Output format is stable so `bench_output.txt` diffs
 //! cleanly between perf iterations (DESIGN.md §Perf).
+//!
+//! [`eval_suite`] is the CLI-facing perf harness (`repro bench --suite
+//! eval`): delay-oracle throughput at the catalog shapes, emitted as
+//! the machine-readable `BENCH_eval.json` trajectory artifact.
+
+pub mod eval_suite;
 
 use crate::metrics::Summary;
 use std::time::Instant;

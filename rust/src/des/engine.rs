@@ -65,6 +65,18 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// Rewind to a fresh queue without releasing the heap's capacity —
+    /// the clear-and-refill reuse the zero-allocation round scratch
+    /// relies on (a new round starts at virtual time 0 with sequence
+    /// numbers and the processed counter reset, exactly like a
+    /// freshly-constructed queue).
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+        self.processed = 0;
+    }
+
     /// Current virtual time (seconds).
     pub fn now(&self) -> f64 {
         self.now
@@ -156,6 +168,23 @@ mod tests {
         }
         assert!(fired > 5);
         assert_eq!(q.now(), last);
+    }
+
+    #[test]
+    fn reset_rewinds_clock_sequence_and_counter() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1u32);
+        q.schedule_at(6.0, 2);
+        q.pop();
+        q.reset();
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.processed(), 0);
+        // Post-reset FIFO ordering restarts from sequence zero.
+        q.schedule_at(1.0, 10);
+        q.schedule_at(1.0, 11);
+        assert_eq!(q.pop(), Some((1.0, 10)));
+        assert_eq!(q.pop(), Some((1.0, 11)));
     }
 
     #[test]

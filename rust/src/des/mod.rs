@@ -42,7 +42,9 @@ pub use fleet::{
     SignificanceMatrix, StrategyStanding, VersusRow,
 };
 pub use network::{LinkParams, NetworkModel};
-pub use round::{simulate_round, EventDrivenEnv, RoundOutcome, RoundRealization, SyncMode};
+pub use round::{
+    simulate_round, EventDrivenEnv, RoundOutcome, RoundRealization, RoundScratch, SyncMode,
+};
 pub use scenarios::{
     builtin_catalog, disable_mechanism, load_dir, mechanism_enabled, Dynamics, NamedScenario,
     MECHANISMS,

@@ -7,14 +7,27 @@
 //! receiving aggregator's shared ingress (`Arrive` → `Deliver`), and an
 //! aggregator merges once its processing buffer is full (`AggDone`),
 //! forwarding its own update upward until the root completes the round.
+//!
+//! Two entry points share one event loop:
+//!
+//! * [`simulate_round`] — the reference API over a materialized
+//!   [`Arrangement`] (allocates its per-round tables; fine for tests
+//!   and one-off rounds).
+//! * [`RoundScratch`] — the oracle hot path: every per-round table plus
+//!   the [`EventQueue`] heap lives in a reusable scratch that is
+//!   cleared and refilled per candidate, so steady-state batch scoring
+//!   performs no heap allocation. Event *scheduling order* (which
+//!   breaks virtual-time ties and therefore drives the per-round jitter
+//!   stream) is identical between the two paths — same-seed rounds are
+//!   bit-for-bit equal, property-tested in `tests/properties.rs`.
 
 use super::engine::EventQueue;
 use super::network::NetworkModel;
 use super::scenarios::Dynamics;
 use crate::configio::SimScenario;
 use crate::fitness::ClientAttrs;
-use crate::hierarchy::{Arrangement, HierarchySpec};
-use crate::placement::{validate_placement, Environment, Placement, PlacementError};
+use crate::hierarchy::{Arrangement, EvalScratch, HierarchySpec};
+use crate::placement::{Environment, Placement, PlacementError};
 use crate::prng::Pcg32;
 
 /// Synchronization semantics of the simulated round.
@@ -79,9 +92,86 @@ enum Ev {
     AggDone { slot: usize },
 }
 
+/// The shared event loop: drains a pre-seeded queue until the root's
+/// `AggDone` fires, returning `(tpd, events)`. Both the reference and
+/// the scratch path feed it identically-ordered kickoff events, so
+/// their virtual rounds are indistinguishable.
+#[allow(clippy::too_many_arguments)]
+fn run_event_loop(
+    spec: HierarchySpec,
+    aggs: &[usize],
+    attrs: &[ClientAttrs],
+    net: &NetworkModel,
+    parent_slot: &[usize],
+    expected: &[usize],
+    merge_delay: &[f64],
+    received: &mut [usize],
+    ingress_free: &mut [f64],
+    level_waiting: &mut [usize],
+    q: &mut EventQueue<Ev>,
+    jitter: &mut Option<Pcg32>,
+    mode: SyncMode,
+) -> (f64, u64) {
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Ev::TrainDone { client } => {
+                let slot = parent_slot[client];
+                let dt = net.transfer_delay(client, attrs[client].mdatasize, jitter);
+                q.schedule_at(t + dt, Ev::Arrive { slot, data: attrs[client].mdatasize });
+            }
+            Ev::Arrive { slot, data } => {
+                // FIFO ingress queue: chronological pop order guarantees
+                // arrivals are serviced in arrival order. Service rate is
+                // capped by both the shared ingress and the hosting
+                // client's own download bandwidth (asymmetric links).
+                let start = if t > ingress_free[slot] { t } else { ingress_free[slot] };
+                let done = start + net.ingress_service(aggs[slot], data);
+                ingress_free[slot] = done;
+                q.schedule_at(done, Ev::Deliver { slot });
+            }
+            Ev::Deliver { slot } => {
+                if expected[slot] > 0 {
+                    received[slot] += 1;
+                    if received[slot] < expected[slot] {
+                        continue;
+                    }
+                }
+                // Buffer full: this slot may merge.
+                match mode {
+                    SyncMode::Pipelined => {
+                        q.schedule_at(t + merge_delay[slot], Ev::AggDone { slot });
+                    }
+                    SyncMode::LevelBarrier => {
+                        // Bottom-up level index (leaf level first).
+                        let li = spec.depth - 1 - spec.level_of(slot);
+                        level_waiting[li] -= 1;
+                        if level_waiting[li] == 0 {
+                            for s in spec.level_slots(spec.depth - 1 - li) {
+                                q.schedule_at(t + merge_delay[s], Ev::AggDone { slot: s });
+                            }
+                        }
+                    }
+                }
+            }
+            Ev::AggDone { slot } => {
+                if slot == 0 {
+                    return (t, q.processed());
+                }
+                let parent = spec.parent(slot).expect("non-root slot has a parent");
+                let c = aggs[slot];
+                let dt = net.transfer_delay(c, attrs[c].mdatasize, jitter);
+                q.schedule_at(t + dt, Ev::Arrive { slot: parent, data: attrs[c].mdatasize });
+            }
+        }
+    }
+    unreachable!("event queue drained before the root aggregation completed")
+}
+
 /// Simulate one FL round for `arr` under the given network and realized
 /// dynamics. `train_unit` is the local-training workload (0 = training
-/// not modeled, matching the analytic TPD).
+/// not modeled, matching the analytic TPD). This is the reference path
+/// over a materialized [`Arrangement`]; the oracle hot loop runs the
+/// same round through a reusable [`RoundScratch`].
 pub fn simulate_round(
     arr: &Arrangement,
     attrs: &[ClientAttrs],
@@ -130,17 +220,8 @@ pub fn simulate_round(
     let mut jitter = (net.jitter_sigma > 0.0).then(|| Pcg32::seed_from_u64(real.round_seed));
     let mut received = vec![0usize; dims];
     let mut ingress_free = vec![0.0f64; dims];
-
-    // Level bookkeeping for the barrier mode (levels leaf-first, as in
-    // `levels_bottom_up`).
-    let levels = spec.levels_bottom_up();
-    let mut level_of = vec![0usize; dims];
-    for (li, level) in levels.iter().enumerate() {
-        for &s in level {
-            level_of[s] = li;
-        }
-    }
-    let mut level_waiting: Vec<usize> = levels.iter().map(Vec::len).collect();
+    let mut level_waiting: Vec<usize> =
+        (0..spec.depth).map(|li| spec.level_size(spec.depth - 1 - li)).collect();
 
     // Kick off: trainers start training; slots whose buffer is already
     // full (no active trainers / exact-fit leaves) are ready at t = 0.
@@ -159,58 +240,178 @@ pub fn simulate_round(
         }
     }
 
-    while let Some((t, ev)) = q.pop() {
-        match ev {
-            Ev::TrainDone { client } => {
-                let slot = parent_slot[client];
-                let dt = net.transfer_delay(client, attrs[client].mdatasize, &mut jitter);
-                q.schedule_at(t + dt, Ev::Arrive { slot, data: attrs[client].mdatasize });
-            }
-            Ev::Arrive { slot, data } => {
-                // FIFO ingress queue: chronological pop order guarantees
-                // arrivals are serviced in arrival order. Service rate is
-                // capped by both the shared ingress and the hosting
-                // client's own download bandwidth (asymmetric links).
-                let start = if t > ingress_free[slot] { t } else { ingress_free[slot] };
-                let done = start + net.ingress_service(arr.aggregators[slot], data);
-                ingress_free[slot] = done;
-                q.schedule_at(done, Ev::Deliver { slot });
-            }
-            Ev::Deliver { slot } => {
-                if expected[slot] > 0 {
-                    received[slot] += 1;
-                    if received[slot] < expected[slot] {
-                        continue;
-                    }
-                }
-                // Buffer full: this slot may merge.
-                match mode {
-                    SyncMode::Pipelined => {
-                        q.schedule_at(t + merge_delay[slot], Ev::AggDone { slot });
-                    }
-                    SyncMode::LevelBarrier => {
-                        let li = level_of[slot];
-                        level_waiting[li] -= 1;
-                        if level_waiting[li] == 0 {
-                            for &s in &levels[li] {
-                                q.schedule_at(t + merge_delay[s], Ev::AggDone { slot: s });
-                            }
-                        }
-                    }
-                }
-            }
-            Ev::AggDone { slot } => {
-                if slot == 0 {
-                    return RoundOutcome { tpd: t, events: q.processed(), dropped_trainers };
-                }
-                let parent = spec.parent(slot).expect("non-root slot has a parent");
-                let c = arr.aggregators[slot];
-                let dt = net.transfer_delay(c, attrs[c].mdatasize, &mut jitter);
-                q.schedule_at(t + dt, Ev::Arrive { slot: parent, data: attrs[c].mdatasize });
-            }
+    let (tpd, events) = run_event_loop(
+        spec,
+        &arr.aggregators,
+        attrs,
+        net,
+        &parent_slot,
+        &expected,
+        &merge_delay,
+        &mut received,
+        &mut ingress_free,
+        &mut level_waiting,
+        &mut q,
+        &mut jitter,
+        mode,
+    );
+    RoundOutcome { tpd, events, dropped_trainers }
+}
+
+/// Reusable per-round state for the event-driven oracle: the
+/// [`EvalScratch`] placement view plus every per-slot table and the
+/// event-queue heap, cleared and refilled per candidate. One
+/// [`RoundScratch::simulate`] call allocates nothing in steady state.
+pub struct RoundScratch {
+    view: EvalScratch,
+    expected: Vec<usize>,
+    merge_delay: Vec<f64>,
+    parent_slot: Vec<usize>,
+    received: Vec<usize>,
+    ingress_free: Vec<f64>,
+    level_waiting: Vec<usize>,
+    queue: EventQueue<Ev>,
+}
+
+impl RoundScratch {
+    pub fn new(spec: HierarchySpec, client_count: usize) -> RoundScratch {
+        let view = EvalScratch::new(spec, client_count);
+        let dims = view.dims();
+        RoundScratch {
+            view,
+            expected: vec![0; dims],
+            merge_delay: vec![0.0; dims],
+            parent_slot: vec![usize::MAX; client_count],
+            received: vec![0; dims],
+            ingress_free: vec![0.0; dims],
+            level_waiting: vec![0; spec.depth],
+            queue: EventQueue::new(),
         }
     }
-    unreachable!("event queue drained before the root aggregation completed")
+
+    /// Validate a candidate against the reusable bitset (no allocation,
+    /// no disturbance of any in-flight state).
+    pub fn validate(&mut self, position: &[usize]) -> Result<(), PlacementError> {
+        self.view.validate(position)
+    }
+
+    /// Simulate one round of `position` — bit-identical to
+    /// `simulate_round(&Arrangement::from_position(..), ..)`, with zero
+    /// steady-state allocation.
+    pub fn simulate(
+        &mut self,
+        position: &[usize],
+        attrs: &[ClientAttrs],
+        net: &NetworkModel,
+        real: &RoundRealization,
+        train_unit: f64,
+        mode: SyncMode,
+    ) -> Result<RoundOutcome, PlacementError> {
+        self.view.load(position)?;
+        Ok(self.run(position, attrs, net, real, train_unit, mode))
+    }
+
+    /// [`RoundScratch::simulate`] for a position that already passed
+    /// [`RoundScratch::validate`] — the oracle's batch path, skipping
+    /// the redundant per-candidate re-validation.
+    pub fn simulate_prevalidated(
+        &mut self,
+        position: &[usize],
+        attrs: &[ClientAttrs],
+        net: &NetworkModel,
+        real: &RoundRealization,
+        train_unit: f64,
+        mode: SyncMode,
+    ) -> RoundOutcome {
+        self.view.load_prevalidated(position);
+        self.run(position, attrs, net, real, train_unit, mode)
+    }
+
+    /// Setup + kickoff + event loop over the freshly-loaded view.
+    fn run(
+        &mut self,
+        position: &[usize],
+        attrs: &[ClientAttrs],
+        net: &NetworkModel,
+        real: &RoundRealization,
+        train_unit: f64,
+        mode: SyncMode,
+    ) -> RoundOutcome {
+        let spec = self.view.spec();
+        let dims = self.view.dims();
+        let leaf_start = self.view.leaf_start();
+        debug_assert_eq!(attrs.len(), real.active.len());
+        let pspeed_eff = |c: usize| attrs[c].pspeed / real.slowdown[c];
+
+        self.expected.fill(0);
+        let mut dropped_trainers = 0usize;
+        for slot in 0..dims {
+            let agg = position[slot];
+            let data = if slot >= leaf_start {
+                let mut sum = 0.0f64;
+                for &t in self.view.leaf_trainers(slot - leaf_start) {
+                    self.parent_slot[t] = slot;
+                    if real.active[t] {
+                        self.expected[slot] += 1;
+                        sum += attrs[t].mdatasize;
+                    } else {
+                        dropped_trainers += 1;
+                    }
+                }
+                attrs[agg].mdatasize + sum
+            } else {
+                self.expected[slot] = spec.children(slot).len();
+                let mut sum = 0.0f64;
+                for child in spec.children(slot) {
+                    sum += attrs[position[child]].mdatasize;
+                }
+                attrs[agg].mdatasize + sum
+            };
+            self.merge_delay[slot] = data / pspeed_eff(agg);
+        }
+
+        self.queue.reset();
+        let mut jitter = (net.jitter_sigma > 0.0).then(|| Pcg32::seed_from_u64(real.round_seed));
+        self.received.fill(0);
+        self.ingress_free.fill(0.0);
+        for li in 0..spec.depth {
+            self.level_waiting[li] = spec.level_size(spec.depth - 1 - li);
+        }
+
+        // Kickoff in the exact reference order (slot-major, trainers in
+        // list order): the sequence numbers break virtual-time ties, so
+        // this order is part of the bit-exactness contract.
+        for slot in 0..dims {
+            if slot >= leaf_start {
+                for &t in self.view.leaf_trainers(slot - leaf_start) {
+                    if real.active[t] {
+                        self.queue
+                            .schedule_at(train_unit / pspeed_eff(t), Ev::TrainDone { client: t });
+                    }
+                }
+            }
+            if self.expected[slot] == 0 {
+                self.queue.schedule_at(0.0, Ev::Deliver { slot });
+            }
+        }
+
+        let (tpd, events) = run_event_loop(
+            spec,
+            self.view.position(),
+            attrs,
+            net,
+            &self.parent_slot,
+            &self.expected,
+            &self.merge_delay,
+            &mut self.received,
+            &mut self.ingress_free,
+            &mut self.level_waiting,
+            &mut self.queue,
+            &mut jitter,
+            mode,
+        );
+        RoundOutcome { tpd, events, dropped_trainers }
+    }
 }
 
 /// The fourth [`Environment`] oracle: scores placements by simulating a
@@ -218,15 +419,16 @@ pub fn simulate_round(
 /// dynamic-scenario state. Every `eval`/`eval_batch` call is one virtual
 /// round; all placements inside one batch are scored under the *same*
 /// realized dynamics so candidates compete fairly, and the dynamics
-/// advance once per batch.
+/// advance once per batch. Rounds run on an owned [`RoundScratch`], so
+/// batch scoring reuses the event heap and every per-slot table.
 pub struct EventDrivenEnv {
-    spec: HierarchySpec,
     attrs: Vec<ClientAttrs>,
     net: NetworkModel,
     train_unit: f64,
     mode: SyncMode,
     dynamics: Dynamics,
     realization: RoundRealization,
+    scratch: RoundScratch,
     /// Virtual FL rounds simulated so far (batches + single evals).
     pub rounds_simulated: usize,
     /// Total events fired across all simulated rounds.
@@ -248,14 +450,15 @@ impl EventDrivenEnv {
         );
         assert_eq!(net.uplinks.len(), attrs.len(), "one uplink per client");
         let realization = dynamics.next_round(attrs.len());
+        let scratch = RoundScratch::new(spec, attrs.len());
         EventDrivenEnv {
-            spec,
             attrs,
             net,
             train_unit,
             mode,
             dynamics,
             realization,
+            scratch,
             rounds_simulated: 0,
             events_fired: 0,
         }
@@ -286,15 +489,29 @@ impl EventDrivenEnv {
         &self.attrs
     }
 
+    /// The configured network (for conformance/equivalence tests).
+    pub fn net(&self) -> &NetworkModel {
+        &self.net
+    }
+
+    /// The configured synchronization mode.
+    pub fn sync_mode(&self) -> SyncMode {
+        self.mode
+    }
+
+    /// The configured local-training workload.
+    pub fn train_unit(&self) -> f64 {
+        self.train_unit
+    }
+
     /// The realization the *next* eval/batch will be scored under.
     pub fn realization(&self) -> &RoundRealization {
         &self.realization
     }
 
     fn score(&mut self, placement: &[usize]) -> f64 {
-        let arr = Arrangement::from_position(self.spec, placement, self.attrs.len());
-        let out = simulate_round(
-            &arr,
+        let out = self.scratch.simulate_prevalidated(
+            placement,
             &self.attrs,
             &self.net,
             &self.realization,
@@ -306,7 +523,9 @@ impl EventDrivenEnv {
     }
 
     fn advance_round(&mut self) {
-        self.realization = self.dynamics.next_round(self.attrs.len());
+        // In-place advance: the realization's buffers are reused, so
+        // batch-to-batch dynamics evolution allocates nothing.
+        self.dynamics.next_round_into(self.attrs.len(), &mut self.realization);
         self.rounds_simulated += 1;
     }
 }
@@ -317,18 +536,20 @@ impl Environment for EventDrivenEnv {
     }
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
-        validate_placement(placement, self.spec.dimensions(), self.attrs.len())?;
+        self.scratch.validate(placement)?;
         let tpd = self.score(placement);
         self.advance_round();
         Ok(tpd)
     }
 
     fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
-        let dims = self.spec.dimensions();
         for p in batch {
-            validate_placement(p, dims, self.attrs.len())?;
+            self.scratch.validate(p)?;
         }
-        let delays = batch.iter().map(|p| self.score(p)).collect();
+        let mut delays = Vec::with_capacity(batch.len());
+        for p in batch {
+            delays.push(self.score(p));
+        }
         self.advance_round();
         Ok(delays)
     }
@@ -378,6 +599,50 @@ mod tests {
                     expect
                 );
                 assert_eq!(out.dropped_trainers, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_round_is_bit_identical_to_simulate_round() {
+        // Across shapes, dynamics and jitter: the reusable scratch must
+        // reproduce the reference path bit for bit — tpd, event count
+        // and dropped-trainer count — including when the same scratch is
+        // reused across many placements.
+        for (d, w, seed) in [(1usize, 3usize, 1u64), (2, 2, 2), (3, 3, 3), (2, 4, 4)] {
+            let spec = HierarchySpec::new(d, w);
+            let cc = spec.dimensions() + spec.leaf_slots().len() * 3 + 5;
+            let attrs = population(cc, seed);
+            let mut net = NetworkModel::zero_cost(cc);
+            // Exercise latency, bandwidth, contention and jitter.
+            for (i, l) in net.uplinks.iter_mut().enumerate() {
+                l.latency_s = 0.01 + i as f64 * 1e-4;
+                l.bandwidth = 20.0 + i as f64;
+            }
+            net.agg_ingress = 40.0;
+            net.jitter_sigma = 0.3;
+            let mut dyn_rng = Pcg32::seed_from_u64(seed * 77);
+            let mut scratch = RoundScratch::new(spec, cc);
+            for (n, p) in random_placements(spec, cc, 6, seed * 13).iter().enumerate() {
+                // A realization with dropouts and slowdowns.
+                let mut real = RoundRealization::all_on(cc, seed * 1000 + n as u64);
+                for a in real.active.iter_mut() {
+                    *a = dyn_rng.next_f64() > 0.2;
+                }
+                for s in real.slowdown.iter_mut() {
+                    *s = 1.0 + dyn_rng.next_f64();
+                }
+                for (train_unit, mode) in
+                    [(0.0, SyncMode::LevelBarrier), (2.5, SyncMode::Pipelined)]
+                {
+                    let arr = Arrangement::from_position(spec, p, cc);
+                    let want = simulate_round(&arr, &attrs, &net, &real, train_unit, mode);
+                    let got =
+                        scratch.simulate(p, &attrs, &net, &real, train_unit, mode).unwrap();
+                    assert_eq!(got.tpd.to_bits(), want.tpd.to_bits(), "D{d} W{w} p{n}");
+                    assert_eq!(got.events, want.events);
+                    assert_eq!(got.dropped_trainers, want.dropped_trainers);
+                }
             }
         }
     }

@@ -44,6 +44,16 @@ impl Dynamics {
 
     /// Realize the next round for a population of `n` clients.
     pub fn next_round(&mut self, n: usize) -> RoundRealization {
+        let mut real = RoundRealization { active: Vec::new(), slowdown: Vec::new(), round_seed: 0 };
+        self.next_round_into(n, &mut real);
+        real
+    }
+
+    /// [`Dynamics::next_round`] writing into an existing realization —
+    /// the oracle's steady-state path, reusing `real`'s buffers so
+    /// advancing the dynamics between batches allocates nothing. Same
+    /// RNG draw order as `next_round`, so realizations are identical.
+    pub fn next_round_into(&mut self, n: usize, real: &mut RoundRealization) {
         if self.present.len() != n {
             self.present = vec![true; n];
             self.drift = vec![1.0; n];
@@ -66,7 +76,9 @@ impl Dynamics {
                 *d = (*d * self.rng.lognormal(s.drift_sigma)).clamp(0.25, 4.0);
             }
         }
-        let mut slowdown = self.drift.clone();
+        real.slowdown.clear();
+        real.slowdown.extend_from_slice(&self.drift);
+        let slowdown = &mut real.slowdown;
         // Straggler burst: this round, a sampled fraction runs slower.
         if s.straggler_prob > 0.0 && self.rng.next_f64() < s.straggler_prob {
             let k = ((n as f64 * s.straggler_frac).ceil() as usize).min(n);
@@ -75,9 +87,11 @@ impl Dynamics {
             }
         }
         // Dropout: per-round one-off absences on top of churn.
-        let mut active = self.present.clone();
+        real.active.clear();
+        real.active.extend_from_slice(&self.present);
+        let active = &mut real.active;
         if s.dropout_prob > 0.0 {
-            for a in &mut active {
+            for a in active.iter_mut() {
                 if *a && self.rng.next_f64() < s.dropout_prob {
                     *a = false;
                 }
@@ -87,7 +101,7 @@ impl Dynamics {
         // site) fails together for this round only, re-sampled per round.
         if s.corr_fail_prob > 0.0 && self.rng.next_f64() < s.corr_fail_prob {
             let start = self.rng.gen_range(n as u64) as usize;
-            mark_region_inactive(&mut active, start, region_len(n, s.corr_fail_frac));
+            mark_region_inactive(active, start, region_len(n, s.corr_fail_frac));
         }
         // Network partition: a sampled region goes unreachable and stays
         // unreachable for `partition_rounds` consecutive rounds.
@@ -98,7 +112,7 @@ impl Dynamics {
                     Some((start, region_len(n, s.partition_frac), s.partition_rounds));
             }
             if let Some((start, len, rounds_left)) = self.partition {
-                mark_region_inactive(&mut active, start, len);
+                mark_region_inactive(active, start, len);
                 self.partition =
                     (rounds_left > 1).then_some((start, len, rounds_left - 1));
             }
@@ -109,7 +123,7 @@ impl Dynamics {
         if !active.iter().any(|&a| a) {
             active[(round_seed % n as u64) as usize] = true;
         }
-        RoundRealization { active, slowdown, round_seed }
+        real.round_seed = round_seed;
     }
 }
 
@@ -393,6 +407,35 @@ mod tests {
         let mut b = Dynamics::new(spec, Pcg32::seed_from_u64(9));
         for _ in 0..20 {
             assert_eq!(a.next_round(30), b.next_round(30));
+        }
+    }
+
+    #[test]
+    fn next_round_into_matches_next_round_exactly() {
+        // The buffer-reusing path must realize the identical sequence
+        // (same RNG draw order) as the allocating wrapper.
+        let spec = DynamicsSpec {
+            dropout_prob: 0.2,
+            churn_leave_prob: 0.1,
+            churn_join_prob: 0.4,
+            straggler_prob: 0.5,
+            straggler_frac: 0.25,
+            straggler_slowdown: 3.0,
+            drift_sigma: 0.1,
+            corr_fail_prob: 0.3,
+            corr_fail_frac: 0.2,
+            partition_prob: 0.2,
+            partition_frac: 0.25,
+            partition_rounds: 2,
+        };
+        let mut a = Dynamics::new(spec.clone(), Pcg32::seed_from_u64(13));
+        let mut b = Dynamics::new(spec, Pcg32::seed_from_u64(13));
+        let mut reused =
+            RoundRealization { active: Vec::new(), slowdown: Vec::new(), round_seed: 0 };
+        for _ in 0..25 {
+            let fresh = a.next_round(30);
+            b.next_round_into(30, &mut reused);
+            assert_eq!(fresh, reused);
         }
     }
 

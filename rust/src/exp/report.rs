@@ -11,7 +11,8 @@
 
 use crate::log_warn;
 use crate::metrics::{
-    mean_ci, paired_sign_test, wilcoxon_signed_rank, CsvWriter, SignTest, Wilcoxon,
+    holm_bonferroni, mean_ci, paired_sign_test, wilcoxon_signed_rank, CsvWriter, SignTest,
+    Wilcoxon,
 };
 use std::path::Path;
 
@@ -158,6 +159,13 @@ pub struct VersusRow {
     /// rank-biserial correlation as effect size (positive = the best
     /// strategy is faster).
     pub wilcoxon: Wilcoxon,
+    /// Holm–Bonferroni-adjusted sign-test p-value: the leader is tested
+    /// against every rival simultaneously, so the raw per-row p-values
+    /// overstate significance as a family —
+    /// [`crate::metrics::holm_bonferroni`] corrects across the rows.
+    pub sign_p_holm: f64,
+    /// Holm–Bonferroni-adjusted Wilcoxon p-value (same family).
+    pub wilcoxon_p_holm: f64,
 }
 
 /// The paired-significance report: the best-ranked strategy tested
@@ -228,14 +236,25 @@ fn significance_for(
     };
     let best_raw = delays_of(&best, false);
     let best_norm = delays_of(&best, true);
-    let versus = table[1..]
+    let mut versus: Vec<VersusRow> = table[1..]
         .iter()
         .map(|s| VersusRow {
             strategy: s.strategy.clone(),
             sign: paired_sign_test(&best_raw, &delays_of(&s.strategy, false)),
             wilcoxon: wilcoxon_signed_rank(&best_norm, &delays_of(&s.strategy, true)),
+            sign_p_holm: 1.0,
+            wilcoxon_p_holm: 1.0,
         })
         .collect();
+    // The rows form one family of simultaneous comparisons: adjust each
+    // test's p-values across the rivals (Holm step-down).
+    let sign_adj = holm_bonferroni(&versus.iter().map(|r| r.sign.p_value).collect::<Vec<_>>());
+    let wilcoxon_adj =
+        holm_bonferroni(&versus.iter().map(|r| r.wilcoxon.p_value).collect::<Vec<_>>());
+    for (row, (s, w)) in versus.iter_mut().zip(sign_adj.into_iter().zip(wilcoxon_adj)) {
+        row.sign_p_holm = s;
+        row.wilcoxon_p_holm = w;
+    }
     Some(SignificanceMatrix { best, versus })
 }
 
@@ -301,18 +320,21 @@ pub fn report_cells(cells: &[ExperimentCell], csv: Option<&Path>) -> std::io::Re
             cells.iter().filter(|c| c.strategy == sig.best).map(|c| c.replicate_delays.len()).sum::<usize>(),
         );
         println!(
-            "{:<14} {:>8} {:>8} {:>6} {:>10} {:>12} {:>9}",
-            "vs strategy", "wins", "losses", "ties", "sign p", "wilcoxon p", "effect r"
+            "{:<14} {:>8} {:>8} {:>6} {:>10} {:>10} {:>12} {:>10} {:>9}",
+            "vs strategy", "wins", "losses", "ties", "sign p", "sign holm", "wilcoxon p",
+            "wilc holm", "effect r"
         );
         for row in &sig.versus {
             println!(
-                "{:<14} {:>8} {:>8} {:>6} {:>10.6} {:>12.6} {:>+9.3}",
+                "{:<14} {:>8} {:>8} {:>6} {:>10.6} {:>10.6} {:>12.6} {:>10.6} {:>+9.3}",
                 row.strategy,
                 row.sign.a_wins,
                 row.sign.b_wins,
                 row.sign.ties,
                 row.sign.p_value,
+                row.sign_p_holm,
                 row.wilcoxon.p_value,
+                row.wilcoxon_p_holm,
                 row.wilcoxon.rank_biserial,
             );
         }
@@ -461,6 +483,34 @@ mod tests {
         assert!(row.wilcoxon.p_value > 0.0 && row.wilcoxon.p_value <= 1.0);
         // One strategy ⇒ no matrix.
         assert!(significance_matrix(&cells[..1]).is_none());
+    }
+
+    #[test]
+    fn significance_matrix_carries_holm_adjusted_p_values() {
+        // Three rivals ⇒ a family of three simultaneous comparisons:
+        // every adjusted p must dominate its raw p, stay in [0, 1], and
+        // the smallest raw sign p must carry the full ×3 factor.
+        let mut cells = Vec::new();
+        for s in ["s1", "s2", "s3"] {
+            cells.push(synthetic_cell(s, "best", &[1.0, 1.1, 1.2], 1));
+            cells.push(synthetic_cell(s, "mid", &[2.0, 2.1, 2.2], 2));
+            cells.push(synthetic_cell(s, "bad", &[3.0, 3.1, 3.2], 3));
+            cells.push(synthetic_cell(s, "worse", &[4.0, 4.1, 4.2], 4));
+        }
+        let sig = significance_matrix(&cells).expect("four strategies");
+        assert_eq!(sig.versus.len(), 3);
+        let raw: Vec<f64> = sig.versus.iter().map(|r| r.sign.p_value).collect();
+        let adj: Vec<f64> = sig.versus.iter().map(|r| r.sign_p_holm).collect();
+        assert_eq!(adj, crate::metrics::holm_bonferroni(&raw));
+        for row in &sig.versus {
+            assert!(row.sign_p_holm >= row.sign.p_value - 1e-15);
+            assert!((0.0..=1.0).contains(&row.sign_p_holm));
+            assert!(row.wilcoxon_p_holm >= row.wilcoxon.p_value - 1e-15);
+            assert!((0.0..=1.0).contains(&row.wilcoxon_p_holm));
+        }
+        // All three rivals lose all 9 pairs: equal raw p, so every
+        // adjusted value is the shared Holm maximum m·p of the family.
+        assert!((adj[0] - (3.0 * raw[0]).min(1.0)).abs() < 1e-12, "{adj:?} vs {raw:?}");
     }
 
     #[test]

@@ -4,10 +4,21 @@
 //!   (memory capacity, model data size, processing speed).
 //! * [`tpd`] — Eq. 6/7: per-aggregator cluster delay, per-level max,
 //!   summed bottom-up; plus the optional memory-pressure extension used
-//!   by the deployment emulation.
+//!   by the deployment emulation. This is the *reference* path: it
+//!   materializes an [`crate::hierarchy::Arrangement`] per call.
+//! * [`TpdScratch`] — the zero-allocation evaluation core the delay
+//!   oracles run on: the same Eq. 6/7 arithmetic streamed over an
+//!   [`crate::hierarchy::EvalScratch`] view (bit-identical to [`tpd`],
+//!   property-tested), plus one-swap **delta** evaluations that
+//!   rescore a single-coordinate neighbor from the cached per-slot
+//!   delays. See the module docs in [`crate::hierarchy`] for why the
+//!   streaming trainer partition is equivalent to the paper's
+//!   buffer-of-available-labels semantics.
 
 mod client_attrs;
+mod scratch;
 mod tpd;
 
 pub use client_attrs::ClientAttrs;
+pub use scratch::TpdScratch;
 pub use tpd::{cluster_delay, tpd, tpd_with_memory, TpdBreakdown};

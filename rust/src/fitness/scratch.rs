@@ -1,0 +1,460 @@
+//! [`TpdScratch`] — zero-allocation, delta-capable Eq. 6–7 evaluation.
+//!
+//! The streaming evaluation ([`TpdScratch::eval`]) reproduces
+//! [`super::tpd`] bit for bit without materializing an
+//! [`crate::hierarchy::Arrangement`]: the trainer partition comes from
+//! the [`EvalScratch`] view (one O(clients) pass), per-leaf buffer
+//! sums are folded left-to-right in the same ascending order the
+//! legacy trainer lists hold, and the per-level maxima are folded in
+//! the same BFT slot order — so every intermediate float is identical
+//! to the legacy pipeline's.
+//!
+//! On top of the cached per-slot cluster delays, two **delta**
+//! evaluations score single-coordinate neighbors of the loaded
+//! position without re-streaming the whole population:
+//!
+//! * [`TpdScratch::delta_swap`] — two slots exchange clients. The
+//!   trainer partition is untouched; only the two slots and their
+//!   parents change delay.
+//! * [`TpdScratch::delta_replace`] — slot `k` hands its client `a` to a
+//!   trainer `b`. The round-robin deal re-ranks exactly the trainers
+//!   with ids strictly between `a` and `b` (their rank shifts by one,
+//!   rotating them one leaf over), so only the contiguous residue run
+//!   of touched leaves is re-summed — each from its cached sorted
+//!   segment, in ascending id order, keeping the arithmetic bit-equal
+//!   to a full evaluation.
+//!
+//! Both delta paths are excursions: they never mutate the cached base
+//! state, which is exactly what SA / tabu / adaptive-pso probing need
+//! (many neighbors of one incumbent).
+
+use super::ClientAttrs;
+use crate::hierarchy::{EvalScratch, HierarchySpec};
+use crate::placement::PlacementError;
+
+/// Reusable TPD evaluation state for one (spec, population) pair.
+#[derive(Debug, Clone)]
+pub struct TpdScratch {
+    view: EvalScratch,
+    /// Per-leaf trainer-datasize sums (Σ mdatasize, list order).
+    leaf_sum: Vec<f64>,
+    /// Per-slot cluster delays (Eq. 6) of the loaded position.
+    slot_delay: Vec<f64>,
+    /// Per-level maxima, bottom-up (leaf level first).
+    level_max: Vec<f64>,
+    /// Cached Eq. 7 total of the loaded position.
+    total: f64,
+    /// Delta-path overlays (never touch the base state above).
+    alt_delay: Vec<f64>,
+    alt_sum: Vec<f64>,
+}
+
+impl TpdScratch {
+    pub fn new(spec: HierarchySpec, client_count: usize) -> TpdScratch {
+        let view = EvalScratch::new(spec, client_count);
+        let dims = view.dims();
+        let leaf_count = view.leaf_count();
+        TpdScratch {
+            view,
+            leaf_sum: vec![0.0; leaf_count],
+            slot_delay: vec![0.0; dims],
+            level_max: vec![0.0; spec.depth],
+            total: f64::NAN,
+            alt_delay: vec![0.0; dims],
+            alt_sum: vec![0.0; leaf_count],
+        }
+    }
+
+    /// Validate a candidate without disturbing the loaded base state.
+    pub fn validate(&mut self, position: &[usize]) -> Result<(), PlacementError> {
+        self.view.validate(position)
+    }
+
+    pub fn loaded(&self) -> bool {
+        self.view.loaded()
+    }
+
+    /// The loaded base position.
+    pub fn position(&self) -> &[usize] {
+        self.view.position()
+    }
+
+    /// Whether `client` holds a slot in the loaded base position.
+    pub fn is_aggregator(&self, client: usize) -> bool {
+        self.view.is_aggregator(client)
+    }
+
+    /// Cached Eq. 7 total of the loaded base position.
+    pub fn total(&self) -> f64 {
+        debug_assert!(self.loaded());
+        self.total
+    }
+
+    /// Full evaluation: load `position` (validating it) and compute its
+    /// TPD — bit-identical to `tpd(&Arrangement::from_position(..),
+    /// attrs).total`, with zero heap allocation. The position becomes
+    /// the cached base for subsequent delta evaluations.
+    pub fn eval(
+        &mut self,
+        position: &[usize],
+        attrs: &[ClientAttrs],
+    ) -> Result<f64, PlacementError> {
+        self.view.load(position)?;
+        Ok(self.compute(position, attrs))
+    }
+
+    /// [`TpdScratch::eval`] for a position that already passed
+    /// [`TpdScratch::validate`] — skips the redundant re-validation the
+    /// batch oracles would otherwise pay per candidate.
+    pub fn eval_prevalidated(&mut self, position: &[usize], attrs: &[ClientAttrs]) -> f64 {
+        self.view.load_prevalidated(position);
+        self.compute(position, attrs)
+    }
+
+    /// Streaming sums/delays/maxima over the freshly-loaded view.
+    fn compute(&mut self, position: &[usize], attrs: &[ClientAttrs]) -> f64 {
+        debug_assert_eq!(attrs.len(), self.view.client_count());
+        for i in 0..self.view.leaf_count() {
+            let mut sum = 0.0f64;
+            for &t in self.view.leaf_trainers(i) {
+                sum += attrs[t].mdatasize;
+            }
+            self.leaf_sum[i] = sum;
+        }
+        let spec = self.view.spec();
+        let leaf_start = self.view.leaf_start();
+        for slot in 0..self.view.dims() {
+            let agg = &attrs[position[slot]];
+            let data = if slot >= leaf_start {
+                agg.mdatasize + self.leaf_sum[slot - leaf_start]
+            } else {
+                let mut sum = 0.0f64;
+                for child in spec.children(slot) {
+                    sum += attrs[position[child]].mdatasize;
+                }
+                agg.mdatasize + sum
+            };
+            self.slot_delay[slot] = data / agg.pspeed;
+        }
+        let mut total = 0.0f64;
+        for (li, l) in (0..spec.depth).rev().enumerate() {
+            let mut m = 0.0f64;
+            for s in spec.level_slots(l) {
+                m = m.max(self.slot_delay[s]);
+            }
+            self.level_max[li] = m;
+            total += m;
+        }
+        self.total = total;
+        total
+    }
+
+    /// Per-level maxima of the loaded base (bottom-up, leaf first).
+    pub fn level_max(&self) -> &[f64] {
+        debug_assert!(self.loaded());
+        &self.level_max
+    }
+
+    /// Eq. 6 delay of one slot given an override of `slot_k`'s client
+    /// (the only slot whose occupant a delta changes near `s`).
+    fn slot_delay_with(
+        &self,
+        s: usize,
+        attrs: &[ClientAttrs],
+        slot_k: usize,
+        client_k: usize,
+        leaf_sum: impl Fn(usize) -> f64,
+    ) -> f64 {
+        let pos = self.view.position();
+        let eff = |slot: usize| if slot == slot_k { client_k } else { pos[slot] };
+        let agg = &attrs[eff(s)];
+        let leaf_start = self.view.leaf_start();
+        let data = if s >= leaf_start {
+            agg.mdatasize + leaf_sum(s - leaf_start)
+        } else {
+            let mut sum = 0.0f64;
+            for child in self.view.spec().children(s) {
+                sum += attrs[eff(child)].mdatasize;
+            }
+            agg.mdatasize + sum
+        };
+        data / agg.pspeed
+    }
+
+    /// Sum the overlay delays exactly as the full path does.
+    fn alt_total(&self) -> f64 {
+        let spec = self.view.spec();
+        let mut total = 0.0f64;
+        for l in (0..spec.depth).rev() {
+            let mut m = 0.0f64;
+            for s in spec.level_slots(l) {
+                m = m.max(self.alt_delay[s]);
+            }
+            total += m;
+        }
+        total
+    }
+
+    /// TPD of the base position with slots `i` and `j` exchanging
+    /// clients — bit-identical to a full evaluation of the swapped
+    /// position, at O(slots) cost. The base stays loaded.
+    pub fn delta_swap(&mut self, i: usize, j: usize, attrs: &[ClientAttrs]) -> f64 {
+        debug_assert!(self.loaded() && i != j);
+        let pos = self.view.position();
+        let (ci, cj) = (pos[i], pos[j]);
+        let spec = self.view.spec();
+        self.alt_delay.copy_from_slice(&self.slot_delay);
+        // Membership and the trainer partition are unchanged; only the
+        // two slots (and their parents' child sums) move.
+        let mut touched = [Some(i), Some(j), spec.parent(i), spec.parent(j)];
+        for t in 1..4 {
+            if touched[..t].contains(&touched[t]) {
+                touched[t] = None;
+            }
+        }
+        for s in touched.into_iter().flatten() {
+            // Two overridden slots: express as one override after
+            // pre-resolving the other (eff computed per touched slot).
+            let pos = self.view.position();
+            let eff = |slot: usize| {
+                if slot == i {
+                    cj
+                } else if slot == j {
+                    ci
+                } else {
+                    pos[slot]
+                }
+            };
+            let agg = &attrs[eff(s)];
+            let leaf_start = self.view.leaf_start();
+            let data = if s >= leaf_start {
+                agg.mdatasize + self.leaf_sum[s - leaf_start]
+            } else {
+                let mut sum = 0.0f64;
+                for child in spec.children(s) {
+                    sum += attrs[eff(child)].mdatasize;
+                }
+                agg.mdatasize + sum
+            };
+            self.alt_delay[s] = data / agg.pspeed;
+        }
+        self.alt_total()
+    }
+
+    /// TPD of the base position with slot `k` handing its client to
+    /// `b` (currently a trainer) — bit-identical to a full evaluation
+    /// of the modified position. Only the leaves whose round-robin
+    /// contents shift (the trainers with ids between the outgoing and
+    /// incoming client) are re-summed. The base stays loaded.
+    pub fn delta_replace(&mut self, k: usize, b: usize, attrs: &[ClientAttrs]) -> f64 {
+        debug_assert!(self.loaded());
+        debug_assert!(!self.view.is_aggregator(b), "replacement client must be a trainer");
+        let pos = self.view.position();
+        let a = pos[k];
+        debug_assert_ne!(a, b);
+        let leaf_count = self.view.leaf_count();
+        let aggs_below = |x: usize| pos.iter().filter(|&&p| p < x).count();
+        // Trainer ranks in the *base* deal: `a` would insert at r_a,
+        // `b` currently holds r_b.
+        let r_a = a - aggs_below(a);
+        let r_b = b - aggs_below(b);
+        // The contiguous residue run of leaves whose contents change.
+        let (run_start, run_len) = if a < b {
+            (r_a % leaf_count, (r_b - r_a + 1).min(leaf_count))
+        } else {
+            (r_b % leaf_count, (r_a - r_b).min(leaf_count))
+        };
+        for t in 0..run_len {
+            let i = (run_start + t) % leaf_count;
+            // Re-sum leaf i's post-change contents in ascending id
+            // order: unchanged prefix, the incoming client, the
+            // trainers rotating in from the neighboring leaf, the
+            // unchanged suffix.
+            let seg = self.view.leaf_trainers(i);
+            let mut sum = 0.0f64;
+            if a < b {
+                // prefix: ids < a stayed on leaf i
+                for &c in &seg[..seg.partition_point(|&c| c < a)] {
+                    sum += attrs[c].mdatasize;
+                }
+                if r_a % leaf_count == i {
+                    sum += attrs[a].mdatasize;
+                }
+                // mid: ids in (a, b) rotated in from leaf i−1
+                let prev = self.view.leaf_trainers((i + leaf_count - 1) % leaf_count);
+                let mid =
+                    &prev[prev.partition_point(|&c| c <= a)..prev.partition_point(|&c| c < b)];
+                for &c in mid {
+                    sum += attrs[c].mdatasize;
+                }
+                // suffix: ids > b stayed on leaf i
+                for &c in &seg[seg.partition_point(|&c| c <= b)..] {
+                    sum += attrs[c].mdatasize;
+                }
+            } else {
+                // prefix: ids < b stayed on leaf i
+                for &c in &seg[..seg.partition_point(|&c| c < b)] {
+                    sum += attrs[c].mdatasize;
+                }
+                // mid: ids in (b, a) rotated in from leaf i+1
+                let next = self.view.leaf_trainers((i + 1) % leaf_count);
+                let mid =
+                    &next[next.partition_point(|&c| c <= b)..next.partition_point(|&c| c < a)];
+                for &c in mid {
+                    sum += attrs[c].mdatasize;
+                }
+                if (r_a - 1) % leaf_count == i {
+                    sum += attrs[a].mdatasize;
+                }
+                // suffix: ids > a stayed on leaf i
+                for &c in &seg[seg.partition_point(|&c| c <= a)..] {
+                    sum += attrs[c].mdatasize;
+                }
+            }
+            self.alt_sum[i] = sum;
+        }
+        // Patch the affected slot delays over the cached base.
+        self.alt_delay.copy_from_slice(&self.slot_delay);
+        let leaf_start = self.view.leaf_start();
+        let in_run = |i: usize| {
+            run_len == leaf_count || (i + leaf_count - run_start) % leaf_count < run_len
+        };
+        for t in 0..run_len {
+            let i = (run_start + t) % leaf_count;
+            let alt = self.alt_sum[i];
+            let d = self.slot_delay_with(leaf_start + i, attrs, k, b, |leaf| {
+                debug_assert_eq!(leaf, i);
+                alt
+            });
+            self.alt_delay[leaf_start + i] = d;
+        }
+        // Slot k itself (new aggregator b): if it is a leaf outside the
+        // run its sum is the cached one; if inner, re-fold its children.
+        if k < leaf_start || !in_run(k - leaf_start) {
+            let d = self.slot_delay_with(k, attrs, k, b, |leaf| self.leaf_sum[leaf]);
+            self.alt_delay[k] = d;
+        }
+        // Parent of k: its child-datasize fold now includes b.
+        if let Some(p) = self.view.spec().parent(k) {
+            let d = self.slot_delay_with(p, attrs, k, b, |leaf| self.leaf_sum[leaf]);
+            self.alt_delay[p] = d;
+        }
+        self.alt_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::tpd;
+    use crate::hierarchy::Arrangement;
+    use crate::prng::{Pcg32, Rng};
+
+    fn population(n: usize, seed: u64) -> Vec<ClientAttrs> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        // Distinct mdatasize per client so partition mistakes cannot
+        // cancel out in the sums.
+        let mut attrs =
+            ClientAttrs::sample_population(n, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng);
+        for a in attrs.iter_mut() {
+            a.mdatasize = rng.uniform(1.0, 9.0);
+        }
+        attrs
+    }
+
+    fn reference(spec: HierarchySpec, pos: &[usize], attrs: &[ClientAttrs]) -> f64 {
+        tpd(&Arrangement::from_position(spec, pos, attrs.len()), attrs).total
+    }
+
+    #[test]
+    fn eval_is_bit_identical_to_legacy_tpd() {
+        let mut rng = Pcg32::seed_from_u64(3);
+        for (d, w, cc) in [(1, 1, 6), (2, 2, 9), (3, 2, 30), (3, 4, 53), (2, 5, 80)] {
+            let spec = HierarchySpec::new(d, w);
+            let mut scratch = TpdScratch::new(spec, cc);
+            let attrs = population(cc, 100 + cc as u64);
+            for _ in 0..20 {
+                let pos = rng.sample_distinct(cc, spec.dimensions());
+                let fast = scratch.eval(&pos, &attrs).unwrap();
+                let slow = reference(spec, &pos, &attrs);
+                assert_eq!(fast.to_bits(), slow.to_bits(), "D{d} W{w} cc{cc} {pos:?}");
+                assert_eq!(scratch.total().to_bits(), slow.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_replace_is_bit_identical_to_full_eval() {
+        let mut rng = Pcg32::seed_from_u64(8);
+        for (d, w, cc) in [(2, 2, 9), (3, 2, 31), (3, 4, 90), (1, 1, 12), (2, 4, 70)] {
+            let spec = HierarchySpec::new(d, w);
+            let dims = spec.dimensions();
+            let mut scratch = TpdScratch::new(spec, cc);
+            let attrs = population(cc, 7 * cc as u64);
+            for _ in 0..30 {
+                let pos = rng.sample_distinct(cc, dims);
+                scratch.eval(&pos, &attrs).unwrap();
+                let k = rng.gen_range(dims as u64) as usize;
+                let mut b = rng.gen_range(cc as u64) as usize;
+                while pos.contains(&b) {
+                    b = (b + 1) % cc;
+                }
+                let fast = scratch.delta_replace(k, b, &attrs);
+                let mut neighbor = pos.clone();
+                neighbor[k] = b;
+                let slow = reference(spec, &neighbor, &attrs);
+                assert_eq!(
+                    fast.to_bits(),
+                    slow.to_bits(),
+                    "D{d} W{w} cc{cc} k{k} {}→{b}: {fast} vs {slow}",
+                    pos[k]
+                );
+                // The excursion must not disturb the base.
+                assert_eq!(scratch.total().to_bits(), reference(spec, &pos, &attrs).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_swap_is_bit_identical_to_full_eval() {
+        let mut rng = Pcg32::seed_from_u64(21);
+        for (d, w, cc) in [(2, 2, 9), (3, 3, 40), (4, 2, 30)] {
+            let spec = HierarchySpec::new(d, w);
+            let dims = spec.dimensions();
+            let mut scratch = TpdScratch::new(spec, cc);
+            let attrs = population(cc, 11 * cc as u64);
+            for _ in 0..30 {
+                let pos = rng.sample_distinct(cc, dims);
+                scratch.eval(&pos, &attrs).unwrap();
+                let i = rng.gen_range(dims as u64) as usize;
+                let mut j = rng.gen_range(dims as u64) as usize;
+                while j == i {
+                    j = rng.gen_range(dims as u64) as usize;
+                }
+                let fast = scratch.delta_swap(i, j, &attrs);
+                let mut neighbor = pos.clone();
+                neighbor.swap(i, j);
+                let slow = reference(spec, &neighbor, &attrs);
+                assert_eq!(fast.to_bits(), slow.to_bits(), "D{d} W{w} swap {i}<->{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn adjacent_replacement_touches_one_leaf() {
+        // a and b adjacent in id space: the rank shift is empty and the
+        // run collapses to (at most) the entry/exit leaf.
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 11;
+        let attrs = population(cc, 5);
+        let mut scratch = TpdScratch::new(spec, cc);
+        let pos = vec![4, 7, 9];
+        scratch.eval(&pos, &attrs).unwrap();
+        for (k, b) in [(0usize, 3usize), (0, 5), (1, 6), (1, 8), (2, 10), (2, 8)] {
+            let fast = scratch.delta_replace(k, b, &attrs);
+            let mut neighbor = pos.clone();
+            neighbor[k] = b;
+            assert_eq!(fast.to_bits(), reference(spec, &neighbor, &attrs).to_bits());
+        }
+    }
+}

@@ -98,19 +98,62 @@ impl Arrangement {
         self.aggregators.len() + self.trainers.iter().map(Vec::len).sum::<usize>()
     }
 
-    /// Role of a client in this arrangement.
+    /// Roles of every client, built in one O(clients + slots) pass —
+    /// use this instead of calling [`Arrangement::role_of`] per client
+    /// when iterating a whole population (that would be quadratic).
+    /// Index `c` holds client `c`'s role; the vector spans up to the
+    /// highest client id present (ids not assigned anywhere — possible
+    /// in hand-built arrangements with sparse ids — read [`Role::Idle`]).
+    pub fn roles(&self) -> Vec<Role> {
+        let max_id = self
+            .aggregators
+            .iter()
+            .chain(self.trainers.iter().flatten())
+            .max();
+        let len = max_id.map_or(0, |&m| m + 1);
+        let mut roles = vec![Role::Idle; len];
+        for (slot, &c) in self.aggregators.iter().enumerate() {
+            roles[c] = Role::Aggregator { slot };
+        }
+        let leaf_start = self.spec.level_start(self.spec.depth - 1);
+        for (i, t) in self.trainers.iter().enumerate() {
+            for &c in t {
+                roles[c] = Role::Trainer { parent_slot: leaf_start + i };
+            }
+        }
+        roles
+    }
+
+    /// Role of a client in this arrangement: a thin lookup, not a scan.
+    ///
+    /// Aggregators are found in O(slots). Trainers exploit the
+    /// round-robin invariant of [`Arrangement::from_position`] — the
+    /// k-th non-aggregator client (ascending) sits under leaf
+    /// `k % leaf_count` — so the parent leaf is computed arithmetically
+    /// and confirmed with one binary search. Arrangements built by hand
+    /// with a different trainer layout fall back to scanning the lists.
     pub fn role_of(&self, client: usize) -> Role {
         if let Some(slot) = self.aggregators.iter().position(|&c| c == client) {
-            Role::Aggregator { slot }
-        } else {
-            for (i, t) in self.trainers.iter().enumerate() {
-                if t.contains(&client) {
-                    let slot = self.spec.level_start(self.spec.depth - 1) + i;
-                    return Role::Trainer { parent_slot: slot };
-                }
-            }
-            Role::Idle
+            return Role::Aggregator { slot };
         }
+        let leaf_start = self.spec.level_start(self.spec.depth - 1);
+        if client < self.client_count() && !self.trainers.is_empty() {
+            // Trainer rank under the round-robin assignment: clients
+            // below `client` minus the aggregators among them.
+            let rank = client - self.aggregators.iter().filter(|&&a| a < client).count();
+            let leaf = rank % self.trainers.len();
+            if self.trainers[leaf].binary_search(&client).is_ok() {
+                return Role::Trainer { parent_slot: leaf_start + leaf };
+            }
+        }
+        // Non-standard arrangement (or a client that was dropped):
+        // authoritative scan over the trainer lists.
+        for (i, t) in self.trainers.iter().enumerate() {
+            if t.contains(&client) {
+                return Role::Trainer { parent_slot: leaf_start + i };
+            }
+        }
+        Role::Idle
     }
 }
 
@@ -194,6 +237,56 @@ mod tests {
         }
         assert_eq!(aggs, 7);
         assert_eq!(trainers, 7);
+    }
+
+    #[test]
+    fn roles_matches_role_of_and_covers_everyone_in_one_pass() {
+        let s = spec();
+        let pos: Vec<usize> = vec![1, 3, 5, 7, 9, 11, 13];
+        let a = Arrangement::from_position(s, &pos, 14);
+        let roles = a.roles();
+        assert_eq!(roles.len(), 14);
+        for (c, &r) in roles.iter().enumerate() {
+            assert_eq!(r, a.role_of(c), "client {c}");
+            assert_ne!(r, Role::Idle, "client {c} idle in full arrangement");
+        }
+        // A client beyond the population is idle, not misassigned.
+        assert_eq!(a.role_of(99), Role::Idle);
+    }
+
+    #[test]
+    fn role_of_falls_back_on_hand_built_arrangements() {
+        // A wire-format arrangement whose trainer lists do not follow
+        // the round-robin-from-ascending-buffer layout must still
+        // resolve roles correctly (the agent rebuilds arrangements from
+        // RoundStart messages).
+        let s = HierarchySpec::new(2, 2); // slots 0; leaves 1, 2
+        let a = Arrangement {
+            spec: s,
+            aggregators: vec![4, 0, 1],
+            trainers: vec![vec![5, 2], vec![3]], // unsorted, uneven
+        };
+        assert_eq!(a.role_of(4), Role::Aggregator { slot: 0 });
+        assert_eq!(a.role_of(2), Role::Trainer { parent_slot: 1 });
+        assert_eq!(a.role_of(5), Role::Trainer { parent_slot: 1 });
+        assert_eq!(a.role_of(3), Role::Trainer { parent_slot: 2 });
+        let roles = a.roles();
+        assert_eq!(roles[3], Role::Trainer { parent_slot: 2 });
+        assert_eq!(roles[0], Role::Aggregator { slot: 1 });
+
+        // Sparse ids (gaps in the assigned population): roles() spans
+        // to the max id, gaps read Idle, nothing panics.
+        let sparse = Arrangement {
+            spec: s,
+            aggregators: vec![6, 0, 1],
+            trainers: vec![vec![2], vec![3]],
+        };
+        let roles = sparse.roles();
+        assert_eq!(roles.len(), 7);
+        assert_eq!(roles[6], Role::Aggregator { slot: 0 });
+        assert_eq!(roles[4], Role::Idle);
+        assert_eq!(roles[5], Role::Idle);
+        assert_eq!(sparse.role_of(2), Role::Trainer { parent_slot: 1 });
     }
 
     #[test]

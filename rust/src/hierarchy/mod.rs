@@ -4,9 +4,23 @@
 //! breadth-first order (the paper constructs and traverses it by BFT).
 //! An [`Arrangement`] binds client ids to slots — the object PSO
 //! optimizes — plus the trainer-to-leaf assignment.
+//!
+//! Two representations of the same assignment coexist:
+//!
+//! * [`Arrangement`] — the materialized public type (owned trainer
+//!   lists per leaf), used on protocol/wire paths and as the reference
+//!   the equivalence tests pin the fast path against.
+//! * [`EvalScratch`] — the reusable zero-allocation *view* the delay
+//!   oracles reload per candidate placement: a word-bitset membership
+//!   table (which is also the validator) plus the round-robin trainer
+//!   partition streamed into one flat buffer. Loading it never touches
+//!   the heap, which is what makes million-evaluation placement
+//!   searches allocation-free.
 
 mod arrangement;
+mod scratch;
 mod spec;
 
 pub use arrangement::{Arrangement, Role};
+pub use scratch::EvalScratch;
 pub use spec::HierarchySpec;

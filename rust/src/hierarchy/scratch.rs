@@ -1,0 +1,290 @@
+//! [`EvalScratch`] — the zero-allocation view of an [`Arrangement`].
+//!
+//! The delay oracles score thousands of candidate placements per
+//! second; materializing an [`Arrangement`] per candidate
+//! (`from_position` allocates the membership table, the trainer buffer
+//! and one `Vec` per leaf) dominates the evaluation cost at 10k-client
+//! populations. `EvalScratch` holds every buffer an evaluation needs and
+//! is reloaded in place per candidate:
+//!
+//! * a `u64`-word **membership bitset** — doubling as the duplicate/
+//!   range validator (`validate_placement`'s bitmask generalized past
+//!   64 clients without the `Vec<bool>` fallback allocation). Batch
+//!   oracles validate up front into a separate transient bitset and
+//!   then rebuild membership branch-free at load time
+//!   ([`EvalScratch::load_prevalidated`]) — two cheap word passes,
+//!   zero allocations, never a per-candidate `Vec`;
+//! * the **flat trainer partition** — the round-robin
+//!   trainer-to-leaf assignment streamed in one O(clients) pass into a
+//!   single reusable vector, counting-sorted by leaf (segment `i` holds
+//!   exactly the clients `Arrangement::from_position` would have pushed
+//!   into `trainers[i]`, in the same ascending order — the equivalence
+//!   the bit-exactness property tests pin down).
+//!
+//! The segment boundaries depend only on the population size (the
+//! round-robin deal hands leaf `i` `⌈(T−i)/L⌉` trainers), so they are
+//! precomputed once at construction.
+
+use super::{Arrangement, HierarchySpec};
+use crate::placement::PlacementError;
+
+/// Reusable zero-allocation evaluation state for one (spec,
+/// population-size) pair. `load` validates a candidate position and
+/// rebuilds the membership bitset and trainer partition in place.
+#[derive(Debug, Clone)]
+pub struct EvalScratch {
+    spec: HierarchySpec,
+    client_count: usize,
+    dims: usize,
+    leaf_start: usize,
+    leaf_count: usize,
+    /// Membership bitset of the loaded position (one bit per client).
+    words: Vec<u64>,
+    /// Transient bitset for validating candidates without clobbering
+    /// the loaded membership (batch validation runs before scoring).
+    val_words: Vec<u64>,
+    /// The loaded position (client id per slot, BFT order).
+    position: Vec<usize>,
+    /// All trainer ids, grouped by leaf: segment `i` is
+    /// `trainers[seg[i]..seg[i+1]]`, ascending within each segment.
+    trainers: Vec<usize>,
+    /// Segment offsets (length `leaf_count + 1`); constant per shape.
+    seg: Vec<usize>,
+    /// Per-leaf fill cursors during the counting pass.
+    cursor: Vec<usize>,
+    loaded: bool,
+}
+
+impl EvalScratch {
+    /// Allocate scratch for `client_count` clients on `spec`'s slots.
+    /// This is the only allocating call; every subsequent `load` reuses
+    /// these buffers.
+    pub fn new(spec: HierarchySpec, client_count: usize) -> EvalScratch {
+        let dims = spec.dimensions();
+        assert!(client_count >= dims, "population smaller than slot count");
+        let leaf_start = spec.level_start(spec.depth - 1);
+        let leaf_count = spec.leaf_slots().len();
+        let trainer_count = client_count - dims;
+        // Round-robin segment sizes: leaf i receives trainers
+        // i, i+L, i+2L, … of the ascending buffer.
+        let mut seg = Vec::with_capacity(leaf_count + 1);
+        let mut acc = 0usize;
+        seg.push(0);
+        for i in 0..leaf_count {
+            acc += trainer_count / leaf_count + usize::from(i < trainer_count % leaf_count);
+            seg.push(acc);
+        }
+        let word_count = client_count.div_ceil(64);
+        EvalScratch {
+            spec,
+            client_count,
+            dims,
+            leaf_start,
+            leaf_count,
+            words: vec![0; word_count],
+            val_words: vec![0; word_count],
+            position: vec![0; dims],
+            trainers: vec![0; trainer_count],
+            seg,
+            cursor: vec![0; leaf_count],
+            loaded: false,
+        }
+    }
+
+    /// Validate a candidate without loading it: correct arity, ids in
+    /// range, no duplicates — the same checks (and error order) as
+    /// [`crate::placement::validate_placement`], but against a reusable
+    /// word bitset, so populations past 64 clients pay no allocation.
+    pub fn validate(&mut self, position: &[usize]) -> Result<(), PlacementError> {
+        self.val_words.fill(0);
+        Self::check(&mut self.val_words, position, self.dims, self.client_count)
+    }
+
+    fn check(
+        words: &mut [u64],
+        position: &[usize],
+        dims: usize,
+        client_count: usize,
+    ) -> Result<(), PlacementError> {
+        if position.len() != dims {
+            return Err(PlacementError::WrongArity { expected: dims, got: position.len() });
+        }
+        for &c in position {
+            if c >= client_count {
+                return Err(PlacementError::ClientOutOfRange { client: c, client_count });
+            }
+            let (word, bit) = (c / 64, 1u64 << (c % 64));
+            if words[word] & bit != 0 {
+                return Err(PlacementError::DuplicateClient { client: c });
+            }
+            words[word] |= bit;
+        }
+        Ok(())
+    }
+
+    /// Load a candidate: validate it, rebuild the membership bitset and
+    /// stream the round-robin trainer partition — one O(clients) pass,
+    /// zero allocations. On error the scratch is left unloaded.
+    pub fn load(&mut self, position: &[usize]) -> Result<(), PlacementError> {
+        self.loaded = false;
+        self.words.fill(0);
+        Self::check(&mut self.words, position, self.dims, self.client_count)?;
+        self.finish_load(position);
+        Ok(())
+    }
+
+    /// Load a candidate that already passed [`EvalScratch::validate`]
+    /// (the batch oracles validate everything up front, then score):
+    /// rebuilds membership with a branch-free bit pass instead of
+    /// re-running the duplicate/range checks.
+    pub fn load_prevalidated(&mut self, position: &[usize]) {
+        debug_assert_eq!(position.len(), self.dims, "prevalidated position has wrong arity");
+        self.loaded = false;
+        self.words.fill(0);
+        for &c in position {
+            debug_assert!(c < self.client_count);
+            self.words[c / 64] |= 1u64 << (c % 64);
+        }
+        self.finish_load(position);
+    }
+
+    /// Shared tail of the load paths: membership bits are set; copy the
+    /// position and deal the trainer partition.
+    fn finish_load(&mut self, position: &[usize]) {
+        self.position.copy_from_slice(position);
+        self.cursor.copy_from_slice(&self.seg[..self.leaf_count]);
+        let mut rank = 0usize;
+        for c in 0..self.client_count {
+            if self.words[c / 64] & (1u64 << (c % 64)) == 0 {
+                let leaf = rank % self.leaf_count;
+                self.trainers[self.cursor[leaf]] = c;
+                self.cursor[leaf] += 1;
+                rank += 1;
+            }
+        }
+        self.loaded = true;
+    }
+
+    /// Whether a position is currently loaded.
+    pub fn loaded(&self) -> bool {
+        self.loaded
+    }
+
+    /// The loaded position (client per slot, BFT order).
+    pub fn position(&self) -> &[usize] {
+        debug_assert!(self.loaded);
+        &self.position
+    }
+
+    /// Whether `client` holds an aggregator slot in the loaded position.
+    pub fn is_aggregator(&self, client: usize) -> bool {
+        debug_assert!(self.loaded);
+        client < self.client_count && self.words[client / 64] & (1u64 << (client % 64)) != 0
+    }
+
+    /// Trainers of leaf `i` (0-based among leaf slots), ascending —
+    /// identical contents and order to `Arrangement::trainers[i]`.
+    pub fn leaf_trainers(&self, i: usize) -> &[usize] {
+        debug_assert!(self.loaded);
+        &self.trainers[self.seg[i]..self.seg[i + 1]]
+    }
+
+    pub fn spec(&self) -> HierarchySpec {
+        self.spec
+    }
+
+    pub fn client_count(&self) -> usize {
+        self.client_count
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// First leaf slot index (`spec.level_start(depth − 1)`), cached.
+    pub fn leaf_start(&self) -> usize {
+        self.leaf_start
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.leaf_count
+    }
+
+    pub fn trainer_count(&self) -> usize {
+        self.trainers.len()
+    }
+
+    /// Materialize the loaded position as a full [`Arrangement`]
+    /// (allocates; for callers that need the legacy type).
+    pub fn to_arrangement(&self) -> Arrangement {
+        debug_assert!(self.loaded);
+        Arrangement {
+            spec: self.spec,
+            aggregators: self.position.clone(),
+            trainers: (0..self.leaf_count).map(|i| self.leaf_trainers(i).to_vec()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Rng};
+
+    #[test]
+    fn partition_matches_from_position_across_shapes() {
+        let mut rng = Pcg32::seed_from_u64(11);
+        for (d, w, cc) in [(1, 1, 5), (2, 2, 7), (3, 2, 12), (3, 4, 53), (2, 3, 70)] {
+            let spec = HierarchySpec::new(d, w);
+            let mut scratch = EvalScratch::new(spec, cc);
+            for _ in 0..10 {
+                let pos = rng.sample_distinct(cc, spec.dimensions());
+                scratch.load(&pos).unwrap();
+                let arr = Arrangement::from_position(spec, &pos, cc);
+                for i in 0..scratch.leaf_count() {
+                    assert_eq!(scratch.leaf_trainers(i), &arr.trainers[i][..], "leaf {i}");
+                }
+                assert_eq!(scratch.to_arrangement(), arr);
+                for c in 0..cc {
+                    assert_eq!(scratch.is_aggregator(c), pos.contains(&c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validation_reports_the_same_typed_errors() {
+        use crate::placement::validate_placement;
+        let spec = HierarchySpec::new(2, 2);
+        let mut scratch = EvalScratch::new(spec, 100); // >64: word path
+        for bad in [
+            vec![0usize, 1],          // arity
+            vec![0, 1, 200],          // out of range
+            vec![5, 7, 5],            // duplicate
+            vec![99, 98, 97],         // valid
+        ] {
+            assert_eq!(scratch.validate(&bad), validate_placement(&bad, 3, 100), "{bad:?}");
+            assert_eq!(
+                scratch.load(&bad).is_ok(),
+                validate_placement(&bad, 3, 100).is_ok()
+            );
+        }
+        // A failed load leaves the scratch unloaded; a good one loads.
+        assert!(scratch.load(&[0, 0, 1]).is_err());
+        assert!(!scratch.loaded());
+        scratch.load(&[0, 64, 99]).unwrap();
+        assert!(scratch.loaded());
+        assert!(scratch.is_aggregator(64) && !scratch.is_aggregator(63));
+    }
+
+    #[test]
+    fn exact_fit_population_has_no_trainers() {
+        let spec = HierarchySpec::new(2, 3);
+        let mut scratch = EvalScratch::new(spec, spec.dimensions());
+        scratch.load(&(0..spec.dimensions()).collect::<Vec<_>>()).unwrap();
+        assert_eq!(scratch.trainer_count(), 0);
+        for i in 0..scratch.leaf_count() {
+            assert!(scratch.leaf_trainers(i).is_empty());
+        }
+    }
+}

@@ -1,4 +1,9 @@
 //! Shape of the aggregation hierarchy: slot indexing in BFT order.
+//!
+//! Every accessor here is O(1) and allocation-free — these run inside
+//! the delay-oracle hot loop (once per slot per candidate placement),
+//! so geometric series are evaluated in closed form and child/leaf slot
+//! sets are exposed as index ranges rather than collected vectors.
 
 /// A complete W-ary aggregator tree of depth D (slots only, no clients).
 ///
@@ -20,15 +25,14 @@ impl HierarchySpec {
         HierarchySpec { depth, width }
     }
 
-    /// Total aggregator slots (paper Eq. 5): Σ_{i=0}^{D-1} W^i.
+    /// Total aggregator slots (paper Eq. 5): Σ_{i=0}^{D-1} W^i, in
+    /// closed form — `(W^D − 1)/(W − 1)` for W ≥ 2, `D` for W = 1.
     pub fn dimensions(&self) -> usize {
-        let mut total = 0usize;
-        let mut level = 1usize;
-        for _ in 0..self.depth {
-            total += level;
-            level *= self.width;
+        if self.width == 1 {
+            self.depth
+        } else {
+            (self.width.pow(self.depth as u32) - 1) / (self.width - 1)
         }
-        total
     }
 
     /// Number of slots on level `l` (0-based): W^l.
@@ -37,31 +41,27 @@ impl HierarchySpec {
         self.width.pow(l as u32)
     }
 
-    /// First slot index of level `l`.
+    /// First slot index of level `l`: the partial geometric sum
+    /// `Σ_{i<l} W^i` in closed form (no per-call loop).
     pub fn level_start(&self, l: usize) -> usize {
         assert!(l < self.depth);
-        let mut start = 0;
-        let mut size = 1;
-        for _ in 0..l {
-            start += size;
-            size *= self.width;
+        if self.width == 1 {
+            l
+        } else {
+            (self.width.pow(l as u32) - 1) / (self.width - 1)
         }
-        start
     }
 
-    /// Level of slot `s` (inverse of the BFT numbering).
+    /// Level of slot `s` (inverse of the BFT numbering). O(1): slot `s`
+    /// sits on level `l` iff `s(W−1)+1 ∈ [W^l, W^{l+1})`, so the level
+    /// is an integer logarithm.
     pub fn level_of(&self, s: usize) -> usize {
         assert!(s < self.dimensions());
-        let mut start = 0;
-        let mut size = 1;
-        for l in 0..self.depth {
-            if s < start + size {
-                return l;
-            }
-            start += size;
-            size *= self.width;
+        if self.width == 1 {
+            s
+        } else {
+            (s * (self.width - 1) + 1).ilog(self.width) as usize
         }
-        unreachable!()
     }
 
     /// Parent slot of `s` (None for the root).
@@ -74,12 +74,14 @@ impl HierarchySpec {
         }
     }
 
-    /// Child aggregator slots of `s` (empty for leaf-level slots).
-    pub fn children(&self, s: usize) -> Vec<usize> {
+    /// Child aggregator slots of `s` as a contiguous index range (empty
+    /// for leaf-level slots). Children are consecutive in BFT order, so
+    /// no vector needs collecting.
+    pub fn children(&self, s: usize) -> std::ops::Range<usize> {
         let dims = self.dimensions();
         assert!(s < dims);
         let first = s * self.width + 1;
-        (first..first + self.width).filter(|&c| c < dims).collect()
+        first.min(dims)..(first + self.width).min(dims)
     }
 
     /// True if `s` is on the leaf aggregator level (D-1) — these slots
@@ -89,22 +91,22 @@ impl HierarchySpec {
     }
 
     /// Slots on the leaf aggregator level, in BFT order.
-    pub fn leaf_slots(&self) -> Vec<usize> {
-        let start = self.level_start(self.depth - 1);
-        (start..self.dimensions()).collect()
+    pub fn leaf_slots(&self) -> std::ops::Range<usize> {
+        self.level_start(self.depth - 1)..self.dimensions()
+    }
+
+    /// Slot index range of level `l`, in BFT order.
+    pub fn level_slots(&self, l: usize) -> std::ops::Range<usize> {
+        let start = self.level_start(l);
+        start..start + self.level_size(l)
     }
 
     /// Slot indices grouped by level, bottom-up (leaf level first) — the
     /// traversal order of the paper's fitness function ("Traverse
-    /// hierarchy bottom-up").
+    /// hierarchy bottom-up"). Allocates; hot paths iterate
+    /// [`HierarchySpec::level_slots`] over `(0..depth).rev()` instead.
     pub fn levels_bottom_up(&self) -> Vec<Vec<usize>> {
-        (0..self.depth)
-            .rev()
-            .map(|l| {
-                let start = self.level_start(l);
-                (start..start + self.level_size(l)).collect()
-            })
-            .collect()
+        (0..self.depth).rev().map(|l| self.level_slots(l).collect()).collect()
     }
 }
 
@@ -120,6 +122,8 @@ mod tests {
         assert_eq!(HierarchySpec::new(4, 4).dimensions(), 85);
         assert_eq!(HierarchySpec::new(5, 4).dimensions(), 341);
         assert_eq!(HierarchySpec::new(3, 5).dimensions(), 31);
+        // Width-1 chains: one slot per level.
+        assert_eq!(HierarchySpec::new(4, 1).dimensions(), 4);
     }
 
     #[test]
@@ -129,6 +133,27 @@ mod tests {
             for c in h.children(s) {
                 assert_eq!(h.parent(c), Some(s));
                 assert_eq!(h.level_of(c), h.level_of(s) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_forms_match_the_geometric_series() {
+        // The O(1) closed forms must agree with the defining series for
+        // every shape in the catalog's range (including width 1).
+        for depth in 1..6 {
+            for width in 1..6 {
+                let h = HierarchySpec::new(depth, width);
+                let series: usize = (0..depth).map(|i| width.pow(i as u32)).sum();
+                assert_eq!(h.dimensions(), series, "D{depth} W{width}");
+                let mut start = 0;
+                for l in 0..depth {
+                    assert_eq!(h.level_start(l), start, "D{depth} W{width} l{l}");
+                    for s in h.level_slots(l) {
+                        assert_eq!(h.level_of(s), l, "D{depth} W{width} s{s}");
+                    }
+                    start += h.level_size(l);
+                }
             }
         }
     }
@@ -150,7 +175,7 @@ mod tests {
         seen.sort_unstable();
         assert_eq!(seen, (0..h.dimensions()).collect::<Vec<_>>());
         // First group is the leaf level.
-        assert_eq!(h.levels_bottom_up()[0], h.leaf_slots());
+        assert_eq!(h.levels_bottom_up()[0], h.leaf_slots().collect::<Vec<_>>());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R|MIN..MAX --out csv]
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c --env live|analytic|event-driven --replicates R|MIN..MAX]
 //! repro ablate     --scenario NAME [--mechanisms k1,k2 --strategy pso --evals N --replicates R --threads N --out csv]
+//! repro bench      --suite eval [--samples N --warmup N --batch N --out BENCH_eval.json]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
 //! ```
@@ -25,6 +26,7 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
         Some("ablate") => cmd_ablate(&args),
+        Some("bench") => cmd_bench(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("broker") => cmd_broker(&args),
         Some("worker") => cmd_worker(&args),
@@ -33,7 +35,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: repro <sim|fig3|fleet|compare|ablate|e2e|broker> [flags]\n\
+                "usage: repro <sim|fig3|fleet|compare|ablate|bench|e2e|broker> [flags]\n\
                  \n\
                  sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
@@ -50,6 +52,9 @@ fn main() -> Result<()> {
                  ablate   per-mechanism ablation of a dynamic scenario (one-mechanism-off deltas);\n\
                  \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
                  \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
+                 bench    delay-oracle perf suite (evals/sec at tiny/paper/deep/mega10k);\n\
+                 \x20        --suite eval [--samples 30 --warmup 3 --batch 32]\n\
+                 \x20        [--out BENCH_eval.json]  (JSON schema-validated on write)\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
                  worker   one FL client process attached to a TCP broker\n\
@@ -296,6 +301,39 @@ fn cmd_ablate(args: &Args) -> Result<()> {
     let outcome = run_ablation(ns, &mechanisms, &cfg, &sched).map_err(|e| anyhow!(e))?;
     let out = args.flag("out").map(std::path::PathBuf::from);
     report_ablation(&outcome, out.as_deref())?;
+    Ok(())
+}
+
+/// Delay-oracle throughput suite: evals/sec for the analytic (scratch,
+/// delta and legacy pipelines), emulated and event-driven oracles at
+/// the four catalog shapes, with an optional schema-validated
+/// `BENCH_eval.json` artifact.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use repro::bench::eval_suite::{print_speedups, run_eval_suite, write_bench_json, SuiteConfig};
+    let suite = args.str_flag("suite", "eval");
+    if suite != "eval" {
+        return Err(anyhow!("unknown bench suite {suite:?}; available suites: eval"));
+    }
+    let default = SuiteConfig::default();
+    let cfg = SuiteConfig {
+        samples: args.usize_flag("samples", default.samples).map_err(|e| anyhow!(e))?,
+        warmup: args.usize_flag("warmup", default.warmup).map_err(|e| anyhow!(e))?,
+        batch: args.usize_flag("batch", default.batch).map_err(|e| anyhow!(e))?,
+    };
+    if cfg.samples == 0 || cfg.batch == 0 {
+        return Err(anyhow!("--samples and --batch must be >= 1"));
+    }
+    println!(
+        "bench suite=eval samples={} warmup={} batch={} (latencies are per {}-candidate batch)",
+        cfg.samples, cfg.warmup, cfg.batch, cfg.batch
+    );
+    let cases = run_eval_suite(&cfg);
+    print_speedups(&cases);
+    if let Some(out) = args.flag("out") {
+        let path = std::path::PathBuf::from(out);
+        write_bench_json(&path, &cfg, &cases).map_err(|e| anyhow!(e))?;
+        println!("bench JSON written and schema-validated: {}", path.display());
+    }
     Ok(())
 }
 

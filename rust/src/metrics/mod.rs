@@ -11,7 +11,7 @@ mod timer;
 pub use csv::CsvWriter;
 pub use recorder::{RoundRecord, RoundRecorder};
 pub use summary::{
-    mean_ci, paired_sign_test, rank_ascending, rank_biserial, wilcoxon_signed_rank, MeanCi,
-    SignTest, Summary, Wilcoxon,
+    holm_bonferroni, mean_ci, paired_sign_test, rank_ascending, rank_biserial,
+    wilcoxon_signed_rank, MeanCi, SignTest, Summary, Wilcoxon,
 };
 pub use timer::Stopwatch;

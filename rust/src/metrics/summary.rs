@@ -165,6 +165,32 @@ pub fn paired_sign_test(a: &[f64], b: &[f64]) -> SignTest {
     SignTest { a_wins, b_wins, ties, p_value }
 }
 
+/// Holm–Bonferroni step-down adjustment of a family of p-values — the
+/// multiple-comparisons correction for the fleet report, where the
+/// best-ranked strategy is tested against *every* rival at once (m − 1
+/// simultaneous hypotheses would otherwise inflate the family-wise
+/// error rate).
+///
+/// Returns the adjusted p-values in the input order:
+/// `p'_(i) = max_{j ≤ i} min(1, (m − j + 1) · p_(j))` over the
+/// ascending order statistics — uniformly more powerful than plain
+/// Bonferroni while still controlling the family-wise error rate, with
+/// no independence assumption. NaNs are treated as 1.0 (an unusable
+/// p-value can never gain significance from adjustment).
+pub fn holm_bonferroni(ps: &[f64]) -> Vec<f64> {
+    let m = ps.len();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| ps[a].total_cmp(&ps[b]));
+    let mut adjusted = vec![0.0f64; m];
+    let mut running_max = 0.0f64;
+    for (j, &i) in order.iter().enumerate() {
+        let p = if ps[i].is_nan() { 1.0 } else { ps[i] };
+        running_max = running_max.max(((m - j) as f64 * p).min(1.0));
+        adjusted[i] = running_max;
+    }
+    adjusted
+}
+
 /// Result of a two-sided Wilcoxon signed-rank test with the
 /// matched-pairs rank-biserial correlation as effect size.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -559,6 +585,36 @@ mod tests {
         let t = wilcoxon_signed_rank(&zeros, &c);
         assert!(t.p_value > 0.5, "{}", t.p_value);
         assert!(t.rank_biserial.abs() < 0.2, "{}", t.rank_biserial);
+    }
+
+    #[test]
+    fn holm_bonferroni_matches_the_textbook_vector() {
+        // Known worked example: raw p = [0.01, 0.04, 0.03, 0.005], m=4.
+        // Sorted: 0.005·4=0.02, 0.01·3=0.03, 0.03·2=0.06, 0.04·1=0.04
+        // → monotone max → [0.02, 0.03, 0.06, 0.06], mapped back.
+        let adj = holm_bonferroni(&[0.01, 0.04, 0.03, 0.005]);
+        let expect = [0.03, 0.06, 0.06, 0.02];
+        for (a, e) in adj.iter().zip(expect) {
+            assert!((a - e).abs() < 1e-12, "{adj:?}");
+        }
+        // Single comparison: no adjustment.
+        assert_eq!(holm_bonferroni(&[0.04]), vec![0.04]);
+        // Empty family: empty result.
+        assert!(holm_bonferroni(&[]).is_empty());
+    }
+
+    #[test]
+    fn holm_bonferroni_is_monotone_capped_and_nan_safe() {
+        let adj = holm_bonferroni(&[0.9, 0.5, 0.2, f64::NAN]);
+        assert!(adj.iter().all(|p| (0.0..=1.0).contains(p)), "{adj:?}");
+        // Adjusted values never fall below the raw ones.
+        for (raw, a) in [0.9, 0.5, 0.2].iter().zip(&adj) {
+            assert!(a >= raw, "{adj:?}");
+        }
+        // NaN is treated as 1.0 (never significant).
+        assert_eq!(adj[3], 1.0);
+        // The smallest raw p gets the full Bonferroni factor.
+        assert!((adj[2] - 0.8).abs() < 1e-12, "{adj:?}");
     }
 
     #[test]

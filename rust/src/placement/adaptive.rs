@@ -42,7 +42,7 @@
 
 use super::{Optimizer, OptimizerState, Placement, PlacementError, PsoPlacement};
 use crate::log_info;
-use crate::prng::{Pcg32, Rng};
+use crate::prng::Pcg32;
 use crate::pso::PsoConfig;
 
 /// Drift-aware PSO placement.
@@ -116,11 +116,10 @@ impl AdaptivePsoPlacement {
             return None;
         }
         let mut p = self.inner.gbest();
-        let slot = self.rng.gen_range(self.dims as u64) as usize;
-        let mut candidate = self.rng.gen_range(self.client_count as u64) as usize;
-        while p.contains(&candidate) {
-            candidate = (candidate + 1) % self.client_count;
-        }
+        // The shared single-coordinate move — since the incumbent was
+        // just (re-)evaluated, the analytic oracle rescores this probe
+        // through its delta fast path.
+        let (slot, candidate) = super::draw_slot_replacement(&p, self.client_count, &mut self.rng);
         p[slot] = candidate;
         Some(Placement::new(p))
     }

@@ -18,12 +18,29 @@
 //!   (speed factor on training, speed × memory pressure on aggregation).
 //! * [`crate::fl::LiveSession`] — a *real* measured FL round through the
 //!   broker + agent + runtime stack (defined next to the coordinator).
+//!
+//! ## The zero-allocation hot path
+//!
+//! The analytic oracles own reusable scratch state
+//! ([`crate::fitness::TpdScratch`] / [`crate::hierarchy::EvalScratch`])
+//! instead of materializing an [`Arrangement`] per candidate, so a
+//! steady-state `eval_batch` performs no heap allocation beyond its
+//! result vector — the difference between thousands and millions of
+//! evaluations per second at 10k-client populations (`repro bench
+//! --suite eval` tracks this). [`AnalyticTpd`] additionally recognizes
+//! **single-coordinate neighbors** of the last fully-evaluated
+//! placement — exactly what [`super::SaPlacement`],
+//! [`super::TabuPlacement`] and [`super::AdaptivePsoPlacement`]'s
+//! pinned probing propose — and scores them through the delta fast
+//! path, which re-sums only the clusters the swap touches. Every fast
+//! path is bit-identical to the legacy `tpd(&Arrangement::..)` pipeline
+//! (property-tested in `tests/properties.rs`).
 
-use super::{validate_placement, Placement, PlacementError};
+use super::{Placement, PlacementError};
 use crate::configio::ClientSpec;
-use crate::fitness::{tpd, ClientAttrs};
+use crate::fitness::{ClientAttrs, TpdScratch};
 use crate::fl::emulation::{EmulatedClock, WorkKind};
-use crate::hierarchy::{Arrangement, HierarchySpec};
+use crate::hierarchy::{EvalScratch, HierarchySpec};
 
 /// A delay oracle: scores candidate placements.
 pub trait Environment {
@@ -42,17 +59,56 @@ pub trait Environment {
     }
 }
 
+/// How a candidate differs from a cached base position.
+enum Diff {
+    /// Identical to the base.
+    Same,
+    /// Exactly one slot changed to a client outside the base placement.
+    Replace { slot: usize, client: usize },
+    /// Exactly two slots exchanged their base clients.
+    Swap { i: usize, j: usize },
+    /// Anything else: evaluate in full.
+    Full,
+}
+
+/// Classify a *validated* candidate against the cached base position.
+fn classify(base: &[usize], candidate: &[usize]) -> Diff {
+    debug_assert_eq!(base.len(), candidate.len());
+    let (mut first, mut second) = (None, None);
+    for (s, (&b, &c)) in base.iter().zip(candidate).enumerate() {
+        if b != c {
+            match (first, second) {
+                (None, _) => first = Some(s),
+                (Some(_), None) => second = Some(s),
+                _ => return Diff::Full,
+            }
+        }
+    }
+    match (first, second) {
+        (None, _) => Diff::Same,
+        (Some(k), None) => Diff::Replace { slot: k, client: candidate[k] },
+        (Some(i), Some(j)) => {
+            if candidate[i] == base[j] && candidate[j] == base[i] {
+                Diff::Swap { i, j }
+            } else {
+                Diff::Full
+            }
+        }
+    }
+}
+
 /// The Eq. 6–7 Total Processing Delay model over a simulated population
 /// (paper §IV.A/B) — the fitness behind Fig. 3.
 pub struct AnalyticTpd {
-    spec: HierarchySpec,
     attrs: Vec<ClientAttrs>,
+    scratch: TpdScratch,
 }
 
 impl AnalyticTpd {
     pub fn new(spec: HierarchySpec, attrs: Vec<ClientAttrs>) -> AnalyticTpd {
         assert!(attrs.len() >= spec.dimensions(), "population smaller than slot count");
-        AnalyticTpd { spec, attrs }
+        let scratch = TpdScratch::new(spec, attrs.len());
+        AnalyticTpd { attrs, scratch }
     }
 
     /// The simulated client population.
@@ -60,12 +116,22 @@ impl AnalyticTpd {
         &self.attrs
     }
 
-    fn tpd_of(&self, placement: &[usize]) -> f64 {
-        tpd(
-            &Arrangement::from_position(self.spec, placement, self.attrs.len()),
-            &self.attrs,
-        )
-        .total
+    /// Score one *validated* placement. Single-coordinate neighbors of
+    /// the cached base position take the delta fast path; everything
+    /// else is a full (still allocation-free) streaming evaluation that
+    /// becomes the new base.
+    fn tpd_of(&mut self, placement: &[usize]) -> f64 {
+        if self.scratch.loaded() {
+            match classify(self.scratch.position(), placement) {
+                Diff::Same => return self.scratch.total(),
+                Diff::Replace { slot, client } if !self.scratch.is_aggregator(client) => {
+                    return self.scratch.delta_replace(slot, client, &self.attrs);
+                }
+                Diff::Swap { i, j } => return self.scratch.delta_swap(i, j, &self.attrs),
+                _ => {}
+            }
+        }
+        self.scratch.eval_prevalidated(placement, &self.attrs)
     }
 }
 
@@ -75,18 +141,22 @@ impl Environment for AnalyticTpd {
     }
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
-        validate_placement(placement, self.spec.dimensions(), self.attrs.len())?;
+        self.scratch.validate(placement)?;
         Ok(self.tpd_of(placement))
     }
 
     fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
-        // One dispatch for the whole batch: validate everything first,
+        // One dispatch for the whole batch: validate everything first
+        // (against the reusable bitset — no per-candidate allocation),
         // then score in a tight loop (no per-candidate virtual calls).
-        let dims = self.spec.dimensions();
         for p in batch {
-            validate_placement(p, dims, self.attrs.len())?;
+            self.scratch.validate(p)?;
         }
-        Ok(batch.iter().map(|p| self.tpd_of(p)).collect())
+        let mut delays = Vec::with_capacity(batch.len());
+        for p in batch {
+            delays.push(self.tpd_of(p));
+        }
+        Ok(delays)
     }
 }
 
@@ -100,10 +170,12 @@ impl Environment for AnalyticTpd {
 /// parallel (slowest trainer gates the leaf level), then each hierarchy
 /// level aggregates bottom-up (slowest cluster gates its level; cluster
 /// cost scales with fan-in, aggregation pays the memory-pressure
-/// factor).
+/// factor). Like [`AnalyticTpd`] it evaluates over a reusable
+/// [`EvalScratch`] view — no arrangement is materialized per candidate.
 pub struct EmulatedDelay {
     spec: HierarchySpec,
     clocks: Vec<EmulatedClock>,
+    scratch: EvalScratch,
     /// Seconds of full-speed compute one local training phase costs.
     pub train_unit_secs: f64,
     /// Seconds of full-speed compute per model merged during aggregation.
@@ -117,6 +189,7 @@ impl EmulatedDelay {
         EmulatedDelay {
             spec,
             clocks: clients.iter().map(|c| EmulatedClock::new(c.clone())).collect(),
+            scratch: EvalScratch::new(spec, clients.len()),
             train_unit_secs: 1.0,
             agg_unit_secs: 0.5,
         }
@@ -127,28 +200,34 @@ impl EmulatedDelay {
         EmulatedDelay::new(sc.depth, sc.width, &sc.clients)
     }
 
-    fn delay_of(&self, placement: &[usize]) -> f64 {
-        let arr = Arrangement::from_position(self.spec, placement, self.clocks.len());
+    fn delay_of(&mut self, placement: &[usize]) -> f64 {
+        self.scratch.load_prevalidated(placement);
         // Phase 1: local training in parallel — the slowest trainer
         // (or training aggregator) gates the round start of aggregation.
-        let train = arr
-            .all_trainers()
-            .into_iter()
-            .map(|c| self.clocks[c].factor(WorkKind::Train) * self.train_unit_secs)
-            .fold(0.0_f64, f64::max);
+        let mut train = 0.0f64;
+        for leaf in 0..self.scratch.leaf_count() {
+            for &t in self.scratch.leaf_trainers(leaf) {
+                train = train.max(self.clocks[t].factor(WorkKind::Train) * self.train_unit_secs);
+            }
+        }
         // Phase 2: aggregation bottom-up, one level at a time.
         let mut total = train;
-        for level in self.spec.levels_bottom_up() {
-            let level_max = level
-                .iter()
-                .map(|&slot| {
-                    let agg = arr.aggregators[slot];
-                    let fan_in = arr.buffer_of(slot).len() + 1;
+        let leaf_start = self.scratch.leaf_start();
+        for l in (0..self.spec.depth).rev() {
+            let mut level_max = 0.0f64;
+            for slot in self.spec.level_slots(l) {
+                let agg = placement[slot];
+                let fan_in = if slot >= leaf_start {
+                    self.scratch.leaf_trainers(slot - leaf_start).len() + 1
+                } else {
+                    self.spec.children(slot).len() + 1
+                };
+                level_max = level_max.max(
                     self.clocks[agg].factor(WorkKind::Aggregate)
                         * self.agg_unit_secs
-                        * fan_in as f64
-                })
-                .fold(0.0_f64, f64::max);
+                        * fan_in as f64,
+                );
+            }
             total += level_max;
         }
         total
@@ -161,16 +240,19 @@ impl Environment for EmulatedDelay {
     }
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
-        validate_placement(placement, self.spec.dimensions(), self.clocks.len())?;
+        self.scratch.validate(placement)?;
         Ok(self.delay_of(placement))
     }
 
     fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
-        let dims = self.spec.dimensions();
         for p in batch {
-            validate_placement(p, dims, self.clocks.len())?;
+            self.scratch.validate(p)?;
         }
-        Ok(batch.iter().map(|p| self.delay_of(p)).collect())
+        let mut delays = Vec::with_capacity(batch.len());
+        for p in batch {
+            delays.push(self.delay_of(p));
+        }
+        Ok(delays)
     }
 }
 
@@ -178,7 +260,9 @@ impl Environment for EmulatedDelay {
 mod tests {
     use super::*;
     use crate::configio::DeployScenario;
-    use crate::prng::Pcg32;
+    use crate::fitness::tpd;
+    use crate::hierarchy::Arrangement;
+    use crate::prng::{Pcg32, Rng};
 
     fn population(n: usize) -> Vec<ClientAttrs> {
         let mut rng = Pcg32::seed_from_u64(1);
@@ -198,6 +282,61 @@ mod tests {
         let singles: Vec<f64> = batch.iter().map(|p| env.eval(p).unwrap()).collect();
         assert_eq!(batched, singles);
         assert!(batched.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn analytic_matches_the_legacy_arrangement_pipeline() {
+        // The scratch path must reproduce tpd(&from_position(..)) bit
+        // for bit, including across the >64-client bitset fallback.
+        for cc in [8usize, 70] {
+            let spec = HierarchySpec::new(2, 2);
+            let attrs = population(cc);
+            let mut env = AnalyticTpd::new(spec, attrs.clone());
+            let mut rng = Pcg32::seed_from_u64(9);
+            for _ in 0..20 {
+                let pos = rng.sample_distinct(cc, 3);
+                let got = env.eval(&Placement::new(pos.clone())).unwrap();
+                let want = tpd(&Arrangement::from_position(spec, &pos, cc), &attrs).total;
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_fast_path_scores_neighbors_bit_identically() {
+        let spec = HierarchySpec::new(3, 2);
+        let cc = 40;
+        let attrs = population(cc);
+        let mut env = AnalyticTpd::new(spec, attrs.clone());
+        let mut rng = Pcg32::seed_from_u64(4);
+        let base: Vec<usize> = rng.sample_distinct(cc, 7);
+        env.eval(&Placement::new(base.clone())).unwrap();
+        for _ in 0..40 {
+            // Single-slot replacement neighbor (the SA/tabu/probe move).
+            let slot = rng.gen_range(7) as usize;
+            let mut id = rng.gen_range(cc as u64) as usize;
+            while base.contains(&id) {
+                id = (id + 1) % cc;
+            }
+            let mut neighbor = base.clone();
+            neighbor[slot] = id;
+            let got = env.eval(&Placement::new(neighbor.clone())).unwrap();
+            let want = tpd(&Arrangement::from_position(spec, &neighbor, cc), &attrs).total;
+            assert_eq!(got.to_bits(), want.to_bits(), "replace {slot}->{id}");
+            // Two-slot swap neighbor (SA's other move).
+            let (i, j) = (rng.gen_range(7) as usize, rng.gen_range(7) as usize);
+            if i != j {
+                let mut swapped = base.clone();
+                swapped.swap(i, j);
+                let got = env.eval(&Placement::new(swapped.clone())).unwrap();
+                let want = tpd(&Arrangement::from_position(spec, &swapped, cc), &attrs).total;
+                assert_eq!(got.to_bits(), want.to_bits(), "swap {i}<->{j}");
+            }
+            // Re-evaluating the base is the cached-total fast path.
+            let got = env.eval(&Placement::new(base.clone())).unwrap();
+            let want = tpd(&Arrangement::from_position(spec, &base, cc), &attrs).total;
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
     }
 
     #[test]

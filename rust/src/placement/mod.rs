@@ -209,6 +209,35 @@ pub fn assert_valid_placement(placement: &[usize], dims: usize, client_count: us
     }
 }
 
+/// Draw the shared single-coordinate neighbor move: a uniformly-chosen
+/// slot hands its client to a uniformly-drawn client not already in
+/// `position` (linear probing past collisions keeps the draw cheap and
+/// the RNG stream identical to the historical per-strategy loops).
+/// Returns `(slot, new_client)`.
+///
+/// This is the *one* neighbor shape [`SaPlacement`], [`TabuPlacement`]
+/// and [`AdaptivePsoPlacement`]'s pinned probing all propose — and
+/// exactly the shape [`AnalyticTpd`] recognizes for its one-swap
+/// delta-evaluation fast path, so these strategies' evaluations cost
+/// O(changed clusters), not O(population). Public so benches and the
+/// allocation guard generate the *same* move shape the strategies use
+/// (a drifting copy would silently stop measuring the delta path).
+pub fn draw_slot_replacement(
+    position: &[usize],
+    client_count: usize,
+    rng: &mut crate::prng::Pcg32,
+) -> (usize, usize) {
+    use crate::prng::Rng;
+    let dims = position.len();
+    debug_assert!(client_count > dims, "no free client to swap in");
+    let slot = rng.gen_range(dims as u64) as usize;
+    let mut id = rng.gen_range(client_count as u64) as usize;
+    while position.contains(&id) {
+        id = (id + 1) % client_count;
+    }
+    (slot, id)
+}
+
 /// Snapshot of an optimizer's transferable state (checkpointing hook).
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerState {

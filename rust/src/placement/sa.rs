@@ -67,8 +67,10 @@ impl SaPlacement {
         self.best_delay
     }
 
-    /// Neighbour move: 50% replace one slot's client with an unused one,
-    /// 50% swap two slots (changes which cluster each client leads).
+    /// Neighbour move: 50% replace one slot's client with an unused one
+    /// (the shared single-coordinate move the analytic oracle
+    /// delta-evaluates), 50% swap two slots (changes which cluster each
+    /// client leads — also a delta-evaluable shape).
     fn neighbour(&mut self) -> Vec<usize> {
         let mut n = self.current.clone();
         if self.dims >= 2 && self.rng.next_f64() < 0.5 {
@@ -79,11 +81,7 @@ impl SaPlacement {
             }
             n.swap(a, b);
         } else {
-            let slot = self.rng.gen_range(self.dims as u64) as usize;
-            let mut id = self.rng.gen_range(self.client_count as u64) as usize;
-            while n.contains(&id) {
-                id = (id + 1) % self.client_count;
-            }
+            let (slot, id) = super::draw_slot_replacement(&n, self.client_count, &mut self.rng);
             n[slot] = id;
         }
         n

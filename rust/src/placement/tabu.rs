@@ -92,11 +92,10 @@ impl TabuPlacement {
         let mut guard = 0;
         while self.batch.len() < self.cfg.candidates && guard < self.cfg.candidates * 10 {
             guard += 1;
-            let slot = self.rng.gen_range(self.dims as u64) as usize;
-            let mut id = self.rng.gen_range(self.client_count as u64) as usize;
-            while self.current.contains(&id) {
-                id = (id + 1) % self.client_count;
-            }
+            // Single-coordinate neighbor: the shape the analytic
+            // oracle's delta fast path rescores in O(changed clusters).
+            let (slot, id) =
+                super::draw_slot_replacement(&self.current, self.client_count, &mut self.rng);
             let mv: Move = (slot, id);
             if self.is_tabu(&mv) {
                 continue;

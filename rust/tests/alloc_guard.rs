@@ -1,0 +1,205 @@
+//! Allocation-regression guard for the evaluation hot path.
+//!
+//! A counting global allocator measures how many heap allocations one
+//! steady-state `eval_batch` dispatch performs after warmup. The
+//! contract: the only allowed allocation is the result `Vec<f64>`
+//! itself — scoring never touches the heap, at any population size.
+//! A regression (someone reintroducing a per-candidate `Arrangement`,
+//! a `Vec<bool>` validator, a fresh event queue, …) trips this test
+//! with an allocation count that scales with clients or batch size.
+//!
+//! The guard lives in its own test binary so no *other* binary's tests
+//! share the process; within this binary the counter is global, so the
+//! tests additionally serialize on [`COUNTER_LOCK`] — the default
+//! libtest harness would otherwise run them on parallel threads and
+//! one test's setup allocations would pollute another's counting
+//! window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use repro::des::EventDrivenEnv;
+use repro::fitness::ClientAttrs;
+use repro::hierarchy::HierarchySpec;
+use repro::placement::{AnalyticTpd, EmulatedDelay, Environment, Placement};
+use repro::prng::{Pcg32, Rng};
+
+struct CountingAlloc;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ENABLED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes the counting windows: every test (setup included) runs
+/// under this lock, so a sibling test's allocations can never land in
+/// an enabled counter. A poisoned lock (earlier test panicked) is
+/// still a valid lock for exclusion purposes.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    COUNTER_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Allocations performed by `f` (best of three runs, to shrug off any
+/// one-off lazy initialization inside the standard library).
+fn count_allocs(mut f: impl FnMut()) -> usize {
+    let mut best = usize::MAX;
+    for _ in 0..3 {
+        ALLOCS.store(0, Ordering::SeqCst);
+        ENABLED.store(true, Ordering::SeqCst);
+        f();
+        ENABLED.store(false, Ordering::SeqCst);
+        best = best.min(ALLOCS.load(Ordering::SeqCst));
+    }
+    best
+}
+
+fn population(spec: HierarchySpec, trainers_per_leaf: usize, seed: u64) -> Vec<ClientAttrs> {
+    let cc = spec.dimensions() + spec.leaf_slots().len() * trainers_per_leaf;
+    let mut rng = Pcg32::seed_from_u64(seed);
+    ClientAttrs::sample_population(cc, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+}
+
+fn batch(spec: HierarchySpec, cc: usize, count: usize, seed: u64) -> Vec<Placement> {
+    let mut rng = Pcg32::seed_from_u64(seed);
+    (0..count).map(|_| Placement::new(rng.sample_distinct(cc, spec.dimensions()))).collect()
+}
+
+/// The result vector is the single allowed allocation per dispatch
+/// (`Vec::with_capacity` = 1 call); anything above this constant means
+/// scoring itself touched the heap.
+const RESULT_VEC_ALLOCS: usize = 1;
+
+#[test]
+fn analytic_eval_batch_steady_state_allocates_only_the_result_vec() {
+    let _serial = serialized();
+    // Two population scales: u64-bitmask range and the 10k-client
+    // word-bitset range. The count must be identical — per-client or
+    // per-candidate allocation would scale it.
+    let mut counts = Vec::new();
+    for (depth, width, tpl) in [(2usize, 2usize, 2usize), (3, 4, 625)] {
+        let spec = HierarchySpec::new(depth, width);
+        let attrs = population(spec, tpl, 1);
+        let cc = attrs.len();
+        let candidates = batch(spec, cc, 16, 2);
+        let mut env = AnalyticTpd::new(spec, attrs);
+        for _ in 0..2 {
+            env.eval_batch(&candidates).unwrap(); // warm every buffer
+        }
+        let n = count_allocs(|| {
+            let delays = env.eval_batch(&candidates).unwrap();
+            assert_eq!(delays.len(), 16);
+        });
+        assert!(
+            n <= RESULT_VEC_ALLOCS,
+            "analytic eval_batch allocated {n}× at {cc} clients (allowed: result vec only)"
+        );
+        counts.push(n);
+    }
+    assert_eq!(counts[0], counts[1], "allocation count must not scale with population");
+}
+
+#[test]
+fn analytic_delta_eval_allocates_nothing() {
+    let _serial = serialized();
+    // Single-candidate delta evaluations return a bare f64: zero heap
+    // traffic once the base is cached.
+    let spec = HierarchySpec::new(3, 4);
+    let attrs = population(spec, 625, 3);
+    let cc = attrs.len();
+    let mut env = AnalyticTpd::new(spec, attrs);
+    let base = batch(spec, cc, 1, 4).pop().unwrap();
+    env.eval(&base).unwrap();
+    // One-swap neighbor (the strategies' shared move), prebuilt
+    // outside the counted region.
+    let mut rng = Pcg32::seed_from_u64(5);
+    let mut neighbor = base.as_slice().to_vec();
+    let (slot, id) = repro::placement::draw_slot_replacement(&base, cc, &mut rng);
+    neighbor[slot] = id;
+    let neighbor = Placement::new(neighbor);
+    env.eval(&neighbor).unwrap(); // warm
+    let n = count_allocs(|| {
+        env.eval(&neighbor).unwrap();
+        env.eval(&base).unwrap();
+    });
+    assert_eq!(n, 0, "delta eval must not touch the heap ({n} allocations)");
+}
+
+#[test]
+fn emulated_eval_batch_steady_state_allocates_only_the_result_vec() {
+    let _serial = serialized();
+    use repro::configio::ClientSpec;
+    let spec = HierarchySpec::new(3, 2);
+    let cc = spec.dimensions() + spec.leaf_slots().len() * 40;
+    let specs: Vec<ClientSpec> = (0..cc)
+        .map(|i| ClientSpec {
+            name: format!("c{i}"),
+            speed_factor: [1.0, 0.5][i % 2],
+            memory_pressure: [1.0, 2.0][i % 2],
+        })
+        .collect();
+    let mut env = EmulatedDelay::new(3, 2, &specs);
+    let candidates = batch(spec, cc, 16, 6);
+    for _ in 0..2 {
+        env.eval_batch(&candidates).unwrap();
+    }
+    let n = count_allocs(|| {
+        env.eval_batch(&candidates).unwrap();
+    });
+    assert!(n <= RESULT_VEC_ALLOCS, "emulated eval_batch allocated {n}×");
+}
+
+#[test]
+fn event_driven_eval_batch_steady_state_allocates_only_the_result_vec() {
+    let _serial = serialized();
+    // Conformance configuration; the event heap and every per-slot
+    // table are clear-and-refill, so after one warm batch (which grows
+    // the heap to its high-water mark) re-scoring the same batch must
+    // only allocate the result vector.
+    let spec = HierarchySpec::new(3, 4);
+    let attrs = population(spec, 60, 7); // ~981 clients
+    let cc = attrs.len();
+    let candidates = batch(spec, cc, 8, 8);
+    let mut env = EventDrivenEnv::conformance(spec, attrs);
+    for _ in 0..2 {
+        env.eval_batch(&candidates).unwrap();
+    }
+    let n = count_allocs(|| {
+        let delays = env.eval_batch(&candidates).unwrap();
+        assert_eq!(delays.len(), 8);
+    });
+    assert!(
+        n <= RESULT_VEC_ALLOCS,
+        "event-driven eval_batch allocated {n}× at {cc} clients (allowed: result vec only)"
+    );
+}

@@ -3,10 +3,13 @@
 //! placement strategies, JSON, codecs.
 
 use repro::configio::DynamicsSpec;
-use repro::des::{simulate_round, Dynamics, NetworkModel, RoundRealization, SyncMode};
-use repro::fitness::{tpd, tpd_with_memory, ClientAttrs};
+use repro::des::{
+    simulate_round, Dynamics, EventDrivenEnv, NetworkModel, RoundRealization, RoundScratch,
+    SyncMode,
+};
+use repro::fitness::{tpd, tpd_with_memory, ClientAttrs, TpdScratch};
 use repro::fl::codec::{ModelCodec, ModelUpdate};
-use repro::hierarchy::{Arrangement, HierarchySpec, Role};
+use repro::hierarchy::{Arrangement, EvalScratch, HierarchySpec, Role};
 use repro::json::{self, Value};
 use repro::placement::*;
 use repro::proplite::{forall, Gen};
@@ -483,5 +486,259 @@ fn prop_round_robin_uniform_duty() {
             count.iter().all(|&n| n == dims),
             "uneven duty: {count:?} (dims {dims}, cc {cc})"
         );
+    });
+}
+
+/// Population with per-client-distinct mdatasize, so a wrong trainer
+/// partition cannot hide behind uniform data sizes.
+fn random_hetero_population(g: &mut Gen, n: usize) -> Vec<ClientAttrs> {
+    let mut attrs = random_population(g, n);
+    let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+    for a in attrs.iter_mut() {
+        a.mdatasize = rng.uniform(1.0, 9.0);
+    }
+    attrs
+}
+
+#[test]
+fn prop_scratch_eval_bit_identical_to_legacy_tpd() {
+    // The zero-allocation streaming evaluation must equal the legacy
+    // Arrangement pipeline bit for bit — across random shapes and
+    // populations, including >64-client ones that exercise the word
+    // bitset past the validate_placement u64 fast path.
+    forall("scratch tpd == legacy tpd (bitwise)", 150, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..100);
+        let attrs = random_hetero_population(g, cc);
+        let mut scratch = TpdScratch::new(spec, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        for _ in 0..4 {
+            let pos = rng.sample_distinct(cc, dims);
+            let fast = scratch.eval(&pos, &attrs).unwrap();
+            let slow = tpd(&Arrangement::from_position(spec, &pos, cc), &attrs).total;
+            assert_eq!(fast.to_bits(), slow.to_bits(), "{fast} != {slow} at {pos:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_delta_evaluations_bit_identical_to_full_eval() {
+    // One-swap delta paths (single-slot replacement and two-slot swap)
+    // must reproduce a from-scratch evaluation of the neighbor bitwise,
+    // and must leave the cached base untouched.
+    forall("delta eval == full eval (bitwise)", 120, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + 1 + g.usize_in(0..90); // at least one free client
+        let attrs = random_hetero_population(g, cc);
+        let mut scratch = TpdScratch::new(spec, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let base_total = scratch.eval(&pos, &attrs).unwrap();
+        for _ in 0..4 {
+            // Replacement neighbor.
+            let k = rng.gen_range(dims as u64) as usize;
+            let mut b = rng.gen_range(cc as u64) as usize;
+            while pos.contains(&b) {
+                b = (b + 1) % cc;
+            }
+            let mut neighbor = pos.clone();
+            neighbor[k] = b;
+            let fast = scratch.delta_replace(k, b, &attrs);
+            let slow = tpd(&Arrangement::from_position(spec, &neighbor, cc), &attrs).total;
+            assert_eq!(
+                fast.to_bits(),
+                slow.to_bits(),
+                "replace slot {k}: {} -> {b} on {pos:?}",
+                pos[k]
+            );
+            // Swap neighbor (needs two slots).
+            if dims >= 2 {
+                let i = rng.gen_range(dims as u64) as usize;
+                let mut j = rng.gen_range(dims as u64) as usize;
+                while j == i {
+                    j = rng.gen_range(dims as u64) as usize;
+                }
+                let mut swapped = pos.clone();
+                swapped.swap(i, j);
+                let fast = scratch.delta_swap(i, j, &attrs);
+                let slow = tpd(&Arrangement::from_position(spec, &swapped, cc), &attrs).total;
+                assert_eq!(fast.to_bits(), slow.to_bits(), "swap {i}<->{j} on {pos:?}");
+            }
+            // Excursions never disturb the cached base.
+            assert_eq!(scratch.total().to_bits(), base_total.to_bits());
+            assert_eq!(scratch.position(), &pos[..]);
+        }
+    });
+}
+
+#[test]
+fn prop_scratch_view_partition_matches_from_position() {
+    forall("EvalScratch partition == Arrangement trainers", 120, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..100);
+        let mut view = EvalScratch::new(spec, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        view.load(&pos).unwrap();
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        for i in 0..view.leaf_count() {
+            assert_eq!(view.leaf_trainers(i), &arr.trainers[i][..], "leaf {i}");
+        }
+        for c in 0..cc {
+            assert_eq!(view.is_aggregator(c), pos.contains(&c), "client {c}");
+        }
+    });
+}
+
+#[test]
+fn prop_scratch_round_bit_identical_to_reference_round() {
+    // The reusable RoundScratch must reproduce simulate_round exactly —
+    // tpd bits, event count, dropped trainers — under jitter, network
+    // contention, dropouts and slowdowns, with the scratch reused
+    // across many candidates (stale-state bugs would surface here).
+    forall("RoundScratch == simulate_round (bitwise)", 80, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..40);
+        let attrs = random_hetero_population(g, cc);
+        let mut net = NetworkModel::zero_cost(cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        for l in net.uplinks.iter_mut() {
+            l.latency_s = rng.uniform(0.0, 0.05);
+            l.bandwidth = rng.uniform(5.0, 50.0);
+        }
+        if g.bool() {
+            net.agg_ingress = rng.uniform(10.0, 100.0);
+        }
+        net.jitter_sigma = g.f64_in(0.0, 0.5);
+        let train_unit = g.f64_in(0.0, 2.0);
+        let mode = if g.bool() { SyncMode::LevelBarrier } else { SyncMode::Pipelined };
+        let mut scratch = RoundScratch::new(spec, cc);
+        for round in 0..4 {
+            let mut real = RoundRealization::all_on(cc, rng.next_u64());
+            for a in real.active.iter_mut() {
+                *a = rng.next_f64() > 0.25;
+            }
+            for s in real.slowdown.iter_mut() {
+                *s = rng.uniform(1.0, 3.0);
+            }
+            let pos = rng.sample_distinct(cc, dims);
+            let arr = Arrangement::from_position(spec, &pos, cc);
+            let want = simulate_round(&arr, &attrs, &net, &real, train_unit, mode);
+            let got = scratch.simulate(&pos, &attrs, &net, &real, train_unit, mode).unwrap();
+            assert_eq!(got.tpd.to_bits(), want.tpd.to_bits(), "round {round}: {got:?} {want:?}");
+            assert_eq!(got.events, want.events);
+            assert_eq!(got.dropped_trainers, want.dropped_trainers);
+        }
+    });
+}
+
+#[test]
+fn prop_event_env_scores_equal_reference_rounds() {
+    // End-to-end: EventDrivenEnv (scratch-backed) must score each batch
+    // element exactly as a reference simulate_round over the same
+    // realization, network and jitter seed would.
+    use repro::configio::SimScenario;
+    forall("EventDrivenEnv == reference rounds", 40, |g| {
+        let mut sc = SimScenario {
+            depth: 1 + g.usize_in(0..3),
+            width: 1 + g.usize_in(0..3),
+            env: "event-driven".into(),
+            ..SimScenario::default()
+        };
+        sc.seed = g.u64_in(0..1 << 40);
+        sc.des.train_unit = g.f64_in(0.0, 2.0);
+        sc.des.net.latency_range_s = (0.001, 0.03);
+        sc.des.net.bandwidth_range = (5.0, 50.0);
+        sc.des.net.jitter_sigma = g.f64_in(0.0, 0.5);
+        sc.des.dynamics = random_dynamics_spec(g);
+        let cc = sc.client_count();
+        let spec = HierarchySpec::new(sc.depth, sc.width);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..1 << 40));
+        let batch: Vec<Placement> =
+            (0..3).map(|_| Placement::new(rng.sample_distinct(cc, spec.dimensions()))).collect();
+        let mut env = EventDrivenEnv::from_scenario(&sc, attrs.clone());
+        for _ in 0..3 {
+            let real = env.realization().clone();
+            let delays = env.eval_batch(&batch).unwrap();
+            for (p, &d) in batch.iter().zip(&delays) {
+                let arr = Arrangement::from_position(spec, p, cc);
+                let want = simulate_round(
+                    &arr,
+                    &attrs,
+                    env.net(),
+                    &real,
+                    env.train_unit(),
+                    env.sync_mode(),
+                );
+                assert_eq!(d.to_bits(), want.tpd.to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_roles_one_pass_agrees_with_role_of() {
+    forall("roles() == role_of() per client", 120, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + g.usize_in(0..100);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let pos = rng.sample_distinct(cc, dims);
+        let arr = Arrangement::from_position(spec, &pos, cc);
+        let roles = arr.roles();
+        assert_eq!(roles.len(), cc);
+        let mut aggs = 0;
+        let mut trainers = 0;
+        for (c, &r) in roles.iter().enumerate() {
+            assert_eq!(r, arr.role_of(c), "client {c}");
+            match r {
+                Role::Aggregator { slot } => {
+                    aggs += 1;
+                    assert_eq!(arr.aggregators[slot], c);
+                }
+                Role::Trainer { parent_slot } => {
+                    trainers += 1;
+                    assert!(arr.buffer_of(parent_slot).contains(&c));
+                }
+                Role::Idle => panic!("client {c} idle in full arrangement"),
+            }
+        }
+        assert_eq!(aggs, dims);
+        assert_eq!(trainers, cc - dims);
+        // Out-of-population clients are Idle.
+        assert_eq!(arr.role_of(cc + g.usize_in(0..10)), Role::Idle);
+    });
+}
+
+#[test]
+fn prop_spec_closed_forms_match_reference_series() {
+    // The O(1) closed forms (dimensions, level_start, level_of,
+    // children-as-range) must agree with the defining geometric series
+    // on every random shape, width 1 included.
+    forall("spec closed forms == series", 150, |g| {
+        let spec = random_spec(g);
+        let series: usize = (0..spec.depth).map(|i| spec.width.pow(i as u32)).sum();
+        assert_eq!(spec.dimensions(), series);
+        let mut start = 0usize;
+        let mut size = 1usize;
+        for l in 0..spec.depth {
+            assert_eq!(spec.level_start(l), start, "level_start({l})");
+            for s in spec.level_slots(l) {
+                assert_eq!(spec.level_of(s), l, "level_of({s})");
+            }
+            start += size;
+            size *= spec.width;
+        }
+        for s in 0..spec.dimensions() {
+            let first = s * spec.width + 1;
+            let reference: Vec<usize> =
+                (first..first + spec.width).filter(|&c| c < series).collect();
+            assert_eq!(spec.children(s).collect::<Vec<_>>(), reference, "children({s})");
+        }
     });
 }
