@@ -420,6 +420,12 @@ pub struct DeployScenario {
     pub lr: f32,
     pub pso: PsoConfig,
     pub seed: u64,
+    /// Child-update timeout for agents (seconds): how long a trainer
+    /// waits for the global model and an aggregator waits for each
+    /// child's update before proceeding partial. TOML `[deploy]
+    /// child_timeout_secs`; must be > 0 (historically a buried 120 s
+    /// constant in `fl::Deployment::launch`).
+    pub child_timeout_secs: f64,
 }
 
 impl DeployScenario {
@@ -463,6 +469,8 @@ impl DeployScenario {
             lr: 0.05,
             pso,
             seed: 7,
+            // Generous: the slowest emulated aggregation must fit.
+            child_timeout_secs: 120.0,
         }
     }
 
@@ -475,6 +483,70 @@ impl DeployScenario {
             level *= self.width;
         }
         total
+    }
+
+    /// Load overrides from a TOML-lite `[deploy]` table on top of the
+    /// paper preset. Recognized keys: `clients` (generates that many
+    /// uniform full-speed clients in place of the paper's mix), `depth`,
+    /// `width`, `rounds`, `local_steps`, `lr`, `seed`,
+    /// `child_timeout_secs`.
+    pub fn from_toml(doc: &TomlDoc) -> Result<DeployScenario, String> {
+        let mut sc = DeployScenario::paper_docker();
+        let get_usize = |k: &str, d: usize| -> Result<usize, String> {
+            match doc.get("deploy", k) {
+                None => Ok(d),
+                Some(v) => v.as_usize().ok_or_else(|| format!("deploy.{k}: expected integer")),
+            }
+        };
+        let get_f64 = |k: &str, d: f64| -> Result<f64, String> {
+            match doc.get("deploy", k) {
+                None => Ok(d),
+                Some(v) => v.as_f64().ok_or_else(|| format!("deploy.{k}: expected number")),
+            }
+        };
+        if let Some(v) = doc.get("deploy", "clients") {
+            let n = v.as_usize().ok_or("deploy.clients: expected integer")?;
+            sc.clients = (0..n)
+                .map(|i| ClientSpec {
+                    name: format!("c{i}"),
+                    speed_factor: 1.0,
+                    memory_pressure: 1.0,
+                })
+                .collect();
+        }
+        sc.depth = get_usize("depth", sc.depth)?;
+        sc.width = get_usize("width", sc.width)?;
+        sc.rounds = get_usize("rounds", sc.rounds)?;
+        sc.local_steps = get_usize("local_steps", sc.local_steps)?;
+        sc.lr = get_f64("lr", sc.lr as f64)? as f32;
+        sc.seed = get_usize("seed", sc.seed as usize)? as u64;
+        sc.child_timeout_secs = get_f64("child_timeout_secs", sc.child_timeout_secs)?;
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Reject inconsistent deployment parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.child_timeout_secs <= 0.0 || !self.child_timeout_secs.is_finite() {
+            return Err(format!(
+                "deploy.child_timeout_secs: must be a finite number > 0, got {}",
+                self.child_timeout_secs
+            ));
+        }
+        if self.depth == 0 || self.width == 0 {
+            return Err("deploy.depth and deploy.width must be >= 1".into());
+        }
+        if self.rounds == 0 {
+            return Err("deploy.rounds must be >= 1".into());
+        }
+        if self.clients.len() < self.dimensions() {
+            return Err(format!(
+                "deploy: {} clients cannot host {} aggregator slots",
+                self.clients.len(),
+                self.dimensions()
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -689,5 +761,46 @@ partition_rounds = 3
         assert_eq!(d.dimensions(), 3); // root + 2 leaf aggregators
         // Exactly one full-speed client.
         assert_eq!(d.clients.iter().filter(|c| c.speed_factor == 1.0).count(), 1);
+        // The once-hardcoded child timeout surfaces as a validated field.
+        assert_eq!(d.child_timeout_secs, 120.0);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn deploy_toml_overrides_and_validates() {
+        let doc = TomlDoc::parse(
+            r#"
+[deploy]
+clients = 6
+depth = 2
+width = 2
+rounds = 3
+seed = 99
+child_timeout_secs = 2.5
+"#,
+        )
+        .unwrap();
+        let sc = DeployScenario::from_toml(&doc).unwrap();
+        assert_eq!(sc.clients.len(), 6);
+        assert_eq!(sc.rounds, 3);
+        assert_eq!(sc.seed, 99);
+        assert!((sc.child_timeout_secs - 2.5).abs() < 1e-12);
+        // No [deploy] table at all → the paper preset.
+        let empty = TomlDoc::parse("").unwrap();
+        assert_eq!(DeployScenario::from_toml(&empty).unwrap(), DeployScenario::paper_docker());
+    }
+
+    #[test]
+    fn deploy_toml_rejects_bad_child_timeout() {
+        for bad in ["0", "-5.0"] {
+            let doc =
+                TomlDoc::parse(&format!("[deploy]\nchild_timeout_secs = {bad}\n")).unwrap();
+            let err = DeployScenario::from_toml(&doc).unwrap_err();
+            assert!(err.contains("child_timeout_secs"), "{err}");
+        }
+        // Too few clients for the hierarchy.
+        let doc = TomlDoc::parse("[deploy]\nclients = 2\n").unwrap();
+        let err = DeployScenario::from_toml(&doc).unwrap_err();
+        assert!(err.contains("aggregator slots"), "{err}");
     }
 }

@@ -18,9 +18,12 @@
 //! `--replicates R` CSVs are byte-frozen), `sim::runner` routes
 //! `repro sim`/`fig3` through [`run_cell_trial`] on a
 //! [`TrialScheduler`], and the sim-tier `repro compare --replicates`
-//! builds a one-scenario plan. The live tier (`fl::LiveSession`) stays
-//! single-replicate — a real testbed round cannot be re-seeded — and
-//! says so in its report.
+//! builds a one-scenario plan. Live-tier replication goes through the
+//! service tier instead ([`crate::service`]): `repro compare --env
+//! live --replicates R` submits one session per derived seed to a
+//! [`crate::service::CoordinatorService`], whose workers multiplex the
+//! sessions over one shared broker — each replicate is a real,
+//! independently seeded FL session, not a re-scored trace.
 
 pub mod ablate;
 pub mod engine;

@@ -67,6 +67,50 @@ impl TrialScheduler {
             .map(|s| s.expect("every trial job ran"))
             .collect()
     }
+
+    /// Like [`TrialScheduler::run`], but each job carries an owned value
+    /// the trial *consumes* — the service tier moves one session runner
+    /// into whichever worker claims it. Results land in job order under
+    /// the same determinism contract.
+    pub fn run_consuming<J, T, F>(&self, jobs: Vec<J>, trial: F) -> Vec<T>
+    where
+        J: Send,
+        T: Send,
+        F: Fn(usize, J) -> T + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.resolve(n);
+        if threads <= 1 {
+            return jobs.into_iter().enumerate().map(|(i, job)| trial(i, job)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let input: Mutex<Vec<Option<J>>> = Mutex::new(jobs.into_iter().map(Some).collect());
+        let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = input.lock().expect("consuming scheduler input lock")[i]
+                        .take()
+                        .expect("each job is claimed exactly once");
+                    let out = trial(i, job);
+                    slots.lock().expect("consuming scheduler slots lock")[i] = Some(out);
+                });
+            }
+        });
+        slots
+            .into_inner()
+            .expect("consuming scheduler slots lock")
+            .into_iter()
+            .map(|s| s.expect("every consuming job ran"))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -83,6 +127,24 @@ mod tests {
         assert_eq!(TrialScheduler::new(4).run(0, f), Vec::<usize>::new());
         // More workers than jobs is fine (workers are capped at jobs).
         assert_eq!(TrialScheduler::new(16).run(2, f), vec![0, 1]);
+    }
+
+    #[test]
+    fn consuming_jobs_keep_order_and_move_their_payloads() {
+        // Owned, non-Clone payloads: each must be consumed exactly once
+        // and the results must come back in job order for any width.
+        struct Payload(usize);
+        for threads in [0, 1, 4, 16] {
+            let jobs: Vec<Payload> = (0..25).map(Payload).collect();
+            let got = TrialScheduler::new(threads).run_consuming(jobs, |i, p: Payload| {
+                assert_eq!(i, p.0, "job index must match its payload");
+                p.0 * 3
+            });
+            assert_eq!(got, (0..25).map(|j| j * 3).collect::<Vec<_>>(), "threads={threads}");
+        }
+        let empty: Vec<usize> =
+            TrialScheduler::new(4).run_consuming(Vec::<Payload>::new(), |_, p| p.0);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -171,6 +171,21 @@ impl Coordinator {
     /// policy-free primitive both [`LiveSession`] and external drivers
     /// build on.
     pub fn execute_round(&mut self, round: usize, placement: &Placement) -> Result<RoundRecord> {
+        self.execute_round_with_membership(round, placement, None)
+    }
+
+    /// [`Coordinator::execute_round`] with a client-liveness mask: when
+    /// `active` is given, inactive clients are dropped from the round's
+    /// trainer lists (see [`RoundStart::filter_trainers`]) — the service
+    /// tier feeds a `des::scenarios::Dynamics` realization through this
+    /// to replay churn/dropout against live rounds. Aggregator slots
+    /// always serve; the placement optimizer reacts between rounds.
+    pub fn execute_round_with_membership(
+        &mut self,
+        round: usize,
+        placement: &Placement,
+        active: Option<&[bool]>,
+    ) -> Result<RoundRecord> {
         validate_placement(placement, self.spec.dimensions(), self.cfg.client_count)
             .map_err(|e| anyhow!("round {round}: {e}"))?;
         let arr = Arrangement::from_position(self.spec, placement, self.cfg.client_count);
@@ -183,14 +198,18 @@ impl Coordinator {
 
         let sw = Stopwatch::start();
 
-        // 1. Announce the arrangement.
-        let rs = RoundStart::from_arrangement(
+        // 1. Announce the arrangement (trainer lists filtered to the
+        // live membership when a mask is supplied).
+        let mut rs = RoundStart::from_arrangement(
             round,
             &arr,
             self.cfg.local_steps,
             self.cfg.lr,
             self.cfg.codec.name(),
         );
+        if let Some(mask) = active {
+            rs.filter_trainers(mask);
+        }
         self.client
             .publish(roles::round_topic(&self.cfg.session), rs.to_json().into_bytes())
             .map_err(|e| anyhow!(e))?;

@@ -53,6 +53,24 @@ impl RoundStart {
         }
     }
 
+    /// Drop inactive trainers from every leaf (live session membership
+    /// under a `--dynamics` replay). Aggregator slots are untouched —
+    /// slots must serve; the optimizer re-places between rounds. A leaf
+    /// whose trainers all went inactive keeps its first original
+    /// trainer, because every aggregator must receive ≥ 1 child update
+    /// or the round wedges on an empty buffer. Order-preserving retain
+    /// keeps trainer lists sorted, which `Arrangement::role_of` relies
+    /// on for its binary search.
+    pub fn filter_trainers(&mut self, active: &[bool]) {
+        for leaf in &mut self.trainers {
+            let original = leaf.clone();
+            leaf.retain(|&c| active.get(c).copied().unwrap_or(true));
+            if leaf.is_empty() && !original.is_empty() {
+                leaf.push(original[0]);
+            }
+        }
+    }
+
     pub fn to_json(&self) -> String {
         let trainers = Value::Array(
             self.trainers
@@ -173,6 +191,33 @@ mod tests {
         let back = RoundStart::from_json(&rs.to_json()).unwrap();
         assert_eq!(rs, back);
         assert_eq!(back.arrangement(), arr);
+    }
+
+    #[test]
+    fn filter_trainers_respects_liveness_and_order() {
+        let spec = HierarchySpec::new(2, 2);
+        // 3 slots over 8 clients: aggregators {4,1,2}, trainers split
+        // over 2 leaves in sorted order.
+        let arr = Arrangement::from_position(spec, &[4, 1, 2], 8);
+        let mut rs = RoundStart::from_arrangement(0, &arr, 1, 0.05, "binary");
+        let mut active = vec![true; 8];
+        active[0] = false;
+        active[3] = false;
+        rs.filter_trainers(&active);
+        for leaf in &rs.trainers {
+            assert!(!leaf.is_empty(), "every leaf keeps at least one trainer");
+            assert!(!leaf.contains(&0) || leaf.len() == 1);
+            assert!(leaf.windows(2).all(|w| w[0] < w[1]), "lists stay sorted");
+        }
+        // Aggregators are never filtered.
+        assert_eq!(rs.aggregators, vec![4, 1, 2]);
+        // All-inactive: every leaf falls back to its first trainer.
+        let mut rs2 = RoundStart::from_arrangement(0, &arr, 1, 0.05, "binary");
+        let originals: Vec<usize> = rs2.trainers.iter().map(|t| t[0]).collect();
+        rs2.filter_trainers(&[false; 8]);
+        let kept: Vec<usize> = rs2.trainers.iter().map(|t| t[0]).collect();
+        assert_eq!(kept, originals);
+        assert!(rs2.trainers.iter().all(|t| t.len() == 1));
     }
 
     #[test]

@@ -33,9 +33,32 @@ impl Deployment {
         time_scale: f64,
     ) -> Result<Deployment> {
         let broker = Broker::new();
+        let (coordinator, handles) =
+            Deployment::wire(scenario, session, runtime, &broker, time_scale)?;
+        Ok(Deployment {
+            coordinator,
+            broker,
+            optimizer,
+            handles,
+        })
+    }
+
+    /// Spawn this scenario's agents and build its coordinator on an
+    /// existing — possibly shared — broker. Topics are session-scoped,
+    /// so the service tier multiplexes many concurrent sessions over one
+    /// broker this way; [`Deployment::launch`] is the single-session
+    /// convenience over a private broker. The child timeout comes from
+    /// the scenario (`[deploy] child_timeout_secs`, default 120 s).
+    pub fn wire(
+        scenario: &DeployScenario,
+        session: &str,
+        runtime: Arc<ModelRuntime>,
+        broker: &Broker,
+        time_scale: f64,
+    ) -> Result<(Coordinator, Vec<std::thread::JoinHandle<()>>)> {
+        scenario.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
         let mut handles = Vec::with_capacity(scenario.clients.len());
-        // Generous child timeout: slowest emulated aggregation must fit.
-        let child_timeout = Duration::from_secs(120);
+        let child_timeout = Duration::from_secs_f64(scenario.child_timeout_secs);
 
         for (id, spec) in scenario.clients.iter().enumerate() {
             let mut clock = EmulatedClock::new(spec.clone());
@@ -50,7 +73,7 @@ impl Deployment {
                 },
                 id,
             );
-            let client = broker.connect(&spec.name);
+            let client = broker.connect(&format!("{session}-{}", spec.name));
             let agent = ClientAgent::new(
                 id,
                 session,
@@ -62,7 +85,7 @@ impl Deployment {
             );
             handles.push(
                 std::thread::Builder::new()
-                    .name(format!("agent-{id}"))
+                    .name(format!("{session}-agent-{id}"))
                     .spawn(move || agent.run())
                     .expect("spawn agent"),
             );
@@ -81,14 +104,9 @@ impl Deployment {
             model_seed: [0, scenario.seed as u32],
             data_seed: scenario.seed,
         };
-        let coordinator = Coordinator::new(cfg, broker.connect("coordinator"), runtime)?;
-
-        Ok(Deployment {
-            coordinator,
-            broker,
-            optimizer,
-            handles,
-        })
+        let name = format!("{session}-coordinator");
+        let coordinator = Coordinator::new(cfg, broker.connect(&name), runtime)?;
+        Ok((coordinator, handles))
     }
 
     /// Run `rounds` rounds (optimizer propose → live round → observe),

@@ -12,10 +12,12 @@
 //!   strategy (PSO, GA, SA, tabu, adaptive, baselines) against every
 //!   delay oracle (analytic TPD, emulated testbed, live rounds) — the
 //!   [`hierarchy`] model and its [`fitness`] (TPD) function, the
-//!   [`sim`]ulator that regenerates the paper's Fig. 3, and the [`des`]
+//!   [`sim`]ulator that regenerates the paper's Fig. 3, the [`des`]
 //!   discrete-event tier (virtual-time rounds over a contended network
 //!   with churn/dropout/straggler dynamics, the scenario catalog and
-//!   the multi-threaded `repro fleet` matrix runner).
+//!   the multi-threaded `repro fleet` matrix runner), and the
+//!   [`service`] tier — a persistent multi-session coordinator state
+//!   machine with pluggable storage and a metrics sink (`repro serve`).
 //! * **L2/L1 (python, build-time only)** — the 1.8 M-parameter MLP and
 //!   the Pallas aggregation/SGD kernels, AOT-lowered to HLO text in
 //!   `artifacts/` and executed from rust through [`runtime`] (PJRT).
@@ -42,4 +44,5 @@ pub mod prng;
 pub mod proplite;
 pub mod pso;
 pub mod runtime;
+pub mod service;
 pub mod sim;

@@ -5,18 +5,26 @@
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
 //! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R|MIN..MAX --out csv]
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c --env live|analytic|event-driven --replicates R|MIN..MAX]
+//! repro serve      [--scenarios builtin|DIR --strategies a,b,c --rounds N --replicates R --env E --store noop|dir --metrics csv --dynamics NAME]
 //! repro ablate     --scenario NAME [--mechanisms k1,k2 --strategy pso --evals N --replicates R --threads N --out csv]
 //! repro bench      --suite eval [--samples N --warmup N --batch N --out BENCH_eval.json]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
 //! ```
 
-use anyhow::{anyhow, Result};
-use repro::configio::{Args, SimScenario};
+use anyhow::{anyhow, Context, Result};
+use repro::configio::{Args, DynamicsSpec, SimScenario};
 use repro::des::NamedScenario;
-use repro::exp::{report_cells, run_plan, ExperimentPlan, ReplicateRange, TrialScheduler};
+use repro::exp::{
+    replicate_seed, report_cells, run_plan, ExperimentPlan, ReplicateRange, TrialScheduler,
+};
 use repro::placement::registry;
-use repro::sim::{ascii_plot, run_sim, run_sim_with};
+use repro::service::{
+    CoordinatorService, CsvRecorder, DirStore, NoopRecorder, NoopStore, Phase, Recorder,
+    ServiceConfig, SessionSpec, Store,
+};
+use repro::sim::{ascii_plot, run_live_comparison, run_sim, run_sim_with, LiveServiceOptions};
+use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::parse_env().map_err(|e| anyhow!(e))?;
@@ -25,6 +33,7 @@ fn main() -> Result<()> {
         Some("fig3") => cmd_fig3(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
+        Some("serve") => cmd_serve(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("bench") => cmd_bench(&args),
         Some("e2e") => cmd_e2e(&args),
@@ -35,7 +44,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: repro <sim|fig3|fleet|compare|ablate|bench|e2e|broker> [flags]\n\
+                "usage: repro <sim|fig3|fleet|compare|serve|ablate|bench|e2e|broker> [flags]\n\
                  \n\
                  sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
@@ -46,9 +55,20 @@ fn main() -> Result<()> {
                  \x20        Wilcoxon effect sizes; MIN..MAX adapts the count per scenario,\n\
                  \x20        stopping once the leader's CI separates from every rival)\n\
                  compare  strategy comparison; --strategies a,b,c\n\
-                 \x20        --env live (default): the Fig-4 deployment testbed, 1 replicate\n\
+                 \x20        --env live (default): the Fig-4 deployment testbed through the\n\
+                 \x20        coordinator service — --replicates R runs R independently seeded\n\
+                 \x20        live sessions per strategy (--threads/--store/--store-dir/\n\
+                 \x20        --metrics/--dynamics apply, see `repro serve`)\n\
                  \x20        --env analytic|event-driven: sim-tier, supports --replicates,\n\
                  \x20        --depth/--width/--seed/--evals/--config like `repro sim`\n\
+                 serve    the coordinator service: scenario x strategy x replicate FL\n\
+                 \x20        sessions multiplexed over one broker, persisted per round;\n\
+                 \x20        --scenarios builtin|DIR --filter SUBSTR --strategies a,b,c\n\
+                 \x20        --rounds N --replicates R --env analytic|event-driven|live\n\
+                 \x20        --threads N --store noop|dir [--store-dir DIR] --metrics CSV\n\
+                 \x20        --round-limit N --retries N --dynamics SCENARIO\n\
+                 \x20        (--store dir makes runs resumable: a killed serve continues\n\
+                 \x20        each session from its last completed round)\n\
                  ablate   per-mechanism ablation of a dynamic scenario (one-mechanism-off deltas);\n\
                  \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
                  \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
@@ -228,10 +248,11 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 }
 
 /// Strategy comparison. `--env live` (default) runs the Fig-4
-/// deployment testbed — one replicate per strategy, because a live
-/// round measures a real (emulated-clock) testbed that cannot be
-/// re-seeded. `--env analytic|event-driven` runs a replicated sim-tier
-/// comparison through the experiment engine instead.
+/// deployment testbed through the coordinator service — `--replicates
+/// R` submits R independently seeded live sessions per strategy, all
+/// multiplexed over one broker. `--env analytic|event-driven` runs a
+/// replicated sim-tier comparison through the experiment engine
+/// instead.
 fn cmd_compare(args: &Args) -> Result<()> {
     let strategies = args.list_flag("strategies").unwrap_or_default();
     // Fail fast on typos before paying for a deployment run.
@@ -242,17 +263,23 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let replicates =
         ReplicateRange::parse(&args.str_flag("replicates", "1")).map_err(|e| anyhow!(e))?;
     if env == "live" {
-        if replicates.max > 1 {
-            println!(
-                "note: the live tier (fl::LiveSession) measures real testbed rounds and runs \
-                 exactly 1 replicate per strategy; use --env analytic|event-driven for \
-                 replicated comparisons with CIs"
-            );
+        if !replicates.is_fixed() {
+            return Err(anyhow!(
+                "--env live takes a fixed --replicates R; the adaptive MIN..MAX allocator \
+                 is sim-tier only"
+            ));
         }
         let rounds = args.usize_flag("rounds", 50).map_err(|e| anyhow!(e))?;
         let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
         let out_dir = std::path::PathBuf::from(args.str_flag("out-dir", "results"));
-        return repro::sim::run_fig4_comparison(rounds, time_scale, &out_dir, &strategies);
+        let opts = LiveServiceOptions {
+            replicates: replicates.min,
+            threads: args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?,
+            dynamics: dynamics_from_args(args)?,
+            store: store_from_args(args)?,
+            metrics_path: args.flag("metrics").map(std::path::PathBuf::from),
+        };
+        return run_live_comparison(rounds, time_scale, &out_dir, &strategies, &opts);
     }
     // Sim-tier replicated comparison: one-scenario plan, any oracle.
     let mut sc = scenario_from_args(args)?;
@@ -273,6 +300,161 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let cells = run_plan(&plan, &TrialScheduler::new(threads)).map_err(|e| anyhow!(e))?;
     let out = args.flag("out").map(std::path::PathBuf::from);
     report_cells(&cells, out.as_deref())?;
+    Ok(())
+}
+
+/// `--store noop|dir [--store-dir DIR]` → a session persistence
+/// backend for the coordinator service.
+fn store_from_args(args: &Args) -> Result<Arc<dyn Store>> {
+    let kind = args.str_flag("store", "noop");
+    let store: Arc<dyn Store> = match kind.as_str() {
+        "noop" => Arc::new(NoopStore::new()),
+        "dir" => {
+            let root = args.str_flag("store-dir", "results/service");
+            Arc::new(DirStore::open(root)?)
+        }
+        other => return Err(anyhow!("--store must be noop|dir, got {other:?}")),
+    };
+    Ok(store)
+}
+
+/// `--dynamics NAME` → the named catalog scenario's `[dynamics]` table
+/// (the same churn/dropout machinery the DES tier models internally),
+/// replayed into service session membership round by round.
+fn dynamics_from_args(args: &Args) -> Result<Option<DynamicsSpec>> {
+    use repro::des::{builtin_catalog, load_dir};
+    let Some(name) = args.flag("dynamics") else {
+        return Ok(None);
+    };
+    let src = args.str_flag("scenarios", "builtin");
+    let catalog = if src == "builtin" {
+        builtin_catalog()
+    } else {
+        load_dir(std::path::Path::new(&src)).map_err(|e| anyhow!(e))?
+    };
+    let Some(ns) = catalog.iter().find(|s| s.name == name) else {
+        return Err(anyhow!(
+            "--dynamics: unknown scenario {name:?} (try the `repro fleet` catalog names)"
+        ));
+    };
+    Ok(Some(ns.sim.des.dynamics.clone()))
+}
+
+/// The coordinator service (`repro serve`): queue scenario × strategy ×
+/// replicate FL sessions, drain them over a worker pool with pluggable
+/// persistence and a metric sink, and report each session's terminal
+/// state. With `--store dir`, a killed serve run resumes every
+/// in-flight session from its last completed round on the next
+/// invocation; `--round-limit N` pauses sessions after N rounds (the
+/// manual way to exercise exactly that resume path).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let env = args.str_flag("env", "analytic");
+    let rounds = args.usize_flag("rounds", 10).map_err(|e| anyhow!(e))?;
+    let replicates = args.usize_flag("replicates", 1).map_err(|e| anyhow!(e))?;
+    if replicates == 0 {
+        return Err(anyhow!("--replicates must be >= 1"));
+    }
+    let strategies = args
+        .list_flag("strategies")
+        .unwrap_or_else(|| vec!["pso".to_string()]);
+    for name in &strategies {
+        registry::canonical(name).map_err(|e| anyhow!(e))?;
+    }
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?;
+    let round_limit = args.opt_usize_flag("round-limit").map_err(|e| anyhow!(e))?;
+    let retries = args.opt_usize_flag("retries").map_err(|e| anyhow!(e))?;
+    let dynamics = dynamics_from_args(args)?;
+    let store = store_from_args(args)?;
+    let recorder: Box<dyn Recorder> = match args.flag("metrics") {
+        Some(path) => Box::new(CsvRecorder::create(std::path::Path::new(path))?),
+        None => Box::new(NoopRecorder::new()),
+    };
+    let cfg = ServiceConfig { threads, round_limit };
+    let mut svc = CoordinatorService::new(cfg, store.clone(), recorder);
+
+    if env == "live" {
+        let runtime = Arc::new(
+            repro::runtime::ModelRuntime::load_default()
+                .context("artifacts required — run `make artifacts`")?,
+        );
+        svc = svc.with_runtime(runtime);
+        let time_scale = args.f64_flag("time-scale", 1.0).map_err(|e| anyhow!(e))?;
+        let mut sc = repro::configio::DeployScenario::paper_docker();
+        sc.rounds = rounds;
+        for strategy in &strategies {
+            for r in 0..replicates {
+                let session = format!("live-{strategy}-r{r}");
+                let mut spec =
+                    SessionSpec::live(&session, strategy, rounds, sc.clone(), time_scale);
+                spec.seed = Some(replicate_seed(sc.seed, r));
+                spec.dynamics = dynamics.clone();
+                spec.retry_budget = retries;
+                svc.submit(spec)?;
+            }
+        }
+    } else {
+        for ns in &scenarios_from_args(args)? {
+            for strategy in &strategies {
+                for r in 0..replicates {
+                    let session = format!("{}-{strategy}-r{r}", ns.name);
+                    let mut spec =
+                        SessionSpec::env(&session, strategy, rounds, ns.sim.clone(), &env);
+                    spec.seed = Some(replicate_seed(ns.sim.seed, r));
+                    spec.dynamics = dynamics.clone();
+                    spec.retry_budget = retries;
+                    svc.submit(spec)?;
+                }
+            }
+        }
+    }
+    println!(
+        "serve: {} sessions queued (env={env}, {} strategies x {replicates} replicates, \
+         rounds={rounds}, store={}, threads={})",
+        svc.pending_sessions(),
+        strategies.len(),
+        store.name(),
+        if threads == 0 { "auto".to_string() } else { threads.to_string() },
+    );
+
+    let outcomes = svc.drain()?;
+    println!(
+        "{:<30} {:>10} {:>7} {:>8} {:>12}",
+        "session", "phase", "rounds", "resumed", "best (s)"
+    );
+    let mut failed = 0;
+    for out in &outcomes {
+        if out.phase == Phase::Failed {
+            failed += 1;
+        }
+        // Manual Display impls ignore format widths; pad the String.
+        let phase = out.phase.to_string();
+        let resumed = out
+            .resumed_from
+            .map(|k| format!("@{k}"))
+            .unwrap_or_else(|| "-".into());
+        let best = out
+            .best
+            .as_ref()
+            .map(|(_, d)| format!("{d:.3}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<30} {:>10} {:>7} {:>8} {:>12}",
+            out.name,
+            phase,
+            out.trace.len(),
+            resumed,
+            best
+        );
+    }
+    let paused = outcomes.iter().filter(|o| !o.phase.is_terminal()).count();
+    if paused > 0 {
+        println!(
+            "{paused} session(s) paused by --round-limit; rerun with the same --store to resume"
+        );
+    }
+    if failed > 0 {
+        return Err(anyhow!("{failed} of {} session(s) failed", outcomes.len()));
+    }
     Ok(())
 }
 

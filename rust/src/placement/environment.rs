@@ -42,8 +42,10 @@ use crate::fitness::{ClientAttrs, TpdScratch};
 use crate::fl::emulation::{EmulatedClock, WorkKind};
 use crate::hierarchy::{EvalScratch, HierarchySpec};
 
-/// A delay oracle: scores candidate placements.
-pub trait Environment {
+/// A delay oracle: scores candidate placements. `Send` so boxed oracles
+/// can move into scheduler workers (the service tier runs one session —
+/// optimizer + environment — per worker thread).
+pub trait Environment: Send {
     /// Environment label for logs and CSV output.
     fn name(&self) -> &'static str;
 

@@ -1,0 +1,223 @@
+//! How a session's rounds actually execute. The state machine and the
+//! session runner are backend-agnostic: [`EnvBackend`] scores placements
+//! through a simulation-tier [`Environment`] oracle (artifact-free —
+//! what the integration tests and `repro serve --env ...` use), while
+//! [`LiveBackend`] drives real FL rounds through the policy-free
+//! `Coordinator::execute_round` primitive over a *shared* broker — the
+//! multiplexing that makes `repro compare --env live --replicates R`
+//! real.
+
+use crate::broker::Broker;
+use crate::configio::DeployScenario;
+use crate::fl::{Coordinator, Deployment};
+use crate::placement::{Environment, Placement};
+use crate::runtime::{CheckpointMeta, ModelRuntime};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What one executed round produced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundOutcome {
+    /// Measured (or simulated) round delay in seconds — the fitness
+    /// signal fed back to the placement optimizer.
+    pub delay_s: f64,
+    /// Global-model eval loss after the round (NaN when the backend has
+    /// no model, e.g. simulation oracles).
+    pub loss: f64,
+}
+
+/// Round execution behind the session state machine.
+pub trait RoundBackend: Send {
+    /// Backend label for storage fingerprints and logs.
+    fn label(&self) -> &str;
+
+    /// Block until the backend's clients are reachable (live backends
+    /// wait on the join barrier; oracles are always ready).
+    fn rendezvous(&mut self, _clients: usize, _timeout: Duration) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute round `round` with `placement` under the `active`
+    /// liveness mask and return its outcome.
+    fn run_round(
+        &mut self,
+        round: usize,
+        placement: &Placement,
+        active: &[bool],
+    ) -> Result<RoundOutcome>;
+
+    /// Stamp the strategy label on subsequent round records.
+    fn set_strategy_label(&mut self, _label: &str) {}
+
+    /// Snapshot the global model (empty when the backend has none).
+    fn params(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Install a restored global model (no-op for model-free backends).
+    fn install_params(&mut self, _params: Vec<f32>, _round: usize, _loss: f64) -> Result<()> {
+        Ok(())
+    }
+
+    /// Release backend resources (join agent threads etc.).
+    fn shutdown(&mut self) {}
+}
+
+/// Simulation-tier backend: each round is one oracle evaluation. The
+/// `active` mask is ignored for *scoring* — the event-driven oracle
+/// models dynamics internally from the same `DynamicsSpec` — but the
+/// mask still drives the machine's heartbeat table, so sim and live
+/// sessions walk identical phase sequences.
+pub struct EnvBackend {
+    env: Box<dyn Environment>,
+}
+
+impl EnvBackend {
+    pub fn new(env: Box<dyn Environment>) -> EnvBackend {
+        EnvBackend { env }
+    }
+}
+
+impl RoundBackend for EnvBackend {
+    fn label(&self) -> &str {
+        self.env.name()
+    }
+
+    fn run_round(
+        &mut self,
+        round: usize,
+        placement: &Placement,
+        _active: &[bool],
+    ) -> Result<RoundOutcome> {
+        let delay_s = self
+            .env
+            .eval(placement)
+            .map_err(|e| anyhow!("round {round}: {e}"))?;
+        Ok(RoundOutcome { delay_s, loss: f64::NAN })
+    }
+}
+
+/// Live backend: agents on threads + a coordinator, all over a broker
+/// shared with every other live session (topics are session-scoped).
+/// Rounds run through `Coordinator::execute_round_with_membership`, so
+/// a `--dynamics` realization filters the round's trainer lists.
+pub struct LiveBackend {
+    coordinator: Coordinator,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    client_count: usize,
+}
+
+impl LiveBackend {
+    /// Wire this session's agents + coordinator onto `broker`.
+    pub fn launch(
+        scenario: &DeployScenario,
+        session: &str,
+        runtime: Arc<ModelRuntime>,
+        broker: &Broker,
+        time_scale: f64,
+    ) -> Result<LiveBackend> {
+        let (coordinator, handles) =
+            Deployment::wire(scenario, session, runtime, broker, time_scale)?;
+        Ok(LiveBackend {
+            coordinator,
+            handles,
+            client_count: scenario.clients.len(),
+        })
+    }
+
+    /// The per-round records accumulated so far (fig4-style reporting).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+}
+
+impl RoundBackend for LiveBackend {
+    fn label(&self) -> &str {
+        "live"
+    }
+
+    fn rendezvous(&mut self, clients: usize, timeout: Duration) -> Result<()> {
+        self.coordinator
+            .wait_for_clients(clients.min(self.client_count), timeout)
+    }
+
+    fn run_round(
+        &mut self,
+        round: usize,
+        placement: &Placement,
+        active: &[bool],
+    ) -> Result<RoundOutcome> {
+        let rec = self
+            .coordinator
+            .execute_round_with_membership(round, placement, Some(active))?;
+        Ok(RoundOutcome {
+            delay_s: rec.delay.as_secs_f64(),
+            loss: rec.loss,
+        })
+    }
+
+    fn set_strategy_label(&mut self, label: &str) {
+        self.coordinator.set_strategy_label(label);
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.coordinator.global_model().to_vec()
+    }
+
+    fn install_params(&mut self, params: Vec<f32>, round: usize, loss: f64) -> Result<()> {
+        let meta = CheckpointMeta {
+            param_count: params.len(),
+            round,
+            session: String::new(),
+            loss,
+            optimizer: None,
+        };
+        self.coordinator.install_checkpoint(params, &meta)
+    }
+
+    fn shutdown(&mut self) {
+        self.coordinator.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::EmulatedDelay;
+
+    fn backend() -> EnvBackend {
+        let sc = DeployScenario::paper_docker();
+        EnvBackend::new(Box::new(EmulatedDelay::from_scenario(&sc)))
+    }
+
+    #[test]
+    fn env_backend_scores_deterministically() {
+        let sc = DeployScenario::paper_docker();
+        let p = Placement::new(vec![0, 1, 2]);
+        let active = vec![true; sc.clients.len()];
+        let mut a = backend();
+        let mut b = backend();
+        let oa = a.run_round(0, &p, &active).unwrap();
+        let ob = b.run_round(0, &p, &active).unwrap();
+        assert!(oa.delay_s > 0.0);
+        assert_eq!(oa.delay_s.to_bits(), ob.delay_s.to_bits(), "oracle must be deterministic");
+        assert!(oa.loss.is_nan(), "oracles have no model");
+        // The default trait plumbing is inert for model-free backends.
+        assert!(a.params().is_empty());
+        a.install_params(Vec::new(), 0, f64::NAN).unwrap();
+        a.rendezvous(10, Duration::from_secs(1)).unwrap();
+        a.shutdown();
+    }
+
+    #[test]
+    fn env_backend_rejects_invalid_placements() {
+        let mut b = backend();
+        // Duplicate client in two slots: the oracle validates.
+        let bad = Placement::new(vec![0, 0, 1]);
+        assert!(b.run_round(0, &bad, &[true; 10]).is_err());
+    }
+}

@@ -1,0 +1,525 @@
+//! The per-session coordinator state machine:
+//!
+//! ```text
+//! Standby → Rendezvous → Round(0) → … → Round(R-1) → Finishing → Finished
+//!                │            │                                      │
+//!                └─ timeout ──┴─ retry budget exhausted ──────────► Failed
+//! ```
+//!
+//! The machine is pure bookkeeping — no threads, no wall clock, no I/O.
+//! Time is *virtual*: the session runner advances it by the measured
+//! round delays (and by explicit waits), so every transition — including
+//! heartbeat-driven liveness and the timeout/retry edges — is
+//! deterministic and unit-testable. Each phase edge carries a retry
+//! budget; exhausting it on any edge is the only path into [`Phase::Failed`].
+
+use std::fmt;
+
+/// Session lifecycle phase. `Round(k)` means round `k` is in flight
+/// (rounds `0..k` completed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Created, not yet submitted.
+    Standby,
+    /// Waiting for the client quorum to announce itself.
+    Rendezvous,
+    /// Executing FL round `k`.
+    Round(usize),
+    /// All rounds done; final persistence/flush in progress.
+    Finishing,
+    /// Terminal: every round completed and state flushed.
+    Finished,
+    /// Terminal: a retry budget was exhausted.
+    Failed,
+}
+
+impl Phase {
+    /// Whether the session can make no further progress.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Phase::Finished | Phase::Failed)
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Phase::Standby => write!(f, "standby"),
+            Phase::Rendezvous => write!(f, "rendezvous"),
+            Phase::Round(k) => write!(f, "round({k})"),
+            Phase::Finishing => write!(f, "finishing"),
+            Phase::Finished => write!(f, "finished"),
+            Phase::Failed => write!(f, "failed"),
+        }
+    }
+}
+
+/// Machine parameters. All durations are virtual seconds.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    /// FL rounds the session must complete.
+    pub rounds: usize,
+    /// Population size (heartbeat table width).
+    pub client_count: usize,
+    /// Minimum live clients to start a round (the aggregator slot count:
+    /// below it no valid placement exists).
+    pub quorum: usize,
+    /// Retries allowed on each edge before the machine fails.
+    pub retry_budget: usize,
+    /// Max virtual time in Rendezvous before a retry fires.
+    pub rendezvous_timeout: f64,
+    /// Max virtual time a round may take before a retry fires.
+    pub round_timeout: f64,
+    /// A client whose last heartbeat is older than this is dead.
+    pub heartbeat_grace: f64,
+}
+
+impl MachineConfig {
+    /// Defaults sized for service sessions: generous virtual timeouts
+    /// (rounds advance time by their measured delay, so these only trip
+    /// on genuinely wedged sessions) and a grace window covering one
+    /// slow round plus slack.
+    pub fn for_session(rounds: usize, client_count: usize, quorum: usize) -> MachineConfig {
+        MachineConfig {
+            rounds,
+            client_count,
+            quorum,
+            retry_budget: 2,
+            rendezvous_timeout: 300.0,
+            round_timeout: 600.0,
+            heartbeat_grace: 900.0,
+        }
+    }
+
+    /// Reject inconsistent parameters with an actionable message.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rounds == 0 {
+            return Err("machine: rounds must be >= 1".into());
+        }
+        if self.quorum == 0 || self.client_count < self.quorum {
+            return Err(format!(
+                "machine: need 1 <= quorum <= client_count, got quorum {} over {} clients",
+                self.quorum, self.client_count
+            ));
+        }
+        for (name, v) in [
+            ("rendezvous_timeout", self.rendezvous_timeout),
+            ("round_timeout", self.round_timeout),
+            ("heartbeat_grace", self.heartbeat_grace),
+        ] {
+            if v <= 0.0 || !v.is_finite() {
+                return Err(format!("machine: {name} must be > 0, got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One recorded edge of the machine (fed to the metrics recorder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    pub from: Phase,
+    pub to: Phase,
+    /// Virtual time the edge fired at.
+    pub at: f64,
+    pub reason: String,
+}
+
+/// The session state machine. Drive it with [`SessionMachine::submit`],
+/// heartbeats, round outcomes and [`SessionMachine::tick`]; read
+/// [`SessionMachine::phase`] and the transition log back.
+#[derive(Debug)]
+pub struct SessionMachine {
+    cfg: MachineConfig,
+    phase: Phase,
+    /// Virtual now (seconds since submission).
+    now: f64,
+    /// When the current phase was entered.
+    phase_entered: f64,
+    /// Retries consumed on the current edge (reset on success).
+    retries: usize,
+    /// First round to execute after Rendezvous (>0 on resume).
+    start_round: usize,
+    /// Last heartbeat per client (−∞ = never seen).
+    last_beat: Vec<f64>,
+    transitions: Vec<Transition>,
+}
+
+impl SessionMachine {
+    pub fn new(cfg: MachineConfig) -> Result<SessionMachine, String> {
+        cfg.validate()?;
+        let client_count = cfg.client_count;
+        Ok(SessionMachine {
+            cfg,
+            phase: Phase::Standby,
+            now: 0.0,
+            phase_entered: 0.0,
+            retries: 0,
+            start_round: 0,
+            last_beat: vec![f64::NEG_INFINITY; client_count],
+            transitions: Vec::new(),
+        })
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn config(&self) -> &MachineConfig {
+        &self.cfg
+    }
+
+    /// The full transition log, oldest first.
+    pub fn transitions(&self) -> &[Transition] {
+        &self.transitions
+    }
+
+    fn goto(&mut self, to: Phase, reason: impl Into<String>) {
+        self.transitions.push(Transition {
+            from: self.phase,
+            to,
+            at: self.now,
+            reason: reason.into(),
+        });
+        self.phase = to;
+        self.phase_entered = self.now;
+    }
+
+    /// Advance virtual time (a measured delay or an explicit wait).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "time cannot run backwards (dt = {dt})");
+        self.now += dt;
+    }
+
+    /// Record a heartbeat from `client` at virtual now.
+    pub fn beat(&mut self, client: usize) {
+        self.last_beat[client] = self.now;
+    }
+
+    /// Record heartbeats for every client whose mask entry is true.
+    pub fn beat_active(&mut self, active: &[bool]) {
+        for (i, &on) in active.iter().enumerate().take(self.last_beat.len()) {
+            if on {
+                self.last_beat[i] = self.now;
+            }
+        }
+    }
+
+    /// Clients whose last heartbeat is within the grace window.
+    pub fn live_clients(&self) -> usize {
+        self.last_beat
+            .iter()
+            .filter(|&&t| self.now - t <= self.cfg.heartbeat_grace)
+            .count()
+    }
+
+    /// Whether the live population can still host every aggregator slot.
+    pub fn has_quorum(&self) -> bool {
+        self.live_clients() >= self.cfg.quorum
+    }
+
+    /// Standby → Rendezvous. Errors if the session was already submitted.
+    pub fn submit(&mut self) -> Result<(), String> {
+        match self.phase {
+            Phase::Standby => {
+                self.goto(Phase::Rendezvous, "submitted");
+                Ok(())
+            }
+            p => Err(format!("submit: session already in phase {p}")),
+        }
+    }
+
+    /// Fast-forward a resumed session: rounds `0..round` were completed
+    /// by a previous incarnation and restored from storage. Only legal
+    /// before submission.
+    pub fn resume_at(&mut self, round: usize) -> Result<(), String> {
+        if self.phase != Phase::Standby {
+            return Err(format!("resume_at: session already in phase {}", self.phase));
+        }
+        if round > self.cfg.rounds {
+            return Err(format!(
+                "resume_at: round {round} past the session's {} rounds",
+                self.cfg.rounds
+            ));
+        }
+        self.start_round = round;
+        Ok(())
+    }
+
+    /// Rendezvous → Round(start): the quorum has announced itself.
+    pub fn rendezvous_complete(&mut self) -> Result<(), String> {
+        match self.phase {
+            Phase::Rendezvous => {
+                let live = self.live_clients();
+                if live < self.cfg.quorum {
+                    return Err(format!(
+                        "rendezvous_complete: only {live}/{} live clients",
+                        self.cfg.quorum
+                    ));
+                }
+                self.retries = 0;
+                if self.start_round >= self.cfg.rounds {
+                    // A fully-completed session restored from storage.
+                    self.goto(Phase::Finishing, "resume: all rounds already completed");
+                } else if self.start_round > 0 {
+                    let k = self.start_round;
+                    self.goto(Phase::Round(k), format!("resume: rounds 0..{k} restored"));
+                } else {
+                    self.goto(Phase::Round(0), format!("rendezvous complete ({live} live)"));
+                }
+                Ok(())
+            }
+            p => Err(format!("rendezvous_complete: in phase {p}")),
+        }
+    }
+
+    /// Round(k) completed in `delay` virtual seconds: advance time, reset
+    /// the retry counter and move to Round(k+1) or Finishing.
+    pub fn round_completed(&mut self, delay: f64) -> Result<(), String> {
+        match self.phase {
+            Phase::Round(k) => {
+                self.advance(delay.max(0.0));
+                self.retries = 0;
+                let next = k + 1;
+                if next >= self.cfg.rounds {
+                    self.goto(Phase::Finishing, format!("round {k} completed (last)"));
+                } else {
+                    self.goto(Phase::Round(next), format!("round {k} completed"));
+                }
+                Ok(())
+            }
+            p => Err(format!("round_completed: in phase {p}")),
+        }
+    }
+
+    /// The in-flight round failed (backend error or lost quorum). Spends
+    /// one retry; exhausting the budget fails the session. Returns the
+    /// phase after the edge.
+    pub fn round_failed(&mut self, reason: &str) -> Result<Phase, String> {
+        match self.phase {
+            Phase::Round(k) => {
+                self.retries += 1;
+                let budget = self.cfg.retry_budget;
+                if self.retries > budget {
+                    let why = format!("round {k}: {reason} (retry budget {budget} exhausted)");
+                    self.goto(Phase::Failed, why);
+                } else {
+                    let why = format!("round {k}: {reason} (retry {}/{budget})", self.retries);
+                    self.goto(Phase::Round(k), why);
+                }
+                Ok(self.phase)
+            }
+            p => Err(format!("round_failed: in phase {p}")),
+        }
+    }
+
+    /// Check the current phase's timeout against virtual now; fires the
+    /// retry edge (or fails) when exceeded. Returns the phase after the
+    /// check. No-op in terminal phases and Standby/Finishing.
+    pub fn tick(&mut self) -> Phase {
+        let elapsed = self.now - self.phase_entered;
+        match self.phase {
+            Phase::Rendezvous if elapsed > self.cfg.rendezvous_timeout => {
+                self.retries += 1;
+                let budget = self.cfg.retry_budget;
+                if self.retries > budget {
+                    let why = format!("rendezvous timeout after {elapsed:.1}s (budget exhausted)");
+                    self.goto(Phase::Failed, why);
+                } else {
+                    let why = format!("rendezvous timeout (retry {}/{budget})", self.retries);
+                    self.goto(Phase::Rendezvous, why);
+                }
+            }
+            Phase::Round(k) if elapsed > self.cfg.round_timeout => {
+                // Reuse the round retry edge for timeouts.
+                let _ = self.round_failed(&format!("timeout after {elapsed:.1}s in round {k}"));
+            }
+            _ => {}
+        }
+        self.phase
+    }
+
+    /// Finishing → Finished: final state flushed.
+    pub fn drained(&mut self) -> Result<(), String> {
+        match self.phase {
+            Phase::Finishing => {
+                self.goto(Phase::Finished, "drained");
+                Ok(())
+            }
+            p => Err(format!("drained: in phase {p}")),
+        }
+    }
+
+    /// Force the session into Failed from any non-terminal phase.
+    pub fn fail(&mut self, reason: &str) {
+        if !self.phase.is_terminal() {
+            self.goto(Phase::Failed, reason.to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine(rounds: usize, clients: usize, quorum: usize) -> SessionMachine {
+        SessionMachine::new(MachineConfig::for_session(rounds, clients, quorum)).unwrap()
+    }
+
+    fn all_beat(m: &mut SessionMachine, n: usize) {
+        m.beat_active(&vec![true; n]);
+    }
+
+    #[test]
+    fn happy_path_walks_every_phase() {
+        let mut m = machine(2, 6, 3);
+        assert_eq!(m.phase(), Phase::Standby);
+        m.submit().unwrap();
+        assert_eq!(m.phase(), Phase::Rendezvous);
+        all_beat(&mut m, 6);
+        m.rendezvous_complete().unwrap();
+        assert_eq!(m.phase(), Phase::Round(0));
+        m.round_completed(1.5).unwrap();
+        assert_eq!(m.phase(), Phase::Round(1));
+        m.round_completed(2.0).unwrap();
+        assert_eq!(m.phase(), Phase::Finishing);
+        m.drained().unwrap();
+        assert_eq!(m.phase(), Phase::Finished);
+        assert!(m.phase().is_terminal());
+        assert!((m.now() - 3.5).abs() < 1e-12, "time advances by round delays");
+        // Every edge was logged, in order, starting from Standby.
+        let t = m.transitions();
+        assert_eq!(t.first().unwrap().from, Phase::Standby);
+        assert_eq!(t.last().unwrap().to, Phase::Finished);
+        for w in t.windows(2) {
+            assert_eq!(w[0].to, w[1].from, "transition log must chain");
+        }
+    }
+
+    #[test]
+    fn rendezvous_requires_quorum_and_times_out_into_failed() {
+        let mut m = machine(1, 4, 3);
+        m.submit().unwrap();
+        // Only 2 of 4 clients ever announce themselves.
+        m.beat(0);
+        m.beat(1);
+        assert!(!m.has_quorum());
+        assert!(m.rendezvous_complete().is_err());
+        // Each timeout spends one retry; budget 2 → third timeout fails.
+        for expect_retry in [true, true, false] {
+            m.advance(m.config().rendezvous_timeout + 1.0);
+            let p = m.tick();
+            if expect_retry {
+                assert_eq!(p, Phase::Rendezvous);
+            } else {
+                assert_eq!(p, Phase::Failed);
+            }
+        }
+        assert!(m.transitions().iter().any(|t| t.reason.contains("budget exhausted")));
+    }
+
+    #[test]
+    fn round_retries_then_recovers() {
+        let mut m = machine(1, 6, 3);
+        m.submit().unwrap();
+        all_beat(&mut m, 6);
+        m.rendezvous_complete().unwrap();
+        assert_eq!(m.round_failed("broker hiccup").unwrap(), Phase::Round(0));
+        assert_eq!(m.round_failed("broker hiccup").unwrap(), Phase::Round(0));
+        // A success resets the retry counter and finishes the session.
+        m.round_completed(1.0).unwrap();
+        assert_eq!(m.phase(), Phase::Finishing);
+    }
+
+    #[test]
+    fn round_retry_budget_exhausts_into_failed() {
+        let mut m = machine(3, 6, 3);
+        m.submit().unwrap();
+        all_beat(&mut m, 6);
+        m.rendezvous_complete().unwrap();
+        m.round_completed(1.0).unwrap();
+        assert_eq!(m.phase(), Phase::Round(1));
+        assert_eq!(m.round_failed("x").unwrap(), Phase::Round(1));
+        assert_eq!(m.round_failed("x").unwrap(), Phase::Round(1));
+        assert_eq!(m.round_failed("x").unwrap(), Phase::Failed);
+        // Terminal: further events are rejected, fail() is a no-op.
+        assert!(m.round_completed(1.0).is_err());
+        let edges = m.transitions().len();
+        m.fail("again");
+        assert_eq!(m.transitions().len(), edges);
+    }
+
+    #[test]
+    fn heartbeats_expire_after_the_grace_window() {
+        let mut m = machine(1, 5, 2);
+        m.submit().unwrap();
+        all_beat(&mut m, 5);
+        assert_eq!(m.live_clients(), 5);
+        m.advance(m.config().heartbeat_grace + 0.1);
+        assert_eq!(m.live_clients(), 0, "stale beats must expire");
+        m.beat(3);
+        m.beat(4);
+        assert_eq!(m.live_clients(), 2);
+        assert!(m.has_quorum());
+    }
+
+    #[test]
+    fn round_timeout_fires_the_retry_edge() {
+        let mut m = machine(1, 6, 3);
+        m.submit().unwrap();
+        all_beat(&mut m, 6);
+        m.rendezvous_complete().unwrap();
+        m.advance(m.config().round_timeout + 5.0);
+        assert_eq!(m.tick(), Phase::Round(0), "first timeout retries");
+        assert!(m.transitions().last().unwrap().reason.contains("timeout"));
+    }
+
+    #[test]
+    fn resume_fast_forwards_to_the_stored_round() {
+        let mut m = machine(5, 6, 3);
+        m.resume_at(3).unwrap();
+        m.submit().unwrap();
+        all_beat(&mut m, 6);
+        m.rendezvous_complete().unwrap();
+        assert_eq!(m.phase(), Phase::Round(3));
+        m.round_completed(1.0).unwrap();
+        m.round_completed(1.0).unwrap();
+        assert_eq!(m.phase(), Phase::Finishing);
+        // A fully-completed snapshot goes straight to Finishing.
+        let mut done = machine(2, 6, 3);
+        done.resume_at(2).unwrap();
+        done.submit().unwrap();
+        all_beat(&mut done, 6);
+        done.rendezvous_complete().unwrap();
+        assert_eq!(done.phase(), Phase::Finishing);
+        // Resuming past the configured rounds is rejected.
+        let mut over = machine(2, 6, 3);
+        assert!(over.resume_at(3).is_err());
+        // Resuming after submission is rejected.
+        let mut late = machine(2, 6, 3);
+        late.submit().unwrap();
+        assert!(late.resume_at(1).is_err());
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(MachineConfig::for_session(0, 6, 3).validate().is_err());
+        assert!(MachineConfig::for_session(1, 2, 3).validate().is_err());
+        assert!(MachineConfig::for_session(1, 6, 0).validate().is_err());
+        let mut cfg = MachineConfig::for_session(1, 6, 3);
+        cfg.round_timeout = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn phase_labels_are_stable() {
+        // Storage and the metrics CSV both persist these labels.
+        assert_eq!(Phase::Standby.to_string(), "standby");
+        assert_eq!(Phase::Round(7).to_string(), "round(7)");
+        assert_eq!(Phase::Finished.to_string(), "finished");
+        assert_eq!(Phase::Failed.to_string(), "failed");
+    }
+}

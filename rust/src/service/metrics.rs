@@ -1,0 +1,194 @@
+//! Service observability: every phase transition, round outcome and
+//! placement score flows through a [`Recorder`]. The CSV sink gives the
+//! live tier the same paper-trail the sim tiers got in PRs 3–5; the noop
+//! sink keeps tests and hot paths allocation-light.
+//!
+//! CSV schema (stable — CI asserts the header):
+//!
+//! | column      | meaning                                               |
+//! |-------------|-------------------------------------------------------|
+//! | `session`   | session name                                          |
+//! | `seq`       | per-session monotonic event number                    |
+//! | `kind`      | `phase` \| `round` \| `score`                         |
+//! | `round`     | round index (empty for phase events)                  |
+//! | `strategy`  | placement strategy name                               |
+//! | `placement` | aggregator ids joined with `|` (round/score events)   |
+//! | `delay_s`   | round delay / placement score in virtual seconds      |
+//! | `detail`    | transition `from->to (reason)`, loss, or free text    |
+
+use crate::metrics::CsvWriter;
+use std::io::Write;
+use std::path::Path;
+
+/// The stable column set of the CSV sink.
+pub const CSV_SCHEMA: [&str; 8] = [
+    "session",
+    "seq",
+    "kind",
+    "round",
+    "strategy",
+    "placement",
+    "delay_s",
+    "detail",
+];
+
+/// One service event, shaped for the CSV sink.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricRow {
+    pub session: String,
+    /// Monotonic per-session event number (assigned by the runner).
+    pub seq: usize,
+    /// `"phase"`, `"round"` or `"score"`.
+    pub kind: &'static str,
+    pub round: Option<usize>,
+    pub strategy: String,
+    pub placement: Vec<usize>,
+    pub delay_s: Option<f64>,
+    pub detail: String,
+}
+
+impl MetricRow {
+    /// Render into the [`CSV_SCHEMA`] column order.
+    pub fn to_fields(&self) -> [String; 8] {
+        let placement: Vec<String> = self.placement.iter().map(|c| c.to_string()).collect();
+        [
+            self.session.clone(),
+            self.seq.to_string(),
+            self.kind.to_string(),
+            self.round.map(|r| r.to_string()).unwrap_or_default(),
+            self.strategy.clone(),
+            placement.join("|"),
+            self.delay_s.map(|d| format!("{d:.6}")).unwrap_or_default(),
+            self.detail.clone(),
+        ]
+    }
+}
+
+/// A sink for service events. Implementations only need `Send` — the
+/// server owns its recorder and feeds it rows in deterministic
+/// (submission) order after sessions drain.
+pub trait Recorder: Send {
+    fn name(&self) -> &'static str;
+    fn record(&mut self, row: &MetricRow) -> std::io::Result<()>;
+    fn flush(&mut self) -> std::io::Result<()>;
+}
+
+/// Discards rows, counting them (tests assert flow without I/O).
+#[derive(Debug, Default)]
+pub struct NoopRecorder {
+    rows: usize,
+}
+
+impl NoopRecorder {
+    pub fn new() -> NoopRecorder {
+        NoopRecorder::default()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+impl Recorder for NoopRecorder {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
+    fn record(&mut self, _row: &MetricRow) -> std::io::Result<()> {
+        self.rows += 1;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Streams rows into a CSV file with the [`CSV_SCHEMA`] header.
+pub struct CsvRecorder<W: Write> {
+    writer: CsvWriter<W>,
+}
+
+impl CsvRecorder<std::io::BufWriter<std::fs::File>> {
+    /// Create `path` (parents included) and write the schema header.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        Ok(CsvRecorder {
+            writer: CsvWriter::create(path, &CSV_SCHEMA)?,
+        })
+    }
+}
+
+impl<W: Write> CsvRecorder<W> {
+    /// Wrap any writer (tests use `Vec<u8>`).
+    pub fn new(out: W) -> std::io::Result<Self> {
+        Ok(CsvRecorder {
+            writer: CsvWriter::new(out, &CSV_SCHEMA)?,
+        })
+    }
+}
+
+impl<W: Write + Send> Recorder for CsvRecorder<W> {
+    fn name(&self) -> &'static str {
+        "csv"
+    }
+
+    fn record(&mut self, row: &MetricRow) -> std::io::Result<()> {
+        self.writer.write_row(&row.to_fields())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.writer.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(kind: &'static str) -> MetricRow {
+        MetricRow {
+            session: "s0".into(),
+            seq: 3,
+            kind,
+            round: Some(2),
+            strategy: "pso".into(),
+            placement: vec![4, 0, 9],
+            delay_s: Some(1.25),
+            detail: "round 2 completed".into(),
+        }
+    }
+
+    #[test]
+    fn csv_rows_follow_the_schema() {
+        let mut buf = Vec::new();
+        {
+            let mut rec = CsvRecorder::new(&mut buf).unwrap();
+            rec.record(&row("round")).unwrap();
+            let mut phase = row("phase");
+            phase.round = None;
+            phase.placement.clear();
+            phase.delay_s = None;
+            phase.detail = "standby->rendezvous (submitted)".into();
+            rec.record(&phase).unwrap();
+            rec.flush().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), CSV_SCHEMA.join(","));
+        assert_eq!(lines.next().unwrap(), "s0,3,round,2,pso,4|0|9,1.250000,round 2 completed");
+        assert_eq!(
+            lines.next().unwrap(),
+            "s0,3,phase,,pso,,,standby->rendezvous (submitted)"
+        );
+    }
+
+    #[test]
+    fn noop_recorder_counts_rows() {
+        let mut rec = NoopRecorder::new();
+        rec.record(&row("score")).unwrap();
+        rec.record(&row("round")).unwrap();
+        rec.flush().unwrap();
+        assert_eq!(rec.rows(), 2);
+        assert_eq!(rec.name(), "noop");
+    }
+}

@@ -1,0 +1,55 @@
+//! Coordinator-as-a-service: a persistent, multi-session coordinator
+//! built from four pieces —
+//!
+//! * [`machine`] — the per-session state machine
+//!   (`Standby → Rendezvous → Round(k) → Finishing → Finished/Failed`)
+//!   over virtual time, with heartbeat liveness and timeout/retry
+//!   edges;
+//! * [`storage`] — pluggable persistence ([`Store`]: in-memory
+//!   [`NoopStore`], file-backed [`DirStore`] layered over
+//!   `runtime::checkpoint`) so a killed coordinator resumes every
+//!   in-flight session from its last completed round;
+//! * [`metrics`] — a [`Recorder`] sink (noop / CSV) that every phase
+//!   transition, round outcome and placement score flows through;
+//! * [`session`] + [`server`] — the per-session runner and the
+//!   [`CoordinatorService`] that multiplexes many concurrent sessions
+//!   over one shared broker and a deterministic worker pool.
+//!
+//! ## Phases ↔ the paper's Flag-Swap round protocol
+//!
+//! The paper's SDFLMQ coordinator runs rounds as a pub/sub
+//! conversation: clients announce themselves, the coordinator publishes
+//! each round's role arrangement (who aggregates, who trains — the
+//! "flag swap"), trainers upload, aggregators merge bottom-up, and the
+//! measured round delay feeds the PSO placement search. The machine
+//! names each beat of that conversation:
+//!
+//! | phase | protocol moment |
+//! |-------|-----------------|
+//! | `Standby` | session registered, `FLSession` topics not yet live |
+//! | `Rendezvous` | clients publishing ready on the session topics; the quorum is the aggregator slot count (below it no placement is feasible) |
+//! | `Round(k)` | one Flag-Swap round: placement proposed by the session's [`Optimizer`], roles broadcast, updates merged, TPD measured and fed back |
+//! | `Finishing` | all rounds done; final snapshot + metrics flush |
+//! | `Finished` / `Failed` | terminal — drained cleanly, or a retry budget exhausted |
+//!
+//! Between `Round(k)` and `Round(k+1)` the runner persists a
+//! [`SessionSnapshot`], so the service can die at any round boundary
+//! and resume without re-running completed rounds (resume *replays*
+//! the persisted trace through a freshly seeded optimizer, restoring
+//! its RNG bit-exactly — see [`session`]).
+//!
+//! [`Optimizer`]: crate::placement::Optimizer
+
+pub mod backend;
+pub mod machine;
+pub mod metrics;
+pub mod server;
+pub mod session;
+pub mod storage;
+
+pub use backend::{EnvBackend, LiveBackend, RoundBackend, RoundOutcome};
+pub use machine::{MachineConfig, Phase, SessionMachine, Transition};
+pub use metrics::{CsvRecorder, MetricRow, NoopRecorder, Recorder, CSV_SCHEMA};
+pub use server::{CoordinatorService, ServiceConfig};
+pub use session::{SessionKind, SessionOutcome, SessionRunner, SessionSpec};
+pub use storage::{DirStore, NoopStore, SessionSnapshot, SpecSummary, Store, TraceRow};

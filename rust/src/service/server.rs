@@ -1,0 +1,240 @@
+//! The coordinator service: accepts session submissions, multiplexes
+//! them over one shared [`Broker`] and a [`TrialScheduler`] worker pool,
+//! persists every session through the configured [`Store`], and feeds
+//! every event through the configured [`Recorder`].
+//!
+//! `submit` is cheap (validation only); [`CoordinatorService::drain`]
+//! does the work: it loads each submitted session's snapshot (resuming
+//! any that a previous — possibly killed — service incarnation left
+//! mid-flight), builds one [`SessionRunner`] per session, runs them
+//! concurrently, then emits metric rows in submission order so the CSV
+//! sink is byte-deterministic for any thread count.
+
+use super::backend::LiveBackend;
+use super::metrics::Recorder;
+use super::session::{SessionKind, SessionOutcome, SessionRunner, SessionSpec};
+use super::storage::Store;
+use crate::broker::Broker;
+use crate::exp::TrialScheduler;
+use crate::runtime::ModelRuntime;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Service-level knobs (per-session knobs live on [`SessionSpec`]).
+/// The default is zero threads (one worker per core) and no round
+/// limit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceConfig {
+    /// Scheduler worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Max rounds each drained session may execute in this incarnation
+    /// (`None` = run to completion). A paused session persists as
+    /// resumable mid-flight state — the test hook for killing a
+    /// coordinator between rounds.
+    pub round_limit: Option<usize>,
+}
+
+/// A long-running multi-session coordinator.
+pub struct CoordinatorService {
+    cfg: ServiceConfig,
+    store: Arc<dyn Store>,
+    recorder: Box<dyn Recorder>,
+    broker: Broker,
+    runtime: Option<Arc<ModelRuntime>>,
+    pending: Vec<SessionSpec>,
+}
+
+impl CoordinatorService {
+    pub fn new(
+        cfg: ServiceConfig,
+        store: Arc<dyn Store>,
+        recorder: Box<dyn Recorder>,
+    ) -> CoordinatorService {
+        CoordinatorService {
+            cfg,
+            store,
+            recorder,
+            broker: Broker::new(),
+            runtime: None,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Attach the PJRT model runtime live sessions train against.
+    pub fn with_runtime(mut self, runtime: Arc<ModelRuntime>) -> CoordinatorService {
+        self.runtime = Some(runtime);
+        self
+    }
+
+    /// Sessions submitted and not yet drained.
+    pub fn pending_sessions(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Validate and queue a session. Live sessions require a runtime;
+    /// names must be unique within the queue (they are storage keys).
+    pub fn submit(&mut self, spec: SessionSpec) -> Result<()> {
+        spec.validate()?;
+        if self.pending.iter().any(|s| s.name == spec.name) {
+            return Err(anyhow!("session {:?} already submitted", spec.name));
+        }
+        if matches!(spec.kind, SessionKind::Live { .. }) && self.runtime.is_none() {
+            return Err(anyhow!(
+                "session {:?} is live but the service has no model runtime attached",
+                spec.name
+            ));
+        }
+        self.pending.push(spec);
+        Ok(())
+    }
+
+    /// Run every queued session to its stopping point and return the
+    /// outcomes in submission order. Sessions run concurrently on the
+    /// scheduler pool; each one persists after every completed round,
+    /// and any session with a stored snapshot resumes from it instead
+    /// of re-running completed rounds.
+    pub fn drain(&mut self) -> Result<Vec<SessionOutcome>> {
+        let specs: Vec<SessionSpec> = self.pending.drain(..).collect();
+        let mut runners = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let snapshot = self.store.load(&spec.name)?;
+            let runner = match &spec.kind {
+                SessionKind::Env { .. } => SessionRunner::new_env(spec, snapshot)?,
+                SessionKind::Live { deploy, time_scale } => {
+                    let runtime = self
+                        .runtime
+                        .clone()
+                        .ok_or_else(|| anyhow!("live session without a runtime"))?;
+                    let backend = LiveBackend::launch(
+                        deploy,
+                        &spec.name,
+                        runtime,
+                        &self.broker,
+                        *time_scale,
+                    )?;
+                    SessionRunner::new_live(spec, backend, snapshot)?
+                }
+            };
+            runners.push(runner);
+        }
+        let store = self.store.clone();
+        let limit = self.cfg.round_limit;
+        let results = TrialScheduler::new(self.cfg.threads)
+            .run_consuming(runners, |_, runner| runner.run(store.as_ref(), limit));
+        let mut outcomes = Vec::with_capacity(results.len());
+        for result in results {
+            outcomes.push(result?);
+        }
+        // Rows are recorded after the drain, in submission order, so the
+        // sink's bytes are independent of worker interleaving.
+        for outcome in &outcomes {
+            for row in &outcome.rows {
+                self.recorder.record(row)?;
+            }
+        }
+        self.recorder.flush()?;
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::machine::Phase;
+    use super::super::metrics::MetricRow;
+    use super::super::storage::NoopStore;
+    use super::*;
+    use crate::configio::SimScenario;
+    use std::sync::Mutex;
+
+    /// Captures rows into shared memory so tests can inspect the feed.
+    struct CaptureRecorder(Arc<Mutex<Vec<MetricRow>>>);
+
+    impl Recorder for CaptureRecorder {
+        fn name(&self) -> &'static str {
+            "capture"
+        }
+
+        fn record(&mut self, row: &MetricRow) -> std::io::Result<()> {
+            self.0.lock().unwrap().push(row.clone());
+            Ok(())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn tiny_spec(name: &str, strategy: &str) -> SessionSpec {
+        let mut sim = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        sim.pso.particles = 3;
+        SessionSpec::env(name, strategy, 4, sim, "analytic")
+    }
+
+    fn service(threads: usize) -> (CoordinatorService, Arc<Mutex<Vec<MetricRow>>>) {
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let cfg = ServiceConfig { threads, ..ServiceConfig::default() };
+        let recorder = Box::new(CaptureRecorder(rows.clone()));
+        (CoordinatorService::new(cfg, Arc::new(NoopStore::new()), recorder), rows)
+    }
+
+    #[test]
+    fn drain_runs_queued_sessions_and_feeds_the_recorder_in_order() {
+        let (mut svc, rows) = service(2);
+        svc.submit(tiny_spec("alpha", "pso")).unwrap();
+        svc.submit(tiny_spec("beta", "round-robin")).unwrap();
+        assert_eq!(svc.pending_sessions(), 2);
+        let outcomes = svc.drain().unwrap();
+        assert_eq!(svc.pending_sessions(), 0);
+        assert_eq!(outcomes.len(), 2);
+        for out in &outcomes {
+            assert_eq!(out.phase, Phase::Finished);
+            assert_eq!(out.trace.len(), 4);
+        }
+        // Submission order, regardless of which worker finished first.
+        let rows = rows.lock().unwrap();
+        let sessions: Vec<&str> = rows.iter().map(|r| r.session.as_str()).collect();
+        let split = sessions.iter().position(|&s| s == "beta").unwrap();
+        assert!(sessions[..split].iter().all(|&s| s == "alpha"));
+        assert!(sessions[split..].iter().all(|&s| s == "beta"));
+        // An empty drain is a no-op.
+        assert!(svc.drain().unwrap().is_empty());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_session_traces() {
+        let run = |threads: usize| {
+            let (mut svc, _) = service(threads);
+            svc.submit(tiny_spec("a", "pso")).unwrap();
+            svc.submit(tiny_spec("b", "ga")).unwrap();
+            svc.drain().unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.name, p.name);
+            let sd: Vec<u64> = s.trace.iter().map(|r| r.delay_s.to_bits()).collect();
+            let pd: Vec<u64> = p.trace.iter().map(|r| r.delay_s.to_bits()).collect();
+            assert_eq!(sd, pd, "session {} must not depend on thread count", s.name);
+        }
+    }
+
+    #[test]
+    fn submit_rejects_duplicates_bad_specs_and_unbacked_live_sessions() {
+        let (mut svc, _) = service(1);
+        svc.submit(tiny_spec("dup", "pso")).unwrap();
+        let err = svc.submit(tiny_spec("dup", "ga")).unwrap_err().to_string();
+        assert!(err.contains("already submitted"), "{err}");
+        let mut bad = tiny_spec("zero", "pso");
+        bad.rounds = 0;
+        assert!(svc.submit(bad).is_err());
+        let live = SessionSpec::live(
+            "live0",
+            "pso",
+            2,
+            crate::configio::DeployScenario::paper_docker(),
+            1.0,
+        );
+        let err = svc.submit(live).unwrap_err().to_string();
+        assert!(err.contains("no model runtime"), "{err}");
+    }
+}

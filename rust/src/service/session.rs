@@ -1,0 +1,696 @@
+//! One FL session end to end: spec → optimizer + machine + backend →
+//! round loop → outcome. The runner is the glue between the pure
+//! [`SessionMachine`] and a [`RoundBackend`]: it draws one dynamics
+//! realization and one placement proposal per round (held across
+//! retries, so the RNG streams stay replay-exact), heartbeats the
+//! machine from the realization's liveness mask, persists a
+//! [`SessionSnapshot`] after *every* completed round, and emits every
+//! phase edge / round outcome / best-so-far score as [`MetricRow`]s.
+//!
+//! ## Resume = replay
+//!
+//! Optimizer RNG state is not serialized. Instead, a resumed runner
+//! rebuilds its optimizer from the seed under the canonical seeding
+//! discipline and *replays* the persisted trace — one realization + one
+//! proposal + one feedback per completed round, asserting each replayed
+//! placement matches the recorded one — which leaves the optimizer
+//! (including its RNG) bit-identical to the moment the snapshot was
+//! taken. A torn save or an edited spec shows up as a replay divergence
+//! error instead of silently mixing rounds.
+
+use super::backend::{EnvBackend, LiveBackend, RoundBackend};
+use super::machine::{MachineConfig, Phase, SessionMachine};
+use super::metrics::MetricRow;
+use super::storage::{SessionSnapshot, SpecSummary, Store, TraceRow};
+use crate::configio::{DeployScenario, DynamicsSpec, SimScenario};
+use crate::des::Dynamics;
+use crate::fitness::ClientAttrs;
+use crate::placement::{registry, Optimizer, Placement, Stepwise};
+use crate::prng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+/// Salt separating the runner's dynamics stream from the optimizer /
+/// population streams derived from the same session seed.
+const DYNAMICS_SALT: u64 = 0x4459_4E41; // "DYNA"
+
+/// What a session runs against.
+#[derive(Debug, Clone)]
+pub enum SessionKind {
+    /// Simulation tier: rounds are oracle evaluations (artifact-free).
+    Env {
+        sim: SimScenario,
+        /// Registry environment name (`analytic` / `event-driven`).
+        env: String,
+    },
+    /// Live tier: rounds are real FL rounds over the shared broker.
+    Live {
+        deploy: DeployScenario,
+        /// Emulated-clock compression factor for agent think time.
+        time_scale: f64,
+    },
+}
+
+/// A submitted session: everything the service needs to build a runner.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Unique, path-safe session name (also the storage key).
+    pub name: String,
+    /// Placement strategy (a `placement::registry` name, aliases ok).
+    pub strategy: String,
+    /// FL rounds the session must complete.
+    pub rounds: usize,
+    /// Seed override; defaults to the scenario's own seed.
+    pub seed: Option<u64>,
+    pub kind: SessionKind,
+    /// Per-round membership dynamics replayed into the session (`None`
+    /// = static membership). This is the `--dynamics` path: the same
+    /// churn/dropout machinery the DES tier models internally, here
+    /// realized once per round and fed to the machine's heartbeat table
+    /// (and, live, into the round's trainer lists).
+    pub dynamics: Option<DynamicsSpec>,
+    /// Override for [`MachineConfig::retry_budget`].
+    pub retry_budget: Option<usize>,
+}
+
+impl SessionSpec {
+    /// An env-backed session over `sim`, named `name`.
+    pub fn env(name: &str, strategy: &str, rounds: usize, sim: SimScenario, env: &str) -> Self {
+        SessionSpec {
+            name: name.to_string(),
+            strategy: strategy.to_string(),
+            rounds,
+            seed: None,
+            kind: SessionKind::Env { sim, env: env.to_string() },
+            dynamics: None,
+            retry_budget: None,
+        }
+    }
+
+    /// A live session over `deploy`, named `name`.
+    pub fn live(
+        name: &str,
+        strategy: &str,
+        rounds: usize,
+        deploy: DeployScenario,
+        time_scale: f64,
+    ) -> Self {
+        SessionSpec {
+            name: name.to_string(),
+            strategy: strategy.to_string(),
+            rounds,
+            seed: None,
+            kind: SessionKind::Live { deploy, time_scale },
+            dynamics: None,
+            retry_budget: None,
+        }
+    }
+
+    /// The seed this session actually runs under.
+    pub fn effective_seed(&self) -> u64 {
+        let scenario_seed = match &self.kind {
+            SessionKind::Env { sim, .. } => sim.seed,
+            SessionKind::Live { deploy, .. } => deploy.seed,
+        };
+        self.seed.unwrap_or(scenario_seed)
+    }
+
+    pub fn client_count(&self) -> usize {
+        match &self.kind {
+            SessionKind::Env { sim, .. } => sim.client_count(),
+            SessionKind::Live { deploy, .. } => deploy.clients.len(),
+        }
+    }
+
+    /// Aggregator slot count (placement dimensionality, Eq. 5).
+    pub fn dims(&self) -> usize {
+        match &self.kind {
+            SessionKind::Env { sim, .. } => sim.dimensions(),
+            SessionKind::Live { deploy, .. } => deploy.dimensions(),
+        }
+    }
+
+    /// Reject inconsistent specs before any resources are built.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(anyhow!("session spec: name must be non-empty"));
+        }
+        if self.rounds == 0 {
+            return Err(anyhow!("session {}: rounds must be >= 1", self.name));
+        }
+        registry::canonical(&self.strategy).map_err(|e| anyhow!("session {}: {e}", self.name))?;
+        match &self.kind {
+            SessionKind::Env { sim, env } => {
+                registry::canonical_env(env).map_err(|e| anyhow!("session {}: {e}", self.name))?;
+                sim.des.validate().map_err(|e| anyhow!("session {}: {e}", self.name))?;
+            }
+            SessionKind::Live { deploy, time_scale } => {
+                deploy.validate().map_err(|e| anyhow!("session {}: {e}", self.name))?;
+                // 0.0 = no emulated slowdown (the fast-test mode).
+                if *time_scale < 0.0 || !time_scale.is_finite() {
+                    return Err(anyhow!(
+                        "session {}: time_scale must be finite and >= 0, got {time_scale}",
+                        self.name
+                    ));
+                }
+            }
+        }
+        if self.client_count() < self.dims() {
+            return Err(anyhow!(
+                "session {}: {} clients cannot host {} aggregator slots",
+                self.name,
+                self.client_count(),
+                self.dims()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The in-flight round's work item, held across retries so a retried
+/// round re-runs the *same* placement under the *same* realization —
+/// the invariant that keeps resume-by-replay exact (replay consumes one
+/// realization + one proposal per completed round, never more).
+struct PendingRound {
+    round: usize,
+    placement: Placement,
+    active: Vec<bool>,
+    /// Heartbeat-live clients when the round was drawn.
+    live: usize,
+}
+
+/// The result of driving one session to a stopping point.
+#[derive(Debug)]
+pub struct SessionOutcome {
+    pub name: String,
+    /// Canonical strategy name.
+    pub strategy: String,
+    /// Phase the session stopped in (`Finished`, `Failed`, or a
+    /// mid-flight `Round(k)` when a round limit paused it).
+    pub phase: Phase,
+    /// Every completed round, oldest first (includes restored rounds).
+    pub trace: Vec<TraceRow>,
+    /// Metric rows emitted by this incarnation, in order.
+    pub rows: Vec<MetricRow>,
+    /// Optimizer's best placement + delay at stop time.
+    pub best: Option<(Placement, f64)>,
+    /// `Some(k)` when this incarnation resumed with rounds `0..k`
+    /// restored from storage.
+    pub resumed_from: Option<usize>,
+}
+
+/// Drives one session: machine + optimizer + backend + dynamics.
+pub struct SessionRunner {
+    spec: SessionSpec,
+    summary: SpecSummary,
+    machine: SessionMachine,
+    stepwise: Stepwise,
+    backend: Box<dyn RoundBackend>,
+    dynamics: Dynamics,
+    trace: Vec<TraceRow>,
+    rows: Vec<MetricRow>,
+    /// Per-incarnation monotonic event number (restarts at 0 on resume).
+    seq: usize,
+    resumed_from: Option<usize>,
+    pending: Option<PendingRound>,
+    /// Machine transitions already turned into metric rows.
+    transitions_emitted: usize,
+}
+
+impl SessionRunner {
+    /// Build an env-backed runner. The oracle and the optimizer share
+    /// the canonical seeding discipline (`run_cell_trial`'s contract):
+    /// population sampled first from the seed, optimizer stream split
+    /// off after — so a service session scores exactly like a `repro
+    /// sim` trial of the same scenario + seed.
+    pub fn new_env(spec: SessionSpec, snapshot: Option<SessionSnapshot>) -> Result<SessionRunner> {
+        spec.validate()?;
+        let SessionKind::Env { sim, env } = &spec.kind else {
+            return Err(anyhow!("session {}: new_env needs an Env spec", spec.name));
+        };
+        let mut sim = sim.clone();
+        sim.seed = spec.effective_seed();
+        let mut rng = Pcg32::seed_from_u64(sim.seed);
+        let attrs = ClientAttrs::sample_population(
+            sim.client_count(),
+            sim.pspeed_range,
+            sim.memcap_range,
+            sim.mdatasize,
+            &mut rng,
+        );
+        let opt = registry::build_sim(&spec.strategy, &sim, rng.split())
+            .map_err(|e| anyhow!("session {}: {e}", spec.name))?;
+        let oracle = registry::build_sim_env(env, &sim, attrs)
+            .map_err(|e| anyhow!("session {}: {e}", spec.name))?;
+        SessionRunner::build(spec, opt, Box::new(EnvBackend::new(oracle)), snapshot)
+    }
+
+    /// Build a live runner over an already-wired [`LiveBackend`] (the
+    /// server wires agents + coordinator onto the shared broker first).
+    /// Live optimizers follow the Fig-4 convention: steady-state
+    /// strategy variants seeded from `seed ^ 0xABCD`.
+    pub fn new_live(
+        spec: SessionSpec,
+        backend: LiveBackend,
+        snapshot: Option<SessionSnapshot>,
+    ) -> Result<SessionRunner> {
+        spec.validate()?;
+        let SessionKind::Live { deploy, .. } = &spec.kind else {
+            return Err(anyhow!("session {}: new_live needs a Live spec", spec.name));
+        };
+        let opt = registry::build_live(
+            &spec.strategy,
+            deploy.dimensions(),
+            deploy.clients.len(),
+            deploy.pso,
+            spec.effective_seed() ^ 0xABCD,
+        )
+        .map_err(|e| anyhow!("session {}: {e}", spec.name))?;
+        SessionRunner::build(spec, opt, Box::new(backend), snapshot)
+    }
+
+    fn build(
+        spec: SessionSpec,
+        opt: Box<dyn Optimizer>,
+        backend: Box<dyn RoundBackend>,
+        snapshot: Option<SessionSnapshot>,
+    ) -> Result<SessionRunner> {
+        let cc = spec.client_count();
+        let mut cfg = MachineConfig::for_session(spec.rounds, cc, spec.dims());
+        if let Some(budget) = spec.retry_budget {
+            cfg.retry_budget = budget;
+        }
+        let machine = SessionMachine::new(cfg).map_err(|e| anyhow!("session {}: {e}", spec.name))?;
+        let stepwise = Stepwise::new(opt);
+        let seed = spec.effective_seed();
+        let dynamics = match &spec.dynamics {
+            Some(d) => Dynamics::new(d.clone(), Pcg32::seed_from_u64(seed ^ DYNAMICS_SALT)),
+            None => Dynamics::off(),
+        };
+        let summary = SpecSummary {
+            strategy: stepwise.name().to_string(),
+            rounds: spec.rounds,
+            seed,
+            client_count: cc,
+            dims: spec.dims(),
+            backend: backend.label().to_string(),
+        };
+        let mut runner = SessionRunner {
+            spec,
+            summary,
+            machine,
+            stepwise,
+            backend,
+            dynamics,
+            trace: Vec::new(),
+            rows: Vec::new(),
+            seq: 0,
+            resumed_from: None,
+            pending: None,
+            transitions_emitted: 0,
+        };
+        if let Some(snap) = snapshot {
+            runner.restore(snap)?;
+        }
+        Ok(runner)
+    }
+
+    /// Rebuild this runner's state from a snapshot by replaying its
+    /// trace (see the module docs). Hard-errors on any divergence.
+    fn restore(&mut self, snap: SessionSnapshot) -> Result<()> {
+        let name = &self.spec.name;
+        if snap.summary != self.summary {
+            return Err(anyhow!(
+                "session {name}: stored spec {:?} does not match submitted spec {:?}",
+                snap.summary,
+                self.summary
+            ));
+        }
+        if snap.next_round != snap.trace.len() {
+            return Err(anyhow!(
+                "session {name}: torn snapshot (next_round {} but {} trace rows)",
+                snap.next_round,
+                snap.trace.len()
+            ));
+        }
+        self.machine
+            .resume_at(snap.next_round)
+            .map_err(|e| anyhow!("session {name}: {e}"))?;
+        let cc = self.spec.client_count();
+        for row in &snap.trace {
+            let _realization = self.dynamics.next_round(cc);
+            let p = self.stepwise.propose(row.round);
+            if p.as_slice() != row.placement.as_slice() {
+                return Err(anyhow!(
+                    "session {name}: replay diverged at round {} \
+                     (replayed {:?}, stored {:?}) — snapshot from a different spec/seed?",
+                    row.round,
+                    p.as_slice(),
+                    row.placement
+                ));
+            }
+            self.stepwise.feedback(row.delay_s);
+        }
+        // Cross-check the replayed optimizer against the stored snapshot
+        // — a torn save (newer checkpoint under an older state.json)
+        // lands here instead of silently mixing rounds.
+        if let Some(stored) = &snap.optimizer {
+            let replayed = self.stepwise.optimizer().state();
+            if replayed != *stored {
+                return Err(anyhow!(
+                    "session {name}: replayed optimizer state {replayed:?} does not match \
+                     stored {stored:?} (torn save?)"
+                ));
+            }
+        }
+        if !snap.params.is_empty() {
+            self.backend.install_params(snap.params.clone(), snap.next_round, snap.loss)?;
+        }
+        self.resumed_from = Some(snap.next_round);
+        self.trace = snap.trace;
+        Ok(())
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Drive the session until it finishes, fails, or `round_limit`
+    /// rounds have been executed *by this incarnation* (a paused
+    /// session persists as resumable mid-flight state — how the
+    /// kill/restart tests model a dying coordinator). Consumes the
+    /// runner; every completed round is persisted to `store` before the
+    /// next one starts.
+    pub fn run(mut self, store: &dyn Store, round_limit: Option<usize>) -> Result<SessionOutcome> {
+        let cc = self.spec.client_count();
+        let rendezvous_timeout = self.machine.config().rendezvous_timeout;
+        self.machine.submit().map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+        self.emit_phases();
+        let strategy = self.summary.strategy.clone();
+        self.backend.set_strategy_label(&strategy);
+        match self.backend.rendezvous(cc, Duration::from_secs_f64(rendezvous_timeout)) {
+            Ok(()) => {
+                self.machine.beat_active(&vec![true; cc]);
+                self.machine
+                    .rendezvous_complete()
+                    .map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+            }
+            Err(e) => {
+                let why = format!("rendezvous: {e:#}");
+                self.machine.fail(&why);
+            }
+        }
+        self.emit_phases();
+
+        let mut executed = 0usize;
+        while let Phase::Round(k) = self.machine.phase() {
+            if round_limit.is_some_and(|limit| executed >= limit) {
+                break;
+            }
+            // Draw this round's work item once; retries reuse it.
+            if self.pending.as_ref().map(|p| p.round) != Some(k) {
+                let realization = self.dynamics.next_round(cc);
+                let placement = self.stepwise.propose(k);
+                self.machine.beat_active(&realization.active);
+                let live = self.machine.live_clients();
+                self.pending =
+                    Some(PendingRound { round: k, placement, active: realization.active, live });
+            }
+            let pending = self.pending.as_ref().expect("pending round just ensured");
+            if !self.machine.has_quorum() {
+                let live = self.machine.live_clients();
+                let why = format!("quorum lost ({live}/{} live)", self.machine.config().quorum);
+                self.machine
+                    .round_failed(&why)
+                    .map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+                self.emit_phases();
+                continue;
+            }
+            match self.backend.run_round(k, &pending.placement, &pending.active) {
+                Ok(out) => {
+                    let row = TraceRow {
+                        round: k,
+                        placement: pending.placement.as_slice().to_vec(),
+                        delay_s: out.delay_s,
+                        loss: out.loss,
+                        live: pending.live,
+                    };
+                    self.stepwise.feedback(out.delay_s);
+                    self.machine
+                        .round_completed(out.delay_s)
+                        .map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+                    self.trace.push(row);
+                    self.pending = None;
+                    executed += 1;
+                    self.persist(store)?;
+                    self.emit_round_rows(k);
+                }
+                Err(e) => {
+                    let why = format!("{e:#}");
+                    self.machine
+                        .round_failed(&why)
+                        .map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+                }
+            }
+            self.emit_phases();
+        }
+
+        if self.machine.phase() == Phase::Finishing {
+            self.machine.drained().map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+        }
+        // Persist the terminal (or paused) phase so storage reflects it.
+        self.persist(store)?;
+        self.emit_phases();
+        self.backend.shutdown();
+        Ok(SessionOutcome {
+            name: self.spec.name,
+            strategy,
+            phase: self.machine.phase(),
+            trace: self.trace,
+            rows: self.rows,
+            best: self.stepwise.optimizer().best(),
+            resumed_from: self.resumed_from,
+        })
+    }
+
+    fn persist(&self, store: &dyn Store) -> Result<()> {
+        let snap = SessionSnapshot {
+            summary: self.summary.clone(),
+            next_round: self.trace.len(),
+            phase: self.machine.phase().to_string(),
+            trace: self.trace.clone(),
+            optimizer: Some(self.stepwise.optimizer().state()),
+            params: self.backend.params(),
+            loss: self.trace.last().map(|r| r.loss).unwrap_or(f64::NAN),
+        };
+        store.save(&self.spec.name, &snap)
+    }
+
+    /// Emit the round-outcome row and the best-so-far score row for a
+    /// just-completed round `k`.
+    fn emit_round_rows(&mut self, k: usize) {
+        let row = self.trace.last().expect("round just pushed").clone();
+        let detail = format!("live {}", row.live);
+        self.push_row("round", Some(k), row.placement, Some(row.delay_s), detail);
+        if let Some((best, delay)) = self.stepwise.optimizer().best() {
+            let detail = "best so far".to_string();
+            self.push_row("score", Some(k), best.as_slice().to_vec(), Some(delay), detail);
+        }
+    }
+
+    /// Turn machine transitions not yet reported into phase rows.
+    fn emit_phases(&mut self) {
+        let fresh = self.machine.transitions()[self.transitions_emitted..].to_vec();
+        self.transitions_emitted += fresh.len();
+        for t in fresh {
+            let detail = format!("{}->{} ({})", t.from, t.to, t.reason);
+            self.push_row("phase", None, Vec::new(), None, detail);
+        }
+    }
+
+    fn push_row(
+        &mut self,
+        kind: &'static str,
+        round: Option<usize>,
+        placement: Vec<usize>,
+        delay_s: Option<f64>,
+        detail: String,
+    ) {
+        self.rows.push(MetricRow {
+            session: self.spec.name.clone(),
+            seq: self.seq,
+            kind,
+            round,
+            strategy: self.summary.strategy.clone(),
+            placement,
+            delay_s,
+            detail,
+        });
+        self.seq += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::RoundOutcome;
+    use super::super::storage::NoopStore;
+    use super::*;
+
+    fn tiny_sim() -> SimScenario {
+        let mut sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        sc.pso.particles = 4;
+        sc.pso.iterations = 8;
+        sc
+    }
+
+    fn env_spec(name: &str, strategy: &str, rounds: usize) -> SessionSpec {
+        let mut spec = SessionSpec::env(name, strategy, rounds, tiny_sim(), "analytic");
+        // Dropout stresses the dynamics/replay alignment invariants.
+        spec.dynamics = Some(DynamicsSpec { dropout_prob: 0.3, ..DynamicsSpec::default() });
+        spec
+    }
+
+    fn delays(trace: &[TraceRow]) -> Vec<u64> {
+        trace.iter().map(|r| r.delay_s.to_bits()).collect()
+    }
+
+    #[test]
+    fn env_session_finishes_deterministically() {
+        let store = NoopStore::new();
+        let a = SessionRunner::new_env(env_spec("a", "pso", 6), None)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        let b = SessionRunner::new_env(env_spec("b", "pso", 6), None)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        assert_eq!(a.phase, Phase::Finished);
+        assert_eq!(a.trace.len(), 6);
+        assert_eq!(a.strategy, "pso");
+        for (i, row) in a.trace.iter().enumerate() {
+            assert_eq!(row.round, i);
+            assert!(row.delay_s.is_finite() && row.delay_s > 0.0);
+            assert!(row.live >= 1, "live-count floor");
+        }
+        // Same spec (different name) → bit-identical trace.
+        assert_eq!(delays(&a.trace), delays(&b.trace));
+        assert_eq!(a.best.unwrap().1, b.best.unwrap().1);
+        // Storage saw every completed round plus the terminal phase.
+        let snap = store.load("a").unwrap().unwrap();
+        assert_eq!(snap.next_round, 6);
+        assert_eq!(snap.phase, "finished");
+    }
+
+    #[test]
+    fn runner_emits_round_score_and_phase_rows() {
+        let store = NoopStore::new();
+        let out = SessionRunner::new_env(env_spec("rows", "round-robin", 4), None)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        let count = |kind: &str| out.rows.iter().filter(|r| r.kind == kind).count();
+        assert_eq!(count("round"), 4);
+        assert_eq!(count("score"), 4);
+        // submitted → rendezvous-complete → 4 round edges → drained.
+        assert_eq!(count("phase"), 7);
+        for (i, row) in out.rows.iter().enumerate() {
+            assert_eq!(row.seq, i, "seq must be monotonic");
+            assert_eq!(row.session, "rows");
+            assert_eq!(row.strategy, "round-robin");
+        }
+        assert!(out.rows[0].detail.contains("standby->rendezvous"));
+        assert!(out.rows.last().unwrap().detail.contains("->finished"));
+    }
+
+    #[test]
+    fn paused_session_resumes_to_a_bit_identical_trace() {
+        // Reference: one uninterrupted 6-round session.
+        let store = NoopStore::new();
+        let full = SessionRunner::new_env(env_spec("ref", "pso", 6), None)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        // Same spec, paused after 3 rounds (mid PSO batch), resumed from
+        // the snapshot by a fresh runner — the kill/restart shape.
+        let paused = SessionRunner::new_env(env_spec("kr", "pso", 6), None)
+            .unwrap()
+            .run(&store, Some(3))
+            .unwrap();
+        assert_eq!(paused.phase, Phase::Round(3));
+        assert_eq!(paused.trace.len(), 3);
+        let snap = store.load("kr").unwrap().unwrap();
+        assert_eq!(snap.next_round, 3);
+        assert_eq!(snap.phase, "round(3)");
+        let resumed = SessionRunner::new_env(env_spec("kr", "pso", 6), Some(snap))
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        assert_eq!(resumed.phase, Phase::Finished);
+        assert_eq!(resumed.resumed_from, Some(3));
+        assert_eq!(delays(&resumed.trace), delays(&full.trace), "resume must not re-run or drift");
+        assert_eq!(resumed.best.unwrap().1, full.best.unwrap().1);
+        // The resume edge is visible in the transition log.
+        assert!(resumed.rows.iter().any(|r| r.detail.contains("rounds 0..3 restored")));
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_specs() {
+        let store = NoopStore::new();
+        SessionRunner::new_env(env_spec("s", "pso", 6), None)
+            .unwrap()
+            .run(&store, Some(2))
+            .unwrap();
+        let snap = store.load("s").unwrap().unwrap();
+        // Different strategy → fingerprint mismatch, refused up front.
+        let err = SessionRunner::new_env(env_spec("s", "ga", 6), Some(snap.clone()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // Tampered trace → replay divergence.
+        let mut torn = snap.clone();
+        torn.trace[1].placement.reverse();
+        let err = SessionRunner::new_env(env_spec("s", "pso", 6), Some(torn))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("replay diverged"), "{err}");
+        // Inconsistent next_round → torn snapshot.
+        let mut short = snap;
+        short.next_round = 1;
+        let err = SessionRunner::new_env(env_spec("s", "pso", 6), Some(short))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("torn snapshot"), "{err}");
+    }
+
+    /// A backend whose rounds always fail — exercises the retry budget.
+    struct BrokenBackend;
+
+    impl RoundBackend for BrokenBackend {
+        fn label(&self) -> &str {
+            "analytic"
+        }
+
+        fn run_round(&mut self, round: usize, _p: &Placement, _a: &[bool]) -> Result<RoundOutcome> {
+            Err(anyhow!("injected fault in round {round}"))
+        }
+    }
+
+    #[test]
+    fn round_failures_spend_the_retry_budget_into_failed() {
+        let mut spec = env_spec("broken", "round-robin", 3);
+        spec.retry_budget = Some(1);
+        let opt = registry::build("round-robin", &tiny_sim(), spec.effective_seed()).unwrap();
+        let runner = SessionRunner::build(spec, opt, Box::new(BrokenBackend), None).unwrap();
+        let store = NoopStore::new();
+        let out = runner.run(&store, None).unwrap();
+        assert_eq!(out.phase, Phase::Failed);
+        assert!(out.trace.is_empty());
+        let retries: Vec<&MetricRow> =
+            out.rows.iter().filter(|r| r.detail.contains("injected fault")).collect();
+        // retry 1/1, then budget exhausted.
+        assert_eq!(retries.len(), 2);
+        assert!(retries.last().unwrap().detail.contains("budget 1 exhausted"));
+        assert_eq!(store.load("broken").unwrap().unwrap().phase, "failed");
+    }
+}

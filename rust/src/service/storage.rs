@@ -1,0 +1,451 @@
+//! Pluggable session persistence behind the [`Store`] trait.
+//!
+//! Two backends ship: [`NoopStore`] (in-memory, for tests and ephemeral
+//! serves) and [`DirStore`] (file-backed). `DirStore` layers over
+//! `runtime::checkpoint`: the model parameters + optimizer snapshot live
+//! in a standard `model.ckpt`, while the session trace and machine phase
+//! live next to it in `state.json` — so a killed coordinator resumes
+//! every in-flight session from its last completed round, and the
+//! checkpoint stays readable by the existing PR 2 tooling.
+//!
+//! Layout: `root/<session>/state.json` + `root/<session>/model.ckpt`,
+//! both written atomically (tmp + rename), checkpoint first so a torn
+//! save is detected at load time rather than silently mixing rounds.
+
+use crate::json::{self, Value};
+use crate::placement::OptimizerState;
+use crate::runtime::checkpoint::{self, CheckpointMeta};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// One completed round, as persisted (and replayed on resume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    pub round: usize,
+    /// Aggregator client ids, slot-ordered.
+    pub placement: Vec<usize>,
+    /// Measured round delay (virtual seconds).
+    pub delay_s: f64,
+    /// Eval loss after the round (NaN if eval was skipped).
+    pub loss: f64,
+    /// Live clients when the round started.
+    pub live: usize,
+}
+
+/// The spec fingerprint a snapshot was produced under. Resume refuses
+/// to continue a session whose submitted spec no longer matches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecSummary {
+    pub strategy: String,
+    pub rounds: usize,
+    pub seed: u64,
+    pub client_count: usize,
+    /// Aggregator slot count of the hierarchy.
+    pub dims: usize,
+    /// Backend label (environment name or `live`).
+    pub backend: String,
+}
+
+/// Everything needed to resume a session: spec fingerprint, machine
+/// position, the completed-round trace (replayed to rebuild optimizer
+/// RNG state bit-exactly), plus the model/optimizer checkpoint payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub summary: SpecSummary,
+    /// First round the resumed session must execute.
+    pub next_round: usize,
+    /// Machine phase label at save time (`Phase::to_string`).
+    pub phase: String,
+    pub trace: Vec<TraceRow>,
+    /// Optimizer snapshot (cross-checked against the trace replay).
+    pub optimizer: Option<OptimizerState>,
+    /// Flat global model (empty for env-backed sessions).
+    pub params: Vec<f32>,
+    /// Last eval loss (NaN if unknown).
+    pub loss: f64,
+}
+
+/// Session persistence. `&self` methods — stores are shared across the
+/// scheduler's workers behind an `Arc`.
+pub trait Store: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()>;
+    /// `Ok(None)` when the session has no snapshot.
+    fn load(&self, session: &str) -> Result<Option<SessionSnapshot>>;
+    /// Names of every stored session, sorted.
+    fn sessions(&self) -> Result<Vec<String>>;
+    fn remove(&self, session: &str) -> Result<()>;
+}
+
+/// In-memory store: survives nothing, costs nothing.
+#[derive(Default)]
+pub struct NoopStore {
+    map: Mutex<BTreeMap<String, SessionSnapshot>>,
+}
+
+impl NoopStore {
+    pub fn new() -> NoopStore {
+        NoopStore::default()
+    }
+}
+
+impl Store for NoopStore {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
+    fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()> {
+        validate_name(session)?;
+        self.map.lock().unwrap().insert(session.to_string(), snap.clone());
+        Ok(())
+    }
+
+    fn load(&self, session: &str) -> Result<Option<SessionSnapshot>> {
+        Ok(self.map.lock().unwrap().get(session).cloned())
+    }
+
+    fn sessions(&self) -> Result<Vec<String>> {
+        Ok(self.map.lock().unwrap().keys().cloned().collect())
+    }
+
+    fn remove(&self, session: &str) -> Result<()> {
+        self.map.lock().unwrap().remove(session);
+        Ok(())
+    }
+}
+
+/// File-backed store rooted at a directory.
+pub struct DirStore {
+    root: PathBuf,
+}
+
+impl DirStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<DirStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {root:?}"))?;
+        Ok(DirStore { root })
+    }
+
+    fn session_dir(&self, session: &str) -> Result<PathBuf> {
+        validate_name(session)?;
+        Ok(self.root.join(session))
+    }
+}
+
+impl Store for DirStore {
+    fn name(&self) -> &'static str {
+        "dir"
+    }
+
+    fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()> {
+        let dir = self.session_dir(session)?;
+        std::fs::create_dir_all(&dir)?;
+        // Checkpoint first: `state.json` is the commit point, so a crash
+        // between the two writes leaves the previous state.json pointing
+        // at a newer ckpt — detected by the resume cross-check instead
+        // of silently mixing rounds.
+        let meta = CheckpointMeta {
+            param_count: snap.params.len(),
+            round: snap.next_round,
+            session: session.to_string(),
+            loss: snap.loss,
+            optimizer: snap.optimizer.clone(),
+        };
+        checkpoint::save(&dir.join("model.ckpt"), &snap.params, &meta)?;
+        let state = json::to_string(&state_json(snap));
+        let tmp = dir.join("state.json.tmp");
+        std::fs::write(&tmp, state)?;
+        std::fs::rename(&tmp, dir.join("state.json"))?;
+        Ok(())
+    }
+
+    fn load(&self, session: &str) -> Result<Option<SessionSnapshot>> {
+        let dir = self.session_dir(session)?;
+        let state_path = dir.join("state.json");
+        if !state_path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&state_path)
+            .with_context(|| format!("reading {state_path:?}"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{state_path:?}: {e}"))?;
+        let mut snap = state_from_json(&v).map_err(|e| anyhow!("{state_path:?}: {e}"))?;
+        let (params, meta) = checkpoint::load(&dir.join("model.ckpt"))?;
+        snap.params = params;
+        snap.optimizer = meta.optimizer;
+        snap.loss = meta.loss;
+        Ok(Some(snap))
+    }
+
+    fn sessions(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.path().join("state.json").exists() {
+                names.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn remove(&self, session: &str) -> Result<()> {
+        let dir = self.session_dir(session)?;
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        Ok(())
+    }
+}
+
+/// Session names become directory names — keep them path-safe.
+fn validate_name(session: &str) -> Result<()> {
+    if session.is_empty()
+        || session.contains('/')
+        || session.contains('\\')
+        || session.contains("..")
+    {
+        return Err(anyhow!("invalid session name {session:?} (must be path-safe)"));
+    }
+    Ok(())
+}
+
+fn state_json(snap: &SessionSnapshot) -> Value {
+    let s = &snap.summary;
+    let trace: Vec<Value> = snap
+        .trace
+        .iter()
+        .map(|r| {
+            Value::object(vec![
+                ("round", Value::from(r.round)),
+                (
+                    "placement",
+                    Value::Array(r.placement.iter().map(|&c| Value::from(c)).collect()),
+                ),
+                ("delay_s", Value::Num(r.delay_s)),
+                ("loss", Value::Num(r.loss)),
+                ("live", Value::from(r.live)),
+            ])
+        })
+        .collect();
+    Value::object(vec![
+        (
+            "summary",
+            Value::object(vec![
+                ("strategy", Value::from(s.strategy.as_str())),
+                ("rounds", Value::from(s.rounds)),
+                // u64 seeds are stored as strings: JSON numbers are f64
+                // and would corrupt SplitMix64-derived replicate seeds.
+                ("seed", Value::from(s.seed.to_string())),
+                ("client_count", Value::from(s.client_count)),
+                ("dims", Value::from(s.dims)),
+                ("backend", Value::from(s.backend.as_str())),
+            ]),
+        ),
+        ("next_round", Value::from(snap.next_round)),
+        ("phase", Value::from(snap.phase.as_str())),
+        ("trace", Value::Array(trace)),
+    ])
+}
+
+fn state_from_json(v: &Value) -> Result<SessionSnapshot, String> {
+    let need = |field: &str| format!("state.json missing {field}");
+    let s = v.get("summary").ok_or_else(|| need("summary"))?;
+    let get_usize = |obj: &Value, key: &str| {
+        obj.get(key).and_then(Value::as_usize).ok_or_else(|| need(key))
+    };
+    let summary = SpecSummary {
+        strategy: s
+            .get("strategy")
+            .and_then(Value::as_str)
+            .ok_or_else(|| need("strategy"))?
+            .to_string(),
+        rounds: get_usize(s, "rounds")?,
+        seed: s
+            .get("seed")
+            .and_then(Value::as_str)
+            .and_then(|t| t.parse::<u64>().ok())
+            .ok_or_else(|| need("seed"))?,
+        client_count: get_usize(s, "client_count")?,
+        dims: get_usize(s, "dims")?,
+        backend: s
+            .get("backend")
+            .and_then(Value::as_str)
+            .ok_or_else(|| need("backend"))?
+            .to_string(),
+    };
+    let mut trace = Vec::new();
+    for row in v.get("trace").and_then(Value::as_array).ok_or_else(|| need("trace"))? {
+        let placement = row
+            .get("placement")
+            .and_then(Value::as_array)
+            .ok_or_else(|| need("trace.placement"))?
+            .iter()
+            .map(|c| c.as_usize().ok_or("trace.placement holds a non-integer"))
+            .collect::<Result<Vec<usize>, _>>()?;
+        trace.push(TraceRow {
+            round: get_usize(row, "round")?,
+            placement,
+            // NaN serializes to JSON null, which parses back as absent.
+            delay_s: row.get("delay_s").and_then(Value::as_f64).unwrap_or(f64::NAN),
+            loss: row.get("loss").and_then(Value::as_f64).unwrap_or(f64::NAN),
+            live: get_usize(row, "live")?,
+        });
+    }
+    let next_round = v
+        .get("next_round")
+        .and_then(Value::as_usize)
+        .ok_or_else(|| need("next_round"))?;
+    Ok(SessionSnapshot {
+        summary,
+        next_round,
+        phase: v
+            .get("phase")
+            .and_then(Value::as_str)
+            .ok_or_else(|| need("phase"))?
+            .to_string(),
+        trace,
+        // Filled from model.ckpt by the caller.
+        optimizer: None,
+        params: Vec::new(),
+        loss: f64::NAN,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Placement;
+
+    fn snapshot() -> SessionSnapshot {
+        SessionSnapshot {
+            summary: SpecSummary {
+                strategy: "pso".into(),
+                rounds: 10,
+                seed: 0xDEAD_BEEF_CAFE_F00D,
+                client_count: 12,
+                dims: 3,
+                backend: "event-driven".into(),
+            },
+            next_round: 2,
+            phase: "round(2)".into(),
+            trace: vec![
+                TraceRow {
+                    round: 0,
+                    placement: vec![4, 0, 9],
+                    delay_s: 3.25,
+                    loss: f64::NAN,
+                    live: 12,
+                },
+                TraceRow {
+                    round: 1,
+                    placement: vec![1, 2, 3],
+                    delay_s: 2.5,
+                    loss: 0.75,
+                    live: 11,
+                },
+            ],
+            optimizer: Some(OptimizerState {
+                name: "pso".into(),
+                best: Some((Placement::new(vec![1, 2, 3]), 2.5)),
+            }),
+            params: vec![0.5, -1.25, 3.0],
+            loss: 0.75,
+        }
+    }
+
+    /// NaN fields defeat PartialEq; compare through a NaN-normalizing view.
+    fn assert_snap_eq(a: &SessionSnapshot, b: &SessionSnapshot) {
+        let norm = |s: &SessionSnapshot| {
+            let mut s = s.clone();
+            for r in &mut s.trace {
+                if r.loss.is_nan() {
+                    r.loss = -1.0;
+                }
+                if r.delay_s.is_nan() {
+                    r.delay_s = -1.0;
+                }
+            }
+            if s.loss.is_nan() {
+                s.loss = -1.0;
+            }
+            s
+        };
+        assert_eq!(norm(a), norm(b));
+    }
+
+    #[test]
+    fn noop_store_roundtrips() {
+        let store = NoopStore::new();
+        assert!(store.load("s0").unwrap().is_none());
+        store.save("s0", &snapshot()).unwrap();
+        assert_snap_eq(&store.load("s0").unwrap().unwrap(), &snapshot());
+        assert_eq!(store.sessions().unwrap(), vec!["s0".to_string()]);
+        store.remove("s0").unwrap();
+        assert!(store.load("s0").unwrap().is_none());
+    }
+
+    #[test]
+    fn dir_store_roundtrips_through_files() {
+        let root = std::env::temp_dir().join("repro_store_roundtrip");
+        let _ = std::fs::remove_dir_all(&root);
+        let store = DirStore::open(&root).unwrap();
+        assert!(store.load("alpha").unwrap().is_none());
+        store.save("alpha", &snapshot()).unwrap();
+        store.save("beta", &snapshot()).unwrap();
+        // A second handle (fresh process emulation) sees the same state.
+        let reopened = DirStore::open(&root).unwrap();
+        assert_snap_eq(&reopened.load("alpha").unwrap().unwrap(), &snapshot());
+        assert_eq!(
+            reopened.sessions().unwrap(),
+            vec!["alpha".to_string(), "beta".to_string()]
+        );
+        // The checkpoint half is a standard runtime::checkpoint file.
+        let (params, meta) =
+            checkpoint::load(&root.join("alpha").join("model.ckpt")).unwrap();
+        assert_eq!(params, snapshot().params);
+        assert_eq!(meta.round, 2);
+        assert_eq!(meta.optimizer, snapshot().optimizer);
+        reopened.remove("alpha").unwrap();
+        assert!(reopened.load("alpha").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn seed_survives_beyond_f64_precision() {
+        // 0xDEAD_BEEF_CAFE_F00D > 2^53: a float round-trip would corrupt it.
+        let root = std::env::temp_dir().join("repro_store_seed");
+        let _ = std::fs::remove_dir_all(&root);
+        let store = DirStore::open(&root).unwrap();
+        store.save("s", &snapshot()).unwrap();
+        let back = store.load("s").unwrap().unwrap();
+        assert_eq!(back.summary.seed, 0xDEAD_BEEF_CAFE_F00D);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rejects_path_escaping_names() {
+        let store = NoopStore::new();
+        for bad in ["", "../x", "a/b", "a\\b"] {
+            assert!(store.save(bad, &snapshot()).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn empty_param_sessions_are_legal() {
+        // Env-backed sessions have no model; 0-param checkpoints are valid.
+        let root = std::env::temp_dir().join("repro_store_noparams");
+        let _ = std::fs::remove_dir_all(&root);
+        let store = DirStore::open(&root).unwrap();
+        let mut snap = snapshot();
+        snap.params.clear();
+        snap.optimizer = None;
+        store.save("env", &snap).unwrap();
+        let back = store.load("env").unwrap().unwrap();
+        assert!(back.params.is_empty());
+        assert_eq!(back.optimizer, None);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

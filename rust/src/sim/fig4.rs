@@ -4,17 +4,30 @@
 //! `repro e2e`, the examples and the `fig4_deploy` bench so every entry
 //! point reports identical rows. Strategies are built through
 //! [`registry`], so `--strategies ga,sa,tabu` works everywhere.
+//!
+//! The comparison itself runs through the service tier
+//! ([`crate::service`]): each strategy × replicate pair is one live
+//! session submitted to a [`CoordinatorService`], which multiplexes the
+//! sessions over one shared broker, persists them through the
+//! configured [`Store`] and streams events into the configured metric
+//! sink — so `--replicates R` means R independently seeded FL sessions
+//! per strategy, not a re-scored trace.
 
 use super::ascii_plot;
-use crate::configio::DeployScenario;
-use crate::exp::TrialScheduler;
+use crate::configio::{DeployScenario, DynamicsSpec};
+use crate::exp::replicate_seed;
 use crate::fl::Deployment;
-use crate::metrics::{CsvWriter, RoundRecorder};
+use crate::metrics::{mean_ci, CsvWriter, RoundRecord, RoundRecorder};
 use crate::placement::registry;
 use crate::runtime::ModelRuntime;
+use crate::service::{
+    CoordinatorService, CsvRecorder, NoopRecorder, NoopStore, Phase, Recorder, ServiceConfig,
+    SessionSpec, Store,
+};
 use anyhow::{anyhow, Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// The paper's Fig-4 strategy line-up (seed-compatible labels: the
 /// round-robin baseline keeps its paper name "uniform").
@@ -46,16 +59,64 @@ pub fn run_strategy(
     Ok(StrategyOutcome { name: name.to_string(), recorder })
 }
 
+/// Knobs for the service-backed live comparison. The default is one
+/// replicate per strategy, one worker per core, static membership, no
+/// persistence and no metric sink — the classic `repro compare` run.
+pub struct LiveServiceOptions {
+    /// Independent sessions per strategy; seeds derived with
+    /// [`replicate_seed`] from the deploy scenario's seed.
+    pub replicates: usize,
+    /// Service worker threads (0 = one per available core).
+    pub threads: usize,
+    /// Membership dynamics replayed into every session (`--dynamics`).
+    pub dynamics: Option<DynamicsSpec>,
+    /// Session persistence backend (resume-aware).
+    pub store: Arc<dyn Store>,
+    /// Service event CSV (`None` = discard events).
+    pub metrics_path: Option<PathBuf>,
+}
+
+impl Default for LiveServiceOptions {
+    fn default() -> Self {
+        LiveServiceOptions {
+            replicates: 1,
+            threads: 0,
+            dynamics: None,
+            store: Arc::new(NoopStore::new()),
+            metrics_path: None,
+        }
+    }
+}
+
 /// The full Fig-4 comparison over `strategies` (registry names; empty ⇒
-/// the paper's default trio). Writes `results/fig4.csv` (per-round
-/// delays per strategy) and prints the paper-style summary (totals,
-/// convergence round, percentage improvements).
+/// the paper's default trio) with default service options. Writes
+/// `results/fig4.csv` (per-round delays per strategy) and prints the
+/// paper-style summary (totals, convergence round, percentage
+/// improvements).
 pub fn run_fig4_comparison(
     rounds: usize,
     time_scale: f64,
     out_dir: &Path,
     strategies: &[String],
 ) -> Result<()> {
+    run_live_comparison(rounds, time_scale, out_dir, strategies, &LiveServiceOptions::default())
+}
+
+/// Service-backed live comparison: one [`SessionSpec`] per strategy ×
+/// replicate, all multiplexed by a [`CoordinatorService`] over one
+/// shared broker. Replicate 0 of each strategy feeds the classic Fig-4
+/// CSV/plot; with `--replicates R > 1` the per-strategy total delays
+/// additionally get a mean ± 95% CI table.
+pub fn run_live_comparison(
+    rounds: usize,
+    time_scale: f64,
+    out_dir: &Path,
+    strategies: &[String],
+    opts: &LiveServiceOptions,
+) -> Result<()> {
+    if opts.replicates == 0 {
+        return Err(anyhow!("--replicates must be >= 1"));
+    }
     let runtime = Arc::new(
         ModelRuntime::load_default().context("artifacts required — run `make artifacts`")?,
     );
@@ -67,23 +128,80 @@ pub fn run_fig4_comparison(
     } else {
         strategies.to_vec()
     };
-    // Each strategy's deployment is one trial on the experiment
-    // scheduler. Live sessions share one broker/runtime and measure
-    // real (emulated-clock) rounds, so the pool is pinned to a single
-    // worker and strategies are dispatched one batch at a time — the
-    // same scheduling surface as the sim tier, but a failed deployment
-    // still aborts the comparison before the next strategy pays for a
-    // full testbed run. Each trial is one replicate (a live round
-    // cannot be re-seeded).
-    let sched = TrialScheduler::new(1);
-    let mut outcomes = Vec::with_capacity(names.len());
+    let recorder: Box<dyn Recorder> = match &opts.metrics_path {
+        Some(path) => Box::new(CsvRecorder::create(path)?),
+        None => Box::new(NoopRecorder::new()),
+    };
+    let cfg = ServiceConfig { threads: opts.threads, round_limit: None };
+    let mut svc =
+        CoordinatorService::new(cfg, opts.store.clone(), recorder).with_runtime(runtime);
     for name in &names {
-        crate::log_info!("fig4", "running strategy {name} for {rounds} rounds");
-        let mut batch = sched.run(1, |_| run_strategy(&sc, name, runtime.clone(), time_scale));
-        outcomes.push(batch.pop().expect("one trial per strategy")?);
+        for r in 0..opts.replicates {
+            let session = format!("fig4-{name}-r{r}");
+            let mut spec = SessionSpec::live(&session, name, rounds, sc.clone(), time_scale);
+            spec.seed = Some(replicate_seed(sc.seed, r));
+            spec.dynamics = opts.dynamics.clone();
+            svc.submit(spec)?;
+        }
     }
-    report_fig4(&outcomes, out_dir)?;
+    crate::log_info!(
+        "fig4",
+        "serving {} live sessions ({} strategies x {} replicates, {} rounds each)",
+        names.len() * opts.replicates,
+        names.len(),
+        opts.replicates,
+        rounds
+    );
+    let outcomes = svc.drain()?;
+    for out in &outcomes {
+        if out.phase != Phase::Finished {
+            return Err(anyhow!("session {} stopped in phase {}", out.name, out.phase));
+        }
+    }
+
+    // Replicate 0 of each strategy reproduces the classic Fig-4 rows
+    // (seed-compatible: replicate_seed(s, 0) == s). Outcomes arrive in
+    // submission order — strategy-major, replicate-minor.
+    let rep = opts.replicates;
+    let mut firsts = Vec::with_capacity(names.len());
+    for (i, name) in names.iter().enumerate() {
+        let first = &outcomes[i * rep];
+        firsts.push(StrategyOutcome {
+            name: name.clone(),
+            recorder: recorder_from_trace(name, &first.trace),
+        });
+    }
+    report_fig4(&firsts, out_dir)?;
+    if rep > 1 {
+        println!("\n=== replicated live totals ({rep} independent sessions per strategy) ===");
+        println!("{:<14} {:>4} {:>16} {:>12}", "strategy", "n", "total mean (s)", "+-95% CI");
+        for (i, name) in names.iter().enumerate() {
+            let totals: Vec<f64> = outcomes[i * rep..(i + 1) * rep]
+                .iter()
+                .map(|o| o.trace.iter().map(|t| t.delay_s).sum())
+                .collect();
+            let ci = mean_ci(&totals);
+            println!("{:<14} {:>4} {:>16.2} {:>12.2}", name, ci.n, ci.mean, ci.half_width);
+        }
+    }
     Ok(())
+}
+
+/// Rebuild a [`RoundRecorder`] from a persisted session trace so the
+/// service path feeds the exact same Fig-4 reporting as the direct
+/// [`run_strategy`] path.
+fn recorder_from_trace(strategy: &str, trace: &[crate::service::TraceRow]) -> RoundRecorder {
+    let mut rec = RoundRecorder::new();
+    for row in trace {
+        rec.push(RoundRecord {
+            round: row.round,
+            strategy: strategy.to_string(),
+            delay: Duration::from_secs_f64(row.delay_s),
+            loss: row.loss,
+            placement: row.placement.clone(),
+        });
+    }
+    rec
 }
 
 /// Render + persist the comparison (also used by the bench).

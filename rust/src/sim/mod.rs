@@ -12,7 +12,8 @@ mod runner;
 mod trace;
 
 pub use fig4::{
-    report_fig4, run_e2e, run_fig4_comparison, run_strategy, StrategyOutcome, DEFAULT_STRATEGIES,
+    report_fig4, run_e2e, run_fig4_comparison, run_live_comparison, run_strategy,
+    LiveServiceOptions, StrategyOutcome, DEFAULT_STRATEGIES,
 };
 pub use plot::ascii_plot;
 pub use runner::{run_sim, run_sim_in, run_sim_with, SimResult};

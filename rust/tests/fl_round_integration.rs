@@ -43,6 +43,7 @@ fn fast_scenario() -> DeployScenario {
         lr: 0.05,
         pso: PsoConfig::paper(),
         seed: 99,
+        child_timeout_secs: 120.0,
     }
 }
 

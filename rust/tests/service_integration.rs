@@ -1,0 +1,187 @@
+//! Service-tier integration: a killed coordinator resumes every
+//! in-flight session from the `dir` storage backend without re-running
+//! completed rounds, and N concurrent sessions produce exactly the
+//! per-session traces of N sequential runs. Env-backed sessions need no
+//! artifacts; the live multiplexing test requires `make artifacts`
+//! (skips with a notice otherwise).
+
+use repro::configio::{ClientSpec, DeployScenario, DynamicsSpec, SimScenario};
+use repro::pso::PsoConfig;
+use repro::runtime::ModelRuntime;
+use repro::service::{
+    CoordinatorService, DirStore, NoopRecorder, NoopStore, Phase, ServiceConfig, SessionOutcome,
+    SessionSpec, Store,
+};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+fn service(threads: usize, store: Arc<dyn Store>, limit: Option<usize>) -> CoordinatorService {
+    let cfg = ServiceConfig { threads, round_limit: limit };
+    CoordinatorService::new(cfg, store, Box::new(NoopRecorder::new()))
+}
+
+/// A tiny env-backed session: depth-2/width-2 hierarchy, 4 particles.
+fn tiny_spec(name: &str, strategy: &str, rounds: usize, seed: u64) -> SessionSpec {
+    let mut sim = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+    sim.seed = seed;
+    sim.pso.particles = 4;
+    SessionSpec::env(name, strategy, rounds, sim, "analytic")
+}
+
+/// Round/placement/delay triples with the delay at full bit precision.
+fn trace_bits(o: &SessionOutcome) -> Vec<(usize, Vec<usize>, u64)> {
+    o.trace.iter().map(|t| (t.round, t.placement.clone(), t.delay_s.to_bits())).collect()
+}
+
+#[test]
+fn killed_coordinator_resumes_from_the_dir_store_without_rerunning_rounds() {
+    let dir = std::env::temp_dir().join("repro_service_resume_integration");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = || {
+        let mut s = tiny_spec("resume-pso", "pso", 6, 11);
+        // Membership churn makes the resumed RNG replay observable: a
+        // divergence would draw different dropout masks after round 3.
+        s.dynamics = Some(DynamicsSpec { dropout_prob: 0.3, ..DynamicsSpec::default() });
+        s
+    };
+
+    // Reference: the same session run uninterrupted.
+    let reference = {
+        let mut svc = service(1, Arc::new(NoopStore::new()), None);
+        svc.submit(spec()).unwrap();
+        svc.drain().unwrap().pop().unwrap()
+    };
+    assert_eq!(reference.phase, Phase::Finished);
+    assert_eq!(reference.trace.len(), 6);
+
+    // Incarnation 1 executes exactly 3 rounds and is then dropped — the
+    // "kill". All surviving state lives in the dir store.
+    {
+        let store = Arc::new(DirStore::open(&dir).unwrap());
+        let mut svc = service(1, store, Some(3));
+        svc.submit(spec()).unwrap();
+        let paused = svc.drain().unwrap().pop().unwrap();
+        assert_eq!(paused.phase, Phase::Round(3));
+        assert_eq!(paused.trace.len(), 3);
+        assert!(paused.resumed_from.is_none());
+    }
+
+    // Incarnation 2: a fresh service over the same directory resumes at
+    // round 3 and completes the session.
+    let store = Arc::new(DirStore::open(&dir).unwrap());
+    assert_eq!(store.sessions().unwrap(), vec!["resume-pso".to_string()]);
+    let mut svc = service(1, store.clone(), None);
+    svc.submit(spec()).unwrap();
+    let resumed = svc.drain().unwrap().pop().unwrap();
+    assert_eq!(resumed.phase, Phase::Finished);
+    assert_eq!(resumed.resumed_from, Some(3));
+    assert_eq!(resumed.trace.len(), 6);
+
+    // No completed round was re-executed: the second incarnation only
+    // emitted round events for rounds 3..6.
+    let executed: Vec<usize> = resumed
+        .rows
+        .iter()
+        .filter(|r| r.kind == "round")
+        .map(|r| r.round.unwrap())
+        .collect();
+    assert_eq!(executed, vec![3, 4, 5]);
+
+    // The stitched trace (restored rounds + fresh rounds) is
+    // bit-identical to the uninterrupted reference — optimizer state,
+    // RNG streams and dynamics realizations all survived the kill.
+    assert_eq!(trace_bits(&resumed), trace_bits(&reference));
+
+    // The final snapshot on disk is terminal and complete.
+    let snap = store.load("resume-pso").unwrap().unwrap();
+    assert_eq!(snap.phase, "finished");
+    assert_eq!(snap.next_round, 6);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_sessions_match_sequential_single_session_runs() {
+    let strategies = ["pso", "ga", "random", "round-robin"];
+    let spec_for = |i: usize, strategy: &str| {
+        tiny_spec(&format!("s{i}-{strategy}"), strategy, 5, 40 + i as u64)
+    };
+
+    // N sequential runs, each session alone in its own service.
+    let mut sequential = Vec::new();
+    for (i, strategy) in strategies.iter().enumerate() {
+        let mut svc = service(1, Arc::new(NoopStore::new()), None);
+        svc.submit(spec_for(i, strategy)).unwrap();
+        sequential.push(svc.drain().unwrap().pop().unwrap());
+    }
+
+    // One service draining all N sessions over 4 workers.
+    let mut svc = service(4, Arc::new(NoopStore::new()), None);
+    for (i, strategy) in strategies.iter().enumerate() {
+        svc.submit(spec_for(i, strategy)).unwrap();
+    }
+    let parallel = svc.drain().unwrap();
+
+    assert_eq!(parallel.len(), sequential.len());
+    for (seq, par) in sequential.iter().zip(&parallel) {
+        assert_eq!(seq.name, par.name);
+        assert_eq!(par.phase, Phase::Finished, "{}", par.name);
+        assert_eq!(trace_bits(seq), trace_bits(par), "{}", seq.name);
+        // The full event streams (phases, rounds, scores, seq numbers)
+        // are identical too — concurrency is invisible per session.
+        assert_eq!(seq.rows, par.rows, "{}", seq.name);
+    }
+}
+
+fn runtime() -> Option<Arc<ModelRuntime>> {
+    static RT: OnceLock<Option<Arc<ModelRuntime>>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("meta.json").exists() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+        Some(Arc::new(ModelRuntime::load(&dir).expect("load artifacts")))
+    })
+    .clone()
+}
+
+/// Small, fast deploy scenario: 6 full-speed clients, 3 slots.
+fn fast_deploy() -> DeployScenario {
+    let clients = (0..6)
+        .map(|i| ClientSpec {
+            name: format!("c{i}"),
+            speed_factor: 1.0,
+            memory_pressure: 1.0,
+        })
+        .collect();
+    DeployScenario {
+        clients,
+        depth: 2,
+        width: 2,
+        rounds: 2,
+        local_steps: 1,
+        lr: 0.05,
+        pso: PsoConfig::paper(),
+        seed: 99,
+        child_timeout_secs: 120.0,
+    }
+}
+
+#[test]
+fn two_concurrent_live_sessions_multiplex_over_one_broker() {
+    let Some(rt) = runtime() else { return };
+    let mut svc = service(2, Arc::new(NoopStore::new()), None).with_runtime(rt);
+    for strategy in ["pso", "round-robin"] {
+        let name = format!("live-{strategy}");
+        svc.submit(SessionSpec::live(&name, strategy, 2, fast_deploy(), 0.0)).unwrap();
+    }
+    let outcomes = svc.drain().unwrap();
+    assert_eq!(outcomes.len(), 2);
+    for out in &outcomes {
+        assert_eq!(out.phase, Phase::Finished, "{}", out.name);
+        assert_eq!(out.trace.len(), 2, "{}", out.name);
+        // Real rounds: positive wall-clock delays, finite losses.
+        assert!(out.trace.iter().all(|t| t.delay_s > 0.0 && t.delay_s < 120.0), "{}", out.name);
+        assert!(out.trace.iter().all(|t| t.loss.is_finite()), "{}", out.name);
+    }
+}

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_eval.json run against the committed baseline.
+
+Warn-only perf gate (ROADMAP item 5, first cut): prints a per-case
+evals/sec comparison and emits a GitHub Actions annotation for every
+case slower than the baseline by more than --threshold (default 25%).
+The exit code is 0 unless an input file is missing or malformed — a
+regression warns, it does not fail the build.
+
+The committed baseline may carry "provisional": true, meaning its
+numbers were not measured on the CI hardware class yet. Deltas against
+a provisional baseline are reported as notices instead of warnings;
+refresh it with:
+
+    cargo run --release -- bench --suite eval --out BENCH_baseline_ci.json
+    # then strip nothing — the artifact is committed as-is
+
+Usage: bench_compare.py CURRENT.json BASELINE.json [--threshold 0.25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_compare: cannot read {path}: {e}")
+    if doc.get("suite") != "eval" or not isinstance(doc.get("results"), list):
+        sys.exit(f"bench_compare: {path} is not a BENCH eval document")
+    by_case = {}
+    for r in doc["results"]:
+        case, eps = r.get("case"), r.get("evals_per_sec")
+        if not isinstance(case, str) or not isinstance(eps, (int, float)) or eps <= 0:
+            sys.exit(f"bench_compare: {path}: malformed result entry {r!r}")
+        by_case[case] = float(eps)
+    if not by_case:
+        sys.exit(f"bench_compare: {path} has no results")
+    return doc, by_case
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative evals/sec drop that triggers a warning")
+    opts = ap.parse_args()
+
+    _, current = load_results(opts.current)
+    base_doc, baseline = load_results(opts.baseline)
+    provisional = bool(base_doc.get("provisional"))
+    annotate = "::notice::" if provisional else "::warning::"
+
+    if provisional:
+        print("note: the baseline is PROVISIONAL (not measured on this "
+              "hardware class); deltas below are informational only")
+
+    regressions = 0
+    print(f"{'case':<28} {'baseline/s':>14} {'current/s':>14} {'delta':>8}")
+    for case in sorted(baseline):
+        if case not in current:
+            print(f"{annotate}bench case {case} missing from {opts.current}")
+            continue
+        base, cur = baseline[case], current[case]
+        delta = cur / base - 1.0
+        flag = ""
+        if delta < -opts.threshold:
+            regressions += 1
+            flag = "  <-- regression"
+            print(f"{annotate}{case}: evals/sec fell {-delta:.0%} "
+                  f"({base:.3g} -> {cur:.3g}, threshold {opts.threshold:.0%})")
+        print(f"{case:<28} {base:>14.3g} {cur:>14.3g} {delta:>+7.1%}{flag}")
+    for case in sorted(set(current) - set(baseline)):
+        print(f"note: new case {case} not in baseline ({current[case]:.3g}/s)")
+
+    if regressions:
+        kind = "notice(s)" if provisional else "warning(s)"
+        print(f"bench_compare: {regressions} case(s) past the "
+              f"{opts.threshold:.0%} threshold ({kind} emitted, exit 0)")
+    else:
+        print("bench_compare: no case past the threshold")
+
+
+if __name__ == "__main__":
+    main()
