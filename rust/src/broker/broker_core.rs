@@ -51,7 +51,14 @@ impl Broker {
     /// Publish on behalf of a client (validates the topic).
     pub fn publish(&self, msg: Message) -> Result<usize, String> {
         validate_topic(&msg.topic)?;
-        Ok(self.inner.router.lock().unwrap().publish(&msg))
+        crate::obs::defs::BROKER_MSGS_IN.inc();
+        crate::obs::defs::BROKER_BYTES_IN.add(msg.payload.len() as u64);
+        let delivered = self.inner.router.lock().unwrap().publish(&msg);
+        if delivered > 0 {
+            crate::obs::defs::BROKER_MSGS_OUT.add(delivered as u64);
+            crate::obs::defs::BROKER_BYTES_OUT.add((delivered * msg.payload.len()) as u64);
+        }
+        Ok(delivered)
     }
 
     pub(super) fn subscribe(

@@ -47,6 +47,10 @@ pub struct EventQueue<E> {
     seq: u64,
     now: f64,
     processed: u64,
+    /// Largest heap length seen since construction (survives `reset` —
+    /// it tracks the queue's lifetime, not one round). Plain field: the
+    /// caller flushes it into the obs gauge off the hot path.
+    high_water: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -62,6 +66,7 @@ impl<E> EventQueue<E> {
             seq: 0,
             now: 0.0,
             processed: 0,
+            high_water: 0,
         }
     }
 
@@ -87,6 +92,11 @@ impl<E> EventQueue<E> {
         self.processed
     }
 
+    /// Largest heap length observed over the queue's lifetime.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -106,6 +116,9 @@ impl<E> EventQueue<E> {
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Entry { time: at, seq, ev });
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
     }
 
     /// Schedule `ev` after a non-negative virtual delay.
@@ -185,6 +198,22 @@ mod tests {
         q.schedule_at(1.0, 11);
         assert_eq!(q.pop(), Some((1.0, 10)));
         assert_eq!(q.pop(), Some((1.0, 11)));
+    }
+
+    #[test]
+    fn high_water_tracks_lifetime_peak() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(i as f64, i);
+        }
+        assert_eq!(q.high_water(), 10);
+        while q.pop().is_some() {}
+        assert_eq!(q.high_water(), 10);
+        // reset keeps the lifetime peak (gauge semantics).
+        q.reset();
+        assert_eq!(q.high_water(), 10);
+        q.schedule_at(0.0, 0);
+        assert_eq!(q.high_water(), 10);
     }
 
     #[test]

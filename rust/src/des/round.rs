@@ -274,6 +274,11 @@ pub struct RoundScratch {
 }
 
 impl RoundScratch {
+    /// Lifetime peak of the reusable event heap (obs gauge feed).
+    pub fn heap_high_water(&self) -> usize {
+        self.queue.high_water()
+    }
+
     pub fn new(spec: HierarchySpec, client_count: usize) -> RoundScratch {
         let view = EvalScratch::new(spec, client_count);
         let dims = view.dims();
@@ -433,6 +438,8 @@ pub struct EventDrivenEnv {
     pub rounds_simulated: usize,
     /// Total events fired across all simulated rounds.
     pub events_fired: u64,
+    /// Portion of `events_fired` already flushed to the obs counters.
+    events_reported: u64,
 }
 
 impl EventDrivenEnv {
@@ -461,6 +468,7 @@ impl EventDrivenEnv {
             scratch,
             rounds_simulated: 0,
             events_fired: 0,
+            events_reported: 0,
         }
     }
 
@@ -527,6 +535,12 @@ impl EventDrivenEnv {
         // batch-to-batch dynamics evolution allocates nothing.
         self.dynamics.next_round_into(self.attrs.len(), &mut self.realization);
         self.rounds_simulated += 1;
+        // Flush telemetry once per batch dispatch, never per candidate:
+        // three relaxed atomics and no allocation (alloc-guard-pinned).
+        crate::obs::defs::DES_ROUNDS.inc();
+        crate::obs::defs::DES_EVENTS.add(self.events_fired - self.events_reported);
+        self.events_reported = self.events_fired;
+        crate::obs::defs::DES_HEAP_HIGH_WATER.set_max(self.scratch.heap_high_water() as i64);
     }
 }
 

@@ -5,8 +5,25 @@
 //! is independent of the thread count and of which worker ran which
 //! job.
 
+use crate::obs::defs as obs;
+use crate::obs::WallSpan;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
+
+/// Telemetry around one claimed job: queue-wait histogram at claim
+/// time, busy-time counter + done counter after the trial, and (when
+/// `--trace-out` is active) one wall span on the worker's trace lane.
+#[inline]
+fn observed<T>(pool_start: Instant, worker: u32, f: impl FnOnce() -> T) -> T {
+    obs::EXP_QUEUE_WAIT.observe(pool_start.elapsed().as_secs_f64());
+    let _span = WallSpan::start("trial", "exp", worker);
+    let started = Instant::now();
+    let out = f();
+    obs::EXP_WORKER_BUSY_US.add(started.elapsed().as_micros() as u64);
+    obs::EXP_JOBS_DONE.inc();
+    out
+}
 
 /// A deterministic fan-out executor over OS threads.
 #[derive(Debug, Clone, Copy)]
@@ -42,20 +59,23 @@ impl TrialScheduler {
         if jobs == 0 {
             return Vec::new();
         }
+        obs::EXP_JOBS_QUEUED.add(jobs as u64);
+        let pool_start = Instant::now();
         let threads = self.resolve(jobs);
         if threads <= 1 {
-            return (0..jobs).map(trial).collect();
+            return (0..jobs).map(|j| observed(pool_start, 0, || trial(j))).collect();
         }
         let next = AtomicUsize::new(0);
         let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..jobs).map(|_| None).collect());
         std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
+            for w in 0..threads as u32 {
+                let (next, slots, trial) = (&next, &slots, &trial);
+                scope.spawn(move || loop {
                     let j = next.fetch_add(1, Ordering::Relaxed);
                     if j >= jobs {
                         break;
                     }
-                    let out = trial(j);
+                    let out = observed(pool_start, w, || trial(j));
                     slots.lock().expect("trial scheduler slots lock")[j] = Some(out);
                 });
             }
@@ -82,16 +102,23 @@ impl TrialScheduler {
         if n == 0 {
             return Vec::new();
         }
+        obs::EXP_JOBS_QUEUED.add(n as u64);
+        let pool_start = Instant::now();
         let threads = self.resolve(n);
         if threads <= 1 {
-            return jobs.into_iter().enumerate().map(|(i, job)| trial(i, job)).collect();
+            return jobs
+                .into_iter()
+                .enumerate()
+                .map(|(i, job)| observed(pool_start, 0, || trial(i, job)))
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let input: Mutex<Vec<Option<J>>> = Mutex::new(jobs.into_iter().map(Some).collect());
         let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
         std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
+            for w in 0..threads as u32 {
+                let (next, input, slots, trial) = (&next, &input, &slots, &trial);
+                scope.spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
@@ -99,7 +126,7 @@ impl TrialScheduler {
                     let job = input.lock().expect("consuming scheduler input lock")[i]
                         .take()
                         .expect("each job is claimed exactly once");
-                    let out = trial(i, job);
+                    let out = observed(pool_start, w, || trial(i, job));
                     slots.lock().expect("consuming scheduler slots lock")[i] = Some(out);
                 });
             }

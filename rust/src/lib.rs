@@ -25,7 +25,9 @@
 //! The offline build image lacks tokio/serde/clap/criterion/rand/proptest,
 //! so their narrow slices are built from scratch here: [`prng`], [`json`],
 //! [`configio`], [`metrics`], [`logging`], [`bench`] and [`proplite`]
-//! (see DESIGN.md §4).
+//! (see DESIGN.md §4). Runtime telemetry — lock-free counters and
+//! histograms, wall/virtual-clock span tracing, a `/metrics` endpoint on
+//! `repro serve` — lives in [`obs`].
 
 pub mod bench;
 pub mod broker;
@@ -39,6 +41,7 @@ pub mod hierarchy;
 pub mod json;
 pub mod logging;
 pub mod metrics;
+pub mod obs;
 pub mod placement;
 pub mod prng;
 pub mod proplite;

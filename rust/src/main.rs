@@ -10,7 +10,14 @@
 //! repro bench      --suite eval [--samples N --warmup N --batch N --out BENCH_eval.json]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
+//! repro obs dump   [--addr HOST:PORT]            # metric snapshot (local or scraped)
 //! ```
+//!
+//! Global observability flags (any subcommand): `--log-level LEVEL`
+//! (overrides `REPRO_LOG`), `--trace-out trace.json` (Chrome
+//! trace-event export, Perfetto-viewable), `--obs-dump` (print the
+//! metric snapshot at exit). `repro serve --metrics-addr HOST:PORT`
+//! additionally serves Prometheus text format at `GET /metrics`.
 
 use anyhow::{anyhow, Context, Result};
 use repro::configio::{Args, DynamicsSpec, SimScenario};
@@ -28,7 +35,8 @@ use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::parse_env().map_err(|e| anyhow!(e))?;
-    match args.subcommand.as_deref() {
+    init_observability(&args)?;
+    let result = match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(&args),
         Some("fig3") => cmd_fig3(&args),
         Some("fleet") => cmd_fleet(&args),
@@ -39,6 +47,7 @@ fn main() -> Result<()> {
         Some("e2e") => cmd_e2e(&args),
         Some("broker") => cmd_broker(&args),
         Some("worker") => cmd_worker(&args),
+        Some("obs") => cmd_obs(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown subcommand {cmd:?}\n");
@@ -78,6 +87,16 @@ fn main() -> Result<()> {
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
                  worker   one FL client process attached to a TCP broker\n\
+                 obs      telemetry snapshot; `obs dump` prints every metric\n\
+                 \x20        (--addr HOST:PORT scrapes a live `serve --metrics-addr`\n\
+                 \x20        endpoint instead of dumping this process)\n\
+                 \n\
+                 global observability flags (any subcommand):\n\
+                 \x20 --log-level error|warn|info|debug|trace   overrides REPRO_LOG\n\
+                 \x20 --trace-out trace.json   record spans, write Chrome trace JSON at exit\n\
+                 \x20 --obs-dump               print the metric snapshot at exit\n\
+                 \x20 (serve only: --metrics-addr HOST:PORT serves Prometheus text at\n\
+                 \x20  GET /metrics; --linger SECS keeps it up after the drain for scrapes)\n\
                  \n\
                  choosing a strategy (--strategy / --strategies):\n\
                  \x20 pso           the paper's Flag-Swap PSO (default; in sim: exact Algorithm 1)\n\
@@ -103,7 +122,67 @@ fn main() -> Result<()> {
             );
             std::process::exit(2);
         }
+    };
+    // Write trace/dump artifacts even when the subcommand failed; a
+    // command error still outranks an artifact-write error.
+    let finish = finish_observability(&args);
+    result.and(finish)
+}
+
+/// Apply the global observability flags before dispatch: `--log-level`
+/// overrides `REPRO_LOG`, `--trace-out` arms span recording.
+fn init_observability(args: &Args) -> Result<()> {
+    if let Some(level) = args.flag("log-level") {
+        let parsed = repro::logging::Level::parse(level).ok_or_else(|| {
+            anyhow!("--log-level: expected error|warn|info|debug|trace, got {level:?}")
+        })?;
+        repro::logging::set_level(parsed);
     }
+    if args.flag("trace-out").is_some() {
+        repro::obs::set_tracing(true);
+    }
+    Ok(())
+}
+
+/// Emit the deferred observability artifacts after the subcommand ran
+/// (whether it succeeded or not): the Chrome trace file and/or the
+/// metric dump.
+fn finish_observability(args: &Args) -> Result<()> {
+    if let Some(path) = args.flag("trace-out") {
+        let spans = repro::obs::write_chrome_trace(std::path::Path::new(path))
+            .with_context(|| format!("--trace-out {path}"))?;
+        let dropped = repro::obs::dropped_spans();
+        eprintln!(
+            "trace: {spans} span(s) -> {path} ({dropped} dropped; open in ui.perfetto.dev)"
+        );
+    }
+    if args.bool_flag("obs-dump") {
+        repro::obs::register_builtin();
+        print!("{}", repro::obs::render_dump(&repro::obs::snapshot()));
+    }
+    Ok(())
+}
+
+/// `repro obs dump [--addr HOST:PORT]` — print every metric family.
+/// With `--addr`, scrape a live `serve --metrics-addr` endpoint and
+/// print the Prometheus exposition verbatim; without it, dump this
+/// process's own registry in the human-readable format.
+fn cmd_obs(args: &Args) -> Result<()> {
+    let verb = args.positional.first().map(|s| s.as_str()).unwrap_or("dump");
+    if verb != "dump" {
+        return Err(anyhow!("unknown obs subcommand {verb:?}; available: dump"));
+    }
+    match args.flag("addr") {
+        Some(addr) => {
+            let body = repro::obs::scrape(addr).with_context(|| format!("scrape {addr}"))?;
+            print!("{body}");
+        }
+        None => {
+            repro::obs::register_builtin();
+            print!("{}", repro::obs::render_dump(&repro::obs::snapshot()));
+        }
+    }
+    Ok(())
 }
 
 fn scenario_from_args(args: &Args) -> Result<SimScenario> {
@@ -369,6 +448,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(path) => Box::new(CsvRecorder::create(std::path::Path::new(path))?),
         None => Box::new(NoopRecorder::new()),
     };
+    // `--metrics-addr HOST:PORT` serves Prometheus text format at
+    // GET /metrics for the whole drain (and the optional --linger tail,
+    // so CI and `repro obs dump --addr` can scrape a finished run).
+    let metrics_server = match args.flag("metrics-addr") {
+        Some(addr) => {
+            let server = repro::obs::MetricsServer::start(addr)
+                .with_context(|| format!("--metrics-addr {addr}"))?;
+            println!("metrics: http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    let linger = args.f64_flag("linger", 0.0).map_err(|e| anyhow!(e))?;
+
     let cfg = ServiceConfig { threads, round_limit };
     let mut svc = CoordinatorService::new(cfg, store.clone(), recorder);
 
@@ -452,6 +545,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "{paused} session(s) paused by --round-limit; rerun with the same --store to resume"
         );
     }
+    if let Some(server) = &metrics_server {
+        if linger > 0.0 {
+            println!("metrics: lingering {linger}s at http://{}/metrics", server.addr());
+            std::thread::sleep(std::time::Duration::from_secs_f64(linger));
+        }
+    }
+    drop(metrics_server);
     if failed > 0 {
         return Err(anyhow!("{failed} of {} session(s) failed", outcomes.len()));
     }

@@ -1,0 +1,222 @@
+//! Built-in metric definitions — the single place every `repro_*`
+//! family is named, helped, and force-registered.
+//!
+//! Metrics self-register on first mutation, which is enough for
+//! correctness but makes exposition depend on which code paths ran.
+//! [`register_builtin`] pins the full set so `/metrics` and
+//! `repro obs dump` always show every family (zero-valued when
+//! untouched) in a deterministic order. Keep this table in sync with
+//! the README "Observability" reference table.
+
+use crate::metric;
+
+// --- placement: optimizer drive loop + analytic TPD oracle ----------------
+
+metric!(
+    counter pub PLACEMENT_EVALS,
+    "repro_placement_evals_total",
+    "Placement evaluations scored, all oracles and strategies"
+);
+metric!(
+    counter pub PLACEMENT_CACHE_HITS,
+    "repro_placement_cache_hits_total",
+    "Analytic evals answered from the incumbent scratch total (Diff::Same)"
+);
+metric!(
+    counter pub PLACEMENT_DELTA_EVALS,
+    "repro_placement_delta_evals_total",
+    "Analytic evals scored via replace/swap delta fast paths"
+);
+metric!(
+    counter pub PLACEMENT_FULL_EVALS,
+    "repro_placement_full_evals_total",
+    "Analytic evals requiring a full TPD recomputation"
+);
+metric!(
+    counter pub DRIVE_BATCHES,
+    "repro_drive_batches_total",
+    "Optimizer propose/observe batches executed by placement::drive"
+);
+metric!(
+    counter pub DRIVE_RUNS,
+    "repro_drive_runs_total",
+    "placement::drive optimization runs completed"
+);
+
+// --- des: virtual-time event core ----------------------------------------
+
+metric!(
+    counter pub DES_EVENTS,
+    "repro_des_events_total",
+    "Discrete events popped by the DES engine across all simulations"
+);
+metric!(
+    counter pub DES_ROUNDS,
+    "repro_des_rounds_total",
+    "Virtual FL rounds simulated by the DES tier"
+);
+metric!(
+    gauge pub DES_HEAP_HIGH_WATER,
+    "repro_des_heap_high_water",
+    "Largest DES event-heap length observed (high-water mark)"
+);
+
+// --- exp: trial scheduler pool -------------------------------------------
+
+metric!(
+    counter pub EXP_JOBS_QUEUED,
+    "repro_exp_jobs_queued_total",
+    "Trial jobs submitted to the exp scheduler pool"
+);
+metric!(
+    counter pub EXP_JOBS_DONE,
+    "repro_exp_jobs_done_total",
+    "Trial jobs completed by the exp scheduler pool"
+);
+metric!(
+    counter pub EXP_WORKER_BUSY_US,
+    "repro_exp_worker_busy_us_total",
+    "Cumulative wall microseconds scheduler workers spent running jobs"
+);
+metric!(
+    histogram pub EXP_QUEUE_WAIT,
+    "repro_exp_queue_wait_seconds",
+    "Wall seconds between pool start and a worker claiming each job"
+);
+
+// --- service: coordinator session tier -----------------------------------
+
+metric!(
+    counter pub SERVICE_PHASE_TRANSITIONS,
+    "repro_service_phase_transitions_total",
+    "Session state-machine phase transitions"
+);
+metric!(
+    counter pub SERVICE_RETRIES,
+    "repro_service_retries_total",
+    "Round retries spent across all sessions"
+);
+metric!(
+    counter pub SERVICE_HEARTBEAT_MISSES,
+    "repro_service_heartbeat_misses_total",
+    "Clients dropped from quorum for missing the heartbeat grace window"
+);
+metric!(
+    counter pub SERVICE_SESSIONS_FINISHED,
+    "repro_service_sessions_finished_total",
+    "Coordinator sessions that reached Finished"
+);
+metric!(
+    counter pub SERVICE_SESSIONS_FAILED,
+    "repro_service_sessions_failed_total",
+    "Coordinator sessions that reached Failed"
+);
+metric!(
+    histogram_vec pub SERVICE_ROUND_DELAY,
+    "repro_service_round_delay_seconds",
+    "Per-round TPD in virtual seconds (the paper's Eq. 6-7 objective)",
+    "strategy"
+);
+metric!(
+    histogram pub STORE_SAVE,
+    "repro_store_save_seconds",
+    "Wall seconds per session snapshot save"
+);
+metric!(
+    histogram pub STORE_LOAD,
+    "repro_store_load_seconds",
+    "Wall seconds per session snapshot load"
+);
+
+// --- broker: pub/sub plane ------------------------------------------------
+
+metric!(
+    counter pub BROKER_MSGS_IN,
+    "repro_broker_messages_in_total",
+    "Messages published into the broker"
+);
+metric!(
+    counter pub BROKER_BYTES_IN,
+    "repro_broker_bytes_in_total",
+    "Payload bytes published into the broker"
+);
+metric!(
+    counter pub BROKER_MSGS_OUT,
+    "repro_broker_messages_out_total",
+    "Messages delivered to broker subscribers"
+);
+metric!(
+    counter pub BROKER_BYTES_OUT,
+    "repro_broker_bytes_out_total",
+    "Payload bytes delivered to broker subscribers"
+);
+
+// --- obs: the telemetry layer itself -------------------------------------
+
+metric!(
+    counter pub SPANS_DROPPED,
+    "repro_obs_spans_dropped_total",
+    "Trace spans evicted from the bounded ring buffer"
+);
+
+/// Force-register every built-in family so exposition is complete and
+/// deterministic regardless of which code paths have run. Idempotent.
+pub fn register_builtin() {
+    PLACEMENT_EVALS.register();
+    PLACEMENT_CACHE_HITS.register();
+    PLACEMENT_DELTA_EVALS.register();
+    PLACEMENT_FULL_EVALS.register();
+    DRIVE_BATCHES.register();
+    DRIVE_RUNS.register();
+    DES_EVENTS.register();
+    DES_ROUNDS.register();
+    DES_HEAP_HIGH_WATER.register();
+    EXP_JOBS_QUEUED.register();
+    EXP_JOBS_DONE.register();
+    EXP_WORKER_BUSY_US.register();
+    EXP_QUEUE_WAIT.register();
+    SERVICE_PHASE_TRANSITIONS.register();
+    SERVICE_RETRIES.register();
+    SERVICE_HEARTBEAT_MISSES.register();
+    SERVICE_SESSIONS_FINISHED.register();
+    SERVICE_SESSIONS_FAILED.register();
+    SERVICE_ROUND_DELAY.register();
+    STORE_SAVE.register();
+    STORE_LOAD.register();
+    BROKER_MSGS_IN.register();
+    BROKER_BYTES_IN.register();
+    BROKER_MSGS_OUT.register();
+    BROKER_BYTES_OUT.register();
+    SPANS_DROPPED.register();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_families_are_complete() {
+        register_builtin();
+        register_builtin(); // idempotent
+        let names: Vec<&str> = crate::obs::snapshot()
+            .iter()
+            .map(|f| f.name)
+            .filter(|n| n.starts_with("repro_"))
+            .collect();
+        assert!(names.len() >= 10, "only {} builtin families", names.len());
+        // No duplicate registrations.
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names, dedup);
+        // Everything follows the exposition naming conventions.
+        for n in &names {
+            assert!(
+                n.ends_with("_total")
+                    || n.ends_with("_seconds")
+                    || n.ends_with("_us_total")
+                    || n.ends_with("_high_water"),
+                "unconventional metric name {n}"
+            );
+        }
+    }
+}

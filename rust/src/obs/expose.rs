@@ -1,0 +1,313 @@
+//! Metric exposition: Prometheus text rendering, the `/metrics` HTTP
+//! listener that rides `repro serve`, and a human-oriented dump.
+//!
+//! The listener reuses the `broker::tcp` plumbing pattern — a
+//! nonblocking accept loop on its own thread with an `AtomicBool`
+//! stop flag, joined on drop — because the offline image has no
+//! hyper/tokio. It speaks just enough HTTP/1.1 for a scraper:
+//! `GET /metrics` → `200 text/plain; version=0.0.4`, anything else →
+//! `404`, connection closed per request.
+
+use super::registry::{self, bucket_bound, FamilySnapshot, FamilyValue, HistogramSnapshot};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn format_f64(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        // Integral values render without an exponent ("3" not "3e0").
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_histogram(
+    out: &mut String,
+    name: &str,
+    extra_label: Option<(&str, &str)>,
+    snap: &HistogramSnapshot,
+) {
+    let prefix = |le: &str| match extra_label {
+        Some((k, v)) => format!("{name}_bucket{{{k}=\"{v}\",le=\"{le}\"}}"),
+        None => format!("{name}_bucket{{le=\"{le}\"}}"),
+    };
+    let mut cum = 0u64;
+    for (i, n) in snap.buckets.iter().enumerate() {
+        cum += n;
+        // Elide interior empty buckets: scrape stays ≤ a handful of
+        // lines per family while cumulative counts remain exact.
+        if *n == 0 && i + 1 < snap.buckets.len() {
+            continue;
+        }
+        let _ = writeln!(out, "{} {}", prefix(&format_f64(bucket_bound(i))), cum);
+    }
+    let suffix = match extra_label {
+        Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+        None => String::new(),
+    };
+    let _ = writeln!(out, "{name}_sum{suffix} {}", format_f64(snap.sum));
+    let _ = writeln!(out, "{name}_count{suffix} {cum}");
+}
+
+/// Render a snapshot in Prometheus text exposition format 0.0.4.
+pub fn render_prometheus(families: &[FamilySnapshot]) -> String {
+    let mut out = String::with_capacity(families.len() * 160);
+    for f in families {
+        let kind = match &f.value {
+            FamilyValue::Counter(_) => "counter",
+            FamilyValue::Gauge(_) => "gauge",
+            FamilyValue::Histogram(_) | FamilyValue::HistogramVec(..) => "histogram",
+        };
+        let _ = writeln!(out, "# HELP {} {}", f.name, f.help);
+        let _ = writeln!(out, "# TYPE {} {}", f.name, kind);
+        match &f.value {
+            FamilyValue::Counter(v) => {
+                let _ = writeln!(out, "{} {}", f.name, v);
+            }
+            FamilyValue::Gauge(v) => {
+                let _ = writeln!(out, "{} {}", f.name, v);
+            }
+            FamilyValue::Histogram(h) => render_histogram(&mut out, f.name, None, h),
+            FamilyValue::HistogramVec(label_key, children) => {
+                if children.is_empty() {
+                    // Keep the family visible (HELP/TYPE only).
+                    continue;
+                }
+                for (label, h) in children {
+                    render_histogram(&mut out, f.name, Some((label_key, label)), h);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot for humans (`repro obs dump`): counters/gauges as
+/// `name = value`, histograms as count/p50/p90/p99/max.
+pub fn render_dump(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    let hist_line = |out: &mut String, name: &str, suffix: &str, h: &HistogramSnapshot| {
+        let q = |p: f64| h.quantile(p).map(|v| format!("{v:.6}")).unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            out,
+            "{name}{suffix}  count={} sum={:.6} p50={} p90={} p99={} max={:.6}",
+            h.count(),
+            h.sum,
+            q(0.5),
+            q(0.9),
+            q(0.99),
+            h.max,
+        );
+    };
+    for f in families {
+        match &f.value {
+            FamilyValue::Counter(v) => {
+                let _ = writeln!(out, "{} = {}", f.name, v);
+            }
+            FamilyValue::Gauge(v) => {
+                let _ = writeln!(out, "{} = {}", f.name, v);
+            }
+            FamilyValue::Histogram(h) => hist_line(&mut out, f.name, "", h),
+            FamilyValue::HistogramVec(key, children) => {
+                if children.is_empty() {
+                    let _ = writeln!(out, "{}  (no series yet)", f.name);
+                }
+                for (label, h) in children {
+                    hist_line(&mut out, f.name, &format!("{{{key}=\"{label}\"}}"), h);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Minimal `/metrics` HTTP responder on a background accept thread.
+pub struct MetricsServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9898`, port 0 for tests) and start
+    /// answering `GET /metrics` with a fresh registry snapshot.
+    pub fn start(addr: &str) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Scrapes are tiny; answer inline so one slow
+                        // client can't pile up threads.
+                        let _ = serve_request(stream);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// Bound address (use with port 0 for tests).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_request(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    // Read until the header terminator (or the 4 KiB cap — scrape
+    // requests are one line plus a couple of headers).
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 4096 {
+            break;
+        }
+    }
+    let request_line = std::str::from_utf8(&buf)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, content_type, body) = if method == "GET"
+        && (path == "/metrics" || path == "/metrics/")
+    {
+        super::defs::register_builtin();
+        let body = render_prometheus(&registry::snapshot());
+        ("200 OK", "text/plain; version=0.0.4; charset=utf-8", body)
+    } else {
+        ("404 Not Found", "text/plain; charset=utf-8", "not found: scrape GET /metrics\n".into())
+    };
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// One-shot scrape of a running `/metrics` endpoint (`repro obs dump
+/// --addr`). Returns the response body.
+pub fn scrape(addr: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.write_all(
+        format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let Some((head, body)) = response.split_once("\r\n\r\n") else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "malformed HTTP response",
+        ));
+    };
+    if !head.starts_with("HTTP/1.1 200") && !head.starts_with("HTTP/1.0 200") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("scrape failed: {}", head.lines().next().unwrap_or("?")),
+        ));
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metric;
+
+    #[test]
+    fn prometheus_rendering_shapes() {
+        metric!(counter C, "test_expose_counter_total", "counts things");
+        metric!(histogram H, "test_expose_hist_seconds", "times things");
+        C.add(3);
+        H.observe(0.02);
+        H.observe(0.5);
+        let text = render_prometheus(&registry::snapshot());
+        assert!(text.contains("# HELP test_expose_counter_total counts things"));
+        assert!(text.contains("# TYPE test_expose_counter_total counter"));
+        assert!(text.contains("test_expose_counter_total 3"));
+        assert!(text.contains("# TYPE test_expose_hist_seconds histogram"));
+        assert!(text.contains("test_expose_hist_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("test_expose_hist_seconds_count 2"));
+        // Cumulative buckets are monotone.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("test_expose_hist_seconds_bucket")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last);
+            last = n;
+        }
+    }
+
+    #[test]
+    fn http_listener_serves_metrics() {
+        metric!(counter C, "test_expose_http_total", "t");
+        C.inc();
+        let server = MetricsServer::start("127.0.0.1:0").unwrap();
+        let body = scrape(&server.addr().to_string()).unwrap();
+        assert!(body.contains("test_expose_http_total 1"));
+        // Built-ins are force-registered by the handler: ≥ 10 families.
+        let families = body.lines().filter(|l| l.starts_with("# TYPE")).count();
+        assert!(families >= 10, "only {families} families in scrape");
+        assert!(body.contains("_bucket{le="), "no histogram in scrape");
+        // Non-/metrics paths 404 without killing the listener.
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"));
+        assert!(scrape(&server.addr().to_string()).is_ok());
+    }
+
+    #[test]
+    fn dump_renders_quantiles() {
+        metric!(histogram H, "test_expose_dump_seconds", "t");
+        for _ in 0..10 {
+            H.observe(0.1);
+        }
+        let text = render_dump(&registry::snapshot());
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("test_expose_dump_seconds"))
+            .expect("histogram line");
+        assert!(line.contains("count=10"));
+        assert!(line.contains("p50="));
+        assert!(line.contains("max=0.100000"));
+    }
+}

@@ -1,0 +1,43 @@
+//! Runtime telemetry: zero-cost counters/histograms, two-clock span
+//! tracing, and Prometheus/Chrome-trace exposition.
+//!
+//! The paper argues aggregation placement should work *without*
+//! exchanging systematic monitoring data between nodes; this module
+//! inverts that constraint into a design rule for the repro itself —
+//! telemetry must cost ~nothing and perturb nothing:
+//!
+//! * **Metrics** ([`registry`], [`defs`]) — static atomic counters,
+//!   gauges and 64-bucket log-linear histograms declared with the
+//!   [`crate::metric!`] macro. Mutation is a relaxed RMW; snapshots
+//!   never stop writers; nothing on the `eval_batch` hot path
+//!   allocates (enforced by `tests/alloc_guard.rs`), touches an RNG
+//!   stream, or alters any frozen CSV byte (enforced by
+//!   `tests/obs_neutrality.rs`).
+//! * **Spans** ([`spans`]) — bounded-ring trace events in two clock
+//!   domains: wall time for live/service paths, **virtual time** (the
+//!   DES clock that Eq. 6–7 TPD terms are measured in) for simulated
+//!   rounds. `--trace-out trace.json` exports Chrome trace-event JSON
+//!   viewable in Perfetto. Disabled-path cost: one relaxed load.
+//! * **Exposition** ([`expose`]) — `GET /metrics` in Prometheus text
+//!   format on a listener thread inside `repro serve`
+//!   (`--metrics-addr`), and `repro obs dump` / `--obs-dump` for a
+//!   human-readable snapshot (count/p50/p90/p99/max per histogram).
+//!
+//! See the README "Observability" section for the metric reference
+//! table and a Perfetto walkthrough.
+
+pub mod defs;
+pub mod expose;
+pub mod registry;
+pub mod spans;
+
+pub use defs::register_builtin;
+pub use expose::{render_dump, render_prometheus, scrape, MetricsServer};
+pub use registry::{
+    bucket_bound, bucket_of, snapshot, Counter, FamilySnapshot, FamilyValue, Gauge, Histogram,
+    HistogramSnapshot, HistogramVec, Metric, HIST_BUCKETS,
+};
+pub use spans::{
+    collect_spans, dropped_spans, record_virtual, render_chrome_trace, reset_spans, set_tracing,
+    tracing_enabled, write_chrome_trace, ClockDomain, SpanRec, WallSpan, SPAN_CAPACITY,
+};

@@ -1,0 +1,623 @@
+//! Lock-free metric primitives + the process-wide registry.
+//!
+//! Counters, gauges and log-linear histograms are plain statics built
+//! from atomics: mutation is one relaxed RMW (plus one relaxed load of
+//! the `registered` flag), so the hot path never locks, never
+//! allocates, and never syscalls. The first mutation of a metric
+//! self-registers it into the global registry (cold path, once);
+//! [`crate::obs::defs::register_builtin`] additionally force-registers
+//! every built-in so exposition is complete and deterministic even for
+//! metrics nothing has touched yet.
+//!
+//! Snapshots ([`snapshot`]) read every atomic with relaxed loads while
+//! writers keep writing — values are per-cell consistent, not a global
+//! cut, which is the standard contract for monitoring counters.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One registered metric (statics only — registration leaks nothing).
+#[derive(Clone, Copy)]
+pub enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Histogram(&'static Histogram),
+    HistogramVec(&'static HistogramVec),
+}
+
+impl Metric {
+    /// Exposition name of the underlying metric.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Counter(c) => c.name,
+            Metric::Gauge(g) => g.name,
+            Metric::Histogram(h) => h.name,
+            Metric::HistogramVec(v) => v.name,
+        }
+    }
+}
+
+static REGISTRY: Mutex<Vec<Metric>> = Mutex::new(Vec::new());
+
+fn push_registry(m: Metric) {
+    REGISTRY.lock().unwrap().push(m);
+}
+
+/// Monotonic event counter.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+    registered: AtomicBool,
+}
+
+impl Counter {
+    /// Const-construct (use via the [`crate::metric!`] macro).
+    pub const fn new(name: &'static str, help: &'static str) -> Counter {
+        Counter {
+            name,
+            help,
+            value: AtomicU64::new(0),
+            registered: AtomicBool::new(false),
+        }
+    }
+
+    #[inline]
+    fn ensure_registered(&'static self) {
+        if !self.registered.load(Ordering::Relaxed) {
+            self.register_slow();
+        }
+    }
+
+    #[cold]
+    #[inline(never)]
+    fn register_slow(&'static self) {
+        if self
+            .registered
+            .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            push_registry(Metric::Counter(self));
+        }
+    }
+
+    /// Force registration without mutating (exposition completeness).
+    pub fn register(&'static self) {
+        self.ensure_registered();
+    }
+
+    /// Add 1.
+    #[inline]
+    pub fn inc(&'static self) {
+        self.add(1);
+    }
+
+    /// Add `n` (one relaxed fetch-add).
+    #[inline]
+    pub fn add(&'static self, n: u64) {
+        self.ensure_registered();
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value (or high-water) gauge.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicI64,
+    registered: AtomicBool,
+}
+
+impl Gauge {
+    /// Const-construct (use via the [`crate::metric!`] macro).
+    pub const fn new(name: &'static str, help: &'static str) -> Gauge {
+        Gauge {
+            name,
+            help,
+            value: AtomicI64::new(0),
+            registered: AtomicBool::new(false),
+        }
+    }
+
+    #[inline]
+    fn ensure_registered(&'static self) {
+        if !self.registered.load(Ordering::Relaxed) {
+            self.register_slow();
+        }
+    }
+
+    #[cold]
+    #[inline(never)]
+    fn register_slow(&'static self) {
+        if self
+            .registered
+            .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            push_registry(Metric::Gauge(self));
+        }
+    }
+
+    /// Force registration without mutating (exposition completeness).
+    pub fn register(&'static self) {
+        self.ensure_registered();
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&'static self, v: i64) {
+        self.ensure_registered();
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise to `v` if larger (high-water tracking).
+    #[inline]
+    pub fn set_max(&'static self, v: i64) {
+        self.ensure_registered();
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Add (possibly negative) `d`.
+    #[inline]
+    pub fn add(&'static self, d: i64) {
+        self.ensure_registered();
+        self.value.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count for [`Histogram`] (63 bounded + 1 overflow).
+pub const HIST_BUCKETS: usize = 64;
+/// Sub-buckets per octave (√2 bucket-width ratio → ≤ ~20% quantile error).
+const HIST_SUB: f64 = 2.0;
+/// Lower edge of bucket 0 — everything at or below lands there.
+const HIST_MIN: f64 = 1e-5;
+
+/// Upper bound of bucket `i` (`+Inf` for the last).
+pub fn bucket_bound(i: usize) -> f64 {
+    if i + 1 >= HIST_BUCKETS {
+        f64::INFINITY
+    } else {
+        // bound(i) = MIN · 2^(i/SUB): log-linear, 2 sub-buckets/octave,
+        // 1e-5 .. ~2.1e4 over 63 bounded buckets.
+        HIST_MIN * (i as f64 / HIST_SUB).exp2()
+    }
+}
+
+/// Bucket index for value `v` (pure float math, no table, no alloc).
+#[inline]
+pub fn bucket_of(v: f64) -> usize {
+    if !(v > HIST_MIN) {
+        // NaN and everything ≤ MIN collapse into bucket 0.
+        return 0;
+    }
+    let idx = (HIST_SUB * (v / HIST_MIN).log2()).ceil();
+    if idx >= (HIST_BUCKETS - 1) as f64 {
+        HIST_BUCKETS - 1
+    } else {
+        idx as usize
+    }
+}
+
+/// Log-linear histogram: 64 atomic buckets + exact sum/max.
+///
+/// `observe` is three relaxed RMWs (bucket, sum-CAS, max) — no locks,
+/// no allocation. Quantiles come from a cumulative bucket walk, so
+/// p50/p90/p99 carry the √2 bucket-width error; `max` is exact.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    /// Σ observed values, stored as f64 bits (CAS-accumulated).
+    sum_bits: AtomicU64,
+    /// Max observed value as f64 bits — non-negative IEEE-754 floats
+    /// order like their bit patterns, so `fetch_max` on bits is exact.
+    max_bits: AtomicU64,
+    registered: AtomicBool,
+}
+
+impl Histogram {
+    /// Const-construct (use via the [`crate::metric!`] macro).
+    pub const fn new(name: &'static str, help: &'static str) -> Histogram {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            help,
+            buckets: [ZERO; HIST_BUCKETS],
+            sum_bits: ZERO,
+            max_bits: ZERO,
+            registered: AtomicBool::new(false),
+        }
+    }
+
+    #[inline]
+    fn ensure_registered(&'static self) {
+        if !self.registered.load(Ordering::Relaxed) {
+            self.register_slow();
+        }
+    }
+
+    #[cold]
+    #[inline(never)]
+    fn register_slow(&'static self) {
+        if self
+            .registered
+            .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            push_registry(Metric::Histogram(self));
+        }
+    }
+
+    /// Force registration without mutating (exposition completeness).
+    pub fn register(&'static self) {
+        self.ensure_registered();
+    }
+
+    /// Record one value (negative/NaN clamp into bucket 0, sum/max
+    /// treat them as 0).
+    #[inline]
+    pub fn observe(&'static self, v: f64) {
+        self.ensure_registered();
+        self.record(v);
+    }
+
+    #[inline]
+    fn record(&self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        // f64 sum via CAS on the bit pattern — writers never block.
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.max_bits.fetch_max(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (writers keep writing).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            buckets,
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Frozen histogram state: per-bucket counts + exact sum and max.
+#[derive(Clone)]
+pub struct HistogramSnapshot {
+    /// Count per bucket (bounds from [`bucket_bound`]).
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Exact Σ of observed values.
+    pub sum: f64,
+    /// Exact max observed value (0 when empty).
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    /// Total observation count.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Quantile estimate: upper bound of the bucket where the
+    /// cumulative count crosses `q·count` (`None` when empty; the
+    /// last bucket reports the exact max instead of +Inf).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                let b = bucket_bound(i);
+                return Some(if b.is_finite() { b } else { self.max });
+            }
+        }
+        Some(self.max)
+    }
+}
+
+/// A histogram family keyed by one label (e.g. per-strategy delays).
+///
+/// Children are created on first use (cold path: short lock + leak of
+/// one `Histogram`; bounded by label cardinality — strategies, store
+/// kinds), then behave exactly like static histograms.
+pub struct HistogramVec {
+    name: &'static str,
+    help: &'static str,
+    label_key: &'static str,
+    children: Mutex<Vec<(String, &'static Histogram)>>,
+    registered: AtomicBool,
+}
+
+impl HistogramVec {
+    /// Const-construct (use via the [`crate::metric!`] macro).
+    pub const fn new(
+        name: &'static str,
+        help: &'static str,
+        label_key: &'static str,
+    ) -> HistogramVec {
+        HistogramVec {
+            name,
+            help,
+            label_key,
+            children: Mutex::new(Vec::new()),
+            registered: AtomicBool::new(false),
+        }
+    }
+
+    /// Force registration without mutating (exposition completeness).
+    pub fn register(&'static self) {
+        if !self.registered.load(Ordering::Relaxed)
+            && self
+                .registered
+                .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            push_registry(Metric::HistogramVec(self));
+        }
+    }
+
+    /// Child histogram for `label` (created + leaked on first use).
+    pub fn with(&'static self, label: &str) -> &'static Histogram {
+        self.register();
+        let mut children = self.children.lock().unwrap();
+        if let Some(&(_, h)) = children.iter().find(|(l, _)| l == label) {
+            return h;
+        }
+        let h: &'static Histogram =
+            Box::leak(Box::new(Histogram::new(self.name, self.help)));
+        // Children bypass self-registration — the parent renders them.
+        h.registered.store(true, Ordering::Relaxed);
+        children.push((label.to_string(), h));
+        h
+    }
+
+    /// Record into the `label` child.
+    pub fn observe(&'static self, label: &str, v: f64) {
+        self.with(label).record(v);
+    }
+
+    /// `(label, snapshot)` per child, sorted by label.
+    pub fn snapshot(&self) -> Vec<(String, HistogramSnapshot)> {
+        let children = self.children.lock().unwrap();
+        let mut out: Vec<(String, HistogramSnapshot)> = children
+            .iter()
+            .map(|(l, h)| (l.clone(), h.snapshot()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+/// Snapshot of one metric family (one series, or one per label).
+pub struct FamilySnapshot {
+    /// Exposition name (`repro_*`).
+    pub name: &'static str,
+    /// `# HELP` text.
+    pub help: &'static str,
+    /// Family value.
+    pub value: FamilyValue,
+}
+
+/// Value variants a family snapshot can carry.
+pub enum FamilyValue {
+    /// Monotonic counter.
+    Counter(u64),
+    /// Point-in-time gauge.
+    Gauge(i64),
+    /// Unlabeled histogram.
+    Histogram(HistogramSnapshot),
+    /// Labeled histogram family: `(label_key, [(label, snap)])`.
+    HistogramVec(&'static str, Vec<(String, HistogramSnapshot)>),
+}
+
+/// Snapshot every registered metric, sorted by name (writers are not
+/// paused — each cell is read atomically, the set is not a global cut).
+pub fn snapshot() -> Vec<FamilySnapshot> {
+    let metrics: Vec<Metric> = REGISTRY.lock().unwrap().clone();
+    let mut out: Vec<FamilySnapshot> = metrics
+        .into_iter()
+        .map(|m| match m {
+            Metric::Counter(c) => FamilySnapshot {
+                name: c.name,
+                help: c.help,
+                value: FamilyValue::Counter(c.get()),
+            },
+            Metric::Gauge(g) => FamilySnapshot {
+                name: g.name,
+                help: g.help,
+                value: FamilyValue::Gauge(g.get()),
+            },
+            Metric::Histogram(h) => FamilySnapshot {
+                name: h.name,
+                help: h.help,
+                value: FamilyValue::Histogram(h.snapshot()),
+            },
+            Metric::HistogramVec(v) => FamilySnapshot {
+                name: v.name,
+                help: v.help,
+                value: FamilyValue::HistogramVec(v.label_key, v.snapshot()),
+            },
+        })
+        .collect();
+    out.sort_by(|a, b| a.name.cmp(b.name));
+    out
+}
+
+/// Declare a static metric: `metric!(counter EVALS, "repro_evals_total",
+/// "Total placement evaluations");` — also `gauge`, `histogram`, and
+/// `histogram_vec NAME, "name", "help", "label_key"`.
+#[macro_export]
+macro_rules! metric {
+    (counter $vis:vis $NAME:ident, $name:expr, $help:expr) => {
+        $vis static $NAME: $crate::obs::Counter = $crate::obs::Counter::new($name, $help);
+    };
+    (gauge $vis:vis $NAME:ident, $name:expr, $help:expr) => {
+        $vis static $NAME: $crate::obs::Gauge = $crate::obs::Gauge::new($name, $help);
+    };
+    (histogram $vis:vis $NAME:ident, $name:expr, $help:expr) => {
+        $vis static $NAME: $crate::obs::Histogram = $crate::obs::Histogram::new($name, $help);
+    };
+    (histogram_vec $vis:vis $NAME:ident, $name:expr, $help:expr, $label:expr) => {
+        $vis static $NAME: $crate::obs::HistogramVec =
+            $crate::obs::HistogramVec::new($name, $help, $label);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        metric!(counter C, "test_registry_counter_total", "t");
+        metric!(gauge G, "test_registry_gauge", "t");
+        C.inc();
+        C.add(4);
+        assert_eq!(C.get(), 5);
+        G.set(7);
+        G.set_max(3); // lower → no change
+        assert_eq!(G.get(), 7);
+        G.set_max(11);
+        assert_eq!(G.get(), 11);
+        G.add(-1);
+        assert_eq!(G.get(), 10);
+        // Both self-registered exactly once.
+        let names: Vec<&str> = snapshot().iter().map(|f| f.name).collect();
+        assert_eq!(
+            names.iter().filter(|n| **n == "test_registry_counter_total").count(),
+            1
+        );
+        assert_eq!(names.iter().filter(|n| **n == "test_registry_gauge").count(), 1);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_log_linear() {
+        // Bucket 0 swallows ≤ MIN, negatives and NaN.
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-3.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(HIST_MIN), 0);
+        // A value just above a bound lands in the next bucket; the
+        // bound itself (ceil ⇒ inclusive upper edge) stays put.
+        for i in 1..HIST_BUCKETS - 1 {
+            let b = bucket_bound(i);
+            assert_eq!(bucket_of(b * 1.0000001), i + 1, "just above bound {i}");
+            assert!(bucket_of(b * 0.999999) <= i, "at-or-below bound {i}");
+        }
+        // Monotone non-decreasing in v.
+        let mut last = 0;
+        let mut v = 1e-7;
+        while v < 1e6 {
+            let b = bucket_of(v);
+            assert!(b >= last);
+            last = b;
+            v *= 1.7;
+        }
+        // Huge values clamp to the overflow bucket.
+        assert_eq!(bucket_of(1e12), HIST_BUCKETS - 1);
+        assert!(bucket_bound(HIST_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn histogram_quantiles_and_max() {
+        metric!(histogram H, "test_registry_hist_seconds", "t");
+        for i in 1..=100 {
+            H.observe(i as f64 * 0.01); // 0.01 .. 1.00
+        }
+        let snap = H.snapshot();
+        assert_eq!(snap.count(), 100);
+        assert!((snap.sum - 50.5).abs() < 1e-9);
+        assert_eq!(snap.max, 1.0);
+        let p50 = snap.quantile(0.5).unwrap();
+        // √2-width buckets: the p50 bucket bound is within [0.5, 0.72].
+        assert!((0.5..=0.75).contains(&p50), "p50 = {p50}");
+        let p99 = snap.quantile(0.99).unwrap();
+        assert!((0.99..=1.5).contains(&p99), "p99 = {p99}");
+        assert!(snap.quantile(1.0).unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn histogram_empty_quantile_is_none() {
+        metric!(histogram H, "test_registry_hist_empty", "t");
+        assert!(H.snapshot().quantile(0.5).is_none());
+        H.register();
+        assert_eq!(H.snapshot().count(), 0);
+    }
+
+    #[test]
+    fn histogram_vec_labels() {
+        metric!(histogram_vec V, "test_registry_vec_seconds", "t", "strategy");
+        V.observe("pso", 0.5);
+        V.observe("random", 2.0);
+        V.observe("pso", 0.25);
+        let snaps = V.snapshot();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].0, "pso"); // sorted by label
+        assert_eq!(snaps[0].1.count(), 2);
+        assert_eq!(snaps[1].1.count(), 1);
+        // Same label twice returns the same child.
+        assert!(std::ptr::eq(V.with("pso"), V.with("pso")));
+    }
+
+    #[test]
+    fn snapshot_under_concurrent_writers() {
+        metric!(counter C, "test_registry_concurrent_total", "t");
+        metric!(histogram H, "test_registry_concurrent_seconds", "t");
+        C.register();
+        H.register();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for i in 0..5_000 {
+                        C.inc();
+                        H.observe((t * 5_000 + i) as f64 * 1e-6);
+                    }
+                });
+            }
+            // Reader races the writers: every snapshot must be sane
+            // (monotone counter, count ≥ 0, sum finite).
+            let mut last = 0u64;
+            for _ in 0..50 {
+                let c = C.get();
+                assert!(c >= last);
+                last = c;
+                let s = H.snapshot();
+                assert!(s.count() <= 20_000);
+                assert!(s.sum.is_finite());
+            }
+        });
+        assert_eq!(C.get(), 20_000);
+        let s = H.snapshot();
+        assert_eq!(s.count(), 20_000);
+        assert!((s.max - 19_999e-6).abs() < 1e-12);
+    }
+}

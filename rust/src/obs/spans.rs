@@ -1,0 +1,322 @@
+//! Span tracing with two clock domains, exported as Chrome trace JSON.
+//!
+//! * **Wall spans** time real execution (service rounds against live
+//!   clients, scheduler jobs) with `Instant` relative to process start.
+//! * **Virtual spans** are keyed on the simulation clock — the DES /
+//!   session-machine virtual seconds that the paper's Eq. 6–7 TPD
+//!   terms live in — so a fleet run's round/upload/aggregate timeline
+//!   is inspectable in Perfetto on the *model's* time axis.
+//!
+//! Recording is off by default: the only cost on any path is one
+//! relaxed atomic load. When enabled (`--trace-out`), spans go into a
+//! bounded ring buffer (oldest dropped first, drops counted) guarded
+//! by a mutex — spans are round/job granularity, never per-eval, so
+//! the lock is uncontended in practice. [`write_chrome_trace`] emits
+//! the `trace.json` Perfetto / `chrome://tracing` consumes: wall spans
+//! under pid 1, virtual spans under pid 2 (µs ticks = virtual seconds
+//! × 1e6).
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring-buffer capacity (spans; oldest evicted beyond this).
+pub const SPAN_CAPACITY: usize = 65_536;
+
+/// Which clock a span's timestamps belong to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Real time, µs since process start (Chrome pid 1).
+    Wall,
+    /// Simulation time, µs of virtual seconds (Chrome pid 2).
+    Virtual,
+}
+
+/// One completed span.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    /// Event name (static: no allocation at record time for wall spans).
+    pub name: &'static str,
+    /// Chrome `cat` — the emitting layer (`service`, `exp`, `des`...).
+    pub cat: &'static str,
+    /// Optional instance label rendered into `args.label` (session id,
+    /// strategy); allocated only when tracing is enabled.
+    pub label: Option<String>,
+    /// Chrome `tid` lane within the clock-domain pid.
+    pub tid: u32,
+    /// Clock domain (selects the Chrome pid).
+    pub clock: ClockDomain,
+    /// Start, µs in the span's clock domain.
+    pub ts_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+}
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RING: Mutex<VecDeque<SpanRec>> = Mutex::new(VecDeque::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Turn span recording on/off (off by default; `--trace-out` enables).
+pub fn set_tracing(on: bool) {
+    if on {
+        // Pin the wall epoch before the first span closes.
+        EPOCH.get_or_init(Instant::now);
+    }
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// One relaxed load — the entire disabled-path cost.
+#[inline]
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// µs of wall time since the tracing epoch.
+fn wall_now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+fn push(span: SpanRec) {
+    let mut ring = RING.lock().unwrap();
+    if ring.len() >= SPAN_CAPACITY {
+        ring.pop_front();
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        super::defs::SPANS_DROPPED.inc();
+    }
+    ring.push_back(span);
+}
+
+/// Record a completed virtual-time span (`start_s`/`end_s` in virtual
+/// seconds on the DES clock). No-op unless tracing is enabled.
+pub fn record_virtual(
+    name: &'static str,
+    cat: &'static str,
+    tid: u32,
+    start_s: f64,
+    end_s: f64,
+    label: Option<String>,
+) {
+    if !tracing_enabled() {
+        return;
+    }
+    let ts_us = (start_s.max(0.0) * 1e6) as u64;
+    let end_us = (end_s.max(0.0) * 1e6) as u64;
+    push(SpanRec {
+        name,
+        cat,
+        label,
+        tid,
+        clock: ClockDomain::Virtual,
+        ts_us,
+        dur_us: end_us.saturating_sub(ts_us),
+    });
+}
+
+/// Drop-guard for a wall-clock span: times from construction to drop.
+/// Construction is free when tracing is disabled.
+pub struct WallSpan {
+    name: &'static str,
+    cat: &'static str,
+    tid: u32,
+    label: Option<String>,
+    /// `None` ⇔ tracing was off at open time (drop is then free too).
+    start_us: Option<u64>,
+}
+
+impl WallSpan {
+    /// Open a wall span on lane `tid`.
+    pub fn start(name: &'static str, cat: &'static str, tid: u32) -> WallSpan {
+        WallSpan {
+            name,
+            cat,
+            tid,
+            label: None,
+            start_us: tracing_enabled().then(wall_now_us),
+        }
+    }
+
+    /// Attach an instance label (only materialized while tracing).
+    pub fn with_label(mut self, label: &str) -> WallSpan {
+        if self.start_us.is_some() {
+            self.label = Some(label.to_string());
+        }
+        self
+    }
+
+    /// Seconds elapsed since the span opened (0 when tracing is off —
+    /// use a real clock for timing that feeds metrics).
+    pub fn elapsed_s(&self) -> f64 {
+        match self.start_us {
+            Some(t0) => (wall_now_us().saturating_sub(t0)) as f64 * 1e-6,
+            None => 0.0,
+        }
+    }
+}
+
+impl Drop for WallSpan {
+    fn drop(&mut self) {
+        let Some(t0) = self.start_us else { return };
+        let now = wall_now_us();
+        push(SpanRec {
+            name: self.name,
+            cat: self.cat,
+            label: self.label.take(),
+            tid: self.tid,
+            clock: ClockDomain::Wall,
+            ts_us: t0,
+            dur_us: now.saturating_sub(t0),
+        });
+    }
+}
+
+/// Copy out the ring buffer (spans stay recorded).
+pub fn collect_spans() -> Vec<SpanRec> {
+    RING.lock().unwrap().iter().cloned().collect()
+}
+
+/// Spans evicted by the ring bound so far.
+pub fn dropped_spans() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Clear the ring (tests / between commands).
+pub fn reset_spans() {
+    RING.lock().unwrap().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+fn json_escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Render spans as Chrome trace-event JSON (`ph:"X"` complete events).
+/// Wall spans live in the process named `repro wall clock` (pid 1),
+/// virtual spans in `repro virtual clock (DES)` (pid 2).
+pub fn render_chrome_trace(spans: &[SpanRec]) -> String {
+    let mut out = String::with_capacity(128 + spans.len() * 96);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    // Name the two clock-domain "processes" for the Perfetto sidebar.
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"repro wall clock\"}},\n",
+    );
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\"tid\":0,\
+         \"args\":{\"name\":\"repro virtual clock (DES)\"}}",
+    );
+    for s in spans {
+        let pid = match s.clock {
+            ClockDomain::Wall => 1,
+            ClockDomain::Virtual => 2,
+        };
+        out.push_str(",\n{\"name\":\"");
+        json_escape(s.name, &mut out);
+        out.push_str("\",\"cat\":\"");
+        json_escape(s.cat, &mut out);
+        out.push_str("\",\"ph\":\"X\",\"ts\":");
+        out.push_str(&s.ts_us.to_string());
+        out.push_str(",\"dur\":");
+        out.push_str(&s.dur_us.to_string());
+        out.push_str(",\"pid\":");
+        out.push_str(&pid.to_string());
+        out.push_str(",\"tid\":");
+        out.push_str(&s.tid.to_string());
+        if let Some(label) = &s.label {
+            out.push_str(",\"args\":{\"label\":\"");
+            json_escape(label, &mut out);
+            out.push_str("\"}");
+        }
+        out.push('}');
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write the current ring buffer to `path` as Chrome trace JSON.
+/// Returns the number of spans written.
+pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<usize> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let spans = collect_spans();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render_chrome_trace(&spans).as_bytes())?;
+    f.flush()?;
+    Ok(spans.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Span tests share the global ring; serialize them.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_tracing(false);
+        reset_spans();
+        record_virtual("round", "des", 1, 0.0, 2.0, None);
+        {
+            let _s = WallSpan::start("job", "exp", 0);
+        }
+        assert!(collect_spans().is_empty());
+    }
+
+    #[test]
+    fn virtual_and_wall_spans_roundtrip() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_tracing(true);
+        reset_spans();
+        record_virtual("round", "service", 3, 1.5, 4.0, Some("pso".into()));
+        {
+            let _s = WallSpan::start("trial", "exp", 0).with_label("cell-0");
+        }
+        set_tracing(false);
+        let spans = collect_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].clock, ClockDomain::Virtual);
+        assert_eq!(spans[0].ts_us, 1_500_000);
+        assert_eq!(spans[0].dur_us, 2_500_000);
+        assert_eq!(spans[1].clock, ClockDomain::Wall);
+        let json = render_chrome_trace(&spans);
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"pid\":2"));
+        assert!(json.contains("\"label\":\"pso\""));
+        // Parseable by our own JSON reader.
+        let v = crate::json::parse(&json).expect("valid JSON");
+        let events = v.get("traceEvents").and_then(|e| e.as_array()).unwrap();
+        assert_eq!(events.len(), 2 + 2); // 2 metadata + 2 spans
+        reset_spans();
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _g = TEST_LOCK.lock().unwrap();
+        set_tracing(true);
+        reset_spans();
+        for i in 0..(SPAN_CAPACITY + 10) {
+            record_virtual("e", "t", 0, i as f64, i as f64 + 1.0, None);
+        }
+        set_tracing(false);
+        assert_eq!(collect_spans().len(), SPAN_CAPACITY);
+        assert_eq!(dropped_spans(), 10);
+        reset_spans();
+    }
+}

@@ -41,6 +41,29 @@ use crate::configio::ClientSpec;
 use crate::fitness::{ClientAttrs, TpdScratch};
 use crate::fl::emulation::{EmulatedClock, WorkKind};
 use crate::hierarchy::{EvalScratch, HierarchySpec};
+use crate::obs::defs as obs;
+
+/// Plain (non-atomic) per-dispatch eval-path tally: the hot loop bumps
+/// local integers, one [`PathTally::flush`] per `eval`/`eval_batch`
+/// dispatch turns them into a handful of relaxed atomic adds — so
+/// telemetry costs nothing measurable at millions of evals/sec and
+/// adds zero allocations (pinned by `tests/alloc_guard.rs`).
+#[derive(Default)]
+struct PathTally {
+    same: u64,
+    delta: u64,
+    full: u64,
+}
+
+impl PathTally {
+    #[inline]
+    fn flush(&self, evals: u64) {
+        obs::PLACEMENT_EVALS.add(evals);
+        obs::PLACEMENT_CACHE_HITS.add(self.same);
+        obs::PLACEMENT_DELTA_EVALS.add(self.delta);
+        obs::PLACEMENT_FULL_EVALS.add(self.full);
+    }
+}
 
 /// A delay oracle: scores candidate placements. `Send` so boxed oracles
 /// can move into scheduler workers (the service tier runs one session —
@@ -122,17 +145,25 @@ impl AnalyticTpd {
     /// the cached base position take the delta fast path; everything
     /// else is a full (still allocation-free) streaming evaluation that
     /// becomes the new base.
-    fn tpd_of(&mut self, placement: &[usize]) -> f64 {
+    fn tpd_of(&mut self, placement: &[usize], tally: &mut PathTally) -> f64 {
         if self.scratch.loaded() {
             match classify(self.scratch.position(), placement) {
-                Diff::Same => return self.scratch.total(),
+                Diff::Same => {
+                    tally.same += 1;
+                    return self.scratch.total();
+                }
                 Diff::Replace { slot, client } if !self.scratch.is_aggregator(client) => {
+                    tally.delta += 1;
                     return self.scratch.delta_replace(slot, client, &self.attrs);
                 }
-                Diff::Swap { i, j } => return self.scratch.delta_swap(i, j, &self.attrs),
+                Diff::Swap { i, j } => {
+                    tally.delta += 1;
+                    return self.scratch.delta_swap(i, j, &self.attrs);
+                }
                 _ => {}
             }
         }
+        tally.full += 1;
         self.scratch.eval_prevalidated(placement, &self.attrs)
     }
 }
@@ -144,7 +175,10 @@ impl Environment for AnalyticTpd {
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
         self.scratch.validate(placement)?;
-        Ok(self.tpd_of(placement))
+        let mut tally = PathTally::default();
+        let delay = self.tpd_of(placement, &mut tally);
+        tally.flush(1);
+        Ok(delay)
     }
 
     fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
@@ -155,9 +189,11 @@ impl Environment for AnalyticTpd {
             self.scratch.validate(p)?;
         }
         let mut delays = Vec::with_capacity(batch.len());
+        let mut tally = PathTally::default();
         for p in batch {
-            delays.push(self.tpd_of(p));
+            delays.push(self.tpd_of(p, &mut tally));
         }
+        tally.flush(batch.len() as u64);
         Ok(delays)
     }
 }
@@ -243,6 +279,7 @@ impl Environment for EmulatedDelay {
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
         self.scratch.validate(placement)?;
+        obs::PLACEMENT_EVALS.inc();
         Ok(self.delay_of(placement))
     }
 
@@ -254,6 +291,7 @@ impl Environment for EmulatedDelay {
         for p in batch {
             delays.push(self.delay_of(p));
         }
+        obs::PLACEMENT_EVALS.add(batch.len() as u64);
         Ok(delays)
     }
 }

@@ -441,6 +441,8 @@ pub fn drive(
     }
     // A trailing partial group (budget not divisible by group_size) is
     // still counted in best/evaluations but emits no trace row.
+    crate::obs::defs::DRIVE_BATCHES.add(round as u64);
+    crate::obs::defs::DRIVE_RUNS.inc();
     Ok(out)
 }
 

@@ -178,6 +178,12 @@ impl SessionMachine {
     }
 
     fn goto(&mut self, to: Phase, reason: impl Into<String>) {
+        crate::obs::defs::SERVICE_PHASE_TRANSITIONS.inc();
+        match to {
+            Phase::Finished => crate::obs::defs::SERVICE_SESSIONS_FINISHED.inc(),
+            Phase::Failed => crate::obs::defs::SERVICE_SESSIONS_FAILED.inc(),
+            _ => {}
+        }
         self.transitions.push(Transition {
             from: self.phase,
             to,
@@ -213,6 +219,16 @@ impl SessionMachine {
         self.last_beat
             .iter()
             .filter(|&&t| self.now - t <= self.cfg.heartbeat_grace)
+            .count()
+    }
+
+    /// Clients seen at least once whose last heartbeat has aged out of
+    /// the grace window — the "missed heartbeat" population the obs
+    /// counter tracks (never-seen clients are absentees, not misses).
+    pub fn stale_clients(&self) -> usize {
+        self.last_beat
+            .iter()
+            .filter(|&&t| t.is_finite() && self.now - t > self.cfg.heartbeat_grace)
             .count()
     }
 
@@ -302,6 +318,7 @@ impl SessionMachine {
         match self.phase {
             Phase::Round(k) => {
                 self.retries += 1;
+                crate::obs::defs::SERVICE_RETRIES.inc();
                 let budget = self.cfg.retry_budget;
                 if self.retries > budget {
                     let why = format!("round {k}: {reason} (retry budget {budget} exhausted)");
@@ -324,6 +341,7 @@ impl SessionMachine {
         match self.phase {
             Phase::Rendezvous if elapsed > self.cfg.rendezvous_timeout => {
                 self.retries += 1;
+                crate::obs::defs::SERVICE_RETRIES.inc();
                 let budget = self.cfg.retry_budget;
                 if self.retries > budget {
                     let why = format!("rendezvous timeout after {elapsed:.1}s (budget exhausted)");
@@ -460,10 +478,18 @@ mod tests {
         assert_eq!(m.live_clients(), 5);
         m.advance(m.config().heartbeat_grace + 0.1);
         assert_eq!(m.live_clients(), 0, "stale beats must expire");
+        assert_eq!(m.stale_clients(), 5, "all seen clients aged out");
         m.beat(3);
         m.beat(4);
         assert_eq!(m.live_clients(), 2);
+        assert_eq!(m.stale_clients(), 3);
         assert!(m.has_quorum());
+    }
+
+    #[test]
+    fn never_seen_clients_are_not_stale() {
+        let m = machine(1, 4, 2);
+        assert_eq!(m.stale_clients(), 0, "absentees are not heartbeat misses");
     }
 
     #[test]

@@ -14,11 +14,25 @@ use super::backend::LiveBackend;
 use super::metrics::Recorder;
 use super::session::{SessionKind, SessionOutcome, SessionRunner, SessionSpec};
 use super::storage::Store;
+use super::metrics::MetricRow;
 use crate::broker::Broker;
 use crate::exp::TrialScheduler;
 use crate::runtime::ModelRuntime;
 use anyhow::{anyhow, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+/// Shared state of the incremental row flush: each completing session
+/// deposits its rows into its submission-order slot; whoever deposits
+/// then drains the contiguous completed prefix into the recorder. The
+/// frontier (`next`) only moves forward, so rows always hit the sink
+/// in submission order — the final file is byte-identical to the old
+/// record-everything-after-drain behavior, but a killed coordinator
+/// now keeps every fully-completed session's paper trail on disk.
+struct FlushState {
+    slots: Vec<Option<Vec<MetricRow>>>,
+    next: usize,
+    error: Option<std::io::Error>,
+}
 
 /// Service-level knobs (per-session knobs live on [`SessionSpec`]).
 /// The default is zero threads (one worker per core) and no round
@@ -97,7 +111,9 @@ impl CoordinatorService {
         let specs: Vec<SessionSpec> = self.pending.drain(..).collect();
         let mut runners = Vec::with_capacity(specs.len());
         for spec in specs {
+            let started = std::time::Instant::now();
             let snapshot = self.store.load(&spec.name)?;
+            crate::obs::defs::STORE_LOAD.observe(started.elapsed().as_secs_f64());
             let runner = match &spec.kind {
                 SessionKind::Env { .. } => SessionRunner::new_env(spec, snapshot)?,
                 SessionKind::Live { deploy, time_scale } => {
@@ -119,20 +135,49 @@ impl CoordinatorService {
         }
         let store = self.store.clone();
         let limit = self.cfg.round_limit;
-        let results = TrialScheduler::new(self.cfg.threads)
-            .run_consuming(runners, |_, runner| runner.run(store.as_ref(), limit));
+        let n = runners.len();
+        let flush = Mutex::new(FlushState {
+            slots: (0..n).map(|_| None).collect(),
+            next: 0,
+            error: None,
+        });
+        let recorder = Mutex::new(&mut self.recorder);
+        let results = TrialScheduler::new(self.cfg.threads).run_consuming(runners, |i, runner| {
+            let result = runner.run(store.as_ref(), limit);
+            let rows = match &result {
+                Ok(outcome) => outcome.rows.clone(),
+                Err(_) => Vec::new(),
+            };
+            // Deposit this session's rows, then flush the contiguous
+            // completed prefix at each session-completion boundary
+            // (lock order: flush state, then recorder — everywhere).
+            let mut state = flush.lock().expect("flush state lock");
+            state.slots[i] = Some(rows);
+            let mut rec = recorder.lock().expect("recorder lock");
+            while state.next < n && state.slots[state.next].is_some() {
+                let rows = state.slots[state.next].take().expect("slot just checked");
+                state.next += 1;
+                if state.error.is_some() {
+                    continue; // sink already broken: drop quietly, surface below
+                }
+                let io = rows
+                    .iter()
+                    .try_for_each(|row| rec.record(row))
+                    .and_then(|()| rec.flush());
+                if let Err(e) = io {
+                    state.error = Some(e);
+                }
+            }
+            result
+        });
+        let sink_error = flush.into_inner().expect("flush state lock").error;
         let mut outcomes = Vec::with_capacity(results.len());
         for result in results {
             outcomes.push(result?);
         }
-        // Rows are recorded after the drain, in submission order, so the
-        // sink's bytes are independent of worker interleaving.
-        for outcome in &outcomes {
-            for row in &outcome.rows {
-                self.recorder.record(row)?;
-            }
+        if let Some(e) = sink_error {
+            return Err(e.into());
         }
-        self.recorder.flush()?;
         Ok(outcomes)
     }
 }
@@ -216,6 +261,104 @@ mod tests {
             let pd: Vec<u64> = p.trace.iter().map(|r| r.delay_s.to_bits()).collect();
             assert_eq!(sd, pd, "session {} must not depend on thread count", s.name);
         }
+    }
+
+    /// Tags every row with the flush count at record time, so tests can
+    /// prove rows hit the sink incrementally (at session boundaries),
+    /// not in one post-drain burst.
+    struct FlushTrackingRecorder {
+        rows: Arc<Mutex<Vec<(String, usize)>>>,
+        flushes: Arc<Mutex<usize>>,
+    }
+
+    impl Recorder for FlushTrackingRecorder {
+        fn name(&self) -> &'static str {
+            "flush-tracking"
+        }
+
+        fn record(&mut self, row: &MetricRow) -> std::io::Result<()> {
+            let at = *self.flushes.lock().unwrap();
+            self.rows.lock().unwrap().push((row.session.clone(), at));
+            Ok(())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            *self.flushes.lock().unwrap() += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn rows_flush_incrementally_at_session_boundaries() {
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let flushes = Arc::new(Mutex::new(0usize));
+        for threads in [1, 2] {
+            rows.lock().unwrap().clear();
+            *flushes.lock().unwrap() = 0;
+            let cfg = ServiceConfig { threads, ..ServiceConfig::default() };
+            let recorder = Box::new(FlushTrackingRecorder {
+                rows: rows.clone(),
+                flushes: flushes.clone(),
+            });
+            let mut svc =
+                CoordinatorService::new(cfg, Arc::new(NoopStore::new()), recorder);
+            svc.submit(tiny_spec("alpha", "pso")).unwrap();
+            svc.submit(tiny_spec("beta", "round-robin")).unwrap();
+            svc.drain().unwrap();
+            // One flush per completed session (a killed serve would
+            // keep everything already flushed).
+            assert_eq!(*flushes.lock().unwrap(), 2, "threads={threads}");
+            // alpha was recorded *and flushed* before any beta row was
+            // recorded — the boundary a kill test relies on.
+            let rows = rows.lock().unwrap();
+            assert!(rows.iter().all(|(s, at)| match s.as_str() {
+                "alpha" => *at == 0,
+                _ => *at >= 1,
+            }));
+        }
+    }
+
+    /// `Write` handle over a shared buffer, so a test can read back what
+    /// a consumed `CsvRecorder` wrote.
+    #[derive(Clone)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl std::io::Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn incremental_csv_bytes_match_post_hoc_recording() {
+        use super::super::metrics::CsvRecorder;
+        // Drain with the incremental-flush CSV sink...
+        let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let cfg = ServiceConfig { threads: 2, ..ServiceConfig::default() };
+        let recorder = Box::new(CsvRecorder::new(buf.clone()).unwrap());
+        let mut svc = CoordinatorService::new(cfg, Arc::new(NoopStore::new()), recorder);
+        svc.submit(tiny_spec("alpha", "pso")).unwrap();
+        svc.submit(tiny_spec("beta", "ga")).unwrap();
+        let outcomes = svc.drain().unwrap();
+        // ...and rebuild the legacy everything-after-drain bytes from
+        // the outcomes. They must be identical.
+        let reference = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+        let mut rec = CsvRecorder::new(reference.clone()).unwrap();
+        for outcome in &outcomes {
+            for row in &outcome.rows {
+                rec.record(row).unwrap();
+            }
+        }
+        rec.flush().unwrap();
+        let got = buf.0.lock().unwrap().clone();
+        let want = reference.0.lock().unwrap().clone();
+        assert!(!got.is_empty());
+        assert_eq!(got, want, "incremental flush must not change the bytes");
     }
 
     #[test]

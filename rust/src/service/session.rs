@@ -25,10 +25,22 @@ use super::storage::{SessionSnapshot, SpecSummary, Store, TraceRow};
 use crate::configio::{DeployScenario, DynamicsSpec, SimScenario};
 use crate::des::Dynamics;
 use crate::fitness::ClientAttrs;
+use crate::obs::defs as obs;
 use crate::placement::{registry, Optimizer, Placement, Stepwise};
 use crate::prng::Pcg32;
 use anyhow::{anyhow, Result};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Stable per-session trace lane (Chrome `tid`) from the session name —
+/// spans from concurrent sessions land on distinct Perfetto rows.
+fn trace_lane(name: &str) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for b in name.bytes() {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h % 997
+}
 
 /// Salt separating the runner's dynamics stream from the optimizer /
 /// population streams derived from the same session seed.
@@ -413,6 +425,7 @@ impl SessionRunner {
                 let placement = self.stepwise.propose(k);
                 self.machine.beat_active(&realization.active);
                 let live = self.machine.live_clients();
+                obs::SERVICE_HEARTBEAT_MISSES.add(self.machine.stale_clients() as u64);
                 self.pending =
                     Some(PendingRound { round: k, placement, active: realization.active, live });
             }
@@ -435,10 +448,27 @@ impl SessionRunner {
                         loss: out.loss,
                         live: pending.live,
                     };
+                    obs::SERVICE_ROUND_DELAY.observe(&strategy, out.delay_s);
                     self.stepwise.feedback(out.delay_s);
+                    let round_start = self.machine.now();
                     self.machine
                         .round_completed(out.delay_s)
                         .map_err(|e| anyhow!("session {}: {e}", self.spec.name))?;
+                    // One virtual span per round on this session's
+                    // trace lane: the machine just advanced its clock
+                    // by the measured TPD (the Eq. 6–7 delay), so
+                    // [start, now] is exactly the round's extent on
+                    // the DES time axis.
+                    if crate::obs::tracing_enabled() {
+                        crate::obs::record_virtual(
+                            "round",
+                            "service",
+                            trace_lane(&self.spec.name),
+                            round_start,
+                            self.machine.now(),
+                            Some(format!("{} {} r{k}", self.spec.name, strategy)),
+                        );
+                    }
                     self.trace.push(row);
                     self.pending = None;
                     executed += 1;
@@ -483,7 +513,10 @@ impl SessionRunner {
             params: self.backend.params(),
             loss: self.trace.last().map(|r| r.loss).unwrap_or(f64::NAN),
         };
-        store.save(&self.spec.name, &snap)
+        let started = Instant::now();
+        let result = store.save(&self.spec.name, &snap);
+        obs::STORE_SAVE.observe(started.elapsed().as_secs_f64());
+        result
     }
 
     /// Emit the round-outcome row and the best-so-far score row for a

@@ -180,6 +180,49 @@ fn emulated_eval_batch_steady_state_allocates_only_the_result_vec() {
 }
 
 #[test]
+fn telemetry_increments_allocate_nothing() {
+    let _serial = serialized();
+    // The obs layer rides the eval/DES/scheduler hot paths, so its
+    // steady-state mutations must be pure atomic RMWs. Warm once to
+    // absorb the one-time lazy registration (which may allocate a
+    // registry slot), then pin the counted window to zero.
+    use repro::obs::defs as obs;
+    repro::obs::register_builtin();
+    obs::PLACEMENT_EVALS.add(1);
+    obs::PLACEMENT_CACHE_HITS.inc();
+    obs::DES_HEAP_HIGH_WATER.set_max(1);
+    obs::EXP_QUEUE_WAIT.observe(1e-4);
+    let n = count_allocs(|| {
+        for i in 0..256u64 {
+            obs::PLACEMENT_EVALS.add(16);
+            obs::PLACEMENT_CACHE_HITS.inc();
+            obs::PLACEMENT_DELTA_EVALS.add(3);
+            obs::DES_EVENTS.add(100);
+            obs::DES_HEAP_HIGH_WATER.set_max(i as i64);
+            obs::EXP_QUEUE_WAIT.observe(1e-4 * (i + 1) as f64);
+            obs::EXP_WORKER_BUSY_US.add(i);
+        }
+    });
+    assert_eq!(n, 0, "metric increments must not touch the heap ({n} allocations)");
+}
+
+#[test]
+fn disabled_span_checks_allocate_nothing() {
+    let _serial = serialized();
+    // With tracing off (the default), the span gate is one relaxed
+    // load — no heap traffic from the paths that consult it.
+    assert!(!repro::obs::tracing_enabled());
+    let n = count_allocs(|| {
+        for i in 0..256u32 {
+            if repro::obs::tracing_enabled() {
+                repro::obs::record_virtual("round", "test", i, 0.0, 1.0, None);
+            }
+        }
+    });
+    assert_eq!(n, 0, "disabled tracing gate must not touch the heap ({n} allocations)");
+}
+
+#[test]
 fn event_driven_eval_batch_steady_state_allocates_only_the_result_vec() {
     let _serial = serialized();
     // Conformance configuration; the event heap and every per-slot

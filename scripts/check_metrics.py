@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-format exposition scraped from `repro serve
+--metrics-addr` (or `repro obs dump --addr`).
+
+Checks, in order:
+  * the exposition parses: every non-comment line is `name[{labels}] value`,
+    every samples block is preceded by matching # HELP / # TYPE comments;
+  * at least --min-families distinct metric families are present;
+  * at least one histogram family exposes cumulative `_bucket{le=...}`
+    samples (monotone non-decreasing, closed by `le="+Inf"`) plus `_sum`
+    and `_count`, with `_count` equal to the +Inf bucket — i.e. quantiles
+    are derivable from the buckets;
+  * counter values are finite and non-negative.
+
+Usage: check_metrics.py EXPOSITION_FILE [--min-families 10]
+Exit status 0 on success, 1 with a diagnostic on any violation.
+"""
+
+import argparse
+import math
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>[^}]*)\})?'
+    r'\s+(?P<value>[^\s]+)\s*$'
+)
+LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"$')
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_labels(raw):
+    if not raw:
+        return {}
+    labels = {}
+    for part in raw.split(","):
+        part = part.strip()
+        if not LABEL_RE.match(part):
+            fail(f"malformed label pair {part!r}")
+        key, val = part.split("=", 1)
+        labels[key] = val[1:-1]
+    return labels
+
+
+def family_of(sample_name, typed):
+    """Map a sample name to its family (histogram samples carry
+    _bucket/_sum/_count suffixes on top of the family name)."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if sample_name.endswith(suffix) and sample_name[: -len(suffix)] in typed:
+            return sample_name[: -len(suffix)]
+    return sample_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("exposition", help="scraped /metrics body (file path)")
+    ap.add_argument("--min-families", type=int, default=10)
+    args = ap.parse_args()
+
+    with open(args.exposition, encoding="utf-8") as f:
+        text = f.read()
+    if not text.endswith("\n"):
+        fail("exposition must end with a newline")
+
+    helped, typed = {}, {}
+    samples = []  # (name, labels, value)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4:
+                fail(f"line {lineno}: bare # HELP")
+            helped[parts[2]] = parts[3]
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or parts[3] not in ("counter", "gauge", "histogram"):
+                fail(f"line {lineno}: bad # TYPE {line!r}")
+            typed[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"line {lineno}: unparseable sample {line!r}")
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            fail(f"line {lineno}: non-numeric value {m.group('value')!r}")
+        samples.append((m.group("name"), parse_labels(m.group("labels")), value))
+
+    families = set(typed)
+    for name, _, _ in samples:
+        fam = family_of(name, typed)
+        if fam not in typed:
+            fail(f"sample {name} has no # TYPE")
+        if fam not in helped:
+            fail(f"sample {name} has no # HELP")
+    if len(families) < args.min_families:
+        fail(f"only {len(families)} families, need >= {args.min_families}: "
+             f"{sorted(families)}")
+
+    # Counters: finite, non-negative.
+    for name, _, value in samples:
+        fam = family_of(name, typed)
+        if typed[fam] == "counter" and (not math.isfinite(value) or value < 0):
+            fail(f"counter {name} has invalid value {value}")
+
+    # Histograms: group buckets by (family, non-le labels) and require at
+    # least one quantile-derivable series overall.
+    derivable = 0
+    hist_series = {}
+    for name, labels, value in samples:
+        fam = family_of(name, typed)
+        if typed[fam] != "histogram" or not name.endswith("_bucket"):
+            continue
+        if "le" not in labels:
+            fail(f"histogram bucket {name} lacks le label")
+        key = (fam, tuple(sorted((k, v) for k, v in labels.items() if k != "le")))
+        hist_series.setdefault(key, []).append((labels["le"], value))
+    counts = {
+        (family_of(n, typed), tuple(sorted(l.items()))): v
+        for n, l, v in samples
+        if n.endswith("_count") and family_of(n, typed) in typed
+        and typed[family_of(n, typed)] == "histogram"
+    }
+    for (fam, rest), buckets in hist_series.items():
+        bounds = []
+        for le, v in buckets:
+            bounds.append((math.inf if le == "+Inf" else float(le), v))
+        bounds.sort(key=lambda bv: bv[0])
+        values = [v for _, v in bounds]
+        if values != sorted(values):
+            fail(f"{fam}{dict(rest)}: buckets not cumulative: {values}")
+        if not bounds or bounds[-1][0] != math.inf:
+            fail(f"{fam}{dict(rest)}: missing le=\"+Inf\" bucket")
+        count = counts.get((fam, rest))
+        if count is None:
+            fail(f"{fam}{dict(rest)}: histogram without _count")
+        if count != bounds[-1][1]:
+            fail(f"{fam}{dict(rest)}: _count {count} != +Inf bucket {bounds[-1][1]}")
+        derivable += 1
+    if derivable < 1:
+        fail("no histogram family with quantile-derivable buckets")
+
+    hist_fams = len({fam for fam, _ in hist_series})
+    print(f"check_metrics: OK: {len(families)} families "
+          f"({hist_fams} histogram series group(s), {len(samples)} samples)")
+
+
+if __name__ == "__main__":
+    main()
