@@ -1,10 +1,10 @@
 //! The `eval` bench suite behind `repro bench --suite eval`: measures
-//! delay-oracle throughput (evaluations/second) at the four catalog
+//! delay-oracle throughput (evaluations/second) at the catalog
 //! population shapes and emits the machine-readable `BENCH_eval.json`
 //! artifact that tracks the repo's perf trajectory.
 //!
-//! Cases per shape (`tiny` 7 / `paper` 53 / `deep` 213 / `mega10k`
-//! 10 021 clients):
+//! Cases per full-matrix shape (`tiny` 7 / `paper` 53 / `deep` 213 /
+//! `mega10k` 10 021 clients):
 //!
 //! * `analytic` — [`AnalyticTpd::eval_batch`] over the zero-allocation
 //!   scratch path (random candidates, so every evaluation streams the
@@ -21,6 +21,18 @@
 //! * `event-driven` — [`crate::des::EventDrivenEnv::eval_batch`] in the
 //!   conformance configuration (the DES cost floor: heap + tables
 //!   reused via [`crate::des::RoundScratch`]).
+//!
+//! The mega-scale shapes (`mega100k` 100 021 / `mega1M` 1 000 021
+//! clients, ROADMAP item 2) run a restricted case set — `analytic`,
+//! `analytic-delta`, `emulated`, plus `event-driven-delta` at 100k (the
+//! DES level-barrier delta fast path over one-swap neighbors of a
+//! fully-simulated base round). `analytic-legacy` (per-candidate
+//! allocation) and full `event-driven` rounds (O(clients · log clients)
+//! per candidate) are deliberately excluded there: they would dominate
+//! the suite's wall clock without informing the delta-speedup
+//! criterion, and `repro fleet --filter mega` covers the full-round
+//! path. At 1M the single full base round the DES delta case needs is
+//! itself seconds-long, so that case stops at 100k.
 //!
 //! The JSON schema (validated on every write, and by the CI smoke step):
 //!
@@ -79,13 +91,19 @@ pub struct BenchCase {
     pub summary: Summary,
 }
 
-/// The four catalog population shapes:
+/// The four full-matrix catalog population shapes:
 /// (label, depth, width, trainers per leaf).
 pub const SHAPES: [(&str, usize, usize, usize); 4] = [
     ("tiny", 2, 2, 2),       // 7 clients
     ("paper", 3, 4, 2),      // 53 clients (Fig-3 panel a)
     ("deep", 4, 4, 2),       // 213 clients (Fig-3 panel b)
     ("mega10k", 3, 4, 625),  // 10 021 clients
+];
+
+/// The mega-scale shapes (restricted case set — see the module docs).
+pub const MEGA_SHAPES: [(&str, usize, usize, usize); 2] = [
+    ("mega100k", 3, 4, 6250),  // 100 021 clients
+    ("mega1M", 3, 4, 62_500),  // 1 000 021 clients
 ];
 
 fn shape_population(depth: usize, width: usize, tpl: usize, seed: u64) -> Vec<ClientAttrs> {
@@ -98,6 +116,17 @@ fn shape_population(depth: usize, width: usize, tpl: usize, seed: u64) -> Vec<Cl
 fn random_batch(spec: HierarchySpec, cc: usize, count: usize, seed: u64) -> Vec<Placement> {
     let mut rng = Pcg32::seed_from_u64(seed);
     (0..count).map(|_| Placement::new(rng.sample_distinct(cc, spec.dimensions()))).collect()
+}
+
+/// Deterministic heterogeneous throttle specs for the emulated oracle.
+fn throttle_specs(cc: usize) -> Vec<ClientSpec> {
+    (0..cc)
+        .map(|i| ClientSpec {
+            name: format!("c{i}"),
+            speed_factor: [1.0, 0.5, 0.25][i % 3],
+            memory_pressure: [1.0, 2.0][i % 2],
+        })
+        .collect()
 }
 
 /// One-swap neighbors of `base` — drawn by the strategies' own shared
@@ -179,13 +208,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         }));
 
         // Emulated-testbed throttle model.
-        let specs: Vec<ClientSpec> = (0..cc)
-            .map(|i| ClientSpec {
-                name: format!("c{i}"),
-                speed_factor: [1.0, 0.5, 0.25][i % 3],
-                memory_pressure: [1.0, 2.0][i % 2],
-            })
-            .collect();
+        let specs = throttle_specs(cc);
         let mut emulated = EmulatedDelay::new(depth, width, &specs);
         cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, || {
             emulated.eval_batch(&batch).unwrap().len()
@@ -196,6 +219,53 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         cases.push(case(&b, "event-driven", shape, cc, dims, cfg.batch, || {
             des.eval_batch(&batch).unwrap().len()
         }));
+    }
+
+    // Mega-scale shapes: restricted case set (see the module docs).
+    for (shape, depth, width, tpl) in MEGA_SHAPES {
+        let spec = HierarchySpec::new(depth, width);
+        let dims = spec.dimensions();
+        let attrs = shape_population(depth, width, tpl, 0xE7A1 ^ (tpl as u64));
+        let cc = attrs.len();
+        let batch = random_batch(spec, cc, cfg.batch, 17 + tpl as u64);
+
+        let mut analytic = AnalyticTpd::new(spec, attrs.clone());
+        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, || {
+            analytic.eval_batch(&batch).unwrap().len()
+        }));
+
+        let base = batch[0].clone();
+        let neighbors = neighbor_batch(&base, cc, cfg.batch, 23 + tpl as u64);
+        let mut delta_env = AnalyticTpd::new(spec, attrs.clone());
+        delta_env.eval(&base).unwrap();
+        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, || {
+            for p in &neighbors {
+                black_box(delta_env.eval(p).unwrap());
+            }
+            neighbors.len()
+        }));
+
+        let specs = throttle_specs(cc);
+        let mut emulated = EmulatedDelay::new(depth, width, &specs);
+        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, || {
+            emulated.eval_batch(&batch).unwrap().len()
+        }));
+
+        // DES level-barrier delta path: one fully-simulated base round
+        // bases the analytic mirror, then every one-swap neighbor is
+        // delta-scored without touching the event loop. The base round
+        // at 1M clients is itself seconds-long, so this case stops at
+        // 100k (the delta mechanics are scale-invariant O(slots)).
+        if shape == "mega100k" {
+            let mut des_delta = EventDrivenEnv::conformance(spec, attrs);
+            des_delta.eval(&base).unwrap();
+            cases.push(case(&b, "event-driven-delta", shape, cc, dims, cfg.batch, || {
+                for p in &neighbors {
+                    black_box(des_delta.eval(p).unwrap());
+                }
+                neighbors.len()
+            }));
+        }
     }
     cases
 }
@@ -218,6 +288,24 @@ pub fn print_speedups(cases: &[BenchCase]) {
                 "{shape:<10} scratch {fast:>12.0}/s  delta {delta:>12.0}/s  legacy {slow:>12.0}/s  speedup ×{:.1} (delta ×{:.1})",
                 fast / slow.max(1e-12),
                 delta / slow.max(1e-12),
+            );
+        }
+    }
+    println!("\n=== mega-scale delta fast paths vs full streaming evals ===");
+    for (shape, ..) in MEGA_SHAPES {
+        let rate = |oracle: &str| {
+            cases
+                .iter()
+                .find(|c| c.oracle == oracle && c.shape == shape)
+                .map(|c| c.evals_per_sec)
+        };
+        if let (Some(full), Some(delta)) = (rate("analytic"), rate("analytic-delta")) {
+            let des = rate("event-driven-delta")
+                .map(|r| format!("  des-delta {r:>12.0}/s"))
+                .unwrap_or_default();
+            println!(
+                "{shape:<10} full {full:>12.0}/s  delta {delta:>12.0}/s  delta speedup ×{:.1}{des}",
+                delta / full.max(1e-12),
             );
         }
     }
@@ -326,16 +414,23 @@ mod tests {
     #[test]
     fn suite_covers_every_oracle_at_every_shape() {
         let cases = run_eval_suite(&tiny_cfg());
-        assert_eq!(cases.len(), SHAPES.len() * 5);
+        // 5 oracles per full-matrix shape; restricted mega set: 4 cases
+        // at 100k (incl. the DES delta path), 3 at 1M.
+        assert_eq!(cases.len(), SHAPES.len() * 5 + 4 + 3);
         for c in &cases {
             assert!(c.evals_per_sec > 0.0, "{}: {}", c.case, c.evals_per_sec);
             assert!(c.clients >= c.slots);
             assert_eq!(c.batch, 2);
         }
-        // The mega10k shape really is the 10k-client case.
-        let mega = cases.iter().find(|c| c.case == "analytic/mega10k").unwrap();
-        assert_eq!(mega.clients, 10_021);
-        assert_eq!(mega.slots, 21);
+        // The mega shapes really are the 10k/100k/1M-client cases.
+        let clients_of = |case: &str| {
+            cases.iter().find(|c| c.case == case).map(|c| (c.clients, c.slots)).unwrap()
+        };
+        assert_eq!(clients_of("analytic/mega10k"), (10_021, 21));
+        assert_eq!(clients_of("analytic/mega100k"), (100_021, 21));
+        assert_eq!(clients_of("analytic/mega1M"), (1_000_021, 21));
+        assert_eq!(clients_of("event-driven-delta/mega100k"), (100_021, 21));
+        assert!(!cases.iter().any(|c| c.case == "event-driven/mega1M"));
         print_speedups(&cases);
     }
 

@@ -56,6 +56,20 @@ impl NetworkModel {
         }
     }
 
+    /// True when every transfer is *exactly* free: `transfer_delay` ≡ 0
+    /// and `ingress_service` ≡ 0 for any data size (zero latency,
+    /// infinite bandwidth everywhere, infinite ingress, no jitter).
+    /// This is the static gate the DES level-barrier delta fast path
+    /// checks before trusting the analytic [`crate::fitness::TpdScratch`]
+    /// mirror — see [`crate::des::EventDrivenEnv`].
+    pub fn is_free(&self) -> bool {
+        self.jitter_sigma == 0.0
+            && self.agg_ingress.is_infinite()
+            && self.uplinks.iter().all(|l| {
+                l.latency_s == 0.0 && l.bandwidth.is_infinite() && l.down_bandwidth.is_infinite()
+            })
+    }
+
     /// Sample per-client links from a [`NetSpec`]'s ranges (a spec
     /// bandwidth of `0.0` means unlimited). With bandwidth asymmetry on,
     /// each client's upload bandwidth is the sampled base times an
@@ -128,6 +142,24 @@ mod tests {
             assert_eq!(net.transfer_delay(c, 5.0, &mut jitter), 0.0);
         }
         assert_eq!(net.ingress_service(0, 30.0), 0.0);
+        assert!(net.is_free());
+    }
+
+    #[test]
+    fn any_finite_cost_disqualifies_is_free() {
+        let free = NetworkModel::zero_cost(3);
+        let perturb: Vec<(&str, Box<dyn Fn(&mut NetworkModel)>)> = vec![
+            ("latency", Box::new(|n: &mut NetworkModel| n.uplinks[1].latency_s = 1e-9)),
+            ("bandwidth", Box::new(|n: &mut NetworkModel| n.uplinks[2].bandwidth = 1e12)),
+            ("downlink", Box::new(|n: &mut NetworkModel| n.uplinks[0].down_bandwidth = 1e12)),
+            ("ingress", Box::new(|n: &mut NetworkModel| n.agg_ingress = 1e12)),
+            ("jitter", Box::new(|n: &mut NetworkModel| n.jitter_sigma = 0.1)),
+        ];
+        for (what, f) in perturb {
+            let mut net = free.clone();
+            f(&mut net);
+            assert!(!net.is_free(), "{what} should disqualify");
+        }
     }
 
     #[test]

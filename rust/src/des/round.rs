@@ -25,9 +25,9 @@ use super::engine::EventQueue;
 use super::network::NetworkModel;
 use super::scenarios::Dynamics;
 use crate::configio::SimScenario;
-use crate::fitness::ClientAttrs;
+use crate::fitness::{ClientAttrs, TpdScratch};
 use crate::hierarchy::{Arrangement, EvalScratch, HierarchySpec};
-use crate::placement::{Environment, Placement, PlacementError};
+use crate::placement::{classify, Diff, Environment, PathTally, Placement, PlacementError};
 use crate::prng::Pcg32;
 
 /// Synchronization semantics of the simulated round.
@@ -426,6 +426,23 @@ impl RoundScratch {
 /// realized dynamics so candidates compete fairly, and the dynamics
 /// advance once per batch. Rounds run on an owned [`RoundScratch`], so
 /// batch scoring reuses the event heap and every per-slot table.
+///
+/// # The level-barrier delta fast path
+///
+/// When the configured round is *statically analyzable* — level-barrier
+/// semantics, an exactly-free network ([`NetworkModel::is_free`]), no
+/// modeled training, and an all-on nominal realization — the simulated
+/// TPD equals the analytic Eq. 6–7 fold **bit for bit** (same float
+/// operations in the same association; see
+/// `barrier_mode_reproduces_analytic_tpd_exactly`). In that regime the
+/// env keeps a [`TpdScratch`] mirror of the last fully-simulated
+/// placement and scores single-replace/single-swap neighbors through
+/// `delta_replace`/`delta_swap` at O(slots) instead of running the
+/// event loop — the ~100× lever that makes `mega100k`/`mega1M`
+/// conformance scoring tractable. Delta-scored candidates fire no
+/// events (`events_fired` counts simulated rounds only); every full
+/// simulation under the gate re-bases the mirror, with the bit-equality
+/// contract asserted in debug builds.
 pub struct EventDrivenEnv {
     attrs: Vec<ClientAttrs>,
     net: NetworkModel,
@@ -434,6 +451,8 @@ pub struct EventDrivenEnv {
     dynamics: Dynamics,
     realization: RoundRealization,
     scratch: RoundScratch,
+    /// Analytic mirror backing the level-barrier delta fast path.
+    delta: TpdScratch,
     /// Virtual FL rounds simulated so far (batches + single evals).
     pub rounds_simulated: usize,
     /// Total events fired across all simulated rounds.
@@ -458,6 +477,7 @@ impl EventDrivenEnv {
         assert_eq!(net.uplinks.len(), attrs.len(), "one uplink per client");
         let realization = dynamics.next_round(attrs.len());
         let scratch = RoundScratch::new(spec, attrs.len());
+        let delta = TpdScratch::new(spec, attrs.len());
         EventDrivenEnv {
             attrs,
             net,
@@ -466,6 +486,7 @@ impl EventDrivenEnv {
             dynamics,
             realization,
             scratch,
+            delta,
             rounds_simulated: 0,
             events_fired: 0,
             events_reported: 0,
@@ -517,7 +538,43 @@ impl EventDrivenEnv {
         &self.realization
     }
 
-    fn score(&mut self, placement: &[usize]) -> f64 {
+    /// True when the *next* round is statically analyzable, i.e. a
+    /// simulated round provably equals the analytic fold bit for bit:
+    /// level-barrier semantics, no modeled training, an exactly-free
+    /// network, and an all-on nominal realization (`pspeed / 1.0`
+    /// preserves bits). Checked once per dispatch — O(clients), paid
+    /// only on `eval`/`eval_batch` entry, never per candidate.
+    fn barrier_delta_eligible(&self) -> bool {
+        self.mode == SyncMode::LevelBarrier
+            && self.train_unit == 0.0
+            && self.net.is_free()
+            && self.realization.active.iter().all(|&a| a)
+            && self.realization.slowdown.iter().all(|&s| s == 1.0)
+    }
+
+    /// Score one *validated* placement. Under the level-barrier gate,
+    /// single-coordinate neighbors of the mirrored base placement take
+    /// the analytic delta fast path; everything else simulates the full
+    /// round and (when gated) re-bases the mirror.
+    fn score(&mut self, placement: &[usize], delta_ok: bool, tally: &mut PathTally) -> f64 {
+        if delta_ok && self.delta.loaded() {
+            match classify(self.delta.position(), placement) {
+                Diff::Same => {
+                    tally.same += 1;
+                    return self.delta.total();
+                }
+                Diff::Replace { slot, client } => {
+                    tally.delta += 1;
+                    return self.delta.delta_replace(slot, client, &self.attrs);
+                }
+                Diff::Swap { i, j } => {
+                    tally.delta += 1;
+                    return self.delta.delta_swap(i, j, &self.attrs);
+                }
+                Diff::Full => {}
+            }
+        }
+        tally.full += 1;
         let out = self.scratch.simulate_prevalidated(
             placement,
             &self.attrs,
@@ -527,6 +584,19 @@ impl EventDrivenEnv {
             self.mode,
         );
         self.events_fired += out.events;
+        if delta_ok {
+            // Re-base the analytic mirror on this fully-simulated
+            // placement so subsequent neighbors classify against it.
+            // Bit-equality between the two pipelines in this regime is
+            // the fast path's soundness contract (property-tested in
+            // tests/properties.rs; asserted here in debug builds).
+            let _mirrored = self.delta.eval_prevalidated(placement, &self.attrs);
+            debug_assert_eq!(
+                _mirrored.to_bits(),
+                out.tpd.to_bits(),
+                "DES round diverged from its analytic mirror"
+            );
+        }
         out.tpd
     }
 
@@ -551,7 +621,10 @@ impl Environment for EventDrivenEnv {
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
         self.scratch.validate(placement)?;
-        let tpd = self.score(placement);
+        let delta_ok = self.barrier_delta_eligible();
+        let mut tally = PathTally::default();
+        let tpd = self.score(placement, delta_ok, &mut tally);
+        tally.flush(1);
         self.advance_round();
         Ok(tpd)
     }
@@ -560,10 +633,13 @@ impl Environment for EventDrivenEnv {
         for p in batch {
             self.scratch.validate(p)?;
         }
+        let delta_ok = self.barrier_delta_eligible();
         let mut delays = Vec::with_capacity(batch.len());
+        let mut tally = PathTally::default();
         for p in batch {
-            delays.push(self.score(p));
+            delays.push(self.score(p, delta_ok, &mut tally));
         }
+        tally.flush(batch.len() as u64);
         self.advance_round();
         Ok(delays)
     }
@@ -791,6 +867,56 @@ mod tests {
         assert_eq!(env.rounds_simulated, 1);
         assert_eq!(env2.rounds_simulated, 5);
         assert!(env.events_fired > 0);
+    }
+
+    #[test]
+    fn barrier_delta_fast_path_is_bit_identical_to_full_simulation() {
+        // Conformance env (static gate holds): after one fully-simulated
+        // base round, every replace/swap neighbor must be delta-scored
+        // to the exact bits a fresh env's full simulation produces, and
+        // must fire zero events doing it.
+        let spec = HierarchySpec::new(3, 2);
+        let cc = 24;
+        let attrs = population(cc, 13);
+        let dims = spec.dimensions();
+        let mut env = EventDrivenEnv::conformance(spec, attrs.clone());
+        let base: Vec<usize> = (0..dims).collect();
+        env.eval(&Placement::new(base.clone())).unwrap();
+        let events_after_base = env.events_fired;
+        let mut rng = Pcg32::seed_from_u64(99);
+        for round in 0..40 {
+            let mut n = base.clone();
+            if round % 2 == 0 {
+                // Replace: hand one slot to a client outside the base.
+                let s = rng.gen_range(dims as u64) as usize;
+                n[s] = dims + rng.gen_range((cc - dims) as u64) as usize;
+            } else {
+                // Swap two distinct slots' clients.
+                let i = rng.gen_range(dims as u64) as usize;
+                let j = (i + 1 + rng.gen_range(dims as u64 - 1) as usize) % dims;
+                n.swap(i, j);
+            }
+            let got = env.eval(&Placement::new(n.clone())).unwrap();
+            let mut fresh = EventDrivenEnv::conformance(spec, attrs.clone());
+            let want = fresh.eval(&Placement::new(n)).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "round {round}");
+        }
+        assert_eq!(
+            env.events_fired, events_after_base,
+            "delta-scored neighbors must not run the event loop"
+        );
+
+        // With modeled training the gate is off: the same neighbors
+        // must go through the event loop again.
+        let net = NetworkModel::zero_cost(cc);
+        let mut gated_off =
+            EventDrivenEnv::new(spec, attrs, net, 1.0, SyncMode::LevelBarrier, Dynamics::off());
+        gated_off.eval(&Placement::new(base.clone())).unwrap();
+        let before = gated_off.events_fired;
+        let mut neighbor = base;
+        neighbor.swap(0, 1);
+        gated_off.eval(&Placement::new(neighbor)).unwrap();
+        assert!(gated_off.events_fired > before, "non-free round must simulate");
     }
 
     #[test]

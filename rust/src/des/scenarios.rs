@@ -252,9 +252,12 @@ fn variants() -> Vec<(&'static str, fn(&mut DesSpec))> {
 }
 
 /// The built-in scenario matrix: four population scales (7 → 10k+
-/// clients) × nine dynamics variants, plus a contended-uplink case and
-/// a 10k-client everything-on stress case. 38 scenarios, every one with
-/// a distinct seed, all scored by the event-driven oracle.
+/// clients) × nine dynamics variants, plus a contended-uplink case, a
+/// 10k-client everything-on stress case, and two static mega-scale
+/// cases (`mega100k` / `mega1M` — ROADMAP item 2's 100k–1M-client
+/// regime, kept static so the level-barrier delta fast path applies).
+/// 40 scenarios, every one with a distinct seed, all scored by the
+/// event-driven oracle.
 pub fn builtin_catalog() -> Vec<NamedScenario> {
     // (name, depth, width, trainers_per_leaf, pso iterations)
     let sizes: [(&str, usize, usize, usize, usize); 4] = [
@@ -301,6 +304,23 @@ pub fn builtin_catalog() -> Vec<NamedScenario> {
     mixed.des.net.agg_ingress = 500.0;
     mixed.des.train_unit = 1.0;
     catalog.push(NamedScenario { name: "mega10k-mixed".into(), sim: mixed });
+    // Mega-scale static cases: free network, nominal realization, so
+    // every single-coordinate PSO/SA move is delta-scored at O(slots)
+    // while full candidates still simulate. Iteration budgets shrink
+    // with scale — the full base rounds dominate the wall clock.
+    for (name, tpl, iters) in [("mega100k", 6250usize, 2usize), ("mega1M", 62_500, 1)] {
+        let mut sc = SimScenario {
+            depth: 3,
+            width: 4,
+            trainers_per_leaf: tpl,
+            env: "event-driven".to_string(),
+            ..SimScenario::default()
+        };
+        sc.pso.particles = 5;
+        sc.pso.iterations = iters;
+        sc.seed = 1000 + catalog_seed(name);
+        catalog.push(NamedScenario { name: name.into(), sim: sc });
+    }
     catalog
 }
 
@@ -374,6 +394,17 @@ mod tests {
             cat.iter().filter(|s| s.sim.client_count() >= 10_000).collect();
         assert!(mega.len() >= 4, "only {} 10k-client scenarios", mega.len());
         assert!(mega.iter().any(|s| !s.sim.des.dynamics.is_static()));
+        // The ROADMAP item-2 scales, static so the delta path applies.
+        let by_name = |name: &str| {
+            cat.iter().find(|s| s.name == name).unwrap_or_else(|| panic!("no {name}"))
+        };
+        assert_eq!(by_name("mega100k").sim.client_count(), 100_021);
+        assert_eq!(by_name("mega1M").sim.client_count(), 1_000_021);
+        for name in ["mega100k", "mega1M"] {
+            let s = by_name(name);
+            assert!(s.sim.des.dynamics.is_static(), "{name} must be static");
+            assert_eq!(s.sim.des.train_unit, 0.0);
+        }
         // Names and seeds are unique (independent randomness per cell).
         let mut uniq: Vec<&str> = names.clone();
         uniq.sort_unstable();

@@ -4,6 +4,12 @@
 //! id, so the output order — and therefore every downstream statistic —
 //! is independent of the thread count and of which worker ran which
 //! job.
+//!
+//! This parallelizes *across* trials (one trial = one cell replicate).
+//! For parallelism *within* a single candidate batch — one optimizer
+//! step fanned across threads — see [`crate::placement::ParEvalBatch`],
+//! which applies the same slot-vector/bit-identity discipline at the
+//! `eval_batch` level.
 
 use crate::obs::defs as obs;
 use crate::obs::WallSpan;

@@ -27,6 +27,13 @@
 //! Both delta paths are excursions: they never mutate the cached base
 //! state, which is exactly what SA / tabu / adaptive-pso probing need
 //! (many neighbors of one incumbent).
+//!
+//! Beyond `AnalyticTpd`, the scratch doubles as the analytic mirror
+//! behind the DES level-barrier delta fast path: when a barrier-mode
+//! simulation's folded completion times provably equal the Eq. 6–7
+//! delays bit for bit, `des::EventDrivenEnv` rebases a `TpdScratch` on
+//! each full simulation and scores neighbors from it without firing a
+//! single event.
 
 use super::ClientAttrs;
 use crate::hierarchy::{EvalScratch, HierarchySpec};

@@ -81,7 +81,8 @@ fn main() -> Result<()> {
                  ablate   per-mechanism ablation of a dynamic scenario (one-mechanism-off deltas);\n\
                  \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
                  \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
-                 bench    delay-oracle perf suite (evals/sec at tiny/paper/deep/mega10k);\n\
+                 bench    delay-oracle perf suite (evals/sec at tiny/paper/deep/mega10k,\n\
+                 \x20        plus delta-path cases at mega100k/mega1M);\n\
                  \x20        --suite eval [--samples 30 --warmup 3 --batch 32]\n\
                  \x20        [--out BENCH_eval.json]  (JSON schema-validated on write)\n\
                  e2e      end-to-end PSO-placed federated training\n\
@@ -588,8 +589,9 @@ fn cmd_ablate(args: &Args) -> Result<()> {
 
 /// Delay-oracle throughput suite: evals/sec for the analytic (scratch,
 /// delta and legacy pipelines), emulated and event-driven oracles at
-/// the four catalog shapes, with an optional schema-validated
-/// `BENCH_eval.json` artifact.
+/// the four full-matrix catalog shapes, plus restricted delta-path
+/// cases at the mega scales (100k/1M clients), with an optional
+/// schema-validated `BENCH_eval.json` artifact.
 fn cmd_bench(args: &Args) -> Result<()> {
     use repro::bench::eval_suite::{print_speedups, run_eval_suite, write_bench_json, SuiteConfig};
     let suite = args.str_flag("suite", "eval");

@@ -42,6 +42,21 @@ metric!(
     "repro_drive_runs_total",
     "placement::drive optimization runs completed"
 );
+metric!(
+    counter pub SHARD_BATCHES,
+    "repro_placement_shard_batches_total",
+    "eval_batch calls sharded across ParEvalBatch workers"
+);
+metric!(
+    counter pub SHARD_CANDIDATES,
+    "repro_placement_shard_candidates_total",
+    "Candidates scored by ParEvalBatch shard workers"
+);
+metric!(
+    gauge pub SHARD_WORKERS_HIGH_WATER,
+    "repro_placement_shard_workers_high_water",
+    "Largest ParEvalBatch worker count used (high-water mark)"
+);
 
 // --- des: virtual-time event core ----------------------------------------
 
@@ -158,6 +173,11 @@ metric!(
     "repro_obs_spans_dropped_total",
     "Trace spans evicted from the bounded ring buffer"
 );
+metric!(
+    counter pub NAN_OBSERVATIONS,
+    "repro_obs_nan_observations_total",
+    "NaN histogram observations dropped (no bucket, no sum, no count)"
+);
 
 /// Force-register every built-in family so exposition is complete and
 /// deterministic regardless of which code paths have run. Idempotent.
@@ -168,6 +188,9 @@ pub fn register_builtin() {
     PLACEMENT_FULL_EVALS.register();
     DRIVE_BATCHES.register();
     DRIVE_RUNS.register();
+    SHARD_BATCHES.register();
+    SHARD_CANDIDATES.register();
+    SHARD_WORKERS_HIGH_WATER.register();
     DES_EVENTS.register();
     DES_ROUNDS.register();
     DES_HEAP_HIGH_WATER.register();
@@ -188,6 +211,7 @@ pub fn register_builtin() {
     BROKER_MSGS_OUT.register();
     BROKER_BYTES_OUT.register();
     SPANS_DROPPED.register();
+    NAN_OBSERVATIONS.register();
 }
 
 #[cfg(test)]

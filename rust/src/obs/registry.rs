@@ -194,6 +194,13 @@ pub fn bucket_bound(i: usize) -> f64 {
 }
 
 /// Bucket index for value `v` (pure float math, no table, no alloc).
+///
+/// Prometheus `le` semantics: a value exactly equal to an exposed
+/// [`bucket_bound`] counts *in* that bucket. The `log2`/`ceil`
+/// estimate can disagree with the `exp2`-computed bound by one ulp
+/// (e.g. `bound(1) = 1e-5·√2` rounds up into bucket 2), so the
+/// estimate is nudged until `bound(b-1) < v ≤ bound(b)` holds
+/// exactly — property-tested as `bucket_of(bucket_bound(i)) == i`.
 #[inline]
 pub fn bucket_of(v: f64) -> usize {
     if !(v > HIST_MIN) {
@@ -201,11 +208,18 @@ pub fn bucket_of(v: f64) -> usize {
         return 0;
     }
     let idx = (HIST_SUB * (v / HIST_MIN).log2()).ceil();
-    if idx >= (HIST_BUCKETS - 1) as f64 {
+    let mut b = if idx >= (HIST_BUCKETS - 1) as f64 {
         HIST_BUCKETS - 1
     } else {
         idx as usize
+    };
+    if b > 0 && v <= bucket_bound(b - 1) {
+        b -= 1;
+    } else if v > bucket_bound(b) {
+        // Never fires for b = HIST_BUCKETS-1 (that bound is +Inf).
+        b += 1;
     }
+    b.min(HIST_BUCKETS - 1)
 }
 
 /// Log-linear histogram: 64 atomic buckets + exact sum/max.
@@ -263,8 +277,17 @@ impl Histogram {
         self.ensure_registered();
     }
 
-    /// Record one value (negative/NaN clamp into bucket 0, sum/max
-    /// treat them as 0).
+    /// Record one value.
+    ///
+    /// Input classes: finite `v > 0` land in their log-linear bucket
+    /// and feed `sum`/`max`; `v ≤ 0` (including `-Inf`) clamps to 0 in
+    /// bucket 0; `+Inf` counts in the overflow bucket (an infinite
+    /// round delay must drag quantiles *up*, not vanish into bucket 0)
+    /// but is excluded from `sum`/`max` so both stay finite and exact
+    /// over the finite observations; `NaN` carries no magnitude at all
+    /// and is dropped, counted by `repro_obs_nan_observations_total`.
+    /// Every non-NaN observation increments exactly one bucket, so the
+    /// `_count == +Inf-bucket` exposition invariant holds.
     #[inline]
     pub fn observe(&'static self, v: f64) {
         self.ensure_registered();
@@ -273,8 +296,15 @@ impl Histogram {
 
     #[inline]
     fn record(&self, v: f64) {
-        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        if v.is_nan() {
+            super::defs::NAN_OBSERVATIONS.inc();
+            return;
+        }
+        let v = v.max(0.0);
         self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        if !v.is_finite() {
+            return;
+        }
         // f64 sum via CAS on the bit pattern — writers never block.
         let mut cur = self.sum_bits.load(Ordering::Relaxed);
         loop {
@@ -545,6 +575,61 @@ mod tests {
         // Huge values clamp to the overflow bucket.
         assert_eq!(bucket_of(1e12), HIST_BUCKETS - 1);
         assert!(bucket_bound(HIST_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn bucket_bound_roundtrips_through_bucket_of() {
+        // Prometheus `le` semantics: a value exactly equal to an
+        // exposed bound counts *in* that bucket, for every bounded
+        // bucket (the log2/exp2 ulp nudge makes this exact).
+        for i in 0..HIST_BUCKETS - 1 {
+            let b = bucket_bound(i);
+            assert!(b.is_finite());
+            assert_eq!(bucket_of(b), i, "bound({i}) = {b}");
+        }
+        assert_eq!(bucket_of(f64::INFINITY), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_infinite_observations_count_in_overflow_bucket() {
+        metric!(histogram H, "test_registry_hist_inf_seconds", "t");
+        H.observe(0.5);
+        H.observe(f64::INFINITY);
+        let snap = H.snapshot();
+        assert_eq!(snap.count(), 2, "+Inf must be counted");
+        assert_eq!(snap.buckets[HIST_BUCKETS - 1], 1);
+        assert!((snap.sum - 0.5).abs() < 1e-12, "sum stays finite and exact");
+        assert_eq!(snap.max, 0.5, "max stays the exact finite max");
+        // An infinite delay drags the tail quantile up into the
+        // overflow bucket, never down toward bucket 0.
+        assert!(snap.quantile(0.99).unwrap() >= 0.5);
+    }
+
+    #[test]
+    fn histogram_nan_observations_are_dropped_and_counted() {
+        metric!(histogram H, "test_registry_hist_nan_seconds", "t");
+        let before = crate::obs::defs::NAN_OBSERVATIONS.get();
+        H.observe(f64::NAN);
+        assert_eq!(H.snapshot().count(), 0, "NaN must not land in any bucket");
+        assert!(crate::obs::defs::NAN_OBSERVATIONS.get() >= before + 1);
+        H.observe(1.0);
+        let snap = H.snapshot();
+        assert_eq!(snap.count(), 1);
+        assert!((snap.sum - 1.0).abs() < 1e-12);
+        assert_eq!(snap.max, 1.0);
+    }
+
+    #[test]
+    fn histogram_nonpositive_observations_land_in_bucket_zero() {
+        metric!(histogram H, "test_registry_hist_neg_seconds", "t");
+        H.observe(-3.0);
+        H.observe(0.0);
+        H.observe(f64::NEG_INFINITY);
+        let snap = H.snapshot();
+        assert_eq!(snap.count(), 3);
+        assert_eq!(snap.buckets[0], 3);
+        assert_eq!(snap.sum, 0.0);
+        assert_eq!(snap.max, 0.0);
     }
 
     #[test]

@@ -49,15 +49,15 @@ use crate::obs::defs as obs;
 /// telemetry costs nothing measurable at millions of evals/sec and
 /// adds zero allocations (pinned by `tests/alloc_guard.rs`).
 #[derive(Default)]
-struct PathTally {
-    same: u64,
-    delta: u64,
-    full: u64,
+pub(crate) struct PathTally {
+    pub(crate) same: u64,
+    pub(crate) delta: u64,
+    pub(crate) full: u64,
 }
 
 impl PathTally {
     #[inline]
-    fn flush(&self, evals: u64) {
+    pub(crate) fn flush(&self, evals: u64) {
         obs::PLACEMENT_EVALS.add(evals);
         obs::PLACEMENT_CACHE_HITS.add(self.same);
         obs::PLACEMENT_DELTA_EVALS.add(self.delta);
@@ -85,7 +85,7 @@ pub trait Environment: Send {
 }
 
 /// How a candidate differs from a cached base position.
-enum Diff {
+pub(crate) enum Diff {
     /// Identical to the base.
     Same,
     /// Exactly one slot changed to a client outside the base placement.
@@ -97,7 +97,13 @@ enum Diff {
 }
 
 /// Classify a *validated* candidate against the cached base position.
-fn classify(base: &[usize], candidate: &[usize]) -> Diff {
+///
+/// Note the `Replace` invariant: because both positions passed
+/// validation (distinct clients), the incoming client can never be one
+/// of the base's other aggregators — a replace-by-existing-aggregator
+/// would duplicate that client in the candidate and fail `validate`
+/// before classification ever runs.
+pub(crate) fn classify(base: &[usize], candidate: &[usize]) -> Diff {
     debug_assert_eq!(base.len(), candidate.len());
     let (mut first, mut second) = (None, None);
     for (s, (&b, &c)) in base.iter().zip(candidate).enumerate() {
@@ -152,7 +158,15 @@ impl AnalyticTpd {
                     tally.same += 1;
                     return self.scratch.total();
                 }
-                Diff::Replace { slot, client } if !self.scratch.is_aggregator(client) => {
+                Diff::Replace { slot, client } => {
+                    // Unreachable for an existing aggregator: such a
+                    // candidate duplicates `client` and fails `validate`
+                    // first (see `classify`) — so *every* valid replace
+                    // neighbor takes the delta path.
+                    debug_assert!(
+                        !self.scratch.is_aggregator(client),
+                        "validated replace target {client} already placed"
+                    );
                     tally.delta += 1;
                     return self.scratch.delta_replace(slot, client, &self.attrs);
                 }
@@ -204,12 +218,20 @@ impl Environment for AnalyticTpd {
 /// training. Useful for fast registry-driven experiments on deployment
 /// scenarios.
 ///
-/// The model mirrors the real round structure: all trainers work in
-/// parallel (slowest trainer gates the leaf level), then each hierarchy
+/// The model mirrors the real round structure: *every* client trains in
+/// parallel — leaf trainers and aggregators alike (the paper's
+/// "agtrainers" train too, which is also why phase 2 merges `fan-in + 1`
+/// models) — so the slowest client in the population gates the start of
+/// aggregation regardless of who fills which slot. Then each hierarchy
 /// level aggregates bottom-up (slowest cluster gates its level; cluster
 /// cost scales with fan-in, aggregation pays the memory-pressure
 /// factor). Like [`AnalyticTpd`] it evaluates over a reusable
-/// [`EvalScratch`] view — no arrangement is materialized per candidate.
+/// [`EvalScratch`] view — no arrangement is materialized per candidate —
+/// and since the training gate is placement-independent and per-slot
+/// fan-ins are fixed by the population size, a full evaluation is
+/// O(slots), with [`classify`]-routed replace/swap delta fast paths that
+/// re-fold only the touched levels (bit-identical to the full path,
+/// property-tested).
 pub struct EmulatedDelay {
     spec: HierarchySpec,
     clocks: Vec<EmulatedClock>,
@@ -218,18 +240,67 @@ pub struct EmulatedDelay {
     pub train_unit_secs: f64,
     /// Seconds of full-speed compute per model merged during aggregation.
     pub agg_unit_secs: f64,
+    /// Slowest Train throttle factor in the population. Every client
+    /// trains (aggregators are agtrainers), so the phase-1 gate is
+    /// `train_factor_max * train_unit_secs` for every placement.
+    train_factor_max: f64,
+    /// Per-slot merge fan-in (children + the slot's own model). Leaf
+    /// partition *sizes* depend only on the population size, never on
+    /// which clients land where, so this is fixed at construction.
+    fan_in: Vec<f64>,
+    /// Delta-path base state (mirrors [`TpdScratch`]): the last fully
+    /// evaluated placement with its per-slot delays and per-level maxima.
+    base: Vec<usize>,
+    slot_delay: Vec<f64>,
+    level_max: Vec<f64>,
+    base_total: f64,
+    base_loaded: bool,
+    /// The `(train, agg)` unit values the base was computed with — the
+    /// unit fields are `pub`, and mutating them invalidates the cache.
+    base_units: (f64, f64),
 }
 
 impl EmulatedDelay {
     pub fn new(depth: usize, width: usize, clients: &[ClientSpec]) -> EmulatedDelay {
         let spec = HierarchySpec::new(depth, width);
-        assert!(clients.len() >= spec.dimensions(), "population smaller than slot count");
+        let dims = spec.dimensions();
+        assert!(clients.len() >= dims, "population smaller than slot count");
+        let clocks: Vec<EmulatedClock> =
+            clients.iter().map(|c| EmulatedClock::new(c.clone())).collect();
+        let train_factor_max = clocks
+            .iter()
+            .map(|c| c.factor(WorkKind::Train))
+            .fold(0.0f64, f64::max);
+        // Leaf fan-ins come from the scratch's own round-robin partition
+        // (loaded once with an arbitrary valid placement) so the sizes
+        // can never drift from the partition the other oracles see.
+        let mut scratch = EvalScratch::new(spec, clients.len());
+        let ident: Vec<usize> = (0..dims).collect();
+        scratch.load_prevalidated(&ident);
+        let leaf_start = scratch.leaf_start();
+        let fan_in: Vec<f64> = (0..dims)
+            .map(|s| {
+                if s >= leaf_start {
+                    (scratch.leaf_trainers(s - leaf_start).len() + 1) as f64
+                } else {
+                    (spec.children(s).len() + 1) as f64
+                }
+            })
+            .collect();
         EmulatedDelay {
             spec,
-            clocks: clients.iter().map(|c| EmulatedClock::new(c.clone())).collect(),
-            scratch: EvalScratch::new(spec, clients.len()),
+            clocks,
+            scratch,
             train_unit_secs: 1.0,
             agg_unit_secs: 0.5,
+            train_factor_max,
+            fan_in,
+            base: Vec::with_capacity(dims),
+            slot_delay: vec![0.0; dims],
+            level_max: vec![0.0; spec.depth],
+            base_total: 0.0,
+            base_loaded: false,
+            base_units: (1.0, 0.5),
         }
     }
 
@@ -238,37 +309,93 @@ impl EmulatedDelay {
         EmulatedDelay::new(sc.depth, sc.width, &sc.clients)
     }
 
-    fn delay_of(&mut self, placement: &[usize]) -> f64 {
-        self.scratch.load_prevalidated(placement);
-        // Phase 1: local training in parallel — the slowest trainer
-        // (or training aggregator) gates the round start of aggregation.
-        let mut train = 0.0f64;
-        for leaf in 0..self.scratch.leaf_count() {
-            for &t in self.scratch.leaf_trainers(leaf) {
-                train = train.max(self.clocks[t].factor(WorkKind::Train) * self.train_unit_secs);
-            }
-        }
-        // Phase 2: aggregation bottom-up, one level at a time.
-        let mut total = train;
-        let leaf_start = self.scratch.leaf_start();
+    /// Phase-2 merge delay of `slot` when hosted by client `agg`.
+    #[inline]
+    fn slot_delay_of(&self, slot: usize, agg: usize) -> f64 {
+        self.clocks[agg].factor(WorkKind::Aggregate) * self.agg_unit_secs * self.fan_in[slot]
+    }
+
+    /// Full evaluation: rebuild the per-slot/per-level caches and make
+    /// `placement` the new delta base.
+    fn load_full(&mut self, placement: &[usize]) -> f64 {
+        self.base.clear();
+        self.base.extend_from_slice(placement);
+        let mut total = self.train_factor_max * self.train_unit_secs;
         for l in (0..self.spec.depth).rev() {
-            let mut level_max = 0.0f64;
+            let mut m = 0.0f64;
             for slot in self.spec.level_slots(l) {
-                let agg = placement[slot];
-                let fan_in = if slot >= leaf_start {
-                    self.scratch.leaf_trainers(slot - leaf_start).len() + 1
-                } else {
-                    self.spec.children(slot).len() + 1
-                };
-                level_max = level_max.max(
-                    self.clocks[agg].factor(WorkKind::Aggregate)
-                        * self.agg_unit_secs
-                        * fan_in as f64,
-                );
+                let d = self.slot_delay_of(slot, placement[slot]);
+                self.slot_delay[slot] = d;
+                m = m.max(d);
             }
-            total += level_max;
+            self.level_max[l] = m;
+            total += m;
+        }
+        self.base_total = total;
+        self.base_loaded = true;
+        self.base_units = (self.train_unit_secs, self.agg_unit_secs);
+        total
+    }
+
+    /// Non-mutating delta excursion: total with slots `s1`/`s2` scored
+    /// as `d1`/`d2` (pass `s1 == s2` for a single replace). Touched
+    /// levels are re-folded in the exact full-path slot order, untouched
+    /// levels reuse their cached maxima — so the sum is performed in the
+    /// same order over the same values and stays bit-identical.
+    fn delta_total(&self, s1: usize, d1: f64, s2: usize, d2: f64) -> f64 {
+        let (l1, l2) = (self.spec.level_of(s1), self.spec.level_of(s2));
+        let mut total = self.train_factor_max * self.train_unit_secs;
+        for l in (0..self.spec.depth).rev() {
+            let m = if l == l1 || l == l2 {
+                let mut m = 0.0f64;
+                for s in self.spec.level_slots(l) {
+                    let d = if s == s1 {
+                        d1
+                    } else if s == s2 {
+                        d2
+                    } else {
+                        self.slot_delay[s]
+                    };
+                    m = m.max(d);
+                }
+                m
+            } else {
+                self.level_max[l]
+            };
+            total += m;
         }
         total
+    }
+
+    /// Score one *validated* placement, routing single-coordinate
+    /// neighbors of the cached base through the delta fast path.
+    fn delay_of(&mut self, placement: &[usize], tally: &mut PathTally) -> f64 {
+        if self.base_loaded && self.base_units == (self.train_unit_secs, self.agg_unit_secs) {
+            match classify(&self.base, placement) {
+                Diff::Same => {
+                    tally.same += 1;
+                    return self.base_total;
+                }
+                Diff::Replace { slot, client } => {
+                    debug_assert!(
+                        !self.base.contains(&client),
+                        "validated replace target {client} already placed"
+                    );
+                    tally.delta += 1;
+                    let d = self.slot_delay_of(slot, client);
+                    return self.delta_total(slot, d, slot, d);
+                }
+                Diff::Swap { i, j } => {
+                    tally.delta += 1;
+                    let di = self.slot_delay_of(i, self.base[j]);
+                    let dj = self.slot_delay_of(j, self.base[i]);
+                    return self.delta_total(i, di, j, dj);
+                }
+                Diff::Full => {}
+            }
+        }
+        tally.full += 1;
+        self.load_full(placement)
     }
 }
 
@@ -279,8 +406,10 @@ impl Environment for EmulatedDelay {
 
     fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
         self.scratch.validate(placement)?;
-        obs::PLACEMENT_EVALS.inc();
-        Ok(self.delay_of(placement))
+        let mut tally = PathTally::default();
+        let delay = self.delay_of(placement, &mut tally);
+        tally.flush(1);
+        Ok(delay)
     }
 
     fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
@@ -288,10 +417,11 @@ impl Environment for EmulatedDelay {
             self.scratch.validate(p)?;
         }
         let mut delays = Vec::with_capacity(batch.len());
+        let mut tally = PathTally::default();
         for p in batch {
-            delays.push(self.delay_of(p));
+            delays.push(self.delay_of(p, &mut tally));
         }
-        obs::PLACEMENT_EVALS.add(batch.len() as u64);
+        tally.flush(batch.len() as u64);
         Ok(delays)
     }
 }
@@ -389,6 +519,127 @@ mod tests {
             .eval_batch(&[Placement::new(vec![0, 1])])
             .unwrap_err();
         assert!(matches!(err, PlacementError::WrongArity { .. }), "{err}");
+    }
+
+    #[test]
+    fn every_valid_replace_neighbor_takes_the_delta_path() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 10;
+        let mut env = AnalyticTpd::new(spec, population(cc));
+        let base = vec![0usize, 1, 2];
+        env.eval(&Placement::new(base.clone())).unwrap();
+        let before = obs::PLACEMENT_DELTA_EVALS.get();
+        let mut tally = PathTally::default();
+        let mut neighbors = 0u64;
+        for slot in 0..3 {
+            for client in 0..cc {
+                let mut n = base.clone();
+                n[slot] = client;
+                if n == base || env.scratch.validate(&n).is_err() {
+                    // The base itself, or a replace-by-existing-aggregator
+                    // — the duplicate `validate` rejects before classify
+                    // ever sees it (the old `!is_aggregator` guard was
+                    // unreachable for exactly this reason).
+                    continue;
+                }
+                env.tpd_of(&n, &mut tally);
+                neighbors += 1;
+            }
+        }
+        assert_eq!(neighbors, 3 * (cc as u64 - 3)); // every off-base client, per slot
+        assert_eq!(tally.delta, neighbors, "every valid replace neighbor must go delta");
+        assert_eq!(tally.full, 0);
+        assert_eq!(tally.same, 0);
+        // The tally is what feeds the public PLACEMENT_DELTA_EVALS counter.
+        tally.flush(neighbors);
+        assert!(obs::PLACEMENT_DELTA_EVALS.get() >= before + neighbors);
+    }
+
+    #[test]
+    fn aggregators_train_too_and_gate_phase_one() {
+        // 8 clients, one of them (id 7) a severe straggler in training.
+        // Whether it is placed as an aggregator or left as a leaf
+        // trainer, its local training gates phase 1 — aggregators are
+        // agtrainers. (Pre-fix, promoting the straggler to an
+        // aggregator slot silently removed its training cost.)
+        let mut clients: Vec<ClientSpec> = (0..8)
+            .map(|i| ClientSpec {
+                name: format!("c{i}"),
+                speed_factor: 1.0,
+                memory_pressure: 1.0,
+            })
+            .collect();
+        clients[7].speed_factor = 100.0;
+        let mut env = EmulatedDelay::new(2, 2, &clients);
+        env.agg_unit_secs = 1e-6; // isolate the phase-1 training gate
+        let slow_agg = env.eval(&Placement::new(vec![7, 1, 2])).unwrap();
+        let all_fast = env.eval(&Placement::new(vec![0, 1, 2])).unwrap();
+        assert!(
+            slow_agg > all_fast,
+            "a slow aggregator still trains: {slow_agg} !> {all_fast}"
+        );
+        // Both placements pay the straggler's training gate.
+        assert!(all_fast >= 100.0, "phase 1 must gate on the slowest client: {all_fast}");
+    }
+
+    #[test]
+    fn emulated_delta_paths_are_bit_identical_to_full_evals() {
+        let clients: Vec<ClientSpec> = (0..12)
+            .map(|i| ClientSpec {
+                name: format!("c{i}"),
+                speed_factor: 1.0 + (i % 5) as f64 * 0.7,
+                memory_pressure: 1.0 + (i % 3) as f64 * 1.5,
+            })
+            .collect();
+        let mut env = EmulatedDelay::new(3, 2, &clients);
+        let mut rng = Pcg32::seed_from_u64(11);
+        let base: Vec<usize> = rng.sample_distinct(12, 7);
+        env.eval(&Placement::new(base.clone())).unwrap();
+        for _ in 0..40 {
+            // Replace neighbor vs a fresh environment's full eval.
+            let slot = rng.gen_range(7) as usize;
+            let mut id = rng.gen_range(12) as usize;
+            while base.contains(&id) {
+                id = (id + 1) % 12;
+            }
+            let mut n = base.clone();
+            n[slot] = id;
+            let got = env.eval(&Placement::new(n.clone())).unwrap();
+            let want =
+                EmulatedDelay::new(3, 2, &clients).eval(&Placement::new(n)).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "replace {slot}->{id}");
+            // Swap neighbor.
+            let (i, j) = (rng.gen_range(7) as usize, rng.gen_range(7) as usize);
+            if i != j {
+                let mut sw = base.clone();
+                sw.swap(i, j);
+                let got = env.eval(&Placement::new(sw.clone())).unwrap();
+                let want =
+                    EmulatedDelay::new(3, 2, &clients).eval(&Placement::new(sw)).unwrap();
+                assert_eq!(got.to_bits(), want.to_bits(), "swap {i}<->{j}");
+            }
+            // Re-evaluating the base is the cached-total fast path.
+            let got = env.eval(&Placement::new(base.clone())).unwrap();
+            let want = EmulatedDelay::new(3, 2, &clients)
+                .eval(&Placement::new(base.clone()))
+                .unwrap();
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn emulated_batch_matches_single_evals() {
+        let sc = DeployScenario::paper_docker();
+        let mut env = EmulatedDelay::from_scenario(&sc);
+        let batch: Vec<Placement> = vec![
+            Placement::new(vec![0, 1, 2]),
+            Placement::new(vec![9, 1, 2]),
+            Placement::new(vec![4, 2, 7]),
+        ];
+        let batched = env.eval_batch(&batch).unwrap();
+        let singles: Vec<f64> =
+            batch.iter().map(|p| env.eval(p).unwrap()).collect();
+        assert_eq!(batched, singles);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 mod adaptive;
 mod environment;
 mod ga;
+mod par_eval;
 mod pso_placement;
 mod pso_sim;
 mod random;
@@ -44,7 +45,9 @@ mod tabu;
 pub use adaptive::AdaptivePsoPlacement;
 pub use crate::des::EventDrivenEnv;
 pub use environment::{AnalyticTpd, EmulatedDelay, Environment};
+pub(crate) use environment::{classify, Diff, PathTally};
 pub use ga::{GaConfig, GaPlacement};
+pub use par_eval::ParEvalBatch;
 pub use pso_placement::PsoPlacement;
 pub use pso_sim::SwarmOptimizer;
 pub use random::RandomPlacement;

@@ -1,0 +1,222 @@
+//! Intra-batch parallel evaluation: shard one `eval_batch` dispatch
+//! across worker threads, each owning its own [`Environment`] instance
+//! (and therefore its own `TpdScratch`/`EvalScratch`/`RoundScratch`),
+//! with results slotted back by candidate index.
+//!
+//! # Bit-exactness contract
+//!
+//! Sharding is *bit-identical to the serial path at any thread count*
+//! (property-tested in `tests/properties.rs` at 1, 2 and 8 workers).
+//! The contract rests on two invariants the environments already hold:
+//!
+//! 1. **Path-independence of scores.** Every scoring path — cached
+//!    `Same`, `delta_replace`/`delta_swap`, full streaming eval, full
+//!    DES round — returns the exact bits a fresh full evaluation of the
+//!    same candidate would, with all per-leaf/per-level folds performed
+//!    in one fixed order. So it does not matter which worker's rolling
+//!    delta base a candidate is classified against.
+//! 2. **Lockstep round streams.** For dynamic environments (the DES
+//!    oracle), the realized round advances once per `eval_batch`
+//!    dispatch and the per-transfer jitter stream reseeds from the
+//!    round seed per candidate. [`ParEvalBatch`] dispatches **every**
+//!    worker on **every** batch — an empty chunk still advances that
+//!    worker's round stream — so all workers realize the same virtual
+//!    rounds a serial environment would.
+//!
+//! Chunks are contiguous, so concatenating worker results in worker
+//! order restores candidate order exactly.
+
+use super::{Environment, Placement, PlacementError};
+use crate::obs::defs as obs;
+
+/// Shards [`Environment::eval_batch`] across `N` worker environments on
+/// `N` threads (worker 0 runs inline on the dispatching thread). Build
+/// with a factory so each worker owns an identically-constructed
+/// environment; see the module docs for the bit-exactness contract.
+///
+/// On an `Err` (an invalid candidate) the globally-first error is
+/// returned, but workers that already scored their chunk have advanced
+/// their round streams — lockstep is only guaranteed along the
+/// all-`Ok` path, which is the only path optimizers drive (they
+/// generate validated candidates).
+pub struct ParEvalBatch<E: Environment> {
+    workers: Vec<E>,
+}
+
+impl<E: Environment> ParEvalBatch<E> {
+    /// Build `threads` workers by calling `factory(0..threads)`. Each
+    /// call must construct the environment identically (same scenario,
+    /// same seeds) — the worker index is provided for labeling only.
+    pub fn new(threads: usize, mut factory: impl FnMut(usize) -> E) -> ParEvalBatch<E> {
+        assert!(threads >= 1, "need at least one worker");
+        ParEvalBatch { workers: (0..threads).map(&mut factory).collect() }
+    }
+
+    /// The configured worker count.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl<E: Environment> Environment for ParEvalBatch<E> {
+    /// Transparent layer: report the inner oracle's name.
+    fn name(&self) -> &'static str {
+        self.workers[0].name()
+    }
+
+    fn eval(&mut self, placement: &Placement) -> Result<f64, PlacementError> {
+        // Single candidates are not worth a thread spawn: worker 0
+        // scores, the rest advance one round on an empty batch so every
+        // stream stays in lockstep.
+        let mut workers = self.workers.iter_mut();
+        let first = workers.next().expect("at least one worker");
+        let tpd = first.eval(placement)?;
+        for w in workers {
+            w.eval_batch(&[])?;
+        }
+        Ok(tpd)
+    }
+
+    fn eval_batch(&mut self, batch: &[Placement]) -> Result<Vec<f64>, PlacementError> {
+        let n = batch.len();
+        let threads = self.workers.len();
+        obs::SHARD_BATCHES.inc();
+        obs::SHARD_CANDIDATES.add(n as u64);
+        obs::SHARD_WORKERS_HIGH_WATER.set_max(threads as i64);
+        // Contiguous chunks: concatenation in worker order restores
+        // candidate order. Every worker is dispatched, empty or not.
+        let chunk = n.div_ceil(threads).max(1);
+        let chunk_of = |w: usize| &batch[(w * chunk).min(n)..((w + 1) * chunk).min(n)];
+
+        let mut out: Vec<Option<Result<Vec<f64>, PlacementError>>> =
+            (0..threads).map(|_| None).collect();
+        if n <= chunk {
+            // One non-empty chunk (single worker or tiny batch): skip
+            // the thread scope entirely.
+            for (w, (worker, slot)) in self.workers.iter_mut().zip(&mut out).enumerate() {
+                *slot = Some(worker.eval_batch(chunk_of(w)));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut inline = None;
+                for (w, (worker, slot)) in self.workers.iter_mut().zip(&mut out).enumerate() {
+                    let work = chunk_of(w);
+                    if w == 0 {
+                        inline = Some((worker, slot, work));
+                    } else {
+                        s.spawn(move || *slot = Some(worker.eval_batch(work)));
+                    }
+                }
+                let (worker, slot, work) = inline.expect("worker 0 exists");
+                *slot = Some(worker.eval_batch(work));
+            });
+        }
+
+        let mut delays = Vec::with_capacity(n);
+        for r in out {
+            // Worker order == candidate order, so the first erroring
+            // worker holds the globally-first invalid candidate.
+            delays.append(&mut r.expect("every worker reports")?);
+        }
+        Ok(delays)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fitness::ClientAttrs;
+    use crate::hierarchy::HierarchySpec;
+    use crate::placement::AnalyticTpd;
+    use crate::prng::{Pcg32, Rng};
+
+    fn population(n: usize, seed: u64) -> Vec<ClientAttrs> {
+        let mut rng = Pcg32::seed_from_u64(seed);
+        ClientAttrs::sample_population(n, (5.0, 15.0), (10.0, 50.0), 5.0, &mut rng)
+    }
+
+    fn neighbor_rich_batch(
+        spec: HierarchySpec,
+        cc: usize,
+        count: usize,
+        seed: u64,
+    ) -> Vec<Placement> {
+        // Random candidates interleaved with replace/swap neighbors of
+        // their predecessor, so every scoring path (full, delta, same)
+        // is exercised across shard boundaries.
+        let dims = spec.dimensions();
+        let mut rng = Pcg32::seed_from_u64(seed);
+        let mut batch = vec![Placement::new(rng.sample_distinct(cc, dims))];
+        while batch.len() < count {
+            let prev: Vec<usize> = batch.last().unwrap().to_vec();
+            let mut next = prev.clone();
+            match rng.gen_range(4) {
+                0 => next = rng.sample_distinct(cc, dims),
+                1 => {
+                    let s = rng.gen_range(dims as u64) as usize;
+                    let mut c = rng.gen_range(cc as u64) as usize;
+                    while next.contains(&c) {
+                        c = (c + 1) % cc;
+                    }
+                    next[s] = c;
+                }
+                2 if dims >= 2 => {
+                    let i = rng.gen_range(dims as u64) as usize;
+                    let j = (i + 1 + rng.gen_range(dims as u64 - 1) as usize) % dims;
+                    next.swap(i, j);
+                }
+                _ => {} // duplicate of prev: the Same path
+            }
+            batch.push(Placement::new(next));
+        }
+        batch
+    }
+
+    #[test]
+    fn sharded_analytic_batches_match_serial_bit_for_bit() {
+        let spec = HierarchySpec::new(3, 2);
+        let cc = 40;
+        let attrs = population(cc, 21);
+        let batch = neighbor_rich_batch(spec, cc, 33, 5);
+        let mut serial = AnalyticTpd::new(spec, attrs.clone());
+        let want = serial.eval_batch(&batch).unwrap();
+        for threads in [1usize, 2, 3, 8, 16] {
+            let mut par = ParEvalBatch::new(threads, |_| AnalyticTpd::new(spec, attrs.clone()));
+            assert_eq!(par.threads(), threads);
+            let got = par.eval_batch(&batch).unwrap();
+            let want_bits: Vec<u64> = want.iter().map(|d| d.to_bits()).collect();
+            let got_bits: Vec<u64> = got.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_candidates_is_fine() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 12;
+        let attrs = population(cc, 3);
+        let batch = neighbor_rich_batch(spec, cc, 2, 9);
+        let mut serial = AnalyticTpd::new(spec, attrs.clone());
+        let mut par = ParEvalBatch::new(8, |_| AnalyticTpd::new(spec, attrs.clone()));
+        assert_eq!(par.eval_batch(&batch).unwrap(), serial.eval_batch(&batch).unwrap());
+        // Empty batches and singles dispatch cleanly too.
+        assert_eq!(par.eval_batch(&[]).unwrap(), Vec::<f64>::new());
+        assert_eq!(
+            par.eval(&batch[0]).unwrap().to_bits(),
+            serial.eval(&batch[0]).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn first_invalid_candidate_wins_across_shards() {
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 12;
+        let attrs = population(cc, 4);
+        let mut batch = neighbor_rich_batch(spec, cc, 12, 2);
+        batch[3] = Placement::new(vec![0, 0, 1]); // duplicate, in shard 1 of 4
+        batch[9] = Placement::new(vec![5]); // wrong arity, in shard 3 of 4
+        let mut par = ParEvalBatch::new(4, |_| AnalyticTpd::new(spec, attrs.clone()));
+        let err = par.eval_batch(&batch).unwrap_err();
+        assert!(matches!(err, PlacementError::DuplicateClient { .. }), "{err}");
+    }
+}

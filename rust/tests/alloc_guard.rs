@@ -223,6 +223,38 @@ fn disabled_span_checks_allocate_nothing() {
 }
 
 #[test]
+fn sharded_eval_batch_allocations_do_not_scale_with_batch_or_population() {
+    let _serial = serialized();
+    // ParEvalBatch pays a fixed per-dispatch overhead — the result
+    // slots, chunk bookkeeping and two thread spawns for three workers
+    // (worker 0 runs inline) — but nothing per candidate or per
+    // client: each worker scores its contiguous chunk on its own
+    // pre-built scratches. Quadrupling the batch and growing the
+    // population ~300× must leave the allocation count unchanged.
+    use repro::placement::ParEvalBatch;
+    let mut counts = Vec::new();
+    for (tpl, nbatch) in [(2usize, 8usize), (625, 32)] {
+        let spec = HierarchySpec::new(3, 4);
+        let attrs = population(spec, tpl, 11);
+        let cc = attrs.len();
+        let candidates = batch(spec, cc, nbatch, 12);
+        let mut env = ParEvalBatch::new(3, |_| AnalyticTpd::new(spec, attrs.clone()));
+        for _ in 0..2 {
+            env.eval_batch(&candidates).unwrap(); // warm every worker
+        }
+        let n = count_allocs(|| {
+            let delays = env.eval_batch(&candidates).unwrap();
+            assert_eq!(delays.len(), nbatch);
+        });
+        counts.push(n);
+    }
+    assert_eq!(
+        counts[0], counts[1],
+        "sharded dispatch allocations must not scale with batch or population: {counts:?}"
+    );
+}
+
+#[test]
 fn event_driven_eval_batch_steady_state_allocates_only_the_result_vec() {
     let _serial = serialized();
     // Conformance configuration; the event heap and every per-slot

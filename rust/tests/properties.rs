@@ -742,3 +742,107 @@ fn prop_spec_closed_forms_match_reference_series() {
         }
     });
 }
+
+#[test]
+fn prop_sharded_eval_batch_bit_identical_to_serial() {
+    // ParEvalBatch must reproduce the serial environment bit for bit at
+    // any worker count: across random shapes, neighbor-rich batches
+    // (hitting the same/delta/full scoring paths across shard
+    // boundaries), and successive batches of a *dynamic* DES scenario
+    // (every worker's round stream stays in lockstep because all
+    // workers are dispatched on every batch, empty chunks included).
+    use repro::configio::SimScenario;
+    forall("sharded eval_batch == serial", 25, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + 1 + g.usize_in(0..30);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let mut batch = vec![Placement::new(rng.sample_distinct(cc, dims))];
+        for _ in 0..g.usize_in(4..24) {
+            let prev: Vec<usize> = batch.last().unwrap().to_vec();
+            let mut next = prev.clone();
+            match rng.gen_range(4) {
+                0 => next = rng.sample_distinct(cc, dims),
+                1 => {
+                    let (slot, id) = draw_slot_replacement(&prev, cc, &mut rng);
+                    next[slot] = id;
+                }
+                2 if dims >= 2 => {
+                    let i = rng.gen_range(dims as u64) as usize;
+                    let j = (i + 1 + rng.gen_range(dims as u64 - 1) as usize) % dims;
+                    next.swap(i, j);
+                }
+                _ => {} // duplicate of the predecessor: the Same path
+            }
+            batch.push(Placement::new(next));
+        }
+        let bits = |v: Vec<f64>| -> Vec<u64> { v.iter().map(|d| d.to_bits()).collect() };
+        let mut serial = AnalyticTpd::new(spec, attrs.clone());
+        let want = bits(serial.eval_batch(&batch).unwrap());
+        for threads in [1usize, 2, 8] {
+            let mut par = ParEvalBatch::new(threads, |_| AnalyticTpd::new(spec, attrs.clone()));
+            let got = bits(par.eval_batch(&batch).unwrap());
+            assert_eq!(got, want, "analytic, threads={threads}");
+        }
+        // Dynamic DES scenario: jitter, dropouts and stragglers, three
+        // rounds of batches with single evals interleaved.
+        let mut sc = SimScenario { depth: spec.depth, width: spec.width, ..SimScenario::default() };
+        sc.seed = g.u64_in(0..1_000_000);
+        sc.des.train_unit = 1.0;
+        sc.des.net.latency_range_s = (0.001, 0.02);
+        sc.des.net.bandwidth_range = (5.0, 50.0);
+        sc.des.net.jitter_sigma = 0.3;
+        sc.des.dynamics.dropout_prob = 0.2;
+        sc.des.dynamics.straggler_prob = 0.3;
+        sc.des.dynamics.straggler_frac = 0.2;
+        sc.des.dynamics.straggler_slowdown = 3.0;
+        let mut serial_des = EventDrivenEnv::from_scenario(&sc, attrs.clone());
+        let mut par_des =
+            ParEvalBatch::new(3, |_| EventDrivenEnv::from_scenario(&sc, attrs.clone()));
+        for round in 0..3 {
+            let want = bits(serial_des.eval_batch(&batch).unwrap());
+            let got = bits(par_des.eval_batch(&batch).unwrap());
+            assert_eq!(got, want, "des round {round}");
+            let w = serial_des.eval(&batch[0]).unwrap();
+            let p = par_des.eval(&batch[0]).unwrap();
+            assert_eq!(p.to_bits(), w.to_bits(), "des single round {round}");
+        }
+    });
+}
+
+#[test]
+fn prop_des_barrier_delta_matches_full_simulation() {
+    // In the statically-analyzable regime (level barrier, free network,
+    // no training, nominal realization) the EventDrivenEnv delta fast
+    // path must reproduce a fresh env's full event-loop simulation bit
+    // for bit for every replace/swap neighbor, at any shape — and must
+    // fire no events doing it.
+    forall("des barrier delta == full sim", 40, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + 1 + g.usize_in(0..20);
+        let attrs = random_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let base = Placement::new(rng.sample_distinct(cc, dims));
+        let mut env = EventDrivenEnv::conformance(spec, attrs.clone());
+        env.eval(&base).unwrap();
+        let fired = env.events_fired;
+        for _ in 0..6 {
+            let mut n: Vec<usize> = base.to_vec();
+            if g.bool() && dims >= 2 {
+                let i = rng.gen_range(dims as u64) as usize;
+                let j = (i + 1 + rng.gen_range(dims as u64 - 1) as usize) % dims;
+                n.swap(i, j);
+            } else {
+                let (slot, id) = draw_slot_replacement(&base, cc, &mut rng);
+                n[slot] = id;
+            }
+            let n = Placement::new(n);
+            let got = env.eval(&n).unwrap();
+            let want = EventDrivenEnv::conformance(spec, attrs.clone()).eval(&n).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+        assert_eq!(env.events_fired, fired, "neighbors must not re-simulate");
+    });
+}
