@@ -24,9 +24,13 @@
 //!
 //! The mega-scale shapes (`mega100k` 100 021 / `mega1M` 1 000 021
 //! clients, ROADMAP item 2) run a restricted case set — `analytic`,
-//! `analytic-delta`, `emulated`, plus `event-driven-delta` at 100k (the
-//! DES level-barrier delta fast path over one-swap neighbors of a
-//! fully-simulated base round). `analytic-legacy` (per-candidate
+//! `analytic-delta`, `emulated`, `sharded` (the same random batch
+//! through a [`ParEvalBatch`] worker pool at `--threads N`, the eval
+//! path `sharded-pso` sweeps drive — compared against the serial
+//! `analytic` case for the sharded-vs-serial speedup report), plus
+//! `event-driven-delta` at 100k (the DES level-barrier delta fast path
+//! over one-swap neighbors of a fully-simulated base round).
+//! `analytic-legacy` (per-candidate
 //! allocation) and full `event-driven` rounds (O(clients · log clients)
 //! per candidate) are deliberately excluded there: they would dominate
 //! the suite's wall clock without informing the delta-speedup
@@ -38,17 +42,20 @@
 //!
 //! ```json
 //! {
-//!   "suite": "eval", "version": 1,
+//!   "suite": "eval", "version": 2,
 //!   "samples": 30, "warmup": 3, "batch": 32,
 //!   "results": [
 //!     { "case": "analytic/mega10k", "oracle": "analytic",
 //!       "shape": "mega10k", "clients": 10021, "slots": 21,
-//!       "batch": 32, "evals_per_sec": 1.23e6,
+//!       "batch": 32, "threads": 1, "evals_per_sec": 1.23e6,
 //!       "mean_us_per_batch": 26.0, "p50_us": 25.5, "p90_us": 27.1,
 //!       "std_us": 0.8 }
 //!   ]
 //! }
 //! ```
+//!
+//! Version 2 added the per-result `threads` field (required from v2;
+//! v1 documents without it remain readable as all-serial).
 
 use super::{black_box, Bencher};
 use crate::configio::ClientSpec;
@@ -57,21 +64,25 @@ use crate::fitness::{tpd, ClientAttrs};
 use crate::hierarchy::{Arrangement, HierarchySpec};
 use crate::json::{self, Value};
 use crate::metrics::Summary;
-use crate::placement::{AnalyticTpd, EmulatedDelay, Environment, Placement};
+use crate::placement::{AnalyticTpd, EmulatedDelay, Environment, ParEvalBatch, Placement};
 use crate::prng::{Pcg32, Rng};
 
-/// Suite knobs (CLI: `--samples`, `--warmup`, `--batch`).
+/// Suite knobs (CLI: `--samples`, `--warmup`, `--batch`, `--threads`).
 #[derive(Debug, Clone, Copy)]
 pub struct SuiteConfig {
     pub samples: usize,
     pub warmup: usize,
     /// Candidates scored per timed batch (a typical swarm dispatch).
     pub batch: usize,
+    /// Worker threads for the `sharded/*` cases (serial cases always
+    /// run at 1). Recorded per case in the JSON so baselines only ever
+    /// compare like-for-like thread counts.
+    pub threads: usize,
 }
 
 impl Default for SuiteConfig {
     fn default() -> Self {
-        SuiteConfig { samples: 30, warmup: 3, batch: 32 }
+        SuiteConfig { samples: 30, warmup: 3, batch: 32, threads: 4 }
     }
 }
 
@@ -85,6 +96,8 @@ pub struct BenchCase {
     pub clients: usize,
     pub slots: usize,
     pub batch: usize,
+    /// Worker threads this case ran with (1 for every serial case).
+    pub threads: usize,
     /// Throughput derived from the mean per-batch latency.
     pub evals_per_sec: f64,
     /// Per-batch latency distribution (µs).
@@ -151,6 +164,7 @@ fn case(
     clients: usize,
     slots: usize,
     batch: usize,
+    threads: usize,
     mut run: impl FnMut() -> usize,
 ) -> BenchCase {
     let summary = b.iter_throughput(&format!("{oracle}/{shape}"), &mut run);
@@ -163,6 +177,7 @@ fn case(
         clients,
         slots,
         batch,
+        threads,
         evals_per_sec,
         summary,
     }
@@ -182,7 +197,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
 
         // Scratch-based analytic oracle (full streaming path).
         let mut analytic = AnalyticTpd::new(spec, attrs.clone());
-        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, 1, || {
             analytic.eval_batch(&batch).unwrap().len()
         }));
 
@@ -191,7 +206,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         let neighbors = neighbor_batch(&base, cc, cfg.batch, 23 + dims as u64);
         let mut delta_env = AnalyticTpd::new(spec, attrs.clone());
         delta_env.eval(&base).unwrap();
-        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, 1, || {
             for p in &neighbors {
                 black_box(delta_env.eval(p).unwrap());
             }
@@ -200,7 +215,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
 
         // The pre-scratch reference pipeline, same candidates.
         let legacy_attrs = attrs.clone();
-        cases.push(case(&b, "analytic-legacy", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "analytic-legacy", shape, cc, dims, cfg.batch, 1, || {
             for p in &batch {
                 black_box(tpd(&Arrangement::from_position(spec, p, cc), &legacy_attrs).total);
             }
@@ -210,13 +225,13 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         // Emulated-testbed throttle model.
         let specs = throttle_specs(cc);
         let mut emulated = EmulatedDelay::new(depth, width, &specs);
-        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, 1, || {
             emulated.eval_batch(&batch).unwrap().len()
         }));
 
         // Event-driven oracle, conformance configuration.
         let mut des = EventDrivenEnv::conformance(spec, attrs);
-        cases.push(case(&b, "event-driven", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "event-driven", shape, cc, dims, cfg.batch, 1, || {
             des.eval_batch(&batch).unwrap().len()
         }));
     }
@@ -230,7 +245,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         let batch = random_batch(spec, cc, cfg.batch, 17 + tpl as u64);
 
         let mut analytic = AnalyticTpd::new(spec, attrs.clone());
-        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "analytic", shape, cc, dims, cfg.batch, 1, || {
             analytic.eval_batch(&batch).unwrap().len()
         }));
 
@@ -238,7 +253,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         let neighbors = neighbor_batch(&base, cc, cfg.batch, 23 + tpl as u64);
         let mut delta_env = AnalyticTpd::new(spec, attrs.clone());
         delta_env.eval(&base).unwrap();
-        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "analytic-delta", shape, cc, dims, cfg.batch, 1, || {
             for p in &neighbors {
                 black_box(delta_env.eval(p).unwrap());
             }
@@ -247,8 +262,19 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
 
         let specs = throttle_specs(cc);
         let mut emulated = EmulatedDelay::new(depth, width, &specs);
-        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, || {
+        cases.push(case(&b, "emulated", shape, cc, dims, cfg.batch, 1, || {
             emulated.eval_batch(&batch).unwrap().len()
+        }));
+
+        // Sharded evaluation: the same random batch through a
+        // ParEvalBatch worker pool (one AnalyticTpd per worker), the
+        // eval path ShardedPso's sweeps drive. Serial "analytic" above
+        // is the 1-thread reference for the speedup report.
+        let threads = cfg.threads.max(1);
+        let mut sharded =
+            ParEvalBatch::new(threads, |_| AnalyticTpd::new(spec, attrs.clone()));
+        cases.push(case(&b, "sharded", shape, cc, dims, cfg.batch, threads, || {
+            sharded.eval_batch(&batch).unwrap().len()
         }));
 
         // DES level-barrier delta path: one fully-simulated base round
@@ -259,7 +285,7 @@ pub fn run_eval_suite(cfg: &SuiteConfig) -> Vec<BenchCase> {
         if shape == "mega100k" {
             let mut des_delta = EventDrivenEnv::conformance(spec, attrs);
             des_delta.eval(&base).unwrap();
-            cases.push(case(&b, "event-driven-delta", shape, cc, dims, cfg.batch, || {
+            cases.push(case(&b, "event-driven-delta", shape, cc, dims, cfg.batch, 1, || {
                 for p in &neighbors {
                     black_box(des_delta.eval(p).unwrap());
                 }
@@ -309,6 +335,19 @@ pub fn print_speedups(cases: &[BenchCase]) {
             );
         }
     }
+    println!("\n=== sharded (ParEvalBatch) vs serial analytic at mega scale ===");
+    for (shape, ..) in MEGA_SHAPES {
+        let find = |oracle: &str| cases.iter().find(|c| c.oracle == oracle && c.shape == shape);
+        if let (Some(serial), Some(sharded)) = (find("analytic"), find("sharded")) {
+            println!(
+                "{shape:<10} serial {:>12.0}/s  sharded({} threads) {:>12.0}/s  speedup ×{:.2}",
+                serial.evals_per_sec,
+                sharded.threads,
+                sharded.evals_per_sec,
+                sharded.evals_per_sec / serial.evals_per_sec.max(1e-12),
+            );
+        }
+    }
 }
 
 /// Serialize the suite to the `BENCH_eval.json` document.
@@ -323,6 +362,7 @@ pub fn suite_to_json(cfg: &SuiteConfig, cases: &[BenchCase]) -> Value {
                 ("clients", Value::from(c.clients)),
                 ("slots", Value::from(c.slots)),
                 ("batch", Value::from(c.batch)),
+                ("threads", Value::from(c.threads)),
                 ("evals_per_sec", Value::from(c.evals_per_sec)),
                 ("mean_us_per_batch", Value::from(c.summary.mean)),
                 ("p50_us", Value::from(c.summary.p50)),
@@ -333,7 +373,7 @@ pub fn suite_to_json(cfg: &SuiteConfig, cases: &[BenchCase]) -> Value {
         .collect();
     Value::object(vec![
         ("suite", Value::from("eval")),
-        ("version", Value::from(1usize)),
+        ("version", Value::from(2usize)),
         ("samples", Value::from(cfg.samples)),
         ("warmup", Value::from(cfg.warmup)),
         ("batch", Value::from(cfg.batch)),
@@ -367,6 +407,18 @@ pub fn validate_bench_json(doc: &Value) -> Result<(), String> {
             field(r, k)?
                 .as_usize()
                 .ok_or_else(|| format!("results[{i}].{k} must be an integer"))?;
+        }
+        // Schema v2: every result carries its worker thread count so
+        // comparisons are like-for-like. v1 documents (no field) stay
+        // valid — readers treat a missing count as 1 (serial).
+        if let Some(t) = r.get("threads") {
+            let t =
+                t.as_usize().ok_or_else(|| format!("results[{i}].threads must be an integer"))?;
+            if t == 0 {
+                return Err(format!("results[{i}].threads must be >= 1"));
+            }
+        } else if field(doc, "version")?.as_usize() >= Some(2) {
+            return Err(format!("results[{i}] missing threads (required from version 2)"));
         }
         for k in ["evals_per_sec", "mean_us_per_batch", "p50_us", "p90_us", "std_us"] {
             let x = field(r, k)?
@@ -408,19 +460,20 @@ mod tests {
     use super::*;
 
     fn tiny_cfg() -> SuiteConfig {
-        SuiteConfig { samples: 1, warmup: 0, batch: 2 }
+        SuiteConfig { samples: 1, warmup: 0, batch: 2, threads: 2 }
     }
 
     #[test]
     fn suite_covers_every_oracle_at_every_shape() {
         let cases = run_eval_suite(&tiny_cfg());
-        // 5 oracles per full-matrix shape; restricted mega set: 4 cases
-        // at 100k (incl. the DES delta path), 3 at 1M.
-        assert_eq!(cases.len(), SHAPES.len() * 5 + 4 + 3);
+        // 5 oracles per full-matrix shape; restricted mega set: 5 cases
+        // at 100k (incl. the DES delta + sharded paths), 4 at 1M.
+        assert_eq!(cases.len(), SHAPES.len() * 5 + 5 + 4);
         for c in &cases {
             assert!(c.evals_per_sec > 0.0, "{}: {}", c.case, c.evals_per_sec);
             assert!(c.clients >= c.slots);
             assert_eq!(c.batch, 2);
+            assert_eq!(c.threads, if c.oracle == "sharded" { 2 } else { 1 }, "{}", c.case);
         }
         // The mega shapes really are the 10k/100k/1M-client cases.
         let clients_of = |case: &str| {
@@ -430,8 +483,51 @@ mod tests {
         assert_eq!(clients_of("analytic/mega100k"), (100_021, 21));
         assert_eq!(clients_of("analytic/mega1M"), (1_000_021, 21));
         assert_eq!(clients_of("event-driven-delta/mega100k"), (100_021, 21));
+        assert_eq!(clients_of("sharded/mega100k"), (100_021, 21));
+        assert_eq!(clients_of("sharded/mega1M"), (1_000_021, 21));
         assert!(!cases.iter().any(|c| c.case == "event-driven/mega1M"));
         print_speedups(&cases);
+    }
+
+    #[test]
+    fn validator_accepts_v1_documents_without_threads() {
+        // A v1 baseline (no per-result threads) must stay readable.
+        let v1 = Value::object(vec![
+            ("suite", Value::from("eval")),
+            ("version", Value::from(1usize)),
+            ("samples", Value::from(1usize)),
+            ("warmup", Value::from(0usize)),
+            ("batch", Value::from(2usize)),
+            (
+                "results",
+                Value::Array(vec![Value::object(vec![
+                    ("case", Value::from("analytic/tiny")),
+                    ("oracle", Value::from("analytic")),
+                    ("shape", Value::from("tiny")),
+                    ("clients", Value::from(7usize)),
+                    ("slots", Value::from(3usize)),
+                    ("batch", Value::from(2usize)),
+                    ("evals_per_sec", Value::from(1.0)),
+                    ("mean_us_per_batch", Value::from(1.0)),
+                    ("p50_us", Value::from(1.0)),
+                    ("p90_us", Value::from(1.0)),
+                    ("std_us", Value::from(0.0)),
+                ])]),
+            ),
+        ]);
+        validate_bench_json(&v1).unwrap();
+        // The same result row under version 2 must be rejected.
+        let v2 = Value::object(
+            v1.as_object()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| {
+                    (k.as_str(), if k == "version" { Value::from(2usize) } else { v.clone() })
+                })
+                .collect(),
+        );
+        let err = validate_bench_json(&v2).unwrap_err();
+        assert!(err.contains("threads"), "{err}");
     }
 
     #[test]

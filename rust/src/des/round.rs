@@ -25,7 +25,7 @@ use super::engine::EventQueue;
 use super::network::NetworkModel;
 use super::scenarios::Dynamics;
 use crate::configio::SimScenario;
-use crate::fitness::{ClientAttrs, TpdScratch};
+use crate::fitness::{ChunkedFold8, ClientAttrs, TpdScratch};
 use crate::hierarchy::{Arrangement, EvalScratch, HierarchySpec};
 use crate::placement::{classify, Diff, Environment, PathTally, Placement, PlacementError};
 use crate::prng::Pcg32;
@@ -196,22 +196,22 @@ pub fn simulate_round(
         let agg = arr.aggregators[slot];
         let buffer = arr.buffer_of(slot);
         let data = if spec.is_leaf_slot(slot) {
-            // Same left-fold sum as `fitness::cluster_delay`, restricted
+            // Same chunked fold as `fitness::cluster_delay`, restricted
             // to active trainers, so the all-on case is bit-identical.
-            let mut sum = 0.0f64;
+            let mut fold = ChunkedFold8::new();
             for &t in &buffer {
                 parent_slot[t] = slot;
                 if real.active[t] {
                     expected[slot] += 1;
-                    sum += attrs[t].mdatasize;
+                    fold.push(attrs[t].mdatasize);
                 } else {
                     dropped_trainers += 1;
                 }
             }
-            attrs[agg].mdatasize + sum
+            attrs[agg].mdatasize + fold.finish()
         } else {
             expected[slot] = buffer.len();
-            attrs[agg].mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>()
+            attrs[agg].mdatasize + ChunkedFold8::sum(buffer.iter().map(|&c| attrs[c].mdatasize))
         };
         merge_delay[slot] = data / pspeed_eff(agg);
     }
@@ -353,24 +353,24 @@ impl RoundScratch {
         for slot in 0..dims {
             let agg = position[slot];
             let data = if slot >= leaf_start {
-                let mut sum = 0.0f64;
+                let mut fold = ChunkedFold8::new();
                 for &t in self.view.leaf_trainers(slot - leaf_start) {
                     self.parent_slot[t] = slot;
                     if real.active[t] {
                         self.expected[slot] += 1;
-                        sum += attrs[t].mdatasize;
+                        fold.push(attrs[t].mdatasize);
                     } else {
                         dropped_trainers += 1;
                     }
                 }
-                attrs[agg].mdatasize + sum
+                attrs[agg].mdatasize + fold.finish()
             } else {
                 self.expected[slot] = spec.children(slot).len();
-                let mut sum = 0.0f64;
+                let mut fold = ChunkedFold8::new();
                 for child in spec.children(slot) {
-                    sum += attrs[position[child]].mdatasize;
+                    fold.push(attrs[position[child]].mdatasize);
                 }
-                attrs[agg].mdatasize + sum
+                attrs[agg].mdatasize + fold.finish()
             };
             self.merge_delay[slot] = data / pspeed_eff(agg);
         }

@@ -1,0 +1,174 @@
+//! Fixed-order chunked pairwise reduction — the one summation shape
+//! every delay pipeline folds datasizes with.
+//!
+//! The repo's bit-exactness contract ("every path returns the same
+//! bits") makes the *reduction order* part of the API: a serial left
+//! fold, a delta re-sum, and a sharded worker must all combine the
+//! same elements in the same order or their floats drift. PR 8's
+//! follow-up asked for a SIMD-friendly fold that keeps that order
+//! fixed; this module is it.
+//!
+//! [`ChunkedFold8`] streams elements into 8 accumulator lanes
+//! round-robin (`lanes[i % 8] += x_i`) and combines them pairwise in
+//! one fixed tree:
+//!
+//! ```text
+//! total = ((l0+l1) + (l2+l3)) + ((l4+l5) + (l6+l7))
+//! ```
+//!
+//! The 8 independent lanes break the serial add dependency chain, so
+//! the compiler can keep several FP adds in flight (and vectorize the
+//! lane updates where the loads allow); the combine tree is a fixed
+//! expression, so the result is a pure function of the element
+//! *sequence* — independent of which code path streamed it, which
+//! thread ran it, or whether the elements came from a full pass or a
+//! delta re-sum. That sequence contract is what the scratch delta
+//! paths and the sharded optimizer lean on: they re-stream a leaf's
+//! post-change contents in the same ascending-id order the full pass
+//! uses, and the fold guarantees the same bits.
+//!
+//! [`linear_sum`] keeps the legacy left fold as the in-tree reference
+//! oracle: property tests assert the chunked fold stays within float
+//! noise of it on random streams and exactly equals it for short
+//! streams (n ≤ 3 touches only the first combine pair).
+
+/// Streaming 8-lane chunked pairwise reduction with a fixed combine
+/// order. `Default`-constructible, `Copy`-cheap, no heap.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkedFold8 {
+    lanes: [f64; 8],
+    n: usize,
+}
+
+impl ChunkedFold8 {
+    #[inline]
+    pub fn new() -> ChunkedFold8 {
+        ChunkedFold8 { lanes: [0.0; 8], n: 0 }
+    }
+
+    /// Stream the next element; lane = element index mod 8.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.lanes[self.n & 7] += x;
+        self.n += 1;
+    }
+
+    /// Elements streamed so far.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Combine the lanes in the fixed pairwise order. Pure — the fold
+    /// can keep streaming afterwards.
+    #[inline]
+    pub fn finish(&self) -> f64 {
+        let l = &self.lanes;
+        ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+    }
+
+    /// Fold an iterator in stream order.
+    #[inline]
+    pub fn sum(values: impl IntoIterator<Item = f64>) -> f64 {
+        let mut fold = ChunkedFold8::new();
+        for x in values {
+            fold.push(x);
+        }
+        fold.finish()
+    }
+}
+
+impl Default for ChunkedFold8 {
+    fn default() -> ChunkedFold8 {
+        ChunkedFold8::new()
+    }
+}
+
+/// The legacy strict left fold (`((x0 + x1) + x2) + …`), retained as
+/// the reference oracle the chunked fold is property-tested against.
+#[inline]
+pub fn linear_sum(values: impl IntoIterator<Item = f64>) -> f64 {
+    let mut acc = 0.0f64;
+    for x in values {
+        acc += x;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Pcg32, Rng};
+
+    #[test]
+    fn empty_and_single_streams() {
+        assert_eq!(ChunkedFold8::sum([]).to_bits(), 0.0f64.to_bits());
+        assert_eq!(ChunkedFold8::sum([3.25]).to_bits(), 3.25f64.to_bits());
+    }
+
+    #[test]
+    fn short_streams_equal_linear_fold_exactly() {
+        // n ≤ 3 only ever touches lanes 0..=2, so the combine tree
+        // degenerates to the left fold (plus exact +0.0 terms): the
+        // hand-computed expectations in the tpd unit tests stay valid.
+        let mut rng = Pcg32::seed_from_u64(17);
+        for _ in 0..200 {
+            let n = rng.gen_range(4) as usize; // 0..=3
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 9.0)).collect();
+            let chunked = ChunkedFold8::sum(xs.iter().copied());
+            let linear = linear_sum(xs.iter().copied());
+            assert_eq!(chunked.to_bits(), linear.to_bits(), "{xs:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_one_shot_sum() {
+        let mut rng = Pcg32::seed_from_u64(23);
+        let xs: Vec<f64> = (0..137).map(|_| rng.uniform(0.0, 50.0)).collect();
+        let mut fold = ChunkedFold8::new();
+        for &x in &xs {
+            fold.push(x);
+        }
+        assert_eq!(fold.len(), xs.len());
+        assert_eq!(fold.finish().to_bits(), ChunkedFold8::sum(xs.iter().copied()).to_bits());
+    }
+
+    #[test]
+    fn chunked_stays_within_float_noise_of_linear() {
+        let mut rng = Pcg32::seed_from_u64(41);
+        for _ in 0..50 {
+            let n = 1 + rng.gen_range(400) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 100.0)).collect();
+            let chunked = ChunkedFold8::sum(xs.iter().copied());
+            let linear = linear_sum(xs.iter().copied());
+            let rel = (chunked - linear).abs() / linear.max(1e-12);
+            assert!(rel < 1e-12, "n={n} chunked={chunked} linear={linear}");
+        }
+    }
+
+    #[test]
+    fn result_is_a_pure_function_of_the_stream() {
+        // Two independently-constructed folds over the same sequence —
+        // as a delta re-sum and a full pass would build them — agree
+        // bitwise, and restarting mid-way (fresh fold, same tail) does
+        // not: the order contract is positional, not set-based.
+        let mut rng = Pcg32::seed_from_u64(59);
+        let xs: Vec<f64> = (0..99).map(|_| rng.uniform(0.5, 4.0)).collect();
+        let a = ChunkedFold8::sum(xs.iter().copied());
+        let b = ChunkedFold8::sum(xs.iter().copied());
+        assert_eq!(a.to_bits(), b.to_bits());
+        let mut rev = xs.clone();
+        rev.reverse();
+        // Reordering the stream is allowed to (and generally does)
+        // change the low bits — which is exactly why every pipeline
+        // must stream in the same ascending order.
+        let c = ChunkedFold8::sum(rev.into_iter());
+        let rel = (a - c).abs() / a.abs().max(1e-12);
+        assert!(rel < 1e-12);
+    }
+}

@@ -16,9 +16,11 @@
 //!   buffer-of-available-labels semantics.
 
 mod client_attrs;
+mod fold;
 mod scratch;
 mod tpd;
 
 pub use client_attrs::ClientAttrs;
+pub use fold::{linear_sum, ChunkedFold8};
 pub use scratch::TpdScratch;
 pub use tpd::{cluster_delay, tpd, tpd_with_memory, TpdBreakdown};

@@ -4,10 +4,11 @@
 //! [`super::tpd`] bit for bit without materializing an
 //! [`crate::hierarchy::Arrangement`]: the trainer partition comes from
 //! the [`EvalScratch`] view (one O(clients) pass), per-leaf buffer
-//! sums are folded left-to-right in the same ascending order the
-//! legacy trainer lists hold, and the per-level maxima are folded in
-//! the same BFT slot order — so every intermediate float is identical
-//! to the legacy pipeline's.
+//! sums stream through the fixed-order [`ChunkedFold8`] reduction in
+//! the same ascending order the legacy trainer lists hold (the same
+//! fold [`super::tpd`] itself uses), and the per-level maxima are
+//! folded in the same BFT slot order — so every intermediate float is
+//! identical to the legacy pipeline's.
 //!
 //! On top of the cached per-slot cluster delays, two **delta**
 //! evaluations score single-coordinate neighbors of the loaded
@@ -35,7 +36,7 @@
 //! each full simulation and scores neighbors from it without firing a
 //! single event.
 
-use super::ClientAttrs;
+use super::{ChunkedFold8, ClientAttrs};
 use crate::hierarchy::{EvalScratch, HierarchySpec};
 use crate::placement::PlacementError;
 
@@ -122,11 +123,11 @@ impl TpdScratch {
     fn compute(&mut self, position: &[usize], attrs: &[ClientAttrs]) -> f64 {
         debug_assert_eq!(attrs.len(), self.view.client_count());
         for i in 0..self.view.leaf_count() {
-            let mut sum = 0.0f64;
+            let mut fold = ChunkedFold8::new();
             for &t in self.view.leaf_trainers(i) {
-                sum += attrs[t].mdatasize;
+                fold.push(attrs[t].mdatasize);
             }
-            self.leaf_sum[i] = sum;
+            self.leaf_sum[i] = fold.finish();
         }
         let spec = self.view.spec();
         let leaf_start = self.view.leaf_start();
@@ -135,11 +136,11 @@ impl TpdScratch {
             let data = if slot >= leaf_start {
                 agg.mdatasize + self.leaf_sum[slot - leaf_start]
             } else {
-                let mut sum = 0.0f64;
+                let mut fold = ChunkedFold8::new();
                 for child in spec.children(slot) {
-                    sum += attrs[position[child]].mdatasize;
+                    fold.push(attrs[position[child]].mdatasize);
                 }
-                agg.mdatasize + sum
+                agg.mdatasize + fold.finish()
             };
             self.slot_delay[slot] = data / agg.pspeed;
         }
@@ -179,11 +180,11 @@ impl TpdScratch {
         let data = if s >= leaf_start {
             agg.mdatasize + leaf_sum(s - leaf_start)
         } else {
-            let mut sum = 0.0f64;
+            let mut fold = ChunkedFold8::new();
             for child in self.view.spec().children(s) {
-                sum += attrs[eff(child)].mdatasize;
+                fold.push(attrs[eff(child)].mdatasize);
             }
-            agg.mdatasize + sum
+            agg.mdatasize + fold.finish()
         };
         data / agg.pspeed
     }
@@ -237,11 +238,11 @@ impl TpdScratch {
             let data = if s >= leaf_start {
                 agg.mdatasize + self.leaf_sum[s - leaf_start]
             } else {
-                let mut sum = 0.0f64;
+                let mut fold = ChunkedFold8::new();
                 for child in spec.children(s) {
-                    sum += attrs[eff(child)].mdatasize;
+                    fold.push(attrs[eff(child)].mdatasize);
                 }
-                agg.mdatasize + sum
+                agg.mdatasize + fold.finish()
             };
             self.alt_delay[s] = data / agg.pspeed;
         }
@@ -273,52 +274,55 @@ impl TpdScratch {
         };
         for t in 0..run_len {
             let i = (run_start + t) % leaf_count;
-            // Re-sum leaf i's post-change contents in ascending id
-            // order: unchanged prefix, the incoming client, the
+            // Re-stream leaf i's post-change contents in ascending id
+            // order — unchanged prefix, the incoming client, the
             // trainers rotating in from the neighboring leaf, the
-            // unchanged suffix.
+            // unchanged suffix — into a fresh fold: same sequence as
+            // a full pass over the modified position, so the chunked
+            // reduction lands every element on the same lane and the
+            // sum comes out bit-identical.
             let seg = self.view.leaf_trainers(i);
-            let mut sum = 0.0f64;
+            let mut fold = ChunkedFold8::new();
             if a < b {
                 // prefix: ids < a stayed on leaf i
                 for &c in &seg[..seg.partition_point(|&c| c < a)] {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
                 if r_a % leaf_count == i {
-                    sum += attrs[a].mdatasize;
+                    fold.push(attrs[a].mdatasize);
                 }
                 // mid: ids in (a, b) rotated in from leaf i−1
                 let prev = self.view.leaf_trainers((i + leaf_count - 1) % leaf_count);
                 let mid =
                     &prev[prev.partition_point(|&c| c <= a)..prev.partition_point(|&c| c < b)];
                 for &c in mid {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
                 // suffix: ids > b stayed on leaf i
                 for &c in &seg[seg.partition_point(|&c| c <= b)..] {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
             } else {
                 // prefix: ids < b stayed on leaf i
                 for &c in &seg[..seg.partition_point(|&c| c < b)] {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
                 // mid: ids in (b, a) rotated in from leaf i+1
                 let next = self.view.leaf_trainers((i + 1) % leaf_count);
                 let mid =
                     &next[next.partition_point(|&c| c <= b)..next.partition_point(|&c| c < a)];
                 for &c in mid {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
                 if (r_a - 1) % leaf_count == i {
-                    sum += attrs[a].mdatasize;
+                    fold.push(attrs[a].mdatasize);
                 }
                 // suffix: ids > a stayed on leaf i
                 for &c in &seg[seg.partition_point(|&c| c <= a)..] {
-                    sum += attrs[c].mdatasize;
+                    fold.push(attrs[c].mdatasize);
                 }
             }
-            self.alt_sum[i] = sum;
+            self.alt_sum[i] = fold.finish();
         }
         // Patch the affected slot delays over the cached base.
         self.alt_delay.copy_from_slice(&self.slot_delay);

@@ -12,14 +12,17 @@
 //! captures the bottleneck effect: a level finishes only when its
 //! slowest cluster does.
 
-use super::ClientAttrs;
+use super::{ChunkedFold8, ClientAttrs};
 use crate::hierarchy::Arrangement;
 
-/// Cluster delay of one aggregator slot (Eq. 6).
+/// Cluster delay of one aggregator slot (Eq. 6). The buffer datasizes
+/// fold through [`ChunkedFold8`] — the fixed reduction order every
+/// delay pipeline (scratch, delta, DES, sharded) shares, so this
+/// reference stays bit-comparable to all of them.
 pub fn cluster_delay(arr: &Arrangement, attrs: &[ClientAttrs], slot: usize) -> f64 {
     let agg = &attrs[arr.aggregators[slot]];
     let buffer = arr.buffer_of(slot);
-    let data: f64 = agg.mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>();
+    let data: f64 = agg.mdatasize + ChunkedFold8::sum(buffer.iter().map(|&c| attrs[c].mdatasize));
     data / agg.pspeed
 }
 
@@ -64,7 +67,7 @@ pub fn tpd_with_memory(
             let agg = &attrs[arr.aggregators[s]];
             let buffer = arr.buffer_of(s);
             let data: f64 =
-                agg.mdatasize + buffer.iter().map(|&c| attrs[c].mdatasize).sum::<f64>();
+                agg.mdatasize + ChunkedFold8::sum(buffer.iter().map(|&c| attrs[c].mdatasize));
             let mut d = data / agg.pspeed;
             if data > agg.memcap {
                 d *= swap_penalty;

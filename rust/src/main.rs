@@ -7,7 +7,7 @@
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c --env live|analytic|event-driven --replicates R|MIN..MAX]
 //! repro serve      [--scenarios builtin|DIR --strategies a,b,c --rounds N --replicates R --env E --store noop|dir --metrics csv --dynamics NAME]
 //! repro ablate     --scenario NAME [--mechanisms k1,k2 --strategy pso --evals N --replicates R --threads N --out csv]
-//! repro bench      --suite eval [--samples N --warmup N --batch N --out BENCH_eval.json]
+//! repro bench      --suite eval [--samples N --warmup N --batch N --threads N --out BENCH_eval.json]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
 //! repro broker     [--addr 127.0.0.1:1883]       # standalone TCP broker
 //! repro obs dump   [--addr HOST:PORT]            # metric snapshot (local or scraped)
@@ -82,8 +82,8 @@ fn main() -> Result<()> {
                  \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
                  \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
                  bench    delay-oracle perf suite (evals/sec at tiny/paper/deep/mega10k,\n\
-                 \x20        plus delta-path cases at mega100k/mega1M);\n\
-                 \x20        --suite eval [--samples 30 --warmup 3 --batch 32]\n\
+                 \x20        plus delta-path + sharded cases at mega100k/mega1M);\n\
+                 \x20        --suite eval [--samples 30 --warmup 3 --batch 32 --threads 4]\n\
                  \x20        [--out BENCH_eval.json]  (JSON schema-validated on write)\n\
                  e2e      end-to-end PSO-placed federated training\n\
                  broker   standalone TCP pub/sub broker\n\
@@ -106,9 +106,12 @@ fn main() -> Result<()> {
                  \x20 random        SDFLMQ's random baseline\n\
                  \x20 round-robin   SDFLMQ's uniform rotation (alias: uniform)\n\
                  \x20 ga | sa | tabu  black-box meta-heuristic comparators (ablation A2)\n\
+                 \x20 sharded-pso   region-local sub-swarms + epoch-barrier incumbent\n\
+                 \x20               exchange (aliases: flag-swap-sharded, sharded)\n\
                  Pick pso for the paper's behavior, adaptive-pso for drifting\n\
                  systems, random/round-robin as baselines, ga/sa/tabu to\n\
-                 benchmark alternative optimizers under the same budget.\n\
+                 benchmark alternative optimizers under the same budget, and\n\
+                 sharded-pso for thread-scalable search at large slot counts.\n\
                  \n\
                  choosing a delay oracle (--env, sim/fleet tier):\n\
                  \x20 analytic      closed-form Eq. 6-7 TPD (default)\n\
@@ -603,13 +606,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         samples: args.usize_flag("samples", default.samples).map_err(|e| anyhow!(e))?,
         warmup: args.usize_flag("warmup", default.warmup).map_err(|e| anyhow!(e))?,
         batch: args.usize_flag("batch", default.batch).map_err(|e| anyhow!(e))?,
+        threads: args.usize_flag("threads", default.threads).map_err(|e| anyhow!(e))?,
     };
-    if cfg.samples == 0 || cfg.batch == 0 {
-        return Err(anyhow!("--samples and --batch must be >= 1"));
+    if cfg.samples == 0 || cfg.batch == 0 || cfg.threads == 0 {
+        return Err(anyhow!("--samples, --batch and --threads must be >= 1"));
     }
     println!(
-        "bench suite=eval samples={} warmup={} batch={} (latencies are per {}-candidate batch)",
-        cfg.samples, cfg.warmup, cfg.batch, cfg.batch
+        "bench suite=eval samples={} warmup={} batch={} threads={} \
+         (latencies are per {}-candidate batch; threads apply to sharded/* cases)",
+        cfg.samples, cfg.warmup, cfg.batch, cfg.threads, cfg.batch
     );
     let cases = run_eval_suite(&cfg);
     print_speedups(&cases);

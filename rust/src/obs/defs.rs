@@ -57,6 +57,21 @@ metric!(
     "repro_placement_shard_workers_high_water",
     "Largest ParEvalBatch worker count used (high-water mark)"
 );
+metric!(
+    counter pub SHARDED_EXCHANGE_ROUNDS,
+    "repro_placement_sharded_exchange_rounds_total",
+    "ShardedPso epoch-barrier incumbent exchanges performed"
+);
+metric!(
+    counter pub SHARDED_REGION_IMPROVEMENTS,
+    "repro_placement_sharded_region_improvements_total",
+    "Regional incumbent improvements accepted by ShardedPso sub-swarms"
+);
+metric!(
+    histogram pub SHARDED_SUBSWARM_BUSY,
+    "repro_placement_sharded_subswarm_busy_seconds",
+    "Wall seconds per sub-swarm propose step in ShardedPso sweeps"
+);
 
 // --- des: virtual-time event core ----------------------------------------
 
@@ -191,6 +206,9 @@ pub fn register_builtin() {
     SHARD_BATCHES.register();
     SHARD_CANDIDATES.register();
     SHARD_WORKERS_HIGH_WATER.register();
+    SHARDED_EXCHANGE_ROUNDS.register();
+    SHARDED_REGION_IMPROVEMENTS.register();
+    SHARDED_SUBSWARM_BUSY.register();
     DES_EVENTS.register();
     DES_ROUNDS.register();
     DES_HEAP_HIGH_WATER.register();

@@ -11,9 +11,11 @@
 //!   learns from the observed delays. Implementations: [`SwarmOptimizer`]
 //!   (the paper's synchronous PSO, exact Algorithm-1 semantics or a
 //!   batched whole-swarm-per-call variant), [`PsoPlacement`] (Flag-Swap's
-//!   steady-state live PSO), [`RandomPlacement`], [`RoundRobinPlacement`],
-//!   [`GaPlacement`] (proposes whole generation cohorts), [`SaPlacement`],
-//!   [`TabuPlacement`] and [`AdaptivePsoPlacement`].
+//!   steady-state live PSO), [`ShardedPso`] (region-local sub-swarms with
+//!   epoch-barrier incumbent exchange), [`RandomPlacement`],
+//!   [`RoundRobinPlacement`], [`GaPlacement`] (proposes whole generation
+//!   cohorts), [`SaPlacement`], [`TabuPlacement`] and
+//!   [`AdaptivePsoPlacement`].
 //! * [`Environment`] — scores placements: [`AnalyticTpd`] (the Eq. 6–7
 //!   TPD model over a simulated population, one dispatch per batch),
 //!   [`EventDrivenEnv`] (the [`crate::des`] virtual-time round over a
@@ -23,8 +25,8 @@
 //!   measured FL round through broker + agents).
 //!
 //! [`registry`] maps strategy names (`"pso"`, `"random"`, `"round-robin"`,
-//! `"ga"`, `"sa"`, `"tabu"`, `"adaptive-pso"`, `"pso-batched"`) to boxed
-//! optimizers, and [`drive`] is the generic evaluation loop connecting an
+//! `"ga"`, `"sa"`, `"tabu"`, `"adaptive-pso"`, `"pso-batched"`,
+//! `"sharded-pso"`) to boxed optimizers, and [`drive`] is the generic evaluation loop connecting an
 //! optimizer to an environment under a fixed evaluation budget.
 //! Validation is `Result`-based ([`validate_placement`] /
 //! [`PlacementError`]); [`assert_valid_placement`] remains as a thin
@@ -40,6 +42,7 @@ mod random;
 pub mod registry;
 mod round_robin;
 mod sa;
+mod sharded;
 mod tabu;
 
 pub use adaptive::AdaptivePsoPlacement;
@@ -53,6 +56,7 @@ pub use pso_sim::SwarmOptimizer;
 pub use random::RandomPlacement;
 pub use round_robin::RoundRobinPlacement;
 pub use sa::{SaConfig, SaPlacement};
+pub use sharded::{ShardedConfig, ShardedPso};
 pub use tabu::{TabuConfig, TabuPlacement};
 
 use crate::pso::IterationStats;

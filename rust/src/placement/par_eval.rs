@@ -27,6 +27,7 @@
 //! order restores candidate order exactly.
 
 use super::{Environment, Placement, PlacementError};
+use crate::log_warn;
 use crate::obs::defs as obs;
 
 /// Shards [`Environment::eval_batch`] across `N` worker environments on
@@ -47,8 +48,17 @@ impl<E: Environment> ParEvalBatch<E> {
     /// Build `threads` workers by calling `factory(0..threads)`. Each
     /// call must construct the environment identically (same scenario,
     /// same seeds) — the worker index is provided for labeling only.
+    ///
+    /// `threads == 0` clamps to one worker with a warning: a zero-thread
+    /// pool would have no workers to dispatch to, so the first
+    /// `eval_batch` would return no results for a non-empty batch (the
+    /// `--threads 0` deadlock shape) — clamping keeps every caller-side
+    /// "use however many I said" path safe.
     pub fn new(threads: usize, mut factory: impl FnMut(usize) -> E) -> ParEvalBatch<E> {
-        assert!(threads >= 1, "need at least one worker");
+        if threads == 0 {
+            log_warn!("placement", "ParEvalBatch built with 0 threads; clamping to 1 worker");
+        }
+        let threads = threads.max(1);
         ParEvalBatch { workers: (0..threads).map(&mut factory).collect() }
     }
 
@@ -205,6 +215,26 @@ mod tests {
             par.eval(&batch[0]).unwrap().to_bits(),
             serial.eval(&batch[0]).unwrap().to_bits()
         );
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one_worker() {
+        // `--threads 0` must not construct a worker-less evaluator that
+        // returns empty results (the dispatch-deadlock shape): the pool
+        // clamps to one inline worker and scores exactly like serial.
+        let spec = HierarchySpec::new(2, 2);
+        let cc = 12;
+        let attrs = population(cc, 6);
+        let batch = neighbor_rich_batch(spec, cc, 5, 7);
+        let mut par = ParEvalBatch::new(0, |_| AnalyticTpd::new(spec, attrs.clone()));
+        assert_eq!(par.threads(), 1);
+        let mut serial = AnalyticTpd::new(spec, attrs.clone());
+        let got = par.eval_batch(&batch).unwrap();
+        let want = serial.eval_batch(&batch).unwrap();
+        assert_eq!(got.len(), batch.len());
+        let got_bits: Vec<u64> = got.iter().map(|d| d.to_bits()).collect();
+        let want_bits: Vec<u64> = want.iter().map(|d| d.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
     }
 
     #[test]

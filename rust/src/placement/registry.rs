@@ -4,14 +4,15 @@
 //! environment through the same factory.
 //!
 //! Canonical names (see [`NAMES`]): `pso`, `pso-batched`, `random`,
-//! `round-robin`, `ga`, `sa`, `tabu`, `adaptive-pso`. Aliases accepted
-//! for backward compatibility: `uniform` → `round-robin`,
-//! `pso-adaptive` → `adaptive-pso`.
+//! `round-robin`, `ga`, `sa`, `tabu`, `adaptive-pso`, `sharded-pso`.
+//! Aliases accepted for backward compatibility: `uniform` →
+//! `round-robin`, `pso-adaptive` → `adaptive-pso`, and
+//! `flag-swap-sharded` / `sharded` → `sharded-pso`.
 
 use super::{
     AdaptivePsoPlacement, AnalyticTpd, Environment, EventDrivenEnv, GaConfig, GaPlacement,
     Optimizer, PlacementError, PsoPlacement, RandomPlacement, RoundRobinPlacement, SaConfig,
-    SaPlacement, SwarmOptimizer, TabuConfig, TabuPlacement,
+    SaPlacement, ShardedConfig, ShardedPso, SwarmOptimizer, TabuConfig, TabuPlacement,
 };
 use crate::configio::SimScenario;
 use crate::fitness::ClientAttrs;
@@ -20,8 +21,17 @@ use crate::prng::Pcg32;
 use crate::pso::PsoConfig;
 
 /// Every registered strategy name, in presentation order.
-pub const NAMES: [&str; 8] =
-    ["pso", "pso-batched", "random", "round-robin", "ga", "sa", "tabu", "adaptive-pso"];
+pub const NAMES: [&str; 9] = [
+    "pso",
+    "pso-batched",
+    "random",
+    "round-robin",
+    "ga",
+    "sa",
+    "tabu",
+    "adaptive-pso",
+    "sharded-pso",
+];
 
 /// Every registered simulation-tier environment (delay oracle) name.
 /// Aliases: `analytic-tpd`/`tpd` → `analytic`, `des`/`event` →
@@ -39,6 +49,7 @@ pub fn canonical(name: &str) -> Result<&'static str, PlacementError> {
         "sa" => Ok("sa"),
         "tabu" => Ok("tabu"),
         "adaptive-pso" | "pso-adaptive" => Ok("adaptive-pso"),
+        "sharded-pso" | "flag-swap-sharded" | "sharded" => Ok("sharded-pso"),
         other => Err(PlacementError::UnknownStrategy { name: other.to_string() }),
     }
 }
@@ -92,6 +103,12 @@ pub fn build_sim(
         "sa" => Box::new(SaPlacement::new(dims, cc, SaConfig::default(), rng)),
         "tabu" => Box::new(TabuPlacement::new(dims, cc, TabuConfig::default(), rng)),
         "adaptive-pso" => Box::new(AdaptivePsoPlacement::new(dims, cc, sc.pso, rng)),
+        "sharded-pso" => Box::new(ShardedPso::from_spec(
+            HierarchySpec::new(sc.depth, sc.width),
+            cc,
+            ShardedConfig::from_pso(&sc.pso),
+            rng,
+        )),
         _ => unreachable!("canonical() covers every registry key"),
     })
 }
@@ -122,6 +139,12 @@ pub fn build_live(
         "sa" => Box::new(SaPlacement::new(dims, client_count, SaConfig::default(), rng)),
         "tabu" => Box::new(TabuPlacement::new(dims, client_count, TabuConfig::default(), rng)),
         "adaptive-pso" => Box::new(AdaptivePsoPlacement::new(dims, client_count, pso, rng)),
+        "sharded-pso" => Box::new(ShardedPso::for_dims(
+            dims,
+            client_count,
+            ShardedConfig::from_pso(&pso),
+            rng,
+        )),
         _ => unreachable!("canonical() covers every registry key"),
     })
 }
@@ -148,6 +171,81 @@ mod tests {
         assert_eq!(uniform.name(), "round-robin");
         let adaptive = build_live("pso-adaptive", 3, 10, PsoConfig::paper(), 1).unwrap();
         assert_eq!(adaptive.name(), "adaptive-pso");
+        let sharded = build_live("flag-swap-sharded", 3, 10, PsoConfig::paper(), 1).unwrap();
+        assert_eq!(sharded.name(), "sharded-pso");
+    }
+
+    /// Exhaustive spelling coverage: every canonical name AND every
+    /// alias in the strategy + environment tables resolves, and each
+    /// resolved strategy builds through all three factories.
+    #[test]
+    fn every_spelling_resolves_and_builds() {
+        let strategy_spellings: &[(&str, &str)] = &[
+            ("pso", "pso"),
+            ("pso-batched", "pso-batched"),
+            ("random", "random"),
+            ("round-robin", "round-robin"),
+            ("uniform", "round-robin"),
+            ("ga", "ga"),
+            ("sa", "sa"),
+            ("tabu", "tabu"),
+            ("adaptive-pso", "adaptive-pso"),
+            ("pso-adaptive", "adaptive-pso"),
+            ("sharded-pso", "sharded-pso"),
+            ("flag-swap-sharded", "sharded-pso"),
+            ("sharded", "sharded-pso"),
+        ];
+        // Every canonical name must appear as its own spelling.
+        for name in NAMES {
+            assert!(
+                strategy_spellings.iter().any(|&(s, c)| s == name && c == name),
+                "spelling table must cover canonical {name}"
+            );
+        }
+        let sc = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        for &(spelling, want) in strategy_spellings {
+            assert_eq!(canonical(spelling).unwrap(), want, "canonical({spelling})");
+            let sim = build(spelling, &sc, 3).unwrap_or_else(|e| panic!("build({spelling}): {e}"));
+            assert_eq!(sim.name(), want);
+            let live = build_live(spelling, 3, 10, PsoConfig::paper(), 3)
+                .unwrap_or_else(|e| panic!("build_live({spelling}): {e}"));
+            assert_eq!(live.name(), want);
+        }
+
+        let env_spellings: &[(&str, &str)] = &[
+            ("analytic", "analytic"),
+            ("analytic-tpd", "analytic"),
+            ("tpd", "analytic"),
+            ("event-driven", "event-driven"),
+            ("des", "event-driven"),
+            ("event", "event-driven"),
+        ];
+        for name in ENV_NAMES {
+            assert!(
+                env_spellings.iter().any(|&(s, c)| s == name && c == name),
+                "env spelling table must cover canonical {name}"
+            );
+        }
+        let mut rng = Pcg32::seed_from_u64(1);
+        let attrs = ClientAttrs::sample_population(
+            sc.client_count(),
+            sc.pspeed_range,
+            sc.memcap_range,
+            sc.mdatasize,
+            &mut rng,
+        );
+        for &(spelling, want) in env_spellings {
+            assert_eq!(canonical_env(spelling).unwrap(), want, "canonical_env({spelling})");
+            let env = build_sim_env(spelling, &sc, attrs.clone())
+                .unwrap_or_else(|e| panic!("build_sim_env({spelling}): {e}"));
+            // Oracle self-names are stable per canonical key (the
+            // analytic oracle reports its historical "analytic-tpd").
+            let oracle = match want {
+                "analytic" => "analytic-tpd",
+                other => other,
+            };
+            assert_eq!(env.name(), oracle, "{spelling}");
+        }
     }
 
     #[test]

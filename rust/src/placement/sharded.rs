@@ -1,0 +1,425 @@
+//! Region-sharded discrete PSO: `sharded-pso` (alias
+//! `flag-swap-sharded`).
+//!
+//! The slot vector is partitioned by subtree: each level-1 subtree of
+//! the hierarchy becomes a *region* (the root slot rides with region
+//! 0), and a [`RegionSwarm`] sub-swarm owns each region's slots,
+//! optimizing them against the frozen rest of the placement. Every
+//! `exchange_every` full sweeps the regional incumbents are composed
+//! into a new global base through an epoch-barrier exchange.
+//!
+//! # Determinism
+//!
+//! The composed placement is a pure function of the seed and the
+//! observed delay sequence, independent of evaluation thread count:
+//!
+//! * regions are seeded in fixed region order from one SplitMix64
+//!   stream and each sub-swarm consumes only its own `Pcg32`;
+//! * candidates are emitted in fixed region-major order and delays are
+//!   routed back in that same order, so which thread *scored* a
+//!   candidate never matters;
+//! * the exchange composes incumbents in fixed region order at a full
+//!   batch barrier (`propose_batch` emits the composed placement alone,
+//!   so the exchange observation cannot interleave with sweep
+//!   observations).
+//!
+//! Combined with the bit-exact path-independence of the delay oracles
+//! (every full/delta/cached path folds with the same
+//! [`crate::fitness::ChunkedFold8`] order), the final placement and
+//! every downstream CSV are byte-identical at any `--threads` value —
+//! property-tested at 1, 2 and 8 workers.
+//!
+//! # Validity
+//!
+//! Sub-swarms insert only *free* clients from their own residue class
+//! (`client % regions == region`), so two regions can never adopt the
+//! same free client concurrently and the composed placement is distinct
+//! by construction. After an exchange, particle positions holding a
+//! client the new base uses outside their region are snapped back to
+//! the base slice ([`RegionSwarm::rebase`]).
+
+use super::{Optimizer, OptimizerState, Placement, PlacementError};
+use crate::hierarchy::HierarchySpec;
+use crate::obs::defs as obs;
+use crate::prng::{Pcg32, Rng, SplitMix64};
+use crate::pso::{PsoConfig, RegionSwarm};
+
+/// Tuning knobs for [`ShardedPso`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardedConfig {
+    /// Total particle budget, split evenly across regions (each region
+    /// gets at least one).
+    pub particles: usize,
+    /// Full sweeps between incumbent exchanges.
+    pub exchange_every: usize,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> ShardedConfig {
+        ShardedConfig { particles: 12, exchange_every: 4 }
+    }
+}
+
+impl ShardedConfig {
+    /// Adopt the swarm size of a [`PsoConfig`] (the scenario's
+    /// `[pso]
+    /// particles`), keeping the default exchange cadence.
+    pub fn from_pso(pso: &PsoConfig) -> ShardedConfig {
+        ShardedConfig { particles: pso.particles.max(1), ..ShardedConfig::default() }
+    }
+}
+
+/// What the last `propose_batch` put in flight, so `observe_batch` can
+/// route delays. Sweep/exchange layouts are fixed at propose time; a
+/// truncated observation (the `drive` budget prefix) is handled by
+/// routing only as many delays as arrived.
+enum Pending {
+    None,
+    /// The initial base placement, alone.
+    Bootstrap,
+    /// Region-major sweep; per-region candidate counts in region order.
+    Sweep(Vec<usize>),
+    /// The composed exchange placement, alone.
+    Exchange(Vec<usize>),
+}
+
+/// Region-sharded PSO over the slot vector (see module docs).
+pub struct ShardedPso {
+    regions: Vec<RegionSwarm>,
+    /// The frozen global placement the sub-swarms optimize against.
+    base: Vec<usize>,
+    /// Delay of `base`; `None` until the bootstrap observation.
+    base_delay: Option<f64>,
+    /// `in_base[c]` ⇔ client `c` appears anywhere in `base`.
+    in_base: Vec<bool>,
+    exchange_every: usize,
+    sweeps_since_exchange: usize,
+    pending: Pending,
+    best: Option<(Placement, f64)>,
+}
+
+impl ShardedPso {
+    /// Partition by the hierarchy's level-1 subtrees: region `r` owns
+    /// the subtree rooted at slot `1 + r`; the root slot rides with
+    /// region 0. Depth-1 trees have a single one-slot region.
+    pub fn from_spec(
+        spec: HierarchySpec,
+        client_count: usize,
+        cfg: ShardedConfig,
+        rng: Pcg32,
+    ) -> ShardedPso {
+        let mut regions = Vec::new();
+        if spec.depth <= 1 {
+            regions.push(vec![0]);
+        } else {
+            for r in 0..spec.width {
+                let mut slots = Vec::new();
+                let mut stack = vec![1 + r];
+                while let Some(s) = stack.pop() {
+                    slots.push(s);
+                    stack.extend(spec.children(s));
+                }
+                slots.sort_unstable();
+                regions.push(slots);
+            }
+            regions[0].insert(0, 0);
+        }
+        ShardedPso::with_regions(regions, spec.dimensions(), client_count, cfg, rng)
+    }
+
+    /// Flat partition for non-tree slot vectors: contiguous chunks,
+    /// `min(4, dims)` regions.
+    pub fn flat(dims: usize, client_count: usize, cfg: ShardedConfig, rng: Pcg32) -> ShardedPso {
+        assert!(dims >= 1);
+        let r_count = dims.min(4);
+        let chunk = dims.div_ceil(r_count);
+        let regions = (0..r_count)
+            .map(|r| ((r * chunk).min(dims)..((r + 1) * chunk).min(dims)).collect())
+            .filter(|s: &Vec<usize>| !s.is_empty())
+            .collect();
+        ShardedPso::with_regions(regions, dims, client_count, cfg, rng)
+    }
+
+    /// Infer the tree shape from a bare dimension count (the live-mode
+    /// factory, which has no scenario): the smallest width `w ∈ 2..=8`
+    /// whose complete tree has exactly `dims` slots wins (deepest
+    /// tree); otherwise fall back to the flat partition.
+    pub fn for_dims(
+        dims: usize,
+        client_count: usize,
+        cfg: ShardedConfig,
+        rng: Pcg32,
+    ) -> ShardedPso {
+        for w in 2..=8usize {
+            let (mut total, mut pw, mut depth) = (1usize, 1usize, 1usize);
+            while total < dims {
+                pw *= w;
+                total += pw;
+                depth += 1;
+            }
+            if total == dims && depth >= 2 {
+                return ShardedPso::from_spec(HierarchySpec::new(depth, w), client_count, cfg, rng);
+            }
+        }
+        ShardedPso::flat(dims, client_count, cfg, rng)
+    }
+
+    fn with_regions(
+        region_slots: Vec<Vec<usize>>,
+        dims: usize,
+        client_count: usize,
+        cfg: ShardedConfig,
+        mut rng: Pcg32,
+    ) -> ShardedPso {
+        assert!(dims >= 1 && client_count >= dims);
+        debug_assert_eq!(region_slots.iter().map(Vec::len).sum::<usize>(), dims);
+        let per_region = (cfg.particles / region_slots.len()).max(1);
+        let base = rng.sample_distinct(client_count, dims);
+        let mut in_base = vec![false; client_count];
+        for &c in &base {
+            in_base[c] = true;
+        }
+        // Fixed region order ⇒ fixed seed assignment, thread-independent.
+        let mut seeds = SplitMix64::new(rng.next_u64());
+        let regions = region_slots
+            .into_iter()
+            .map(|slots| RegionSwarm::new(slots, per_region, seeds.next()))
+            .collect();
+        ShardedPso {
+            regions,
+            base,
+            base_delay: None,
+            in_base,
+            exchange_every: cfg.exchange_every.max(1),
+            sweeps_since_exchange: 0,
+            pending: Pending::None,
+            best: None,
+        }
+    }
+
+    fn recompute_in_base(&mut self) {
+        self.in_base.iter_mut().for_each(|b| *b = false);
+        for &c in &self.base {
+            self.in_base[c] = true;
+        }
+    }
+
+    fn rebase_all(&mut self, delay: f64) {
+        for region in &mut self.regions {
+            region.rebase(&self.base, delay, &self.in_base);
+        }
+    }
+}
+
+impl Optimizer for ShardedPso {
+    fn name(&self) -> &'static str {
+        "sharded-pso"
+    }
+
+    fn propose_batch(&mut self, _round: usize) -> Vec<Placement> {
+        if self.base_delay.is_none() {
+            self.pending = Pending::Bootstrap;
+            return vec![Placement::new(self.base.clone())];
+        }
+        if self.sweeps_since_exchange >= self.exchange_every {
+            // Epoch barrier: compose the regional incumbents in fixed
+            // region order and score the composition alone.
+            let mut composed = self.base.clone();
+            for region in &self.regions {
+                let (slice, _) = region.incumbent();
+                for (i, &s) in region.slots().iter().enumerate() {
+                    composed[s] = slice[i];
+                }
+            }
+            self.pending = Pending::Exchange(composed.clone());
+            return vec![Placement::new(composed)];
+        }
+        // Sweep: every region moves every particle once, region-major.
+        let modulus = self.regions.len();
+        let mut out = Vec::new();
+        let mut counts = Vec::with_capacity(modulus);
+        for (r, region) in self.regions.iter_mut().enumerate() {
+            let started = std::time::Instant::now();
+            let before = out.len();
+            region.propose(&self.base, &self.in_base, r, modulus, &mut out);
+            counts.push(out.len() - before);
+            // Timing feeds telemetry only — never the search — so wall
+            // clock cannot perturb determinism.
+            obs::SHARDED_SUBSWARM_BUSY.observe(started.elapsed().as_secs_f64());
+        }
+        self.pending = Pending::Sweep(counts);
+        out
+    }
+
+    fn observe_batch(&mut self, placements: &[Placement], delays: &[f64]) {
+        for (p, &d) in placements.iter().zip(delays) {
+            let improved = match &self.best {
+                Some((_, bd)) => d < *bd,
+                None => true,
+            };
+            if improved {
+                self.best = Some((p.clone(), d));
+            }
+        }
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => {}
+            Pending::Bootstrap => {
+                if let Some(&d) = delays.first() {
+                    self.base_delay = Some(d);
+                    self.rebase_all(d);
+                }
+            }
+            Pending::Exchange(composed) => {
+                if let Some(&d) = delays.first() {
+                    self.base = composed;
+                    self.recompute_in_base();
+                    self.base_delay = Some(d);
+                    self.sweeps_since_exchange = 0;
+                    self.rebase_all(d);
+                    obs::SHARDED_EXCHANGE_ROUNDS.inc();
+                }
+            }
+            Pending::Sweep(counts) => {
+                // Route delays region-major; a budget-truncated prefix
+                // simply leaves the tail regions unobserved this sweep.
+                let mut off = 0;
+                let mut complete = true;
+                for (region, &k) in self.regions.iter_mut().zip(&counts) {
+                    let take = k.min(delays.len().saturating_sub(off));
+                    let improvements = region.observe(&delays[off..off + take]);
+                    obs::SHARDED_REGION_IMPROVEMENTS.add(improvements);
+                    complete &= take == k;
+                    off += take;
+                }
+                if complete {
+                    self.sweeps_since_exchange += 1;
+                }
+            }
+        }
+    }
+
+    fn best(&self) -> Option<(Placement, f64)> {
+        self.best.clone()
+    }
+
+    fn group_size(&self) -> usize {
+        self.regions.iter().map(RegionSwarm::particles).sum()
+    }
+
+    fn restore(&mut self, state: &OptimizerState) -> Result<(), PlacementError> {
+        super::check_state_name(self.name(), state)?;
+        if let Some((p, d)) = &state.best {
+            if p.len() == self.base.len() {
+                self.base = p.to_vec();
+                self.recompute_in_base();
+                self.base_delay = Some(*d);
+                self.sweeps_since_exchange = 0;
+                self.rebase_all(*d);
+                self.best = Some((p.clone(), *d));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::{testkit, validate_placement};
+
+    fn toy_delay(p: &[usize]) -> f64 {
+        // Low client ids are fast; slot position weights break ties.
+        p.iter().enumerate().map(|(i, &c)| (c as f64 + 1.0) * (1.0 + 0.1 * i as f64)).sum()
+    }
+
+    #[test]
+    fn emits_valid_placements_across_many_rounds() {
+        // Tree shapes and degenerate flat shapes, spanning exchanges.
+        for (dims, cc) in [(1usize, 1usize), (2, 5), (3, 10), (7, 7), (21, 40)] {
+            let cfg = ShardedConfig { particles: 8, exchange_every: 2 };
+            let mut opt = ShardedPso::for_dims(dims, cc, cfg, Pcg32::seed_from_u64(11));
+            testkit::run_toy_validated(&mut opt, dims, cc, 60, toy_delay);
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic_for_a_seed() {
+        let run = || {
+            let cfg = ShardedConfig::default();
+            let mut opt =
+                ShardedPso::from_spec(HierarchySpec::new(3, 2), 30, cfg, Pcg32::seed_from_u64(9));
+            let mut trace = Vec::new();
+            for round in 0..40 {
+                let batch = opt.propose_batch(round);
+                let delays: Vec<f64> = batch.iter().map(|p| toy_delay(p)).collect();
+                opt.observe_batch(&batch, &delays);
+                trace.extend(batch.into_iter().map(Placement::into_vec));
+            }
+            (trace, opt.best())
+        };
+        let (trace_a, best_a) = run();
+        let (trace_b, best_b) = run();
+        assert_eq!(trace_a, trace_b);
+        let (pa, da) = best_a.unwrap();
+        let (pb, db) = best_b.unwrap();
+        assert_eq!(pa.as_slice(), pb.as_slice());
+        assert_eq!(da.to_bits(), db.to_bits());
+    }
+
+    #[test]
+    fn exchanges_compose_valid_placements_and_improve_over_bootstrap() {
+        let spec = HierarchySpec::new(3, 4); // paper shape: 21 slots
+        let cc = 100;
+        let cfg = ShardedConfig { particles: 16, exchange_every: 3 };
+        let mut opt = ShardedPso::from_spec(spec, cc, cfg, Pcg32::seed_from_u64(5));
+        let mut first = None;
+        for round in 0..80 {
+            let batch = opt.propose_batch(round);
+            let delays: Vec<f64> = batch
+                .iter()
+                .map(|p| {
+                    validate_placement(p, spec.dimensions(), cc).expect("valid candidate");
+                    toy_delay(p)
+                })
+                .collect();
+            if first.is_none() {
+                first = Some(delays[0]);
+            }
+            opt.observe_batch(&batch, &delays);
+        }
+        let (best, d) = opt.best().expect("observed rounds");
+        validate_placement(&best, spec.dimensions(), cc).expect("valid best");
+        assert!(d < first.unwrap(), "best {d} should beat bootstrap {}", first.unwrap());
+    }
+
+    #[test]
+    fn region_partition_covers_every_slot_once() {
+        for (depth, width) in [(1usize, 3usize), (2, 2), (3, 4), (4, 2)] {
+            let spec = HierarchySpec::new(depth, width);
+            let opt =
+                ShardedPso::from_spec(spec, 500, ShardedConfig::default(), Pcg32::seed_from_u64(1));
+            let mut all: Vec<usize> =
+                opt.regions.iter().flat_map(|r| r.slots().to_vec()).collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..spec.dimensions()).collect::<Vec<_>>(), "D{depth} W{width}");
+        }
+    }
+
+    #[test]
+    fn restore_adopts_a_matching_best_and_rejects_foreign_state() {
+        let cfg = ShardedConfig::default();
+        let mut opt = ShardedPso::for_dims(3, 10, cfg, Pcg32::seed_from_u64(2));
+        let state = OptimizerState {
+            name: "sharded-pso".into(),
+            best: Some((Placement::new(vec![4, 1, 7]), 12.5)),
+        };
+        opt.restore(&state).unwrap();
+        let (p, d) = opt.best().unwrap();
+        assert_eq!(p.as_slice(), &[4, 1, 7]);
+        assert_eq!(d, 12.5);
+        // And the next sweep still emits valid placements on the new base.
+        testkit::run_toy_validated(&mut opt, 3, 10, 20, toy_delay);
+        let foreign = OptimizerState { name: "pso".into(), best: None };
+        assert!(opt.restore(&foreign).is_err());
+    }
+}

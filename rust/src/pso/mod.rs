@@ -21,4 +21,4 @@ mod swarm;
 pub use async_swarm::AsyncSwarm;
 pub use config::PsoConfig;
 pub use particle::Particle;
-pub use swarm::{IterationStats, Swarm};
+pub use swarm::{IterationStats, RegionSwarm, Swarm};

@@ -195,6 +195,224 @@ impl Swarm {
     }
 }
 
+/// Region-masked sub-swarm: the per-region search core of
+/// `placement::ShardedPso`. It owns only its region's slot
+/// coordinates (`slots`, global slot ids in ascending order) and
+/// optimizes them against a frozen rest-of-placement ("the base"),
+/// proposing full placements that differ from the base only inside the
+/// region.
+///
+/// The move set is the discrete flag-swap family restricted to the
+/// region: with equal odds a particle either *adopts* one coordinate
+/// from an attractor (its pbest or the regional incumbent — swapping
+/// internally when the adopted client is already held, the classic
+/// discrete-PSO swap-toward-gbest operator) or *explores* (an
+/// in-region slot swap, or replacing one slot with a free client drawn
+/// from the region's residue class — the caller's cross-region
+/// conflict-avoidance contract). Every move preserves validity against
+/// the frozen base, so every emitted candidate is a valid placement.
+///
+/// Determinism: the swarm consumes only its own [`Pcg32`] stream (the
+/// caller seeds regions in fixed order via SplitMix64) and the
+/// observed delays, so its behavior is a pure function of
+/// (seed, delay sequence) — independent of thread count.
+pub struct RegionSwarm {
+    /// Global slot ids owned by this region, ascending.
+    slots: Vec<usize>,
+    /// Particle positions: the clients at `slots`, one row per particle.
+    positions: Vec<Vec<usize>>,
+    /// Per-particle best region slice and the global delay it scored.
+    pbest: Vec<Vec<usize>>,
+    pbest_delay: Vec<f64>,
+    /// Regional incumbent (gbest) and its global delay.
+    gbest: Vec<usize>,
+    gbest_delay: f64,
+    rng: Pcg32,
+}
+
+impl RegionSwarm {
+    /// A sub-swarm of `particles` probes over `slots`. Positions
+    /// materialize at the first [`RegionSwarm::rebase`] (the caller's
+    /// bootstrap observation supplies the initial base + delay).
+    pub fn new(slots: Vec<usize>, particles: usize, seed: u64) -> RegionSwarm {
+        assert!(!slots.is_empty() && particles >= 1);
+        let len = slots.len();
+        RegionSwarm {
+            slots,
+            positions: vec![vec![0; len]; particles],
+            pbest: vec![vec![0; len]; particles],
+            pbest_delay: vec![f64::INFINITY; particles],
+            gbest: vec![0; len],
+            gbest_delay: f64::INFINITY,
+            rng: Pcg32::seed_from_u64(seed),
+        }
+    }
+
+    pub fn slots(&self) -> &[usize] {
+        &self.slots
+    }
+
+    pub fn particles(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// The regional incumbent: the best region slice observed since the
+    /// last rebase, with the global delay it scored.
+    pub fn incumbent(&self) -> (&[usize], f64) {
+        (&self.gbest, self.gbest_delay)
+    }
+
+    fn base_slice(&self, base: &[usize], out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.slots.iter().map(|&s| base[s]));
+    }
+
+    /// Re-anchor on a freshly composed `base` scoring `delay` (the
+    /// epoch-barrier exchange, and the initial bootstrap): the incumbent
+    /// and every pbest reset to the base's region slice — delays
+    /// measured against the old rest-of-placement are not comparable —
+    /// and any particle position that went stale (holds a client the
+    /// new base now uses *outside* this region) snaps back to the
+    /// slice, so every future candidate stays a valid overlay.
+    pub fn rebase(&mut self, base: &[usize], delay: f64, in_base: &[bool]) {
+        let mut slice = Vec::with_capacity(self.slots.len());
+        self.base_slice(base, &mut slice);
+        self.gbest.clone_from(&slice);
+        self.gbest_delay = delay;
+        for (p, d) in self.pbest.iter_mut().zip(&mut self.pbest_delay) {
+            p.clone_from(&slice);
+            *d = delay;
+        }
+        for pos in &mut self.positions {
+            let stale = pos
+                .iter()
+                .any(|&c| in_base[c] && !self.slots.iter().any(|&s| base[s] == c));
+            if stale || pos.iter().all(|&c| c == 0) {
+                pos.clone_from(&slice);
+            }
+        }
+    }
+
+    /// Move every particle once and append one full candidate per
+    /// particle to `out`: the frozen `base` with this region's slots
+    /// overlaid by the particle's position. `in_base` marks clients the
+    /// base currently uses anywhere; replacement draws are confined to
+    /// the residue class `class (mod modulus)` so concurrent regions
+    /// can never insert the same free client.
+    pub fn propose(
+        &mut self,
+        base: &[usize],
+        in_base: &[bool],
+        class: usize,
+        modulus: usize,
+        out: &mut Vec<crate::placement::Placement>,
+    ) {
+        let client_count = in_base.len();
+        for pi in 0..self.positions.len() {
+            self.step_particle(pi, in_base, class, modulus, client_count);
+            let mut candidate = base.to_vec();
+            for (i, &s) in self.slots.iter().enumerate() {
+                candidate[s] = self.positions[pi][i];
+            }
+            out.push(crate::placement::Placement::new(candidate));
+        }
+    }
+
+    /// One flag-swap move on particle `pi`; preserves validity against
+    /// the frozen base by construction.
+    fn step_particle(
+        &mut self,
+        pi: usize,
+        in_base: &[bool],
+        class: usize,
+        modulus: usize,
+        client_count: usize,
+    ) {
+        use crate::prng::Rng;
+        let len = self.slots.len();
+        // Social phase: adopt one coordinate from an attractor.
+        if self.rng.gen_range(2) == 0 {
+            let toward_pbest = self.rng.gen_range(2) == 0;
+            let att = if toward_pbest { self.pbest[pi].clone() } else { self.gbest.clone() };
+            let pos = &mut self.positions[pi];
+            let diffs = pos.iter().zip(&att).filter(|(a, b)| a != b).count();
+            if diffs > 0 {
+                let pick = self.rng.gen_range(diffs as u64) as usize;
+                let i = pos
+                    .iter()
+                    .zip(&att)
+                    .enumerate()
+                    .filter(|(_, (a, b))| a != b)
+                    .nth(pick)
+                    .map(|(i, _)| i)
+                    .expect("diff index in range");
+                let c = att[i];
+                match pos.iter().position(|&x| x == c) {
+                    Some(j) => pos.swap(i, j),
+                    None => pos[i] = c,
+                }
+                return;
+            }
+            // Position already equals the attractor: fall through to
+            // exploration so the particle keeps moving.
+        }
+        // Exploration phase: in-region swap or residue-class replace.
+        let swap_only = self.rng.gen_range(2) == 0;
+        if swap_only && len >= 2 {
+            let i = self.rng.gen_range(len as u64) as usize;
+            let j = (i + 1 + self.rng.gen_range(len as u64 - 1) as usize) % len;
+            self.positions[pi].swap(i, j);
+            return;
+        }
+        // Replace: draw a free client from this region's residue class
+        // (not held by the base anywhere, not already in this particle).
+        let i = self.rng.gen_range(len as u64) as usize;
+        let u = self.rng.gen_range(client_count as u64) as usize;
+        let mut c = (u - u % modulus + class).min(client_count - 1);
+        if c % modulus != class {
+            c = class; // the top partial block lacks this class; wrap
+        }
+        let pos = &mut self.positions[pi];
+        for _ in 0..16 {
+            if !in_base[c] && !pos.contains(&c) {
+                pos[i] = c;
+                return;
+            }
+            c += modulus;
+            if c >= client_count {
+                c = class;
+            }
+        }
+        // No free class client within the probe budget: swap instead
+        // (1-slot regions with nothing free simply re-propose, which
+        // the oracles answer from the Same cache).
+        if len >= 2 {
+            let j = (i + 1 + self.rng.gen_range(len as u64 - 1) as usize) % len;
+            self.positions[pi].swap(i, j);
+        }
+    }
+
+    /// Absorb the global delays of (a prefix of) the candidates emitted
+    /// by the latest [`RegionSwarm::propose`], in particle order.
+    /// Returns how many times the regional incumbent improved.
+    pub fn observe(&mut self, delays: &[f64]) -> u64 {
+        debug_assert!(delays.len() <= self.positions.len());
+        let mut improvements = 0;
+        for (pi, &d) in delays.iter().enumerate() {
+            if d < self.pbest_delay[pi] {
+                self.pbest_delay[pi] = d;
+                self.pbest[pi].clone_from(&self.positions[pi]);
+            }
+            if d < self.gbest_delay {
+                self.gbest_delay = d;
+                self.gbest.clone_from(&self.positions[pi]);
+                improvements += 1;
+            }
+        }
+        improvements
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

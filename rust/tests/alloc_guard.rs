@@ -255,6 +255,54 @@ fn sharded_eval_batch_allocations_do_not_scale_with_batch_or_population() {
 }
 
 #[test]
+fn sharded_pso_candidate_batches_stay_inside_the_dispatch_alloc_budget() {
+    let _serial = serialized();
+    // The batches ShardedPso actually emits (full-placement overlays
+    // from region-local sweeps) must score under the same fixed
+    // per-dispatch budget as hand-rolled candidates: the steady-state
+    // eval path allocates the result vector and the worker bookkeeping,
+    // never per candidate, per region or per client. Candidate
+    // generation itself allocates, so it stays outside the window.
+    use repro::placement::{Optimizer, ParEvalBatch, ShardedConfig, ShardedPso};
+    let mut counts = Vec::new();
+    let mut lens = Vec::new();
+    for (tpl, seed) in [(2usize, 21u64), (625, 22)] {
+        let spec = HierarchySpec::new(3, 4);
+        let attrs = population(spec, tpl, seed);
+        let cc = attrs.len();
+        let cfg = ShardedConfig { particles: 12, exchange_every: 4 };
+        let mut opt = ShardedPso::from_spec(spec, cc, cfg, Pcg32::seed_from_u64(seed));
+        let mut env = ParEvalBatch::new(3, |_| AnalyticTpd::new(spec, attrs.clone()));
+        // Drive past bootstrap (and one exchange) outside the counted
+        // window so swarm state and worker scratches are warm, then
+        // take the next sweep batch as the counted workload.
+        let mut round = 0;
+        let candidates = loop {
+            let batch = opt.propose_batch(round);
+            let delays = env.eval_batch(&batch).unwrap();
+            opt.observe_batch(&batch, &delays);
+            round += 1;
+            if round >= 6 {
+                break opt.propose_batch(round);
+            }
+        };
+        let n = count_allocs(|| {
+            let delays = env.eval_batch(&candidates).unwrap();
+            assert_eq!(delays.len(), candidates.len());
+        });
+        counts.push(n);
+        lens.push(candidates.len());
+    }
+    // Same swarm configuration → same batch shape at both scales; the
+    // dispatch cost must match it.
+    assert_eq!(lens[0], lens[1], "batch shape should not depend on population");
+    assert_eq!(
+        counts[0], counts[1],
+        "sharded-pso dispatch allocations must not scale with population: {counts:?}"
+    );
+}
+
+#[test]
 fn event_driven_eval_batch_steady_state_allocates_only_the_result_vec() {
     let _serial = serialized();
     // Conformance configuration; the event heap and every per-slot

@@ -95,6 +95,44 @@ fn fleet_csv_is_byte_identical_across_thread_counts() {
 }
 
 #[test]
+fn sharded_pso_fleet_csv_is_byte_identical_across_thread_counts() {
+    // The sharded optimizer's determinism contract at the fleet level:
+    // region-local sub-swarms plus the epoch-barrier exchange must make
+    // every report file byte-identical at --threads 1, 2 and 8. Any
+    // wall-clock or scheduling leak into the search would break the
+    // equality here before it could corrupt a paper run.
+    let scenarios = tiny_scenarios();
+    let strategies: Vec<String> =
+        ["sharded-pso", "pso"].iter().map(|s| s.to_string()).collect();
+    let dir = std::env::temp_dir().join("repro_fleet_sharded_integration");
+    let _ = std::fs::remove_dir_all(&dir);
+    let write = |threads: usize, tag: &str| -> (String, String, String) {
+        let cfg = FleetConfig { threads, evals: Some(12), replicates: 2 };
+        let cells = run_fleet(&scenarios, &strategies, &cfg).unwrap();
+        let path = dir.join(format!("sharded_{tag}.csv"));
+        report_fleet(&cells, Some(&path)).unwrap();
+        (
+            std::fs::read_to_string(&path).unwrap(),
+            std::fs::read_to_string(dir.join(format!("sharded_{tag}.sig.csv"))).unwrap(),
+            std::fs::read_to_string(dir.join(format!("sharded_{tag}.effect.csv"))).unwrap(),
+        )
+    };
+    let (matrix1, sig1, effect1) = write(1, "t1");
+    for (threads, tag) in [(2usize, "t2"), (8, "t8")] {
+        let (matrix, sig, effect) = write(threads, tag);
+        assert_eq!(matrix1, matrix, "matrix CSV drifted at --threads {threads}");
+        assert_eq!(sig1, sig, "sig CSV drifted at --threads {threads}");
+        assert_eq!(effect1, effect, "effect CSV drifted at --threads {threads}");
+    }
+    // Sanity: the sharded strategy actually ran in every scenario row.
+    assert_eq!(matrix1.lines().count(), 1 + scenarios.len() * strategies.len());
+    assert_eq!(
+        matrix1.lines().skip(1).filter(|l| l.contains(",sharded-pso,")).count(),
+        scenarios.len()
+    );
+}
+
+#[test]
 fn adaptive_allocation_is_deterministic_across_thread_counts() {
     // The same plan with --replicates 2..10 at --threads 1 vs 8 must
     // yield byte-identical matrix + sig + effect CSVs and identical

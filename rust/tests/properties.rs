@@ -812,6 +812,115 @@ fn prop_sharded_eval_batch_bit_identical_to_serial() {
 }
 
 #[test]
+fn prop_chunked_fold_is_pure_function_of_stream_and_tracks_linear() {
+    // The fixed-shape 8-lane pairwise fold shared by every per-leaf sum
+    // (legacy tpd, TpdScratch full + delta, DES rounds, sharded
+    // workers): one-shot == streaming == re-run bitwise (a pure
+    // function of the element sequence), exactly the legacy left fold
+    // for short streams, and within float noise of it for long ones —
+    // the legacy `linear_sum` stays callable as the reference oracle.
+    use repro::fitness::{linear_sum, ChunkedFold8};
+    forall("chunked fold contract", 250, |g| {
+        let n = g.usize_in(0..300); // spans many full lane cycles
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(0.001, 9.0)).collect();
+        let one_shot = ChunkedFold8::sum(xs.iter().copied());
+        let mut streaming = ChunkedFold8::new();
+        for &x in &xs {
+            streaming.push(x);
+        }
+        assert_eq!(one_shot.to_bits(), streaming.finish().to_bits());
+        assert_eq!(one_shot.to_bits(), ChunkedFold8::sum(xs.iter().copied()).to_bits());
+        let linear = linear_sum(xs.iter().copied());
+        if n <= 3 {
+            // Fewer pushes than any cross-lane pairing: exactly linear.
+            assert_eq!(one_shot.to_bits(), linear.to_bits());
+        } else {
+            assert!(
+                (one_shot - linear).abs() <= 1e-12 * linear.abs().max(1.0),
+                "chunked {one_shot} vs linear {linear} at n={n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fold_order_identical_across_full_delta_and_sharded_paths() {
+    // The fold-order contract end to end: full streaming eval, legacy
+    // arrangement pipeline, delta fast paths and the sharded worker
+    // pool all stream per-leaf sums in the same fixed order, so their
+    // scores are bit-identical — on random shapes over populations
+    // always past the 64-client validator fast path.
+    forall("fold order across eval paths", 60, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + 66 + g.usize_in(0..120); // > 64 clients, free ids left
+        let attrs = random_hetero_population(g, cc);
+        let mut rng = Pcg32::seed_from_u64(g.u64_in(0..u64::MAX / 2));
+        let base = rng.sample_distinct(cc, dims);
+        let mut scratch = TpdScratch::new(spec, cc);
+        let full = scratch.eval(&base, &attrs).unwrap();
+        let legacy = tpd(&Arrangement::from_position(spec, &base, cc), &attrs).total;
+        assert_eq!(full.to_bits(), legacy.to_bits());
+        // Replace-delta against a fresh full eval of the neighbor.
+        let (slot, id) = draw_slot_replacement(&base, cc, &mut rng);
+        let mut neighbor = base.clone();
+        neighbor[slot] = id;
+        let delta = scratch.delta_replace(slot, id, &attrs);
+        let fresh = TpdScratch::new(spec, cc).eval(&neighbor, &attrs).unwrap();
+        assert_eq!(delta.to_bits(), fresh.to_bits());
+        // Sharded pool scores the same candidates with the same bits.
+        let batch = vec![Placement::new(base), Placement::new(neighbor)];
+        let mut serial = AnalyticTpd::new(spec, attrs.clone());
+        let want: Vec<u64> =
+            serial.eval_batch(&batch).unwrap().iter().map(|d| d.to_bits()).collect();
+        assert_eq!(want[0], full.to_bits());
+        assert_eq!(want[1], delta.to_bits());
+        for threads in [2usize, 8] {
+            let mut par = ParEvalBatch::new(threads, |_| AnalyticTpd::new(spec, attrs.clone()));
+            let got: Vec<u64> =
+                par.eval_batch(&batch).unwrap().iter().map(|d| d.to_bits()).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_pso_search_is_thread_count_invariant() {
+    // The tentpole determinism claim: a ShardedPso run — proposals,
+    // exchanges and the final composed best — is a pure function of the
+    // seed and the observed delays. Since the oracles are bit-exact at
+    // any worker count, driving against ParEvalBatch at 1, 2 and 8
+    // threads must finish with the same best placement, bit-identical
+    // delay included, as the serial environment.
+    forall("sharded-pso invariant across thread counts", 12, |g| {
+        let spec = random_spec(g);
+        let dims = spec.dimensions();
+        let cc = dims + 1 + g.usize_in(0..40);
+        let attrs = random_population(g, cc);
+        let seed = g.u64_in(0..1 << 40);
+        let budget = 40 + g.usize_in(0..80);
+        let cfg = ShardedConfig {
+            particles: 2 + g.usize_in(0..8),
+            exchange_every: 1 + g.usize_in(0..4),
+        };
+        let mut run = |env: &mut dyn Environment| -> (Vec<usize>, u64) {
+            let mut opt = ShardedPso::from_spec(spec, cc, cfg, Pcg32::seed_from_u64(seed));
+            drive(&mut opt, env, budget).unwrap();
+            let (p, d) = opt.best().expect("budget > 0 observed something");
+            assert_valid_placement(&p, dims, cc);
+            (p.into_vec(), d.to_bits())
+        };
+        let want = run(&mut AnalyticTpd::new(spec, attrs.clone()));
+        for threads in [1usize, 2, 8] {
+            let mut par = ParEvalBatch::new(threads, |_| AnalyticTpd::new(spec, attrs.clone()));
+            let got = run(&mut par);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    });
+}
+
+#[test]
 fn prop_des_barrier_delta_matches_full_simulation() {
     // In the statically-analyzable regime (level barrier, free network,
     // no training, nominal realization) the EventDrivenEnv delta fast

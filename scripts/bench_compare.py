@@ -1,19 +1,38 @@
 #!/usr/bin/env python3
 """Compare a fresh BENCH_eval.json run against the committed baseline.
 
-Warn-only perf gate (ROADMAP item 5, first cut): prints a per-case
-evals/sec comparison and emits a GitHub Actions annotation for every
-case slower than the baseline by more than --threshold (default 25%).
-The exit code is 0 unless an input file is missing or malformed — a
-regression warns, it does not fail the build.
+Perf gate (ROADMAP item 5): prints a per-case evals/sec comparison and
+flags every case slower than the baseline by more than its tolerance
+band. Two schema versions are accepted:
+
+  version 1  results have no "threads" field; every case ran serially
+             and is treated as threads=1.
+  version 2+ every result carries "threads" (the worker count used by
+             that case — 1 for the serial oracles, N for "sharded").
+
+Cases are keyed by (case, threads) and compared strictly like-for-like:
+a sharded case measured at 4 threads is never compared against a run of
+the same case at a different worker count (that delta would measure the
+machine, not the code). Mismatched thread counts are reported as
+informational notes.
+
+Tolerance bands are per-case, derived from the baseline's own noise:
+
+    band = clamp(3 * std_us / mean_us_per_batch, 0.10, 0.50)
+
+i.e. three standard deviations of the baseline's batch-time jitter,
+clamped to [10%, 50%]. Cases whose baseline lacks std_us/mean_us fall
+back to --threshold (default 25%).
 
 The committed baseline may carry "provisional": true, meaning its
-numbers were not measured on the CI hardware class yet. Deltas against
-a provisional baseline are reported as notices instead of warnings;
-refresh it with:
+numbers were not measured on the CI hardware class yet. Against a
+provisional baseline, regressions emit ::notice:: annotations and the
+exit code stays 0. Once the provisional flag is dropped the gate is
+hard: regressions emit ::warning:: annotations and the script exits 1.
+Refresh the baseline with:
 
-    cargo run --release -- bench --suite eval --out BENCH_baseline_ci.json
-    # then strip nothing — the artifact is committed as-is
+    cargo run --release -- bench --suite eval --samples 3 --warmup 1 \
+        --batch 8 --out BENCH_baseline_ci.json
 
 Usage: bench_compare.py CURRENT.json BASELINE.json [--threshold 0.25]
 """
@@ -22,8 +41,11 @@ import argparse
 import json
 import sys
 
+BAND_MIN, BAND_MAX = 0.10, 0.50
+
 
 def load_results(path):
+    """Return (doc, {(case, threads): result-dict}) or exit with a message."""
     try:
         with open(path, encoding="utf-8") as f:
             doc = json.load(f)
@@ -31,15 +53,40 @@ def load_results(path):
         sys.exit(f"bench_compare: cannot read {path}: {e}")
     if doc.get("suite") != "eval" or not isinstance(doc.get("results"), list):
         sys.exit(f"bench_compare: {path} is not a BENCH eval document")
-    by_case = {}
+    version = doc.get("version", 1)
+    if not isinstance(version, int) or version < 1:
+        sys.exit(f"bench_compare: {path}: bad document version {version!r}")
+    by_key = {}
     for r in doc["results"]:
         case, eps = r.get("case"), r.get("evals_per_sec")
         if not isinstance(case, str) or not isinstance(eps, (int, float)) or eps <= 0:
             sys.exit(f"bench_compare: {path}: malformed result entry {r!r}")
-        by_case[case] = float(eps)
-    if not by_case:
+        threads = r.get("threads", 1 if version < 2 else None)
+        if not isinstance(threads, int) or threads < 1:
+            sys.exit(
+                f"bench_compare: {path}: version {version} result {case!r} "
+                f"needs an integer threads >= 1, got {threads!r}"
+            )
+        key = (case, threads)
+        if key in by_key:
+            sys.exit(f"bench_compare: {path}: duplicate result for {key}")
+        by_key[key] = r
+    if not by_key:
         sys.exit(f"bench_compare: {path} has no results")
-    return doc, by_case
+    return doc, by_key
+
+
+def tolerance(entry, fallback):
+    """Per-case band from the baseline's own batch-time noise."""
+    std, mean = entry.get("std_us"), entry.get("mean_us_per_batch")
+    if (
+        isinstance(std, (int, float))
+        and isinstance(mean, (int, float))
+        and std >= 0
+        and mean > 0
+    ):
+        return min(BAND_MAX, max(BAND_MIN, 3.0 * std / mean))
+    return fallback
 
 
 def main():
@@ -47,7 +94,7 @@ def main():
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="relative evals/sec drop that triggers a warning")
+                    help="fallback band for cases whose baseline has no std_us")
     opts = ap.parse_args()
 
     _, current = load_results(opts.current)
@@ -59,30 +106,45 @@ def main():
         print("note: the baseline is PROVISIONAL (not measured on this "
               "hardware class); deltas below are informational only")
 
+    cur_cases = {c for c, _ in current}
     regressions = 0
-    print(f"{'case':<28} {'baseline/s':>14} {'current/s':>14} {'delta':>8}")
-    for case in sorted(baseline):
-        if case not in current:
-            print(f"{annotate}bench case {case} missing from {opts.current}")
+    print(f"{'case':<30} {'thr':>3} {'baseline/s':>13} {'current/s':>13} "
+          f"{'delta':>8} {'band':>6}")
+    for case, threads in sorted(baseline):
+        entry = baseline[(case, threads)]
+        base = float(entry["evals_per_sec"])
+        band = tolerance(entry, opts.threshold)
+        if (case, threads) not in current:
+            if case in cur_cases:
+                print(f"note: case {case} present only at a different thread "
+                      f"count in {opts.current}; skipping (not like-for-like)")
+            else:
+                print(f"{annotate}bench case {case} (threads={threads}) "
+                      f"missing from {opts.current}")
             continue
-        base, cur = baseline[case], current[case]
+        cur = float(current[(case, threads)]["evals_per_sec"])
         delta = cur / base - 1.0
         flag = ""
-        if delta < -opts.threshold:
+        if delta < -band:
             regressions += 1
             flag = "  <-- regression"
-            print(f"{annotate}{case}: evals/sec fell {-delta:.0%} "
-                  f"({base:.3g} -> {cur:.3g}, threshold {opts.threshold:.0%})")
-        print(f"{case:<28} {base:>14.3g} {cur:>14.3g} {delta:>+7.1%}{flag}")
-    for case in sorted(set(current) - set(baseline)):
-        print(f"note: new case {case} not in baseline ({current[case]:.3g}/s)")
+            print(f"{annotate}{case} (threads={threads}): evals/sec fell "
+                  f"{-delta:.0%} ({base:.3g} -> {cur:.3g}, band {band:.0%})")
+        print(f"{case:<30} {threads:>3} {base:>13.3g} {cur:>13.3g} "
+              f"{delta:>+7.1%} {band:>6.0%}{flag}")
+    for case, threads in sorted(set(current) - set(baseline)):
+        print(f"note: new case {case} (threads={threads}) not in baseline "
+              f"({float(current[(case, threads)]['evals_per_sec']):.3g}/s)")
 
     if regressions:
-        kind = "notice(s)" if provisional else "warning(s)"
-        print(f"bench_compare: {regressions} case(s) past the "
-              f"{opts.threshold:.0%} threshold ({kind} emitted, exit 0)")
+        if provisional:
+            print(f"bench_compare: {regressions} case(s) past their band "
+                  f"(notices only: baseline is provisional, exit 0)")
+        else:
+            sys.exit(f"bench_compare: {regressions} case(s) past their band "
+                     f"against a non-provisional baseline")
     else:
-        print("bench_compare: no case past the threshold")
+        print("bench_compare: no case past its tolerance band")
 
 
 if __name__ == "__main__":
