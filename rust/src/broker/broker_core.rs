@@ -8,6 +8,32 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 
+/// What a publish-path [`Interceptor`] decides for one message. The
+/// default everywhere is [`Intercept::Deliver`]; everything else exists
+/// for the fault-injection plane (`fault::BrokerFaults`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Intercept {
+    /// Route normally.
+    Deliver,
+    /// Silently lose the message (QoS-0 loss).
+    Drop,
+    /// Deliver the message twice (duplicate delivery).
+    Duplicate,
+    /// Sleep `ms` wall milliseconds before routing (in-flight latency).
+    DelayMs(u64),
+    /// Hold the message back and deliver it *after* the next publish
+    /// (a one-slot reorder buffer). A held message is released by the
+    /// next publish regardless of that message's own verdict.
+    Reorder,
+}
+
+/// Publish-path hook: inspects `(topic, payload_len)` and rules on the
+/// message's fate. Interceptors must be cheap and lock-free towards the
+/// broker (they run inside `publish`, before the router lock).
+pub trait Interceptor: Send + Sync {
+    fn intercept(&self, topic: &str, payload_len: usize) -> Intercept;
+}
+
 /// Handle to a running broker. Cheap to clone.
 #[derive(Clone)]
 pub struct Broker {
@@ -17,6 +43,10 @@ pub struct Broker {
 pub(super) struct BrokerInner {
     pub(super) router: Mutex<Router>,
     next_client: AtomicU64,
+    /// Optional publish-path fault hook (`None` = zero-cost passthrough).
+    interceptor: Mutex<Option<Arc<dyn Interceptor>>>,
+    /// The [`Intercept::Reorder`] one-slot holdback buffer.
+    held: Mutex<Option<Message>>,
 }
 
 impl Default for Broker {
@@ -31,8 +61,32 @@ impl Broker {
             inner: Arc::new(BrokerInner {
                 router: Mutex::new(Router::new()),
                 next_client: AtomicU64::new(1),
+                interceptor: Mutex::new(None),
+                held: Mutex::new(None),
             }),
         }
+    }
+
+    /// Install (or clear) the publish-path interceptor. Clearing also
+    /// releases any reorder-held message so nothing is stranded.
+    pub fn set_interceptor(&self, hook: Option<Arc<dyn Interceptor>>) {
+        let clearing = hook.is_none();
+        *self.inner.interceptor.lock().unwrap() = hook;
+        if clearing {
+            if let Some(held) = self.inner.held.lock().unwrap().take() {
+                self.route(&held);
+            }
+        }
+    }
+
+    /// Route one message through the router and bump the obs counters.
+    fn route(&self, msg: &Message) -> usize {
+        let delivered = self.inner.router.lock().unwrap().publish(msg);
+        if delivered > 0 {
+            crate::obs::defs::BROKER_MSGS_OUT.add(delivered as u64);
+            crate::obs::defs::BROKER_BYTES_OUT.add((delivered * msg.payload.len()) as u64);
+        }
+        delivered
     }
 
     /// Connect a new in-process client.
@@ -48,17 +102,43 @@ impl Broker {
         self.inner.next_client.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Publish on behalf of a client (validates the topic).
+    /// Publish on behalf of a client (validates the topic). When an
+    /// [`Interceptor`] is installed, the message runs through it first —
+    /// the fault-injection seam for the live path. Without one, this is
+    /// the same single-lock route it always was.
     pub fn publish(&self, msg: Message) -> Result<usize, String> {
         validate_topic(&msg.topic)?;
         crate::obs::defs::BROKER_MSGS_IN.inc();
         crate::obs::defs::BROKER_BYTES_IN.add(msg.payload.len() as u64);
-        let delivered = self.inner.router.lock().unwrap().publish(&msg);
-        if delivered > 0 {
-            crate::obs::defs::BROKER_MSGS_OUT.add(delivered as u64);
-            crate::obs::defs::BROKER_BYTES_OUT.add((delivered * msg.payload.len()) as u64);
+        let hook = self.inner.interceptor.lock().unwrap().clone();
+        let verdict = match &hook {
+            Some(h) => h.intercept(&msg.topic, msg.payload.len()),
+            None => Intercept::Deliver,
+        };
+        // Any publish releases a reorder-held predecessor *after* the
+        // current message — that swap is the reorder.
+        let held = if hook.is_some() { self.inner.held.lock().unwrap().take() } else { None };
+        let delivered = match verdict {
+            Intercept::Drop => 0,
+            Intercept::Duplicate => {
+                let first = self.route(&msg);
+                first + self.route(&msg)
+            }
+            Intercept::DelayMs(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.route(&msg)
+            }
+            Intercept::Reorder if held.is_none() => {
+                *self.inner.held.lock().unwrap() = Some(msg);
+                return Ok(0);
+            }
+            Intercept::Deliver | Intercept::Reorder => self.route(&msg),
+        };
+        let mut total = delivered;
+        if let Some(h) = held {
+            total += self.route(&h);
         }
-        Ok(delivered)
+        Ok(total)
     }
 
     pub(super) fn subscribe(
@@ -124,6 +204,58 @@ mod tests {
             assert_eq!(broker.subscription_count(), 1);
         }
         assert_eq!(broker.subscription_count(), 0);
+    }
+
+    /// Scripted interceptor: pops one verdict per publish, then delivers.
+    struct Script(Mutex<Vec<Intercept>>);
+
+    impl Interceptor for Script {
+        fn intercept(&self, _topic: &str, _len: usize) -> Intercept {
+            self.0.lock().unwrap().pop().unwrap_or(Intercept::Deliver)
+        }
+    }
+
+    fn recv_text(sub: &mut BrokerClient) -> String {
+        let msg = sub.recv_timeout(Duration::from_secs(1)).unwrap();
+        String::from_utf8((*msg.payload).clone()).unwrap()
+    }
+
+    #[test]
+    fn interceptor_drops_duplicates_and_reorders() {
+        let broker = Broker::new();
+        let mut sub = broker.connect("sub");
+        let p = broker.connect("pub");
+        sub.subscribe("t").unwrap();
+        // Verdicts pop back-to-front: drop "a", duplicate "b",
+        // reorder "c" behind "d".
+        broker.set_interceptor(Some(Arc::new(Script(Mutex::new(vec![
+            Intercept::Deliver,  // d (releases held c after itself)
+            Intercept::Reorder,  // c
+            Intercept::Duplicate, // b
+            Intercept::Drop,     // a
+        ])))));
+        assert_eq!(p.publish("t", b"a".to_vec()).unwrap(), 0);
+        assert_eq!(p.publish("t", b"b".to_vec()).unwrap(), 2);
+        assert_eq!(p.publish("t", b"c".to_vec()).unwrap(), 0);
+        assert_eq!(p.publish("t", b"d".to_vec()).unwrap(), 2);
+        let got: Vec<String> = (0..4).map(|_| recv_text(&mut sub)).collect();
+        assert_eq!(got, ["b", "b", "d", "c"]);
+        // Clearing the hook restores plain delivery.
+        broker.set_interceptor(None);
+        assert_eq!(p.publish("t", b"e".to_vec()).unwrap(), 1);
+        assert_eq!(recv_text(&mut sub), "e");
+    }
+
+    #[test]
+    fn clearing_the_interceptor_releases_a_held_message() {
+        let broker = Broker::new();
+        let mut sub = broker.connect("sub");
+        let p = broker.connect("pub");
+        sub.subscribe("t").unwrap();
+        broker.set_interceptor(Some(Arc::new(Script(Mutex::new(vec![Intercept::Reorder])))));
+        assert_eq!(p.publish("t", b"held".to_vec()).unwrap(), 0);
+        broker.set_interceptor(None);
+        assert_eq!(recv_text(&mut sub), "held");
     }
 
     #[test]

@@ -22,7 +22,7 @@ mod router;
 mod tcp;
 mod topic;
 
-pub use broker_core::Broker;
+pub use broker_core::{Broker, Intercept, Interceptor};
 pub use client::BrokerClient;
 pub use message::Message;
 pub use pubsub::{PubSub, TcpPubSub};

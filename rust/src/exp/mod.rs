@@ -42,5 +42,5 @@ pub use report::{
     report_cells, significance_matrix, standings, ExperimentCell, SignificanceMatrix,
     StrategyStanding, VersusRow,
 };
-pub use scheduler::TrialScheduler;
+pub use scheduler::{TrialPanic, TrialScheduler};
 pub use trial::{run_cell_trial, TrialOutcome};

@@ -13,9 +13,41 @@
 
 use crate::obs::defs as obs;
 use crate::obs::WallSpan;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// One trial's panic, caught at the worker boundary instead of
+/// unwinding through `std::thread::scope` and killing every other
+/// in-flight trial with it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrialPanic {
+    /// Job index of the trial that panicked.
+    pub job: usize,
+    /// The panic payload, when it was a string (the common case).
+    pub message: String,
+}
+
+impl std::fmt::Display for TrialPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "trial {} panicked: {}", self.job, self.message)
+    }
+}
+
+impl std::error::Error for TrialPanic {}
+
+/// Stringify a caught panic payload (`&str` / `String` cover what
+/// `panic!` produces; anything else gets a placeholder).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Telemetry around one claimed job: queue-wait histogram at claim
 /// time, busy-time counter + done counter after the trial, and (when
@@ -144,6 +176,39 @@ impl TrialScheduler {
             .map(|s| s.expect("every consuming job ran"))
             .collect()
     }
+
+    /// Like [`TrialScheduler::run`], but a panicking trial becomes a
+    /// per-slot `Err(TrialPanic)` instead of unwinding through the
+    /// thread scope and aborting every other in-flight trial.
+    pub fn run_catching<T, F>(&self, jobs: usize, trial: F) -> Vec<Result<T, TrialPanic>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.run(jobs, |j| {
+            catch_unwind(AssertUnwindSafe(|| trial(j)))
+                .map_err(|payload| TrialPanic { job: j, message: panic_message(payload) })
+        })
+    }
+
+    /// Panic-isolating [`TrialScheduler::run_consuming`]: the service
+    /// tier routes each `Err(TrialPanic)` into session quarantine
+    /// instead of losing every concurrent session to one poisoned one.
+    pub fn run_consuming_catching<J, T, F>(
+        &self,
+        jobs: Vec<J>,
+        trial: F,
+    ) -> Vec<Result<T, TrialPanic>>
+    where
+        J: Send,
+        T: Send,
+        F: Fn(usize, J) -> T + Sync,
+    {
+        self.run_consuming(jobs, |i, job| {
+            catch_unwind(AssertUnwindSafe(|| trial(i, job)))
+                .map_err(|payload| TrialPanic { job: i, message: panic_message(payload) })
+        })
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +243,54 @@ mod tests {
         let empty: Vec<usize> =
             TrialScheduler::new(4).run_consuming(Vec::<Payload>::new(), |_, p| p.0);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn a_panicking_trial_is_isolated_and_the_rest_survive() {
+        // One poisoned trial out of 24; every other slot must come back
+        // intact and in job order, for any thread count — the regression
+        // that used to unwind through std::thread::scope and abort the
+        // whole run.
+        for threads in [1, 2, 8] {
+            let got = TrialScheduler::new(threads).run_catching(24, |j| {
+                if j == 7 {
+                    panic!("poisoned trial {j}");
+                }
+                j * 10
+            });
+            assert_eq!(got.len(), 24, "threads={threads}");
+            for (j, slot) in got.iter().enumerate() {
+                if j == 7 {
+                    let p = slot.as_ref().unwrap_err();
+                    assert_eq!(p.job, 7);
+                    assert_eq!(p.message, "poisoned trial 7");
+                } else {
+                    assert_eq!(*slot, Ok(j * 10), "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn consuming_panics_report_their_job_and_consume_their_payload() {
+        struct Payload(usize);
+        let jobs: Vec<Payload> = (0..10).map(Payload).collect();
+        let got = TrialScheduler::new(4).run_consuming_catching(jobs, |i, p: Payload| {
+            if p.0 == 3 {
+                panic!("bad payload");
+            }
+            i + p.0
+        });
+        for (i, slot) in got.iter().enumerate() {
+            match slot {
+                Ok(v) => assert_eq!(*v, i * 2),
+                Err(p) => {
+                    assert_eq!(i, 3);
+                    assert_eq!(p.job, 3);
+                    assert_eq!(p.message, "bad payload");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,553 @@
+//! Wrapper injectors: how a [`FaultPlan`] reaches the system's seams.
+//!
+//! Each injector decorates an existing abstraction — [`FaultyStore`]
+//! wraps any [`Store`], [`FaultyBackend`] wraps any
+//! [`RoundBackend`], [`BrokerFaults`] implements the broker's
+//! [`Interceptor`] hook — so the production types never know the fault
+//! plane exists. [`RetryStore`] is the matching *hardening* layer:
+//! capped exponential backoff with deterministic jitter around any
+//! store, which also defines the recovery behavior chaos mode checks.
+//!
+//! Keying discipline: store decisions are keyed by per-session call
+//! ordinals (one save per completed round, so the ordinal *is* the
+//! round position and survives kills/resumes); round decisions by
+//! `(round, attempt)`; broker decisions by a per-session publish
+//! ordinal (deterministic wherever publish order is — the single-seam
+//! in-process broker serializes it).
+
+use super::plan::{fnv64, BrokerFault, FaultPlan, RoundFault, SaveFault};
+use crate::broker::{Intercept, Interceptor};
+use crate::obs::defs as obs;
+use crate::placement::Placement;
+use crate::prng::SplitMix64;
+use crate::service::backend::{RoundBackend, RoundOutcome};
+use crate::service::storage::{SessionSnapshot, Store};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn bump(map: &Mutex<HashMap<String, u64>>, session: &str) -> u64 {
+    let mut map = map.lock().expect("fault counter lock");
+    let n = map.entry(session.to_string()).or_insert(0);
+    let now = *n;
+    *n += 1;
+    now
+}
+
+/// A [`Store`] decorator that realizes the plan's store faults:
+/// plain save/load IO errors and simulated torn writes in both
+/// directions. Torn saves persist a *hybrid* snapshot to the inner
+/// store (one half new, one half stale) and then return an error —
+/// exactly what a crash between `DirStore`'s two file writes leaves
+/// behind — so the resume path's optimizer cross-check and torn-save
+/// recovery get exercised against any backend.
+pub struct FaultyStore {
+    inner: Arc<dyn Store>,
+    plan: Arc<FaultPlan>,
+    saves: Mutex<HashMap<String, u64>>,
+    loads: Mutex<HashMap<String, u64>>,
+}
+
+impl FaultyStore {
+    pub fn new(inner: Arc<dyn Store>, plan: Arc<FaultPlan>) -> FaultyStore {
+        FaultyStore { inner, plan, saves: Mutex::new(HashMap::new()), loads: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl Store for FaultyStore {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()> {
+        let attempt = bump(&self.saves, session);
+        match self.plan.save_fault(session, attempt) {
+            None => self.inner.save(session, snap),
+            Some(SaveFault::Fail) => {
+                obs::FAULT_INJECTED.inc("store_save_fail");
+                Err(anyhow!("injected store save failure (session {session}, save #{attempt})"))
+            }
+            Some(SaveFault::TornCkpt) => {
+                obs::FAULT_INJECTED.inc("torn_ckpt");
+                // Ckpt written, crash before state.json: new ckpt half
+                // under the previous state half. With no prior snapshot
+                // the crash left nothing visible at all.
+                if let Some(old) = self.inner.load(session).unwrap_or(None) {
+                    let hybrid = SessionSnapshot {
+                        summary: snap.summary.clone(),
+                        next_round: old.next_round,
+                        phase: old.phase.clone(),
+                        trace: old.trace.clone(),
+                        optimizer: snap.optimizer.clone(),
+                        params: snap.params.clone(),
+                        loss: snap.loss,
+                    };
+                    self.inner.save(session, &hybrid)?;
+                }
+                Err(anyhow!("injected torn save (ckpt new, state stale) for session {session}"))
+            }
+            Some(SaveFault::TornState) => {
+                obs::FAULT_INJECTED.inc("torn_state");
+                // The reverse tear: state half new, ckpt half stale
+                // (or absent — optimizer None skips the cross-check,
+                // replay still rebuilds the optimizer exactly).
+                let hybrid = match self.inner.load(session).unwrap_or(None) {
+                    Some(old) => SessionSnapshot {
+                        summary: snap.summary.clone(),
+                        next_round: snap.next_round,
+                        phase: snap.phase.clone(),
+                        trace: snap.trace.clone(),
+                        optimizer: old.optimizer.clone(),
+                        params: old.params.clone(),
+                        loss: old.loss,
+                    },
+                    None => SessionSnapshot {
+                        optimizer: None,
+                        params: Vec::new(),
+                        loss: f64::NAN,
+                        ..snap.clone()
+                    },
+                };
+                self.inner.save(session, &hybrid)?;
+                Err(anyhow!("injected torn save (state new, ckpt stale) for session {session}"))
+            }
+        }
+    }
+
+    fn load(&self, session: &str) -> Result<Option<SessionSnapshot>> {
+        let attempt = bump(&self.loads, session);
+        if self.plan.load_fails(session, attempt) {
+            obs::FAULT_INJECTED.inc("store_load_fail");
+            return Err(anyhow!(
+                "injected store load failure (session {session}, load #{attempt})"
+            ));
+        }
+        self.inner.load(session)
+    }
+
+    fn sessions(&self) -> Result<Vec<String>> {
+        self.inner.sessions()
+    }
+
+    fn remove(&self, session: &str) -> Result<()> {
+        self.inner.remove(session)
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter. The jitter
+/// multiplier for retry `attempt` of `session` is a pure function of
+/// `(seed, session, attempt)` in `[0.5, 1.5)` — no wall-clock or
+/// thread-local entropy, so chaos runs stay reproducible. `sleep`
+/// selects whether delays are actually slept (live mode) or only
+/// accounted (sim mode, where time is virtual and a wall sleep would
+/// slow tests for nothing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackoffPolicy {
+    /// Total attempts per operation (1 = no retries).
+    pub attempts: usize,
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Upper bound on the un-jittered delay.
+    pub cap: Duration,
+    /// Sleep for real between attempts (live mode) or not (sim mode).
+    pub sleep: bool,
+    /// Jitter stream seed.
+    pub seed: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy {
+            attempts: 3,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            sleep: false,
+            seed: 0,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// Jittered delay before retry `attempt` (1-based).
+    pub fn delay(&self, session: &str, attempt: u32) -> Duration {
+        let exp = self.base.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1) as i32);
+        let capped = exp.min(self.cap.as_secs_f64());
+        let mut sm = SplitMix64::new(
+            self.seed ^ fnv64(session) ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let unit = (sm.next() >> 11) as f64 / (1u64 << 53) as f64;
+        Duration::from_secs_f64(capped * (0.5 + unit))
+    }
+}
+
+/// A [`Store`] decorator that retries failed saves/loads under a
+/// [`BackoffPolicy`]. Neutral when the inner store never errors; under
+/// a fault plan it is what turns transient injected IO errors into
+/// recovered operations instead of failed sessions. Each retry bumps
+/// `repro_service_store_retries_total`.
+pub struct RetryStore {
+    inner: Arc<dyn Store>,
+    policy: BackoffPolicy,
+}
+
+impl RetryStore {
+    pub fn new(inner: Arc<dyn Store>, policy: BackoffPolicy) -> RetryStore {
+        RetryStore { inner, policy: BackoffPolicy { attempts: policy.attempts.max(1), ..policy } }
+    }
+
+    fn with_retries<T>(
+        &self,
+        session: &str,
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let mut last = None;
+        for attempt in 0..self.policy.attempts {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 < self.policy.attempts {
+                obs::SERVICE_STORE_RETRIES.inc();
+                if self.policy.sleep {
+                    std::thread::sleep(self.policy.delay(session, attempt as u32 + 1));
+                }
+            }
+        }
+        Err(last.expect("attempts >= 1").context(format!(
+            "store operation failed after {} attempts (session {session})",
+            self.policy.attempts
+        )))
+    }
+}
+
+impl Store for RetryStore {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()> {
+        self.with_retries(session, || self.inner.save(session, snap))
+    }
+
+    fn load(&self, session: &str) -> Result<Option<SessionSnapshot>> {
+        self.with_retries(session, || self.inner.load(session))
+    }
+
+    fn sessions(&self) -> Result<Vec<String>> {
+        self.inner.sessions()
+    }
+
+    fn remove(&self, session: &str) -> Result<()> {
+        self.inner.remove(session)
+    }
+}
+
+/// A [`RoundBackend`] decorator that realizes the plan's round faults:
+/// injected round errors (spend the retry budget) and injected panics
+/// (quarantined at the service's worker boundary). Everything else
+/// forwards, including the label — so a session's storage fingerprint
+/// is identical with and without the fault plane, and a snapshot taken
+/// under faults resumes cleanly without them.
+pub struct FaultyBackend {
+    inner: Box<dyn RoundBackend>,
+    plan: Arc<FaultPlan>,
+    session: String,
+    /// Attempts so far per round (fault keying, mirrors the machine's
+    /// retry accounting).
+    attempts: HashMap<usize, usize>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn RoundBackend>, plan: Arc<FaultPlan>, session: &str) -> FaultyBackend {
+        FaultyBackend { inner, plan, session: session.to_string(), attempts: HashMap::new() }
+    }
+}
+
+impl RoundBackend for FaultyBackend {
+    fn label(&self) -> &str {
+        self.inner.label()
+    }
+
+    fn rendezvous(&mut self, clients: usize, timeout: Duration) -> Result<()> {
+        self.inner.rendezvous(clients, timeout)
+    }
+
+    fn run_round(
+        &mut self,
+        round: usize,
+        placement: &Placement,
+        active: &[bool],
+    ) -> Result<RoundOutcome> {
+        let attempt = *self
+            .attempts
+            .entry(round)
+            .and_modify(|a| *a += 1)
+            .or_insert(0);
+        match self.plan.round_fault(&self.session, round, attempt) {
+            Some(RoundFault::Panic) => {
+                obs::FAULT_INJECTED.inc("worker_panic");
+                panic!("injected worker panic (session {}, round {round})", self.session);
+            }
+            Some(RoundFault::Error) => {
+                obs::FAULT_INJECTED.inc("round_error");
+                Err(anyhow!(
+                    "injected round error (session {}, round {round}, attempt {attempt})",
+                    self.session
+                ))
+            }
+            None => self.inner.run_round(round, placement, active),
+        }
+    }
+
+    fn set_strategy_label(&mut self, label: &str) {
+        self.inner.set_strategy_label(label);
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.inner.params()
+    }
+
+    fn install_params(&mut self, params: Vec<f32>, round: usize, loss: f64) -> Result<()> {
+        self.inner.install_params(params, round, loss)
+    }
+
+    fn heartbeats(&mut self) -> Option<Vec<bool>> {
+        self.inner.heartbeats()
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+}
+
+/// The broker-level injector: an [`Interceptor`] that maps the plan's
+/// broker faults onto publish verdicts. Only `fl/{session}/...` topics
+/// are eligible (service topics stay reliable); each session's messages
+/// are keyed by a per-session publish ordinal.
+pub struct BrokerFaults {
+    plan: Arc<FaultPlan>,
+    seq: Mutex<HashMap<String, u64>>,
+}
+
+impl BrokerFaults {
+    pub fn new(plan: Arc<FaultPlan>) -> BrokerFaults {
+        BrokerFaults { plan, seq: Mutex::new(HashMap::new()) }
+    }
+}
+
+/// The session segment of an `fl/{session}/...` topic.
+fn session_of(topic: &str) -> Option<&str> {
+    let mut parts = topic.split('/');
+    if parts.next() != Some("fl") {
+        return None;
+    }
+    parts.next().filter(|s| !s.is_empty())
+}
+
+impl Interceptor for BrokerFaults {
+    fn intercept(&self, topic: &str, _payload_len: usize) -> Intercept {
+        let Some(session) = session_of(topic) else {
+            return Intercept::Deliver;
+        };
+        let key = bump(&self.seq, session);
+        match self.plan.broker_fault(session, key) {
+            None => Intercept::Deliver,
+            Some(BrokerFault::Drop) => {
+                obs::FAULT_INJECTED.inc("broker_drop");
+                Intercept::Drop
+            }
+            Some(BrokerFault::Duplicate) => {
+                obs::FAULT_INJECTED.inc("broker_duplicate");
+                Intercept::Duplicate
+            }
+            Some(BrokerFault::DelayMs(ms)) => {
+                obs::FAULT_INJECTED.inc("broker_delay");
+                Intercept::DelayMs(ms)
+            }
+            Some(BrokerFault::Reorder) => {
+                obs::FAULT_INJECTED.inc("broker_reorder");
+                Intercept::Reorder
+            }
+        }
+    }
+}
+
+/// Apply heartbeat loss to a liveness mask: clients whose beat the plan
+/// loses at this round read as silent even though they are alive. The
+/// round still executes with the true `active` set — loss is telemetry
+/// erasure, which is exactly what stresses the machine's grace-window
+/// logic.
+pub fn apply_heartbeat_loss(
+    plan: &FaultPlan,
+    session: &str,
+    round: usize,
+    mask: &[bool],
+) -> Vec<bool> {
+    mask.iter()
+        .enumerate()
+        .map(|(client, &alive)| {
+            if alive && plan.heartbeat_lost(session, round, client) {
+                obs::FAULT_INJECTED.inc("heartbeat_loss");
+                false
+            } else {
+                alive
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::storage::{NoopStore, SpecSummary, TraceRow};
+
+    fn snap(next_round: usize, delay: f64) -> SessionSnapshot {
+        SessionSnapshot {
+            summary: SpecSummary {
+                strategy: "pso".into(),
+                rounds: 8,
+                seed: 1,
+                client_count: 8,
+                dims: 2,
+                backend: "analytic".into(),
+            },
+            next_round,
+            phase: format!("round({next_round})"),
+            trace: (0..next_round)
+                .map(|r| TraceRow {
+                    round: r,
+                    placement: vec![r, r + 1],
+                    delay_s: delay,
+                    loss: f64::NAN,
+                    live: 8,
+                })
+                .collect(),
+            optimizer: None,
+            params: vec![next_round as f32],
+            loss: f64::NAN,
+        }
+    }
+
+    #[test]
+    fn torn_ckpt_saves_a_hybrid_and_errors() {
+        let plan = Arc::new(FaultPlan {
+            store: super::super::plan::StoreFaultCfg { torn_ckpt_prob: 1.0, ..Default::default() },
+            ..FaultPlan::empty()
+        });
+        let inner = Arc::new(NoopStore::new());
+        let store = FaultyStore::new(inner.clone(), plan);
+        // No prior snapshot: the tear leaves nothing visible.
+        assert!(store.save("s", &snap(1, 2.0)).is_err());
+        assert!(inner.load("s").unwrap().is_none());
+        // Seed a prior snapshot directly, then tear over it: the hybrid
+        // keeps the OLD trace under the NEW ckpt half.
+        inner.save("s", &snap(1, 2.0)).unwrap();
+        assert!(store.save("s", &snap(2, 3.0)).is_err());
+        let hybrid = inner.load("s").unwrap().unwrap();
+        assert_eq!(hybrid.next_round, 1, "state half must stay stale");
+        assert_eq!(hybrid.trace.len(), 1);
+        assert_eq!(hybrid.params, vec![2.0], "ckpt half must be new");
+    }
+
+    #[test]
+    fn torn_state_saves_the_reverse_hybrid() {
+        let plan = Arc::new(FaultPlan {
+            store: super::super::plan::StoreFaultCfg { torn_state_prob: 1.0, ..Default::default() },
+            ..FaultPlan::empty()
+        });
+        let inner = Arc::new(NoopStore::new());
+        let store = FaultyStore::new(inner.clone(), plan);
+        inner.save("s", &snap(1, 2.0)).unwrap();
+        assert!(store.save("s", &snap(2, 3.0)).is_err());
+        let hybrid = inner.load("s").unwrap().unwrap();
+        assert_eq!(hybrid.next_round, 2, "state half must be new");
+        assert_eq!(hybrid.params, vec![1.0], "ckpt half must stay stale");
+    }
+
+    #[test]
+    fn retry_store_retries_then_surfaces_the_last_error() {
+        // A store that fails the first `fails` calls, then succeeds.
+        struct Flaky {
+            inner: NoopStore,
+            fails: Mutex<usize>,
+        }
+        impl Store for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn save(&self, session: &str, snap: &SessionSnapshot) -> Result<()> {
+                let mut fails = self.fails.lock().unwrap();
+                if *fails > 0 {
+                    *fails -= 1;
+                    return Err(anyhow!("transient"));
+                }
+                self.inner.save(session, snap)
+            }
+            fn load(&self, session: &str) -> Result<Option<SessionSnapshot>> {
+                self.inner.load(session)
+            }
+            fn sessions(&self) -> Result<Vec<String>> {
+                self.inner.sessions()
+            }
+            fn remove(&self, session: &str) -> Result<()> {
+                self.inner.remove(session)
+            }
+        }
+        let policy = BackoffPolicy { attempts: 3, ..Default::default() };
+        // Two transient failures: recovered within the budget.
+        let flaky = Arc::new(Flaky { inner: NoopStore::new(), fails: Mutex::new(2) });
+        let store = RetryStore::new(flaky.clone(), policy);
+        store.save("s", &snap(1, 2.0)).unwrap();
+        assert!(flaky.load("s").unwrap().is_some());
+        // Three failures exceed the budget and surface with context.
+        let flaky = Arc::new(Flaky { inner: NoopStore::new(), fails: Mutex::new(3) });
+        let store = RetryStore::new(flaky, policy);
+        let err = format!("{:#}", store.save("s", &snap(1, 2.0)).unwrap_err());
+        assert!(err.contains("after 3 attempts"), "{err}");
+        assert!(err.contains("transient"), "{err}");
+    }
+
+    #[test]
+    fn backoff_delays_are_deterministic_capped_and_jittered() {
+        let policy = BackoffPolicy {
+            attempts: 5,
+            base: Duration::from_millis(100),
+            cap: Duration::from_millis(400),
+            sleep: false,
+            seed: 7,
+        };
+        for attempt in 1..=6u32 {
+            let d = policy.delay("sess", attempt);
+            assert_eq!(d, policy.delay("sess", attempt), "jitter must be deterministic");
+            let uncapped = 0.1 * 2f64.powi(attempt as i32 - 1);
+            let capped = uncapped.min(0.4);
+            let secs = d.as_secs_f64();
+            assert!(
+                (capped * 0.5..capped * 1.5).contains(&secs),
+                "attempt {attempt}: {secs}s outside jitter band around {capped}s"
+            );
+        }
+        // Different sessions jitter differently.
+        assert_ne!(policy.delay("a", 1), policy.delay("b", 1));
+    }
+
+    #[test]
+    fn broker_faults_skip_non_session_topics() {
+        let mut plan = FaultPlan::empty();
+        plan.broker.drop_prob = 1.0;
+        let hook = BrokerFaults::new(Arc::new(plan));
+        assert_eq!(hook.intercept("metrics/scrape", 8), Intercept::Deliver);
+        assert_eq!(hook.intercept("fl/s1/round", 8), Intercept::Drop);
+    }
+
+    #[test]
+    fn heartbeat_loss_only_erases_live_clients() {
+        let mut plan = FaultPlan::empty();
+        plan.heartbeats.loss_prob = 1.0;
+        let lossy = apply_heartbeat_loss(&plan, "s", 0, &[true, false, true]);
+        assert_eq!(lossy, vec![false, false, false]);
+        let neutral = apply_heartbeat_loss(&FaultPlan::empty(), "s", 0, &[true, false, true]);
+        assert_eq!(neutral, vec![true, false, true]);
+    }
+}

@@ -1,0 +1,35 @@
+//! The deterministic fault-injection plane (robustness tier).
+//!
+//! Reproduction claims are only trustworthy if the service tier's
+//! recovery machinery — resume-by-replay, retry budgets, heartbeat
+//! liveness, panic quarantine — actually holds up under faults. This
+//! module makes faults *first-class and reproducible*:
+//!
+//! * [`plan`] — [`FaultPlan`]: a TOML-loadable description of broker
+//!   message faults (drop / duplicate / delay / reorder), store IO
+//!   errors and torn writes (both directions), round errors / worker
+//!   panics, and heartbeat-loss bursts. Every realization is a pure
+//!   function of `(plan seed, injection point, session, key)` — same
+//!   plan, same sessions ⇒ same faults, byte-identical metrics CSVs.
+//!   The empty plan is provably neutral.
+//! * [`inject`] — decorators at the existing seams: [`FaultyStore`] /
+//!   [`RetryStore`] around any [`crate::service::Store`],
+//!   [`FaultyBackend`] around any round backend, [`BrokerFaults`] as
+//!   the broker's publish interceptor, and heartbeat-mask erasure.
+//!
+//! Wired up by `CoordinatorService::with_faults` (`repro serve
+//! --faults PLAN.toml`) and soak-tested by `repro chaos`, which runs a
+//! session fleet under a plan and checks the terminal-phase /
+//! reproducibility invariants. Realized faults are counted in
+//! `repro_fault_injected_total{kind}`.
+
+pub mod inject;
+pub mod plan;
+
+pub use inject::{
+    apply_heartbeat_loss, BackoffPolicy, BrokerFaults, FaultyBackend, FaultyStore, RetryStore,
+};
+pub use plan::{
+    BrokerFault, BrokerFaultCfg, FaultPlan, HeartbeatFaultCfg, RoundFault, RoundFaultCfg,
+    SaveFault, StoreFaultCfg,
+};

@@ -1,0 +1,531 @@
+//! The fault plan: a declarative, TOML-loadable description of which
+//! faults to inject where, realized through *pure* seeded streams.
+//!
+//! Every decision the plan makes is a pure function of
+//! `(plan seed, injection point, session name, key)` — never of call
+//! order, thread interleaving, or wall time. Two runs of the same
+//! sessions under the same plan therefore realize the *same* faults at
+//! the *same* places, which is what makes `repro chaos` reproducible
+//! and lets the resume tests stitch a killed session back together
+//! under the same plan. The stream derivation mirrors the
+//! [`crate::exp::replicate_seed`] idiom: chained [`SplitMix64`]
+//! expansions seeding one [`Pcg32`] per decision.
+//!
+//! An all-zero plan ([`FaultPlan::empty`], or a TOML file with every
+//! probability 0) is provably neutral: every decision method returns
+//! `None`/`false` before touching its stream.
+
+use crate::configio::TomlDoc;
+use crate::prng::{Pcg32, Rng, SplitMix64};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+// One salt per injection point so streams never alias across seams.
+const POINT_BROKER: u64 = 0x4252_4F4B; // "BROK"
+const POINT_STORE_SAVE: u64 = 0x5356_4553; // "SVES"
+const POINT_STORE_LOAD: u64 = 0x4C4F_4144; // "LOAD"
+const POINT_ROUND: u64 = 0x524E_4421; // "RND!"
+const POINT_HEARTBEAT: u64 = 0x4842_5431; // "HBT1"
+
+/// FNV-1a 64 over the session name — folds the (arbitrary-length)
+/// session identity into the stream seed.
+pub(crate) fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Broker-seam fault rates (`[broker]` in the plan TOML).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct BrokerFaultCfg {
+    /// Probability a published message is silently lost.
+    pub drop_prob: f64,
+    /// Probability a published message is delivered twice.
+    pub duplicate_prob: f64,
+    /// Probability a published message is delayed by `delay_ms`.
+    pub delay_prob: f64,
+    /// Wall milliseconds a delayed message sleeps before routing.
+    pub delay_ms: u64,
+    /// Probability a message is held back behind the next publish.
+    pub reorder_prob: f64,
+}
+
+/// Store-seam fault rates (`[store]`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StoreFaultCfg {
+    /// Probability a snapshot save returns an IO error (nothing written).
+    pub save_fail_prob: f64,
+    /// Probability a snapshot load returns an IO error.
+    pub load_fail_prob: f64,
+    /// Probability a save tears ckpt-first: the new checkpoint half
+    /// lands, the state half stays stale (crash between the two writes
+    /// of [`crate::service::DirStore`]).
+    pub torn_ckpt_prob: f64,
+    /// The reverse tear: state half new, checkpoint half stale.
+    pub torn_state_prob: f64,
+}
+
+/// Round-execution fault rates (`[rounds]`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RoundFaultCfg {
+    /// Probability a round execution returns an error (spends the
+    /// session's retry budget).
+    pub error_prob: f64,
+    /// Probability a round execution panics (quarantines the session).
+    pub panic_prob: f64,
+    /// Exact `(session, round)` pairs that always panic — the
+    /// deterministic hook the CI chaos smoke uses (`panic_at =
+    /// ["sess:round", ...]` in TOML).
+    pub panic_at: Vec<(String, usize)>,
+}
+
+/// Heartbeat-loss rates (`[heartbeats]`). Loss is telemetry-only: the
+/// client stays alive, but its beat never reaches the machine's
+/// liveness table for `burst_len` consecutive rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HeartbeatFaultCfg {
+    /// Probability a client's heartbeat starts being lost at a round.
+    pub loss_prob: f64,
+    /// Consecutive rounds a triggered loss persists.
+    pub burst_len: usize,
+}
+
+impl Default for HeartbeatFaultCfg {
+    fn default() -> Self {
+        HeartbeatFaultCfg { loss_prob: 0.0, burst_len: 1 }
+    }
+}
+
+/// What the store seam should do to one save call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaveFault {
+    /// Plain IO error, nothing written.
+    Fail,
+    /// Torn write: new ckpt half + stale state half persisted, then error.
+    TornCkpt,
+    /// Torn write: new state half + stale ckpt half persisted, then error.
+    TornState,
+}
+
+/// What the round seam should do to one round execution attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundFault {
+    /// Return an error (consumes one retry).
+    Error,
+    /// Panic (the worker-crash shape; quarantined by the service).
+    Panic,
+}
+
+/// What the broker seam should do to one published message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BrokerFault {
+    Drop,
+    Duplicate,
+    DelayMs(u64),
+    Reorder,
+}
+
+/// A complete fault plan. See the module docs for the purity contract.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Root seed every stream derives from.
+    pub seed: u64,
+    pub broker: BrokerFaultCfg,
+    pub store: StoreFaultCfg,
+    pub rounds: RoundFaultCfg,
+    pub heartbeats: HeartbeatFaultCfg,
+}
+
+fn prob(doc: &TomlDoc, table: &str, key: &str) -> Result<f64> {
+    match doc.get(table, key) {
+        None => Ok(0.0),
+        Some(v) => {
+            let p = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("fault plan: [{table}] {key} must be a number"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(anyhow!("fault plan: [{table}] {key} = {p} outside [0, 1]"));
+            }
+            Ok(p)
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The provably neutral plan: every decision returns no-fault.
+    pub fn empty() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// True when no decision method can ever realize a fault.
+    pub fn is_empty(&self) -> bool {
+        let b = &self.broker;
+        let s = &self.store;
+        let r = &self.rounds;
+        b.drop_prob == 0.0
+            && b.duplicate_prob == 0.0
+            && b.delay_prob == 0.0
+            && b.reorder_prob == 0.0
+            && s.save_fail_prob == 0.0
+            && s.load_fail_prob == 0.0
+            && s.torn_ckpt_prob == 0.0
+            && s.torn_state_prob == 0.0
+            && r.error_prob == 0.0
+            && r.panic_prob == 0.0
+            && r.panic_at.is_empty()
+            && self.heartbeats.loss_prob == 0.0
+    }
+
+    /// Parse a plan from TOML text (the `toml_lite` subset: a top-level
+    /// `seed` plus `[broker]` / `[store]` / `[rounds]` / `[heartbeats]`
+    /// tables; every key optional, probabilities validated to `[0, 1]`).
+    pub fn from_toml(text: &str) -> Result<FaultPlan> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("fault plan: {e}"))?;
+        let seed = match doc.get("", "seed") {
+            None => 0,
+            Some(v) => v
+                .as_i64()
+                .ok_or_else(|| anyhow!("fault plan: seed must be an integer"))?
+                as u64,
+        };
+        let mut panic_at = Vec::new();
+        if let Some(v) = doc.get("rounds", "panic_at") {
+            let items = v
+                .as_array()
+                .ok_or_else(|| anyhow!("fault plan: [rounds] panic_at must be an array"))?;
+            for item in items {
+                let s = item.as_str().ok_or_else(|| {
+                    anyhow!("fault plan: [rounds] panic_at entries must be \"session:round\"")
+                })?;
+                let (session, round) = s.rsplit_once(':').ok_or_else(|| {
+                    anyhow!("fault plan: panic_at entry {s:?} is not \"session:round\"")
+                })?;
+                let round: usize = round
+                    .parse()
+                    .map_err(|_| anyhow!("fault plan: panic_at round in {s:?} is not a number"))?;
+                panic_at.push((session.to_string(), round));
+            }
+        }
+        let plan = FaultPlan {
+            seed,
+            broker: BrokerFaultCfg {
+                drop_prob: prob(&doc, "broker", "drop_prob")?,
+                duplicate_prob: prob(&doc, "broker", "duplicate_prob")?,
+                delay_prob: prob(&doc, "broker", "delay_prob")?,
+                delay_ms: doc
+                    .get("broker", "delay_ms")
+                    .map(|v| {
+                        v.as_i64()
+                            .filter(|&ms| ms >= 0)
+                            .ok_or_else(|| anyhow!("fault plan: [broker] delay_ms must be >= 0"))
+                    })
+                    .transpose()?
+                    .unwrap_or(5) as u64,
+                reorder_prob: prob(&doc, "broker", "reorder_prob")?,
+            },
+            store: StoreFaultCfg {
+                save_fail_prob: prob(&doc, "store", "save_fail_prob")?,
+                load_fail_prob: prob(&doc, "store", "load_fail_prob")?,
+                torn_ckpt_prob: prob(&doc, "store", "torn_ckpt_prob")?,
+                torn_state_prob: prob(&doc, "store", "torn_state_prob")?,
+            },
+            rounds: RoundFaultCfg {
+                error_prob: prob(&doc, "rounds", "error_prob")?,
+                panic_prob: prob(&doc, "rounds", "panic_prob")?,
+                panic_at,
+            },
+            heartbeats: HeartbeatFaultCfg {
+                loss_prob: prob(&doc, "heartbeats", "loss_prob")?,
+                burst_len: doc
+                    .get("heartbeats", "burst_len")
+                    .map(|v| {
+                        v.as_usize().filter(|&n| n >= 1).ok_or_else(|| {
+                            anyhow!("fault plan: [heartbeats] burst_len must be >= 1")
+                        })
+                    })
+                    .transpose()?
+                    .unwrap_or(1),
+            },
+        };
+        let sums = [
+            ("store", plan.store.save_fail_prob
+                + plan.store.torn_ckpt_prob
+                + plan.store.torn_state_prob),
+            ("broker", plan.broker.drop_prob
+                + plan.broker.duplicate_prob
+                + plan.broker.delay_prob
+                + plan.broker.reorder_prob),
+            ("rounds", plan.rounds.error_prob + plan.rounds.panic_prob),
+        ];
+        for (table, sum) in sums {
+            if sum > 1.0 {
+                return Err(anyhow!(
+                    "fault plan: [{table}] probabilities sum to {sum} > 1"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Load a plan from a TOML file.
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path:?}"))?;
+        FaultPlan::from_toml(&text).with_context(|| format!("fault plan {path:?}"))
+    }
+
+    /// The one stream derivation everything uses: a [`Pcg32`] that is a
+    /// pure function of `(seed, point, session, key)`.
+    fn stream(&self, point: u64, session: &str, key: u64) -> Pcg32 {
+        let mut sm = SplitMix64::new(self.seed ^ point);
+        let a = sm.next() ^ fnv64(session);
+        let b = SplitMix64::new(a).next() ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg32::seed_from_u64(SplitMix64::new(b).next())
+    }
+
+    /// One `[0, 1)` draw from a decision stream.
+    fn draw(&self, point: u64, session: &str, key: u64) -> f64 {
+        self.stream(point, session, key).next_f64()
+    }
+
+    /// Fate of save call number `attempt` (0-based, per session).
+    pub fn save_fault(&self, session: &str, attempt: u64) -> Option<SaveFault> {
+        let s = &self.store;
+        if s.save_fail_prob == 0.0 && s.torn_ckpt_prob == 0.0 && s.torn_state_prob == 0.0 {
+            return None;
+        }
+        let r = self.draw(POINT_STORE_SAVE, session, attempt);
+        if r < s.save_fail_prob {
+            Some(SaveFault::Fail)
+        } else if r < s.save_fail_prob + s.torn_ckpt_prob {
+            Some(SaveFault::TornCkpt)
+        } else if r < s.save_fail_prob + s.torn_ckpt_prob + s.torn_state_prob {
+            Some(SaveFault::TornState)
+        } else {
+            None
+        }
+    }
+
+    /// Whether load call number `attempt` (0-based, per session) fails.
+    pub fn load_fails(&self, session: &str, attempt: u64) -> bool {
+        self.store.load_fail_prob > 0.0
+            && self.draw(POINT_STORE_LOAD, session, attempt) < self.store.load_fail_prob
+    }
+
+    /// Fate of executing `round` (attempt `attempt` within this round).
+    /// `panic_at` entries match regardless of attempt — an explicitly
+    /// scheduled panic always fires.
+    pub fn round_fault(&self, session: &str, round: usize, attempt: usize) -> Option<RoundFault> {
+        let r = &self.rounds;
+        if r.panic_at.iter().any(|(s, k)| s == session && *k == round) {
+            return Some(RoundFault::Panic);
+        }
+        if r.error_prob == 0.0 && r.panic_prob == 0.0 {
+            return None;
+        }
+        let key = (round as u64) << 8 | (attempt as u64 & 0xFF);
+        let x = self.draw(POINT_ROUND, session, key);
+        if x < r.error_prob {
+            Some(RoundFault::Error)
+        } else if x < r.error_prob + r.panic_prob {
+            Some(RoundFault::Panic)
+        } else {
+            None
+        }
+    }
+
+    /// Whether `client`'s heartbeat is lost at `round`. A loss triggered
+    /// at round `r0` persists through `r0 + burst_len - 1`; membership
+    /// is decided by re-deriving the trigger for the last `burst_len`
+    /// rounds, so the answer stays a pure function of
+    /// `(session, round, client)`.
+    pub fn heartbeat_lost(&self, session: &str, round: usize, client: usize) -> bool {
+        let h = &self.heartbeats;
+        if h.loss_prob == 0.0 {
+            return false;
+        }
+        let burst = h.burst_len.max(1);
+        (0..burst).any(|back| {
+            round.checked_sub(back).is_some_and(|r0| {
+                let key = ((r0 as u64) << 20) | (client as u64 & 0xF_FFFF);
+                self.draw(POINT_HEARTBEAT, session, key) < h.loss_prob
+            })
+        })
+    }
+
+    /// Fate of the `key`-th message published into `session`'s topics.
+    pub fn broker_fault(&self, session: &str, key: u64) -> Option<BrokerFault> {
+        let b = &self.broker;
+        if b.drop_prob == 0.0
+            && b.duplicate_prob == 0.0
+            && b.delay_prob == 0.0
+            && b.reorder_prob == 0.0
+        {
+            return None;
+        }
+        let r = self.draw(POINT_BROKER, session, key);
+        if r < b.drop_prob {
+            Some(BrokerFault::Drop)
+        } else if r < b.drop_prob + b.duplicate_prob {
+            Some(BrokerFault::Duplicate)
+        } else if r < b.drop_prob + b.duplicate_prob + b.delay_prob {
+            Some(BrokerFault::DelayMs(b.delay_ms))
+        } else if r < b.drop_prob + b.duplicate_prob + b.delay_prob + b.reorder_prob {
+            Some(BrokerFault::Reorder)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PLAN: &str = r#"
+seed = 99
+
+[broker]
+drop_prob = 0.2
+duplicate_prob = 0.1
+delay_prob = 0.05
+delay_ms = 3
+reorder_prob = 0.05
+
+[store]
+save_fail_prob = 0.1
+load_fail_prob = 0.05
+torn_ckpt_prob = 0.1
+torn_state_prob = 0.1
+
+[rounds]
+error_prob = 0.15
+panic_prob = 0.02
+panic_at = ["alpha-pso-r0:3"]
+
+[heartbeats]
+loss_prob = 0.2
+burst_len = 2
+"#;
+
+    #[test]
+    fn toml_roundtrip_and_validation() {
+        let plan = FaultPlan::from_toml(PLAN).unwrap();
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.broker.delay_ms, 3);
+        assert_eq!(plan.heartbeats.burst_len, 2);
+        assert_eq!(plan.rounds.panic_at, vec![("alpha-pso-r0".to_string(), 3)]);
+        assert!(!plan.is_empty());
+        // Out-of-range and malformed inputs are rejected.
+        assert!(FaultPlan::from_toml("[store]\nsave_fail_prob = 1.5\n").is_err());
+        assert!(FaultPlan::from_toml("[store]\nsave_fail_prob = 0.6\ntorn_ckpt_prob = 0.6\n")
+            .is_err());
+        assert!(FaultPlan::from_toml("[rounds]\npanic_at = [\"no-round\"]\n").is_err());
+        assert!(FaultPlan::from_toml("[heartbeats]\nburst_len = 0\n").is_err());
+        // An all-defaults document is the empty plan.
+        let empty = FaultPlan::from_toml("seed = 7\n").unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_their_coordinates() {
+        let plan = FaultPlan::from_toml(PLAN).unwrap();
+        // Query in two different orders; every answer must agree.
+        let forward: Vec<Option<SaveFault>> =
+            (0..200).map(|k| plan.save_fault("s0", k)).collect();
+        let backward: Vec<Option<SaveFault>> =
+            (0..200).rev().map(|k| plan.save_fault("s0", k)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+        // Interleaving other decision points changes nothing.
+        let _ = plan.round_fault("s0", 3, 0);
+        let _ = plan.broker_fault("s0", 17);
+        let again: Vec<Option<SaveFault>> =
+            (0..200).map(|k| plan.save_fault("s0", k)).collect();
+        assert_eq!(forward, again);
+        // And two identically-built plans realize identical sequences.
+        let twin = FaultPlan::from_toml(PLAN).unwrap();
+        for k in 0..200 {
+            assert_eq!(plan.round_fault("s1", k as usize, 1), twin.round_fault("s1", k as usize, 1));
+            assert_eq!(plan.broker_fault("s1", k), twin.broker_fault("s1", k));
+            assert_eq!(plan.load_fails("s1", k), twin.load_fails("s1", k));
+        }
+    }
+
+    #[test]
+    fn sessions_and_points_get_disjoint_streams() {
+        let plan = FaultPlan::from_toml(PLAN).unwrap();
+        // Same keys, different sessions → materially different sequences.
+        let a: Vec<bool> = (0..400).map(|k| plan.save_fault("alpha", k).is_some()).collect();
+        let b: Vec<bool> = (0..400).map(|k| plan.save_fault("beta", k).is_some()).collect();
+        assert_ne!(a, b, "per-session streams must be disjoint");
+        // Same session+keys, different points → also different.
+        let saves: Vec<bool> = (0..400).map(|k| plan.save_fault("alpha", k).is_some()).collect();
+        let loads: Vec<bool> = (0..400).map(|k| plan.load_fails("alpha", k)).collect();
+        assert_ne!(saves, loads, "per-point streams must be disjoint");
+        // Different seeds → different realizations.
+        let mut reseeded = plan.clone();
+        reseeded.seed ^= 1;
+        let c: Vec<bool> = (0..400).map(|k| reseeded.save_fault("alpha", k).is_some()).collect();
+        assert_ne!(a, c, "the seed must matter");
+    }
+
+    #[test]
+    fn rates_are_roughly_honored() {
+        let plan = FaultPlan::from_toml(PLAN).unwrap();
+        let n = 20_000;
+        let drops = (0..n)
+            .filter(|&k| plan.broker_fault("rate", k) == Some(BrokerFault::Drop))
+            .count();
+        let frac = drops as f64 / n as f64;
+        assert!((0.17..0.23).contains(&frac), "drop rate {frac} vs configured 0.2");
+    }
+
+    #[test]
+    fn empty_plan_is_provably_neutral() {
+        let plan = FaultPlan::empty();
+        assert!(plan.is_empty());
+        for k in 0..100u64 {
+            assert_eq!(plan.save_fault("s", k), None);
+            assert!(!plan.load_fails("s", k));
+            assert_eq!(plan.round_fault("s", k as usize, 0), None);
+            assert_eq!(plan.broker_fault("s", k), None);
+            assert!(!plan.heartbeat_lost("s", k as usize, 0));
+        }
+    }
+
+    #[test]
+    fn heartbeat_bursts_persist_for_burst_len_rounds() {
+        let mut plan = FaultPlan::empty();
+        plan.heartbeats = HeartbeatFaultCfg { loss_prob: 0.1, burst_len: 3 };
+        // Find a triggered (round, client) and check persistence.
+        let mut checked = 0;
+        for r in 0..200usize {
+            for c in 0..8usize {
+                let key = ((r as u64) << 20) | c as u64;
+                let triggered = plan.draw(super::POINT_HEARTBEAT, "s", key) < 0.1;
+                if triggered {
+                    assert!(plan.heartbeat_lost("s", r, c));
+                    assert!(plan.heartbeat_lost("s", r + 1, c));
+                    assert!(plan.heartbeat_lost("s", r + 2, c));
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked > 50, "only {checked} triggers in 1600 draws at p=0.1");
+    }
+
+    #[test]
+    fn explicit_panic_at_always_fires() {
+        let plan = FaultPlan::from_toml(PLAN).unwrap();
+        for attempt in 0..4 {
+            assert_eq!(
+                plan.round_fault("alpha-pso-r0", 3, attempt),
+                Some(RoundFault::Panic)
+            );
+        }
+        assert_ne!(plan.round_fault("alpha-pso-r0", 4, 0), Some(RoundFault::Panic));
+    }
+}

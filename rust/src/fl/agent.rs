@@ -106,6 +106,13 @@ impl<C: PubSub> ClientAgent<C> {
     }
 
     fn handle_round(&mut self, rs: &RoundStart) -> Result<(), String> {
+        // Liveness heartbeat: one beat per handled round, even for Idle
+        // roles — receiving the round announcement proves this client is
+        // alive, which is what the coordinator's liveness table tracks.
+        let _ = self.client.publish(
+            &roles::hb_topic(&self.session, self.id),
+            self.id.to_string().into_bytes(),
+        );
         let arr = rs.arrangement();
         let codec = ModelCodec::from_name(&rs.codec)?;
         match arr.role_of(self.id) {

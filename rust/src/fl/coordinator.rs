@@ -70,6 +70,12 @@ pub struct Coordinator {
     eval_y: Vec<i32>,
     /// Strategy label stamped on round records (set by `run_session`).
     strategy_label: String,
+    /// Clients whose heartbeat arrived since the last
+    /// [`Coordinator::take_heartbeats`] (the session-machine liveness
+    /// feed; topic `fl/{session}/hb/{client}`).
+    heartbeat_seen: Vec<bool>,
+    /// Cached `fl/{session}/hb/` prefix for heartbeat-topic parsing.
+    hb_prefix: String,
 }
 
 impl Coordinator {
@@ -88,6 +94,12 @@ impl Coordinator {
                 cfg.client_count
             ));
         }
+        let mut client = client;
+        // Heartbeats flow for the whole session lifetime — every recv
+        // site notes them, whatever it was actually waiting for.
+        client
+            .subscribe(&roles::hb_filter(&cfg.session))
+            .map_err(|e| anyhow!(e))?;
         let global = runtime.init_params(cfg.model_seed)?;
         // Held-out eval data: a reserved shard id far above any client.
         let (eval_x, eval_y) = {
@@ -104,6 +116,8 @@ impl Coordinator {
             );
             (data.x.clone(), data.y.clone())
         };
+        let heartbeat_seen = vec![false; cfg.client_count];
+        let hb_prefix = format!("fl/{}/hb/", cfg.session);
         Ok(Coordinator {
             cfg,
             spec,
@@ -114,7 +128,33 @@ impl Coordinator {
             eval_x,
             eval_y,
             strategy_label: "manual".to_string(),
+            heartbeat_seen,
+            hb_prefix,
         })
+    }
+
+    /// Record a heartbeat if `topic` is this session's hb topic for a
+    /// known client. Called from every recv site, so beats are noted no
+    /// matter which message the coordinator was actually waiting for.
+    fn note_heartbeat(&mut self, topic: &str) {
+        if let Some(id) =
+            topic.strip_prefix(&self.hb_prefix).and_then(|t| t.parse::<usize>().ok())
+        {
+            if let Some(flag) = self.heartbeat_seen.get_mut(id) {
+                *flag = true;
+            }
+        }
+    }
+
+    /// Drain any queued heartbeats and return (then reset) the
+    /// per-client seen-flags — the liveness mask the service tier feeds
+    /// into the session machine's heartbeat table after each round.
+    pub fn take_heartbeats(&mut self) -> Vec<bool> {
+        while let Some(msg) = self.client.try_recv() {
+            self.note_heartbeat(&msg.topic);
+        }
+        let fresh = vec![false; self.cfg.client_count];
+        std::mem::replace(&mut self.heartbeat_seen, fresh)
     }
 
     /// The recorded per-round measurements.
@@ -156,8 +196,11 @@ impl Coordinator {
                 .map_err(|_| ())
                 .ok();
             if let Some(msg) = msg {
-                if let Ok(id) = msg.text().unwrap_or("").parse::<usize>() {
-                    seen.insert(id);
+                self.note_heartbeat(&msg.topic);
+                if crate::broker::topic_matches(&filter, &msg.topic) {
+                    if let Ok(id) = msg.text().unwrap_or("").parse::<usize>() {
+                        seen.insert(id);
+                    }
                 }
             }
         }
@@ -223,6 +266,7 @@ impl Coordinator {
                 .client
                 .recv_timeout(self.cfg.round_timeout)
                 .map_err(|e| anyhow!("round {round}: ready barrier: {e}"))?;
+            self.note_heartbeat(&msg.topic);
             if msg.topic == ready_topic {
                 let r = ReadyMsg::from_json(msg.text().map_err(|e| anyhow!(e))?)
                     .map_err(|e| anyhow!(e))?;
@@ -252,6 +296,7 @@ impl Coordinator {
                 .client
                 .recv_timeout(self.cfg.round_timeout)
                 .map_err(|e| anyhow!("round {round}: waiting for result: {e}"))?;
+            self.note_heartbeat(&msg.topic);
             if msg.topic == result_topic {
                 break ModelCodec::decode(&msg.payload).map_err(|e| anyhow!(e))?;
             }

@@ -26,6 +26,16 @@ pub fn result_topic(session: &str, round: usize) -> String {
     format!("fl/{session}/r/{round}/result")
 }
 
+/// Per-client heartbeat (client → coordinator, once per handled round).
+pub fn hb_topic(session: &str, client: usize) -> String {
+    format!("fl/{session}/hb/{client}")
+}
+
+/// Subscription filter covering all heartbeats of a session.
+pub fn hb_filter(session: &str) -> String {
+    format!("fl/{session}/hb/+")
+}
+
 /// Session shutdown broadcast.
 pub fn shutdown_topic(session: &str) -> String {
     format!("fl/{session}/shutdown")
@@ -57,6 +67,8 @@ mod tests {
             ready_topic("s1", 3),
             result_topic("s1", 3),
             shutdown_topic("s1"),
+            hb_topic("s1", 0),
+            hb_topic("s1", 1),
         ];
         for t in &ts {
             validate_topic(t).unwrap();
@@ -79,5 +91,12 @@ mod tests {
     fn sessions_are_isolated() {
         assert_ne!(round_topic("a"), round_topic("b"));
         assert!(!topic_matches("fl/a/#", &round_topic("b")));
+    }
+
+    #[test]
+    fn hb_filter_matches_only_its_sessions_heartbeats() {
+        assert!(topic_matches(&hb_filter("s"), &hb_topic("s", 7)));
+        assert!(!topic_matches(&hb_filter("s"), &hb_topic("other", 7)));
+        assert!(!topic_matches(&hb_filter("s"), &join_topic("s", 7)));
     }
 }

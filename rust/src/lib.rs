@@ -35,6 +35,7 @@ pub mod configio;
 pub mod data;
 pub mod des;
 pub mod exp;
+pub mod fault;
 pub mod fitness;
 pub mod fl;
 pub mod hierarchy;

@@ -5,7 +5,8 @@
 //! repro fig3       [--out-dir results]           # all six Fig-3 panels
 //! repro fleet      [--scenarios builtin|DIR --filter SUBSTR --strategies a,b,c --threads N --evals N --replicates R|MIN..MAX --out csv]
 //! repro compare    [--rounds N --time-scale X --strategies a,b,c --env live|analytic|event-driven --replicates R|MIN..MAX]
-//! repro serve      [--scenarios builtin|DIR --strategies a,b,c --rounds N --replicates R --env E --store noop|dir --metrics csv --dynamics NAME]
+//! repro serve      [--scenarios builtin|DIR --strategies a,b,c --rounds N --replicates R --env E --store noop|dir --metrics csv --dynamics NAME --faults PLAN.toml]
+//! repro chaos      --faults PLAN.toml [--sessions N --rounds N --strategies a,b,c --store dir --metrics csv]
 //! repro ablate     --scenario NAME [--mechanisms k1,k2 --strategy pso --evals N --replicates R --threads N --out csv]
 //! repro bench      --suite eval [--samples N --warmup N --batch N --threads N --out BENCH_eval.json]
 //! repro e2e        [--rounds N]                  # end-to-end PSO training run
@@ -42,6 +43,7 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("bench") => cmd_bench(&args),
         Some("e2e") => cmd_e2e(&args),
@@ -53,7 +55,7 @@ fn main() -> Result<()> {
                 eprintln!("unknown subcommand {cmd:?}\n");
             }
             eprintln!(
-                "usage: repro <sim|fig3|fleet|compare|serve|ablate|bench|e2e|broker> [flags]\n\
+                "usage: repro <sim|fig3|fleet|compare|serve|chaos|ablate|bench|e2e|broker> [flags]\n\
                  \n\
                  sim      one placement simulation (Fig-3 style); --strategy NAME --env analytic|event-driven\n\
                  fig3     regenerate all six Fig-3 panels to CSV\n\
@@ -76,8 +78,17 @@ fn main() -> Result<()> {
                  \x20        --rounds N --replicates R --env analytic|event-driven|live\n\
                  \x20        --threads N --store noop|dir [--store-dir DIR] --metrics CSV\n\
                  \x20        --round-limit N --retries N --dynamics SCENARIO\n\
+                 \x20        --faults PLAN.toml (deterministic fault injection at the\n\
+                 \x20        broker/store/round/heartbeat seams; see `repro chaos`)\n\
                  \x20        (--store dir makes runs resumable: a killed serve continues\n\
                  \x20        each session from its last completed round)\n\
+                 chaos    deterministic chaos soak: tiny env sessions drained under a\n\
+                 \x20        --faults PLAN.toml; checks every session reaches a terminal\n\
+                 \x20        phase and prints the injected-fault counters. Same plan +\n\
+                 \x20        seed => byte-identical --metrics CSV, any --threads;\n\
+                 \x20        --sessions N --rounds N --seed S --strategies a,b,c\n\
+                 \x20        --threads N --store noop|dir [--store-dir DIR]\n\
+                 \x20        --round-limit N --retries N --metrics CSV\n\
                  ablate   per-mechanism ablation of a dynamic scenario (one-mechanism-off deltas);\n\
                  \x20        --scenario NAME [--scenarios builtin|DIR] --mechanisms k1,k2\n\
                  \x20        --strategy pso --evals N --replicates R --threads N --out csv\n\
@@ -465,9 +476,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => None,
     };
     let linger = args.f64_flag("linger", 0.0).map_err(|e| anyhow!(e))?;
+    let faults = faults_from_args(args)?;
 
-    let cfg = ServiceConfig { threads, round_limit };
+    let mut cfg = ServiceConfig { threads, round_limit, ..ServiceConfig::default() };
+    // Injected store retries back off on the wall clock only when real
+    // wall time is in play; env drains stay instant and deterministic.
+    cfg.backoff.sleep = env == "live";
     let mut svc = CoordinatorService::new(cfg, store.clone(), recorder);
+    if let Some(plan) = &faults {
+        svc = svc.with_faults(plan.clone());
+    }
 
     if env == "live" {
         let runtime = Arc::new(
@@ -558,6 +576,124 @@ fn cmd_serve(args: &Args) -> Result<()> {
     drop(metrics_server);
     if failed > 0 {
         return Err(anyhow!("{failed} of {} session(s) failed", outcomes.len()));
+    }
+    Ok(())
+}
+
+/// Parse `--faults PLAN.toml` into a shared fault plan (None when the
+/// flag is absent).
+fn faults_from_args(args: &Args) -> Result<Option<Arc<repro::fault::FaultPlan>>> {
+    match args.flag("faults") {
+        Some(path) => {
+            let plan = repro::fault::FaultPlan::load(std::path::Path::new(path))
+                .with_context(|| format!("--faults {path}"))?;
+            Ok(Some(Arc::new(plan)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// `repro chaos`: a deterministic chaos soak. Queue `--sessions` tiny
+/// env-backed sessions, drain them under the `--faults` plan, and check
+/// the recovery invariants: every session reaches a terminal phase
+/// (Finished, or Failed with its budget/quarantine paper trail), and —
+/// because every fault realization is a pure function of (plan seed,
+/// injection point, session, round/attempt) — two invocations with the
+/// same plan and seed produce byte-identical `--metrics` CSVs for any
+/// thread count. `--round-limit` + `--store dir` turns the soak into a
+/// kill/resume stitcher: rerun the same command and resumed sessions
+/// must extend their traces bit-identically.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let Some(plan) = faults_from_args(args)? else {
+        return Err(anyhow!("--faults PLAN.toml required (the plan drives the whole soak)"));
+    };
+    let sessions = args.usize_flag("sessions", 4).map_err(|e| anyhow!(e))?;
+    if sessions == 0 {
+        return Err(anyhow!("--sessions must be >= 1"));
+    }
+    let rounds = args.usize_flag("rounds", 6).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_flag("seed", 7).map_err(|e| anyhow!(e))?;
+    let threads = args.usize_flag("threads", 0).map_err(|e| anyhow!(e))?;
+    let round_limit = args.opt_usize_flag("round-limit").map_err(|e| anyhow!(e))?;
+    let retries = args.opt_usize_flag("retries").map_err(|e| anyhow!(e))?;
+    let strategies = args
+        .list_flag("strategies")
+        .unwrap_or_else(|| vec!["pso".to_string(), "round-robin".to_string()]);
+    for name in &strategies {
+        registry::canonical(name).map_err(|e| anyhow!(e))?;
+    }
+    let dynamics = dynamics_from_args(args)?;
+    let store = store_from_args(args)?;
+    let recorder: Box<dyn Recorder> = match args.flag("metrics") {
+        Some(path) => Box::new(CsvRecorder::create(std::path::Path::new(path))?),
+        None => Box::new(NoopRecorder::new()),
+    };
+
+    let cfg = ServiceConfig { threads, round_limit, ..ServiceConfig::default() };
+    let mut svc = CoordinatorService::new(cfg, store.clone(), recorder).with_faults(plan.clone());
+    for i in 0..sessions {
+        let strategy = &strategies[i % strategies.len()];
+        let name = format!("chaos-{strategy}-r{i}");
+        let mut sim = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+        sim.pso.particles = 4;
+        let mut spec = SessionSpec::env(&name, strategy, rounds, sim, "analytic");
+        spec.seed = Some(replicate_seed(seed, i));
+        spec.dynamics = dynamics.clone();
+        spec.retry_budget = retries;
+        svc.submit(spec)?;
+    }
+    println!(
+        "chaos: {sessions} sessions x {rounds} rounds under plan seed {} (store={})",
+        plan.seed,
+        store.name()
+    );
+
+    let outcomes = svc.drain()?;
+    println!("{:<30} {:>10} {:>7} {:>8}  {}", "session", "phase", "rounds", "resumed", "note");
+    let (mut finished, mut failed, mut quarantined, mut paused) = (0usize, 0usize, 0usize, 0usize);
+    for out in &outcomes {
+        let note = out
+            .rows
+            .iter()
+            .rev()
+            .find(|r| r.detail.starts_with("quarantined:"))
+            .map(|r| r.detail.clone())
+            .unwrap_or_default();
+        match out.phase {
+            Phase::Finished => finished += 1,
+            Phase::Failed => failed += 1,
+            _ => paused += 1,
+        }
+        if !note.is_empty() {
+            quarantined += 1;
+        }
+        let resumed = out.resumed_from.map(|k| format!("@{k}")).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<30} {:>10} {:>7} {:>8}  {note}",
+            out.name,
+            out.phase.to_string(),
+            out.trace.len(),
+            resumed
+        );
+    }
+    // The injected-fault paper trail (also on /metrics under serve).
+    repro::obs::register_builtin();
+    let dump = repro::obs::render_dump(&repro::obs::snapshot());
+    for line in dump.lines() {
+        if line.starts_with("repro_fault_injected_total")
+            || line.starts_with("repro_service_store_retries_total")
+            || line.starts_with("repro_service_sessions_quarantined_total")
+        {
+            println!("{line}");
+        }
+    }
+    println!(
+        "chaos: {finished} finished, {failed} failed ({quarantined} quarantined), {paused} paused"
+    );
+    // Invariant: without a --round-limit pause, every session must have
+    // reached a terminal phase — a stuck session is a recovery bug.
+    if paused > 0 && round_limit.is_none() {
+        return Err(anyhow!("{paused} session(s) stuck in a non-terminal phase"));
     }
     Ok(())
 }

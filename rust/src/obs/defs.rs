@@ -148,6 +148,16 @@ metric!(
     "strategy"
 );
 metric!(
+    counter pub SERVICE_STORE_RETRIES,
+    "repro_service_store_retries_total",
+    "Store save/load attempts retried under the backoff policy"
+);
+metric!(
+    counter pub SERVICE_SESSIONS_QUARANTINED,
+    "repro_service_sessions_quarantined_total",
+    "Sessions quarantined to Failed after a worker panic"
+);
+metric!(
     histogram pub STORE_SAVE,
     "repro_store_save_seconds",
     "Wall seconds per session snapshot save"
@@ -179,6 +189,15 @@ metric!(
     counter pub BROKER_BYTES_OUT,
     "repro_broker_bytes_out_total",
     "Payload bytes delivered to broker subscribers"
+);
+
+// --- fault: the deterministic fault-injection plane ------------------------
+
+metric!(
+    counter_vec pub FAULT_INJECTED,
+    "repro_fault_injected_total",
+    "Faults realized by the injection plane, by kind",
+    "kind"
 );
 
 // --- obs: the telemetry layer itself -------------------------------------
@@ -222,8 +241,11 @@ pub fn register_builtin() {
     SERVICE_SESSIONS_FINISHED.register();
     SERVICE_SESSIONS_FAILED.register();
     SERVICE_ROUND_DELAY.register();
+    SERVICE_STORE_RETRIES.register();
+    SERVICE_SESSIONS_QUARANTINED.register();
     STORE_SAVE.register();
     STORE_LOAD.register();
+    FAULT_INJECTED.register();
     BROKER_MSGS_IN.register();
     BROKER_BYTES_IN.register();
     BROKER_MSGS_OUT.register();

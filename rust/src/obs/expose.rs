@@ -60,7 +60,7 @@ pub fn render_prometheus(families: &[FamilySnapshot]) -> String {
     let mut out = String::with_capacity(families.len() * 160);
     for f in families {
         let kind = match &f.value {
-            FamilyValue::Counter(_) => "counter",
+            FamilyValue::Counter(_) | FamilyValue::CounterVec(..) => "counter",
             FamilyValue::Gauge(_) => "gauge",
             FamilyValue::Histogram(_) | FamilyValue::HistogramVec(..) => "histogram",
         };
@@ -69,6 +69,12 @@ pub fn render_prometheus(families: &[FamilySnapshot]) -> String {
         match &f.value {
             FamilyValue::Counter(v) => {
                 let _ = writeln!(out, "{} {}", f.name, v);
+            }
+            FamilyValue::CounterVec(label_key, children) => {
+                // Keep an untouched family visible (HELP/TYPE only).
+                for (label, v) in children {
+                    let _ = writeln!(out, "{}{{{label_key}=\"{label}\"}} {v}", f.name);
+                }
             }
             FamilyValue::Gauge(v) => {
                 let _ = writeln!(out, "{} {}", f.name, v);
@@ -109,6 +115,14 @@ pub fn render_dump(families: &[FamilySnapshot]) -> String {
         match &f.value {
             FamilyValue::Counter(v) => {
                 let _ = writeln!(out, "{} = {}", f.name, v);
+            }
+            FamilyValue::CounterVec(key, children) => {
+                if children.is_empty() {
+                    let _ = writeln!(out, "{}  (no series yet)", f.name);
+                }
+                for (label, v) in children {
+                    let _ = writeln!(out, "{}{{{key}=\"{label}\"}} = {v}", f.name);
+                }
             }
             FamilyValue::Gauge(v) => {
                 let _ = writeln!(out, "{} = {}", f.name, v);

@@ -34,8 +34,8 @@ pub mod spans;
 pub use defs::register_builtin;
 pub use expose::{render_dump, render_prometheus, scrape, MetricsServer};
 pub use registry::{
-    bucket_bound, bucket_of, snapshot, Counter, FamilySnapshot, FamilyValue, Gauge, Histogram,
-    HistogramSnapshot, HistogramVec, Metric, HIST_BUCKETS,
+    bucket_bound, bucket_of, snapshot, Counter, CounterVec, FamilySnapshot, FamilyValue, Gauge,
+    Histogram, HistogramSnapshot, HistogramVec, Metric, HIST_BUCKETS,
 };
 pub use spans::{
     collect_spans, dropped_spans, record_virtual, render_chrome_trace, reset_spans, set_tracing,

@@ -20,6 +20,7 @@ use std::sync::Mutex;
 #[derive(Clone, Copy)]
 pub enum Metric {
     Counter(&'static Counter),
+    CounterVec(&'static CounterVec),
     Gauge(&'static Gauge),
     Histogram(&'static Histogram),
     HistogramVec(&'static HistogramVec),
@@ -30,6 +31,7 @@ impl Metric {
     pub fn name(&self) -> &'static str {
         match self {
             Metric::Counter(c) => c.name,
+            Metric::CounterVec(v) => v.name,
             Metric::Gauge(g) => g.name,
             Metric::Histogram(h) => h.name,
             Metric::HistogramVec(v) => v.name,
@@ -102,6 +104,81 @@ impl Counter {
     /// Current value.
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// One-label counter family: children materialize per label value on
+/// first use (each one `Counter`; bounded by label cardinality — fault
+/// kinds, store kinds), then behave exactly like static counters.
+pub struct CounterVec {
+    name: &'static str,
+    help: &'static str,
+    label_key: &'static str,
+    children: Mutex<Vec<(String, &'static Counter)>>,
+    registered: AtomicBool,
+}
+
+impl CounterVec {
+    /// Const-construct (use via the [`crate::metric!`] macro).
+    pub const fn new(name: &'static str, help: &'static str, label_key: &'static str) -> CounterVec {
+        CounterVec {
+            name,
+            help,
+            label_key,
+            children: Mutex::new(Vec::new()),
+            registered: AtomicBool::new(false),
+        }
+    }
+
+    /// Force registration without mutating (exposition completeness).
+    pub fn register(&'static self) {
+        if !self.registered.load(Ordering::Relaxed)
+            && self
+                .registered
+                .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+        {
+            push_registry(Metric::CounterVec(self));
+        }
+    }
+
+    /// Child counter for `label` (created + leaked on first use).
+    pub fn with(&'static self, label: &str) -> &'static Counter {
+        self.register();
+        let mut children = self.children.lock().unwrap();
+        if let Some(&(_, c)) = children.iter().find(|(l, _)| l == label) {
+            return c;
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::new(self.name, self.help)));
+        // Children bypass self-registration — the parent renders them.
+        c.registered.store(true, Ordering::Relaxed);
+        children.push((label.to_string(), c));
+        c
+    }
+
+    /// Add 1 to the `label` child.
+    pub fn inc(&'static self, label: &str) {
+        self.with(label).inc();
+    }
+
+    /// Current value of the `label` child (0 when never touched).
+    pub fn get(&self, label: &str) -> u64 {
+        let children = self.children.lock().unwrap();
+        children.iter().find(|(l, _)| l == label).map_or(0, |(_, c)| c.get())
+    }
+
+    /// Sum over every child.
+    pub fn total(&self) -> u64 {
+        self.children.lock().unwrap().iter().map(|(_, c)| c.get()).sum()
+    }
+
+    /// `(label, value)` per child, sorted by label.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let children = self.children.lock().unwrap();
+        let mut out: Vec<(String, u64)> =
+            children.iter().map(|(l, c)| (l.clone(), c.get())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -461,6 +538,8 @@ pub struct FamilySnapshot {
 pub enum FamilyValue {
     /// Monotonic counter.
     Counter(u64),
+    /// Labeled counter family: `(label_key, [(label, value)])`.
+    CounterVec(&'static str, Vec<(String, u64)>),
     /// Point-in-time gauge.
     Gauge(i64),
     /// Unlabeled histogram.
@@ -480,6 +559,11 @@ pub fn snapshot() -> Vec<FamilySnapshot> {
                 name: c.name,
                 help: c.help,
                 value: FamilyValue::Counter(c.get()),
+            },
+            Metric::CounterVec(v) => FamilySnapshot {
+                name: v.name,
+                help: v.help,
+                value: FamilyValue::CounterVec(v.label_key, v.snapshot()),
             },
             Metric::Gauge(g) => FamilySnapshot {
                 name: g.name,
@@ -503,12 +587,17 @@ pub fn snapshot() -> Vec<FamilySnapshot> {
 }
 
 /// Declare a static metric: `metric!(counter EVALS, "repro_evals_total",
-/// "Total placement evaluations");` — also `gauge`, `histogram`, and
-/// `histogram_vec NAME, "name", "help", "label_key"`.
+/// "Total placement evaluations");` — also `gauge`, `histogram`, and the
+/// one-label `counter_vec` / `histogram_vec NAME, "name", "help",
+/// "label_key"` families.
 #[macro_export]
 macro_rules! metric {
     (counter $vis:vis $NAME:ident, $name:expr, $help:expr) => {
         $vis static $NAME: $crate::obs::Counter = $crate::obs::Counter::new($name, $help);
+    };
+    (counter_vec $vis:vis $NAME:ident, $name:expr, $help:expr, $label:expr) => {
+        $vis static $NAME: $crate::obs::CounterVec =
+            $crate::obs::CounterVec::new($name, $help, $label);
     };
     (gauge $vis:vis $NAME:ident, $name:expr, $help:expr) => {
         $vis static $NAME: $crate::obs::Gauge = $crate::obs::Gauge::new($name, $help);
@@ -656,6 +745,29 @@ mod tests {
         assert!(H.snapshot().quantile(0.5).is_none());
         H.register();
         assert_eq!(H.snapshot().count(), 0);
+    }
+
+    #[test]
+    fn counter_vec_labels() {
+        metric!(counter_vec V, "test_registry_cvec_total", "t", "kind");
+        assert_eq!(V.get("drop"), 0);
+        V.inc("drop");
+        V.inc("drop");
+        V.with("panic").add(3);
+        assert_eq!(V.get("drop"), 2);
+        assert_eq!(V.get("panic"), 3);
+        assert_eq!(V.total(), 5);
+        // Snapshot is label-sorted; the parent registers exactly once.
+        assert_eq!(
+            V.snapshot(),
+            vec![("drop".to_string(), 2), ("panic".to_string(), 3)]
+        );
+        let names: Vec<&str> = snapshot()
+            .iter()
+            .filter(|f| f.name == "test_registry_cvec_total")
+            .map(|f| f.name)
+            .collect();
+        assert_eq!(names.len(), 1);
     }
 
     #[test]

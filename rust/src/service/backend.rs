@@ -60,6 +60,14 @@ pub trait RoundBackend: Send {
         Ok(())
     }
 
+    /// Real per-client heartbeats observed since the last call (`None`
+    /// when the backend has no liveness signal of its own — sim
+    /// backends, where the dynamics realization already drives the
+    /// machine's heartbeat table).
+    fn heartbeats(&mut self) -> Option<Vec<bool>> {
+        None
+    }
+
     /// Release backend resources (join agent threads etc.).
     fn shutdown(&mut self) {}
 }
@@ -165,6 +173,10 @@ impl RoundBackend for LiveBackend {
         self.coordinator.global_model().to_vec()
     }
 
+    fn heartbeats(&mut self) -> Option<Vec<bool>> {
+        Some(self.coordinator.take_heartbeats())
+    }
+
     fn install_params(&mut self, params: Vec<f32>, round: usize, loss: f64) -> Result<()> {
         let meta = CheckpointMeta {
             param_count: params.len(),
@@ -208,6 +220,7 @@ mod tests {
         assert!(oa.loss.is_nan(), "oracles have no model");
         // The default trait plumbing is inert for model-free backends.
         assert!(a.params().is_empty());
+        assert!(a.heartbeats().is_none(), "oracles have no liveness feed");
         a.install_params(Vec::new(), 0, f64::NAN).unwrap();
         a.rendezvous(10, Duration::from_secs(1)).unwrap();
         a.shutdown();

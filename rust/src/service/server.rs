@@ -11,12 +11,16 @@
 //! sink is byte-deterministic for any thread count.
 
 use super::backend::LiveBackend;
+use super::machine::Phase;
 use super::metrics::Recorder;
 use super::session::{SessionKind, SessionOutcome, SessionRunner, SessionSpec};
 use super::storage::Store;
 use super::metrics::MetricRow;
 use crate::broker::Broker;
 use crate::exp::TrialScheduler;
+use crate::fault::{BackoffPolicy, BrokerFaults, FaultPlan, FaultyStore, RetryStore};
+use crate::log_warn;
+use crate::obs::defs as obs;
 use crate::runtime::ModelRuntime;
 use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
@@ -46,6 +50,9 @@ pub struct ServiceConfig {
     /// resumable mid-flight state — the test hook for killing a
     /// coordinator between rounds.
     pub round_limit: Option<usize>,
+    /// Retry policy for store saves/loads (the [`RetryStore`] layer the
+    /// service wraps around whatever store it was given).
+    pub backoff: BackoffPolicy,
 }
 
 /// A long-running multi-session coordinator.
@@ -56,6 +63,7 @@ pub struct CoordinatorService {
     broker: Broker,
     runtime: Option<Arc<ModelRuntime>>,
     pending: Vec<SessionSpec>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl CoordinatorService {
@@ -71,12 +79,24 @@ impl CoordinatorService {
             broker: Broker::new(),
             runtime: None,
             pending: Vec::new(),
+            faults: None,
         }
     }
 
     /// Attach the PJRT model runtime live sessions train against.
     pub fn with_runtime(mut self, runtime: Arc<ModelRuntime>) -> CoordinatorService {
         self.runtime = Some(runtime);
+        self
+    }
+
+    /// Attach a deterministic fault plan: the shared broker gets a
+    /// [`BrokerFaults`] interceptor, the store gets a [`FaultyStore`]
+    /// layer under the retry layer, and every drained runner executes
+    /// its rounds through a `FaultyBackend` wrapper. An empty plan is
+    /// provably neutral (see `tests/fault_injection.rs`).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> CoordinatorService {
+        self.broker.set_interceptor(Some(Arc::new(BrokerFaults::new(plan.clone()))));
+        self.faults = Some(plan);
         self
     }
 
@@ -109,10 +129,35 @@ impl CoordinatorService {
     /// of re-running completed rounds.
     pub fn drain(&mut self) -> Result<Vec<SessionOutcome>> {
         let specs: Vec<SessionSpec> = self.pending.drain(..).collect();
+        // Layer the store: capped-backoff retries outermost, injected
+        // faults (when a plan is attached) between the retries and the
+        // real store — so injected IO errors exercise the same retry
+        // path real flakiness would.
+        let store: Arc<dyn Store> = match &self.faults {
+            Some(plan) => Arc::new(RetryStore::new(
+                Arc::new(FaultyStore::new(self.store.clone(), plan.clone())),
+                self.cfg.backoff,
+            )),
+            None => Arc::new(RetryStore::new(self.store.clone(), self.cfg.backoff)),
+        };
         let mut runners = Vec::with_capacity(specs.len());
         for spec in specs {
             let started = std::time::Instant::now();
-            let snapshot = self.store.load(&spec.name)?;
+            // Hardened: a snapshot load that still fails after retries
+            // degrades this session to a fresh run (deterministic specs
+            // reproduce the same rounds) instead of aborting the whole
+            // drain.
+            let snapshot = match store.load(&spec.name) {
+                Ok(snap) => snap,
+                Err(e) => {
+                    log_warn!(
+                        "service",
+                        "session {}: snapshot load failed ({e:#}) — starting fresh",
+                        spec.name
+                    );
+                    None
+                }
+            };
             crate::obs::defs::STORE_LOAD.observe(started.elapsed().as_secs_f64());
             let runner = match &spec.kind {
                 SessionKind::Env { .. } => SessionRunner::new_env(spec, snapshot)?,
@@ -131,23 +176,58 @@ impl CoordinatorService {
                     SessionRunner::new_live(spec, backend, snapshot)?
                 }
             };
+            let runner = match &self.faults {
+                Some(plan) => runner.with_faults(plan.clone()),
+                None => runner,
+            };
             runners.push(runner);
         }
-        let store = self.store.clone();
         let limit = self.cfg.round_limit;
         let n = runners.len();
+        // (name, strategy) per slot — needed to synthesize outcomes for
+        // quarantined sessions after their runners were consumed.
+        let labels: Vec<(String, String)> = runners
+            .iter()
+            .map(|r| (r.name().to_string(), r.strategy().to_string()))
+            .collect();
         let flush = Mutex::new(FlushState {
             slots: (0..n).map(|_| None).collect(),
             next: 0,
             error: None,
         });
         let recorder = Mutex::new(&mut self.recorder);
-        let results = TrialScheduler::new(self.cfg.threads).run_consuming(runners, |i, runner| {
-            let result = runner.run(store.as_ref(), limit);
-            let rows = match &result {
-                Ok(outcome) => outcome.rows.clone(),
-                Err(_) => Vec::new(),
+        let scheduler = TrialScheduler::new(self.cfg.threads);
+        let results = scheduler.run_consuming_catching(runners, |i, runner: SessionRunner| {
+            let outcome = match runner.run(store.as_ref(), limit) {
+                Ok(outcome) => outcome,
+                Err(e) => {
+                    // Hardened: one session's hard error (e.g. a persist
+                    // that failed every retry) becomes a Failed outcome
+                    // with its reason on the paper trail — not a
+                    // drain-wide abort that loses every other session.
+                    let (name, strategy) = labels[i].clone();
+                    log_warn!("service", "session {name}: aborted ({e:#})");
+                    SessionOutcome {
+                        name: name.clone(),
+                        strategy: strategy.clone(),
+                        phase: Phase::Failed,
+                        trace: Vec::new(),
+                        rows: vec![MetricRow {
+                            session: name,
+                            seq: 0,
+                            kind: "phase",
+                            round: None,
+                            strategy,
+                            placement: Vec::new(),
+                            delay_s: None,
+                            detail: format!("aborted: {e:#}"),
+                        }],
+                        best: None,
+                        resumed_from: None,
+                    }
+                }
             };
+            let rows = outcome.rows.clone();
             // Deposit this session's rows, then flush the contiguous
             // completed prefix at each session-completion boundary
             // (lock order: flush state, then recorder — everywhere).
@@ -168,12 +248,70 @@ impl CoordinatorService {
                     state.error = Some(e);
                 }
             }
-            result
+            outcome
         });
-        let sink_error = flush.into_inner().expect("flush state lock").error;
+        drop(recorder);
+        let mut state = flush.into_inner().expect("flush state lock");
+        // Quarantine: a panicked worker never deposited its rows, so the
+        // flush frontier stalled at its slot. Synthesize the quarantine
+        // row into that slot, then drain everything the stall parked.
+        let mut quarantine_rows: Vec<Option<MetricRow>> = (0..n).map(|_| None).collect();
+        for (i, result) in results.iter().enumerate() {
+            if let Err(panic) = result {
+                obs::SERVICE_SESSIONS_QUARANTINED.inc();
+                let (name, strategy) = &labels[i];
+                log_warn!(
+                    "service",
+                    "session {name}: worker panicked — quarantined ({})",
+                    panic.message
+                );
+                let row = MetricRow {
+                    session: name.clone(),
+                    seq: 0,
+                    kind: "phase",
+                    round: None,
+                    strategy: strategy.clone(),
+                    placement: Vec::new(),
+                    delay_s: None,
+                    detail: format!("quarantined: {}", panic.message),
+                };
+                state.slots[i] = Some(vec![row.clone()]);
+                quarantine_rows[i] = Some(row);
+            }
+        }
+        while state.next < n {
+            let Some(rows) = state.slots[state.next].take() else { break };
+            state.next += 1;
+            if state.error.is_some() {
+                continue;
+            }
+            let io = rows
+                .iter()
+                .try_for_each(|row| self.recorder.record(row))
+                .and_then(|()| self.recorder.flush());
+            if let Err(e) = io {
+                state.error = Some(e);
+            }
+        }
+        let sink_error = state.error;
         let mut outcomes = Vec::with_capacity(results.len());
-        for result in results {
-            outcomes.push(result?);
+        for (i, result) in results.into_iter().enumerate() {
+            match result {
+                Ok(outcome) => outcomes.push(outcome),
+                Err(_) => {
+                    let (name, strategy) = labels[i].clone();
+                    let row = quarantine_rows[i].take().expect("quarantine row just built");
+                    outcomes.push(SessionOutcome {
+                        name,
+                        strategy,
+                        phase: Phase::Failed,
+                        trace: Vec::new(),
+                        rows: vec![row],
+                        best: None,
+                        resumed_from: None,
+                    });
+                }
+            }
         }
         if let Some(e) = sink_error {
             return Err(e.into());
@@ -359,6 +497,45 @@ mod tests {
         let want = reference.0.lock().unwrap().clone();
         assert!(!got.is_empty());
         assert_eq!(got, want, "incremental flush must not change the bytes");
+    }
+
+    #[test]
+    fn a_panicking_session_is_quarantined_and_the_rest_complete() {
+        use crate::fault::{FaultPlan, RoundFaultCfg};
+        let plan = FaultPlan {
+            rounds: RoundFaultCfg {
+                panic_at: vec![("alpha".to_string(), 1)],
+                ..RoundFaultCfg::default()
+            },
+            ..FaultPlan::empty()
+        };
+        for threads in [1, 2] {
+            let (svc, rows) = service(threads);
+            let mut svc = svc.with_faults(Arc::new(plan.clone()));
+            svc.submit(tiny_spec("alpha", "pso")).unwrap();
+            svc.submit(tiny_spec("beta", "round-robin")).unwrap();
+            let outcomes = svc.drain().unwrap();
+            assert_eq!(outcomes.len(), 2);
+            assert_eq!(outcomes[0].name, "alpha");
+            assert_eq!(outcomes[0].phase, Phase::Failed, "threads={threads}");
+            assert!(outcomes[0].trace.is_empty());
+            assert_eq!(outcomes[0].rows.len(), 1);
+            assert!(
+                outcomes[0].rows[0].detail.starts_with("quarantined: injected worker panic"),
+                "{}",
+                outcomes[0].rows[0].detail
+            );
+            // The other session is untouched by the poisoned one.
+            assert_eq!(outcomes[1].phase, Phase::Finished, "threads={threads}");
+            assert_eq!(outcomes[1].trace.len(), 4);
+            // The recorder still got every row, in submission order —
+            // the quarantine row un-stalls the flush frontier.
+            let rows = rows.lock().unwrap();
+            let sessions: Vec<&str> = rows.iter().map(|r| r.session.as_str()).collect();
+            let split = sessions.iter().position(|&s| s == "beta").unwrap();
+            assert_eq!(split, 1, "alpha contributes exactly its quarantine row");
+            assert!(sessions[split..].iter().all(|&s| s == "beta"));
+        }
     }
 
     #[test]

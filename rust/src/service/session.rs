@@ -18,17 +18,19 @@
 //! taken. A torn save or an edited spec shows up as a replay divergence
 //! error instead of silently mixing rounds.
 
-use super::backend::{EnvBackend, LiveBackend, RoundBackend};
+use super::backend::{EnvBackend, LiveBackend, RoundBackend, RoundOutcome};
 use super::machine::{MachineConfig, Phase, SessionMachine};
 use super::metrics::MetricRow;
 use super::storage::{SessionSnapshot, SpecSummary, Store, TraceRow};
 use crate::configio::{DeployScenario, DynamicsSpec, SimScenario};
 use crate::des::Dynamics;
+use crate::fault::{apply_heartbeat_loss, FaultPlan, FaultyBackend};
 use crate::fitness::ClientAttrs;
 use crate::obs::defs as obs;
 use crate::placement::{registry, Optimizer, Placement, Stepwise};
 use crate::prng::Pcg32;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Stable per-session trace lane (Chrome `tid`) from the session name —
@@ -227,6 +229,10 @@ pub struct SessionRunner {
     pending: Option<PendingRound>,
     /// Machine transitions already turned into metric rows.
     transitions_emitted: usize,
+    /// Deterministic fault plan (heartbeat loss lives here; round faults
+    /// are injected by the [`FaultyBackend`] wrapper installed by
+    /// [`SessionRunner::with_faults`]).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl SessionRunner {
@@ -320,11 +326,49 @@ impl SessionRunner {
             resumed_from: None,
             pending: None,
             transitions_emitted: 0,
+            faults: None,
         };
         if let Some(snap) = snapshot {
             runner.restore(snap)?;
         }
         Ok(runner)
+    }
+
+    /// Attach a deterministic fault plan: round execution goes through a
+    /// [`FaultyBackend`] wrapper and the per-round heartbeat masks get
+    /// plan-driven loss applied. Called *after* build/restore — replay
+    /// never runs rounds, so restored sessions replay clean and only
+    /// fresh rounds see injected faults.
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> SessionRunner {
+        struct Swapping;
+        impl RoundBackend for Swapping {
+            fn label(&self) -> &str {
+                "swapping"
+            }
+            fn run_round(
+                &mut self,
+                _round: usize,
+                _p: &Placement,
+                _a: &[bool],
+            ) -> Result<RoundOutcome> {
+                Err(anyhow!("placeholder backend"))
+            }
+        }
+        let inner = std::mem::replace(&mut self.backend, Box::new(Swapping));
+        self.backend = Box::new(FaultyBackend::new(inner, plan.clone(), &self.spec.name));
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The realization's liveness mask with plan-driven heartbeat loss
+    /// applied. Loss is telemetry erasure only: the round still executes
+    /// under the true membership — only the machine's liveness table
+    /// (and therefore quorum) sees the erasures.
+    fn lossy_mask(&self, round: usize, mask: &[bool]) -> Vec<bool> {
+        match &self.faults {
+            Some(plan) => apply_heartbeat_loss(plan, &self.spec.name, round, mask),
+            None => mask.to_vec(),
+        }
     }
 
     /// Rebuild this runner's state from a snapshot by replaying its
@@ -369,10 +413,21 @@ impl SessionRunner {
         if let Some(stored) = &snap.optimizer {
             let replayed = self.stepwise.optimizer().state();
             if replayed != *stored {
-                return Err(anyhow!(
-                    "session {name}: replayed optimizer state {replayed:?} does not match \
-                     stored {stored:?} (torn save?)"
-                ));
+                // A torn save (newer checkpoint under an older
+                // state.json or vice versa) lands here. state.json is
+                // the commit point and the trace replayed cleanly above,
+                // so the replayed optimizer is authoritative — recover
+                // instead of refusing to resume.
+                crate::log_warn!(
+                    "service",
+                    "session {}: stored optimizer state disagrees with trace replay \
+                     (torn save) — recovering from the replayed trace at round {}",
+                    name,
+                    snap.next_round
+                );
+                let detail =
+                    format!("torn save recovered by replay at round {}", snap.next_round);
+                self.push_row("phase", None, Vec::new(), None, detail);
             }
         }
         if !snap.params.is_empty() {
@@ -385,6 +440,11 @@ impl SessionRunner {
 
     pub fn name(&self) -> &str {
         &self.spec.name
+    }
+
+    /// Canonical strategy name (what the outcome will carry).
+    pub fn strategy(&self) -> &str {
+        &self.summary.strategy
     }
 
     /// Drive the session until it finishes, fails, or `round_limit`
@@ -423,7 +483,8 @@ impl SessionRunner {
             if self.pending.as_ref().map(|p| p.round) != Some(k) {
                 let realization = self.dynamics.next_round(cc);
                 let placement = self.stepwise.propose(k);
-                self.machine.beat_active(&realization.active);
+                let beats = self.lossy_mask(k, &realization.active);
+                self.machine.beat_active(&beats);
                 let live = self.machine.live_clients();
                 obs::SERVICE_HEARTBEAT_MISSES.add(self.machine.stale_clients() as u64);
                 self.pending =
@@ -441,6 +502,15 @@ impl SessionRunner {
             }
             match self.backend.run_round(k, &pending.placement, &pending.active) {
                 Ok(out) => {
+                    // Live backends observed real per-client heartbeats
+                    // during the round; fold them (loss-filtered) into
+                    // the machine's liveness table so the next quorum
+                    // check runs on observed liveness, not just the
+                    // dynamics realization.
+                    if let Some(beats) = self.backend.heartbeats() {
+                        let beats = self.lossy_mask(k, &beats);
+                        self.machine.beat_active(&beats);
+                    }
                     let row = TraceRow {
                         round: k,
                         placement: pending.placement.as_slice().to_vec(),
@@ -694,6 +764,56 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("torn snapshot"), "{err}");
+    }
+
+    #[test]
+    fn torn_optimizer_snapshot_recovers_by_replay() {
+        let store = NoopStore::new();
+        SessionRunner::new_env(env_spec("torn", "pso", 6), None)
+            .unwrap()
+            .run(&store, Some(3))
+            .unwrap();
+        let mut snap = store.load("torn").unwrap().unwrap();
+        // Simulate a torn save: a round-3 state.json half paired with a
+        // stale round-2 optimizer checkpoint half.
+        let stale_store = NoopStore::new();
+        SessionRunner::new_env(env_spec("torn", "pso", 6), None)
+            .unwrap()
+            .run(&stale_store, Some(2))
+            .unwrap();
+        let stale = stale_store.load("torn").unwrap().unwrap().optimizer;
+        assert_ne!(stale, snap.optimizer, "round-2 vs round-3 optimizer states must differ");
+        snap.optimizer = stale;
+        // The trace replays cleanly, so the mismatch is recovered (the
+        // replayed optimizer is authoritative), not a hard error.
+        let resumed = SessionRunner::new_env(env_spec("torn", "pso", 6), Some(snap))
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        assert_eq!(resumed.phase, Phase::Finished);
+        assert!(resumed.rows.iter().any(|r| r.detail.contains("torn save recovered")));
+        let full = SessionRunner::new_env(env_spec("full", "pso", 6), None)
+            .unwrap()
+            .run(&NoopStore::new(), None)
+            .unwrap();
+        assert_eq!(delays(&resumed.trace), delays(&full.trace), "recovery must be exact");
+    }
+
+    #[test]
+    fn empty_fault_plan_leaves_a_session_bit_identical() {
+        let store = NoopStore::new();
+        let plain = SessionRunner::new_env(env_spec("p", "pso", 5), None)
+            .unwrap()
+            .run(&store, None)
+            .unwrap();
+        let faulted = SessionRunner::new_env(env_spec("f", "pso", 5), None)
+            .unwrap()
+            .with_faults(Arc::new(FaultPlan::empty()))
+            .run(&store, None)
+            .unwrap();
+        assert_eq!(faulted.phase, Phase::Finished);
+        assert_eq!(delays(&plain.trace), delays(&faulted.trace));
+        assert_eq!(plain.best.unwrap().1, faulted.best.unwrap().1);
     }
 
     /// A backend whose rounds always fail — exercises the retry budget.

@@ -1,0 +1,118 @@
+//! Fault-plane integration: the chaos invariants, end to end through
+//! the coordinator service. An empty plan must be byte-neutral on the
+//! metrics CSV; a non-trivial plan must realize the *same* faults (and
+//! therefore the same CSV bytes) for any thread count; a planned panic
+//! must quarantine exactly its target session while every other session
+//! completes untouched.
+
+use repro::configio::SimScenario;
+use repro::fault::{FaultPlan, HeartbeatFaultCfg, RoundFaultCfg, StoreFaultCfg};
+use repro::service::{
+    CoordinatorService, CsvRecorder, NoopStore, Phase, Recorder, ServiceConfig, SessionOutcome,
+    SessionSpec,
+};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn tiny_spec(name: &str, strategy: &str, rounds: usize, seed: u64) -> SessionSpec {
+    let mut sim = SimScenario { depth: 2, width: 2, ..SimScenario::default() };
+    sim.seed = seed;
+    sim.pso.particles = 4;
+    SessionSpec::env(name, strategy, rounds, sim, "analytic")
+}
+
+/// Drain four tiny sessions through a CSV recorder, optionally under a
+/// fault plan, and return (csv bytes, outcomes).
+fn drain_to_csv(
+    path: &Path,
+    threads: usize,
+    plan: Option<Arc<FaultPlan>>,
+) -> (String, Vec<SessionOutcome>) {
+    let recorder: Box<dyn Recorder> = Box::new(CsvRecorder::create(path).unwrap());
+    let cfg = ServiceConfig { threads, ..ServiceConfig::default() };
+    let mut svc = CoordinatorService::new(cfg, Arc::new(NoopStore::new()), recorder);
+    if let Some(plan) = plan {
+        svc = svc.with_faults(plan);
+    }
+    for (i, strategy) in ["pso", "ga", "random", "round-robin"].iter().enumerate() {
+        let name = format!("s{i}-{strategy}");
+        svc.submit(tiny_spec(&name, strategy, 5, 40 + i as u64)).unwrap();
+    }
+    let outcomes = svc.drain().unwrap();
+    (std::fs::read_to_string(path).unwrap(), outcomes)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("repro_fault_injection");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.csv"))
+}
+
+#[test]
+fn an_empty_fault_plan_is_byte_neutral_through_the_whole_service() {
+    // The full fault plane armed with an all-zero plan: broker
+    // interceptor installed, store wrapped, every backend wrapped —
+    // and nothing may change, down to the last CSV byte.
+    let (off, out_off) = drain_to_csv(&scratch("neutral_off"), 2, None);
+    let (on, out_on) = drain_to_csv(&scratch("neutral_on"), 2, Some(Arc::new(FaultPlan::empty())));
+    assert!(!off.is_empty());
+    assert_eq!(off, on, "empty plan must be byte-neutral on the metrics CSV");
+    for (a, b) in out_off.iter().zip(&out_on) {
+        assert_eq!(a.phase, Phase::Finished, "{}", a.name);
+        assert_eq!(b.phase, Phase::Finished, "{}", b.name);
+        let ta: Vec<u64> = a.trace.iter().map(|r| r.delay_s.to_bits()).collect();
+        let tb: Vec<u64> = b.trace.iter().map(|r| r.delay_s.to_bits()).collect();
+        assert_eq!(ta, tb, "{}", a.name);
+    }
+}
+
+/// A plan that exercises every env-reachable fault kind: round errors,
+/// a pinpointed worker panic, heartbeat-loss bursts and store IO
+/// errors (recovered by the service's retry layer).
+fn chaos_plan() -> Arc<FaultPlan> {
+    Arc::new(FaultPlan {
+        seed: 2026,
+        rounds: RoundFaultCfg {
+            error_prob: 0.15,
+            panic_prob: 0.0,
+            panic_at: vec![("s1-ga".to_string(), 2)],
+        },
+        heartbeats: HeartbeatFaultCfg { loss_prob: 0.05, burst_len: 2 },
+        store: StoreFaultCfg { save_fail_prob: 0.10, ..StoreFaultCfg::default() },
+        ..FaultPlan::empty()
+    })
+}
+
+#[test]
+fn fault_realizations_are_identical_for_any_thread_count() {
+    // Every fault decision is a pure function of (plan seed, injection
+    // point, session, key) — never of scheduling — so a serial and a
+    // 4-wide drain must realize the same faults and write the same CSV.
+    let (serial, out_serial) = drain_to_csv(&scratch("chaos_t1"), 1, Some(chaos_plan()));
+    let (wide, out_wide) = drain_to_csv(&scratch("chaos_t4"), 4, Some(chaos_plan()));
+    assert_eq!(serial, wide, "fault realizations must not depend on thread count");
+    for (a, b) in out_serial.iter().zip(&out_wide) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.phase, b.phase, "{}", a.name);
+    }
+    // The pinpointed panic quarantined exactly its target...
+    let ga = out_serial.iter().find(|o| o.name == "s1-ga").unwrap();
+    assert_eq!(ga.phase, Phase::Failed);
+    assert!(
+        ga.rows.iter().any(|r| r.detail.starts_with("quarantined: injected worker panic")),
+        "missing quarantine row for s1-ga"
+    );
+    assert!(serial.contains("quarantined: injected worker panic"));
+    // ...and every session still reached a terminal phase — the chaos
+    // soak's core invariant.
+    for out in &out_serial {
+        assert!(out.phase.is_terminal(), "{} stuck in {:?}", out.name, out.phase);
+    }
+}
+
+#[test]
+fn rerunning_the_same_plan_reproduces_the_csv_byte_for_byte() {
+    let (a, _) = drain_to_csv(&scratch("repeat_a"), 2, Some(chaos_plan()));
+    let (b, _) = drain_to_csv(&scratch("repeat_b"), 2, Some(chaos_plan()));
+    assert_eq!(a, b, "same plan + same sessions must reproduce the CSV exactly");
+}

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 fn service(threads: usize, store: Arc<dyn Store>, limit: Option<usize>) -> CoordinatorService {
-    let cfg = ServiceConfig { threads, round_limit: limit };
+    let cfg = ServiceConfig { threads, round_limit: limit, ..ServiceConfig::default() };
     CoordinatorService::new(cfg, store, Box::new(NoopRecorder::new()))
 }
 
@@ -97,6 +97,76 @@ fn killed_coordinator_resumes_from_the_dir_store_without_rerunning_rounds() {
     assert_eq!(snap.phase, "finished");
     assert_eq!(snap.next_round, 6);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_store_resume_recovers_and_stitches_bit_identically() {
+    use repro::fault::{FaultPlan, FaultyStore, StoreFaultCfg};
+    let dir_a = std::env::temp_dir().join("repro_service_torn_a");
+    let dir_b = std::env::temp_dir().join("repro_service_torn_b");
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+    let spec = || {
+        let mut s = tiny_spec("torn-pso", "pso", 6, 11);
+        s.dynamics = Some(DynamicsSpec { dropout_prob: 0.3, ..DynamicsSpec::default() });
+        s
+    };
+
+    // Reference: the same session uninterrupted.
+    let reference = {
+        let mut svc = service(1, Arc::new(NoopStore::new()), None);
+        svc.submit(spec()).unwrap();
+        svc.drain().unwrap().pop().unwrap()
+    };
+
+    // Incarnation 1 leaves a clean round-3 snapshot in store A; a
+    // parallel incarnation leaves a round-4 snapshot in store B ("the
+    // write that was in flight when the crash hit").
+    {
+        let store = Arc::new(DirStore::open(&dir_a).unwrap());
+        let mut svc = service(1, store, Some(3));
+        svc.submit(spec()).unwrap();
+        svc.drain().unwrap();
+    }
+    {
+        let store = Arc::new(DirStore::open(&dir_b).unwrap());
+        let mut svc = service(1, store, Some(4));
+        svc.submit(spec()).unwrap();
+        svc.drain().unwrap();
+    }
+    let newer = DirStore::open(&dir_b).unwrap().load("torn-pso").unwrap().unwrap();
+
+    // Tear store A through the injector: the round-4 state half lands,
+    // the optimizer checkpoint half stays at round 3 — exactly what a
+    // crash between DirStore's two file writes leaves behind.
+    let plan = Arc::new(FaultPlan {
+        seed: 5,
+        store: StoreFaultCfg { torn_state_prob: 1.0, ..StoreFaultCfg::default() },
+        ..FaultPlan::empty()
+    });
+    let faulty = FaultyStore::new(Arc::new(DirStore::open(&dir_a).unwrap()), plan);
+    let err = faulty.save("torn-pso", &newer).unwrap_err().to_string();
+    assert!(err.contains("torn"), "{err}");
+    let hybrid = DirStore::open(&dir_a).unwrap().load("torn-pso").unwrap().unwrap();
+    assert_eq!(hybrid.next_round, 4, "state half must have landed");
+
+    // Incarnation 2 resumes from the torn snapshot: the replay-based
+    // optimizer cross-check detects the tear, recovers (the replayed
+    // optimizer is authoritative), and the stitched trace is
+    // bit-identical to the uninterrupted reference.
+    let store = Arc::new(DirStore::open(&dir_a).unwrap());
+    let mut svc = service(1, store, None);
+    svc.submit(spec()).unwrap();
+    let resumed = svc.drain().unwrap().pop().unwrap();
+    assert_eq!(resumed.phase, Phase::Finished);
+    assert_eq!(resumed.resumed_from, Some(4));
+    assert!(
+        resumed.rows.iter().any(|r| r.detail.contains("torn save recovered by replay")),
+        "recovery must leave a paper trail"
+    );
+    assert_eq!(trace_bits(&resumed), trace_bits(&reference));
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
 }
 
 #[test]
